@@ -1,0 +1,90 @@
+//! End-to-end benchmarks: simulated serving throughput per scheduler
+//! (wall time per simulated run — the harness behind every Fig. 10-21
+//! sweep) and real PJRT model step latencies (when artifacts exist).
+
+use andes::experiments::runner::{SchedKind, SimRun};
+use andes::model::gpu::a100_4x;
+use andes::model::llm::opt_66b;
+use andes::runtime::engine::ModelRuntime;
+use andes::util::bench::{header, Bencher};
+use andes::workload::{ArrivalProcess, Dataset, QoeTrace};
+
+fn main() {
+    println!("{}", header());
+    let mut b = Bencher::quick();
+
+    // Simulation engine wall-time per 200-request run at overload —
+    // the iteration cost of the experiment harness itself.
+    for sched in SchedKind::paper_three() {
+        let label = format!("sim-200req-overload/{}", sched.label());
+        b.bench(&label, || {
+            SimRun {
+                llm: opt_66b(),
+                gpu: a100_4x(),
+                sched: sched.clone(),
+                dataset: Dataset::ShareGpt,
+                arrivals: ArrivalProcess::Poisson { rate: 5.0 },
+                qoe_trace: QoeTrace::TextReading,
+                num_requests: 200,
+                seed: 1,
+            }
+            .execute()
+        });
+    }
+
+    // Real model (PJRT) prefill and decode step latency per batch size.
+    let dir = ModelRuntime::default_dir();
+    if dir.join("meta.json").exists() {
+        let runtime = ModelRuntime::load(&dir).expect("load artifacts");
+        let prompt: Vec<u32> = (0..64u32).map(|i| 2 + (i % 250)).collect();
+        for &batch in &[1usize, 2, 4] {
+            let prompts: Vec<Vec<u32>> = (0..batch).map(|_| prompt.clone()).collect();
+            b.bench(&format!("pjrt-prefill/b={batch}"), || {
+                runtime.prefill(&prompts).unwrap()
+            });
+        }
+        // Decode, stateless API: assemble/extract host copies per call.
+        let pre = runtime.prefill(&[prompt.clone()]).unwrap().remove(0);
+        for &batch in &[1usize, 4, 8, 16] {
+            let entries: Vec<(u32, usize, &[f32], &[f32])> = (0..batch)
+                .map(|_| (5u32, 64usize, pre.k_cache.as_slice(), pre.v_cache.as_slice()))
+                .collect();
+            b.bench(&format!("pjrt-decode-stateless/b={batch}"), || {
+                runtime.decode(&entries).unwrap()
+            });
+        }
+        // Decode, steady-state literal-cached path (what the serving
+        // engine uses when batch membership is stable).
+        for &batch in &[1usize, 8, 16] {
+            let m = &runtime.meta;
+            let per_seq = m.kv_elems_per_seq();
+            let mut k_batch = vec![0f32; batch * per_seq];
+            let mut v_batch = vec![0f32; batch * per_seq];
+            for row in 0..batch {
+                andes::runtime::engine::insert_seq(&mut k_batch, &pre.k_cache, row, batch, m);
+                andes::runtime::engine::insert_seq(&mut v_batch, &pre.v_cache, row, batch, m);
+            }
+            let dims = [
+                m.n_layers as i64,
+                batch as i64,
+                m.n_heads as i64,
+                m.max_seq as i64,
+                m.d_head as i64,
+            ];
+            let tokens = vec![5i32; batch];
+            let positions = vec![64i32; batch];
+            let mut k = xla::Literal::vec1(&k_batch).reshape(&dims).unwrap();
+            let mut v = xla::Literal::vec1(&v_batch).reshape(&dims).unwrap();
+            b.bench(&format!("pjrt-decode-cached/b={batch}"), || {
+                let (logits, k2, v2) = runtime
+                    .decode_literals(&tokens, &positions, k.clone(), v.clone(), batch)
+                    .unwrap();
+                k = k2;
+                v = v2;
+                logits.len()
+            });
+        }
+    } else {
+        println!("(skipping pjrt benches: run `make artifacts`)");
+    }
+}

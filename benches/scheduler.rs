@@ -1,0 +1,104 @@
+//! Scheduler micro-benchmarks (criterion-style harness, in-tree).
+//!
+//! Measures the per-iteration scheduling decision cost — the paper's
+//! "negligible overhead" claim (§6.5): the greedy Algorithm 1 must stay
+//! far below one decode iteration (~150 ms) even at N = 1000 active
+//! requests, while the exact DP (Algorithm 2) is orders of magnitude
+//! slower — which is exactly why the paper ships the greedy.
+
+use andes::coordinator::kv::KvCacheManager;
+use andes::coordinator::request::{Phase, Request, RequestId};
+use andes::coordinator::sched::andes::{AndesConfig, AndesScheduler, KnapsackSolver};
+use andes::coordinator::sched::dp::solve_exact_knapsack;
+use andes::coordinator::sched::fcfs::FcfsScheduler;
+use andes::coordinator::sched::{SchedView, Scheduler};
+use andes::model::gpu::a100_4x;
+use andes::model::latency::LatencyModel;
+use andes::model::llm::opt_66b;
+use andes::qoe::spec::QoeSpec;
+use andes::util::bench::{header, Bencher};
+use andes::util::rng::Rng;
+
+/// Build a saturated scheduling state with `n` active requests
+/// (half running, half waiting).
+fn build_state(n: usize) -> (Vec<Request>, Vec<RequestId>, KvCacheManager, LatencyModel) {
+    let mut rng = Rng::new(42);
+    let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+    let mut kv = KvCacheManager::new(70_000, 100_000, 16);
+    let mut requests = Vec::with_capacity(n);
+    let active: Vec<RequestId> = (0..n).collect();
+    for id in 0..n {
+        let prompt = rng.range(50, 600);
+        let mut r = Request::new(id, rng.f64() * 10.0, prompt, QoeSpec::new(1.0, 4.8));
+        if id % 2 == 0 && kv.allocate(id, r.context_len()).is_ok() {
+            r.phase = Phase::Running;
+            // Mid-stream: some tokens already delivered.
+            for k in 0..rng.range(1, 60) {
+                r.deliver_token(r.arrival + 1.0 + k as f64 * 0.15);
+            }
+        }
+        requests.push(r);
+    }
+    (requests, active, kv, latency)
+}
+
+fn bench_scheduler(b: &mut Bencher, name: &str, sched: &mut dyn Scheduler, n: usize) {
+    let (requests, active, kv, latency) = build_state(n);
+    let view = SchedView {
+        now: 30.0,
+        horizon: 50.0,
+        requests: &requests,
+        active: &active,
+        kv: &kv,
+        latency: &latency,
+        total_requests_seen: n,
+        total_preemptions: 0,
+    };
+    b.bench(&format!("{name}/N={n}"), || sched.schedule(&view));
+}
+
+fn main() {
+    println!("{}", header());
+    let mut b = Bencher::new();
+
+    for n in [100, 500, 1000] {
+        let mut fcfs = FcfsScheduler::new();
+        bench_scheduler(&mut b, "fcfs", &mut fcfs, n);
+        let mut andes = AndesScheduler::with_defaults();
+        bench_scheduler(&mut b, "andes-greedy", &mut andes, n);
+    }
+    // The DP is far slower; bench at smaller N only.
+    for n in [100, 250] {
+        let mut dp = AndesScheduler::new(AndesConfig {
+            solver: KnapsackSolver::Dp,
+            b_grid: 4,
+            ..AndesConfig::default()
+        });
+        bench_scheduler(&mut b, "andes-dp", &mut dp, n);
+    }
+
+    // Raw knapsack kernels.
+    let mut rng = Rng::new(7);
+    for n in [200usize, 1000] {
+        let weights: Vec<usize> = (0..n).map(|_| rng.range(2, 40)).collect();
+        let values: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        b.bench(&format!("knapsack-dp-solve/N={n}"), || {
+            solve_exact_knapsack(&weights, &values, n / 4, 2000)
+        });
+    }
+
+    // Paper claim: greedy decision ≪ decode iteration (~150 ms).
+    let budget_ns = 150_000_000u128;
+    let worst = b
+        .results()
+        .iter()
+        .filter(|r| r.name.starts_with("andes-greedy"))
+        .map(|r| r.mean.as_nanos())
+        .max()
+        .unwrap_or(0);
+    println!(
+        "\nandes-greedy worst mean = {:.2} ms vs decode iteration ~150 ms → {}",
+        worst as f64 / 1e6,
+        if worst * 10 < budget_ns { "NEGLIGIBLE (paper claim holds)" } else { "SIGNIFICANT" }
+    );
+}

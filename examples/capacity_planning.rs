@@ -1,0 +1,70 @@
+//! Capacity planning: for a chosen deployment, sweep request rates to
+//! find the maximum rate each scheduler sustains at avg QoE ≥ 0.9 (the
+//! paper's "system capacity" metric), and report the cost-per-request
+//! implication.
+//!
+//! Usage: cargo run --release --example capacity_planning -- [model] [dataset]
+//!   model:   opt-13b | opt-30b | opt-66b | opt-175b   (default opt-66b)
+//!   dataset: sharegpt | multiround                    (default sharegpt)
+
+use andes::experiments::runner::{
+    capacity_at_threshold, estimate_capacity, rate_grid, SchedKind, SimRun,
+};
+use andes::model::gpu::{a100_1x, a100_4x};
+use andes::model::llm::llm_by_name;
+use andes::workload::{ArrivalProcess, Dataset, QoeTrace};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(|s| s.as_str()).unwrap_or("opt-66b");
+    let dataset = args
+        .get(1)
+        .and_then(|s| Dataset::by_name(s))
+        .unwrap_or(Dataset::ShareGpt);
+    let llm = llm_by_name(model).expect("unknown model");
+    let gpu = if llm.name == "OPT-13B" { a100_1x() } else { a100_4x() };
+    println!(
+        "capacity planning: {} on {} serving {} (QoE threshold 0.9)\n",
+        llm.name,
+        gpu.name,
+        dataset.name()
+    );
+
+    let est = estimate_capacity(&llm, &gpu, dataset);
+    let rates = rate_grid(est, false);
+    println!("analytic capacity estimate: {est:.2} req/s; sweeping {rates:?}\n");
+
+    let mut capacities = Vec::new();
+    for sched in SchedKind::paper_three() {
+        let mut series = Vec::new();
+        print!("{:<12}", sched.label());
+        for &rate in &rates {
+            let m = SimRun {
+                llm: llm.clone(),
+                gpu: gpu.clone(),
+                sched: sched.clone(),
+                dataset,
+                arrivals: ArrivalProcess::Poisson { rate },
+                qoe_trace: QoeTrace::TextReading,
+                num_requests: 1200,
+                seed: 7,
+            }
+            .execute();
+            print!(" {:.2}@{rate:.1}", m.avg_qoe());
+            series.push((rate, m.avg_qoe()));
+        }
+        let cap = capacity_at_threshold(&series, 0.9);
+        println!("  → capacity {cap:.2} req/s");
+        capacities.push((sched.label(), cap));
+    }
+    let fcfs = capacities.iter().find(|c| c.0 == "vLLM-FCFS").unwrap().1;
+    let andes = capacities.iter().find(|c| c.0 == "Andes").unwrap().1;
+    if fcfs > 0.0 {
+        println!(
+            "\nAndes sustains {:.2}× the request rate of vLLM-FCFS at equal QoE;\n\
+             equivalently, cost per request drops to {:.0}% of the FCFS baseline.",
+            andes / fcfs,
+            100.0 * fcfs / andes
+        );
+    }
+}

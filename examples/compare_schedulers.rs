@@ -1,0 +1,73 @@
+//! Compare schedulers (FCFS vs Round-Robin vs Andes) on a simulated
+//! OPT-66B / 4×A100 deployment across request rates.
+//!
+//! Usage: cargo run --release --example compare_schedulers -- 3 4 5
+use andes::backend::sim::SimBackend;
+use andes::backend::VirtualClock;
+use andes::coordinator::engine::{Engine, EngineConfig};
+use andes::coordinator::sched::andes::AndesScheduler;
+use andes::coordinator::sched::fcfs::FcfsScheduler;
+use andes::coordinator::sched::Scheduler;
+use andes::model::gpu::a100_4x;
+use andes::model::latency::LatencyModel;
+use andes::model::llm::opt_66b;
+use andes::util::stats::{mean, percentile};
+use andes::workload::{ArrivalProcess, Dataset, QoeTrace, Workload};
+
+fn run(sched: Box<dyn Scheduler>, rate: f64) {
+    let llm = opt_66b();
+    let gpu = a100_4x();
+    let latency = LatencyModel::for_deployment(&llm, &gpu);
+    let cfg = EngineConfig {
+        kv_capacity_tokens: llm.kv_capacity_tokens(&gpu),
+        swap_capacity_tokens: llm.swap_capacity_tokens(&gpu),
+        ..EngineConfig::default()
+    };
+    let name = sched.name().to_string();
+    let mut e = Engine::new(cfg, SimBackend::new(latency.clone()), VirtualClock::default(), sched, latency);
+    let wl = Workload {
+        dataset: Dataset::ShareGpt,
+        arrivals: ArrivalProcess::Poisson { rate },
+        qoe_trace: QoeTrace::TextReading,
+        num_requests: 1500,
+        seed: 42,
+    };
+    e.load_trace(wl.generate());
+    let m = e.run_to_completion().unwrap();
+    let ttfts = m.ttfts();
+    let iters = &m.iterations;
+    let decode_iters: Vec<_> = iters.iter().filter(|s| !s.is_prefill).collect();
+    let avg_b = mean(&decode_iters.iter().map(|s| s.batch_size as f64).collect::<Vec<_>>());
+    let prefill_time: f64 = iters.iter().filter(|s| s.is_prefill).map(|s| s.latency).sum();
+    let decode_time: f64 = decode_iters.iter().map(|s| s.latency).sum();
+    println!(
+        "rate={rate:.1} {name:<7} qoe={:.3} p10qoe={:.2} ttft p50={:.1} p90={:.1} tds p50={:.2} tput={:.0} B~{:.0} pre/req={:.2} (swap {} rec {} oom {}) pf_time={:.0}s dec_time={:.0}s",
+        m.avg_qoe(),
+        percentile(&m.qoes(), 10.0),
+        percentile(&ttfts, 50.0),
+        percentile(&ttfts, 90.0),
+        percentile(&m.tds_values(), 50.0),
+        m.throughput(),
+        avg_b,
+        m.preemption_frequency(),
+        m.swap_preemptions,
+        m.recompute_preemptions,
+        m.oom_preemptions,
+        prefill_time,
+        decode_time,
+    );
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let rates: Vec<f64> = if args.len() > 1 {
+        args[1..].iter().map(|a| a.parse().unwrap()).collect()
+    } else {
+        vec![2.0, 3.0, 4.0]
+    };
+    for &rate in &rates {
+        run(Box::new(FcfsScheduler::new()), rate);
+        run(Box::new(AndesScheduler::with_defaults()), rate);
+        println!();
+    }
+}

@@ -1,0 +1,48 @@
+//! profile helper: hammer the andes scheduler at N=1000
+use andes::coordinator::kv::KvCacheManager;
+use andes::coordinator::request::{Phase, Request, RequestId};
+use andes::coordinator::sched::andes::AndesScheduler;
+use andes::coordinator::sched::{SchedView, Scheduler};
+use andes::model::gpu::a100_4x;
+use andes::model::latency::LatencyModel;
+use andes::model::llm::opt_66b;
+use andes::qoe::spec::QoeSpec;
+use andes::util::rng::Rng;
+
+fn main() {
+    let n = 1000;
+    let mut rng = Rng::new(42);
+    let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+    let mut kv = KvCacheManager::new(70_000, 100_000, 16);
+    let mut requests = Vec::with_capacity(n);
+    let active: Vec<RequestId> = (0..n).collect();
+    for id in 0..n {
+        let prompt = rng.range(50, 600);
+        let mut r = Request::new(id, rng.f64() * 10.0, prompt, QoeSpec::new(1.0, 4.8));
+        if id % 2 == 0 && kv.allocate(id, r.context_len()).is_ok() {
+            r.phase = Phase::Running;
+            for k in 0..rng.range(1, 60) {
+                r.deliver_token(r.arrival + 1.0 + k as f64 * 0.15);
+            }
+        }
+        requests.push(r);
+    }
+    let view = SchedView {
+        now: 30.0, horizon: 50.0, requests: &requests, active: &active,
+        kv: &kv, latency: &latency, total_requests_seen: n, total_preemptions: 0,
+    };
+    for grid in [1usize, 2, 4, 8, 16] {
+        let mut s = AndesScheduler::new(andes::coordinator::sched::andes::AndesConfig {
+            b_grid: grid,
+            ..Default::default()
+        });
+        let t0 = std::time::Instant::now();
+        let mut acc = 0usize;
+        let iters = 500;
+        for _ in 0..iters {
+            acc += s.schedule(&view).len();
+        }
+        println!("b_grid={grid}: {:.3} ms/call (acc {acc})", t0.elapsed().as_secs_f64()*1e3/iters as f64);
+    }
+}
+// (appended) grid-scaling probe lives in main2 — not used

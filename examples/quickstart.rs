@@ -1,0 +1,101 @@
+//! Quickstart: serve real batched requests through the full stack.
+//!
+//! Loads the AOT-compiled tiny-OPT model (JAX + Pallas → HLO → PJRT),
+//! drives it with the Andes QoE-aware engine, streams the generated
+//! text through the client-side token buffer, and reports per-request
+//! TTFT / QoE plus system throughput.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use andes::backend::pjrt::PjrtBackend;
+use andes::backend::WallClock;
+use andes::coordinator::engine::{Engine, EngineConfig};
+use andes::coordinator::sched::andes::AndesScheduler;
+use andes::model::gpu::a100_1x;
+use andes::model::latency::LatencyModel;
+use andes::model::llm::tiny_opt;
+use andes::qoe::spec::QoeSpec;
+use andes::runtime::engine::ModelRuntime;
+use andes::runtime::tokenizer::ByteTokenizer;
+use andes::runtime::Sampling;
+use andes::workload::RequestSpec;
+
+fn main() -> anyhow::Result<()> {
+    let dir = ModelRuntime::default_dir();
+    eprintln!("loading artifacts from {} ...", dir.display());
+    let runtime = ModelRuntime::load(&dir)?;
+    eprintln!(
+        "platform={} model={} layers={} d_model={} ctx={}",
+        runtime.platform(),
+        "tiny-opt",
+        runtime.meta.n_layers,
+        runtime.meta.d_model,
+        runtime.meta.max_seq
+    );
+
+    let tokenizer = ByteTokenizer::new();
+    let backend = PjrtBackend::new(runtime, Sampling::TopK { k: 40, temperature: 1.0 }, 7);
+
+    // A deliberately small KV budget so the scheduler has real work.
+    let cfg = EngineConfig {
+        kv_capacity_tokens: 2048,
+        swap_capacity_tokens: 8192,
+        max_output_tokens: 96,
+        ..EngineConfig::default()
+    };
+    // The latency model is only used for scheduling predictions here;
+    // actual latencies are wall-clock.
+    let latency = LatencyModel::for_deployment(&tiny_opt(), &a100_1x());
+    let mut engine = Engine::new(
+        cfg,
+        backend,
+        WallClock::new(),
+        Box::new(AndesScheduler::with_defaults()),
+        latency,
+    );
+
+    let prompts = [
+        "Explain the Andes mountain range to a curious child.",
+        "Write a haiku about token streaming.",
+        "Why do users dislike waiting for chatbots?",
+        "Describe quality of experience in one sentence.",
+        "What makes continuous batching efficient?",
+        "Tell me a story about a scheduler that cared.",
+        "Summarize the benefits of client-side buffering.",
+        "How fast can people actually read?",
+    ];
+    for (i, p) in prompts.iter().enumerate() {
+        let prompt_tokens = tokenizer.encode(p);
+        // Submit via the typed API so the backend gets real token ids.
+        let spec = RequestSpec {
+            id: i,
+            arrival: 0.0,
+            prompt_tokens: prompt_tokens.len(),
+            output_tokens: 48 + (i * 8) % 40,
+            qoe: QoeSpec::new(0.5, 4.8),
+        };
+        engine.submit_with_prompt(spec, prompt_tokens)?;
+    }
+
+    while engine.has_work() {
+        engine.tick()?;
+    }
+
+    let m = engine.metrics();
+    println!("\n=== per-request results ===");
+    for r in &m.requests {
+        println!(
+            "req {:>2}: prompt={:>3} tok, output={:>3} tok, ttft={:>6.3}s, qoe={:.3}, preempts={}",
+            r.id, r.prompt_tokens, r.output_tokens, r.ttft, r.final_qoe, r.preemptions
+        );
+    }
+    println!("\n=== system ===");
+    println!("{}", m.summary());
+    println!(
+        "elapsed={:.2}s tokens={} throughput={:.1} tok/s",
+        m.elapsed(),
+        m.total_tokens,
+        m.throughput()
+    );
+    Ok(())
+}

@@ -1,0 +1,25 @@
+//! Smoke test: the AOT bridge in isolation — lower a Pallas matmul with
+//! gen_hlo-style tooling, load the HLO text via the xla crate, execute
+//! on the PJRT CPU client, and check the numbers.
+//!
+//! Usage: python /opt/xla-example/gen_hlo.py /tmp/fn_hlo.txt --pallas
+//!        cargo run --release --example smoke
+fn main() -> anyhow::Result<()> {
+    let path = std::env::args().nth(1).unwrap_or_else(|| "/tmp/fn_hlo.txt".to_string());
+    if !std::path::Path::new(&path).exists() {
+        eprintln!("{path} missing — generate it with gen_hlo.py (see header)");
+        return Ok(());
+    }
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(&path)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp)?;
+    let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2])?;
+    let y = xla::Literal::vec1(&[1f32, 1., 1., 1.]).reshape(&[2, 2])?;
+    let r = exe.execute::<xla::Literal>(&[x, y])?[0][0].to_literal_sync()?.to_tuple1()?;
+    let values = r.to_vec::<f32>()?;
+    println!("matmul+2 result: {values:?}");
+    assert_eq!(values, vec![5f32, 5., 9., 9.]);
+    println!("smoke OK");
+    Ok(())
+}

@@ -1,0 +1,118 @@
+"""AOT lowering: JAX model (with Pallas kernels) → HLO text artifacts.
+
+Run once at build time (`make artifacts`); the Rust runtime then loads
+and executes the artifacts via the PJRT C API with Python nowhere on
+the request path.
+
+HLO **text** is the interchange format, not serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts:
+  artifacts/prefill_b{B}.hlo.txt   — (tokens[B,S], lengths[B])
+                                     → (logits[B,V], k[L,B,H,S,d], v[…])
+  artifacts/decode_b{B}.hlo.txt    — (tokens[B], positions[B], k, v)
+                                     → (logits[B,V], k, v)
+  artifacts/meta.json              — model dims, batch sizes, token ids.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Batch sizes compiled ahead of time. The Rust engine rounds each batch
+# up to the nearest available executable and pads.
+PREFILL_BATCHES = (1, 2, 4)
+DECODE_BATCHES = (1, 2, 4, 8, 16)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_prefill(batch: int, seed: int) -> str:
+    cfg = M.CONFIG
+    fn = M.build_prefill_fn(seed=seed)
+    tokens = jax.ShapeDtypeStruct((batch, cfg.max_seq), jnp.int32)
+    lengths = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return to_hlo_text(jax.jit(fn).lower(tokens, lengths))
+
+
+def lower_decode(batch: int, seed: int) -> str:
+    cfg = M.CONFIG
+    fn = M.build_decode_fn(seed=seed)
+    kv_shape = (cfg.n_layers, batch, cfg.n_heads, cfg.max_seq, cfg.d_head)
+    tokens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    positions = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    k = jax.ShapeDtypeStruct(kv_shape, jnp.float32)
+    v = jax.ShapeDtypeStruct(kv_shape, jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(tokens, positions, k, v))
+
+
+def write_meta(out_dir: str) -> None:
+    cfg = M.CONFIG
+    meta = {
+        "model": "tiny-opt",
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "d_head": cfg.d_head,
+        "max_seq": cfg.max_seq,
+        "pad_token": cfg.pad_token,
+        "eos_token": cfg.eos_token,
+        "prefill_batches": list(PREFILL_BATCHES),
+        "decode_batches": list(DECODE_BATCHES),
+        "prefill_inputs": ["tokens[i32 B,S]", "lengths[i32 B]"],
+        "prefill_outputs": ["logits[f32 B,V]", "k[f32 L,B,H,S,d]", "v[f32 L,B,H,S,d]"],
+        "decode_inputs": [
+            "tokens[i32 B]",
+            "positions[i32 B]",
+            "k[f32 L,B,H,S,d]",
+            "v[f32 L,B,H,S,d]",
+        ],
+        "decode_outputs": ["logits[f32 B,V]", "k[f32 L,B,H,S,d]", "v[f32 L,B,H,S,d]"],
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for b in PREFILL_BATCHES:
+        path = os.path.join(args.out_dir, f"prefill_b{b}.hlo.txt")
+        text = lower_prefill(b, args.seed)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    for b in DECODE_BATCHES:
+        path = os.path.join(args.out_dir, f"decode_b{b}.hlo.txt")
+        text = lower_decode(b, args.seed)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    write_meta(args.out_dir)
+    print(f"wrote {os.path.join(args.out_dir, 'meta.json')}")
+
+
+if __name__ == "__main__":
+    main()

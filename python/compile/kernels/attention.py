@@ -1,0 +1,183 @@
+"""L1: Pallas attention kernels for the tiny-OPT serving model.
+
+Two kernels cover the serving hot path:
+
+- :func:`decode_attention` — single-query attention against a KV cache
+  (the decode phase): for each batch row, one query vector attends over
+  ``cache_len`` valid KV entries out of a fixed-size cache.
+- :func:`prefill_attention` — causal self-attention over the whole
+  prompt (the prefill phase), tiled flash-style.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's
+serving substrate (vLLM) implements these as CUDA PagedAttention
+kernels tiled for threadblocks/warps over HBM/shared memory. On TPU the
+same insight — keep the query resident, stream KV tiles through fast
+memory, accumulate online softmax — maps to: queries pinned in VMEM,
+KV streamed tile-by-tile (``BlockSpec`` delivers one (batch, head)
+slice per grid step; the inner loop walks KV tiles), per-tile
+``q @ K^T`` shaped for the MXU with fp32 accumulation, and a
+single-pass online-softmax accumulator so no [S, S] score matrix ever
+materializes in VMEM.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is the correctness path
+(real-TPU lowering is compile-only here). Numerics are validated
+against ``ref.py`` by pytest/hypothesis. VMEM/MXU estimates for real
+TPU execution are documented in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile size along the KV-sequence axis. 128 matches the MXU systolic
+# array edge and keeps the per-tile VMEM footprint small:
+# K/V tiles are [128, head_dim] each.
+KV_TILE = 128
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, seq_tiles: int):
+    """Single-query online-softmax attention for one (batch, head).
+
+    Refs (one grid step = one batch row × one head):
+      q_ref:   [1, 1, 1, d]  — the query vector.
+      k_ref:   [1, 1, S, d]  — KV cache slice for this row/head.
+      v_ref:   [1, 1, S, d]
+      len_ref: [1]           — number of valid cache entries.
+      o_ref:   [1, 1, 1, d]  — attention output.
+    """
+    d = q_ref.shape[-1]
+    q = q_ref[0, 0, 0, :].astype(jnp.float32) * (1.0 / (d**0.5))
+    valid_len = len_ref[0]
+
+    def tile_step(t, carry):
+        m_prev, l_prev, acc_prev = carry
+        start = t * KV_TILE
+        k = k_ref[0, 0, pl.dslice(start, KV_TILE), :].astype(jnp.float32)
+        v = v_ref[0, 0, pl.dslice(start, KV_TILE), :].astype(jnp.float32)
+        # [KV_TILE] scores for this tile; MXU-friendly contraction.
+        s = k @ q
+        idx = start + jax.lax.iota(jnp.int32, KV_TILE)
+        s = jnp.where(idx < valid_len, s, -jnp.inf)
+        # Online softmax update; guard all-masked tiles against NaN.
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe)
+        corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+        l_new = l_prev * corr + jnp.sum(p)
+        acc_new = acc_prev * corr + p @ v
+        return m_new, l_new, acc_new
+
+    m0 = jnp.float32(-jnp.inf)
+    l0 = jnp.float32(0.0)
+    acc0 = jnp.zeros((d,), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, seq_tiles, tile_step, (m0, l0, acc0))
+    o_ref[0, 0, 0, :] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention(q, k_cache, v_cache, cache_lens, *, interpret=True):
+    """Batched decode attention.
+
+    Args:
+      q:          [B, H, d]    — one query per sequence per head.
+      k_cache:    [B, H, S, d] — KV cache (padded to S).
+      v_cache:    [B, H, S, d]
+      cache_lens: [B] int32    — valid entries per sequence.
+
+    Returns:
+      [B, H, d] attention outputs.
+    """
+    b, h, s, d = k_cache.shape
+    assert s % KV_TILE == 0, f"cache length {s} must be a multiple of {KV_TILE}"
+    seq_tiles = s // KV_TILE
+
+    kernel = functools.partial(_decode_kernel, seq_tiles=seq_tiles)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        interpret=interpret,
+    )(q[:, :, None, :], k_cache, v_cache, cache_lens)
+    return out[:, :, 0, :]
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, *, seq_tiles: int):
+    """Causal flash attention for one (batch, head): Q tile resident,
+    K/V tiles streamed, online softmax, no [S, S] materialization.
+
+    Refs: q_ref/k_ref/v_ref/o_ref: [1, 1, S, d].
+    """
+    d = q_ref.shape[-1]
+    scale = 1.0 / (d**0.5)
+
+    def q_tile_step(tq, _):
+        q_start = tq * KV_TILE
+        q = q_ref[0, 0, pl.dslice(q_start, KV_TILE), :].astype(jnp.float32) * scale
+        q_idx = q_start + jax.lax.iota(jnp.int32, KV_TILE)
+
+        def kv_tile_step(tk, carry):
+            m_prev, l_prev, acc_prev = carry
+            k_start = tk * KV_TILE
+            k = k_ref[0, 0, pl.dslice(k_start, KV_TILE), :].astype(jnp.float32)
+            v = v_ref[0, 0, pl.dslice(k_start, KV_TILE), :].astype(jnp.float32)
+            s = q @ k.T  # [KV_TILE, KV_TILE] on the MXU
+            k_idx = k_start + jax.lax.iota(jnp.int32, KV_TILE)
+            causal = q_idx[:, None] >= k_idx[None, :]
+            s = jnp.where(causal, s, -jnp.inf)
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[:, None])
+            corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+            l_new = l_prev * corr + jnp.sum(p, axis=1)
+            acc_new = acc_prev * corr[:, None] + p @ v
+            return m_new, l_new, acc_new
+
+        m0 = jnp.full((KV_TILE,), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((KV_TILE,), jnp.float32)
+        acc0 = jnp.zeros((KV_TILE, d), jnp.float32)
+        # Causality: only KV tiles up to and including this Q tile.
+        _, l, acc = jax.lax.fori_loop(0, tq + 1, kv_tile_step, (m0, l0, acc0))
+        o_ref[0, 0, pl.dslice(q_start, KV_TILE), :] = (
+            acc / jnp.maximum(l, 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, seq_tiles, q_tile_step, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def prefill_attention(q, k, v, *, interpret=True):
+    """Batched causal self-attention over full sequences.
+
+    Args:
+      q, k, v: [B, H, S, d] with S a multiple of KV_TILE.
+
+    Returns:
+      [B, H, S, d] attention outputs.
+    """
+    b, h, s, d = q.shape
+    assert s % KV_TILE == 0, f"sequence {s} must be a multiple of {KV_TILE}"
+    seq_tiles = s // KV_TILE
+    kernel = functools.partial(_prefill_kernel, seq_tiles=seq_tiles)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, s, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, s, d), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

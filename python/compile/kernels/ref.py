@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+These implementations are deliberately naive — materialize the full
+score matrix, mask, softmax — so they are easy to audit. pytest compares
+the Pallas kernels against them across shapes/dtypes (hypothesis).
+"""
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_lens):
+    """Reference single-query attention over a padded KV cache.
+
+    q: [B, H, d]; k_cache/v_cache: [B, H, S, d]; cache_lens: [B].
+    Returns [B, H, d].
+    """
+    _, _, s, d = k_cache.shape
+    scale = 1.0 / (d**0.5)
+    scores = jnp.einsum(
+        "bhd,bhsd->bhs", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    idx = jnp.arange(s)[None, None, :]
+    valid = idx < cache_lens[:, None, None]
+    scores = jnp.where(valid, scores, -jnp.inf)
+    w = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    out = jnp.einsum("bhs,bhsd->bhd", w, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def prefill_attention_ref(q, k, v):
+    """Reference causal self-attention. q/k/v: [B, H, S, d]."""
+    _, _, s, _ = q.shape
+    d = q.shape[-1]
+    scale = 1.0 / (d**0.5)
+    scores = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(causal[None, None], scores, -jnp.inf)
+    w = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,204 @@
+"""L2: tiny OPT-style decoder model (JAX), calling the L1 Pallas kernels.
+
+This is the real model the Rust coordinator serves through PJRT: an
+OPT-architecture decoder (pre-LN, ReLU MLP, learned positional
+embeddings, tied LM head) at toy scale — 4 layers, d_model 128,
+8 heads, vocab 512, context 256. The structure mirrors the OPT family
+in the paper's Table 3; scale is what a CPU can decode interactively.
+
+Two entry points are AOT-lowered (see aot.py):
+
+- ``prefill``: full-prompt pass → last-position logits + KV caches.
+- ``decode_step``: one token per sequence against the KV caches.
+
+Weights are generated from a fixed PRNG seed at lowering time and baked
+into the HLO as constants, making the artifacts self-contained.
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import decode_attention, prefill_attention
+
+
+class ModelConfig(NamedTuple):
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 8
+    max_seq: int = 256
+    ffn_mult: int = 4
+    # Reserved token ids (byte tokens occupy 2..258).
+    pad_token: int = 0
+    eos_token: int = 1
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+CONFIG = ModelConfig()
+
+
+def init_params(cfg: ModelConfig = CONFIG, seed: int = 0):
+    """Initialize weights (scaled-normal, OPT-style shapes)."""
+    key = jax.random.PRNGKey(seed)
+    keys = iter(jax.random.split(key, 64))
+    d, f = cfg.d_model, cfg.d_model * cfg.ffn_mult
+
+    def dense(k, shape, scale):
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(jnp.float32)
+
+    params = {
+        "tok_embed": dense(next(keys), (cfg.vocab, d), 0.02),
+        "pos_embed": dense(next(keys), (cfg.max_seq, d), 0.02),
+        "ln_f_scale": jnp.ones((d,)),
+        "ln_f_bias": jnp.zeros((d,)),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append(
+            {
+                "ln1_scale": jnp.ones((d,)),
+                "ln1_bias": jnp.zeros((d,)),
+                "wq": dense(next(keys), (d, d), d**-0.5),
+                "wk": dense(next(keys), (d, d), d**-0.5),
+                "wv": dense(next(keys), (d, d), d**-0.5),
+                "wo": dense(next(keys), (d, d), d**-0.5),
+                "ln2_scale": jnp.ones((d,)),
+                "ln2_bias": jnp.zeros((d,)),
+                "w_up": dense(next(keys), (d, f), d**-0.5),
+                "b_up": jnp.zeros((f,)),
+                "w_down": dense(next(keys), (f, d), f**-0.5),
+                "b_down": jnp.zeros((d,)),
+            }
+        )
+    return params
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _split_heads(x, cfg):
+    # [B, S, d_model] -> [B, H, S, d_head]
+    b, s, _ = x.shape
+    x = x.reshape(b, s, cfg.n_heads, cfg.d_head)
+    return jnp.moveaxis(x, 2, 1)
+
+
+def _merge_heads(x, cfg):
+    # [B, H, S, d_head] -> [B, S, d_model]
+    b, _, s, _ = x.shape
+    return jnp.moveaxis(x, 1, 2).reshape(b, s, cfg.d_model)
+
+
+def prefill(params, tokens, lengths, cfg: ModelConfig = CONFIG, interpret=True):
+    """Full-prompt forward pass.
+
+    Args:
+      tokens:  [B, S] int32, padded to cfg.max_seq.
+      lengths: [B] int32 — actual prompt lengths.
+
+    Returns:
+      logits_last: [B, vocab] — logits at each prompt's final position.
+      k_cache, v_cache: [L, B, H, S, d_head] — the prompt's KV cache.
+    """
+    _, s = tokens.shape
+    pos = jnp.arange(s)
+    x = params["tok_embed"][tokens] + params["pos_embed"][pos][None]
+    k_cache = []
+    v_cache = []
+    for layer in params["layers"]:
+        h = _layer_norm(x, layer["ln1_scale"], layer["ln1_bias"])
+        q = _split_heads(h @ layer["wq"], cfg)  # [B, H, S, dh]
+        k = _split_heads(h @ layer["wk"], cfg)
+        v = _split_heads(h @ layer["wv"], cfg)
+        attn = prefill_attention(q, k, v, interpret=interpret)
+        x = x + _merge_heads(attn, cfg) @ layer["wo"]
+        h2 = _layer_norm(x, layer["ln2_scale"], layer["ln2_bias"])
+        x = (
+            x
+            + jax.nn.relu(h2 @ layer["w_up"] + layer["b_up"]) @ layer["w_down"]
+            + layer["b_down"]
+        )
+        k_cache.append(k)
+        v_cache.append(v)
+    x = _layer_norm(x, params["ln_f_scale"], params["ln_f_bias"])
+    logits = x @ params["tok_embed"].T  # tied head: [B, S, vocab]
+    last = jnp.clip(lengths - 1, 0, s - 1)
+    logits_last = jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
+    return logits_last, jnp.stack(k_cache), jnp.stack(v_cache)
+
+
+def decode_step(
+    params, tokens, positions, k_cache, v_cache, cfg: ModelConfig = CONFIG, interpret=True
+):
+    """One decode iteration.
+
+    Args:
+      tokens:    [B] int32 — the most recently generated token per seq.
+      positions: [B] int32 — their positions (= current context length − 1).
+      k_cache, v_cache: [L, B, H, S, d_head].
+
+    Returns:
+      logits: [B, vocab] for the next token.
+      k_cache, v_cache: updated caches.
+    """
+    _, b, _, s, _ = k_cache.shape
+    x = params["tok_embed"][tokens] + params["pos_embed"][positions]  # [B, d]
+    new_k_layers = []
+    new_v_layers = []
+    # One-hot position mask for the cache write: [B, 1, S, 1].
+    write_mask = (jnp.arange(s)[None, :] == positions[:, None])[:, None, :, None]
+    for li, layer in enumerate(params["layers"]):
+        h = _layer_norm(x, layer["ln1_scale"], layer["ln1_bias"])
+        q = (h @ layer["wq"]).reshape(b, cfg.n_heads, cfg.d_head)
+        k_new = (h @ layer["wk"]).reshape(b, cfg.n_heads, 1, cfg.d_head)
+        v_new = (h @ layer["wv"]).reshape(b, cfg.n_heads, 1, cfg.d_head)
+        k_li = jnp.where(write_mask, k_new, k_cache[li])
+        v_li = jnp.where(write_mask, v_new, v_cache[li])
+        attn = decode_attention(q, k_li, v_li, positions + 1, interpret=interpret)
+        x = x + attn.reshape(b, cfg.d_model) @ layer["wo"]
+        h2 = _layer_norm(x, layer["ln2_scale"], layer["ln2_bias"])
+        x = (
+            x
+            + jax.nn.relu(h2 @ layer["w_up"] + layer["b_up"]) @ layer["w_down"]
+            + layer["b_down"]
+        )
+        new_k_layers.append(k_li)
+        new_v_layers.append(v_li)
+    x = _layer_norm(x, params["ln_f_scale"], params["ln_f_bias"])
+    logits = x @ params["tok_embed"].T
+    return logits, jnp.stack(new_k_layers), jnp.stack(new_v_layers)
+
+
+@functools.lru_cache(maxsize=4)
+def cached_params(seed: int = 0):
+    return init_params(CONFIG, seed)
+
+
+def build_prefill_fn(seed: int = 0, interpret: bool = True):
+    """Closure over baked weights: (tokens[B,S], lengths[B]) -> outputs."""
+    params = cached_params(seed)
+
+    def fn(tokens, lengths):
+        return prefill(params, tokens, lengths, CONFIG, interpret)
+
+    return fn
+
+
+def build_decode_fn(seed: int = 0, interpret: bool = True):
+    """Closure over baked weights:
+    (tokens[B], positions[B], k_cache, v_cache) -> outputs."""
+    params = cached_params(seed)
+
+    def fn(tokens, positions, k_cache, v_cache):
+        return decode_step(params, tokens, positions, k_cache, v_cache, CONFIG, interpret)
+
+    return fn

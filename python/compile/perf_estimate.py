@@ -1,0 +1,120 @@
+"""L1 performance estimation for the Pallas attention kernels.
+
+Interpret-mode wallclock on CPU says nothing about TPU performance, so
+— per DESIGN.md §7 — we estimate the quantities that do matter for a
+real TPU deployment from the kernels' BlockSpec structure:
+
+- **VMEM footprint** per grid step (must stay well under ~16 MiB/core);
+- **arithmetic intensity** (flops / HBM byte) vs the TPU roofline ridge
+  to classify each kernel as memory- or compute-bound;
+- **MXU utilization ceiling**: fraction of the kernel's flops that are
+  MXU-shaped (128-aligned matmul contractions) and the padding waste
+  when head_dim < 128.
+
+Usage: python -m compile.perf_estimate [--csv out.csv]
+"""
+
+import argparse
+
+from .kernels.attention import KV_TILE
+
+# TPU v4-ish reference numbers (order-of-magnitude roofline).
+MXU_FLOPS = 275e12  # bf16 flops/s per chip
+HBM_BW = 1.2e12  # bytes/s
+VMEM_BYTES = 16 * 1024 * 1024
+RIDGE = MXU_FLOPS / HBM_BW  # flops per byte at the roofline ridge
+
+
+def decode_estimate(b, h, s, d, dtype_bytes=4):
+    """Decode attention: one query row attends over the KV cache."""
+    # Per grid step (one batch row × head): q [1,d] + one K,V tile pair
+    # resident + accumulator. BlockSpec streams the [S,d] cache, but only
+    # KV_TILE rows live in VMEM at a time with double buffering (×2).
+    vmem = (
+        d * dtype_bytes  # q
+        + 2 * 2 * KV_TILE * d * dtype_bytes  # K,V tiles, double-buffered
+        + d * 4  # fp32 accumulator
+        + KV_TILE * 4  # scores
+    )
+    # Whole-kernel traffic and flops.
+    bytes_hbm = b * h * (2 * s * d * dtype_bytes + 2 * d * dtype_bytes)
+    flops = b * h * (2 * s * d + 2 * s * d)  # qK^T + pV
+    intensity = flops / bytes_hbm
+    # MXU shaping: contractions are [KV_TILE,d]@[d] matvecs — the MXU
+    # processes them as 128×128 tiles; utilization ceiling is d/128 for
+    # the contraction dim times 1/128 for the single query row unless
+    # queries are batched per-core.
+    mxu_ceiling = min(1.0, d / 128.0)
+    time_memory = bytes_hbm / HBM_BW
+    time_compute = flops / (MXU_FLOPS * max(mxu_ceiling, 1e-9))
+    return {
+        "kernel": "decode",
+        "vmem_bytes": vmem,
+        "vmem_frac": vmem / VMEM_BYTES,
+        "intensity": intensity,
+        "bound": "memory" if intensity < RIDGE else "compute",
+        "mxu_ceiling": mxu_ceiling,
+        "est_time_us": max(time_memory, time_compute) * 1e6,
+    }
+
+
+def prefill_estimate(b, h, s, d, dtype_bytes=4):
+    """Prefill attention: causal flash over [S, d]."""
+    # Per grid step: one Q tile + one K,V tile + accumulator + scores.
+    vmem = (
+        KV_TILE * d * dtype_bytes  # Q tile
+        + 2 * 2 * KV_TILE * d * dtype_bytes  # K,V tiles double-buffered
+        + KV_TILE * d * 4  # accumulator
+        + KV_TILE * KV_TILE * 4  # score tile
+    )
+    n_tiles = s // KV_TILE
+    # Causal: ~half the tile pairs are computed.
+    pairs = n_tiles * (n_tiles + 1) // 2
+    flops = b * h * pairs * (2 * KV_TILE * KV_TILE * d * 2)
+    bytes_hbm = b * h * (3 * s * d + s * d) * dtype_bytes
+    intensity = flops / bytes_hbm
+    mxu_ceiling = min(1.0, d / 128.0)  # [128,d]@[d,128] contractions
+    time_memory = bytes_hbm / HBM_BW
+    time_compute = flops / (MXU_FLOPS * max(mxu_ceiling, 1e-9))
+    return {
+        "kernel": "prefill",
+        "vmem_bytes": vmem,
+        "vmem_frac": vmem / VMEM_BYTES,
+        "intensity": intensity,
+        "bound": "memory" if intensity < RIDGE else "compute",
+        "mxu_ceiling": mxu_ceiling,
+        "est_time_us": max(time_memory, time_compute) * 1e6,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--csv", default=None)
+    args = ap.parse_args()
+
+    rows = []
+    print(f"TPU roofline ridge: {RIDGE:.0f} flops/byte; VMEM budget {VMEM_BYTES >> 20} MiB")
+    print(f"{'kernel':<8} {'B':>3} {'H':>3} {'S':>5} {'d':>4} "
+          f"{'VMEM':>9} {'int.':>7} {'bound':>7} {'MXU≤':>5} {'t est':>9}")
+    for (b, h, s, d) in [(1, 8, 256, 16), (16, 8, 256, 16), (8, 8, 2048, 64),
+                         (64, 32, 2048, 128)]:
+        for est in (decode_estimate(b, h, s, d), prefill_estimate(b, h, s, d)):
+            rows.append((b, h, s, d, est))
+            print(f"{est['kernel']:<8} {b:>3} {h:>3} {s:>5} {d:>4} "
+                  f"{est['vmem_bytes']/1024:>7.1f}Ki {est['intensity']:>7.1f} "
+                  f"{est['bound']:>7} {est['mxu_ceiling']:>5.2f} "
+                  f"{est['est_time_us']:>7.1f}µs")
+            assert est["vmem_frac"] < 0.5, "tile choice busts the VMEM budget"
+
+    if args.csv:
+        with open(args.csv, "w") as f:
+            f.write("kernel,b,h,s,d,vmem_bytes,intensity,bound,mxu_ceiling,est_time_us\n")
+            for (b, h, s, d, e) in rows:
+                f.write(f"{e['kernel']},{b},{h},{s},{d},{e['vmem_bytes']},"
+                        f"{e['intensity']:.2f},{e['bound']},{e['mxu_ceiling']:.3f},"
+                        f"{e['est_time_us']:.2f}\n")
+        print(f"wrote {args.csv}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""AOT artifact smoke tests: HLO text generation and metadata."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+def test_prefill_lowering_has_real_constants(tmp_path):
+    text = aot.lower_prefill(batch=1, seed=0)
+    assert "HloModule" in text
+    # Weights must be baked (not elided as `constant({...})`).
+    assert "constant({...})" not in text
+    assert "f32[512,128]" in text  # tok_embed
+    assert len(text) > 1_000_000
+
+
+def test_decode_lowering_signature():
+    text = aot.lower_decode(batch=2, seed=0)
+    assert "s32[2]" in text          # tokens/positions
+    assert "f32[4,2,8,256,16]" in text  # KV cache
+    assert "f32[2,512]" in text      # logits
+
+
+def test_meta_roundtrip(tmp_path):
+    aot.write_meta(str(tmp_path))
+    with open(tmp_path / "meta.json") as f:
+        meta = json.load(f)
+    assert meta["vocab"] == 512
+    assert meta["max_seq"] == 256
+    assert 1 in meta["decode_batches"]
+
+
+def test_artifacts_dir_if_present():
+    """If `make artifacts` has run, check the inventory is complete."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if not os.path.isdir(art) or not os.path.exists(os.path.join(art, "meta.json")):
+        pytest.skip("artifacts not built")
+    with open(os.path.join(art, "meta.json")) as f:
+        meta = json.load(f)
+    for b in meta["prefill_batches"]:
+        assert os.path.exists(os.path.join(art, f"prefill_b{b}.hlo.txt"))
+    for b in meta["decode_batches"]:
+        assert os.path.exists(os.path.join(art, f"decode_b{b}.hlo.txt"))
+
+
+def test_perf_estimate_within_vmem():
+    """Tile choices must stay within the VMEM budget at every profiled
+    shape (the assertion inside the estimator enforces it)."""
+    from compile.perf_estimate import decode_estimate, prefill_estimate
+
+    for (b, h, s, d) in [(1, 8, 256, 16), (64, 32, 2048, 128)]:
+        for est in (decode_estimate(b, h, s, d), prefill_estimate(b, h, s, d)):
+            assert est["vmem_frac"] < 0.5
+            assert est["est_time_us"] > 0
+    # Decode is memory-bound, long-context prefill compute-bound.
+    assert decode_estimate(8, 8, 2048, 64)["bound"] == "memory"
+    assert prefill_estimate(8, 8, 2048, 64)["bound"] == "compute"

@@ -1,0 +1,158 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+The CORE correctness signal for the compiled artifacts: hypothesis
+sweeps shapes, dtypes, and cache lengths; assert_allclose against
+ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import KV_TILE, decode_attention, prefill_attention
+from compile.kernels.ref import decode_attention_ref, prefill_attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOLS = {jnp.float32: dict(rtol=2e-5, atol=2e-5), jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("s", [KV_TILE, 2 * KV_TILE, 4 * KV_TILE])
+    def test_matches_ref_full_cache(self, dtype, s):
+        b, h, d = 2, 4, 16
+        q = rand(0, (b, h, d), dtype)
+        k = rand(1, (b, h, s, d), dtype)
+        v = rand(2, (b, h, s, d), dtype)
+        lens = jnp.full((b,), s, jnp.int32)
+        got = decode_attention(q, k, v, lens)
+        ref = decode_attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(ref, np.float32), **TOLS[dtype]
+        )
+
+    def test_partial_cache_masking(self):
+        """Entries beyond cache_len must not affect the output."""
+        b, h, s, d = 3, 2, 2 * KV_TILE, 8
+        q = rand(3, (b, h, d), jnp.float32)
+        k = rand(4, (b, h, s, d), jnp.float32)
+        v = rand(5, (b, h, s, d), jnp.float32)
+        lens = jnp.array([1, 7, 130], jnp.int32)
+        got = decode_attention(q, k, v, lens)
+        # Corrupt the masked region; result must be identical.
+        k2 = k.at[:, :, 200:].set(1e9)
+        v2 = v.at[:, :, 200:].set(-1e9)
+        lens_ok = jnp.array([1, 7, 130], jnp.int32)
+        got2 = decode_attention(q, k2, v2, lens_ok)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(got2))
+        ref = decode_attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+    def test_single_valid_entry_is_value_passthrough(self):
+        """With cache_len == 1 the output equals v[0] exactly (softmax of 1)."""
+        b, h, s, d = 1, 2, KV_TILE, 4
+        q = rand(6, (b, h, d), jnp.float32)
+        k = rand(7, (b, h, s, d), jnp.float32)
+        v = rand(8, (b, h, s, d), jnp.float32)
+        got = decode_attention(q, k, v, jnp.array([1], jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(got)[0], np.asarray(v)[0, :, 0], rtol=1e-6, atol=1e-6
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 4),
+        h=st.integers(1, 4),
+        tiles=st.integers(1, 3),
+        d=st.sampled_from([4, 8, 16, 32]),
+        seed=st.integers(0, 2**16),
+        data=st.data(),
+    )
+    def test_hypothesis_sweep(self, b, h, tiles, d, seed, data):
+        s = tiles * KV_TILE
+        lens = jnp.array(
+            data.draw(st.lists(st.integers(1, s), min_size=b, max_size=b)), jnp.int32
+        )
+        q = rand(seed, (b, h, d), jnp.float32)
+        k = rand(seed + 1, (b, h, s, d), jnp.float32)
+        v = rand(seed + 2, (b, h, s, d), jnp.float32)
+        got = decode_attention(q, k, v, lens)
+        ref = decode_attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=3e-5, atol=3e-5)
+        assert not np.any(np.isnan(np.asarray(got)))
+
+
+class TestPrefillAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("s", [KV_TILE, 2 * KV_TILE])
+    def test_matches_ref(self, dtype, s):
+        b, h, d = 2, 2, 16
+        q = rand(10, (b, h, s, d), dtype)
+        k = rand(11, (b, h, s, d), dtype)
+        v = rand(12, (b, h, s, d), dtype)
+        got = prefill_attention(q, k, v)
+        ref = prefill_attention_ref(q, k, v)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(ref, np.float32), **TOLS[dtype]
+        )
+
+    def test_causality(self):
+        """Future positions must not influence earlier outputs."""
+        b, h, s, d = 1, 2, 2 * KV_TILE, 8
+        q = rand(13, (b, h, s, d), jnp.float32)
+        k = rand(14, (b, h, s, d), jnp.float32)
+        v = rand(15, (b, h, s, d), jnp.float32)
+        out1 = np.asarray(prefill_attention(q, k, v))
+        # Change the last 10 positions of k/v: outputs before S-10 fixed.
+        k2 = k.at[:, :, -10:].add(3.0)
+        v2 = v.at[:, :, -10:].add(-5.0)
+        out2 = np.asarray(prefill_attention(q, k2, v2))
+        np.testing.assert_array_equal(out1[:, :, : s - 10], out2[:, :, : s - 10])
+        assert np.abs(out1[:, :, -1] - out2[:, :, -1]).max() > 1e-3
+
+    def test_first_position_is_v0(self):
+        b, h, s, d = 1, 1, KV_TILE, 4
+        q = rand(16, (b, h, s, d), jnp.float32)
+        k = rand(17, (b, h, s, d), jnp.float32)
+        v = rand(18, (b, h, s, d), jnp.float32)
+        out = prefill_attention(q, k, v)
+        np.testing.assert_allclose(
+            np.asarray(out)[0, 0, 0], np.asarray(v)[0, 0, 0], rtol=1e-6, atol=1e-6
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        h=st.integers(1, 3),
+        tiles=st.integers(1, 2),
+        d=st.sampled_from([4, 16]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, b, h, tiles, d, seed):
+        s = tiles * KV_TILE
+        q = rand(seed, (b, h, s, d), jnp.float32)
+        k = rand(seed + 1, (b, h, s, d), jnp.float32)
+        v = rand(seed + 2, (b, h, s, d), jnp.float32)
+        got = prefill_attention(q, k, v)
+        ref = prefill_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=3e-5, atol=3e-5)
+        assert not np.any(np.isnan(np.asarray(got)))
+
+
+def test_shape_validation():
+    with pytest.raises(AssertionError):
+        decode_attention(
+            jnp.zeros((1, 1, 4)),
+            jnp.zeros((1, 1, 100, 4)),  # not a KV_TILE multiple
+            jnp.zeros((1, 1, 100, 4)),
+            jnp.array([1], jnp.int32),
+        )

@@ -1,0 +1,147 @@
+//! Execution backends: where tokens actually come from.
+//!
+//! The engine (L3 coordinator) is generic over [`ExecutionBackend`] +
+//! [`Clock`]; the paper's contribution code path is identical whether the
+//! tokens come from:
+//!
+//! - [`sim::SimBackend`] — the calibrated discrete-event model standing
+//!   in for OPT-13B…175B on A100/A40 nodes (virtual clock), or
+//! - [`crate::runtime::PjrtBackend`] — the real tiny-OPT model compiled
+//!   AOT from JAX/Pallas and executed via the PJRT C API (wall clock).
+
+pub mod pjrt;
+pub mod sim;
+
+use crate::coordinator::request::RequestId;
+
+/// Engine time source. Virtual for simulation, wall for real serving.
+pub trait Clock {
+    /// Current time in seconds (monotone).
+    fn now(&self) -> f64;
+    /// Account `dt` seconds of work. Virtual clocks jump; wall clocks
+    /// ignore this (real work already took real time).
+    fn advance(&mut self, dt: f64);
+    /// Sleep/jump to an absolute time (≥ now), e.g. to the next arrival.
+    fn advance_to(&mut self, t: f64);
+}
+
+/// Simulation clock: time is a number we control.
+#[derive(Debug, Default, Clone)]
+pub struct VirtualClock {
+    t: f64,
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        self.t
+    }
+    fn advance(&mut self, dt: f64) {
+        debug_assert!(dt >= 0.0);
+        self.t += dt;
+    }
+    fn advance_to(&mut self, t: f64) {
+        if t > self.t {
+            self.t = t;
+        }
+    }
+}
+
+/// Wall clock anchored at creation.
+#[derive(Debug)]
+pub struct WallClock {
+    start: std::time::Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        WallClock { start: std::time::Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+    fn advance(&mut self, _dt: f64) {
+        // Real work already consumed real time.
+    }
+    fn advance_to(&mut self, t: f64) {
+        let now = self.now();
+        if t > now {
+            std::thread::sleep(std::time::Duration::from_secs_f64(t - now));
+        }
+    }
+}
+
+/// A request registered with the backend at arrival time.
+#[derive(Debug, Clone)]
+pub struct BackendRequest {
+    pub id: RequestId,
+    /// Prompt token ids (real backend) — empty in simulation.
+    pub prompt: Vec<u32>,
+    /// Prompt length in tokens (authoritative for KV accounting).
+    pub prompt_tokens: usize,
+    /// Ground-truth output length (simulation EOS); real backends ignore
+    /// it and detect EOS from the model.
+    pub output_tokens: usize,
+}
+
+/// A prefill job: replay `context_tokens` of context for `id` (prompt +
+/// any generated-then-dropped tokens for recompute preemption).
+#[derive(Debug, Clone, Copy)]
+pub struct PrefillJob {
+    pub id: RequestId,
+    pub context_tokens: usize,
+}
+
+/// One generated token event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TokenEvent {
+    pub id: RequestId,
+    pub token: u32,
+    /// True when this token ends the response (EOS / length reached).
+    pub finished: bool,
+}
+
+/// Result of a prefill or decode step.
+#[derive(Debug, Clone)]
+pub struct StepOutcome {
+    /// Seconds this step took (virtual or measured).
+    pub latency: f64,
+    /// One event per request in the step.
+    pub tokens: Vec<TokenEvent>,
+}
+
+/// Token generation backend. All methods are infallible in simulation;
+/// the PJRT backend surfaces runtime errors.
+pub trait ExecutionBackend {
+    /// Register a request on arrival.
+    fn register(&mut self, req: BackendRequest) -> anyhow::Result<()>;
+
+    /// Run one (batched) prefill pass; each job delivers the request's
+    /// first token (vLLM-style prefill iteration).
+    fn prefill(&mut self, jobs: &[PrefillJob]) -> anyhow::Result<StepOutcome>;
+
+    /// Run one decode iteration over `batch`; every request generates
+    /// exactly one token. `total_ctx` is the batch's total context
+    /// length (for latency accounting).
+    fn decode(&mut self, batch: &[RequestId], total_ctx: usize) -> anyhow::Result<StepOutcome>;
+
+    /// Account a swap of `tokens` of KV state (either direction);
+    /// returns the latency to charge.
+    fn swap_cost(&mut self, tokens: usize) -> f64;
+
+    /// Drop a request's generation state (on finish, or on recompute
+    /// preemption drop of KV — the prompt stays registered so prefill
+    /// can replay).
+    fn drop_kv(&mut self, id: RequestId);
+
+    /// Forget the request entirely (finished and recorded).
+    fn release(&mut self, id: RequestId);
+}

@@ -1,0 +1,149 @@
+//! Discrete-event simulation backend.
+//!
+//! Token generation costs come from the calibrated [`LatencyModel`];
+//! token *identities* are synthetic (the scheduler never looks at them).
+//! A request finishes when it reaches its ground-truth output length
+//! from the workload trace — mirroring the paper's setting where the
+//! server discovers response length only at EOS time.
+
+use std::collections::HashMap;
+
+use super::{BackendRequest, ExecutionBackend, PrefillJob, StepOutcome, TokenEvent};
+use crate::coordinator::request::RequestId;
+use crate::model::latency::LatencyModel;
+
+#[derive(Debug, Clone)]
+struct SimRequest {
+    output_tokens: usize,
+    generated: usize,
+}
+
+/// Simulation backend over a latency model.
+#[derive(Debug)]
+pub struct SimBackend {
+    latency: LatencyModel,
+    requests: HashMap<RequestId, SimRequest>,
+}
+
+impl SimBackend {
+    pub fn new(latency: LatencyModel) -> Self {
+        SimBackend { latency, requests: HashMap::new() }
+    }
+
+    pub fn latency_model(&self) -> &LatencyModel {
+        &self.latency
+    }
+
+    fn gen_token(&mut self, id: RequestId) -> TokenEvent {
+        let r = self.requests.get_mut(&id).expect("decode of unregistered request");
+        r.generated += 1;
+        TokenEvent { id, token: r.generated as u32, finished: r.generated >= r.output_tokens }
+    }
+}
+
+impl ExecutionBackend for SimBackend {
+    fn register(&mut self, req: BackendRequest) -> anyhow::Result<()> {
+        self.requests.insert(
+            req.id,
+            SimRequest { output_tokens: req.output_tokens.max(1), generated: 0 },
+        );
+        Ok(())
+    }
+
+    fn prefill(&mut self, jobs: &[PrefillJob]) -> anyhow::Result<StepOutcome> {
+        let total: usize = jobs.iter().map(|j| j.context_tokens).sum();
+        let latency = self.latency.prefill(total);
+        // A prefill replay (recompute) does NOT re-emit already-delivered
+        // tokens; it delivers the *next* token. The engine tracks what
+        // was delivered; here we just generate one more.
+        let tokens = jobs.iter().map(|j| self.gen_token(j.id)).collect();
+        Ok(StepOutcome { latency, tokens })
+    }
+
+    fn decode(&mut self, batch: &[RequestId], total_ctx: usize) -> anyhow::Result<StepOutcome> {
+        let latency = self.latency.decode(batch.len(), total_ctx);
+        let tokens = batch.iter().map(|&id| self.gen_token(id)).collect();
+        Ok(StepOutcome { latency, tokens })
+    }
+
+    fn swap_cost(&mut self, tokens: usize) -> f64 {
+        self.latency.swap(tokens)
+    }
+
+    fn drop_kv(&mut self, _id: RequestId) {
+        // KV accounting lives in the coordinator; generation progress is
+        // retained (recompute replays context but not delivered tokens).
+    }
+
+    fn release(&mut self, id: RequestId) {
+        self.requests.remove(&id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gpu::a100_4x;
+    use crate::model::llm::opt_66b;
+
+    fn backend() -> SimBackend {
+        SimBackend::new(LatencyModel::for_deployment(&opt_66b(), &a100_4x()))
+    }
+
+    fn reg(b: &mut SimBackend, id: RequestId, out: usize) {
+        b.register(BackendRequest { id, prompt: vec![], prompt_tokens: 10, output_tokens: out })
+            .unwrap();
+    }
+
+    #[test]
+    fn decode_generates_one_token_each() {
+        let mut b = backend();
+        reg(&mut b, 0, 3);
+        reg(&mut b, 1, 1);
+        let out = b.decode(&[0, 1], 20).unwrap();
+        assert_eq!(out.tokens.len(), 2);
+        assert!(!out.tokens[0].finished);
+        assert!(out.tokens[1].finished, "output_tokens=1 finishes immediately");
+        assert!(out.latency > 0.0);
+    }
+
+    #[test]
+    fn finishes_at_ground_truth_length() {
+        let mut b = backend();
+        reg(&mut b, 0, 3);
+        assert!(!b.decode(&[0], 10).unwrap().tokens[0].finished);
+        assert!(!b.decode(&[0], 11).unwrap().tokens[0].finished);
+        assert!(b.decode(&[0], 12).unwrap().tokens[0].finished);
+    }
+
+    #[test]
+    fn prefill_latency_scales_with_tokens() {
+        let mut b = backend();
+        reg(&mut b, 0, 5);
+        reg(&mut b, 1, 5);
+        let small = b.prefill(&[PrefillJob { id: 0, context_tokens: 50 }]).unwrap();
+        let large = b.prefill(&[PrefillJob { id: 1, context_tokens: 800 }]).unwrap();
+        assert!(large.latency > small.latency);
+        assert_eq!(small.tokens.len(), 1);
+        assert_eq!(small.tokens[0].token, 1);
+    }
+
+    #[test]
+    fn recompute_preserves_progress() {
+        let mut b = backend();
+        reg(&mut b, 0, 5);
+        b.decode(&[0], 10).unwrap();
+        b.decode(&[0], 11).unwrap();
+        b.drop_kv(0); // recompute-preempt
+        // Replaying prefill generates token #3, not #1.
+        let out = b.prefill(&[PrefillJob { id: 0, context_tokens: 12 }]).unwrap();
+        assert_eq!(out.tokens[0].token, 3);
+    }
+
+    #[test]
+    fn swap_cost_positive_and_monotone() {
+        let mut b = backend();
+        assert!(b.swap_cost(100) > 0.0);
+        assert!(b.swap_cost(1000) > b.swap_cost(100));
+    }
+}

@@ -1,0 +1,224 @@
+//! Cluster-level serving: multiple engine replicas behind a router.
+//!
+//! The paper scopes Andes to a single vLLM instance and "assumes that
+//! cluster-level load balancing ... [is] done separately" (§5). This
+//! module builds that separate layer — the natural extension a
+//! deployment needs — and lets the `ext-cluster` experiment quantify
+//! how much the routing policy matters once per-replica scheduling is
+//! QoE-aware:
+//!
+//! - [`RoutingPolicy::RoundRobin`] — classic stateless spraying;
+//! - [`RoutingPolicy::LeastLoaded`] — join-the-shortest-queue on active
+//!   request count;
+//! - [`RoutingPolicy::QoeAware`] — route to the replica with the most
+//!   KV-token headroom per active request (a proxy for the marginal QoE
+//!   cost of placing one more request there).
+
+use anyhow::Result;
+
+use crate::backend::sim::SimBackend;
+use crate::backend::VirtualClock;
+use crate::config::SchedulerConfig;
+use crate::coordinator::engine::{Engine, EngineConfig};
+use crate::coordinator::metrics::Metrics;
+use crate::model::latency::LatencyModel;
+use crate::workload::RequestSpec;
+
+/// Request routing policies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    RoundRobin,
+    LeastLoaded,
+    QoeAware,
+}
+
+impl RoutingPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RoutingPolicy::RoundRobin => "round-robin",
+            RoutingPolicy::LeastLoaded => "least-loaded",
+            RoutingPolicy::QoeAware => "qoe-aware",
+        }
+    }
+}
+
+/// A simulated serving cluster.
+pub struct Cluster {
+    replicas: Vec<Engine<SimBackend, VirtualClock>>,
+    policy: RoutingPolicy,
+    rr_next: usize,
+}
+
+impl Cluster {
+    /// Build `n` identical replicas.
+    pub fn new(
+        n: usize,
+        engine_cfg: EngineConfig,
+        latency: LatencyModel,
+        scheduler: &SchedulerConfig,
+        policy: RoutingPolicy,
+    ) -> Self {
+        assert!(n > 0);
+        let replicas = (0..n)
+            .map(|_| {
+                Engine::new(
+                    engine_cfg.clone(),
+                    SimBackend::new(latency.clone()),
+                    VirtualClock::default(),
+                    scheduler.build(),
+                    latency.clone(),
+                )
+            })
+            .collect();
+        Cluster { replicas, policy, rr_next: 0 }
+    }
+
+    pub fn num_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Active (unfinished) request count per replica.
+    fn loads(&self) -> Vec<usize> {
+        self.replicas
+            .iter()
+            .map(|e| e.requests().iter().filter(|r| r.is_active()).count())
+            .collect()
+    }
+
+    /// Pick a replica for a new request.
+    fn route(&mut self) -> usize {
+        match self.policy {
+            RoutingPolicy::RoundRobin => {
+                let idx = self.rr_next % self.replicas.len();
+                self.rr_next += 1;
+                idx
+            }
+            RoutingPolicy::LeastLoaded => {
+                let loads = self.loads();
+                (0..loads.len()).min_by_key(|&i| loads[i]).unwrap()
+            }
+            RoutingPolicy::QoeAware => {
+                // Most free KV tokens per active request: replicas close
+                // to memory saturation will degrade everyone's QoE when
+                // given one more request.
+                let loads = self.loads();
+                (0..self.replicas.len())
+                    .max_by(|&a, &b| {
+                        let score = |i: usize| {
+                            self.replicas[i].kv().device_free_tokens() as f64
+                                / (loads[i] + 1) as f64
+                        };
+                        score(a).partial_cmp(&score(b)).unwrap()
+                    })
+                    .unwrap()
+            }
+        }
+    }
+
+    /// Advance every replica's virtual clock to at least `t`, running
+    /// any pending work on the way.
+    fn advance_all_to(&mut self, t: f64) -> Result<()> {
+        for e in self.replicas.iter_mut() {
+            while e.has_work() && e.now() < t {
+                e.tick()?;
+            }
+            e.advance_clock_to(t);
+        }
+        Ok(())
+    }
+
+    /// Run a full trace through the cluster; returns per-replica metrics.
+    pub fn run_trace(&mut self, mut trace: Vec<RequestSpec>) -> Result<Vec<Metrics>> {
+        trace.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        for spec in trace {
+            // Bring the cluster's clocks up to the arrival instant so
+            // routing sees current loads.
+            self.advance_all_to(spec.arrival)?;
+            let idx = self.route();
+            self.replicas[idx].submit(spec)?;
+        }
+        // Drain.
+        for e in self.replicas.iter_mut() {
+            while e.has_work() {
+                e.tick()?;
+            }
+        }
+        Ok(self
+            .replicas
+            .iter_mut()
+            .map(|e| std::mem::take(e.metrics_mut()))
+            .collect())
+    }
+}
+
+/// Merge per-replica metrics into cluster-level aggregates.
+pub fn merged_qoes(all: &[Metrics]) -> Vec<f64> {
+    all.iter().flat_map(|m| m.qoes()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gpu::a100_4x;
+    use crate::model::llm::opt_66b;
+    use crate::workload::{ArrivalProcess, Dataset, QoeTrace, Workload};
+
+    fn small_cluster(policy: RoutingPolicy, n: usize) -> Cluster {
+        let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+        let cfg = EngineConfig {
+            kv_capacity_tokens: 4000,
+            swap_capacity_tokens: 8000,
+            ..EngineConfig::default()
+        };
+        Cluster::new(n, cfg, latency, &SchedulerConfig::Fcfs, policy)
+    }
+
+    fn trace(n: usize, rate: f64, seed: u64) -> Vec<RequestSpec> {
+        Workload {
+            dataset: Dataset::ShareGpt,
+            arrivals: ArrivalProcess::Poisson { rate },
+            qoe_trace: QoeTrace::TextReading,
+            num_requests: n,
+            seed,
+        }
+        .generate()
+    }
+
+    #[test]
+    fn all_requests_complete_across_replicas() {
+        for policy in
+            [RoutingPolicy::RoundRobin, RoutingPolicy::LeastLoaded, RoutingPolicy::QoeAware]
+        {
+            let mut c = small_cluster(policy, 3);
+            let all = c.run_trace(trace(60, 3.0, 5)).unwrap();
+            let total: usize = all.iter().map(|m| m.requests.len()).sum();
+            assert_eq!(total, 60, "{}", policy.label());
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_evenly() {
+        let mut c = small_cluster(RoutingPolicy::RoundRobin, 4);
+        let all = c.run_trace(trace(80, 2.0, 6)).unwrap();
+        for m in &all {
+            assert_eq!(m.requests.len(), 20);
+        }
+    }
+
+    #[test]
+    fn least_loaded_balances_under_skew() {
+        let mut c = small_cluster(RoutingPolicy::LeastLoaded, 2);
+        let all = c.run_trace(trace(40, 4.0, 7)).unwrap();
+        let counts: Vec<usize> = all.iter().map(|m| m.requests.len()).collect();
+        let diff = counts[0].abs_diff(counts[1]);
+        assert!(diff <= 8, "unbalanced: {counts:?}");
+    }
+
+    #[test]
+    fn single_replica_cluster_matches_engine() {
+        let mut c = small_cluster(RoutingPolicy::QoeAware, 1);
+        let all = c.run_trace(trace(30, 2.0, 8)).unwrap();
+        assert_eq!(all[0].requests.len(), 30);
+        assert!(merged_qoes(&all).len() == 30);
+    }
+}

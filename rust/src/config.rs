@@ -1,0 +1,275 @@
+//! Deployment configuration: a JSON config file describing the model,
+//! hardware, scheduler, and engine knobs, overridable from the CLI.
+//!
+//! ```json
+//! {
+//!   "model": "opt-66b",
+//!   "gpu": "a100-4x",
+//!   "scheduler": {
+//!     "kind": "andes",
+//!     "objective": "avg",
+//!     "preemption_cap": 1.0,
+//!     "delta_t": null,
+//!     "b_grid": 8,
+//!     "solver": "greedy"
+//!   },
+//!   "engine": {
+//!     "block_size": 16,
+//!     "max_output_tokens": 2048,
+//!     "prefer_swap": true
+//!   }
+//! }
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::engine::EngineConfig;
+use crate::coordinator::sched::andes::{AndesConfig, AndesScheduler, KnapsackSolver};
+use crate::coordinator::sched::fcfs::FcfsScheduler;
+use crate::coordinator::sched::objective::Objective;
+use crate::coordinator::sched::round_robin::RoundRobinScheduler;
+use crate::coordinator::sched::Scheduler;
+use crate::model::gpu::{gpu_by_name, GpuProfile};
+use crate::model::llm::{llm_by_name, LlmProfile};
+use crate::util::json::Json;
+
+/// Parsed deployment configuration.
+#[derive(Debug, Clone)]
+pub struct AndesDeployment {
+    pub llm: LlmProfile,
+    pub gpu: GpuProfile,
+    pub scheduler: SchedulerConfig,
+    pub engine: EngineConfig,
+}
+
+/// Scheduler section.
+#[derive(Debug, Clone)]
+pub enum SchedulerConfig {
+    Fcfs,
+    RoundRobin { quantum: u64 },
+    Andes(AndesConfig),
+}
+
+impl SchedulerConfig {
+    pub fn build(&self) -> Box<dyn Scheduler> {
+        match self {
+            SchedulerConfig::Fcfs => Box::new(FcfsScheduler::new()),
+            SchedulerConfig::RoundRobin { quantum } => {
+                Box::new(RoundRobinScheduler::new(*quantum))
+            }
+            SchedulerConfig::Andes(cfg) => Box::new(AndesScheduler::new(cfg.clone())),
+        }
+    }
+}
+
+impl Default for AndesDeployment {
+    fn default() -> Self {
+        let llm = crate::model::llm::opt_66b();
+        let gpu = crate::model::gpu::a100_4x();
+        let engine = EngineConfig {
+            kv_capacity_tokens: llm.kv_capacity_tokens(&gpu),
+            swap_capacity_tokens: llm.swap_capacity_tokens(&gpu),
+            ..EngineConfig::default()
+        };
+        AndesDeployment {
+            llm,
+            gpu,
+            scheduler: SchedulerConfig::Andes(AndesConfig::default()),
+            engine,
+        }
+    }
+}
+
+impl AndesDeployment {
+    /// Load from a JSON file.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json_str(&text)
+    }
+
+    /// Parse from a JSON string.
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("parsing config json")?;
+        let mut d = AndesDeployment::default();
+
+        if let Some(name) = j.get("model").as_str() {
+            d.llm = llm_by_name(name)
+                .with_context(|| format!("unknown model '{name}'"))?;
+        }
+        if let Some(name) = j.get("gpu").as_str() {
+            d.gpu =
+                gpu_by_name(name).with_context(|| format!("unknown gpu '{name}'"))?;
+        }
+        // Re-derive capacity from the (possibly new) model/GPU pair.
+        d.engine.kv_capacity_tokens = d.llm.kv_capacity_tokens(&d.gpu);
+        d.engine.swap_capacity_tokens = d.llm.swap_capacity_tokens(&d.gpu);
+
+        let s = j.get("scheduler");
+        if !s.is_null() {
+            let kind = s.get("kind").as_str().unwrap_or("andes");
+            d.scheduler = match kind {
+                "fcfs" => SchedulerConfig::Fcfs,
+                "rr" | "round-robin" => SchedulerConfig::RoundRobin {
+                    quantum: s.get("quantum").as_u64().unwrap_or(50),
+                },
+                "andes" => {
+                    let mut cfg = AndesConfig::default();
+                    if let Some(o) = s.get("objective").as_str() {
+                        cfg.objective = Objective::by_name(o)
+                            .with_context(|| format!("unknown objective '{o}'"))?;
+                    }
+                    if let Some(p) = s.get("preemption_cap").as_f64() {
+                        if p < 0.0 {
+                            bail!("preemption_cap must be ≥ 0");
+                        }
+                        cfg.preemption_cap = p;
+                    }
+                    if let Some(dt) = s.get("delta_t").as_f64() {
+                        cfg.delta_t_override = Some(dt);
+                    }
+                    if let Some(g) = s.get("b_grid").as_u64() {
+                        cfg.b_grid = (g as usize).max(1);
+                    }
+                    if let Some(sv) = s.get("solver").as_str() {
+                        cfg.solver = match sv {
+                            "greedy" => KnapsackSolver::Greedy,
+                            "dp" => KnapsackSolver::Dp,
+                            other => bail!("unknown solver '{other}'"),
+                        };
+                    }
+                    if let Some(w) = s.get("watermark").as_f64() {
+                        if !(0.0..=1.0).contains(&w) {
+                            bail!("watermark must be in [0,1]");
+                        }
+                        cfg.watermark = w;
+                    }
+                    if let Some(m) = s.get("preempt_margin").as_f64() {
+                        cfg.preempt_margin = m.max(0.0);
+                    }
+                    SchedulerConfig::Andes(cfg)
+                }
+                other => bail!("unknown scheduler kind '{other}'"),
+            };
+        }
+
+        let e = j.get("engine");
+        if !e.is_null() {
+            if let Some(b) = e.get("block_size").as_u64() {
+                if b == 0 {
+                    bail!("block_size must be > 0");
+                }
+                d.engine.block_size = b as usize;
+            }
+            if let Some(m) = e.get("max_output_tokens").as_u64() {
+                d.engine.max_output_tokens = m as usize;
+            }
+            if let Some(p) = e.get("prefer_swap").as_bool() {
+                d.engine.prefer_swap = p;
+            }
+            if let Some(k) = e.get("kv_capacity_tokens").as_u64() {
+                d.engine.kv_capacity_tokens = k as usize;
+            }
+            if let Some(k) = e.get("swap_capacity_tokens").as_u64() {
+                d.engine.swap_capacity_tokens = k as usize;
+            }
+        }
+        Ok(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_66b_andes() {
+        let d = AndesDeployment::default();
+        assert_eq!(d.llm.name, "OPT-66B");
+        assert!(matches!(d.scheduler, SchedulerConfig::Andes(_)));
+        assert!(d.engine.kv_capacity_tokens > 10_000);
+    }
+
+    #[test]
+    fn full_config_parses() {
+        let d = AndesDeployment::from_json_str(
+            r#"{
+              "model": "opt-13b",
+              "gpu": "a100-1x",
+              "scheduler": {"kind": "andes", "objective": "maxmin",
+                            "preemption_cap": 0.4, "delta_t": 60,
+                            "b_grid": 4, "solver": "dp", "watermark": 0.8},
+              "engine": {"block_size": 32, "max_output_tokens": 512,
+                         "prefer_swap": false}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(d.llm.name, "OPT-13B");
+        assert_eq!(d.gpu.name, "1xA100-80G");
+        match &d.scheduler {
+            SchedulerConfig::Andes(c) => {
+                assert_eq!(c.objective, Objective::MaxMin);
+                assert_eq!(c.preemption_cap, 0.4);
+                assert_eq!(c.delta_t_override, Some(60.0));
+                assert_eq!(c.b_grid, 4);
+                assert_eq!(c.solver, KnapsackSolver::Dp);
+                assert_eq!(c.watermark, 0.8);
+            }
+            other => panic!("wrong scheduler {other:?}"),
+        }
+        assert_eq!(d.engine.block_size, 32);
+        assert!(!d.engine.prefer_swap);
+        // Capacity derived from 13B on 1×A100.
+        assert!(d.engine.kv_capacity_tokens > 40_000);
+    }
+
+    #[test]
+    fn partial_config_keeps_defaults() {
+        let d = AndesDeployment::from_json_str(r#"{"scheduler": {"kind": "fcfs"}}"#).unwrap();
+        assert!(matches!(d.scheduler, SchedulerConfig::Fcfs));
+        assert_eq!(d.llm.name, "OPT-66B");
+    }
+
+    #[test]
+    fn rr_quantum() {
+        let d = AndesDeployment::from_json_str(
+            r#"{"scheduler": {"kind": "rr", "quantum": 25}}"#,
+        )
+        .unwrap();
+        assert!(matches!(d.scheduler, SchedulerConfig::RoundRobin { quantum: 25 }));
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(AndesDeployment::from_json_str(r#"{"model": "gpt-99"}"#).is_err());
+        assert!(AndesDeployment::from_json_str(
+            r#"{"scheduler": {"kind": "magic"}}"#
+        )
+        .is_err());
+        assert!(AndesDeployment::from_json_str(
+            r#"{"scheduler": {"kind": "andes", "solver": "quantum"}}"#
+        )
+        .is_err());
+        assert!(AndesDeployment::from_json_str(
+            r#"{"scheduler": {"kind": "andes", "watermark": 1.5}}"#
+        )
+        .is_err());
+        assert!(AndesDeployment::from_json_str(r#"{"engine": {"block_size": 0}}"#).is_err());
+        assert!(AndesDeployment::from_json_str("not json").is_err());
+    }
+
+    #[test]
+    fn scheduler_builds() {
+        for cfg in [
+            r#"{"scheduler": {"kind": "fcfs"}}"#,
+            r#"{"scheduler": {"kind": "rr"}}"#,
+            r#"{"scheduler": {"kind": "andes"}}"#,
+        ] {
+            let d = AndesDeployment::from_json_str(cfg).unwrap();
+            let s = d.scheduler.build();
+            assert!(!s.name().is_empty());
+        }
+    }
+}

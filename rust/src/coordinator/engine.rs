@@ -1,0 +1,603 @@
+//! The continuous-batching serving engine (paper Fig. 6).
+//!
+//! One iteration = ① ingest arrivals, ② ask the scheduler for the
+//! desired running set, ③ apply the diff (preempt via swap with
+//! recompute fallback; admit via swap-in or prefill), ④ run one model
+//! step (a prefill pass if anyone was just admitted from Waiting, else a
+//! decode pass), ⑤ deliver tokens and retire finished requests.
+//!
+//! The engine is generic over [`ExecutionBackend`] and [`Clock`], so the
+//! same coordinator code drives both the calibrated simulator and the
+//! real PJRT-compiled model (DESIGN.md §2).
+
+use crate::backend::{BackendRequest, Clock, ExecutionBackend, PrefillJob};
+use crate::model::latency::LatencyModel;
+use crate::workload::RequestSpec;
+
+use super::kv::KvCacheManager;
+use super::metrics::{IterationSample, Metrics};
+use super::request::{Phase, Request, RequestId};
+use super::sched::{SchedView, Scheduler};
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// KV block size in tokens (vLLM default 16).
+    pub block_size: usize,
+    /// Device KV capacity in tokens (`M` of Eq. 3).
+    pub kv_capacity_tokens: usize,
+    /// Host swap pool capacity in tokens.
+    pub swap_capacity_tokens: usize,
+    /// Hard cap on generated tokens per request (safety net).
+    pub max_output_tokens: usize,
+    /// Prefer swap (true) or recompute (false) for preemption.
+    pub prefer_swap: bool,
+    /// Initial Δt estimate before any request completes (s).
+    pub initial_horizon: f64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            block_size: 16,
+            kv_capacity_tokens: 16 * 4096,
+            swap_capacity_tokens: 16 * 8192,
+            max_output_tokens: 2048,
+            prefer_swap: true,
+            initial_horizon: 60.0,
+        }
+    }
+}
+
+/// The serving engine.
+pub struct Engine<B: ExecutionBackend, C: Clock> {
+    cfg: EngineConfig,
+    backend: B,
+    clock: C,
+    scheduler: Box<dyn Scheduler>,
+    latency: LatencyModel,
+    kv: KvCacheManager,
+    requests: Vec<Request>,
+    /// Non-finished request ids.
+    active: Vec<RequestId>,
+    /// Pending trace arrivals, reverse-sorted so pop() yields earliest.
+    pending: Vec<RequestSpec>,
+    metrics: Metrics,
+    /// Running average of request completion time (the Δt estimate).
+    completion_avg: f64,
+    completions: u64,
+    started: bool,
+}
+
+impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
+    pub fn new(
+        cfg: EngineConfig,
+        backend: B,
+        clock: C,
+        scheduler: Box<dyn Scheduler>,
+        latency: LatencyModel,
+    ) -> Self {
+        let kv = KvCacheManager::new(
+            cfg.kv_capacity_tokens,
+            cfg.swap_capacity_tokens,
+            cfg.block_size,
+        );
+        Engine {
+            cfg,
+            backend,
+            clock,
+            scheduler,
+            latency,
+            kv,
+            requests: Vec::new(),
+            active: Vec::new(),
+            pending: Vec::new(),
+            metrics: Metrics::new(),
+            completion_avg: 0.0,
+            completions: 0,
+            started: false,
+        }
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn metrics_mut(&mut self) -> &mut Metrics {
+        &mut self.metrics
+    }
+
+    pub fn kv(&self) -> &KvCacheManager {
+        &self.kv
+    }
+
+    pub fn requests(&self) -> &[Request] {
+        &self.requests
+    }
+
+    pub fn clock(&self) -> &C {
+        &self.clock
+    }
+
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    pub fn backend_mut(&mut self) -> &mut B {
+        &mut self.backend
+    }
+
+    pub fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    /// Queue a whole workload trace (sim mode).
+    pub fn load_trace(&mut self, mut specs: Vec<RequestSpec>) {
+        specs.sort_by(|a, b| b.arrival.partial_cmp(&a.arrival).unwrap());
+        self.pending = specs;
+    }
+
+    /// Submit one request immediately (live serving mode). Returns its id.
+    pub fn submit(&mut self, spec: RequestSpec) -> anyhow::Result<RequestId> {
+        self.submit_with_prompt(spec, Vec::new())
+    }
+
+    /// Submit with concrete prompt token ids (real-model serving; the
+    /// simulator only needs the length). `spec.prompt_tokens` is
+    /// overridden by the actual token count when a prompt is given.
+    pub fn submit_with_prompt(
+        &mut self,
+        mut spec: RequestSpec,
+        prompt: Vec<u32>,
+    ) -> anyhow::Result<RequestId> {
+        if !prompt.is_empty() {
+            spec.prompt_tokens = prompt.len();
+        }
+        let id = self.requests.len();
+        let arrival = spec.arrival.max(self.clock.now());
+        self.backend.register(BackendRequest {
+            id,
+            prompt,
+            prompt_tokens: spec.prompt_tokens,
+            output_tokens: spec.output_tokens,
+        })?;
+        self.requests.push(Request::new(id, arrival, spec.prompt_tokens, spec.qoe));
+        self.active.push(id);
+        Ok(id)
+    }
+
+    fn ingest_arrivals(&mut self) -> anyhow::Result<()> {
+        let now = self.clock.now();
+        while self.pending.last().is_some_and(|s| s.arrival <= now) {
+            let spec = self.pending.pop().unwrap();
+            self.submit(spec)?;
+        }
+        Ok(())
+    }
+
+    /// Preempt `id` out of the running batch: swap if preferred and
+    /// possible, else drop + mark for recompute.
+    fn preempt(&mut self, id: RequestId) {
+        debug_assert_eq!(self.requests[id].phase, Phase::Running);
+        let mut swapped = false;
+        if self.cfg.prefer_swap {
+            if let Ok(tokens) = self.kv.swap_out(id) {
+                let cost = self.backend.swap_cost(tokens);
+                self.clock.advance(cost);
+                self.requests[id].phase = Phase::SwappedOut;
+                self.metrics.swap_preemptions += 1;
+                swapped = true;
+            }
+        }
+        if !swapped {
+            // Recompute: drop KV entirely; prefill replays on readmission.
+            let _ = self.kv.free(id);
+            self.backend.drop_kv(id);
+            self.requests[id].phase = Phase::Waiting;
+            self.metrics.recompute_preemptions += 1;
+        }
+        self.requests[id].preemptions += 1;
+        self.metrics.total_preemptions += 1;
+    }
+
+    /// Retire a finished request.
+    fn finish(&mut self, id: RequestId, now: f64) {
+        let r = &mut self.requests[id];
+        r.phase = Phase::Finished;
+        r.finished_at = Some(now);
+        let completion = now - r.arrival;
+        self.completions += 1;
+        self.completion_avg +=
+            (completion - self.completion_avg) / self.completions as f64;
+        let _ = self.kv.free(id);
+        self.backend.release(id);
+        self.metrics.record_finish(&self.requests[id]);
+        self.scheduler.on_finish(id);
+        self.active.retain(|&a| a != id);
+    }
+
+    /// Whether any work remains (active requests or pending arrivals).
+    pub fn has_work(&self) -> bool {
+        !self.active.is_empty() || !self.pending.is_empty()
+    }
+
+    /// Advance the clock to `t` if it lags (cluster-level coordination of
+    /// idle replicas; a no-op for wall clocks already past `t`).
+    pub fn advance_clock_to(&mut self, t: f64) {
+        self.clock.advance_to(t);
+    }
+
+    /// Run one engine iteration. Returns false when idle with nothing
+    /// pending.
+    pub fn tick(&mut self) -> anyhow::Result<bool> {
+        if !self.started {
+            self.metrics.started_at = self.clock.now();
+            self.started = true;
+        }
+        self.ingest_arrivals()?;
+
+        if self.active.is_empty() {
+            match self.pending.last() {
+                Some(next) => {
+                    let t = next.arrival;
+                    self.clock.advance_to(t);
+                    self.metrics.ended_at = self.clock.now();
+                    return Ok(true);
+                }
+                None => {
+                    self.metrics.ended_at = self.clock.now();
+                    return Ok(false);
+                }
+            }
+        }
+
+        // ② Scheduling decision. (Split borrows: the scheduler is &mut
+        // while the view borrows the rest of the engine immutably.)
+        let sched_t0 = std::time::Instant::now();
+        let view = SchedView {
+            now: self.clock.now(),
+            horizon: if self.completions == 0 {
+                self.cfg.initial_horizon
+            } else {
+                self.completion_avg
+            },
+            requests: &self.requests,
+            active: &self.active,
+            kv: &self.kv,
+            latency: &self.latency,
+            total_requests_seen: self.requests.len(),
+            total_preemptions: self.metrics.total_preemptions as usize,
+        };
+        let desired = self.scheduler.schedule(&view);
+        self.metrics.scheduler_time += sched_t0.elapsed().as_secs_f64();
+
+        // Sanitize: active, non-finished, deduped.
+        let mut desired: Vec<RequestId> = desired
+            .into_iter()
+            .filter(|&id| id < self.requests.len() && self.requests[id].is_active())
+            .collect();
+        desired.dedup();
+
+        let desired_set: std::collections::HashSet<RequestId> =
+            desired.iter().copied().collect();
+
+        // ③a Preempt departures first (frees blocks for admissions).
+        let departures: Vec<RequestId> = self
+            .active
+            .iter()
+            .copied()
+            .filter(|&id| self.requests[id].phase == Phase::Running && !desired_set.contains(&id))
+            .collect();
+        for id in departures {
+            self.preempt(id);
+        }
+
+        // ③b Admit newcomers: swap-in or schedule a prefill.
+        let mut prefills: Vec<PrefillJob> = Vec::new();
+        for &id in &desired {
+            match self.requests[id].phase {
+                Phase::Running => {}
+                Phase::SwappedOut => {
+                    if self.kv.swap_in(id).is_ok() {
+                        let cost = self.backend.swap_cost(self.requests[id].context_len());
+                        self.clock.advance(cost);
+                        self.requests[id].phase = Phase::Running;
+                    }
+                    // else: no room this round; stays swapped.
+                }
+                Phase::Waiting => {
+                    let ctx = self.requests[id].context_len();
+                    if self.kv.allocate(id, ctx).is_ok() {
+                        self.requests[id].phase = Phase::Running;
+                        prefills.push(PrefillJob { id, context_tokens: ctx });
+                    }
+                    // else: scheduler overcommitted; skip this round.
+                }
+                Phase::Finished => unreachable!(),
+            }
+        }
+
+        // OOM safety net (vLLM behaviour): every running request must be
+        // able to grow by one token this iteration; preempt the
+        // latest-arrived runners until that holds.
+        loop {
+            let running: Vec<RequestId> = self
+                .active
+                .iter()
+                .copied()
+                .filter(|&id| self.requests[id].phase == Phase::Running)
+                .collect();
+            let needed: usize = running
+                .iter()
+                .filter(|&&id| {
+                    !prefills.iter().any(|p| p.id == id)
+                        && self.requests[id].context_len() % self.cfg.block_size == 0
+                })
+                .count();
+            if needed <= self.kv.device_free_blocks() {
+                break;
+            }
+            // Preempt the latest-arrived running request (vLLM policy).
+            let victim = running
+                .into_iter()
+                .filter(|id| !prefills.iter().any(|p| p.id == *id))
+                .max_by(|&a, &b| {
+                    self.requests[a]
+                        .arrival
+                        .partial_cmp(&self.requests[b].arrival)
+                        .unwrap()
+                        .then(a.cmp(&b))
+                });
+            match victim {
+                Some(v) => {
+                    self.preempt(v);
+                    self.metrics.oom_preemptions += 1;
+                }
+                None => break,
+            }
+        }
+
+        // ④ Execute: a prefill pass if any admissions, else decode.
+        let now_before = self.clock.now();
+        if !prefills.is_empty() {
+            let outcome = self.backend.prefill(&prefills)?;
+            self.clock.advance(outcome.latency);
+            let now = self.clock.now();
+            let total_ctx: usize = prefills.iter().map(|p| p.context_tokens).sum();
+            self.metrics.record_iteration(IterationSample {
+                time: now_before,
+                batch_size: prefills.len(),
+                total_ctx,
+                latency: outcome.latency,
+                is_prefill: true,
+            });
+            for ev in outcome.tokens {
+                // The prefill pass produces each request's next token.
+                self.kv.extend(ev.id, 1).ok();
+                self.deliver(ev.id, ev.finished, now);
+            }
+        } else {
+            let running: Vec<RequestId> = self
+                .active
+                .iter()
+                .copied()
+                .filter(|&id| self.requests[id].phase == Phase::Running)
+                .collect();
+            if running.is_empty() {
+                // Everything waiting couldn't be admitted (e.g. one giant
+                // request larger than memory) — drop the smallest-context
+                // blocked request to avoid livelock, or jump time.
+                match self.pending.last() {
+                    Some(next) => {
+                        let t = next.arrival;
+                        self.clock.advance_to(t)
+                    }
+                    None => anyhow::bail!(
+                        "livelock: {} active requests, none runnable",
+                        self.active.len()
+                    ),
+                }
+                self.metrics.ended_at = self.clock.now();
+                return Ok(true);
+            }
+            let total_ctx: usize =
+                running.iter().map(|&id| self.requests[id].context_len()).sum();
+            let outcome = self.backend.decode(&running, total_ctx)?;
+            self.clock.advance(outcome.latency);
+            let now = self.clock.now();
+            self.metrics.record_iteration(IterationSample {
+                time: now_before,
+                batch_size: running.len(),
+                total_ctx,
+                latency: outcome.latency,
+                is_prefill: false,
+            });
+            for ev in outcome.tokens {
+                self.kv.extend(ev.id, 1).ok();
+                self.deliver(ev.id, ev.finished, now);
+            }
+            for &id in &running {
+                self.requests[id].service_iterations += 1;
+            }
+        }
+
+        self.metrics.ended_at = self.clock.now();
+        Ok(true)
+    }
+
+    fn deliver(&mut self, id: RequestId, finished: bool, now: f64) {
+        self.requests[id].deliver_token(now);
+        let done = finished || self.requests[id].generated >= self.cfg.max_output_tokens;
+        if done {
+            self.finish(id, now);
+        }
+    }
+
+    /// Drive the engine until the trace is exhausted and all requests
+    /// finished. Returns the metrics.
+    pub fn run_to_completion(&mut self) -> anyhow::Result<&Metrics> {
+        while self.has_work() {
+            self.tick()?;
+        }
+        Ok(&self.metrics)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::sim::SimBackend;
+    use crate::backend::VirtualClock;
+    use crate::coordinator::sched::andes::AndesScheduler;
+    use crate::coordinator::sched::fcfs::FcfsScheduler;
+    use crate::coordinator::sched::round_robin::RoundRobinScheduler;
+    use crate::model::gpu::a100_4x;
+    use crate::model::llm::opt_66b;
+    use crate::qoe::spec::QoeSpec;
+
+    fn sim_engine(
+        scheduler: Box<dyn Scheduler>,
+        kv_tokens: usize,
+    ) -> Engine<SimBackend, VirtualClock> {
+        let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+        let cfg = EngineConfig {
+            kv_capacity_tokens: kv_tokens,
+            swap_capacity_tokens: kv_tokens * 2,
+            ..EngineConfig::default()
+        };
+        Engine::new(
+            cfg,
+            SimBackend::new(latency.clone()),
+            VirtualClock::default(),
+            scheduler,
+            latency,
+        )
+    }
+
+    fn spec(id: usize, arrival: f64, prompt: usize, output: usize) -> RequestSpec {
+        RequestSpec {
+            id,
+            arrival,
+            prompt_tokens: prompt,
+            output_tokens: output,
+            qoe: QoeSpec::new(1.0, 4.8),
+        }
+    }
+
+    fn trace(n: usize, gap: f64) -> Vec<RequestSpec> {
+        (0..n).map(|i| spec(i, i as f64 * gap, 100, 50)).collect()
+    }
+
+    #[test]
+    fn fcfs_completes_all_requests() {
+        let mut e = sim_engine(Box::new(FcfsScheduler::new()), 100_000);
+        e.load_trace(trace(20, 0.5));
+        let m = e.run_to_completion().unwrap();
+        assert_eq!(m.requests.len(), 20);
+        // Every request delivered exactly its ground-truth output.
+        for r in &m.requests {
+            assert_eq!(r.output_tokens, 50);
+            assert_eq!(r.token_times.len(), 50);
+        }
+        assert!(m.throughput() > 0.0);
+    }
+
+    #[test]
+    fn all_schedulers_complete_under_pressure() {
+        // Tight memory: 2500 tokens ≈ 16 concurrent requests of ~150 ctx.
+        for sched in [
+            Box::new(FcfsScheduler::new()) as Box<dyn Scheduler>,
+            Box::new(RoundRobinScheduler::new(50)),
+            Box::new(AndesScheduler::with_defaults()),
+        ] {
+            let name = sched.name();
+            let mut e = sim_engine(sched, 2500);
+            e.load_trace(trace(40, 0.2));
+            let m = e.run_to_completion().unwrap();
+            assert_eq!(m.requests.len(), 40, "{name} lost requests");
+            for r in &m.requests {
+                assert_eq!(r.token_times.len(), 50, "{name} token conservation");
+                assert!(
+                    r.token_times.windows(2).all(|w| w[1] >= w[0] - 1e-12),
+                    "{name} token times must be monotone"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn token_times_strictly_positive_latency() {
+        let mut e = sim_engine(Box::new(FcfsScheduler::new()), 100_000);
+        e.load_trace(trace(3, 0.1));
+        let m = e.run_to_completion().unwrap();
+        for r in &m.requests {
+            assert!(r.ttft > 0.0, "TTFT must include prefill cost");
+            assert!(r.finished_at > r.arrival);
+        }
+    }
+
+    #[test]
+    fn kv_is_fully_released_at_end() {
+        let mut e = sim_engine(Box::new(AndesScheduler::with_defaults()), 3000);
+        e.load_trace(trace(30, 0.15));
+        e.run_to_completion().unwrap();
+        assert_eq!(e.kv().num_allocations(), 0);
+        assert_eq!(e.kv().device_free_tokens(), e.kv().device_capacity_tokens());
+    }
+
+    #[test]
+    fn idle_engine_jumps_to_next_arrival() {
+        let mut e = sim_engine(Box::new(FcfsScheduler::new()), 100_000);
+        e.load_trace(vec![spec(0, 100.0, 50, 5)]);
+        assert!(e.tick().unwrap());
+        assert!(e.now() >= 100.0, "virtual clock must jump to arrival");
+        e.run_to_completion().unwrap();
+        assert_eq!(e.metrics().requests.len(), 1);
+    }
+
+    #[test]
+    fn deterministic_same_seed_same_result() {
+        let run = || {
+            let mut e = sim_engine(Box::new(AndesScheduler::with_defaults()), 2500);
+            e.load_trace(trace(30, 0.2));
+            e.run_to_completion().unwrap().avg_qoe()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn preemptions_are_counted_consistently() {
+        let mut e = sim_engine(Box::new(RoundRobinScheduler::new(5)), 2000);
+        e.load_trace(trace(30, 0.1));
+        let m = e.run_to_completion().unwrap();
+        let per_req: usize = m.requests.iter().map(|r| r.preemptions).sum();
+        assert_eq!(per_req as u64, m.total_preemptions);
+        assert_eq!(
+            m.total_preemptions,
+            m.swap_preemptions + m.recompute_preemptions
+        );
+        assert!(m.total_preemptions > 0, "RR with quantum 5 must preempt");
+    }
+
+    #[test]
+    fn live_submit_and_tick() {
+        let mut e = sim_engine(Box::new(FcfsScheduler::new()), 100_000);
+        e.submit(spec(0, 0.0, 64, 8)).unwrap();
+        while e.has_work() {
+            e.tick().unwrap();
+        }
+        assert_eq!(e.metrics().requests.len(), 1);
+        let r = &e.metrics().requests[0];
+        assert_eq!(r.output_tokens, 8);
+    }
+
+    #[test]
+    fn max_output_cap_enforced() {
+        let mut e = sim_engine(Box::new(FcfsScheduler::new()), 100_000);
+        let mut s = spec(0, 0.0, 10, 5000);
+        s.output_tokens = 5000;
+        e.load_trace(vec![s]);
+        let m = e.run_to_completion().unwrap();
+        assert_eq!(m.requests[0].output_tokens, EngineConfig::default().max_output_tokens);
+    }
+}

@@ -1,0 +1,327 @@
+//! Block-based KV-cache manager (the vLLM PagedAttention accounting
+//! substrate, paper §2.1/§4.1 Eq. 3 and the swap mechanism of §4.2).
+//!
+//! GPU memory holds `M` tokens of KV cache, quantized into fixed-size
+//! blocks. Preempted requests either move their blocks to a bounded host
+//! pool (swap) or drop them (recompute later). The manager only does
+//! *accounting* — actual tensor movement lives in the execution backend —
+//! but its invariants are load-bearing for the scheduler:
+//!
+//! 1. device blocks in use never exceed the device pool;
+//! 2. host blocks in use never exceed the host pool;
+//! 3. blocks never leak: freeing everything returns both pools to zero.
+
+use std::collections::HashMap;
+
+use super::request::RequestId;
+
+/// Where a request's KV cache currently lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvResidence {
+    Device,
+    Host,
+}
+
+#[derive(Debug, Clone)]
+struct Allocation {
+    blocks: usize,
+    tokens: usize,
+    residence: KvResidence,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum KvError {
+    #[error("device pool exhausted: need {need} blocks, {free} free")]
+    DeviceFull { need: usize, free: usize },
+    #[error("host swap pool exhausted: need {need} blocks, {free} free")]
+    HostFull { need: usize, free: usize },
+    #[error("request {0} has no allocation")]
+    NotAllocated(RequestId),
+    #[error("request {0} already allocated")]
+    AlreadyAllocated(RequestId),
+    #[error("request {0} KV not resident on {1:?}")]
+    WrongResidence(RequestId, KvResidence),
+}
+
+/// KV cache pool accounting.
+#[derive(Debug, Clone)]
+pub struct KvCacheManager {
+    block_size: usize,
+    device_blocks_total: usize,
+    host_blocks_total: usize,
+    device_blocks_used: usize,
+    host_blocks_used: usize,
+    allocs: HashMap<RequestId, Allocation>,
+}
+
+impl KvCacheManager {
+    /// Create a manager with capacities given in *tokens* (rounded down
+    /// to whole blocks).
+    pub fn new(device_capacity_tokens: usize, host_capacity_tokens: usize, block_size: usize) -> Self {
+        assert!(block_size > 0);
+        KvCacheManager {
+            block_size,
+            device_blocks_total: device_capacity_tokens / block_size,
+            host_blocks_total: host_capacity_tokens / block_size,
+            device_blocks_used: 0,
+            host_blocks_used: 0,
+            allocs: HashMap::new(),
+        }
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Device capacity in tokens (`M` in Eq. 3).
+    pub fn device_capacity_tokens(&self) -> usize {
+        self.device_blocks_total * self.block_size
+    }
+
+    pub fn device_free_blocks(&self) -> usize {
+        self.device_blocks_total - self.device_blocks_used
+    }
+
+    pub fn device_free_tokens(&self) -> usize {
+        self.device_free_blocks() * self.block_size
+    }
+
+    pub fn host_free_blocks(&self) -> usize {
+        self.host_blocks_total - self.host_blocks_used
+    }
+
+    /// Fraction of the device pool in use ∈ [0, 1].
+    pub fn device_utilization(&self) -> f64 {
+        if self.device_blocks_total == 0 {
+            return 1.0;
+        }
+        self.device_blocks_used as f64 / self.device_blocks_total as f64
+    }
+
+    /// Tokens currently resident on device for `id` (0 if none).
+    pub fn device_tokens_of(&self, id: RequestId) -> usize {
+        match self.allocs.get(&id) {
+            Some(a) if a.residence == KvResidence::Device => a.tokens,
+            _ => 0,
+        }
+    }
+
+    pub fn residence_of(&self, id: RequestId) -> Option<KvResidence> {
+        self.allocs.get(&id).map(|a| a.residence)
+    }
+
+    /// Whether a fresh allocation of `tokens` would fit on device.
+    pub fn can_allocate(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens) <= self.device_free_blocks()
+    }
+
+    /// Allocate device blocks for a request entering the running batch
+    /// (covers its whole current context: prompt + generated so far).
+    pub fn allocate(&mut self, id: RequestId, tokens: usize) -> Result<(), KvError> {
+        if self.allocs.contains_key(&id) {
+            return Err(KvError::AlreadyAllocated(id));
+        }
+        let need = self.blocks_for(tokens);
+        let free = self.device_free_blocks();
+        if need > free {
+            return Err(KvError::DeviceFull { need, free });
+        }
+        self.device_blocks_used += need;
+        self.allocs.insert(id, Allocation { blocks: need, tokens, residence: KvResidence::Device });
+        Ok(())
+    }
+
+    /// Grow a running request's context by `n` tokens (one per decode
+    /// iteration); may claim a new block at block boundaries.
+    pub fn extend(&mut self, id: RequestId, n: usize) -> Result<(), KvError> {
+        let a = self.allocs.get_mut(&id).ok_or(KvError::NotAllocated(id))?;
+        if a.residence != KvResidence::Device {
+            return Err(KvError::WrongResidence(id, KvResidence::Device));
+        }
+        let new_tokens = a.tokens + n;
+        let new_blocks = new_tokens.div_ceil(self.block_size);
+        let extra = new_blocks.saturating_sub(a.blocks);
+        if extra > self.device_blocks_total - self.device_blocks_used {
+            return Err(KvError::DeviceFull {
+                need: extra,
+                free: self.device_blocks_total - self.device_blocks_used,
+            });
+        }
+        self.device_blocks_used += extra;
+        a.blocks = new_blocks;
+        a.tokens = new_tokens;
+        Ok(())
+    }
+
+    /// Swap a request's KV cache device → host. Fails (leaving state
+    /// unchanged) if the host pool cannot hold it — callers then fall
+    /// back to recomputation, as the paper specifies.
+    pub fn swap_out(&mut self, id: RequestId) -> Result<usize, KvError> {
+        let a = self.allocs.get_mut(&id).ok_or(KvError::NotAllocated(id))?;
+        if a.residence != KvResidence::Device {
+            return Err(KvError::WrongResidence(id, KvResidence::Device));
+        }
+        let need = a.blocks;
+        let free = self.host_blocks_total - self.host_blocks_used;
+        if need > free {
+            return Err(KvError::HostFull { need, free });
+        }
+        a.residence = KvResidence::Host;
+        self.device_blocks_used -= need;
+        self.host_blocks_used += need;
+        Ok(a.tokens)
+    }
+
+    /// Swap a request's KV cache host → device.
+    pub fn swap_in(&mut self, id: RequestId) -> Result<usize, KvError> {
+        let a = self.allocs.get_mut(&id).ok_or(KvError::NotAllocated(id))?;
+        if a.residence != KvResidence::Host {
+            return Err(KvError::WrongResidence(id, KvResidence::Host));
+        }
+        let need = a.blocks;
+        let free = self.device_blocks_total - self.device_blocks_used;
+        if need > free {
+            return Err(KvError::DeviceFull { need, free });
+        }
+        a.residence = KvResidence::Device;
+        self.host_blocks_used -= need;
+        self.device_blocks_used += need;
+        Ok(a.tokens)
+    }
+
+    /// Release a request's KV wherever it lives (finish or recompute-
+    /// preemption drop). Returns the freed token count.
+    pub fn free(&mut self, id: RequestId) -> Result<usize, KvError> {
+        let a = self.allocs.remove(&id).ok_or(KvError::NotAllocated(id))?;
+        match a.residence {
+            KvResidence::Device => self.device_blocks_used -= a.blocks,
+            KvResidence::Host => self.host_blocks_used -= a.blocks,
+        }
+        Ok(a.tokens)
+    }
+
+    /// Total tokens resident on device across all requests.
+    pub fn device_tokens_used(&self) -> usize {
+        self.allocs
+            .values()
+            .filter(|a| a.residence == KvResidence::Device)
+            .map(|a| a.tokens)
+            .sum()
+    }
+
+    /// Number of live allocations (diagnostics).
+    pub fn num_allocations(&self) -> usize {
+        self.allocs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr() -> KvCacheManager {
+        // 10 device blocks of 16 tokens (160), 5 host blocks (80).
+        KvCacheManager::new(160, 80, 16)
+    }
+
+    #[test]
+    fn allocate_and_free_roundtrip() {
+        let mut m = mgr();
+        m.allocate(1, 40).unwrap(); // 3 blocks
+        assert_eq!(m.device_free_blocks(), 7);
+        assert_eq!(m.device_tokens_of(1), 40);
+        assert_eq!(m.free(1).unwrap(), 40);
+        assert_eq!(m.device_free_blocks(), 10);
+        assert_eq!(m.num_allocations(), 0);
+    }
+
+    #[test]
+    fn rejects_oversized_and_double_alloc() {
+        let mut m = mgr();
+        assert!(matches!(m.allocate(1, 161), Err(KvError::DeviceFull { .. })));
+        m.allocate(1, 16).unwrap();
+        assert_eq!(m.allocate(1, 16), Err(KvError::AlreadyAllocated(1)));
+    }
+
+    #[test]
+    fn extend_claims_blocks_lazily() {
+        let mut m = mgr();
+        m.allocate(1, 16).unwrap(); // exactly 1 block
+        assert_eq!(m.device_free_blocks(), 9);
+        m.extend(1, 1).unwrap(); // 17 tokens → 2 blocks
+        assert_eq!(m.device_free_blocks(), 8);
+        for _ in 0..15 {
+            m.extend(1, 1).unwrap(); // up to 32 tokens, still 2 blocks
+        }
+        assert_eq!(m.device_free_blocks(), 8);
+        m.extend(1, 1).unwrap(); // 33 → 3 blocks
+        assert_eq!(m.device_free_blocks(), 7);
+    }
+
+    #[test]
+    fn extend_fails_when_full_but_state_intact() {
+        let mut m = KvCacheManager::new(32, 0, 16);
+        m.allocate(1, 32).unwrap();
+        assert!(matches!(m.extend(1, 1), Err(KvError::DeviceFull { .. })));
+        assert_eq!(m.device_tokens_of(1), 32);
+    }
+
+    #[test]
+    fn swap_out_in_roundtrip() {
+        let mut m = mgr();
+        m.allocate(1, 48).unwrap(); // 3 blocks
+        let moved = m.swap_out(1).unwrap();
+        assert_eq!(moved, 48);
+        assert_eq!(m.device_free_blocks(), 10);
+        assert_eq!(m.host_free_blocks(), 2);
+        assert_eq!(m.residence_of(1), Some(KvResidence::Host));
+        assert_eq!(m.device_tokens_of(1), 0);
+        let back = m.swap_in(1).unwrap();
+        assert_eq!(back, 48);
+        assert_eq!(m.residence_of(1), Some(KvResidence::Device));
+        assert_eq!(m.host_free_blocks(), 5);
+    }
+
+    #[test]
+    fn swap_out_fails_when_host_full() {
+        let mut m = KvCacheManager::new(160, 32, 16);
+        m.allocate(1, 48).unwrap();
+        m.allocate(2, 32).unwrap();
+        m.swap_out(2).unwrap(); // host now full
+        let err = m.swap_out(1);
+        assert!(matches!(err, Err(KvError::HostFull { .. })));
+        // State unchanged: request 1 still on device.
+        assert_eq!(m.residence_of(1), Some(KvResidence::Device));
+        assert_eq!(m.device_tokens_of(1), 48);
+    }
+
+    #[test]
+    fn cannot_extend_swapped_request() {
+        let mut m = mgr();
+        m.allocate(1, 16).unwrap();
+        m.swap_out(1).unwrap();
+        assert!(matches!(m.extend(1, 1), Err(KvError::WrongResidence(..))));
+        // free() works from host residence.
+        assert_eq!(m.free(1).unwrap(), 16);
+        assert_eq!(m.host_free_blocks(), 5);
+    }
+
+    #[test]
+    fn utilization_tracks() {
+        let mut m = mgr();
+        assert_eq!(m.device_utilization(), 0.0);
+        m.allocate(1, 80).unwrap();
+        assert!((m.device_utilization() - 0.5).abs() < 1e-12);
+        assert_eq!(m.device_tokens_used(), 80);
+    }
+
+    #[test]
+    fn capacity_rounds_down_to_blocks() {
+        let m = KvCacheManager::new(100, 50, 16);
+        assert_eq!(m.device_capacity_tokens(), 96);
+    }
+}

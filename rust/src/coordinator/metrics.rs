@@ -1,0 +1,228 @@
+//! Metrics collection: per-request records, per-iteration samples, and
+//! the aggregates every experiment reports (avg QoE, TTFT/TDS
+//! percentiles, throughput, normalized latency, preemption frequency).
+
+use crate::util::stats::{mean, pearson, percentile};
+
+use super::request::Request;
+
+/// Final record of one served request.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub id: usize,
+    pub arrival: f64,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+    pub ttft: f64,
+    pub final_qoe: f64,
+    /// Average TDS excluding TTFT; NaN when fewer than 2 tokens.
+    pub avg_tds: f64,
+    pub normalized_latency: f64,
+    pub preemptions: usize,
+    pub finished_at: f64,
+    /// Absolute delivery timestamps (the TDT, for Fig. 22).
+    pub token_times: Vec<f64>,
+}
+
+impl RequestRecord {
+    pub fn from_request(r: &Request) -> Self {
+        RequestRecord {
+            id: r.id,
+            arrival: r.arrival,
+            prompt_tokens: r.prompt_tokens,
+            output_tokens: r.generated,
+            ttft: r.ttft().unwrap_or(f64::NAN),
+            final_qoe: r.final_qoe(),
+            avg_tds: r.avg_tds().unwrap_or(f64::NAN),
+            normalized_latency: r.normalized_latency().unwrap_or(f64::NAN),
+            preemptions: r.preemptions,
+            finished_at: r.finished_at.unwrap_or(f64::NAN),
+            token_times: r.token_times.clone(),
+        }
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.prompt_tokens + self.output_tokens
+    }
+}
+
+/// One engine iteration's sample (Fig. 19's substrate).
+#[derive(Debug, Clone, Copy)]
+pub struct IterationSample {
+    pub time: f64,
+    pub batch_size: usize,
+    pub total_ctx: usize,
+    pub latency: f64,
+    pub is_prefill: bool,
+}
+
+/// Collector owned by the engine.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: Vec<RequestRecord>,
+    pub iterations: Vec<IterationSample>,
+    pub total_tokens: u64,
+    pub total_preemptions: u64,
+    pub swap_preemptions: u64,
+    pub recompute_preemptions: u64,
+    /// Preemptions initiated by the engine's OOM safety net (a running
+    /// request could not grow), as opposed to scheduler decisions.
+    pub oom_preemptions: u64,
+    pub scheduler_time: f64,
+    pub started_at: f64,
+    pub ended_at: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn record_finish(&mut self, r: &Request) {
+        self.requests.push(RequestRecord::from_request(r));
+    }
+
+    pub fn record_iteration(&mut self, s: IterationSample) {
+        self.total_tokens += s.batch_size as u64;
+        self.iterations.push(s);
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        (self.ended_at - self.started_at).max(1e-9)
+    }
+
+    /// Server-side token generation throughput, tokens/s.
+    pub fn throughput(&self) -> f64 {
+        self.total_tokens as f64 / self.elapsed()
+    }
+
+    /// Average final QoE over finished requests.
+    pub fn avg_qoe(&self) -> f64 {
+        mean(&self.qoes())
+    }
+
+    pub fn qoes(&self) -> Vec<f64> {
+        self.requests.iter().map(|r| r.final_qoe).collect()
+    }
+
+    pub fn ttfts(&self) -> Vec<f64> {
+        self.requests.iter().map(|r| r.ttft).filter(|x| x.is_finite()).collect()
+    }
+
+    pub fn tds_values(&self) -> Vec<f64> {
+        self.requests.iter().map(|r| r.avg_tds).filter(|x| x.is_finite()).collect()
+    }
+
+    pub fn normalized_latencies(&self) -> Vec<f64> {
+        self.requests
+            .iter()
+            .map(|r| r.normalized_latency)
+            .filter(|x| x.is_finite())
+            .collect()
+    }
+
+    /// Average preemptions per finished request (Fig. 13).
+    pub fn preemption_frequency(&self) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        self.total_preemptions as f64 / self.requests.len() as f64
+    }
+
+    /// Pearson correlation between batch size and total context length
+    /// over decode iterations (Fig. 19 / Appendix B).
+    pub fn batch_ctx_correlation(&self) -> f64 {
+        let decode: Vec<&IterationSample> =
+            self.iterations.iter().filter(|s| !s.is_prefill).collect();
+        let xs: Vec<f64> = decode.iter().map(|s| s.batch_size as f64).collect();
+        let ys: Vec<f64> = decode.iter().map(|s| s.total_ctx as f64).collect();
+        pearson(&xs, &ys)
+    }
+
+    /// Summary table rendered by experiments/CLI.
+    pub fn summary(&self) -> String {
+        let q = self.qoes();
+        let t = self.ttfts();
+        let d = self.tds_values();
+        format!(
+            "requests={} avg_qoe={:.3} p10_qoe={:.3} p50_qoe={:.3} \
+             p50_ttft={:.2}s p90_ttft={:.2}s p50_tds={:.2} \
+             throughput={:.1} tok/s preempt/req={:.3}",
+            self.requests.len(),
+            self.avg_qoe(),
+            percentile(&q, 10.0),
+            percentile(&q, 50.0),
+            percentile(&t, 50.0),
+            percentile(&t, 90.0),
+            percentile(&d, 50.0),
+            self.throughput(),
+            self.preemption_frequency(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Phase;
+    use crate::qoe::spec::QoeSpec;
+
+    fn finished_request(id: usize) -> Request {
+        let mut r = Request::new(id, 0.0, 50, QoeSpec::new(1.0, 2.0));
+        for i in 0..4 {
+            r.deliver_token(1.0 + i as f64 * 0.5);
+        }
+        r.phase = Phase::Finished;
+        r.finished_at = Some(2.5);
+        r
+    }
+
+    #[test]
+    fn record_captures_request() {
+        let mut m = Metrics::new();
+        m.record_finish(&finished_request(0));
+        let rec = &m.requests[0];
+        assert_eq!(rec.output_tokens, 4);
+        assert!((rec.ttft - 1.0).abs() < 1e-9);
+        assert!(rec.final_qoe > 0.99);
+        assert!((rec.avg_tds - 2.0).abs() < 1e-9);
+        assert_eq!(rec.total_len(), 54);
+    }
+
+    #[test]
+    fn throughput_and_preemption_freq() {
+        let mut m = Metrics::new();
+        m.started_at = 0.0;
+        m.ended_at = 10.0;
+        for i in 0..5 {
+            m.record_finish(&finished_request(i));
+        }
+        m.total_tokens = 200;
+        m.total_preemptions = 2;
+        assert!((m.throughput() - 20.0).abs() < 1e-9);
+        assert!((m.preemption_frequency() - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn correlation_over_decode_iterations() {
+        let mut m = Metrics::new();
+        for b in 1..50usize {
+            m.record_iteration(IterationSample {
+                time: b as f64,
+                batch_size: b,
+                total_ctx: b * 400 + (b % 3) * 10,
+                latency: 0.1,
+                is_prefill: false,
+            });
+        }
+        assert!(m.batch_ctx_correlation() > 0.99);
+    }
+
+    #[test]
+    fn empty_metrics_are_safe() {
+        let m = Metrics::new();
+        assert_eq!(m.preemption_frequency(), 0.0);
+        assert!(m.avg_qoe().is_nan());
+        let _ = m.summary();
+    }
+}

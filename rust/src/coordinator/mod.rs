@@ -1,0 +1,12 @@
+//! The Andes coordinator: request lifecycle, KV-cache accounting, the
+//! scheduling policies (FCFS / Round-Robin / Andes), and the continuous
+//! batching engine that ties them to an execution backend.
+
+pub mod engine;
+pub mod kv;
+pub mod metrics;
+pub mod request;
+pub mod sched;
+
+pub use kv::{KvCacheManager, KvResidence};
+pub use request::{Phase, Request, RequestId};

@@ -1,0 +1,200 @@
+//! Request lifecycle and per-request state (paper Fig. 6).
+//!
+//! A request moves through:
+//!
+//! ```text
+//! Waiting ──admit──▶ Running ──last token──▶ Finished
+//!    ▲                  │
+//!    │   preempt(swap)  ├──▶ SwappedOut ──swap-in──▶ Running
+//!    └── preempt(drop) ─┘        (KV on host)
+//! ```
+//!
+//! `Waiting` covers both brand-new requests and recompute-preempted ones
+//! (their KV was dropped; re-admission replays prefill over prompt +
+//! generated tokens). Times are absolute engine times in seconds; the
+//! QoE digest state internally uses request-relative time.
+
+use crate::qoe::metric::{qoe_at, qoe_finished, DigestState};
+use crate::qoe::spec::QoeSpec;
+
+pub type RequestId = usize;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// In the waiting queue (no KV on device). `generated > 0` means the
+    /// request was preempted via recomputation.
+    Waiting,
+    /// In the running batch; generates one token per iteration.
+    Running,
+    /// Preempted with KV cache moved to host memory.
+    SwappedOut,
+    /// All tokens generated and delivered.
+    Finished,
+}
+
+/// Serving-time state of one request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    /// Absolute arrival time (s).
+    pub arrival: f64,
+    pub prompt_tokens: usize,
+    pub qoe_spec: QoeSpec,
+    pub phase: Phase,
+    /// Tokens generated so far.
+    pub generated: usize,
+    /// Incremental QoE digestion state (request-relative time).
+    pub digest: DigestState,
+    /// Absolute delivery timestamps of every generated token (the TDT).
+    pub token_times: Vec<f64>,
+    pub first_token_at: Option<f64>,
+    pub finished_at: Option<f64>,
+    /// Number of times this request has been preempted.
+    pub preemptions: usize,
+    /// Iterations spent in the running batch (for RR quanta).
+    pub service_iterations: u64,
+}
+
+impl Request {
+    pub fn new(
+        id: RequestId,
+        arrival: f64,
+        prompt_tokens: usize,
+        qoe_spec: QoeSpec,
+    ) -> Self {
+        Request {
+            id,
+            arrival,
+            prompt_tokens,
+            qoe_spec,
+            phase: Phase::Waiting,
+            generated: 0,
+            digest: DigestState::new(&qoe_spec),
+            token_times: Vec::new(),
+            first_token_at: None,
+            finished_at: None,
+            preemptions: 0,
+            service_iterations: 0,
+        }
+    }
+
+    /// Context length `l_i` (Eq. 3): prompt plus generated tokens — the
+    /// number of KV-cache entries the request occupies when running.
+    pub fn context_len(&self) -> usize {
+        self.prompt_tokens + self.generated
+    }
+
+    /// Record delivery of one generated token at absolute time `t`.
+    pub fn deliver_token(&mut self, t: f64) {
+        debug_assert!(t >= self.arrival);
+        self.generated += 1;
+        self.digest.deliver(t - self.arrival);
+        self.token_times.push(t);
+        if self.first_token_at.is_none() {
+            self.first_token_at = Some(t);
+        }
+    }
+
+    /// Actual TTFT if the first token has been delivered.
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_at.map(|t| t - self.arrival)
+    }
+
+    /// Average observed TDS excluding TTFT (Table 4's definition):
+    /// (tokens − 1) / (t_last − t_first).
+    pub fn avg_tds(&self) -> Option<f64> {
+        if self.token_times.len() < 2 {
+            return None;
+        }
+        let span = self.token_times.last().unwrap() - self.token_times[0];
+        if span <= 0.0 {
+            return None;
+        }
+        Some((self.token_times.len() - 1) as f64 / span)
+    }
+
+    /// Current QoE evaluated at absolute time `t` (mid-flight).
+    pub fn qoe_at(&self, t: f64) -> f64 {
+        let cap = if self.phase == Phase::Finished { Some(self.generated as f64) } else { None };
+        qoe_at(&self.qoe_spec, &self.digest, t - self.arrival, cap)
+    }
+
+    /// Final QoE (Eq. 1). Panics if not finished.
+    pub fn final_qoe(&self) -> f64 {
+        assert_eq!(self.phase, Phase::Finished, "request {} not finished", self.id);
+        qoe_finished(&self.qoe_spec, &self.digest, self.generated)
+    }
+
+    /// Normalized latency (vLLM/Orca metric, Appendix E): end-to-end
+    /// latency divided by output length.
+    pub fn normalized_latency(&self) -> Option<f64> {
+        let end = self.finished_at?;
+        if self.generated == 0 {
+            return None;
+        }
+        Some((end - self.arrival) / self.generated as f64)
+    }
+
+    pub fn is_active(&self) -> bool {
+        !matches!(self.phase, Phase::Finished)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> Request {
+        Request::new(0, 10.0, 50, QoeSpec::new(1.0, 2.0))
+    }
+
+    #[test]
+    fn lifecycle_and_ttft() {
+        let mut r = req();
+        assert_eq!(r.phase, Phase::Waiting);
+        assert_eq!(r.ttft(), None);
+        r.deliver_token(11.5);
+        assert_eq!(r.ttft(), Some(1.5));
+        assert_eq!(r.generated, 1);
+        assert_eq!(r.context_len(), 51);
+        r.deliver_token(12.0);
+        assert_eq!(r.context_len(), 52);
+        assert_eq!(r.first_token_at, Some(11.5));
+    }
+
+    #[test]
+    fn avg_tds_excludes_ttft() {
+        let mut r = req();
+        r.deliver_token(15.0); // slow TTFT
+        r.deliver_token(15.5);
+        r.deliver_token(16.0);
+        // 2 tokens over 1 second after the first.
+        assert!((r.avg_tds().unwrap() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn final_qoe_perfect_for_on_time() {
+        let mut r = req();
+        for i in 0..8 {
+            r.deliver_token(10.0 + 1.0 + i as f64 / 2.0);
+        }
+        r.phase = Phase::Finished;
+        r.finished_at = Some(*r.token_times.last().unwrap());
+        assert!(r.final_qoe() > 0.99);
+        assert!((r.normalized_latency().unwrap() - 4.5 / 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn qoe_mid_flight_degrades_while_waiting() {
+        let r = req();
+        assert_eq!(r.qoe_at(10.5), 1.0); // before expected TTFT
+        assert_eq!(r.qoe_at(13.0), 0.0); // nothing delivered, past TTFT
+    }
+
+    #[test]
+    #[should_panic]
+    fn final_qoe_requires_finished() {
+        let r = req();
+        r.final_qoe();
+    }
+}

@@ -1,0 +1,650 @@
+//! The Andes QoE-aware scheduler (paper §4).
+//!
+//! Each iteration, solve (approximately) the exact-K-item knapsack of
+//! Eq. 4: choose the batch (set of requests) maximizing total QoE gain
+//! `Σ (Q_serve,i(B) − Q_wait,i)` subject to the KV-memory capacity and a
+//! target batch size `B`, scanning `B` over a pruned range.
+//!
+//! Optimizations from the paper, all implemented here:
+//! 1. **Selective triggering** — skip the solver entirely while memory
+//!    and compute are unconstrained, and just serve everyone.
+//! 2. **Batch-size search-space pruning** — scan `B ∈ [B_min, B_max]`
+//!    where `B_max` packs shortest-context requests into `M` and `B_min`
+//!    is the largest batch still faster than the most stringent TDS.
+//! 3. **Greedy packing** (Algorithm 1) — sort by priority
+//!    `(Q_serve(B) − Q_wait)/l_i` and fill; `O(N log N)`.
+//! 4. **Preemption cap** — bound lifetime-average preemptions per
+//!    request by `P` (default 1.0).
+
+use super::dp::solve_exact_knapsack;
+use super::objective::{Objective, QoeOutlook};
+use super::{SchedView, Scheduler};
+use crate::coordinator::request::{Phase, RequestId};
+use crate::qoe::metric::{project, projected_area, qoe_at, DigestState};
+
+/// Knapsack solver choice (Fig. 18 compares these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KnapsackSolver {
+    /// Algorithm 1: greedy by priority, O(N log N).
+    Greedy,
+    /// Algorithm 2: exact 3D dynamic programming (pseudo-polynomial,
+    /// evaluated at coarsened capacity granularity to stay tractable).
+    Dp,
+}
+
+/// Configuration of the Andes scheduler.
+#[derive(Debug, Clone)]
+pub struct AndesConfig {
+    pub objective: Objective,
+    /// Preemption cap P: max average preemptions per request (Opt. #4).
+    pub preemption_cap: f64,
+    /// Override for the prediction horizon Δt; `None` = engine estimate.
+    pub delta_t_override: Option<f64>,
+    /// Number of candidate batch sizes evaluated in [B_min, B_max].
+    pub b_grid: usize,
+    pub solver: KnapsackSolver,
+    /// High-memory watermark that *triggers* the solver (Opt. #1).
+    /// Packing itself uses the full capacity M minus a 1% growth
+    /// reserve, like the FCFS baseline — Eq. 3's M is full memory.
+    pub watermark: f64,
+    /// Preemption hysteresis: a newcomer only displaces a running
+    /// request if its QoE gain exceeds the runner's by this margin.
+    /// Pausing a runner forfeits exactly its own gain, and the swap
+    /// itself costs real iteration time, so marginal displacements are
+    /// net-negative (§4.2: balance QoE gains vs slowdowns). The margin
+    /// naturally selects "coasting" runners (deep client buffer ⇒ gain
+    /// near 0) as preemption victims — the paper's §2.3 mechanism.
+    pub preempt_margin: f64,
+}
+
+impl Default for AndesConfig {
+    fn default() -> Self {
+        AndesConfig {
+            objective: Objective::AvgQoe,
+            preemption_cap: 1.0,
+            delta_t_override: None,
+            b_grid: 8,
+            solver: KnapsackSolver::Greedy,
+            watermark: 0.9,
+            preempt_margin: 0.2,
+        }
+    }
+}
+
+/// The Andes scheduler.
+#[derive(Debug)]
+pub struct AndesScheduler {
+    pub cfg: AndesConfig,
+    /// Scratch buffers reused across iterations (hot-path allocation
+    /// avoidance; see EXPERIMENTS.md §Perf).
+    scratch: Scratch,
+}
+
+#[derive(Debug, Default)]
+struct Scratch {
+    candidates: Vec<Candidate>,
+    order: Vec<usize>,
+    /// Precomputed priorities (gain / l_i), refreshed per candidate B —
+    /// sorting with cached keys instead of recomputing two divisions per
+    /// comparison (see EXPERIMENTS.md §Perf).
+    priorities: Vec<f64>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Candidate {
+    id: RequestId,
+    /// Context length l_i (knapsack weight, in tokens).
+    ctx: usize,
+    /// Admission cost in blocks.
+    blocks: usize,
+    q_wait: f64,
+    q_current: f64,
+    /// Serving start delay (prefill / swap-in) in seconds.
+    start_delay: f64,
+    running: bool,
+    /// Filled per candidate B.
+    gain: f64,
+    /// Hot-loop caches (B-independent; see EXPERIMENTS.md §Perf):
+    /// digestion state snapshot, request-relative horizon, and the
+    /// expected-area denominator of Eq. 1 at that horizon.
+    digest: DigestState,
+    rel_horizon: f64,
+    expected_area_h: f64,
+}
+
+impl AndesScheduler {
+    pub fn new(cfg: AndesConfig) -> Self {
+        AndesScheduler { cfg, scratch: Scratch::default() }
+    }
+
+    pub fn with_defaults() -> Self {
+        Self::new(AndesConfig::default())
+    }
+
+    /// Predicted QoE of a request after Δt if served at token rate
+    /// `rate`, starting after `start_delay`. Uses the candidate's cached
+    /// digest snapshot and expected-area denominator (hot loop: runs
+    /// N × |B-grid| times per scheduling iteration).
+    #[inline]
+    fn q_serve(c: &Candidate, rate: f64) -> f64 {
+        if c.expected_area_h <= 0.0 {
+            return 1.0;
+        }
+        let actual = projected_area(&c.digest, rate, c.start_delay, c.rel_horizon);
+        (actual / c.expected_area_h).clamp(0.0, 1.0)
+    }
+
+    /// Build per-request candidate records (everything B-independent).
+    fn build_candidates(&mut self, view: &SchedView<'_>, horizon: f64) {
+        self.scratch.candidates.clear();
+        for &id in view.active {
+            let req = view.req(id);
+            let ctx = req.context_len();
+            let rel_now = view.now - req.arrival;
+            let rel_horizon = rel_now + horizon;
+            let waited = project(&req.digest, 0.0, 0.0, rel_horizon);
+            let q_wait = qoe_at(&req.qoe_spec, &waited, rel_horizon, None);
+            let q_current = req.qoe_at(view.now);
+            let start_delay = match req.phase {
+                Phase::Running => 0.0,
+                Phase::SwappedOut => view.latency.swap(ctx),
+                Phase::Waiting => view.latency.recompute(ctx),
+                Phase::Finished => continue,
+            };
+            self.scratch.candidates.push(Candidate {
+                id,
+                ctx,
+                blocks: view.block_cost(id),
+                q_wait,
+                q_current,
+                start_delay,
+                running: req.phase == Phase::Running,
+                gain: 0.0,
+                digest: req.digest,
+                rel_horizon,
+                expected_area_h: req.qoe_spec.expected_area(rel_horizon, None),
+            });
+        }
+    }
+
+    /// Pruned candidate batch sizes [B_min, B_max] (Optimization #2).
+    fn batch_size_range(&self, view: &SchedView<'_>) -> (usize, usize) {
+        let n = self.scratch.candidates.len();
+        // B_max: pack shortest contexts into the block budget.
+        let budget = self.block_budget(view);
+        let mut blocks: Vec<usize> = self.scratch.candidates.iter().map(|c| c.blocks).collect();
+        blocks.sort_unstable();
+        let mut used = 0usize;
+        let mut b_max = 0usize;
+        for b in blocks {
+            if used + b > budget {
+                break;
+            }
+            used += b;
+            b_max += 1;
+        }
+        let b_max = b_max.max(1).min(n);
+        // B_min: largest batch still faster than the most stringent TDS.
+        let stringent = self
+            .scratch
+            .candidates
+            .iter()
+            .map(|c| view.req(c.id).qoe_spec.tds)
+            .fold(0.0f64, f64::max)
+            .max(1e-6);
+        let b_min = view
+            .latency
+            .max_batch_for_tds(stringent, view.avg_context_len())
+            .clamp(1, b_max);
+        (b_min, b_max)
+    }
+
+    /// Device block budget for packing: full capacity minus a 1% growth
+    /// reserve (same headroom as the FCFS baseline).
+    fn block_budget(&self, view: &SchedView<'_>) -> usize {
+        (view.total_blocks() as f64 * 0.99).floor() as usize
+    }
+
+    /// Selective triggering (Optimization #1): true if the solver can be
+    /// skipped and everyone served.
+    fn unconstrained(&self, view: &SchedView<'_>) -> bool {
+        let total_blocks: usize = self.scratch.candidates.iter().map(|c| c.blocks).sum();
+        let trigger_blocks =
+            (view.total_blocks() as f64 * self.cfg.watermark).floor() as usize;
+        if total_blocks > trigger_blocks {
+            return false;
+        }
+        let n = self.scratch.candidates.len();
+        let total_ctx: usize = self.scratch.candidates.iter().map(|c| c.ctx).sum();
+        let iter_latency = view.latency.decode(n, total_ctx);
+        let stringent = self
+            .scratch
+            .candidates
+            .iter()
+            .map(|c| view.req(c.id).qoe_spec.tds)
+            .fold(0.0f64, f64::max);
+        stringent <= 0.0 || iter_latency <= 1.0 / stringent
+    }
+
+    /// Greedy packing (Algorithm 1) for a target batch size B. Returns
+    /// (chosen candidate indices, objective value).
+    fn pack_greedy(&mut self, b: usize, budget: usize) -> (Vec<usize>, f64) {
+        let cands = &self.scratch.candidates;
+        // Priority: gain / l_i (Eq. 5), precomputed once per B.
+        let prios = &mut self.scratch.priorities;
+        prios.clear();
+        prios.extend(cands.iter().map(|c| c.gain / c.ctx.max(1) as f64));
+        let order = &mut self.scratch.order;
+        order.clear();
+        order.extend(0..cands.len());
+        order.sort_unstable_by(|&i, &j| {
+            prios[j].partial_cmp(&prios[i]).unwrap().then(cands[i].id.cmp(&cands[j].id))
+        });
+        let mut chosen = Vec::with_capacity(b);
+        let mut used_blocks = 0usize;
+        let mut value = 0.0;
+        for &i in order.iter() {
+            if chosen.len() >= b {
+                break;
+            }
+            let c = &cands[i];
+            if used_blocks + c.blocks <= budget {
+                used_blocks += c.blocks;
+                value += c.gain;
+                chosen.push(i);
+            }
+        }
+        (chosen, value)
+    }
+
+    /// Exact DP packing (Algorithm 2) for a target batch size B.
+    fn pack_dp(&self, b: usize, budget: usize) -> (Vec<usize>, f64) {
+        let weights: Vec<usize> = self.scratch.candidates.iter().map(|c| c.blocks).collect();
+        let values: Vec<f64> = self.scratch.candidates.iter().map(|c| c.gain).collect();
+        solve_exact_knapsack(&weights, &values, b, budget)
+    }
+
+    /// Preemption hysteresis: undo displacements whose *gain
+    /// differential* is marginal. A running request stays unless the
+    /// newcomers taking its place each promise more QoE gain than it
+    /// forfeits by pausing, by a margin covering the *system-wide* cost
+    /// of the displacement: the two swap transfers stall the entire
+    /// batch, costing every running request ≈ stall/Δt of its QoE-gain
+    /// scale — so the margin grows with batch size.
+    fn apply_hysteresis(
+        &self,
+        view: &SchedView<'_>,
+        desired: Vec<usize>,
+        horizon: f64,
+    ) -> Vec<usize> {
+        let cands = &self.scratch.candidates;
+        let b_running = cands.iter().filter(|c| c.running).count();
+        let stall = 2.0 * view.latency.swap(view.avg_context_len());
+        let margin =
+            self.cfg.preempt_margin.max(2.5 * b_running as f64 * stall / horizon.max(1e-9));
+        let chosen: std::collections::HashSet<usize> = desired.iter().copied().collect();
+        // Running requests the solution would preempt, highest-gain first
+        // (they have the strongest case to stay).
+        let mut preempted: Vec<usize> = (0..cands.len())
+            .filter(|&i| cands[i].running && !chosen.contains(&i))
+            .collect();
+        if preempted.is_empty() {
+            return desired;
+        }
+        preempted
+            .sort_by(|&i, &j| cands[j].gain.partial_cmp(&cands[i].gain).unwrap());
+        // Newcomers the solution admits, lowest-gain first.
+        let mut newcomers: Vec<usize> =
+            desired.iter().copied().filter(|&i| !cands[i].running).collect();
+        newcomers.sort_by(|&i, &j| cands[i].gain.partial_cmp(&cands[j].gain).unwrap());
+
+        let mut result = desired;
+        for &r in &preempted {
+            // Displacing runner r is justified only if even the weakest
+            // admitted newcomer clears the gain margin. Otherwise evict
+            // weak newcomers until the runner fits back in.
+            loop {
+                let weakest = newcomers.first().copied();
+                match weakest {
+                    Some(w) if cands[w].gain < cands[r].gain + margin => {
+                        // Marginal displacement: evict the weak newcomer.
+                        newcomers.remove(0);
+                        result.retain(|&x| x != w);
+                        // Does the runner fit now?
+                        let used: usize = result.iter().map(|&x| cands[x].blocks).sum();
+                        if used + cands[r].blocks <= self.block_budget(view) {
+                            result.push(r);
+                            break;
+                        }
+                    }
+                    _ => break, // displacement justified (or no newcomers)
+                }
+            }
+        }
+        result
+    }
+
+    /// Enforce the preemption cap (Optimization #4) on a desired set.
+    fn apply_preemption_cap(
+        &mut self,
+        view: &SchedView<'_>,
+        desired: Vec<usize>,
+    ) -> Vec<usize> {
+        let cands = &self.scratch.candidates;
+        let chosen: std::collections::HashSet<usize> = desired.iter().copied().collect();
+        let preempted: Vec<usize> = (0..cands.len())
+            .filter(|&i| cands[i].running && !chosen.contains(&i))
+            .collect();
+        let allowed = (self.cfg.preemption_cap * view.total_requests_seen as f64
+            - view.total_preemptions as f64)
+            .floor()
+            .max(0.0) as usize;
+        if std::env::var("ANDES_TRACE_CAP").is_ok() && !preempted.is_empty() {
+            eprintln!(
+                "cap: seen={} preempts={} allowed={} this_round={}",
+                view.total_requests_seen,
+                view.total_preemptions,
+                allowed,
+                preempted.len()
+            );
+        }
+        if preempted.len() <= allowed {
+            return desired;
+        }
+        // Over budget: only the `allowed` lowest-priority runners may be
+        // displaced. Every other currently-running request is kept
+        // (keeping a resident request costs nothing), and the remaining
+        // memory is filled with the desired non-running requests by
+        // priority.
+        let prio = |i: usize| cands[i].gain / cands[i].ctx.max(1) as f64;
+        let mut victims = preempted;
+        victims.sort_by(|&i, &j| prio(i).partial_cmp(&prio(j)).unwrap());
+        victims.truncate(allowed);
+        let victim_set: std::collections::HashSet<usize> = victims.iter().copied().collect();
+        // Keep all runners except the allowed victims.
+        let mut result: Vec<usize> = (0..cands.len())
+            .filter(|&i| cands[i].running && !victim_set.contains(&i))
+            .collect();
+        let budget = self.block_budget(view);
+        let mut used: usize = result.iter().map(|&i| cands[i].blocks).sum();
+        // Fill with desired non-running requests, best priority first.
+        let mut rest: Vec<usize> =
+            desired.into_iter().filter(|&i| !cands[i].running).collect();
+        rest.sort_by(|&i, &j| prio(j).partial_cmp(&prio(i)).unwrap());
+        for i in rest {
+            if used + cands[i].blocks <= budget {
+                used += cands[i].blocks;
+                result.push(i);
+            }
+        }
+        result
+    }
+}
+
+impl Scheduler for AndesScheduler {
+    fn name(&self) -> &'static str {
+        "andes"
+    }
+
+    fn schedule(&mut self, view: &SchedView<'_>) -> Vec<RequestId> {
+        if view.active.is_empty() {
+            return Vec::new();
+        }
+        let horizon = self.cfg.delta_t_override.unwrap_or(view.horizon);
+        self.build_candidates(view, horizon);
+
+        // Optimization #1: serve everyone while unconstrained.
+        if self.unconstrained(view) {
+            return self.scratch.candidates.iter().map(|c| c.id).collect();
+        }
+
+        // Optimization #2: pruned batch-size range, subsampled to a grid.
+        let (b_min, b_max) = self.batch_size_range(view);
+        let grid: Vec<usize> = if b_max - b_min + 1 <= self.cfg.b_grid {
+            (b_min..=b_max).collect()
+        } else {
+            (0..self.cfg.b_grid)
+                .map(|k| {
+                    b_min
+                        + ((b_max - b_min) as f64 * k as f64 / (self.cfg.b_grid - 1) as f64)
+                            .round() as usize
+                })
+                .collect()
+        };
+
+        let avg_ctx = view.avg_context_len();
+        let budget = self.block_budget(view);
+        // Global current QoE floor (MaxMin objective input).
+        let q_min = self
+            .scratch
+            .candidates
+            .iter()
+            .map(|c| c.q_current)
+            .fold(f64::INFINITY, f64::min);
+
+        let mut best: Option<(f64, Vec<usize>)> = None;
+        for &b in &grid {
+            // Token generation rate per request at batch size B
+            // (Appendix B: context length ≈ perfectly correlated with B).
+            let rate = 1.0 / view.latency.decode(b, b * avg_ctx);
+            // Fill gains for this B.
+            for k in 0..self.scratch.candidates.len() {
+                let c = self.scratch.candidates[k];
+                let q_serve = Self::q_serve(&c, rate);
+                let outlook =
+                    QoeOutlook { q_serve, q_wait: c.q_wait, q_current: c.q_current };
+                self.scratch.candidates[k].gain =
+                    self.cfg.objective.gain(&outlook, q_min).max(0.0);
+            }
+            let (chosen, value) = match self.cfg.solver {
+                KnapsackSolver::Greedy => self.pack_greedy(b, budget),
+                KnapsackSolver::Dp => self.pack_dp(b, budget),
+            };
+            // Prefer larger B on ties (more concurrent progress).
+            if best.as_ref().map_or(true, |(v, _)| value >= *v) {
+                best = Some((value, chosen));
+            }
+        }
+        let (_, desired) = best.unwrap();
+
+        // Anti-thrash hysteresis, then the hard preemption cap
+        // (Optimization #4). Gains from the last grid B are fine for
+        // ordering purposes.
+        let desired = self.apply_hysteresis(view, desired, horizon);
+        let desired = self.apply_preemption_cap(view, desired);
+
+        desired.into_iter().map(|i| self.scratch.candidates[i].id).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sched::testutil::Fixture;
+    use crate::qoe::spec::QoeSpec;
+
+    #[test]
+    fn unconstrained_serves_everyone() {
+        let mut f = Fixture::new(&[(50, 10, 0.0), (50, 10, 0.5)], 100_000);
+        f.now = 1.0;
+        static ACTIVE: &[RequestId] = &[0, 1];
+        let mut s = AndesScheduler::with_defaults();
+        let got = s.schedule(&f.view(ACTIVE));
+        assert_eq!(got.len(), 2);
+    }
+
+    #[test]
+    fn memory_pressure_triggers_knapsack_and_respects_capacity() {
+        // 10 blocks (160 tokens); three requests of 4 blocks each → only
+        // 2 fit under the 0.9 watermark (9 blocks).
+        let mut f = Fixture::new(
+            &[(60, 50, 0.0), (60, 50, 0.1), (60, 50, 0.2)],
+            160,
+        );
+        f.now = 5.0;
+        static ACTIVE: &[RequestId] = &[0, 1, 2];
+        let mut s = AndesScheduler::with_defaults();
+        let got = s.schedule(&f.view(ACTIVE));
+        assert!(got.len() <= 2, "must respect memory: {got:?}");
+        assert!(!got.is_empty());
+    }
+
+    #[test]
+    fn prioritizes_urgent_waiting_request_over_satisfied_running() {
+        // Request 0 has been running and is far ahead of its expected
+        // timeline (deep client buffer). Request 1 is waiting, past its
+        // expected TTFT, QoE collapsing. With room for only one, Andes
+        // must serve request 1.
+        let mut f = Fixture::new(&[(60, 200, 0.0), (60, 200, 0.0)], 160);
+        // Give request 0 a large head start: 40 tokens in the first second.
+        f.run(0);
+        for i in 0..40 {
+            f.requests[0].deliver_token(0.5 + i as f64 * 0.01);
+        }
+        f.now = 2.0; // request 1 now 1.0s past its expected TTFT
+        static ACTIVE: &[RequestId] = &[0, 1];
+        let mut s = AndesScheduler::with_defaults();
+        let got = s.schedule(&f.view(ACTIVE));
+        assert!(got.contains(&1), "urgent waiting request must be served: {got:?}");
+    }
+
+    #[test]
+    fn priority_discounts_by_context_length() {
+        // Two equally-urgent waiting requests, one with a much longer
+        // context: the short one packs first and when only one fits,
+        // it is the short one.
+        let mut f = Fixture::new(&[(120, 50, 0.0), (16, 50, 0.0)], 160);
+        f.now = 3.0;
+        static ACTIVE: &[RequestId] = &[0, 1];
+        let mut s = AndesScheduler::with_defaults();
+        let got = s.schedule(&f.view(ACTIVE));
+        assert!(got.contains(&1), "short request should win: {got:?}");
+    }
+
+    #[test]
+    fn preemption_cap_blocks_excess_preemptions() {
+        let mut f = Fixture::new(&[(60, 200, 0.0), (60, 200, 0.0), (60, 200, 0.0)], 160);
+        f.run(0);
+        f.run(1);
+        // Both running are ahead; request 2 waiting and urgent.
+        for i in 0..30 {
+            f.requests[0].deliver_token(0.2 + i as f64 * 0.01);
+            f.requests[1].deliver_token(0.2 + i as f64 * 0.01);
+        }
+        f.now = 3.0;
+        static ACTIVE: &[RequestId] = &[0, 1, 2];
+        // Cap = 0: no preemption allowed at all.
+        let mut s = AndesScheduler::new(AndesConfig {
+            preemption_cap: 0.0,
+            ..AndesConfig::default()
+        });
+        let mut view = f.view(ACTIVE);
+        view.total_preemptions = 0;
+        let got = s.schedule(&view);
+        assert!(
+            got.contains(&0) && got.contains(&1),
+            "cap=0 must keep running requests resident: {got:?}"
+        );
+    }
+
+    #[test]
+    fn starved_request_priority_rises_over_time() {
+        // The same waiting request gains priority as time passes
+        // (starvation prevention, §4.2 goal b).
+        let mut f = Fixture::new(&[(60, 100, 0.0), (60, 100, 0.0)], 160);
+        f.run(0);
+        for i in 0..40 {
+            f.requests[0].deliver_token(0.3 + i as f64 * 0.01);
+        }
+        static ACTIVE: &[RequestId] = &[0, 1];
+
+        // Shortly after arrival (before expected TTFT) Andes may keep 0.
+        f.now = 0.5;
+        let mut s = AndesScheduler::with_defaults();
+        let _early = s.schedule(&f.view(ACTIVE));
+
+        // Long past TTFT the waiting request must be in the batch.
+        f.now = 10.0;
+        let late = s.schedule(&f.view(ACTIVE));
+        assert!(late.contains(&1), "{late:?}");
+    }
+
+    #[test]
+    fn dp_solver_agrees_with_greedy_on_easy_instance() {
+        let mut f = Fixture::new(
+            &[(60, 50, 0.0), (60, 50, 0.1), (60, 50, 0.2)],
+            160,
+        );
+        f.now = 5.0;
+        static ACTIVE: &[RequestId] = &[0, 1, 2];
+        let mut greedy = AndesScheduler::with_defaults();
+        let mut dp = AndesScheduler::new(AndesConfig {
+            solver: KnapsackSolver::Dp,
+            ..AndesConfig::default()
+        });
+        let a = greedy.schedule(&f.view(ACTIVE));
+        let b = dp.schedule(&f.view(ACTIVE));
+        assert_eq!(a.len(), b.len());
+    }
+
+    #[test]
+    fn respects_explicit_delta_t() {
+        let mut f = Fixture::new(&[(60, 50, 0.0)], 100_000);
+        f.now = 1.0;
+        static ACTIVE: &[RequestId] = &[0];
+        let mut s = AndesScheduler::new(AndesConfig {
+            delta_t_override: Some(5.0),
+            ..AndesConfig::default()
+        });
+        assert_eq!(s.schedule(&f.view(ACTIVE)), vec![0]);
+    }
+
+    #[test]
+    fn voice_spec_tolerates_larger_batches() {
+        // With slower expected TDS (voice), B_min grows — more requests
+        // can run concurrently with no QoE penalty.
+        let mut f = Fixture::new(&[(60, 50, 0.0); 4], 100_000);
+        for r in f.requests.iter_mut() {
+            r.qoe_spec = QoeSpec::new(1.0, 3.3);
+        }
+        f.now = 0.5;
+        static ACTIVE: &[RequestId] = &[0, 1, 2, 3];
+        let mut s = AndesScheduler::with_defaults();
+        let got = s.schedule(&f.view(ACTIVE));
+        assert_eq!(got.len(), 4);
+    }
+}
+
+#[cfg(test)]
+mod cap_tests {
+    use super::*;
+    use crate::coordinator::sched::testutil::Fixture;
+    use crate::coordinator::request::{Phase, RequestId};
+
+    #[test]
+    fn cap_zero_budget_freezes_preemptions() {
+        // Tight memory; 2 coasting runners + 2 urgent waiters; budget
+        // exhausted (total_preemptions >= P * seen) → runners must stay.
+        let mut f = Fixture::new(
+            &[(60, 200, 0.0), (60, 200, 0.0), (60, 200, 0.0), (60, 200, 0.0)],
+            160,
+        );
+        f.run(0);
+        f.run(1);
+        for i in 0..40 {
+            f.requests[0].deliver_token(0.2 + i as f64 * 0.01);
+            f.requests[1].deliver_token(0.2 + i as f64 * 0.01);
+        }
+        f.now = 5.0;
+        static ACTIVE: &[RequestId] = &[0, 1, 2, 3];
+        let mut view = f.view(ACTIVE);
+        view.total_preemptions = 100; // ≫ P * 4
+        let mut s = AndesScheduler::with_defaults();
+        let got = s.schedule(&view);
+        assert!(
+            got.contains(&0) && got.contains(&1),
+            "exhausted budget must keep runners: {got:?}"
+        );
+        let _ = Phase::Running;
+    }
+}

@@ -1,0 +1,130 @@
+//! First-come-first-serve scheduling — vLLM 0.2.7's policy (the paper's
+//! main baseline, §6.1).
+//!
+//! Semantics reproduced from vLLM's scheduler:
+//! 1. the running batch keeps generating (continuous batching);
+//! 2. swapped-out requests are swapped back in (in arrival order) before
+//!    any new admissions;
+//! 3. waiting requests are admitted in arrival order while their prompt
+//!    KV fits under the admission watermark;
+//! 4. on memory pressure (a running request cannot grow), the engine
+//!    preempts the *latest-arrived* running request — FCFS never preempts
+//!    proactively here.
+
+use super::{SchedView, Scheduler};
+use crate::coordinator::request::RequestId;
+
+/// vLLM-style FCFS.
+#[derive(Debug, Default)]
+pub struct FcfsScheduler {
+    /// Fraction of device blocks kept free as an admission watermark
+    /// (vLLM's `watermark=0.01`).
+    pub watermark: f64,
+}
+
+impl FcfsScheduler {
+    pub fn new() -> Self {
+        FcfsScheduler { watermark: 0.01 }
+    }
+}
+
+impl Scheduler for FcfsScheduler {
+    fn name(&self) -> &'static str {
+        "fcfs"
+    }
+
+    fn schedule(&mut self, view: &SchedView<'_>) -> Vec<RequestId> {
+        let total_blocks = view.total_blocks();
+        let reserve = (total_blocks as f64 * self.watermark).ceil() as usize;
+
+        // Running requests stay, in arrival order.
+        let mut desired = view.running();
+        desired.sort_by(|&a, &b| {
+            view.req(a).arrival.partial_cmp(&view.req(b).arrival).unwrap().then(a.cmp(&b))
+        });
+        let mut used_blocks: usize = desired.iter().map(|&id| view.block_cost(id)).sum();
+
+        // Swapped-out first, then waiting — each in arrival order.
+        let mut candidates = view.not_running();
+        candidates.sort_by(|&a, &b| {
+            use crate::coordinator::request::Phase;
+            let pa = view.req(a).phase == Phase::SwappedOut;
+            let pb = view.req(b).phase == Phase::SwappedOut;
+            pb.cmp(&pa)
+                .then(view.req(a).arrival.partial_cmp(&view.req(b).arrival).unwrap())
+                .then(a.cmp(&b))
+        });
+        for id in candidates {
+            let need = view.block_cost(id);
+            if used_blocks + need + reserve <= total_blocks {
+                used_blocks += need;
+                desired.push(id);
+            } else {
+                // Strict FCFS: head-of-line blocking — don't skip ahead.
+                break;
+            }
+        }
+        desired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sched::testutil::Fixture;
+
+    #[test]
+    fn admits_in_arrival_order_until_full() {
+        // Capacity 160 tokens = 10 blocks of 16; watermark reserves 1.
+        let mut f = Fixture::new(
+            &[(60, 10, 0.0), (60, 10, 1.0), (60, 10, 2.0)],
+            160,
+        );
+        static ACTIVE: &[RequestId] = &[0, 1, 2];
+        let mut s = FcfsScheduler::new();
+        let got = s.schedule(&f.view(ACTIVE));
+        // Each request costs ceil(61/16) = 4 blocks; 2 fit under 10-1.
+        assert_eq!(got, vec![0, 1]);
+        // Run those two; the third still blocked next round.
+        f.run(0);
+        f.run(1);
+        let got = s.schedule(&f.view(ACTIVE));
+        assert_eq!(got, vec![0, 1]);
+    }
+
+    #[test]
+    fn head_of_line_blocking() {
+        // A huge request at the queue head blocks a small one behind it —
+        // the pathology Fig. 4 illustrates.
+        let mut f = Fixture::new(&[(100, 10, 0.0), (150, 10, 1.0), (10, 10, 2.0)], 160);
+        f.run(0); // 0 occupies 7 blocks (101 tokens).
+        static ACTIVE: &[RequestId] = &[0, 1, 2];
+        let mut s = FcfsScheduler::new();
+        let got = s.schedule(&f.view(ACTIVE));
+        // Request 1 needs 10 blocks, only 3 free → blocked; FCFS must NOT
+        // admit request 2 ahead of it.
+        assert_eq!(got, vec![0]);
+    }
+
+    #[test]
+    fn swapped_requests_have_priority_over_waiting() {
+        use crate::coordinator::request::Phase;
+        let mut f = Fixture::new(&[(60, 10, 0.0), (30, 10, 1.0)], 160);
+        // Request 0 swapped out, request 1 new in queue.
+        f.requests[0].phase = Phase::SwappedOut;
+        f.kv.allocate(0, 60).unwrap();
+        f.kv.swap_out(0).unwrap();
+        static ACTIVE: &[RequestId] = &[0, 1];
+        let mut s = FcfsScheduler::new();
+        let got = s.schedule(&f.view(ACTIVE));
+        assert_eq!(got[0], 0, "swapped request must come back first");
+    }
+
+    #[test]
+    fn empty_system() {
+        let f = Fixture::new(&[], 160);
+        static ACTIVE: &[RequestId] = &[];
+        let mut s = FcfsScheduler::new();
+        assert!(s.schedule(&f.view(ACTIVE)).is_empty());
+    }
+}

@@ -1,0 +1,184 @@
+//! Scheduling framework (paper §4).
+//!
+//! At the beginning of every engine iteration (continuous batching), the
+//! scheduler inspects all active requests and returns the **desired
+//! running set** for the next iteration. The engine diffs that against
+//! the current running set: departures are preempted (swap, falling back
+//! to recomputation), newcomers are admitted (swap-in or prefill).
+//!
+//! Implementations:
+//! - [`fcfs`]: vLLM 0.2.7's first-come-first-serve (the paper's baseline);
+//! - [`round_robin`]: cyclic fair-sharing with a service quantum;
+//! - [`andes`]: the paper's QoE-aware knapsack scheduler (Algorithm 1);
+//! - [`dp`]: the exact 3D dynamic-programming solver (Algorithm 2),
+//!   used by the Fig. 18 comparison.
+
+pub mod andes;
+pub mod dp;
+pub mod fcfs;
+pub mod objective;
+pub mod round_robin;
+
+use super::kv::KvCacheManager;
+use super::request::{Phase, Request, RequestId};
+use crate::model::latency::LatencyModel;
+
+/// Preemption mechanisms (paper §4.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptMechanism {
+    /// Move KV cache to host memory and back.
+    Swap,
+    /// Drop KV cache; replay prefill on re-admission.
+    Recompute,
+}
+
+/// Read-only view of the system handed to schedulers each iteration.
+pub struct SchedView<'a> {
+    /// Current absolute time (s).
+    pub now: f64,
+    /// Prediction horizon Δt (s) — engine-estimated average request
+    /// completion time unless overridden.
+    pub horizon: f64,
+    /// All requests ever admitted, indexed by id.
+    pub requests: &'a [Request],
+    /// Ids of non-finished requests (waiting + running + swapped).
+    pub active: &'a [RequestId],
+    pub kv: &'a KvCacheManager,
+    pub latency: &'a LatencyModel,
+    /// Lifetime counters for the preemption cap (Optimization #4).
+    pub total_requests_seen: usize,
+    pub total_preemptions: usize,
+}
+
+impl<'a> SchedView<'a> {
+    pub fn req(&self, id: RequestId) -> &Request {
+        &self.requests[id]
+    }
+
+    /// Ids currently in the running batch.
+    pub fn running(&self) -> Vec<RequestId> {
+        self.active
+            .iter()
+            .copied()
+            .filter(|&id| self.requests[id].phase == Phase::Running)
+            .collect()
+    }
+
+    /// Ids waiting or swapped out.
+    pub fn not_running(&self) -> Vec<RequestId> {
+        self.active
+            .iter()
+            .copied()
+            .filter(|&id| {
+                matches!(self.requests[id].phase, Phase::Waiting | Phase::SwappedOut)
+            })
+            .collect()
+    }
+
+    /// Device blocks a request needs to run *and* grow by one token
+    /// (conservative admission cost).
+    pub fn block_cost(&self, id: RequestId) -> usize {
+        (self.requests[id].context_len() + 1).div_ceil(self.kv.block_size())
+    }
+
+    /// Total device blocks available to the scheduler.
+    pub fn total_blocks(&self) -> usize {
+        self.kv.device_capacity_tokens() / self.kv.block_size()
+    }
+
+    /// Mean context length over active requests (Appendix B's proxy that
+    /// lets latency be modeled as a function of batch size alone).
+    pub fn avg_context_len(&self) -> usize {
+        if self.active.is_empty() {
+            return 0;
+        }
+        let total: usize = self.active.iter().map(|&id| self.requests[id].context_len()).sum();
+        (total / self.active.len()).max(1)
+    }
+}
+
+/// A scheduling policy.
+pub trait Scheduler: Send {
+    fn name(&self) -> &'static str;
+
+    /// Return the desired running set for the next iteration. The engine
+    /// trusts but verifies: sets that exceed KV capacity are truncated.
+    fn schedule(&mut self, view: &SchedView<'_>) -> Vec<RequestId>;
+
+    /// Notification hooks so stateful schedulers (e.g. RR) can track
+    /// request lifecycle. Default: no-op.
+    fn on_finish(&mut self, _id: RequestId) {}
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    //! Shared helpers for scheduler unit tests.
+    use super::*;
+    use crate::model::gpu::a100_4x;
+    use crate::model::llm::opt_66b;
+    use crate::qoe::spec::QoeSpec;
+
+    pub struct Fixture {
+        pub requests: Vec<Request>,
+        pub kv: KvCacheManager,
+        pub latency: LatencyModel,
+        pub now: f64,
+    }
+
+    impl Fixture {
+        /// Build a fixture with the given (prompt, output, arrival) specs
+        /// and a device capacity in tokens.
+        pub fn new(specs: &[(usize, usize, f64)], capacity_tokens: usize) -> Fixture {
+            let requests: Vec<Request> = specs
+                .iter()
+                .enumerate()
+                .map(|(i, &(p, _o, a))| Request::new(i, a, p, QoeSpec::new(1.0, 4.8)))
+                .collect();
+            Fixture {
+                requests,
+                kv: KvCacheManager::new(capacity_tokens, capacity_tokens, 16),
+                latency: LatencyModel::for_deployment(&opt_66b(), &a100_4x()),
+                now: 0.0,
+            }
+        }
+
+        /// Mark a request as running and allocate its KV.
+        pub fn run(&mut self, id: RequestId) {
+            self.requests[id].phase = Phase::Running;
+            self.kv.allocate(id, self.requests[id].context_len()).unwrap();
+        }
+
+        pub fn view(&self, active: &'static [RequestId]) -> SchedView<'_> {
+            SchedView {
+                now: self.now,
+                horizon: 30.0,
+                requests: &self.requests,
+                active,
+                kv: &self.kv,
+                latency: &self.latency,
+                total_requests_seen: self.requests.len(),
+                total_preemptions: 0,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::Fixture;
+    use super::*;
+
+    #[test]
+    fn view_accessors() {
+        let mut f = Fixture::new(&[(100, 50, 0.0), (200, 50, 1.0), (300, 50, 2.0)], 10_000);
+        f.run(0);
+        static ACTIVE: &[RequestId] = &[0, 1, 2];
+        let v = f.view(ACTIVE);
+        assert_eq!(v.running(), vec![0]);
+        assert_eq!(v.not_running(), vec![1, 2]);
+        assert_eq!(v.avg_context_len(), 200);
+        // 100+1 tokens over 16-token blocks → 7 blocks
+        assert_eq!(v.block_cost(0), 7);
+        assert_eq!(v.total_blocks(), 625);
+    }
+}

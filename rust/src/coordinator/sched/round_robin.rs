@@ -1,0 +1,155 @@
+//! Round-Robin scheduling (the paper's second baseline, §6.1).
+//!
+//! Guarantees equal service through cyclic preemption: every `quantum`
+//! iterations the running set yields to the next cohort in cyclic order.
+//! The paper sets the service interval to 50 inference iterations
+//! ("maximizing its QoE performance").
+
+use std::collections::VecDeque;
+
+use super::{SchedView, Scheduler};
+use crate::coordinator::request::{Phase, RequestId};
+
+#[derive(Debug)]
+pub struct RoundRobinScheduler {
+    /// Service interval in iterations (paper: 50).
+    pub quantum: u64,
+    /// Cyclic order of active requests.
+    ring: VecDeque<RequestId>,
+    /// Iterations since the last rotation.
+    since_rotate: u64,
+    /// Memory watermark (same semantics as FCFS).
+    pub watermark: f64,
+}
+
+impl RoundRobinScheduler {
+    pub fn new(quantum: u64) -> Self {
+        RoundRobinScheduler { quantum, ring: VecDeque::new(), since_rotate: 0, watermark: 0.01 }
+    }
+
+    /// Sync the ring with the view: enqueue newcomers, drop finished.
+    fn sync(&mut self, view: &SchedView<'_>) {
+        let active: std::collections::HashSet<RequestId> = view.active.iter().copied().collect();
+        self.ring.retain(|id| active.contains(id));
+        let known: std::collections::HashSet<RequestId> = self.ring.iter().copied().collect();
+        let mut newcomers: Vec<RequestId> =
+            view.active.iter().copied().filter(|id| !known.contains(id)).collect();
+        newcomers.sort_by(|&a, &b| {
+            view.req(a).arrival.partial_cmp(&view.req(b).arrival).unwrap().then(a.cmp(&b))
+        });
+        self.ring.extend(newcomers);
+    }
+}
+
+impl Scheduler for RoundRobinScheduler {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn schedule(&mut self, view: &SchedView<'_>) -> Vec<RequestId> {
+        self.sync(view);
+        if self.ring.is_empty() {
+            return Vec::new();
+        }
+
+        // Rotate the ring every `quantum` iterations *if* someone is
+        // waiting (no point preempting when everyone already runs).
+        let anyone_waiting = view
+            .active
+            .iter()
+            .any(|&id| matches!(view.req(id).phase, Phase::Waiting | Phase::SwappedOut));
+        self.since_rotate += 1;
+        if self.since_rotate >= self.quantum && anyone_waiting {
+            self.since_rotate = 0;
+            // Move the currently-running prefix to the back of the ring.
+            let running: std::collections::HashSet<RequestId> =
+                view.running().into_iter().collect();
+            let mut yielded = Vec::new();
+            while let Some(&front) = self.ring.front() {
+                if running.contains(&front) {
+                    yielded.push(self.ring.pop_front().unwrap());
+                } else {
+                    break;
+                }
+            }
+            self.ring.extend(yielded);
+        }
+
+        // Fill from the ring front while memory fits.
+        let total_blocks = view.total_blocks();
+        let reserve = (total_blocks as f64 * self.watermark).ceil() as usize;
+        let mut desired = Vec::new();
+        let mut used = 0usize;
+        for &id in self.ring.iter() {
+            let need = view.block_cost(id);
+            if used + need + reserve <= total_blocks {
+                used += need;
+                desired.push(id);
+            } else {
+                break; // keep cyclic order strict
+            }
+        }
+        desired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sched::testutil::Fixture;
+
+    #[test]
+    fn serves_in_ring_order_and_rotates() {
+        // 3 equal requests, capacity for 2 (each 4 blocks of the 10 − 1
+        // reserve).
+        let mut f = Fixture::new(&[(60, 10, 0.0), (60, 10, 1.0), (60, 10, 2.0)], 160);
+        static ACTIVE: &[RequestId] = &[0, 1, 2];
+        let mut s = RoundRobinScheduler::new(3);
+        // Iterations 1..2: front of ring = [0,1].
+        let d1 = s.schedule(&f.view(ACTIVE));
+        assert_eq!(d1, vec![0, 1]);
+        f.run(0);
+        f.run(1);
+        let d2 = s.schedule(&f.view(ACTIVE));
+        assert_eq!(d2, vec![0, 1]);
+        // Third call hits the quantum → ring rotates, request 2 now front.
+        let d3 = s.schedule(&f.view(ACTIVE));
+        assert_eq!(d3[0], 2, "rotation must bring the starved request forward: {d3:?}");
+    }
+
+    #[test]
+    fn no_rotation_when_nobody_waits() {
+        let mut f = Fixture::new(&[(60, 10, 0.0), (60, 10, 1.0)], 1600);
+        f.run(0);
+        f.run(1);
+        static ACTIVE: &[RequestId] = &[0, 1];
+        let mut s = RoundRobinScheduler::new(2);
+        for _ in 0..5 {
+            let d = s.schedule(&f.view(ACTIVE));
+            assert_eq!(d, vec![0, 1]);
+        }
+    }
+
+    #[test]
+    fn finished_requests_leave_the_ring() {
+        let mut f = Fixture::new(&[(60, 10, 0.0), (60, 10, 1.0)], 1600);
+        f.run(0);
+        static A2: &[RequestId] = &[0, 1];
+        let mut s = RoundRobinScheduler::new(50);
+        let _ = s.schedule(&f.view(A2));
+        // Request 0 finishes.
+        f.requests[0].phase = Phase::Finished;
+        f.kv.free(0).unwrap();
+        static A1: &[RequestId] = &[1];
+        let d = s.schedule(&f.view(A1));
+        assert_eq!(d, vec![1]);
+    }
+
+    #[test]
+    fn empty() {
+        let f = Fixture::new(&[], 160);
+        static ACTIVE: &[RequestId] = &[];
+        let mut s = RoundRobinScheduler::new(50);
+        assert!(s.schedule(&f.view(ACTIVE)).is_empty());
+    }
+}

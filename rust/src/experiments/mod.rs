@@ -1,0 +1,220 @@
+//! Experiment harness: one entry per table/figure in the paper
+//! (DESIGN.md §5 maps each to its module). `andes exp <id|all>` runs
+//! them, writing CSVs + ASCII renderings under the output directory and
+//! printing a shape-check verdict per artifact.
+
+pub mod breakdown;
+pub mod endtoend;
+pub mod extensions;
+pub mod micro;
+pub mod motivation;
+pub mod robustness;
+pub mod runner;
+pub mod sensitivity;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::workload::Dataset;
+
+/// Execution context shared by all experiments.
+pub struct ExpCtx {
+    pub out_dir: PathBuf,
+    /// Reduced request counts / grids for smoke runs.
+    pub quick: bool,
+}
+
+/// One registered experiment.
+pub struct Experiment {
+    pub id: &'static str,
+    pub paper_ref: &'static str,
+    pub title: &'static str,
+    pub run: fn(&ExpCtx) -> Result<String>,
+}
+
+/// The full registry, in paper order.
+pub fn registry() -> Vec<Experiment> {
+    vec![
+        Experiment {
+            id: "fig2",
+            paper_ref: "Fig. 2",
+            title: "QoE intuition: four delivery timelines",
+            run: motivation::fig2,
+        },
+        Experiment {
+            id: "fig3",
+            paper_ref: "Fig. 3",
+            title: "Motivation: TTFT explosion & overfast generation (FCFS)",
+            run: motivation::fig3,
+        },
+        Experiment {
+            id: "fig4",
+            paper_ref: "Fig. 4",
+            title: "Toy example: FCFS vs RR vs QoE-aware",
+            run: motivation::fig4,
+        },
+        Experiment {
+            id: "fig5",
+            paper_ref: "Fig. 5",
+            title: "QoE metric worked example",
+            run: motivation::fig5,
+        },
+        Experiment {
+            id: "fig7",
+            paper_ref: "Fig. 7",
+            title: "Q_serve as a function of batch size",
+            run: motivation::fig7,
+        },
+        Experiment {
+            id: "fig9",
+            paper_ref: "Fig. 9",
+            title: "Dataset length distributions",
+            run: motivation::fig9,
+        },
+        Experiment {
+            id: "fig10",
+            paper_ref: "Fig. 10",
+            title: "Avg QoE vs rate, ShareGPT, 4 models",
+            run: |ctx| endtoend::fig10_11(ctx, Dataset::ShareGpt),
+        },
+        Experiment {
+            id: "fig11",
+            paper_ref: "Fig. 11",
+            title: "Avg QoE vs rate, Multi-Round ShareGPT",
+            run: |ctx| endtoend::fig10_11(ctx, Dataset::MultiRoundShareGpt),
+        },
+        Experiment {
+            id: "fig12",
+            paper_ref: "Figs. 12–13",
+            title: "Throughput & preemption frequency (OPT-66B)",
+            run: endtoend::fig12_13,
+        },
+        Experiment {
+            id: "tab4",
+            paper_ref: "Table 4",
+            title: "QoE / TTFT / TDS percentile breakdown",
+            run: breakdown::tab4,
+        },
+        Experiment {
+            id: "fig14",
+            paper_ref: "Fig. 14",
+            title: "QoE vs total length scatter",
+            run: breakdown::fig14,
+        },
+        Experiment {
+            id: "fig15a",
+            paper_ref: "Fig. 15a",
+            title: "Robustness: A40 hardware",
+            run: robustness::fig15a,
+        },
+        Experiment {
+            id: "fig15b",
+            paper_ref: "Fig. 15b",
+            title: "Robustness: bursty Gamma arrivals",
+            run: robustness::fig15b,
+        },
+        Experiment {
+            id: "fig15c",
+            paper_ref: "Fig. 15c",
+            title: "Robustness: voice-chat QoE trace",
+            run: robustness::fig15c,
+        },
+        Experiment {
+            id: "fig16",
+            paper_ref: "Fig. 16",
+            title: "Sensitivity: preemption cap P",
+            run: sensitivity::fig16,
+        },
+        Experiment {
+            id: "fig17",
+            paper_ref: "Fig. 17",
+            title: "Sensitivity: prediction timeframe Δt",
+            run: sensitivity::fig17,
+        },
+        Experiment {
+            id: "fig18",
+            paper_ref: "Fig. 18",
+            title: "Sensitivity: greedy vs DP knapsack",
+            run: sensitivity::fig18,
+        },
+        Experiment {
+            id: "fig19",
+            paper_ref: "Fig. 19 / App. B",
+            title: "Batch size vs total context correlation",
+            run: breakdown::fig19,
+        },
+        Experiment {
+            id: "fig20",
+            paper_ref: "Fig. 20 / App. D",
+            title: "Swap vs recomputation overhead",
+            run: micro::fig20,
+        },
+        Experiment {
+            id: "fig21",
+            paper_ref: "Fig. 21 / App. E",
+            title: "Normalized latency",
+            run: endtoend::fig21,
+        },
+        Experiment {
+            id: "fig22",
+            paper_ref: "Fig. 22 / App. F",
+            title: "Token delivery timeline visualization",
+            run: breakdown::fig22,
+        },
+        Experiment {
+            id: "appA",
+            paper_ref: "Appendix A",
+            title: "Alternative scheduling objectives",
+            run: sensitivity::app_a,
+        },
+        Experiment {
+            id: "ext-tiers",
+            paper_ref: "§6.1 (extension)",
+            title: "API price tiers: per-tier QoE contracts",
+            run: extensions::ext_tiers,
+        },
+        Experiment {
+            id: "ext-cluster",
+            paper_ref: "§5 (extension)",
+            title: "Cluster routing policies × per-replica scheduling",
+            run: extensions::ext_cluster,
+        },
+        Experiment {
+            id: "e2e",
+            paper_ref: "—",
+            title: "End-to-end real model over PJRT",
+            run: micro::e2e_real,
+        },
+    ]
+}
+
+/// Run one experiment by id (or "all"). Returns the combined report.
+pub fn run(id: &str, ctx: &ExpCtx) -> Result<String> {
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    let registry = registry();
+    let mut report = String::new();
+    let mut matched = false;
+    for exp in &registry {
+        if id == "all" || id == exp.id {
+            matched = true;
+            let t0 = std::time::Instant::now();
+            report.push_str(&format!(
+                "\n================ {} [{}] {} ================\n",
+                exp.id, exp.paper_ref, exp.title
+            ));
+            match (exp.run)(ctx) {
+                Ok(r) => report.push_str(&r),
+                Err(e) => report.push_str(&format!("ERROR: {e:#}\n")),
+            }
+            report.push_str(&format!("({:.1}s)\n", t0.elapsed().as_secs_f64()));
+        }
+    }
+    if !matched {
+        anyhow::bail!(
+            "unknown experiment '{id}'; available: all, {}",
+            registry.iter().map(|e| e.id).collect::<Vec<_>>().join(", ")
+        );
+    }
+    Ok(report)
+}

@@ -1,0 +1,17 @@
+//! Andes: a QoE-aware serving system for LLM-based text streaming services.
+//!
+//! Reproduction of Liu et al., "Andes: Defining and Enhancing
+//! Quality-of-Experience in LLM-Based Text Streaming Services" (2024).
+//! See DESIGN.md for the architecture and experiment index.
+
+pub mod util;
+pub mod backend;
+pub mod cluster;
+pub mod config;
+pub mod experiments;
+pub mod server;
+pub mod coordinator;
+pub mod model;
+pub mod workload;
+pub mod qoe;
+pub mod runtime;

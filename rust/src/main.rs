@@ -1,0 +1,283 @@
+//! `andes` — QoE-aware LLM text-streaming serving (paper reproduction).
+//!
+//! Subcommands:
+//!   serve      run the TCP streaming server over the real tiny-OPT model
+//!   exp        regenerate paper tables/figures (CSV + ASCII)
+//!   workload   generate a workload trace as CSV
+//!   simulate   one simulated serving run, printing summary metrics
+
+use std::path::PathBuf;
+
+use andes::experiments::{self, ExpCtx};
+use andes::model::gpu::{a100_4x, gpu_by_name};
+use andes::model::llm::{llm_by_name, opt_66b};
+use andes::util::cli::{usage, Args, CliError, OptSpec};
+use andes::workload::{ArrivalProcess, Dataset, QoeTrace, Workload};
+
+fn main() {
+    // Minimal stderr logger (no external logger crates offline).
+    struct StderrLog;
+    impl log::Log for StderrLog {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= log::Level::Info
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    static LOGGER: StderrLog = StderrLog;
+    let _ = log::set_logger(&LOGGER).map(|_| log::set_max_level(log::LevelFilter::Info));
+
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            eprintln!("{}", top_usage());
+            std::process::exit(2);
+        }
+    };
+    let code = match cmd {
+        "exp" => cmd_exp(&rest),
+        "serve" => cmd_serve(&rest),
+        "workload" => cmd_workload(&rest),
+        "simulate" => cmd_simulate(&rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", top_usage());
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{}", top_usage());
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn top_usage() -> String {
+    "andes — QoE-aware LLM text-streaming serving\n\n\
+     Usage: andes <command> [options]\n\n\
+     Commands:\n\
+       exp <id|all>   regenerate paper tables/figures (see DESIGN.md §5)\n\
+       serve          TCP streaming server over the real tiny-OPT model\n\
+       workload       generate a workload trace CSV\n\
+       simulate       one simulated serving run with summary metrics\n\n\
+     Run `andes <command> --help` for options."
+        .to_string()
+}
+
+fn die_on_cli(cmd: &str, about: &str, specs: &[OptSpec], e: CliError) -> i32 {
+    match e {
+        CliError::Help => {
+            println!("{}", usage(cmd, about, specs));
+            0
+        }
+        e => {
+            eprintln!("error: {e}\n{}", usage(cmd, about, specs));
+            2
+        }
+    }
+}
+
+fn cmd_exp(argv: &[String]) -> i32 {
+    let specs = [
+        OptSpec::value("out", Some("results"), "output directory for CSVs"),
+        OptSpec::flag("quick", "reduced request counts (smoke run)"),
+    ];
+    let about = "Regenerate paper tables and figures";
+    let args = match Args::parse(argv, &specs) {
+        Ok(a) => a,
+        Err(e) => return die_on_cli("exp", about, &specs, e),
+    };
+    let id = args.positional().first().cloned().unwrap_or_else(|| "all".into());
+    let ctx = ExpCtx {
+        out_dir: PathBuf::from(args.get("out").unwrap()),
+        quick: args.has_flag("quick"),
+    };
+    match experiments::run(&id, &ctx) {
+        Ok(report) => {
+            println!("{report}");
+            println!("CSV outputs under {}", ctx.out_dir.display());
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(argv: &[String]) -> i32 {
+    let specs = [
+        OptSpec::value("addr", Some("127.0.0.1:7878"), "listen address"),
+        OptSpec::value("kv-tokens", Some("2048"), "device KV capacity (tokens)"),
+        OptSpec::value("max-output", Some("128"), "max generated tokens per request"),
+    ];
+    let about = "Serve the real tiny-OPT model over TCP (JSON lines)";
+    let args = match Args::parse(argv, &specs) {
+        Ok(a) => a,
+        Err(e) => return die_on_cli("serve", about, &specs, e),
+    };
+    let cfg = andes::server::ServerConfig {
+        addr: args.get("addr").unwrap().to_string(),
+        kv_capacity_tokens: args.get_usize("kv-tokens").unwrap().unwrap(),
+        max_output_tokens: args.get_usize("max-output").unwrap().unwrap(),
+    };
+    match andes::server::serve(cfg, None) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_workload(argv: &[String]) -> i32 {
+    let specs = [
+        OptSpec::value("dataset", Some("sharegpt"), "sharegpt | multiround"),
+        OptSpec::value("rate", Some("2.0"), "arrival rate (req/s)"),
+        OptSpec::value("cv", Some("1.0"), "arrival CV (1 = Poisson)"),
+        OptSpec::value("qoe", Some("text"), "text | voice"),
+        OptSpec::value("n", Some("1000"), "number of requests"),
+        OptSpec::value("seed", Some("42"), "PRNG seed"),
+        OptSpec::value("out", None, "output CSV path (default stdout)"),
+    ];
+    let about = "Generate a workload trace";
+    let args = match Args::parse(argv, &specs) {
+        Ok(a) => a,
+        Err(e) => return die_on_cli("workload", about, &specs, e),
+    };
+    let dataset = match Dataset::by_name(args.get("dataset").unwrap()) {
+        Some(d) => d,
+        None => {
+            eprintln!("unknown dataset");
+            return 2;
+        }
+    };
+    let rate = args.get_f64("rate").unwrap().unwrap();
+    let cv = args.get_f64("cv").unwrap().unwrap();
+    let arrivals = if (cv - 1.0).abs() < 1e-9 {
+        ArrivalProcess::Poisson { rate }
+    } else {
+        ArrivalProcess::Gamma { rate, cv }
+    };
+    let qoe_trace = QoeTrace::by_name(args.get("qoe").unwrap()).unwrap_or(QoeTrace::TextReading);
+    let wl = Workload {
+        dataset,
+        arrivals,
+        qoe_trace,
+        num_requests: args.get_usize("n").unwrap().unwrap(),
+        seed: args.get_u64("seed").unwrap().unwrap(),
+    };
+    let mut csv = andes::util::csv::Csv::new(&[
+        "id", "arrival", "prompt_tokens", "output_tokens", "ttft_expected", "tds_expected",
+    ]);
+    for r in wl.generate() {
+        csv.row_f64(&[
+            r.id as f64,
+            r.arrival,
+            r.prompt_tokens as f64,
+            r.output_tokens as f64,
+            r.qoe.ttft,
+            r.qoe.tds,
+        ]);
+    }
+    match args.get("out") {
+        Some(path) => {
+            if let Err(e) = csv.write(std::path::Path::new(path)) {
+                eprintln!("write failed: {e}");
+                return 1;
+            }
+            eprintln!("wrote {path}");
+        }
+        None => print!("{}", csv.to_string()),
+    }
+    0
+}
+
+fn cmd_simulate(argv: &[String]) -> i32 {
+    let specs = [
+        OptSpec::value("model", Some("opt-66b"), "opt-13b|opt-30b|opt-66b|opt-175b"),
+        OptSpec::value("gpu", Some("a100-4x"), "a100-1x|a100-4x|a40"),
+        OptSpec::value("sched", Some("andes"), "fcfs | rr | andes"),
+        OptSpec::value("dataset", Some("sharegpt"), "sharegpt | multiround"),
+        OptSpec::value("rate", Some("2.0"), "arrival rate (req/s)"),
+        OptSpec::value("n", Some("1000"), "number of requests"),
+        OptSpec::value("seed", Some("42"), "PRNG seed"),
+        OptSpec::value("trace", None, "replay a workload CSV instead of generating"),
+    ];
+    let about = "One simulated serving run";
+    let args = match Args::parse(argv, &specs) {
+        Ok(a) => a,
+        Err(e) => return die_on_cli("simulate", about, &specs, e),
+    };
+    let llm = llm_by_name(args.get("model").unwrap()).unwrap_or_else(opt_66b);
+    let gpu = gpu_by_name(args.get("gpu").unwrap()).unwrap_or_else(a100_4x);
+    let sched = match args.get("sched").unwrap() {
+        "fcfs" => experiments::runner::SchedKind::Fcfs,
+        "rr" => experiments::runner::SchedKind::RoundRobin { quantum: 50 },
+        _ => experiments::runner::SchedKind::andes_default(),
+    };
+    let dataset = Dataset::by_name(args.get("dataset").unwrap()).unwrap_or(Dataset::ShareGpt);
+
+    // Trace replay path: run the exact recorded workload.
+    if let Some(path) = args.get("trace") {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("reading {path}: {e}");
+                return 1;
+            }
+        };
+        let trace = match andes::workload::parse_trace_csv(&text) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("parsing {path}: {e:#}");
+                return 1;
+            }
+        };
+        use andes::backend::sim::SimBackend;
+        use andes::backend::VirtualClock;
+        use andes::coordinator::engine::{Engine, EngineConfig};
+        let latency = andes::model::latency::LatencyModel::for_deployment(&llm, &gpu);
+        let cfg = EngineConfig {
+            kv_capacity_tokens: llm.kv_capacity_tokens(&gpu),
+            swap_capacity_tokens: llm.swap_capacity_tokens(&gpu),
+            ..EngineConfig::default()
+        };
+        let mut e = Engine::new(
+            cfg,
+            SimBackend::new(latency.clone()),
+            VirtualClock::default(),
+            sched.build(),
+            latency,
+        );
+        e.load_trace(trace);
+        match e.run_to_completion() {
+            Ok(m) => {
+                println!("{}", m.summary());
+                return 0;
+            }
+            Err(err) => {
+                eprintln!("error: {err:#}");
+                return 1;
+            }
+        }
+    }
+
+    let run = experiments::runner::SimRun {
+        llm,
+        gpu,
+        sched,
+        dataset,
+        arrivals: ArrivalProcess::Poisson { rate: args.get_f64("rate").unwrap().unwrap() },
+        qoe_trace: QoeTrace::TextReading,
+        num_requests: args.get_usize("n").unwrap().unwrap(),
+        seed: args.get_u64("seed").unwrap().unwrap(),
+    };
+    let m = run.execute();
+    println!("{}", m.summary());
+    0
+}

@@ -1,0 +1,86 @@
+//! GPU hardware profiles (paper Table 3 testbeds).
+//!
+//! We do not have A100s; these profiles parameterize the calibrated
+//! latency model in [`super::latency`] so the simulator reproduces the
+//! paper's *relative* behaviour (see DESIGN.md §1 substitution table).
+
+/// A GPU server configuration (possibly multi-GPU tensor-parallel).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuProfile {
+    pub name: &'static str,
+    /// Number of GPUs (tensor parallel degree).
+    pub num_gpus: usize,
+    /// Total GPU memory in GiB across the node.
+    pub total_mem_gib: f64,
+    /// Relative compute capability (A100 = 1.0). Scales iteration latency.
+    pub compute_scale: f64,
+    /// Host↔device bandwidth in GiB/s (PCIe; bounds swap overhead).
+    pub pcie_gib_s: f64,
+    /// CPU swap space for evicted KV caches, GiB (paper §6.1: 240 GB).
+    pub swap_space_gib: f64,
+}
+
+/// 4×A100-80GB node (paper's main testbed for 30B/66B/175B).
+pub fn a100_4x() -> GpuProfile {
+    GpuProfile {
+        name: "4xA100-80G",
+        num_gpus: 4,
+        total_mem_gib: 320.0,
+        compute_scale: 1.0,
+        pcie_gib_s: 25.0,
+        swap_space_gib: 240.0,
+    }
+}
+
+/// Single A100-80GB (paper's 13B testbed).
+pub fn a100_1x() -> GpuProfile {
+    GpuProfile {
+        name: "1xA100-80G",
+        num_gpus: 1,
+        total_mem_gib: 80.0,
+        compute_scale: 1.0,
+        pcie_gib_s: 25.0,
+        swap_space_gib: 240.0,
+    }
+}
+
+/// NVIDIA A40 46GB (paper §6.4 robustness hardware).
+/// ~2.7× slower than A100 for transformer decode (FP16 tensor-core
+/// throughput 150 vs 312 TFLOPS, and lower memory bandwidth).
+pub fn a40_1x() -> GpuProfile {
+    GpuProfile {
+        name: "1xA40-46G",
+        num_gpus: 1,
+        total_mem_gib: 46.0,
+        compute_scale: 2.7,
+        pcie_gib_s: 25.0,
+        swap_space_gib: 240.0,
+    }
+}
+
+/// Look up a profile by name (CLI / config).
+pub fn gpu_by_name(name: &str) -> Option<GpuProfile> {
+    match name {
+        "a100-4x" | "4xA100-80G" => Some(a100_4x()),
+        "a100-1x" | "1xA100-80G" => Some(a100_1x()),
+        "a40" | "a40-1x" | "1xA40-46G" => Some(a40_1x()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup() {
+        assert_eq!(gpu_by_name("a100-4x").unwrap().num_gpus, 4);
+        assert_eq!(gpu_by_name("a40").unwrap().name, "1xA40-46G");
+        assert!(gpu_by_name("h100").is_none());
+    }
+
+    #[test]
+    fn a40_slower_than_a100() {
+        assert!(a40_1x().compute_scale > a100_1x().compute_scale);
+    }
+}

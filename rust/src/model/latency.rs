@@ -1,0 +1,226 @@
+//! Calibrated token-generation latency model (paper Appendix B).
+//!
+//! The paper models one decode iteration's latency as a function of batch
+//! size `B` (total context length is nearly perfectly correlated with B —
+//! Pearson r = 0.997 — so it can be dropped). We keep a small explicit
+//! context term so the Fig. 19 correlation experiment has a substrate to
+//! measure, and model:
+//!
+//! ```text
+//! decode(B, ctx)   = (base + per_seq·B + per_ctx·ctx) · compute_scale
+//! prefill(tokens)  = (pre_base + per_tok·tokens)      · compute_scale
+//! swap(tokens)     = kv_bytes(tokens) / pcie_bw + fixed launch cost
+//! recompute(tokens)= prefill(tokens)
+//! ```
+//!
+//! Decode is memory-bandwidth dominated (`base` = streaming the weights),
+//! with small per-sequence and per-context-token terms; prefill is
+//! compute-bound and linear in prompt tokens. Constants are calibrated so
+//! OPT-66B on 4×A100 reproduces the paper's observed per-request
+//! generation speed (≥6.6 tokens/s under load, Fig. 3b) and swap overhead
+//! ≈ one decode iteration (Appendix D). Absolute numbers are estimates;
+//! every experiment reports *relative* behaviour (DESIGN.md §1).
+
+use super::gpu::GpuProfile;
+use super::llm::{LlmProfile, GIB};
+
+/// Latency model for one (model, GPU) deployment.
+#[derive(Debug, Clone)]
+pub struct LatencyModel {
+    /// Decode iteration fixed cost, seconds (weight streaming + kernel
+    /// launches + TP collectives).
+    pub decode_base: f64,
+    /// Additional decode cost per sequence in the batch, seconds.
+    pub decode_per_seq: f64,
+    /// Additional decode cost per token of total batch context, seconds.
+    pub decode_per_ctx_token: f64,
+    /// Prefill fixed cost, seconds.
+    pub prefill_base: f64,
+    /// Prefill cost per prompt token, seconds.
+    pub prefill_per_token: f64,
+    /// Fixed cost of a swap operation (launch/synchronization), seconds.
+    pub swap_fixed: f64,
+    /// Host↔device bandwidth, bytes/second.
+    pub pcie_bytes_s: f64,
+    /// KV bytes per token (from the LLM profile).
+    pub kv_bytes_per_token: f64,
+}
+
+impl LatencyModel {
+    /// Build the calibrated model for a (model, GPU) pair.
+    pub fn for_deployment(llm: &LlmProfile, gpu: &GpuProfile) -> LatencyModel {
+        let s = gpu.compute_scale;
+        // Per-GPU weight bytes dominate the decode base (streamed from HBM
+        // each iteration at ~2 TB/s on A100), plus a TP-collective tax per
+        // extra GPU.
+        let weight_gib_per_gpu = llm.model_mem_gib / gpu.num_gpus as f64;
+        let hbm_gib_s = 1300.0; // effective A100 HBM bandwidth (decode MFU)
+        let tp_tax = 1.0 + 0.25 * (gpu.num_gpus as f64 - 1.0);
+        let decode_base = weight_gib_per_gpu / hbm_gib_s * tp_tax * s;
+        // Per-sequence decode cost: activation + sampling overhead.
+        // Calibrated so OPT-66B at its memory-saturated batch (~150 seqs,
+        // ~70k ctx tokens) decodes in ~150 ms/iter → ≥6.6 tok/s per
+        // request, the slack over user speeds that the paper's
+        // preemptive time-multiplexing exploits (Fig. 3b, §2.3).
+        let decode_per_seq = 0.18e-3 * (llm.params_b / 13.0).sqrt() * s;
+        // Per-context-token: KV streaming + attention at a lower
+        // effective bandwidth than dense weight streaming (gather-heavy
+        // paged access patterns).
+        let kv_hbm_gib_s = 1550.0;
+        let kv_per_gpu = llm.kv_bytes_per_token() / gpu.num_gpus as f64;
+        let decode_per_ctx_token = kv_per_gpu / (kv_hbm_gib_s * GIB) * tp_tax * s;
+        // Prefill: 2·P flops per token at ~45% MFU of 312 TFLOPS/GPU.
+        let flops_per_token = 2.0 * llm.params_b * 1e9;
+        let cluster_flops = 312e12 * 0.45 * gpu.num_gpus as f64;
+        let prefill_per_token = flops_per_token / cluster_flops * s;
+        LatencyModel {
+            decode_base,
+            decode_per_seq,
+            decode_per_ctx_token,
+            prefill_base: decode_base, // one pass over the weights too
+            prefill_per_token,
+            swap_fixed: 3e-3,
+            pcie_bytes_s: gpu.pcie_gib_s * GIB,
+            kv_bytes_per_token: llm.kv_bytes_per_token(),
+        }
+    }
+
+    /// Latency of one decode iteration for a batch of `batch_size`
+    /// sequences holding `total_ctx_tokens` tokens of context in total.
+    pub fn decode(&self, batch_size: usize, total_ctx_tokens: usize) -> f64 {
+        if batch_size == 0 {
+            return 0.0;
+        }
+        self.decode_base
+            + self.decode_per_seq * batch_size as f64
+            + self.decode_per_ctx_token * total_ctx_tokens as f64
+    }
+
+    /// Latency of prefilling `prompt_tokens` tokens (possibly several
+    /// requests batched into one prefill pass).
+    pub fn prefill(&self, prompt_tokens: usize) -> f64 {
+        if prompt_tokens == 0 {
+            return 0.0;
+        }
+        self.prefill_base + self.prefill_per_token * prompt_tokens as f64
+    }
+
+    /// Latency of swapping `tokens` of KV cache between GPU and host
+    /// (either direction — PCIe is symmetric).
+    pub fn swap(&self, tokens: usize) -> f64 {
+        if tokens == 0 {
+            return 0.0;
+        }
+        self.swap_fixed + tokens as f64 * self.kv_bytes_per_token / self.pcie_bytes_s
+    }
+
+    /// Latency of recomputing `tokens` of KV cache (= a prefill pass).
+    pub fn recompute(&self, tokens: usize) -> f64 {
+        self.prefill(tokens)
+    }
+
+    /// Steady-state per-request token generation speed at a given batch
+    /// size and average per-request context length.
+    pub fn tokens_per_sec(&self, batch_size: usize, avg_ctx: usize) -> f64 {
+        if batch_size == 0 {
+            return 0.0;
+        }
+        1.0 / self.decode(batch_size, batch_size * avg_ctx)
+    }
+
+    /// Largest batch size whose decode iteration is still faster than
+    /// `1/tds` — the `B_min` bound of the paper's Optimization #2
+    /// (a smaller batch would overserve and waste capacity). Uses the
+    /// given average context length per sequence. Returns at least 1.
+    pub fn max_batch_for_tds(&self, tds: f64, avg_ctx: usize) -> usize {
+        let budget = 1.0 / tds;
+        let per_seq = self.decode_per_seq + self.decode_per_ctx_token * avg_ctx as f64;
+        if self.decode_base >= budget {
+            return 1;
+        }
+        (((budget - self.decode_base) / per_seq).floor() as usize).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gpu::{a100_4x, a40_1x};
+    use crate::model::llm::{opt_13b, opt_66b};
+
+    fn m66() -> LatencyModel {
+        LatencyModel::for_deployment(&opt_66b(), &a100_4x())
+    }
+
+    #[test]
+    fn calibration_66b_matches_paper_speed() {
+        // Paper Fig. 3b: per-request generation speed 6.6–10 tok/s on
+        // OPT-66B / 4×A100 under realistic batches (avg ctx ≈ 500).
+        let m = m66();
+        let fast = m.tokens_per_sec(10, 500);
+        let loaded = m.tokens_per_sec(120, 500);
+        assert!(fast > 10.0, "lightly-loaded speed {fast}");
+        assert!((4.0..9.0).contains(&loaded), "loaded speed {loaded}");
+    }
+
+    #[test]
+    fn decode_monotone_in_batch_and_ctx() {
+        let m = m66();
+        assert!(m.decode(2, 100) > m.decode(1, 100));
+        assert!(m.decode(10, 5000) > m.decode(10, 100));
+        assert_eq!(m.decode(0, 0), 0.0);
+    }
+
+    #[test]
+    fn swap_close_to_one_iteration() {
+        // Appendix D: swapping one request's KV ≈ one decode iteration.
+        let m = m66();
+        let iter = m.decode(100, 50_000);
+        let swap = m.swap(500); // one avg request's context
+        assert!(swap < 3.0 * iter && swap > 0.05 * iter, "swap {swap}, iter {iter}");
+    }
+
+    #[test]
+    fn recompute_more_expensive_than_swap_for_long_ctx() {
+        let m = m66();
+        // Paper Fig. 20: recomputation overhead exceeds swap on this
+        // node configuration for substantial contexts.
+        assert!(m.recompute(1000) > m.swap(1000));
+    }
+
+    #[test]
+    fn prefill_linear() {
+        let m = m66();
+        let a = m.prefill(100);
+        let b = m.prefill(1100);
+        assert!((b - a - 1000.0 * m.prefill_per_token).abs() < 1e-12);
+    }
+
+    #[test]
+    fn a40_slower() {
+        let m13_a100 =
+            LatencyModel::for_deployment(&opt_13b(), &crate::model::gpu::a100_1x());
+        let m13_a40 = LatencyModel::for_deployment(&opt_13b(), &a40_1x());
+        assert!(m13_a40.decode(10, 1000) > 2.0 * m13_a100.decode(10, 1000));
+    }
+
+    #[test]
+    fn max_batch_for_tds_bounds() {
+        let m = m66();
+        // For reading speed 4.8 tok/s the serving budget is ~208ms/iter.
+        let b = m.max_batch_for_tds(4.8, 500);
+        assert!(b >= 1);
+        // The found B indeed meets the budget and B+1 does not.
+        assert!(m.decode(b, b * 500) <= 1.0 / 4.8 + 1e-9);
+        assert!(m.decode(b + 1, (b + 1) * 500) > 1.0 / 4.8 - 1e-3);
+        // A stricter TDS allows a smaller batch.
+        assert!(m.max_batch_for_tds(20.0, 500) <= b);
+    }
+
+    #[test]
+    fn max_batch_handles_impossible_tds() {
+        let m = m66();
+        // TDS faster than even batch-1 decode → returns 1.
+        assert_eq!(m.max_batch_for_tds(1000.0, 500), 1);
+    }
+}

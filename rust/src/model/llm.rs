@@ -1,0 +1,188 @@
+//! LLM model profiles: the OPT family used in the paper's evaluation
+//! (Table 3), plus the tiny OPT-style model served for real by the PJRT
+//! backend.
+//!
+//! The profile captures exactly what the scheduler and simulator consume:
+//! memory footprints (⇒ the KV token capacity `M` of Eq. 3) and the
+//! architectural scale factors behind the latency model.
+
+use super::gpu::GpuProfile;
+
+/// Bytes in one GiB.
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct LlmProfile {
+    pub name: &'static str,
+    pub num_layers: usize,
+    pub d_model: usize,
+    pub num_heads: usize,
+    /// Parameter count in billions (for flops estimates).
+    pub params_b: f64,
+    /// Weight memory in GiB as deployed (Table 3; 175B is INT8).
+    pub model_mem_gib: f64,
+    /// Bytes per KV-cache element (2 = fp16).
+    pub kv_bytes_per_el: f64,
+}
+
+impl LlmProfile {
+    /// KV-cache bytes consumed by one token of context:
+    /// 2 (K and V) × layers × d_model × element size.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.num_layers as f64 * self.d_model as f64 * self.kv_bytes_per_el
+    }
+
+    /// Token capacity `M` (Eq. 3): KV entries that fit in GPU memory.
+    ///
+    /// vLLM-style accounting: 90% of device memory is usable (the rest is
+    /// activations/workspace); weights are subtracted first.
+    pub fn kv_capacity_tokens(&self, gpu: &GpuProfile) -> usize {
+        let usable = gpu.total_mem_gib * 0.9 - self.model_mem_gib;
+        assert!(
+            usable > 0.0,
+            "{} does not fit on {} ({} GiB weights)",
+            self.name,
+            gpu.name,
+            self.model_mem_gib
+        );
+        (usable * GIB / self.kv_bytes_per_token()) as usize
+    }
+
+    /// CPU swap capacity in tokens (paper §6.1: 240 GB swap space).
+    pub fn swap_capacity_tokens(&self, gpu: &GpuProfile) -> usize {
+        (gpu.swap_space_gib * GIB / self.kv_bytes_per_token()) as usize
+    }
+}
+
+/// OPT-13B (40 layers, d=5120). Paper pairs it with 1×A100.
+pub fn opt_13b() -> LlmProfile {
+    LlmProfile {
+        name: "OPT-13B",
+        num_layers: 40,
+        d_model: 5120,
+        num_heads: 40,
+        params_b: 13.0,
+        model_mem_gib: 26.0,
+        kv_bytes_per_el: 2.0,
+    }
+}
+
+/// OPT-30B (48 layers, d=7168). 4×A100.
+pub fn opt_30b() -> LlmProfile {
+    LlmProfile {
+        name: "OPT-30B",
+        num_layers: 48,
+        d_model: 7168,
+        num_heads: 56,
+        params_b: 30.0,
+        model_mem_gib: 60.0,
+        kv_bytes_per_el: 2.0,
+    }
+}
+
+/// OPT-66B (64 layers, d=9216). 4×A100 — the paper's workhorse.
+pub fn opt_66b() -> LlmProfile {
+    LlmProfile {
+        name: "OPT-66B",
+        num_layers: 64,
+        d_model: 9216,
+        num_heads: 72,
+        params_b: 66.0,
+        model_mem_gib: 132.0,
+        kv_bytes_per_el: 2.0,
+    }
+}
+
+/// OPT-175B with INT8 weights (96 layers, d=12288). 4×A100.
+/// KV cache stays fp16.
+pub fn opt_175b() -> LlmProfile {
+    LlmProfile {
+        name: "OPT-175B",
+        num_layers: 96,
+        d_model: 12288,
+        num_heads: 96,
+        params_b: 175.0,
+        model_mem_gib: 180.0,
+        kv_bytes_per_el: 2.0,
+    }
+}
+
+/// The tiny OPT-style model actually compiled and served by the PJRT
+/// backend (python/compile/model.py). Memory numbers are real but small;
+/// `model_mem_gib` is approximate (fp32 weights).
+pub fn tiny_opt() -> LlmProfile {
+    LlmProfile {
+        name: "tiny-opt",
+        num_layers: 4,
+        d_model: 128,
+        num_heads: 8,
+        params_b: 0.003,
+        model_mem_gib: 0.05,
+        kv_bytes_per_el: 4.0, // fp32 on CPU
+    }
+}
+
+pub fn llm_by_name(name: &str) -> Option<LlmProfile> {
+    match name {
+        "opt-13b" | "OPT-13B" | "13b" => Some(opt_13b()),
+        "opt-30b" | "OPT-30B" | "30b" => Some(opt_30b()),
+        "opt-66b" | "OPT-66B" | "66b" => Some(opt_66b()),
+        "opt-175b" | "OPT-175B" | "175b" => Some(opt_175b()),
+        "tiny" | "tiny-opt" => Some(tiny_opt()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gpu::{a100_1x, a100_4x, a40_1x};
+
+    #[test]
+    fn kv_bytes_match_hand_calc() {
+        // OPT-66B: 2 * 64 * 9216 * 2 bytes = 2,359,296
+        assert_eq!(opt_66b().kv_bytes_per_token(), 2_359_296.0);
+        // OPT-13B: 2 * 40 * 5120 * 2 = 819,200
+        assert_eq!(opt_13b().kv_bytes_per_token(), 819_200.0);
+    }
+
+    #[test]
+    fn capacity_orders_match_paper() {
+        // 66B on 4×A100: ~70k tokens (Fig. 19 saturates near 60k ctx).
+        let m66 = opt_66b().kv_capacity_tokens(&a100_4x());
+        assert!((50_000..100_000).contains(&m66), "M66 = {m66}");
+        // 30B is far less memory-constrained (paper §6.2.1).
+        let m30 = opt_30b().kv_capacity_tokens(&a100_4x());
+        assert!(m30 > 2 * m66, "M30 = {m30}");
+        // 175B is the most constrained on the same node.
+        let m175 = opt_175b().kv_capacity_tokens(&a100_4x());
+        assert!(m175 < m66 / 2, "M175 = {m175}");
+        // 13B on one A100 ~ 60k.
+        let m13 = opt_13b().kv_capacity_tokens(&a100_1x());
+        assert!((40_000..90_000).contains(&m13), "M13 = {m13}");
+    }
+
+    #[test]
+    fn a40_is_tight_for_13b() {
+        let m = opt_13b().kv_capacity_tokens(&a40_1x());
+        assert!(m < 25_000, "M = {m}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversized_model_panics() {
+        opt_66b().kv_capacity_tokens(&a40_1x());
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(llm_by_name("66b").unwrap().name, "OPT-66B");
+        assert!(llm_by_name("gpt5").is_none());
+    }
+
+    #[test]
+    fn swap_capacity_positive() {
+        let s = opt_66b().swap_capacity_tokens(&a100_4x());
+        assert!(s > 100_000, "swap = {s}"); // 240 GiB / 2.25 MiB
+    }
+}

@@ -1,0 +1,11 @@
+//! Deployment profiles: GPU hardware, LLM architectures, and the
+//! calibrated latency model that stands in for real A100 nodes
+//! (DESIGN.md §1).
+
+pub mod gpu;
+pub mod latency;
+pub mod llm;
+
+pub use gpu::GpuProfile;
+pub use latency::LatencyModel;
+pub use llm::LlmProfile;

@@ -1,0 +1,141 @@
+//! Client-side token buffer (paper §5, Fig. 8).
+//!
+//! The server streams tokens as fast as it generates them (possibly in
+//! bursts, possibly pausing the request entirely while it is preempted).
+//! The client-side buffer withholds excess tokens and releases them at
+//! the user's expected TDS, so the user sees a smooth timeline that also
+//! absorbs network jitter. The server is aware of the buffer: a request
+//! with a deep buffer is a preemption candidate.
+
+use super::spec::QoeSpec;
+
+/// One buffered/displayed token with its timing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TokenTiming {
+    /// When the server delivered the token to the client (request-time s).
+    pub delivered_at: f64,
+    /// When the buffer released it for display (request-time s).
+    pub displayed_at: f64,
+}
+
+/// Paces token display at the expected TDS.
+#[derive(Debug, Clone)]
+pub struct TokenBuffer {
+    /// Minimum spacing between displayed tokens = 1 / TDS.
+    interval: f64,
+    timings: Vec<TokenTiming>,
+    /// Display time of the most recently scheduled token.
+    last_display: f64,
+}
+
+impl TokenBuffer {
+    pub fn new(spec: &QoeSpec) -> Self {
+        TokenBuffer { interval: 1.0 / spec.tds, timings: Vec::new(), last_display: f64::NEG_INFINITY }
+    }
+
+    /// Record a token arriving from the server at time `t`; returns its
+    /// scheduled display time.
+    pub fn push(&mut self, t: f64) -> f64 {
+        // Display immediately if the pacing interval since the previous
+        // token has already elapsed, else queue behind it.
+        let display = t.max(self.last_display + self.interval);
+        self.last_display = display;
+        self.timings.push(TokenTiming { delivered_at: t, displayed_at: display });
+        display
+    }
+
+    /// Number of tokens still undisplayed ("in the buffer") at time `t`.
+    pub fn depth_at(&self, t: f64) -> usize {
+        self.timings.iter().filter(|tt| tt.delivered_at <= t && tt.displayed_at > t).count()
+    }
+
+    /// All token timings recorded so far.
+    pub fn timings(&self) -> &[TokenTiming] {
+        &self.timings
+    }
+
+    /// Display timestamps only (the user-visible TDT).
+    pub fn display_times(&self) -> Vec<f64> {
+        self.timings.iter().map(|t| t.displayed_at).collect()
+    }
+
+    /// The buffer's current drain deadline: when it would run empty if the
+    /// server stopped sending now. The server can safely preempt the
+    /// request until roughly this time without hurting QoE.
+    pub fn drain_deadline(&self) -> f64 {
+        self.last_display
+    }
+
+    pub fn len(&self) -> usize {
+        self.timings.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.timings.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qoe::spec::QoeSpec;
+
+    fn buf() -> TokenBuffer {
+        TokenBuffer::new(&QoeSpec::new(1.0, 2.0)) // 0.5s interval
+    }
+
+    #[test]
+    fn paces_burst_delivery() {
+        let mut b = buf();
+        // 4 tokens all at t=1.0 → displayed at 1.0, 1.5, 2.0, 2.5
+        for _ in 0..4 {
+            b.push(1.0);
+        }
+        let d = b.display_times();
+        assert_eq!(d, vec![1.0, 1.5, 2.0, 2.5]);
+    }
+
+    #[test]
+    fn slow_delivery_passes_through() {
+        let mut b = buf();
+        assert_eq!(b.push(1.0), 1.0);
+        assert_eq!(b.push(3.0), 3.0); // gap larger than interval: immediate
+    }
+
+    #[test]
+    fn depth_tracks_buffered_tokens() {
+        let mut b = buf();
+        for _ in 0..4 {
+            b.push(1.0);
+        }
+        assert_eq!(b.depth_at(1.1), 3); // first displayed at 1.0
+        assert_eq!(b.depth_at(1.6), 2);
+        assert_eq!(b.depth_at(3.0), 0);
+    }
+
+    #[test]
+    fn absorbs_preemption_gap() {
+        // Burst of 6, then a 2.5s server pause, then more: the user-visible
+        // timeline stays smooth through the pause (Fig. 8's story).
+        let mut b = buf();
+        for _ in 0..6 {
+            b.push(1.0);
+        }
+        // displayed at 1.0..3.5; server silent until 3.5, then resumes
+        let d7 = b.push(3.5);
+        assert_eq!(d7, 4.0); // keeps exact pacing: no visible stall
+        let gaps: Vec<f64> = b
+            .display_times()
+            .windows(2)
+            .map(|w| w[1] - w[0])
+            .collect();
+        assert!(gaps.iter().all(|g| (g - 0.5).abs() < 1e-9));
+    }
+
+    #[test]
+    fn drain_deadline_advances() {
+        let mut b = buf();
+        b.push(1.0);
+        b.push(1.0);
+        assert_eq!(b.drain_deadline(), 1.5);
+    }
+}

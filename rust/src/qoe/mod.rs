@@ -1,0 +1,14 @@
+//! Quality-of-Experience for text streaming services (paper §3.1).
+//!
+//! - [`spec`]: the expected token delivery timeline (TTFT + TDS).
+//! - [`metric`]: the QoE metric of Eq. 1, computed incrementally, plus the
+//!   analytic projector used by the scheduler's `Q_serve`/`Q_wait`.
+//! - [`buffer`]: the client-side pacing token buffer (Fig. 8).
+
+pub mod buffer;
+pub mod metric;
+pub mod spec;
+
+pub use buffer::TokenBuffer;
+pub use metric::{project, qoe_at, qoe_finished, DigestState};
+pub use spec::{QoeSpec, ServiceClass};

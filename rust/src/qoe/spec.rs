@@ -1,0 +1,128 @@
+//! QoE requirement specification (paper §2.2, §3.1).
+//!
+//! A request's *expected token delivery timeline* (TDT) is defined by two
+//! numbers chosen by the application developer: the expected time to first
+//! token (TTFT) and the expected token delivery speed (TDS).
+
+/// Expected token delivery timeline of a request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QoeSpec {
+    /// Expected time-to-first-token in seconds.
+    pub ttft: f64,
+    /// Expected token delivery speed in tokens/second (digestion speed).
+    pub tds: f64,
+}
+
+impl QoeSpec {
+    pub fn new(ttft: f64, tds: f64) -> Self {
+        assert!(ttft >= 0.0, "ttft must be non-negative");
+        assert!(tds > 0.0, "tds must be positive");
+        QoeSpec { ttft, tds }
+    }
+
+    /// The expected cumulative-token curve T(t) = TDS·(t − TTFT), clamped
+    /// at 0 below TTFT and (optionally) at the response length `cap`.
+    pub fn expected_tokens_at(&self, t: f64, cap: Option<f64>) -> f64 {
+        let raw = (self.tds * (t - self.ttft)).max(0.0);
+        match cap {
+            Some(l) => raw.min(l),
+            None => raw,
+        }
+    }
+
+    /// Closed-form ∫₀ᵗ min(T(u), cap) du — the denominator of Eq. 1.
+    pub fn expected_area(&self, t: f64, cap: Option<f64>) -> f64 {
+        if t <= self.ttft {
+            return 0.0;
+        }
+        let ramp = t - self.ttft;
+        match cap {
+            Some(l) if l <= 0.0 => 0.0,
+            Some(l) => {
+                let t_cap = l / self.tds; // ramp duration until the cap
+                if ramp <= t_cap {
+                    0.5 * self.tds * ramp * ramp
+                } else {
+                    0.5 * self.tds * t_cap * t_cap + l * (ramp - t_cap)
+                }
+            }
+            None => 0.5 * self.tds * ramp * ramp,
+        }
+    }
+}
+
+/// Average adult reading speed expressed in tokens/s (paper §2.2):
+/// 200–236 WPM blended over age groups ≈ 4.8 tokens/s after the
+/// word→token conversion ratio of ChatGPT's tokenizer.
+pub const READING_TDS: f64 = 4.8;
+
+/// Average speaking speed in tokens/s (paper §2.2): ≈150 WPM English
+/// ≈ 3.3 tokens/s — the voice-chat service class.
+pub const SPEAKING_TDS: f64 = 3.3;
+
+/// Default expected TTFT used throughout the paper's evaluation (§6.1).
+pub const DEFAULT_TTFT: f64 = 1.0;
+
+/// Built-in service classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServiceClass {
+    /// Raw-text chat: TTFT 1s, TDS = reading speed.
+    TextChat,
+    /// Voice chat (TTS readout): TTFT 1s, TDS = speaking speed.
+    VoiceChat,
+}
+
+impl ServiceClass {
+    pub fn spec(&self) -> QoeSpec {
+        match self {
+            ServiceClass::TextChat => QoeSpec::new(DEFAULT_TTFT, READING_TDS),
+            ServiceClass::VoiceChat => QoeSpec::new(DEFAULT_TTFT, SPEAKING_TDS),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expected_tokens_piecewise() {
+        let s = QoeSpec::new(1.0, 4.0);
+        assert_eq!(s.expected_tokens_at(0.5, None), 0.0);
+        assert_eq!(s.expected_tokens_at(1.0, None), 0.0);
+        assert_eq!(s.expected_tokens_at(2.0, None), 4.0);
+        assert_eq!(s.expected_tokens_at(10.0, Some(8.0)), 8.0);
+    }
+
+    #[test]
+    fn expected_area_uncapped() {
+        let s = QoeSpec::new(1.0, 4.0);
+        // From t=1 to t=3: triangle 0.5*4*2^2 = 8
+        assert!((s.expected_area(3.0, None) - 8.0).abs() < 1e-12);
+        assert_eq!(s.expected_area(0.5, None), 0.0);
+    }
+
+    #[test]
+    fn expected_area_capped() {
+        let s = QoeSpec::new(1.0, 4.0);
+        // cap l=8 reached at t = 1 + 8/4 = 3. Area to t=5:
+        // triangle 0.5*4*2^2 = 8, then flat 8 * 2 = 16 → 24.
+        assert!((s.expected_area(5.0, Some(8.0)) - 24.0).abs() < 1e-12);
+        // before cap: same as uncapped
+        assert!((s.expected_area(2.0, Some(8.0)) - s.expected_area(2.0, None)).abs() < 1e-12);
+        // zero-length response → zero expected area
+        assert_eq!(s.expected_area(5.0, Some(0.0)), 0.0);
+    }
+
+    #[test]
+    fn service_classes() {
+        assert!(ServiceClass::TextChat.spec().tds > ServiceClass::VoiceChat.spec().tds);
+        assert_eq!(ServiceClass::TextChat.spec().ttft, 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_tds() {
+        QoeSpec::new(1.0, 0.0);
+    }
+}

@@ -1,0 +1,368 @@
+//! PJRT model runtime: load the AOT HLO artifacts and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. One
+//! compiled executable per (phase, batch size); the engine rounds a
+//! logical batch up to the nearest compiled size and pads.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Model dimensions parsed from artifacts/meta.json.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub max_seq: usize,
+    pub pad_token: u32,
+    pub eos_token: u32,
+    pub prefill_batches: Vec<usize>,
+    pub decode_batches: Vec<usize>,
+}
+
+impl ModelMeta {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing meta.json")?;
+        let usize_field = |k: &str| -> Result<usize> {
+            j.get(k)
+                .as_u64()
+                .map(|x| x as usize)
+                .with_context(|| format!("meta.json missing '{k}'"))
+        };
+        let batches = |k: &str| -> Result<Vec<usize>> {
+            Ok(j.get(k)
+                .as_arr()
+                .with_context(|| format!("meta.json missing '{k}'"))?
+                .iter()
+                .filter_map(|v| v.as_u64().map(|x| x as usize))
+                .collect())
+        };
+        Ok(ModelMeta {
+            vocab: usize_field("vocab")?,
+            d_model: usize_field("d_model")?,
+            n_layers: usize_field("n_layers")?,
+            n_heads: usize_field("n_heads")?,
+            d_head: usize_field("d_head")?,
+            max_seq: usize_field("max_seq")?,
+            pad_token: usize_field("pad_token")? as u32,
+            eos_token: usize_field("eos_token")? as u32,
+            prefill_batches: batches("prefill_batches")?,
+            decode_batches: batches("decode_batches")?,
+        })
+    }
+
+    /// Elements in one sequence's KV cache (per K or V): L·H·S·d.
+    pub fn kv_elems_per_seq(&self) -> usize {
+        self.n_layers * self.n_heads * self.max_seq * self.d_head
+    }
+}
+
+/// Result of a prefill call for one sequence.
+pub struct PrefillResult {
+    /// Logits at the last prompt position, [vocab].
+    pub logits: Vec<f32>,
+    /// K cache [L, H, S, d] flattened, this sequence only.
+    pub k_cache: Vec<f32>,
+    /// V cache likewise.
+    pub v_cache: Vec<f32>,
+}
+
+/// The loaded model: PJRT client + compiled executables.
+pub struct ModelRuntime {
+    pub meta: ModelMeta,
+    client: xla::PjRtClient,
+    prefill_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    decode_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+impl ModelRuntime {
+    /// Load every artifact in `dir` and compile.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let meta = ModelMeta::load(&dir.join("meta.json"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut prefill_exes = BTreeMap::new();
+        let mut decode_exes = BTreeMap::new();
+        for &b in &meta.prefill_batches {
+            let path = dir.join(format!("prefill_b{b}.hlo.txt"));
+            prefill_exes.insert(b, Self::compile(&client, &path)?);
+        }
+        for &b in &meta.decode_batches {
+            let path = dir.join(format!("decode_b{b}.hlo.txt"));
+            decode_exes.insert(b, Self::compile(&client, &path)?);
+        }
+        if prefill_exes.is_empty() || decode_exes.is_empty() {
+            bail!("no artifacts found in {}", dir.display());
+        }
+        Ok(ModelRuntime { meta, client, prefill_exes, decode_exes })
+    }
+
+    /// Default artifacts directory: $ANDES_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("ANDES_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))
+    }
+
+    /// Smallest compiled batch size ≥ n (or the largest available).
+    fn pick_batch(sizes: &BTreeMap<usize, xla::PjRtLoadedExecutable>, n: usize) -> usize {
+        for (&b, _) in sizes.iter() {
+            if b >= n {
+                return b;
+            }
+        }
+        *sizes.keys().last().unwrap()
+    }
+
+    /// Largest compiled decode batch (the engine chunks bigger batches).
+    pub fn max_decode_batch(&self) -> usize {
+        *self.decode_exes.keys().last().unwrap()
+    }
+
+    /// Prefill a set of prompts (each padded to max_seq internally).
+    /// Returns one PrefillResult per prompt, in order.
+    pub fn prefill(&self, prompts: &[Vec<u32>]) -> Result<Vec<PrefillResult>> {
+        let m = &self.meta;
+        let mut results = Vec::with_capacity(prompts.len());
+        let mut i = 0;
+        while i < prompts.len() {
+            let remaining = prompts.len() - i;
+            let b = Self::pick_batch(&self.prefill_exes, remaining);
+            let n = remaining.min(b);
+            let chunk = &prompts[i..i + n];
+            // Assemble padded token matrix [b, S] and lengths [b].
+            let mut tokens = vec![m.pad_token as i32; b * m.max_seq];
+            let mut lengths = vec![1i32; b];
+            for (row, p) in chunk.iter().enumerate() {
+                anyhow::ensure!(
+                    p.len() <= m.max_seq,
+                    "prompt of {} tokens exceeds max_seq {}",
+                    p.len(),
+                    m.max_seq
+                );
+                for (col, &t) in p.iter().enumerate() {
+                    tokens[row * m.max_seq + col] = t as i32;
+                }
+                lengths[row] = p.len().max(1) as i32;
+            }
+            let tokens_lit =
+                xla::Literal::vec1(&tokens).reshape(&[b as i64, m.max_seq as i64])?;
+            let lengths_lit = xla::Literal::vec1(&lengths);
+            let exe = &self.prefill_exes[&b];
+            let out = exe.execute::<xla::Literal>(&[tokens_lit, lengths_lit])?[0][0]
+                .to_literal_sync()?;
+            let parts = out.to_tuple()?;
+            anyhow::ensure!(parts.len() == 3, "prefill output arity {}", parts.len());
+            let logits: Vec<f32> = parts[0].to_vec()?;
+            let k_all: Vec<f32> = parts[1].to_vec()?;
+            let v_all: Vec<f32> = parts[2].to_vec()?;
+            for (row, _) in chunk.iter().enumerate() {
+                results.push(PrefillResult {
+                    logits: logits[row * m.vocab..(row + 1) * m.vocab].to_vec(),
+                    k_cache: extract_seq(&k_all, row, b, m),
+                    v_cache: extract_seq(&v_all, row, b, m),
+                });
+            }
+            i += n;
+        }
+        Ok(results)
+    }
+
+    /// Low-level decode step on pre-assembled batch literals.
+    ///
+    /// `tokens`/`positions` are padded to the executable batch size `b`
+    /// (which must be one of the compiled sizes); `k`/`v` have shape
+    /// [L, b, H, S, d]. Returns (flat logits [b·vocab], new k, new v) —
+    /// the returned KV literals can be fed straight back into the next
+    /// call, which is what lets the serving hot path skip the
+    /// host-side extract/insert copies entirely when batch membership
+    /// is stable (see EXPERIMENTS.md §Perf).
+    pub fn decode_literals(
+        &self,
+        tokens: &[i32],
+        positions: &[i32],
+        k: xla::Literal,
+        v: xla::Literal,
+        b: usize,
+    ) -> Result<(Vec<f32>, xla::Literal, xla::Literal)> {
+        anyhow::ensure!(tokens.len() == b && positions.len() == b, "padded batch mismatch");
+        let exe = self
+            .decode_exes
+            .get(&b)
+            .with_context(|| format!("no decode executable for batch {b}"))?;
+        let tokens_lit = xla::Literal::vec1(tokens);
+        let positions_lit = xla::Literal::vec1(positions);
+        let out = exe
+            .execute::<xla::Literal>(&[tokens_lit, positions_lit, k, v])?[0][0]
+            .to_literal_sync()?;
+        let mut parts = out.to_tuple()?;
+        anyhow::ensure!(parts.len() == 3, "decode output arity {}", parts.len());
+        let v_new = parts.pop().unwrap();
+        let k_new = parts.pop().unwrap();
+        let logits: Vec<f32> = parts[0].to_vec()?;
+        Ok((logits, k_new, v_new))
+    }
+
+    /// Compiled decode batch size for a logical batch of `n` (rounds up).
+    pub fn decode_exec_batch(&self, n: usize) -> usize {
+        Self::pick_batch(&self.decode_exes, n)
+    }
+
+    /// One decode step for a batch of sequences.
+    ///
+    /// `entries`: per sequence (last_token, position, &k_cache, &v_cache)
+    /// where the caches are per-sequence [L, H, S, d] flats.
+    /// Returns (logits[vocab], new_k, new_v) per sequence.
+    #[allow(clippy::type_complexity)]
+    pub fn decode(
+        &self,
+        entries: &[(u32, usize, &[f32], &[f32])],
+    ) -> Result<Vec<(Vec<f32>, Vec<f32>, Vec<f32>)>> {
+        let m = &self.meta;
+        let mut results = Vec::with_capacity(entries.len());
+        let mut i = 0;
+        while i < entries.len() {
+            let remaining = entries.len() - i;
+            let b = Self::pick_batch(&self.decode_exes, remaining);
+            let n = remaining.min(b);
+            let chunk = &entries[i..i + n];
+
+            let mut tokens = vec![m.pad_token as i32; b];
+            let mut positions = vec![0i32; b];
+            let per_seq = m.kv_elems_per_seq();
+            let mut k_batch = vec![0f32; b * per_seq];
+            let mut v_batch = vec![0f32; b * per_seq];
+            for (row, (tok, pos, k, v)) in chunk.iter().enumerate() {
+                tokens[row] = *tok as i32;
+                positions[row] = *pos as i32;
+                insert_seq(&mut k_batch, k, row, b, m);
+                insert_seq(&mut v_batch, v, row, b, m);
+            }
+            let kv_dims = [
+                m.n_layers as i64,
+                b as i64,
+                m.n_heads as i64,
+                m.max_seq as i64,
+                m.d_head as i64,
+            ];
+            let tokens_lit = xla::Literal::vec1(&tokens);
+            let positions_lit = xla::Literal::vec1(&positions);
+            let k_lit = xla::Literal::vec1(&k_batch).reshape(&kv_dims)?;
+            let v_lit = xla::Literal::vec1(&v_batch).reshape(&kv_dims)?;
+            let exe = &self.decode_exes[&b];
+            let out = exe
+                .execute::<xla::Literal>(&[tokens_lit, positions_lit, k_lit, v_lit])?[0][0]
+                .to_literal_sync()?;
+            let parts = out.to_tuple()?;
+            anyhow::ensure!(parts.len() == 3, "decode output arity {}", parts.len());
+            let logits: Vec<f32> = parts[0].to_vec()?;
+            let k_all: Vec<f32> = parts[1].to_vec()?;
+            let v_all: Vec<f32> = parts[2].to_vec()?;
+            for row in 0..n {
+                results.push((
+                    logits[row * m.vocab..(row + 1) * m.vocab].to_vec(),
+                    extract_seq(&k_all, row, b, m),
+                    extract_seq(&v_all, row, b, m),
+                ));
+            }
+            i += n;
+        }
+        Ok(results)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// Extract sequence `row`'s [L, H, S, d] slice from a batched
+/// [L, B, H, S, d] flat buffer.
+pub fn extract_seq(batched: &[f32], row: usize, b: usize, m: &ModelMeta) -> Vec<f32> {
+    let inner = m.n_heads * m.max_seq * m.d_head; // per (layer, seq)
+    let mut out = Vec::with_capacity(m.n_layers * inner);
+    for layer in 0..m.n_layers {
+        let start = (layer * b + row) * inner;
+        out.extend_from_slice(&batched[start..start + inner]);
+    }
+    out
+}
+
+/// Inverse of `extract_seq`.
+pub fn insert_seq(batched: &mut [f32], seq: &[f32], row: usize, b: usize, m: &ModelMeta) {
+    let inner = m.n_heads * m.max_seq * m.d_head;
+    for layer in 0..m.n_layers {
+        let dst = (layer * b + row) * inner;
+        let src = layer * inner;
+        batched[dst..dst + inner].copy_from_slice(&seq[src..src + inner]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            vocab: 8,
+            d_model: 4,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 2,
+            max_seq: 4,
+            pad_token: 0,
+            eos_token: 1,
+            prefill_batches: vec![1, 2],
+            decode_batches: vec![1, 2, 4],
+        }
+    }
+
+    #[test]
+    fn seq_roundtrip() {
+        let m = meta();
+        let b = 3;
+        let per_seq = m.kv_elems_per_seq();
+        let mut batched = vec![0f32; b * per_seq];
+        let seq: Vec<f32> = (0..per_seq).map(|x| x as f32).collect();
+        insert_seq(&mut batched, &seq, 1, b, &m);
+        let back = extract_seq(&batched, 1, b, &m);
+        assert_eq!(back, seq);
+        // Other rows untouched.
+        assert_eq!(extract_seq(&batched, 0, b, &m), vec![0f32; per_seq]);
+    }
+
+    #[test]
+    fn meta_parses_json() {
+        let dir = std::env::temp_dir().join("andes_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("meta.json");
+        std::fs::write(
+            &path,
+            r#"{"vocab":512,"d_model":128,"n_layers":4,"n_heads":8,"d_head":16,
+               "max_seq":256,"pad_token":0,"eos_token":1,
+               "prefill_batches":[1,2,4],"decode_batches":[1,2,4,8,16]}"#,
+        )
+        .unwrap();
+        let m = ModelMeta::load(&path).unwrap();
+        assert_eq!(m.vocab, 512);
+        assert_eq!(m.decode_batches, vec![1, 2, 4, 8, 16]);
+        assert_eq!(m.kv_elems_per_seq(), 4 * 8 * 256 * 16);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,11 @@
+//! Rust-side model runtime: PJRT artifact loading/execution, the byte
+//! tokenizer, and sampling. Python never runs on this path — the
+//! artifacts are self-contained HLO with baked weights.
+
+pub mod engine;
+pub mod sampler;
+pub mod tokenizer;
+
+pub use engine::{ModelMeta, ModelRuntime, PrefillResult};
+pub use sampler::{sample, Sampling};
+pub use tokenizer::ByteTokenizer;

@@ -1,0 +1,114 @@
+//! Token sampling from model logits.
+
+use crate::util::rng::Rng;
+
+/// Sampling strategy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Sampling {
+    /// Argmax.
+    Greedy,
+    /// Softmax sampling at the given temperature (> 0).
+    Temperature(f64),
+    /// Top-k truncation then temperature sampling.
+    TopK { k: usize, temperature: f64 },
+}
+
+/// Sample one token id from a logits row.
+pub fn sample(logits: &[f32], strategy: Sampling, rng: &mut Rng) -> u32 {
+    debug_assert!(!logits.is_empty());
+    match strategy {
+        Sampling::Greedy => argmax(logits) as u32,
+        Sampling::Temperature(t) => {
+            let probs = softmax_scaled(logits, t);
+            pick(&probs, rng) as u32
+        }
+        Sampling::TopK { k, temperature } => {
+            let k = k.max(1).min(logits.len());
+            // Indices of the top-k logits.
+            let mut idx: Vec<usize> = (0..logits.len()).collect();
+            idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+            idx.truncate(k);
+            let top: Vec<f32> = idx.iter().map(|&i| logits[i]).collect();
+            let probs = softmax_scaled(&top, temperature);
+            idx[pick(&probs, rng)] as u32
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn softmax_scaled(logits: &[f32], temperature: f64) -> Vec<f64> {
+    let t = temperature.max(1e-6);
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let exps: Vec<f64> = logits.iter().map(|&x| ((x as f64 - m) / t).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / z).collect()
+}
+
+fn pick(probs: &[f64], rng: &mut Rng) -> usize {
+    let mut x = rng.f64();
+    for (i, &p) in probs.iter().enumerate() {
+        x -= p;
+        if x < 0.0 {
+            return i;
+        }
+    }
+    probs.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let mut rng = Rng::new(1);
+        let logits = [0.1, 5.0, -2.0, 3.0];
+        assert_eq!(sample(&logits, Sampling::Greedy, &mut rng), 1);
+    }
+
+    #[test]
+    fn temperature_respects_distribution() {
+        let mut rng = Rng::new(2);
+        // One dominant logit: low temperature should almost always pick it.
+        let logits = [0.0, 10.0, 0.0];
+        let hits = (0..200)
+            .filter(|_| sample(&logits, Sampling::Temperature(0.5), &mut rng) == 1)
+            .count();
+        assert!(hits > 195, "hits {hits}");
+        // High temperature spreads out.
+        let spread = (0..2000)
+            .filter(|_| sample(&logits, Sampling::Temperature(50.0), &mut rng) != 1)
+            .count();
+        assert!(spread > 400, "spread {spread}");
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let mut rng = Rng::new(3);
+        let logits = [1.0, 2.0, 3.0, 4.0, 5.0];
+        for _ in 0..200 {
+            let t = sample(&logits, Sampling::TopK { k: 2, temperature: 1.0 }, &mut rng);
+            assert!(t == 4 || t == 3, "token {t}");
+        }
+    }
+
+    #[test]
+    fn deterministic_greedy() {
+        let mut a = Rng::new(4);
+        let mut b = Rng::new(5);
+        let logits = [0.5, 0.7, 0.3];
+        assert_eq!(
+            sample(&logits, Sampling::Greedy, &mut a),
+            sample(&logits, Sampling::Greedy, &mut b)
+        );
+    }
+}

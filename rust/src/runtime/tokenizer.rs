@@ -1,0 +1,84 @@
+//! Byte-level tokenizer for the tiny-OPT model.
+//!
+//! Token ids: 0 = PAD, 1 = EOS, 2..=257 = raw bytes, the rest of the
+//! 512-entry vocabulary is unused headroom. Trivially reversible, no
+//! merges — the model is a random-weight demo; the serving stack around
+//! it is what's under test.
+
+/// Reserved ids (must match python/compile/model.py ModelConfig).
+pub const PAD_TOKEN: u32 = 0;
+pub const EOS_TOKEN: u32 = 1;
+const BYTE_BASE: u32 = 2;
+
+/// Byte-level tokenizer.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn new() -> Self {
+        ByteTokenizer
+    }
+
+    /// Encode text to token ids.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.bytes().map(|b| b as u32 + BYTE_BASE).collect()
+    }
+
+    /// Decode token ids back to text; PAD/EOS and out-of-range ids are
+    /// skipped, invalid UTF-8 is replaced.
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .filter_map(|&t| {
+                if (BYTE_BASE..BYTE_BASE + 256).contains(&t) {
+                    Some((t - BYTE_BASE) as u8)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Decode a single token (streaming); empty for specials.
+    pub fn decode_one(&self, token: u32) -> String {
+        self.decode(&[token])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer::new();
+        let ids = t.encode("hello, world!");
+        assert_eq!(ids.len(), 13);
+        assert_eq!(t.decode(&ids), "hello, world!");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = ByteTokenizer::new();
+        let s = "héllo 世界 😀";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn specials_are_skipped() {
+        let t = ByteTokenizer::new();
+        let mut ids = t.encode("ab");
+        ids.push(EOS_TOKEN);
+        ids.insert(0, PAD_TOKEN);
+        assert_eq!(t.decode(&ids), "ab");
+    }
+
+    #[test]
+    fn ids_in_vocab_range() {
+        let t = ByteTokenizer::new();
+        for id in t.encode("\u{0}\u{7f}ÿ") {
+            assert!(id >= 2 && id < 512);
+        }
+    }
+}

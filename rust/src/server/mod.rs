@@ -1,0 +1,269 @@
+//! Text-streaming service frontend.
+//!
+//! A std-net TCP server speaking newline-delimited JSON (no tokio in the
+//! offline environment; threads + channels instead):
+//!
+//! ```text
+//! → {"prompt": "...", "max_tokens": 64, "ttft": 1.0, "tds": 4.8}
+//! ← {"event":"token","text":"...","index":0}           (streamed)
+//! ← {"event":"done","tokens":42,"ttft":0.18,"qoe":1.0}
+//! ```
+//!
+//! Architecture: one engine thread owns the PJRT model (the xla client
+//! is not Send) and runs the continuous-batching loop; connection
+//! threads submit requests through an mpsc channel and receive token
+//! events through per-request channels. The client-side token buffer
+//! (paper §5) lives in [`crate::qoe::buffer`] and is exercised by the
+//! example clients.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::backend::pjrt::PjrtBackend;
+use crate::backend::WallClock;
+use crate::coordinator::engine::{Engine, EngineConfig};
+use crate::coordinator::request::RequestId;
+use crate::coordinator::sched::andes::AndesScheduler;
+use crate::model::gpu::a100_1x;
+use crate::model::latency::LatencyModel;
+use crate::model::llm::tiny_opt;
+use crate::qoe::spec::QoeSpec;
+use crate::runtime::engine::ModelRuntime;
+use crate::runtime::tokenizer::ByteTokenizer;
+use crate::runtime::Sampling;
+use crate::util::json::Json;
+use crate::workload::RequestSpec;
+
+/// A request submitted by a connection thread.
+struct Submission {
+    prompt: Vec<u32>,
+    max_tokens: usize,
+    qoe: QoeSpec,
+    /// Channel for token events back to the connection.
+    events: Sender<Event>,
+}
+
+/// Streamed event.
+#[derive(Debug, Clone)]
+pub enum Event {
+    Token { index: usize, token: u32 },
+    Done { tokens: usize, ttft: f64, qoe: f64 },
+}
+
+/// Server configuration.
+pub struct ServerConfig {
+    pub addr: String,
+    pub kv_capacity_tokens: usize,
+    pub max_output_tokens: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:7878".into(),
+            kv_capacity_tokens: 2048,
+            max_output_tokens: 128,
+        }
+    }
+}
+
+/// Engine thread: owns the model, pulls submissions, streams events.
+fn engine_loop(cfg: ServerConfig, rx: Receiver<Submission>) -> Result<()> {
+    let runtime = ModelRuntime::load(&ModelRuntime::default_dir())
+        .context("loading artifacts (run `make artifacts`)")?;
+    let backend = PjrtBackend::new(runtime, Sampling::TopK { k: 40, temperature: 1.0 }, 1234);
+    let engine_cfg = EngineConfig {
+        kv_capacity_tokens: cfg.kv_capacity_tokens,
+        swap_capacity_tokens: cfg.kv_capacity_tokens * 4,
+        max_output_tokens: cfg.max_output_tokens,
+        ..EngineConfig::default()
+    };
+    let latency = LatencyModel::for_deployment(&tiny_opt(), &a100_1x());
+    let mut engine = Engine::new(
+        engine_cfg,
+        backend,
+        WallClock::new(),
+        Box::new(AndesScheduler::with_defaults()),
+        latency,
+    );
+
+    let mut sinks: HashMap<RequestId, Sender<Event>> = HashMap::new();
+    let mut delivered: HashMap<RequestId, usize> = HashMap::new();
+    let mut reported = 0usize; // finished requests already notified
+    loop {
+        // Drain new submissions (block briefly when idle).
+        let first = if engine.has_work() {
+            rx.try_recv().ok()
+        } else {
+            match rx.recv_timeout(std::time::Duration::from_millis(50)) {
+                Ok(s) => Some(s),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return Ok(()),
+            }
+        };
+        let mut incoming = Vec::new();
+        if let Some(s) = first {
+            incoming.push(s);
+        }
+        while let Ok(s) = rx.try_recv() {
+            incoming.push(s);
+        }
+        for sub in incoming {
+            let spec = RequestSpec {
+                id: 0, // engine assigns
+                arrival: 0.0,
+                prompt_tokens: sub.prompt.len(),
+                output_tokens: sub.max_tokens,
+                qoe: sub.qoe,
+            };
+            match engine.submit_with_prompt(spec, sub.prompt) {
+                Ok(id) => {
+                    sinks.insert(id, sub.events);
+                    delivered.insert(id, 0);
+                }
+                Err(e) => {
+                    let _ = sub.events.send(Event::Done { tokens: 0, ttft: f64::NAN, qoe: 0.0 });
+                    log::warn!("rejected request: {e:#}");
+                }
+            }
+        }
+
+        if engine.has_work() {
+            engine.tick()?;
+            // Push newly generated tokens to their sinks.
+            let ids: Vec<RequestId> = sinks.keys().copied().collect();
+            for id in ids {
+                let req = &engine.requests()[id];
+                let have = req.generated;
+                let sent = delivered.get_mut(&id).unwrap();
+                if have > *sent {
+                    if let Some(tokens) = engine.backend().generated(id) {
+                        for (idx, &tok) in tokens.iter().enumerate().take(have).skip(*sent) {
+                            let _ = sinks[&id].send(Event::Token { index: idx, token: tok });
+                        }
+                    }
+                    *sent = have;
+                }
+            }
+            // Report finishes.
+            let metrics = engine.metrics();
+            while reported < metrics.requests.len() {
+                let r = &metrics.requests[reported];
+                if let Some(sink) = sinks.remove(&r.id) {
+                    let _ = sink.send(Event::Done {
+                        tokens: r.output_tokens,
+                        ttft: r.ttft,
+                        qoe: r.final_qoe,
+                    });
+                }
+                delivered.remove(&r.id);
+                reported += 1;
+            }
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, tx: Sender<Submission>) {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+    let tokenizer = ByteTokenizer::new();
+    let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) if !l.trim().is_empty() => l,
+            Ok(_) => continue,
+            Err(_) => break,
+        };
+        let req = match Json::parse(&line) {
+            Ok(j) => j,
+            Err(e) => {
+                let _ = writeln!(writer, r#"{{"event":"error","message":"bad json: {e}"}}"#);
+                continue;
+            }
+        };
+        let prompt_text = req.get("prompt").as_str().unwrap_or("").to_string();
+        if prompt_text.is_empty() {
+            let _ = writeln!(writer, r#"{{"event":"error","message":"missing prompt"}}"#);
+            continue;
+        }
+        let max_tokens = req.get("max_tokens").as_u64().unwrap_or(64) as usize;
+        let ttft = req.get("ttft").as_f64().unwrap_or(1.0);
+        let tds = req.get("tds").as_f64().unwrap_or(4.8);
+        let (etx, erx) = channel();
+        if tx
+            .send(Submission {
+                prompt: tokenizer.encode(&prompt_text),
+                max_tokens,
+                qoe: QoeSpec::new(ttft.max(0.0), tds.max(0.1)),
+                events: etx,
+            })
+            .is_err()
+        {
+            let _ = writeln!(writer, r#"{{"event":"error","message":"engine gone"}}"#);
+            break;
+        }
+        // Stream events for this request until Done.
+        for ev in erx {
+            let out = match ev {
+                Event::Token { index, token } => {
+                    let text = tokenizer.decode_one(token);
+                    Json::obj(vec![
+                        ("event", "token".into()),
+                        ("index", (index as u64).into()),
+                        ("text", text.into()),
+                    ])
+                }
+                Event::Done { tokens, ttft, qoe } => {
+                    let j = Json::obj(vec![
+                        ("event", "done".into()),
+                        ("tokens", (tokens as u64).into()),
+                        ("ttft", ttft.into()),
+                        ("qoe", qoe.into()),
+                    ]);
+                    let _ = writeln!(writer, "{j}");
+                    break;
+                }
+            };
+            if writeln!(writer, "{out}").is_err() {
+                break;
+            }
+        }
+    }
+    log::info!("connection {peer} closed");
+}
+
+/// Run the server (blocks). `ready` is signalled with the bound address
+/// once listening — used by tests and examples.
+pub fn serve(cfg: ServerConfig, ready: Option<Sender<String>>) -> Result<()> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("binding {}", cfg.addr))?;
+    let local = listener.local_addr()?.to_string();
+    log::info!("andes serving on {local}");
+    if let Some(r) = ready {
+        let _ = r.send(local);
+    }
+    let (tx, rx) = channel::<Submission>();
+    let engine_handle = std::thread::spawn(move || {
+        if let Err(e) = engine_loop(cfg, rx) {
+            eprintln!("engine thread error: {e:#}");
+        }
+    });
+    let tx = Arc::new(tx);
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => {
+                let tx = Sender::clone(&tx);
+                std::thread::spawn(move || handle_conn(s, tx));
+            }
+            Err(e) => log::warn!("accept error: {e}"),
+        }
+    }
+    drop(tx);
+    let _ = engine_handle.join();
+    Ok(())
+}

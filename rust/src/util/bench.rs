@@ -1,0 +1,171 @@
+//! Criterion-style micro-benchmark harness (criterion is unavailable
+//! offline). Provides warmup, adaptive iteration count targeting a fixed
+//! measurement window, and mean/p50/p99 reporting.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12} {:>12}  ({} iters)",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p99),
+            fmt_dur(self.min),
+            self.iters,
+        )
+    }
+}
+
+pub fn header() -> String {
+    format!(
+        "{:<44} {:>12} {:>12} {:>12} {:>12}",
+        "benchmark", "mean", "p50", "p99", "min"
+    )
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Benchmark runner with a fixed time budget per case.
+pub struct Bencher {
+    /// Target total measurement time per case.
+    pub measure_time: Duration,
+    /// Warmup time before measuring.
+    pub warmup_time: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            measure_time: Duration::from_millis(700),
+            warmup_time: Duration::from_millis(150),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn quick() -> Self {
+        Bencher {
+            measure_time: Duration::from_millis(150),
+            warmup_time: Duration::from_millis(30),
+            results: Vec::new(),
+        }
+    }
+
+    /// Run `f` repeatedly, measuring per-call latency. The closure's return
+    /// value is passed through `std::hint::black_box` to defeat DCE.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup and calibration: figure out per-call cost.
+        let warm_start = Instant::now();
+        let mut calib_iters = 0u64;
+        while warm_start.elapsed() < self.warmup_time || calib_iters == 0 {
+            std::hint::black_box(f());
+            calib_iters += 1;
+            if calib_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_call = warm_start.elapsed().as_secs_f64() / calib_iters as f64;
+
+        // Choose batch size so each sample costs ~ measure_time/100, with
+        // at least 30 samples.
+        let target_samples = 100u64;
+        let budget = self.measure_time.as_secs_f64();
+        let batch = ((budget / target_samples as f64 / per_call.max(1e-9)).floor() as u64).max(1);
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed().as_secs_f64() < budget || samples.len() < 30 {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64() / batch as f64);
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: batch * samples.len() as u64,
+            mean: Duration::from_secs_f64(stats::mean(&samples)),
+            p50: Duration::from_secs_f64(stats::percentile_sorted(&sorted, 50.0)),
+            p99: Duration::from_secs_f64(stats::percentile_sorted(&sorted, 99.0)),
+            min: Duration::from_secs_f64(sorted[0]),
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher {
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(2),
+            results: Vec::new(),
+        };
+        let r = b.bench("noop-ish", || {
+            // black_box on the bound keeps release builds from
+            // const-folding the whole loop away.
+            let n = std::hint::black_box(100u64);
+            let mut acc = 0u64;
+            for i in 0..n {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.p99 >= r.p50 || r.p99.as_nanos() + 50 >= r.p50.as_nanos());
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert_eq!(fmt_dur(Duration::from_micros(1500)), "1.50 ms");
+        assert!(fmt_dur(Duration::from_secs(2)).contains('s'));
+    }
+}

@@ -1,0 +1,197 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `program <subcommand> [--flag] [--key value] [--key=value]
+//! [positional...]`. Unknown flags are errors; `--help` renders generated
+//! usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: flag/option map plus positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Declarative option spec used for validation and --help output.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+impl OptSpec {
+    pub fn value(name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        OptSpec { name, takes_value: true, default, help }
+    }
+    pub fn flag(name: &'static str, help: &'static str) -> Self {
+        OptSpec { name, takes_value: false, default: None, help }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    Invalid(String, String),
+    #[error("help requested")]
+    Help,
+}
+
+impl Args {
+    /// Parse raw argv (without the program/subcommand names) against specs.
+    pub fn parse(raw: &[String], specs: &[OptSpec]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for s in specs.iter().filter(|s| s.takes_value) {
+            if let Some(d) = s.default {
+                args.opts.insert(s.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError::Help);
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| CliError::Unknown(name.clone()))?;
+                if spec.takes_value {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i).cloned().ok_or_else(|| CliError::MissingValue(name.clone()))?
+                        }
+                    };
+                    args.opts.insert(name, v);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(CliError::Invalid(name, "flag takes no value".into()));
+                    }
+                    args.flags.push(name);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        self.opts
+            .get(name)
+            .map(|v| v.parse::<f64>().map_err(|_| CliError::Invalid(name.into(), v.clone())))
+            .transpose()
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        self.opts
+            .get(name)
+            .map(|v| v.parse::<usize>().map_err(|_| CliError::Invalid(name.into(), v.clone())))
+            .transpose()
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, CliError> {
+        self.opts
+            .get(name)
+            .map(|v| v.parse::<u64>().map_err(|_| CliError::Invalid(name.into(), v.clone())))
+            .transpose()
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render a usage block for a subcommand.
+pub fn usage(cmd: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{about}\n\nUsage: andes {cmd} [options]\n\nOptions:\n");
+    for spec in specs {
+        let lhs = if spec.takes_value {
+            format!("--{} <v>", spec.name)
+        } else {
+            format!("--{}", spec.name)
+        };
+        let default = spec.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+        s.push_str(&format!("  {lhs:<26} {}{}\n", spec.help, default));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec::value("rate", Some("2.0"), "request rate"),
+            OptSpec::value("model", None, "model profile"),
+            OptSpec::flag("verbose", "chatty output"),
+        ]
+    }
+
+    #[test]
+    fn defaults_and_override() {
+        let a = Args::parse(&sv(&[]), &specs()).unwrap();
+        assert_eq!(a.get("rate"), Some("2.0"));
+        assert_eq!(a.get("model"), None);
+        let a = Args::parse(&sv(&["--rate", "3.3"]), &specs()).unwrap();
+        assert_eq!(a.get_f64("rate").unwrap(), Some(3.3));
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = Args::parse(&sv(&["--rate=4.5", "--verbose", "pos1"]), &specs()).unwrap();
+        assert_eq!(a.get("rate"), Some("4.5"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(matches!(
+            Args::parse(&sv(&["--nope"]), &specs()),
+            Err(CliError::Unknown(_))
+        ));
+        assert!(matches!(
+            Args::parse(&sv(&["--model"]), &specs()),
+            Err(CliError::MissingValue(_))
+        ));
+        assert!(matches!(Args::parse(&sv(&["--help"]), &specs()), Err(CliError::Help)));
+        let a = Args::parse(&sv(&["--rate", "abc"]), &specs()).unwrap();
+        assert!(a.get_f64("rate").is_err());
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = usage("serve", "Run the server", &specs());
+        assert!(u.contains("--rate"));
+        assert!(u.contains("[default: 2.0]"));
+    }
+}

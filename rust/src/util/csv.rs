@@ -1,0 +1,128 @@
+//! CSV writer for experiment outputs (one file per paper figure/table).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// In-memory CSV table with a fixed header row.
+#[derive(Debug, Clone)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+fn escape(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+/// Format a float compactly: integers render without decimals, otherwise
+/// up to 6 significant decimals with trailing zeros trimmed.
+pub fn fmt_f64(x: f64) -> String {
+    if x.is_nan() {
+        return "nan".into();
+    }
+    if x.fract() == 0.0 && x.abs() < 9e15 {
+        return format!("{}", x as i64);
+    }
+    let s = format!("{x:.6}");
+    let s = s.trim_end_matches('0').trim_end_matches('.');
+    s.to_string()
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Csv { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row of pre-formatted fields. Panics if arity mismatches.
+    pub fn row(&mut self, fields: &[String]) {
+        assert_eq!(fields.len(), self.header.len(), "csv row arity mismatch");
+        self.rows.push(fields.to_vec());
+    }
+
+    /// Append a row of f64s.
+    pub fn row_f64(&mut self, fields: &[f64]) {
+        let v: Vec<String> = fields.iter().map(|x| fmt_f64(*x)).collect();
+        self.row(&v);
+    }
+
+    /// Append a row with a leading label then f64s.
+    pub fn row_labeled(&mut self, label: &str, fields: &[f64]) {
+        let mut v = vec![label.to_string()];
+        v.extend(fields.iter().map(|x| fmt_f64(*x)));
+        self.row(&v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{}", self.header.iter().map(|h| escape(h)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(s, "{}", row.iter().map(|f| escape(f)).collect::<Vec<_>>().join(","));
+        }
+        s
+    }
+
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_rows() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row_f64(&[1.0, 2.5]);
+        c.row_labeled("x", &[3.0]);
+        let s = c.to_string();
+        assert_eq!(s, "a,b\n1,2.5\nx,3\n");
+    }
+
+    #[test]
+    fn escaping() {
+        let mut c = Csv::new(&["name", "v"]);
+        c.row(&["has,comma".to_string(), "has\"quote".to_string()]);
+        assert_eq!(c.to_string(), "name,v\n\"has,comma\",\"has\"\"quote\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["only-one".to_string()]);
+    }
+
+    #[test]
+    fn fmt_compact() {
+        assert_eq!(fmt_f64(3.0), "3");
+        assert_eq!(fmt_f64(0.125), "0.125");
+        assert_eq!(fmt_f64(1.0 / 3.0), "0.333333");
+        assert_eq!(fmt_f64(f64::NAN), "nan");
+    }
+
+    #[test]
+    fn writes_file() {
+        let dir = std::env::temp_dir().join("andes_csv_test");
+        let path = dir.join("t.csv");
+        let mut c = Csv::new(&["x"]);
+        c.row_f64(&[1.0]);
+        c.write(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "x\n1\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,13 @@
+//! In-tree substrates: the offline build environment provides no crates
+//! beyond the `xla` closure, so PRNG/distributions, JSON, CLI parsing,
+//! CSV, plotting, micro-benchmarking, and property testing are implemented
+//! here (see DESIGN.md §1, §3).
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod plot;
+pub mod rng;
+pub mod stats;
+pub mod testing;

@@ -1,0 +1,183 @@
+//! ASCII plotting for terminal rendering of the paper's figures.
+//!
+//! Not a substitute for the CSVs (which external tooling can plot), but
+//! lets `andes exp <id>` show the *shape* of each figure inline.
+
+/// A named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str, points: Vec<(f64, f64)>) -> Self {
+        Series { name: name.to_string(), points }
+    }
+}
+
+const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+
+/// Render series on a fixed-size character grid with axes and a legend.
+pub fn line_plot(title: &str, xlabel: &str, ylabel: &str, series: &[Series]) -> String {
+    render(title, xlabel, ylabel, series, 64, 20)
+}
+
+/// Render with explicit grid dimensions.
+pub fn render(
+    title: &str,
+    xlabel: &str,
+    ylabel: &str,
+    series: &[Series],
+    width: usize,
+    height: usize,
+) -> String {
+    let all: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.points.iter().copied())
+        .filter(|(x, y)| x.is_finite() && y.is_finite())
+        .collect();
+    if all.is_empty() {
+        return format!("{title}\n  (no data)\n");
+    }
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for (x, y) in &all {
+        xmin = xmin.min(*x);
+        xmax = xmax.max(*x);
+        ymin = ymin.min(*y);
+        ymax = ymax.max(*y);
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    // Pad y range slightly so extremes are visible.
+    let ypad = (ymax - ymin) * 0.05;
+    let (ymin, ymax) = (ymin - ypad, ymax + ypad);
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        // Plot points, then connect consecutive points with interpolation.
+        let to_cell = |x: f64, y: f64| -> (usize, usize) {
+            let cx = ((x - xmin) / (xmax - xmin) * (width - 1) as f64).round() as usize;
+            let cy = ((y - ymin) / (ymax - ymin) * (height - 1) as f64).round() as usize;
+            (cx.min(width - 1), height - 1 - cy.min(height - 1))
+        };
+        let pts: Vec<(f64, f64)> =
+            s.points.iter().copied().filter(|(x, y)| x.is_finite() && y.is_finite()).collect();
+        for w in pts.windows(2) {
+            let (x0, y0) = w[0];
+            let (x1, y1) = w[1];
+            let steps = (width * 2).max(2);
+            for k in 0..=steps {
+                let t = k as f64 / steps as f64;
+                let (cx, cy) = to_cell(x0 + (x1 - x0) * t, y0 + (y1 - y0) * t);
+                if grid[cy][cx] == ' ' {
+                    grid[cy][cx] = '.';
+                }
+            }
+        }
+        for &(x, y) in &pts {
+            let (cx, cy) = to_cell(x, y);
+            grid[cy][cx] = mark;
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!("  {title}\n"));
+    let ylab_top = format!("{ymax:.3}");
+    let ylab_bot = format!("{ymin:.3}");
+    let lw = ylab_top.len().max(ylab_bot.len());
+    for (r, row) in grid.iter().enumerate() {
+        let label = if r == 0 {
+            format!("{ylab_top:>lw$}")
+        } else if r == height - 1 {
+            format!("{ylab_bot:>lw$}")
+        } else if r == height / 2 {
+            let mid = format!("{:.3}", (ymin + ymax) / 2.0);
+            format!("{mid:>lw$}")
+        } else {
+            " ".repeat(lw)
+        };
+        out.push_str(&format!("{label} |{}\n", row.iter().collect::<String>()));
+    }
+    out.push_str(&format!("{} +{}\n", " ".repeat(lw), "-".repeat(width)));
+    out.push_str(&format!(
+        "{}  {:<w2$}{:>w3$}\n",
+        " ".repeat(lw),
+        format!("{xmin:.2}"),
+        format!("{xmax:.2}  ({xlabel})"),
+        w2 = width / 2,
+        w3 = width / 2,
+    ));
+    out.push_str(&format!("  y: {ylabel}   legend: "));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("{}={} ", MARKS[si % MARKS.len()], s.name));
+    }
+    out.push('\n');
+    out
+}
+
+/// Simple horizontal bar chart for categorical comparisons.
+pub fn bar_chart(title: &str, items: &[(String, f64)]) -> String {
+    let mut out = format!("  {title}\n");
+    let max = items.iter().map(|(_, v)| *v).fold(f64::NEG_INFINITY, f64::max).max(1e-12);
+    let lw = items.iter().map(|(k, _)| k.len()).max().unwrap_or(0);
+    for (k, v) in items {
+        let n = ((v / max) * 40.0).round().max(0.0) as usize;
+        out.push_str(&format!("  {k:>lw$} | {}{} {v:.4}\n", "█".repeat(n), if n == 0 { "·" } else { "" }));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_nonempty() {
+        let s = line_plot(
+            "test",
+            "x",
+            "y",
+            &[Series::new("a", vec![(0.0, 0.0), (1.0, 1.0), (2.0, 4.0)])],
+        );
+        assert!(s.contains("test"));
+        assert!(s.contains('*'));
+        assert!(s.contains("legend"));
+    }
+
+    #[test]
+    fn empty_series_ok() {
+        let s = line_plot("empty", "x", "y", &[Series::new("a", vec![])]);
+        assert!(s.contains("no data"));
+    }
+
+    #[test]
+    fn constant_series_ok() {
+        let s = line_plot("const", "x", "y", &[Series::new("a", vec![(1.0, 5.0), (2.0, 5.0)])]);
+        assert!(s.contains('*'));
+    }
+
+    #[test]
+    fn nan_points_skipped() {
+        let s = line_plot(
+            "nan",
+            "x",
+            "y",
+            &[Series::new("a", vec![(0.0, f64::NAN), (1.0, 2.0), (2.0, 3.0)])],
+        );
+        assert!(s.contains('*'));
+    }
+
+    #[test]
+    fn bars() {
+        let s = bar_chart("b", &[("one".into(), 1.0), ("two".into(), 2.0)]);
+        assert!(s.contains("one"));
+        assert!(s.contains('█'));
+    }
+}

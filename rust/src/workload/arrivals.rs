@@ -1,0 +1,100 @@
+//! Request arrival processes (paper §6.1, §6.4).
+//!
+//! - Poisson arrivals at a configurable rate (the main evaluation).
+//! - Gamma-renewal arrivals with coefficient of variation 3 (the bursty
+//!   robustness workload of Fig. 15b): inter-arrival ~ Gamma(k=1/CV²,
+//!   θ chosen so the mean is 1/rate).
+
+use crate::util::rng::Rng;
+
+/// An arrival process generating monotone timestamps (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Poisson process with rate `req/s` (exponential inter-arrivals).
+    Poisson { rate: f64 },
+    /// Gamma renewal process with rate `req/s` and coefficient of
+    /// variation `cv` (cv = 1 degenerates to Poisson).
+    Gamma { rate: f64, cv: f64 },
+}
+
+impl ArrivalProcess {
+    pub fn rate(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate } => *rate,
+            ArrivalProcess::Gamma { rate, .. } => *rate,
+        }
+    }
+
+    /// Sample the next inter-arrival gap.
+    pub fn next_gap(&self, rng: &mut Rng) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate } => rng.exponential(*rate),
+            ArrivalProcess::Gamma { rate, cv } => {
+                // Gamma(k, θ): mean kθ = 1/rate, CV = 1/√k ⇒ k = 1/cv².
+                let k = 1.0 / (cv * cv);
+                let theta = 1.0 / (rate * k);
+                rng.gamma(k, theta)
+            }
+        }
+    }
+
+    /// Generate `n` absolute arrival timestamps starting at 0.
+    pub fn generate(&self, rng: &mut Rng, n: usize) -> Vec<f64> {
+        let mut t = 0.0;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            t += self.next_gap(rng);
+            out.push(t);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::{mean, std_dev};
+
+    #[test]
+    fn poisson_rate_holds() {
+        let mut rng = Rng::new(1);
+        let p = ArrivalProcess::Poisson { rate: 3.3 };
+        let ts = p.generate(&mut rng, 50_000);
+        let duration = *ts.last().unwrap();
+        let measured = ts.len() as f64 / duration;
+        assert!((measured - 3.3).abs() < 0.1, "measured rate {measured}");
+    }
+
+    #[test]
+    fn gamma_cv_holds() {
+        let mut rng = Rng::new(2);
+        let p = ArrivalProcess::Gamma { rate: 2.0, cv: 3.0 };
+        let gaps: Vec<f64> = (0..200_000).map(|_| p.next_gap(&mut rng)).collect();
+        let m = mean(&gaps);
+        let cv = std_dev(&gaps) / m;
+        assert!((m - 0.5).abs() < 0.02, "mean gap {m}");
+        assert!((cv - 3.0).abs() < 0.15, "cv {cv}");
+    }
+
+    #[test]
+    fn gamma_cv1_is_poisson_like() {
+        let mut rng = Rng::new(3);
+        let p = ArrivalProcess::Gamma { rate: 2.0, cv: 1.0 };
+        let gaps: Vec<f64> = (0..100_000).map(|_| p.next_gap(&mut rng)).collect();
+        let cv = std_dev(&gaps) / mean(&gaps);
+        assert!((cv - 1.0).abs() < 0.05, "cv {cv}");
+    }
+
+    #[test]
+    fn timestamps_monotone() {
+        let mut rng = Rng::new(4);
+        for p in [
+            ArrivalProcess::Poisson { rate: 5.0 },
+            ArrivalProcess::Gamma { rate: 5.0, cv: 3.0 },
+        ] {
+            let ts = p.generate(&mut rng, 1000);
+            assert!(ts.windows(2).all(|w| w[1] >= w[0]));
+            assert!(ts[0] > 0.0);
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Synthetic ShareGPT-like datasets (paper §6.1, Fig. 9).
+//!
+//! The real ShareGPT dump is not available offline; we generate prompt /
+//! response length pairs from lognormal fits matching the distributions
+//! in Fig. 9:
+//!
+//! - **ShareGPT**: input median ≈ 90 tokens with a heavy tail (mean ≈
+//!   170), output median ≈ 150 (mean ≈ 210), both truncated to 1k.
+//! - **Multi-Round ShareGPT**: several conversation rounds concatenated,
+//!   giving ≈3× longer inputs (mean ≈ 510, capped at 1k); output lengths
+//!   match ShareGPT (the final response).
+//!
+//! The scheduler observes only (prompt_len, output_len), so matching the
+//! marginals is what preserves the paper's behaviour (DESIGN.md §1).
+
+use crate::util::rng::Rng;
+
+/// Maximum context length of the OPT family (paper truncates to fit).
+pub const MAX_CONTEXT: usize = 1024;
+
+/// A single request's length profile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LengthSample {
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+}
+
+impl LengthSample {
+    pub fn total(&self) -> usize {
+        self.prompt_tokens + self.output_tokens
+    }
+}
+
+/// Dataset families from the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataset {
+    ShareGpt,
+    MultiRoundShareGpt,
+}
+
+impl Dataset {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::ShareGpt => "ShareGPT",
+            Dataset::MultiRoundShareGpt => "MultiRound-ShareGPT",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Dataset> {
+        match name {
+            "sharegpt" | "ShareGPT" => Some(Dataset::ShareGpt),
+            "multiround" | "multi-round" | "MultiRound-ShareGPT" => {
+                Some(Dataset::MultiRoundShareGpt)
+            }
+            _ => None,
+        }
+    }
+
+    /// Sample one request's prompt/output lengths.
+    pub fn sample(&self, rng: &mut Rng) -> LengthSample {
+        match self {
+            Dataset::ShareGpt => {
+                // lognormal(4.8, 1.0): median 122, mean ≈ 200.
+                let prompt = rng.lognormal(4.8, 1.0).round() as usize;
+                // lognormal(5.2, 0.85): median 181, mean ≈ 260.
+                let output = rng.lognormal(5.2, 0.85).round() as usize;
+                LengthSample {
+                    prompt_tokens: prompt.clamp(4, MAX_CONTEXT / 2),
+                    output_tokens: output.clamp(4, MAX_CONTEXT / 2),
+                }
+            }
+            Dataset::MultiRoundShareGpt => {
+                // Concatenate 2–5 rounds of ShareGPT-sized prompts +
+                // responses (history), capped to fit the context window.
+                let rounds = rng.range(2, 5);
+                let mut prompt = 0usize;
+                for _ in 0..rounds {
+                    prompt += rng.lognormal(4.8, 1.0).round().max(4.0) as usize;
+                    prompt += rng.lognormal(5.2, 0.85).round().max(4.0) as usize;
+                }
+                let output = rng.lognormal(5.2, 0.85).round() as usize;
+                LengthSample {
+                    prompt_tokens: prompt.clamp(16, MAX_CONTEXT / 2),
+                    output_tokens: output.clamp(4, MAX_CONTEXT / 2),
+                }
+            }
+        }
+    }
+
+    /// Sample a batch of length profiles.
+    pub fn sample_many(&self, rng: &mut Rng, n: usize) -> Vec<LengthSample> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::mean;
+
+    fn means(ds: Dataset, n: usize) -> (f64, f64) {
+        let mut rng = Rng::new(7);
+        let samples = ds.sample_many(&mut rng, n);
+        let p: Vec<f64> = samples.iter().map(|s| s.prompt_tokens as f64).collect();
+        let o: Vec<f64> = samples.iter().map(|s| s.output_tokens as f64).collect();
+        (mean(&p), mean(&o))
+    }
+
+    #[test]
+    fn sharegpt_scale_matches_fig9() {
+        let (p, o) = means(Dataset::ShareGpt, 20_000);
+        assert!((120.0..260.0).contains(&p), "prompt mean {p}");
+        assert!((180.0..330.0).contains(&o), "output mean {o}");
+    }
+
+    #[test]
+    fn multiround_inputs_are_about_3x() {
+        let (p1, o1) = means(Dataset::ShareGpt, 20_000);
+        let (p3, o3) = means(Dataset::MultiRoundShareGpt, 20_000);
+        let ratio = p3 / p1;
+        assert!((2.0..4.5).contains(&ratio), "input ratio {ratio}");
+        // Output distributions similar (within 25%).
+        assert!((o3 / o1 - 1.0).abs() < 0.25, "output ratio {}", o3 / o1);
+    }
+
+    #[test]
+    fn lengths_bounded_by_context() {
+        let mut rng = Rng::new(3);
+        for ds in [Dataset::ShareGpt, Dataset::MultiRoundShareGpt] {
+            for s in ds.sample_many(&mut rng, 5000) {
+                assert!(s.total() <= MAX_CONTEXT, "{:?}", s);
+                assert!(s.prompt_tokens >= 4 && s.output_tokens >= 4);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(11);
+        let mut b = Rng::new(11);
+        assert_eq!(
+            Dataset::ShareGpt.sample_many(&mut a, 100),
+            Dataset::ShareGpt.sample_many(&mut b, 100)
+        );
+    }
+
+    #[test]
+    fn by_name() {
+        assert_eq!(Dataset::by_name("sharegpt"), Some(Dataset::ShareGpt));
+        assert_eq!(Dataset::by_name("multiround"), Some(Dataset::MultiRoundShareGpt));
+        assert_eq!(Dataset::by_name("x"), None);
+    }
+}

@@ -1,0 +1,166 @@
+//! Workload generation: datasets (lengths), arrival processes, and QoE
+//! requirement traces, combined into full request traces for the engine.
+
+pub mod arrivals;
+pub mod dataset;
+pub mod qoe_trace;
+
+pub use arrivals::ArrivalProcess;
+pub use dataset::{Dataset, LengthSample};
+pub use qoe_trace::QoeTrace;
+
+use crate::qoe::spec::QoeSpec;
+use crate::util::rng::Rng;
+
+/// Parse a workload trace back from the CSV produced by
+/// `andes workload --out` (columns: id, arrival, prompt_tokens,
+/// output_tokens, ttft_expected, tds_expected). Enables record/replay:
+/// generate once, replay identically across schedulers or code versions.
+pub fn parse_trace_csv(text: &str) -> anyhow::Result<Vec<RequestSpec>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || (lineno == 0 && line.starts_with("id,")) {
+            continue;
+        }
+        let f: Vec<&str> = line.split(',').collect();
+        anyhow::ensure!(f.len() == 6, "line {}: expected 6 fields, got {}", lineno + 1, f.len());
+        let parse_f = |i: usize| -> anyhow::Result<f64> {
+            f[i].parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("line {}: bad number '{}'", lineno + 1, f[i]))
+        };
+        out.push(RequestSpec {
+            id: parse_f(0)? as usize,
+            arrival: parse_f(1)?,
+            prompt_tokens: parse_f(2)? as usize,
+            output_tokens: parse_f(3)? as usize,
+            qoe: QoeSpec::new(parse_f(4)?, parse_f(5)?),
+        });
+    }
+    out.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    Ok(out)
+}
+
+/// One request as described by a workload trace, before it enters the
+/// serving system.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestSpec {
+    /// Trace-assigned id (dense, in arrival order).
+    pub id: usize,
+    /// Absolute arrival time, seconds from trace start.
+    pub arrival: f64,
+    pub prompt_tokens: usize,
+    /// Ground-truth response length (the engine "discovers" it token by
+    /// token; schedulers must not read it — mirrors the paper's unknown
+    /// output length).
+    pub output_tokens: usize,
+    pub qoe: QoeSpec,
+}
+
+/// A complete workload description.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub dataset: Dataset,
+    pub arrivals: ArrivalProcess,
+    pub qoe_trace: QoeTrace,
+    pub num_requests: usize,
+    pub seed: u64,
+}
+
+impl Workload {
+    /// Generate the full request trace.
+    pub fn generate(&self) -> Vec<RequestSpec> {
+        let mut rng = Rng::new(self.seed);
+        let mut arr_rng = rng.fork();
+        let mut len_rng = rng.fork();
+        let mut qoe_rng = rng.fork();
+        let times = self.arrivals.generate(&mut arr_rng, self.num_requests);
+        times
+            .into_iter()
+            .enumerate()
+            .map(|(id, arrival)| {
+                let len = self.dataset.sample(&mut len_rng);
+                RequestSpec {
+                    id,
+                    arrival,
+                    prompt_tokens: len.prompt_tokens,
+                    output_tokens: len.output_tokens,
+                    qoe: self.qoe_trace.sample(&mut qoe_rng),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wl(seed: u64) -> Workload {
+        Workload {
+            dataset: Dataset::ShareGpt,
+            arrivals: ArrivalProcess::Poisson { rate: 2.0 },
+            qoe_trace: QoeTrace::TextReading,
+            num_requests: 500,
+            seed,
+        }
+    }
+
+    #[test]
+    fn generates_requested_count_in_order() {
+        let reqs = wl(1).generate();
+        assert_eq!(reqs.len(), 500);
+        assert!(reqs.windows(2).all(|w| w[1].arrival >= w[0].arrival));
+        assert!(reqs.iter().enumerate().all(|(i, r)| r.id == i));
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        assert_eq!(wl(1).generate(), wl(1).generate());
+        assert_ne!(wl(1).generate(), wl(2).generate());
+    }
+
+    #[test]
+    fn trace_csv_roundtrip() {
+        let reqs = wl(5).generate();
+        let mut csv = String::from(
+            "id,arrival,prompt_tokens,output_tokens,ttft_expected,tds_expected\n",
+        );
+        for r in &reqs {
+            csv.push_str(&format!(
+                "{},{},{},{},{},{}\n",
+                r.id, r.arrival, r.prompt_tokens, r.output_tokens, r.qoe.ttft, r.qoe.tds
+            ));
+        }
+        let back = parse_trace_csv(&csv).unwrap();
+        assert_eq!(back.len(), reqs.len());
+        for (a, b) in reqs.iter().zip(&back) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.prompt_tokens, b.prompt_tokens);
+            assert_eq!(a.output_tokens, b.output_tokens);
+            assert!((a.arrival - b.arrival).abs() < 1e-9);
+            assert!((a.qoe.tds - b.qoe.tds).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn trace_csv_rejects_malformed() {
+        assert!(parse_trace_csv("1,2,3").is_err());
+        assert!(parse_trace_csv("a,b,c,d,e,f").is_err());
+        assert!(parse_trace_csv("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn component_streams_independent() {
+        // Changing the arrival process must not change sampled lengths.
+        let a = wl(3).generate();
+        let mut w = wl(3);
+        w.arrivals = ArrivalProcess::Gamma { rate: 2.0, cv: 3.0 };
+        let b = w.generate();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt_tokens, y.prompt_tokens);
+            assert_eq!(x.output_tokens, y.output_tokens);
+            assert_eq!(x.qoe, y.qoe);
+        }
+    }
+}
