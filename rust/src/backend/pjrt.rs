@@ -51,6 +51,10 @@ pub struct PjrtBackend {
     sampling: Sampling,
     rng: Rng,
     cache: Option<BatchCache>,
+    /// Generated tokens of finished requests. `release()` runs mid-tick,
+    /// before the serving loop reads the final tokens, so they are
+    /// retained here until the server calls [`PjrtBackend::forget`].
+    finished: HashMap<RequestId, Vec<u32>>,
 }
 
 impl PjrtBackend {
@@ -61,6 +65,7 @@ impl PjrtBackend {
             sampling,
             rng: Rng::new(seed),
             cache: None,
+            finished: HashMap::new(),
         }
     }
 
@@ -124,8 +129,17 @@ impl PjrtBackend {
     }
 
     /// Generated token ids so far (for streaming decode to text).
+    /// Remains available after the request finishes, until `forget()`.
     pub fn generated(&self, id: RequestId) -> Option<&[u32]> {
-        self.requests.get(&id).map(|r| r.generated.as_slice())
+        self.requests
+            .get(&id)
+            .map(|r| r.generated.as_slice())
+            .or_else(|| self.finished.get(&id).map(|v| v.as_slice()))
+    }
+
+    /// Drop a finished request's retained tokens (delivery confirmed).
+    pub fn forget(&mut self, id: RequestId) {
+        self.finished.remove(&id);
     }
 
     fn finished_after(&self, r: &PjrtRequest, token: u32) -> bool {
@@ -310,6 +324,8 @@ impl ExecutionBackend for PjrtBackend {
         if self.cache.as_ref().is_some_and(|c| c.ids.contains(&id)) {
             let _ = self.flush_cache();
         }
-        self.requests.remove(&id);
+        if let Some(r) = self.requests.remove(&id) {
+            self.finished.insert(id, r.generated);
+        }
     }
 }

@@ -13,6 +13,12 @@
 //! - [`RoutingPolicy::QoeAware`] — route to the replica with the most
 //!   KV-token headroom per active request (a proxy for the marginal QoE
 //!   cost of placing one more request there).
+//!
+//! Per-replica active-request counts are maintained incrementally
+//! (+1 on submit, −1 as finishes are observed) so routing is O(replicas)
+//! per arrival instead of a scan over every request vector. The
+//! [`crate::gateway`] front door drives a cluster through the public
+//! `submit_with_policy`/`advance_all_to`/`drain` API.
 
 use anyhow::Result;
 
@@ -47,6 +53,10 @@ pub struct Cluster {
     replicas: Vec<Engine<SimBackend, VirtualClock>>,
     policy: RoutingPolicy,
     rr_next: usize,
+    /// Incrementally maintained active (unfinished) count per replica.
+    active: Vec<usize>,
+    /// Finished-request count already subtracted from `active`.
+    finished_seen: Vec<usize>,
 }
 
 impl Cluster {
@@ -70,43 +80,64 @@ impl Cluster {
                 )
             })
             .collect();
-        Cluster { replicas, policy, rr_next: 0 }
+        Cluster {
+            replicas,
+            policy,
+            rr_next: 0,
+            active: vec![0; n],
+            finished_seen: vec![0; n],
+        }
     }
 
     pub fn num_replicas(&self) -> usize {
         self.replicas.len()
     }
 
-    /// Active (unfinished) request count per replica.
-    fn loads(&self) -> Vec<usize> {
-        self.replicas
-            .iter()
-            .map(|e| e.requests().iter().filter(|r| r.is_active()).count())
-            .collect()
+    /// Read-only view of the replicas (gateway state snapshots).
+    pub fn replicas(&self) -> &[Engine<SimBackend, VirtualClock>] {
+        &self.replicas
     }
 
-    /// Pick a replica for a new request.
-    fn route(&mut self) -> usize {
-        match self.policy {
+    /// Incrementally maintained active-request count per replica.
+    pub fn active_counts(&self) -> &[usize] {
+        &self.active
+    }
+
+    /// Latest simulated time across replicas.
+    pub fn now(&self) -> f64 {
+        self.replicas.iter().map(|e| e.now()).fold(0.0, f64::max)
+    }
+
+    /// Fold replica `i`'s newly observed finishes into its active count.
+    fn sync_finished(&mut self, i: usize) {
+        let fin = self.replicas[i].metrics().requests.len();
+        let newly = fin - self.finished_seen[i];
+        if newly > 0 {
+            self.active[i] -= newly;
+            self.finished_seen[i] = fin;
+        }
+    }
+
+    /// Pick a replica under `policy`.
+    fn route(&mut self, policy: RoutingPolicy) -> usize {
+        match policy {
             RoutingPolicy::RoundRobin => {
                 let idx = self.rr_next % self.replicas.len();
                 self.rr_next += 1;
                 idx
             }
             RoutingPolicy::LeastLoaded => {
-                let loads = self.loads();
-                (0..loads.len()).min_by_key(|&i| loads[i]).unwrap()
+                (0..self.active.len()).min_by_key(|&i| self.active[i]).unwrap()
             }
             RoutingPolicy::QoeAware => {
                 // Most free KV tokens per active request: replicas close
                 // to memory saturation will degrade everyone's QoE when
                 // given one more request.
-                let loads = self.loads();
                 (0..self.replicas.len())
                     .max_by(|&a, &b| {
                         let score = |i: usize| {
                             self.replicas[i].kv().device_free_tokens() as f64
-                                / (loads[i] + 1) as f64
+                                / (self.active[i] + 1) as f64
                         };
                         score(a).partial_cmp(&score(b)).unwrap()
                     })
@@ -115,16 +146,59 @@ impl Cluster {
         }
     }
 
+    /// Route and submit one request; returns the chosen replica index.
+    pub fn submit(&mut self, spec: RequestSpec) -> Result<usize> {
+        self.submit_with_policy(spec, None)
+    }
+
+    /// Submit with an optional routing-policy override — the gateway's
+    /// surge-aware routing hook.
+    pub fn submit_with_policy(
+        &mut self,
+        spec: RequestSpec,
+        policy: Option<RoutingPolicy>,
+    ) -> Result<usize> {
+        let idx = self.route(policy.unwrap_or(self.policy));
+        self.replicas[idx].submit(spec)?;
+        self.active[idx] += 1;
+        Ok(idx)
+    }
+
     /// Advance every replica's virtual clock to at least `t`, running
     /// any pending work on the way.
-    fn advance_all_to(&mut self, t: f64) -> Result<()> {
-        for e in self.replicas.iter_mut() {
-            while e.has_work() && e.now() < t {
-                e.tick()?;
+    pub fn advance_all_to(&mut self, t: f64) -> Result<()> {
+        for i in 0..self.replicas.len() {
+            {
+                let e = &mut self.replicas[i];
+                while e.has_work() && e.now() < t {
+                    e.tick()?;
+                }
+                e.advance_clock_to(t);
             }
-            e.advance_clock_to(t);
+            self.sync_finished(i);
         }
         Ok(())
+    }
+
+    /// Finish all outstanding work and take the per-replica metrics.
+    pub fn drain(&mut self) -> Result<Vec<Metrics>> {
+        for i in 0..self.replicas.len() {
+            {
+                let e = &mut self.replicas[i];
+                while e.has_work() {
+                    e.tick()?;
+                }
+            }
+            self.sync_finished(i);
+        }
+        // Taking the metrics resets each replica's finish history; keep
+        // the incremental counters consistent with that.
+        self.finished_seen.iter_mut().for_each(|f| *f = 0);
+        Ok(self
+            .replicas
+            .iter_mut()
+            .map(|e| std::mem::take(e.metrics_mut()))
+            .collect())
     }
 
     /// Run a full trace through the cluster; returns per-replica metrics.
@@ -134,20 +208,9 @@ impl Cluster {
             // Bring the cluster's clocks up to the arrival instant so
             // routing sees current loads.
             self.advance_all_to(spec.arrival)?;
-            let idx = self.route();
-            self.replicas[idx].submit(spec)?;
+            self.submit(spec)?;
         }
-        // Drain.
-        for e in self.replicas.iter_mut() {
-            while e.has_work() {
-                e.tick()?;
-            }
-        }
-        Ok(self
-            .replicas
-            .iter_mut()
-            .map(|e| std::mem::take(e.metrics_mut()))
-            .collect())
+        self.drain()
     }
 }
 
@@ -161,6 +224,8 @@ mod tests {
     use super::*;
     use crate::model::gpu::a100_4x;
     use crate::model::llm::opt_66b;
+    use crate::qoe::spec::QoeSpec;
+    use crate::util::stats::mean;
     use crate::workload::{ArrivalProcess, Dataset, QoeTrace, Workload};
 
     fn small_cluster(policy: RoutingPolicy, n: usize) -> Cluster {
@@ -220,5 +285,65 @@ mod tests {
         let all = c.run_trace(trace(30, 2.0, 8)).unwrap();
         assert_eq!(all[0].requests.len(), 30);
         assert!(merged_qoes(&all).len() == 30);
+    }
+
+    #[test]
+    fn incremental_counts_match_recount() {
+        // The maintained active counts must equal a fresh scan at every
+        // arrival instant.
+        let mut c = small_cluster(RoutingPolicy::LeastLoaded, 3);
+        let mut reqs = trace(50, 5.0, 9);
+        reqs.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        for spec in reqs {
+            c.advance_all_to(spec.arrival).unwrap();
+            c.submit(spec).unwrap();
+            for (i, e) in c.replicas().iter().enumerate() {
+                let scan = e.requests().iter().filter(|r| r.is_active()).count();
+                assert_eq!(c.active_counts()[i], scan, "replica {i}");
+            }
+        }
+        let all = c.drain().unwrap();
+        assert_eq!(all.iter().map(|m| m.requests.len()).sum::<usize>(), 50);
+        assert!(c.active_counts().iter().all(|&a| a == 0));
+    }
+
+    #[test]
+    fn qoe_aware_beats_round_robin_under_kv_skew() {
+        // Parity-correlated sizes: every even-id request is KV-heavy, so
+        // round-robin over 2 replicas lands all of them on replica 0 (the
+        // classic hash-routing pathology). QoE-aware routing sees the
+        // vanishing headroom and spreads the heavy requests.
+        let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+        let cfg = EngineConfig {
+            kv_capacity_tokens: 2000,
+            swap_capacity_tokens: 8000,
+            ..EngineConfig::default()
+        };
+        let make_trace = || -> Vec<RequestSpec> {
+            (0..60)
+                .map(|i| RequestSpec {
+                    id: i,
+                    arrival: 0.15 * (i + 1) as f64,
+                    prompt_tokens: if i % 2 == 0 { 950 } else { 60 },
+                    output_tokens: 120,
+                    qoe: QoeSpec::new(1.0, 4.8),
+                })
+                .collect()
+        };
+        let run = |policy: RoutingPolicy| {
+            let mut c =
+                Cluster::new(2, cfg.clone(), latency.clone(), &SchedulerConfig::Fcfs, policy);
+            let all = c.run_trace(make_trace()).unwrap();
+            assert_eq!(
+                all.iter().map(|m| m.requests.len()).sum::<usize>(),
+                60,
+                "{} lost requests",
+                policy.label()
+            );
+            mean(&merged_qoes(&all))
+        };
+        let rr = run(RoutingPolicy::RoundRobin);
+        let qa = run(RoutingPolicy::QoeAware);
+        assert!(qa > rr, "qoe-aware {qa:.3} must beat round-robin {rr:.3}");
     }
 }

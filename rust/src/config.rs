@@ -17,6 +17,16 @@
 //!     "block_size": 16,
 //!     "max_output_tokens": 2048,
 //!     "prefer_swap": true
+//!   },
+//!   "gateway": {
+//!     "admission": true,
+//!     "pacing": true,
+//!     "lead_tokens": 4,
+//!     "pace_rate_factor": 1.25,
+//!     "min_predicted_qoe": 0.35,
+//!     "baseline_rate": 3.0,
+//!     "surge_enter": 1.5,
+//!     "surge_exit": 1.1
 //!   }
 //! }
 //! ```
@@ -27,6 +37,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::engine::EngineConfig;
 use crate::coordinator::sched::andes::{AndesConfig, AndesScheduler, KnapsackSolver};
+use crate::gateway::GatewayConfig;
 use crate::coordinator::sched::fcfs::FcfsScheduler;
 use crate::coordinator::sched::objective::Objective;
 use crate::coordinator::sched::round_robin::RoundRobinScheduler;
@@ -42,6 +53,7 @@ pub struct AndesDeployment {
     pub gpu: GpuProfile,
     pub scheduler: SchedulerConfig,
     pub engine: EngineConfig,
+    pub gateway: GatewayConfig,
 }
 
 /// Scheduler section.
@@ -78,6 +90,7 @@ impl Default for AndesDeployment {
             gpu,
             scheduler: SchedulerConfig::Andes(AndesConfig::default()),
             engine,
+            gateway: GatewayConfig::default(),
         }
     }
 }
@@ -176,6 +189,74 @@ impl AndesDeployment {
                 d.engine.swap_capacity_tokens = k as usize;
             }
         }
+
+        let g = j.get("gateway");
+        if !g.is_null() {
+            if let Some(b) = g.get("admission").as_bool() {
+                d.gateway.admission_enabled = b;
+            }
+            if let Some(b) = g.get("pacing").as_bool() {
+                d.gateway.pacing_enabled = b;
+            }
+            if let Some(n) = g.get("lead_tokens").as_u64() {
+                d.gateway.pacing.lead_tokens = (n as usize).max(1);
+            }
+            if let Some(f) = g.get("pace_rate_factor").as_f64() {
+                if f <= 0.0 {
+                    bail!("pace_rate_factor must be > 0");
+                }
+                d.gateway.pacing.rate_factor = f;
+            }
+            if let Some(q) = g.get("min_predicted_qoe").as_f64() {
+                if !(0.0..=1.0).contains(&q) {
+                    bail!("min_predicted_qoe must be in [0,1]");
+                }
+                d.gateway.admission.min_predicted_qoe = q;
+            }
+            if let Some(h) = g.get("admission_hysteresis").as_f64() {
+                if h < 0.0 {
+                    bail!("admission_hysteresis must be ≥ 0");
+                }
+                d.gateway.admission.hysteresis = h;
+            }
+            if let Some(n) = g.get("max_deferred").as_u64() {
+                d.gateway.admission.max_deferred = n as usize;
+            }
+            if let Some(w) = g.get("max_defer_wait").as_f64() {
+                if w < 0.0 {
+                    bail!("max_defer_wait must be ≥ 0");
+                }
+                d.gateway.admission.max_defer_wait = w;
+            }
+            if let Some(n) = g.get("expected_output_tokens").as_u64() {
+                d.gateway.admission.expected_output_tokens = n as usize;
+            }
+            if let Some(w) = g.get("surge_window").as_f64() {
+                if w <= 0.0 {
+                    bail!("surge_window must be > 0");
+                }
+                d.gateway.surge.window_secs = w;
+            }
+            if let Some(r) = g.get("baseline_rate").as_f64() {
+                if r <= 0.0 {
+                    bail!("baseline_rate must be > 0");
+                }
+                d.gateway.surge.baseline_rate = r;
+            }
+            if let Some(f) = g.get("surge_enter").as_f64() {
+                d.gateway.surge.enter_factor = f;
+            }
+            if let Some(f) = g.get("surge_exit").as_f64() {
+                d.gateway.surge.exit_factor = f;
+            }
+            if d.gateway.surge.enter_factor <= d.gateway.surge.exit_factor {
+                bail!(
+                    "surge_enter ({}) must exceed surge_exit ({})",
+                    d.gateway.surge.enter_factor,
+                    d.gateway.surge.exit_factor
+                );
+            }
+        }
         Ok(d)
     }
 }
@@ -258,6 +339,41 @@ mod tests {
         .is_err());
         assert!(AndesDeployment::from_json_str(r#"{"engine": {"block_size": 0}}"#).is_err());
         assert!(AndesDeployment::from_json_str("not json").is_err());
+    }
+
+    #[test]
+    fn gateway_config_parses() {
+        let d = AndesDeployment::from_json_str(
+            r#"{"gateway": {"admission": false, "pacing": true,
+                 "lead_tokens": 8, "pace_rate_factor": 1.5,
+                 "min_predicted_qoe": 0.5, "max_deferred": 16,
+                 "max_defer_wait": 5.0, "baseline_rate": 4.0,
+                 "surge_window": 20, "surge_enter": 2.0, "surge_exit": 1.2}}"#,
+        )
+        .unwrap();
+        assert!(!d.gateway.admission_enabled);
+        assert!(d.gateway.pacing_enabled);
+        assert_eq!(d.gateway.pacing.lead_tokens, 8);
+        assert_eq!(d.gateway.pacing.rate_factor, 1.5);
+        assert_eq!(d.gateway.admission.min_predicted_qoe, 0.5);
+        assert_eq!(d.gateway.admission.max_deferred, 16);
+        assert_eq!(d.gateway.admission.max_defer_wait, 5.0);
+        assert_eq!(d.gateway.surge.baseline_rate, 4.0);
+        assert_eq!(d.gateway.surge.window_secs, 20.0);
+        assert_eq!(d.gateway.surge.enter_factor, 2.0);
+        assert_eq!(d.gateway.surge.exit_factor, 1.2);
+    }
+
+    #[test]
+    fn gateway_config_rejects_bad_values() {
+        for bad in [
+            r#"{"gateway": {"surge_enter": 1.0, "surge_exit": 1.5}}"#,
+            r#"{"gateway": {"min_predicted_qoe": 1.5}}"#,
+            r#"{"gateway": {"pace_rate_factor": 0}}"#,
+            r#"{"gateway": {"baseline_rate": -2}}"#,
+        ] {
+            assert!(AndesDeployment::from_json_str(bad).is_err(), "{bad}");
+        }
     }
 
     #[test]

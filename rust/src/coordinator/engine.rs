@@ -127,8 +127,27 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
         &mut self.backend
     }
 
+    pub fn latency(&self) -> &LatencyModel {
+        &self.latency
+    }
+
     pub fn now(&self) -> f64 {
         self.clock.now()
+    }
+
+    /// Number of active (unfinished) requests: waiting + running + swapped.
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Mean context length across active requests (0 when idle).
+    pub fn avg_active_context(&self) -> usize {
+        if self.active.is_empty() {
+            return 0;
+        }
+        let total: usize =
+            self.active.iter().map(|&id| self.requests[id].context_len()).sum();
+        (total / self.active.len()).max(1)
     }
 
     /// Queue a whole workload trace (sim mode).
@@ -154,7 +173,11 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
             spec.prompt_tokens = prompt.len();
         }
         let id = self.requests.len();
-        let arrival = spec.arrival.max(self.clock.now());
+        // Preserve a past arrival timestamp so queueing delay outside the
+        // engine (e.g. a gateway defer queue) is charged to the request's
+        // QoE; an unset arrival (0.0, live serving) is stamped with now.
+        let now = self.clock.now();
+        let arrival = if spec.arrival > 0.0 { spec.arrival } else { now };
         self.backend.register(BackendRequest {
             id,
             prompt,

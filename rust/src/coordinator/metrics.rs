@@ -15,6 +15,10 @@ pub struct RequestRecord {
     pub output_tokens: usize,
     pub ttft: f64,
     pub final_qoe: f64,
+    /// The request's expected TTFT/TDS (its QoE spec) — lets delivery-layer
+    /// post-processing (gateway pacing) re-evaluate QoE from `token_times`.
+    pub expected_ttft: f64,
+    pub expected_tds: f64,
     /// Average TDS excluding TTFT; NaN when fewer than 2 tokens.
     pub avg_tds: f64,
     pub normalized_latency: f64,
@@ -33,6 +37,8 @@ impl RequestRecord {
             output_tokens: r.generated,
             ttft: r.ttft().unwrap_or(f64::NAN),
             final_qoe: r.final_qoe(),
+            expected_ttft: r.qoe_spec.ttft,
+            expected_tds: r.qoe_spec.tds,
             avg_tds: r.avg_tds().unwrap_or(f64::NAN),
             normalized_latency: r.normalized_latency().unwrap_or(f64::NAN),
             preemptions: r.preemptions,

@@ -6,6 +6,7 @@
 pub mod breakdown;
 pub mod endtoend;
 pub mod extensions;
+pub mod gateway;
 pub mod micro;
 pub mod motivation;
 pub mod robustness;
@@ -179,6 +180,12 @@ pub fn registry() -> Vec<Experiment> {
             paper_ref: "§5 (extension)",
             title: "Cluster routing policies × per-replica scheduling",
             run: extensions::ext_cluster,
+        },
+        Experiment {
+            id: "ext-gateway",
+            paper_ref: "§5 (extension)",
+            title: "QoE-aware gateway: admission, pacing, surge routing",
+            run: gateway::ext_gateway,
         },
         Experiment {
             id: "e2e",

@@ -1,0 +1,377 @@
+//! QoE-aware admission control.
+//!
+//! Every arriving request is scored against the current serving state:
+//!
+//! - **expected QoE gain** — the per-request token delivery speed the
+//!   serving tier could give one more request (fair share of the
+//!   KV-bounded batch throughput), relative to the request's expected
+//!   TDS. A request predicted to stream far below its digestion speed
+//!   contributes almost no QoE but still consumes capacity;
+//! - **marginal resource cost** — the fraction of the best replica's
+//!   free KV the request's context (prompt + expected output) would
+//!   claim.
+//!
+//! Normal mode never sheds: requests that don't currently fit are
+//! deferred to a bounded queue. Surge mode (see [`super::surge`])
+//! escalates to structured rejection, so clients get an immediate,
+//! actionable answer instead of a token stream that arrives too late to
+//! matter (the TokenFlow/DiSCo argument for front-end preemptive
+//! decisions). A hysteresis latch keeps decisions from flapping when
+//! the predicted QoE hovers at the admission floor.
+
+use crate::qoe::spec::QoeSpec;
+
+use super::surge::LoadMode;
+
+/// Snapshot of one serving replica, as the gateway sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaState {
+    /// Active (unfinished) requests: running + waiting + swapped.
+    pub active_requests: usize,
+    /// Free device KV tokens.
+    pub kv_free_tokens: usize,
+    /// Total device KV tokens.
+    pub kv_capacity_tokens: usize,
+    /// Estimated per-request token delivery speed (tok/s) if one more
+    /// request were admitted: the fair share of the KV-bounded batch
+    /// throughput across `active_requests + 1` requests.
+    pub est_request_tds: f64,
+}
+
+impl ReplicaState {
+    /// Fraction of device KV in use ∈ [0, 1].
+    pub fn kv_utilization(&self) -> f64 {
+        if self.kv_capacity_tokens == 0 {
+            return 1.0;
+        }
+        1.0 - self.kv_free_tokens as f64 / self.kv_capacity_tokens as f64
+    }
+}
+
+/// Admission controller configuration.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Expected output length for the marginal KV cost estimate (tokens).
+    pub expected_output_tokens: usize,
+    /// Admission floor: predicted per-request QoE below this sheds load.
+    pub min_predicted_qoe: f64,
+    /// Hysteresis band above the floor before shedding stops: once
+    /// shedding starts, it only stops when the predicted QoE recovers
+    /// past `min_predicted_qoe + hysteresis`.
+    pub hysteresis: f64,
+    /// Max requests in the defer queue before rejecting outright.
+    pub max_deferred: usize,
+    /// Longest a deferred request may wait before rejection (s).
+    pub max_defer_wait: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            expected_output_tokens: 260, // ShareGPT mean response length
+            min_predicted_qoe: 0.35,
+            hysteresis: 0.1,
+            max_deferred: 64,
+            max_defer_wait: 10.0,
+        }
+    }
+}
+
+/// Structured rejection reasons, surfaced to clients verbatim.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RejectReason {
+    /// No replica has KV headroom for the request's expected context.
+    Saturated { kv_utilization: f64 },
+    /// Surge shedding: predicted QoE below the admission floor.
+    SurgeShed { predicted_qoe: f64 },
+    /// The defer queue is full.
+    QueueFull { depth: usize },
+    /// Deferred past the maximum wait without capacity freeing up.
+    DeferTimeout { waited: f64 },
+}
+
+impl RejectReason {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RejectReason::Saturated { .. } => "saturated",
+            RejectReason::SurgeShed { .. } => "surge-shed",
+            RejectReason::QueueFull { .. } => "queue-full",
+            RejectReason::DeferTimeout { .. } => "defer-timeout",
+        }
+    }
+
+    pub fn detail(&self) -> String {
+        match self {
+            RejectReason::Saturated { kv_utilization } => {
+                format!("kv utilization {kv_utilization:.2}")
+            }
+            RejectReason::SurgeShed { predicted_qoe } => {
+                format!("predicted QoE {predicted_qoe:.2} below admission floor")
+            }
+            RejectReason::QueueFull { depth } => {
+                format!("admission queue depth {depth}")
+            }
+            RejectReason::DeferTimeout { waited } => {
+                format!("deferred {waited:.1}s without capacity")
+            }
+        }
+    }
+}
+
+/// Per-request admission verdict.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmissionDecision {
+    Admit,
+    /// Park in the gateway queue until capacity frees (bounded wait).
+    Defer,
+    Reject(RejectReason),
+}
+
+/// The admission controller: stateless scoring plus a hysteresis latch.
+#[derive(Debug, Clone)]
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    /// Latched shedding state (see `AdmissionConfig::hysteresis`).
+    shedding: bool,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        assert!(
+            (0.0..=1.0).contains(&cfg.min_predicted_qoe),
+            "admission floor must be in [0, 1]"
+        );
+        assert!(cfg.hysteresis >= 0.0, "hysteresis must be non-negative");
+        AdmissionController { cfg, shedding: false }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// Whether the controller is currently shedding (diagnostics).
+    pub fn is_shedding(&self) -> bool {
+        self.shedding
+    }
+
+    /// Predicted QoE for a new request on `replica`: achievable delivery
+    /// speed relative to the expected TDS (TTFT effects excluded — the
+    /// dominant term under load is sustained speed).
+    pub fn predicted_qoe(&self, replica: &ReplicaState, spec: &QoeSpec) -> f64 {
+        (replica.est_request_tds / spec.tds).clamp(0.0, 1.0)
+    }
+
+    /// Marginal KV cost on `replica`: expected context over free tokens.
+    /// Values above 1 mean the request cannot currently fit there.
+    pub fn marginal_cost(&self, replica: &ReplicaState, prompt_tokens: usize) -> f64 {
+        let need = (prompt_tokens + self.cfg.expected_output_tokens) as f64;
+        need / replica.kv_free_tokens.max(1) as f64
+    }
+
+    /// Decide the fate of a request with `prompt_tokens` and QoE spec
+    /// `qoe`, given the replica snapshots, the load mode, and the current
+    /// defer-queue depth.
+    pub fn decide(
+        &mut self,
+        prompt_tokens: usize,
+        qoe: &QoeSpec,
+        replicas: &[ReplicaState],
+        mode: LoadMode,
+        queue_depth: usize,
+    ) -> AdmissionDecision {
+        if replicas.is_empty() {
+            return AdmissionDecision::Reject(RejectReason::Saturated { kv_utilization: 1.0 });
+        }
+        let best_pred = replicas
+            .iter()
+            .map(|r| self.predicted_qoe(r, qoe))
+            .fold(0.0f64, f64::max);
+        let fits = replicas.iter().any(|r| self.marginal_cost(r, prompt_tokens) <= 1.0);
+        let min_util = replicas
+            .iter()
+            .map(|r| r.kv_utilization())
+            .fold(f64::INFINITY, f64::min);
+
+        // Hysteresis latch on the predicted-QoE floor.
+        if self.shedding {
+            if best_pred >= (self.cfg.min_predicted_qoe + self.cfg.hysteresis).min(1.0) {
+                self.shedding = false;
+            }
+        } else if best_pred < self.cfg.min_predicted_qoe {
+            self.shedding = true;
+        }
+
+        match mode {
+            LoadMode::Surge => {
+                if self.shedding {
+                    AdmissionDecision::Reject(RejectReason::SurgeShed {
+                        predicted_qoe: best_pred,
+                    })
+                } else if !fits {
+                    AdmissionDecision::Reject(RejectReason::Saturated {
+                        kv_utilization: min_util,
+                    })
+                } else {
+                    AdmissionDecision::Admit
+                }
+            }
+            LoadMode::Normal => {
+                if self.shedding || !fits {
+                    if queue_depth >= self.cfg.max_deferred {
+                        AdmissionDecision::Reject(RejectReason::QueueFull {
+                            depth: queue_depth,
+                        })
+                    } else {
+                        AdmissionDecision::Defer
+                    }
+                } else {
+                    AdmissionDecision::Admit
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> QoeSpec {
+        QoeSpec::new(1.0, 4.8)
+    }
+
+    fn replica(active: usize, free: usize, tds: f64) -> ReplicaState {
+        ReplicaState {
+            active_requests: active,
+            kv_free_tokens: free,
+            kv_capacity_tokens: 70_000,
+            est_request_tds: tds,
+        }
+    }
+
+    fn ctl() -> AdmissionController {
+        AdmissionController::new(AdmissionConfig::default())
+    }
+
+    #[test]
+    fn healthy_state_admits() {
+        let mut c = ctl();
+        let r = [replica(10, 50_000, 12.0)];
+        assert_eq!(
+            c.decide(200, &spec(), &r, LoadMode::Normal, 0),
+            AdmissionDecision::Admit
+        );
+        assert_eq!(
+            c.decide(200, &spec(), &r, LoadMode::Surge, 0),
+            AdmissionDecision::Admit
+        );
+    }
+
+    #[test]
+    fn surge_sheds_below_floor_normal_defers() {
+        let mut c = ctl();
+        // Predicted share 1.0 tok/s ≪ 4.8 expected → predicted QoE ≈ 0.21.
+        let r = [replica(400, 5_000, 1.0)];
+        match c.decide(200, &spec(), &r, LoadMode::Surge, 0) {
+            AdmissionDecision::Reject(RejectReason::SurgeShed { predicted_qoe }) => {
+                assert!(predicted_qoe < 0.35, "{predicted_qoe}");
+            }
+            other => panic!("expected surge shed, got {other:?}"),
+        }
+        let mut c = ctl();
+        assert_eq!(
+            c.decide(200, &spec(), &r, LoadMode::Normal, 0),
+            AdmissionDecision::Defer
+        );
+    }
+
+    #[test]
+    fn queue_full_rejects_in_normal_mode() {
+        let mut c = ctl();
+        let r = [replica(400, 5_000, 1.0)];
+        let depth = c.config().max_deferred;
+        assert_eq!(
+            c.decide(200, &spec(), &r, LoadMode::Normal, depth),
+            AdmissionDecision::Reject(RejectReason::QueueFull { depth })
+        );
+    }
+
+    #[test]
+    fn oversized_request_defers_then_admits_when_fitting() {
+        let mut c = ctl();
+        // Plenty of speed but no KV headroom for a 900-token prompt.
+        let tight = [replica(3, 500, 12.0)];
+        assert_eq!(
+            c.decide(900, &spec(), &tight, LoadMode::Normal, 0),
+            AdmissionDecision::Defer
+        );
+        let roomy = [replica(3, 5_000, 12.0)];
+        assert_eq!(
+            c.decide(900, &spec(), &roomy, LoadMode::Normal, 0),
+            AdmissionDecision::Admit
+        );
+    }
+
+    #[test]
+    fn best_replica_wins() {
+        // One saturated replica must not condemn the request when a
+        // healthy one exists.
+        let mut c = ctl();
+        let r = [replica(500, 100, 0.5), replica(5, 60_000, 10.0)];
+        assert_eq!(
+            c.decide(300, &spec(), &r, LoadMode::Surge, 0),
+            AdmissionDecision::Admit
+        );
+    }
+
+    #[test]
+    fn hysteresis_prevents_decision_flapping() {
+        // Floor 0.35, hysteresis 0.1 → shed below 1.68 tok/s, recover
+        // above 2.16 tok/s (for tds 4.8). A share oscillating inside the
+        // band must not flip decisions.
+        let mut c = ctl();
+        let sp = spec();
+        let shed = |tds: f64| [replica(300, 30_000, tds)];
+        // Trip the latch.
+        assert!(matches!(
+            c.decide(200, &sp, &shed(1.6), LoadMode::Surge, 0),
+            AdmissionDecision::Reject(_)
+        ));
+        // Oscillate inside the band: still shedding, every time.
+        for _ in 0..10 {
+            for tds in [1.75, 1.6, 2.0, 1.7] {
+                assert!(
+                    matches!(
+                        c.decide(200, &sp, &shed(tds), LoadMode::Surge, 0),
+                        AdmissionDecision::Reject(RejectReason::SurgeShed { .. })
+                    ),
+                    "flapped at share {tds}"
+                );
+            }
+        }
+        // Clear recovery past floor + hysteresis → admit again.
+        assert_eq!(
+            c.decide(200, &sp, &shed(2.3), LoadMode::Surge, 0),
+            AdmissionDecision::Admit
+        );
+    }
+
+    #[test]
+    fn marginal_cost_and_predicted_qoe_scales() {
+        let c = ctl();
+        let r = replica(10, 1_000, 2.4);
+        assert!((c.predicted_qoe(&r, &spec()) - 0.5).abs() < 1e-9);
+        // 200 prompt + 260 expected output over 1000 free.
+        assert!((c.marginal_cost(&r, 200) - 0.46).abs() < 1e-9);
+        assert!((r.kv_utilization() - (1.0 - 1_000.0 / 70_000.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_replicas_rejects() {
+        let mut c = ctl();
+        assert!(matches!(
+            c.decide(100, &spec(), &[], LoadMode::Normal, 0),
+            AdmissionDecision::Reject(RejectReason::Saturated { .. })
+        ));
+    }
+}

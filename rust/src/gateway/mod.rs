@@ -1,0 +1,651 @@
+//! The QoE-aware serving gateway — the system's front door.
+//!
+//! The paper optimizes QoE *inside* one engine and explicitly scopes
+//! out the front-end ("cluster-level load balancing ... done
+//! separately", §5). This subsystem builds that front end, because QoE
+//! is also won or lost before a request ever reaches a scheduler:
+//!
+//! - [`admission`] — estimate each arriving request's expected QoE gain
+//!   and marginal resource cost and admit, defer, or reject it with a
+//!   structured reason;
+//! - [`pacing`] — shape token delivery at each request's digestion
+//!   speed (plus a lead buffer), so the overfast surplus becomes
+//!   scheduler slack instead of unread tokens on the wire;
+//! - [`surge`] — a windowed arrival-rate detector that switches the
+//!   gateway between its permissive normal mode and load-shedding
+//!   surge mode (with hysteresis);
+//! - [`Gateway`] — the orchestrator, wrapping either a single simulated
+//!   [`Engine`] or a [`Cluster`] behind one submit/advance API, with
+//!   surge-aware routing-policy override for clusters.
+//!
+//! The live TCP server ([`crate::server`]) reuses the same components
+//! (admission controller, surge detector, per-request pacers) around
+//! its real-model engine.
+
+pub mod admission;
+pub mod pacing;
+pub mod surge;
+
+pub use admission::{
+    AdmissionConfig, AdmissionController, AdmissionDecision, RejectReason, ReplicaState,
+};
+pub use pacing::{pace_times, PacingConfig, TokenPacer};
+pub use surge::{LoadMode, SurgeConfig, SurgeDetector};
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::backend::sim::SimBackend;
+use crate::backend::{Clock, ExecutionBackend, VirtualClock};
+use crate::cluster::{Cluster, RoutingPolicy};
+use crate::coordinator::engine::Engine;
+use crate::coordinator::metrics::{Metrics, RequestRecord};
+use crate::qoe::metric::{qoe_finished, DigestState};
+use crate::qoe::spec::QoeSpec;
+use crate::workload::RequestSpec;
+
+/// Gateway configuration.
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    pub admission_enabled: bool,
+    pub pacing_enabled: bool,
+    pub admission: AdmissionConfig,
+    pub pacing: PacingConfig,
+    pub surge: SurgeConfig,
+    /// Routing-policy override while in surge mode (cluster targets
+    /// only): spread load instead of QoE-greedy placement.
+    pub surge_routing: Option<RoutingPolicy>,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            admission_enabled: true,
+            pacing_enabled: true,
+            admission: AdmissionConfig::default(),
+            pacing: PacingConfig::default(),
+            surge: SurgeConfig::default(),
+            surge_routing: Some(RoutingPolicy::LeastLoaded),
+        }
+    }
+}
+
+/// Snapshot one engine's state for admission control. Shared by the sim
+/// targets below and the live server's real-model engine.
+pub fn engine_state<B: ExecutionBackend, C: Clock>(e: &Engine<B, C>) -> ReplicaState {
+    let active = e.active_count();
+    let avg_ctx = e.avg_active_context().max(64);
+    let kv_cap = e.kv().device_capacity_tokens();
+    // Fair-share delivery speed for one more request: the batch is
+    // bounded by KV capacity; beyond it, active requests time-share.
+    let kv_batch_cap = (kv_cap / avg_ctx).max(1);
+    let batch = (active + 1).min(kv_batch_cap);
+    let share =
+        e.latency().tokens_per_sec(batch, avg_ctx) * batch as f64 / (active + 1) as f64;
+    ReplicaState {
+        active_requests: active,
+        kv_free_tokens: e.kv().device_free_tokens(),
+        kv_capacity_tokens: kv_cap,
+        est_request_tds: share,
+    }
+}
+
+/// What the gateway needs from the serving tier it fronts: a single
+/// engine or a whole cluster, driven through one submit/advance API.
+pub trait GatewayTarget {
+    /// Current simulated time.
+    fn now(&self) -> f64;
+    /// Per-replica state snapshots for admission control.
+    fn replica_states(&self) -> Vec<ReplicaState>;
+    /// Submit a request, optionally overriding the routing policy
+    /// (single-engine targets ignore the override).
+    fn submit_routed(&mut self, spec: RequestSpec, policy: Option<RoutingPolicy>)
+        -> Result<()>;
+    /// Advance simulated time to `t`, running pending work on the way.
+    fn advance_to(&mut self, t: f64) -> Result<()>;
+    /// Finish all remaining work and take the per-replica metrics.
+    fn drain(&mut self) -> Result<Vec<Metrics>>;
+}
+
+impl GatewayTarget for Engine<SimBackend, VirtualClock> {
+    fn now(&self) -> f64 {
+        self.clock().now()
+    }
+
+    fn replica_states(&self) -> Vec<ReplicaState> {
+        vec![engine_state(self)]
+    }
+
+    fn submit_routed(
+        &mut self,
+        spec: RequestSpec,
+        _policy: Option<RoutingPolicy>,
+    ) -> Result<()> {
+        self.submit(spec).map(|_| ())
+    }
+
+    fn advance_to(&mut self, t: f64) -> Result<()> {
+        while self.has_work() && self.clock().now() < t {
+            self.tick()?;
+        }
+        self.advance_clock_to(t);
+        Ok(())
+    }
+
+    fn drain(&mut self) -> Result<Vec<Metrics>> {
+        while self.has_work() {
+            self.tick()?;
+        }
+        Ok(vec![std::mem::take(self.metrics_mut())])
+    }
+}
+
+impl GatewayTarget for Cluster {
+    fn now(&self) -> f64 {
+        Cluster::now(self)
+    }
+
+    fn replica_states(&self) -> Vec<ReplicaState> {
+        self.replicas().iter().map(engine_state).collect()
+    }
+
+    fn submit_routed(
+        &mut self,
+        spec: RequestSpec,
+        policy: Option<RoutingPolicy>,
+    ) -> Result<()> {
+        self.submit_with_policy(spec, policy).map(|_| ())
+    }
+
+    fn advance_to(&mut self, t: f64) -> Result<()> {
+        self.advance_all_to(t)
+    }
+
+    fn drain(&mut self) -> Result<Vec<Metrics>> {
+        Cluster::drain(self)
+    }
+}
+
+/// Outcome of one gateway submission.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SubmitOutcome {
+    Admitted,
+    Deferred,
+    Rejected(RejectReason),
+}
+
+/// A rejected request with its structured reason.
+#[derive(Debug, Clone)]
+pub struct Rejection {
+    pub id: usize,
+    pub time: f64,
+    pub reason: RejectReason,
+}
+
+/// Lifetime counters.
+#[derive(Debug, Clone, Default)]
+pub struct GatewayStats {
+    pub arrivals: usize,
+    pub admitted: usize,
+    /// Requests that passed through the defer queue (admitted or not).
+    pub deferred: usize,
+    pub rejected: usize,
+    pub surge_transitions: u64,
+}
+
+/// One served request's delivery-layer outcome.
+#[derive(Debug, Clone)]
+pub struct ServedRequest {
+    pub id: usize,
+    /// Final QoE with unshaped (as-generated) delivery.
+    pub raw_qoe: f64,
+    /// Final QoE after the gateway pacer shapes delivery (== raw when
+    /// pacing is disabled).
+    pub paced_qoe: f64,
+    /// Tokens delivered while the client buffer already held undigested
+    /// tokens (ahead of the digestion deadline), unshaped delivery.
+    pub raw_early_tokens: usize,
+    /// Same, for the shaped delivery the client actually sees.
+    pub paced_early_tokens: usize,
+    pub output_tokens: usize,
+}
+
+/// Result of a full gateway trace run.
+#[derive(Debug)]
+pub struct GatewayRunResult {
+    pub per_replica: Vec<Metrics>,
+    pub served: Vec<ServedRequest>,
+    pub rejections: Vec<Rejection>,
+    pub stats: GatewayStats,
+}
+
+impl GatewayRunResult {
+    /// Mean final QoE over served requests (post-pacing).
+    pub fn mean_served_qoe(&self) -> f64 {
+        if self.served.is_empty() {
+            return 0.0;
+        }
+        self.served.iter().map(|s| s.paced_qoe).sum::<f64>() / self.served.len() as f64
+    }
+
+    /// Mean QoE over *all* arrivals, counting each rejection as QoE 0.
+    pub fn mean_qoe_incl_rejects(&self) -> f64 {
+        let n = self.served.len() + self.rejections.len();
+        if n == 0 {
+            return 0.0;
+        }
+        self.served.iter().map(|s| s.paced_qoe).sum::<f64>() / n as f64
+    }
+
+    pub fn rejected_fraction(&self) -> f64 {
+        let n = self.served.len() + self.rejections.len();
+        if n == 0 {
+            return 0.0;
+        }
+        self.rejections.len() as f64 / n as f64
+    }
+
+    /// (unshaped, shaped) fraction of tokens delivered ahead of the
+    /// digestion deadline.
+    pub fn early_token_fractions(&self) -> (f64, f64) {
+        let total: usize = self.served.iter().map(|s| s.output_tokens).sum();
+        if total == 0 {
+            return (0.0, 0.0);
+        }
+        let raw: usize = self.served.iter().map(|s| s.raw_early_tokens).sum();
+        let paced: usize = self.served.iter().map(|s| s.paced_early_tokens).sum();
+        (raw as f64 / total as f64, paced as f64 / total as f64)
+    }
+}
+
+/// Count tokens delivered while the client buffer already held at least
+/// one undigested token — delivery ahead of the digestion deadline.
+/// `times` are request-relative delivery timestamps, non-decreasing.
+pub fn count_early_tokens(spec: &QoeSpec, times: &[f64]) -> usize {
+    let mut st = DigestState::new(spec);
+    let mut early = 0;
+    for &t in times {
+        st.advance_to(t);
+        if st.buffered() >= 1.0 - 1e-9 {
+            early += 1;
+        }
+        st.deliver(t);
+    }
+    early
+}
+
+/// Evaluate one finished request's delivery-layer outcome, optionally
+/// re-shaping its token timeline through the pacer.
+fn served_outcome(r: &RequestRecord, pacing_enabled: bool, cfg: &PacingConfig) -> ServedRequest {
+    let spec = QoeSpec::new(r.expected_ttft.max(0.0), r.expected_tds.max(0.1));
+    let rel: Vec<f64> = r.token_times.iter().map(|t| (t - r.arrival).max(0.0)).collect();
+    let raw_early = count_early_tokens(&spec, &rel);
+    if !pacing_enabled {
+        return ServedRequest {
+            id: r.id,
+            raw_qoe: r.final_qoe,
+            paced_qoe: r.final_qoe,
+            raw_early_tokens: raw_early,
+            paced_early_tokens: raw_early,
+            output_tokens: r.output_tokens,
+        };
+    }
+    let paced = pace_times(&spec, cfg, &rel);
+    let mut st = DigestState::new(&spec);
+    for &t in &paced {
+        st.deliver(t);
+    }
+    let paced_qoe = qoe_finished(&spec, &st, paced.len());
+    let paced_early = count_early_tokens(&spec, &paced);
+    ServedRequest {
+        id: r.id,
+        raw_qoe: r.final_qoe,
+        paced_qoe,
+        raw_early_tokens: raw_early,
+        paced_early_tokens: paced_early,
+        output_tokens: r.output_tokens,
+    }
+}
+
+struct DeferredRequest {
+    spec: RequestSpec,
+    enqueued_at: f64,
+}
+
+/// The gateway orchestrator.
+pub struct Gateway<T: GatewayTarget> {
+    cfg: GatewayConfig,
+    target: T,
+    admission: AdmissionController,
+    surge: SurgeDetector,
+    queue: VecDeque<DeferredRequest>,
+    rejections: Vec<Rejection>,
+    stats: GatewayStats,
+}
+
+impl<T: GatewayTarget> Gateway<T> {
+    pub fn new(target: T, cfg: GatewayConfig) -> Self {
+        let admission = AdmissionController::new(cfg.admission.clone());
+        let surge = SurgeDetector::new(cfg.surge.clone());
+        Gateway {
+            cfg,
+            target,
+            admission,
+            surge,
+            queue: VecDeque::new(),
+            rejections: Vec::new(),
+            stats: GatewayStats::default(),
+        }
+    }
+
+    pub fn target(&self) -> &T {
+        &self.target
+    }
+
+    pub fn stats(&self) -> &GatewayStats {
+        &self.stats
+    }
+
+    pub fn rejections(&self) -> &[Rejection] {
+        &self.rejections
+    }
+
+    pub fn mode(&self) -> LoadMode {
+        self.surge.mode()
+    }
+
+    /// Handle one arriving request at its arrival time: advance the
+    /// serving tier, update the surge estimate, retry the defer queue,
+    /// then admit/defer/reject the newcomer.
+    pub fn submit(&mut self, spec: RequestSpec) -> Result<SubmitOutcome> {
+        let t = spec.arrival;
+        self.target.advance_to(t)?;
+        self.surge.observe(t);
+        self.flush_deferred(t)?;
+        self.stats.arrivals += 1;
+        if !self.cfg.admission_enabled {
+            self.route(spec)?;
+            self.stats.admitted += 1;
+            return Ok(SubmitOutcome::Admitted);
+        }
+        let states = self.target.replica_states();
+        let decision = self.admission.decide(
+            spec.prompt_tokens,
+            &spec.qoe,
+            &states,
+            self.surge.mode(),
+            self.queue.len(),
+        );
+        match decision {
+            AdmissionDecision::Admit => {
+                self.route(spec)?;
+                self.stats.admitted += 1;
+                Ok(SubmitOutcome::Admitted)
+            }
+            AdmissionDecision::Defer => {
+                self.queue.push_back(DeferredRequest { spec, enqueued_at: t });
+                self.stats.deferred += 1;
+                Ok(SubmitOutcome::Deferred)
+            }
+            AdmissionDecision::Reject(reason) => {
+                self.reject(spec.id, t, reason);
+                Ok(SubmitOutcome::Rejected(reason))
+            }
+        }
+    }
+
+    fn route(&mut self, spec: RequestSpec) -> Result<()> {
+        // Surge-aware routing is part of the admission-control response;
+        // with admission disabled the gateway must be routing-transparent
+        // (it is the experiment's no-gateway baseline).
+        let policy = if self.cfg.admission_enabled && self.surge.mode() == LoadMode::Surge {
+            self.cfg.surge_routing
+        } else {
+            None
+        };
+        self.target.submit_routed(spec, policy)
+    }
+
+    fn reject(&mut self, id: usize, time: f64, reason: RejectReason) {
+        self.rejections.push(Rejection { id, time, reason });
+        self.stats.rejected += 1;
+    }
+
+    /// Re-examine the defer queue (FIFO) at time `t`: admit what now
+    /// fits, expire what has waited too long, stop at the first request
+    /// that must keep waiting (order preserved).
+    fn flush_deferred(&mut self, t: f64) -> Result<()> {
+        loop {
+            let (id, prompt, qoe, enqueued_at) = match self.queue.front() {
+                Some(d) => (d.spec.id, d.spec.prompt_tokens, d.spec.qoe, d.enqueued_at),
+                None => return Ok(()),
+            };
+            let waited = t - enqueued_at;
+            if waited > self.cfg.admission.max_defer_wait {
+                self.queue.pop_front();
+                self.reject(id, t, RejectReason::DeferTimeout { waited });
+                continue;
+            }
+            let states = self.target.replica_states();
+            let depth = self.queue.len().saturating_sub(1);
+            let decision =
+                self.admission.decide(prompt, &qoe, &states, self.surge.mode(), depth);
+            match decision {
+                AdmissionDecision::Admit => {
+                    let d = self.queue.pop_front().unwrap();
+                    self.route(d.spec)?;
+                    self.stats.admitted += 1;
+                }
+                _ => return Ok(()),
+            }
+        }
+    }
+
+    /// Drain the serving tier, giving the defer queue its bounded chance
+    /// to be admitted as capacity frees, then post-process delivery.
+    pub fn finish(&mut self) -> Result<GatewayRunResult> {
+        // Step simulated time forward until the queue resolves: each
+        // entry either admits or hits its defer timeout.
+        while !self.queue.is_empty() {
+            let t = self.target.now() + 0.25;
+            self.target.advance_to(t)?;
+            self.flush_deferred(t)?;
+        }
+        let per_replica = self.target.drain()?;
+        self.stats.surge_transitions = self.surge.transitions();
+        let mut served = Vec::new();
+        for m in &per_replica {
+            for r in &m.requests {
+                served.push(served_outcome(r, self.cfg.pacing_enabled, &self.cfg.pacing));
+            }
+        }
+        Ok(GatewayRunResult {
+            per_replica,
+            served,
+            rejections: self.rejections.clone(),
+            stats: self.stats.clone(),
+        })
+    }
+
+    /// Run a whole trace through the gateway and finish.
+    pub fn run_trace(&mut self, mut trace: Vec<RequestSpec>) -> Result<GatewayRunResult> {
+        trace.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        for spec in trace {
+            self.submit(spec)?;
+        }
+        self.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SchedulerConfig;
+    use crate::coordinator::engine::EngineConfig;
+    use crate::coordinator::sched::fcfs::FcfsScheduler;
+    use crate::model::gpu::a100_4x;
+    use crate::model::latency::LatencyModel;
+    use crate::model::llm::opt_66b;
+    use crate::util::stats::mean;
+    use crate::workload::{ArrivalProcess, Dataset, QoeTrace, Workload};
+
+    fn sim_engine(kv_tokens: usize) -> Engine<SimBackend, VirtualClock> {
+        let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+        let cfg = EngineConfig {
+            kv_capacity_tokens: kv_tokens,
+            swap_capacity_tokens: kv_tokens * 2,
+            ..EngineConfig::default()
+        };
+        Engine::new(
+            cfg,
+            SimBackend::new(latency.clone()),
+            VirtualClock::default(),
+            Box::new(FcfsScheduler::new()),
+            latency,
+        )
+    }
+
+    fn trace(n: usize, rate: f64, seed: u64) -> Vec<RequestSpec> {
+        Workload {
+            dataset: Dataset::ShareGpt,
+            arrivals: ArrivalProcess::Poisson { rate },
+            qoe_trace: QoeTrace::TextReading,
+            num_requests: n,
+            seed,
+        }
+        .generate()
+    }
+
+    fn disabled_cfg() -> GatewayConfig {
+        GatewayConfig {
+            admission_enabled: false,
+            pacing_enabled: false,
+            ..GatewayConfig::default()
+        }
+    }
+
+    #[test]
+    fn disabled_gateway_is_transparent() {
+        // With admission and pacing off, the gateway must reproduce a
+        // plain engine run exactly.
+        let reqs = trace(40, 2.0, 11);
+        let mut plain = sim_engine(100_000);
+        plain.load_trace(reqs.clone());
+        let plain_qoe = plain.run_to_completion().unwrap().avg_qoe();
+
+        let mut gw = Gateway::new(sim_engine(100_000), disabled_cfg());
+        let res = gw.run_trace(reqs).unwrap();
+        assert_eq!(res.served.len(), 40);
+        assert!(res.rejections.is_empty());
+        let gw_qoe = mean(&res.served.iter().map(|s| s.paced_qoe).collect::<Vec<_>>());
+        assert!((gw_qoe - plain_qoe).abs() < 1e-9, "gateway {gw_qoe} vs plain {plain_qoe}");
+    }
+
+    #[test]
+    fn overload_sheds_and_protects_served_qoe() {
+        // Far past capacity, the full gateway must reject some requests
+        // and serve the admitted ones at better QoE than the unprotected
+        // engine's average.
+        let reqs = trace(120, 12.0, 7);
+        let mut plain = sim_engine(2500);
+        plain.load_trace(reqs.clone());
+        let baseline = plain.run_to_completion().unwrap().avg_qoe();
+
+        let mut cfg = GatewayConfig::default();
+        cfg.surge.baseline_rate = 1.5;
+        let mut gw = Gateway::new(sim_engine(2500), cfg);
+        let res = gw.run_trace(reqs).unwrap();
+        assert!(res.stats.rejected > 0, "no rejections under 8× overload");
+        assert_eq!(res.served.len() + res.rejections.len(), 120, "request conservation");
+        assert!(
+            res.mean_served_qoe() > baseline,
+            "served QoE {:.3} must beat unprotected {:.3}",
+            res.mean_served_qoe(),
+            baseline
+        );
+    }
+
+    #[test]
+    fn deferred_request_is_served_when_capacity_frees() {
+        // Normal mode, a request that does not fit defers, then admits
+        // once the running request finishes.
+        let mut cfg = GatewayConfig::default();
+        cfg.admission.max_defer_wait = 60.0;
+        cfg.pacing_enabled = false;
+        let mut gw = Gateway::new(sim_engine(2000), cfg);
+        let mk = |id: usize, arrival: f64, prompt: usize| RequestSpec {
+            id,
+            arrival,
+            prompt_tokens: prompt,
+            output_tokens: 40,
+            qoe: QoeSpec::new(1.0, 4.8),
+        };
+        assert_eq!(gw.submit(mk(0, 0.5, 1500)).unwrap(), SubmitOutcome::Admitted);
+        assert_eq!(gw.submit(mk(1, 1.0, 1200)).unwrap(), SubmitOutcome::Deferred);
+        let res = gw.finish().unwrap();
+        assert_eq!(res.served.len(), 2, "deferred request must eventually serve");
+        assert!(res.rejections.is_empty());
+        assert_eq!(res.stats.deferred, 1);
+        // The deferred request's wait is charged to its QoE (arrival
+        // timestamp preserved): its QoE must trail the first request's.
+        let q0 = res.served.iter().find(|s| s.id == 0).unwrap().raw_qoe;
+        let q1 = res.served.iter().find(|s| s.id == 1).unwrap().raw_qoe;
+        assert!(q1 < q0, "deferral must cost QoE: {q1} !< {q0}");
+    }
+
+    #[test]
+    fn pacing_reduces_early_tokens_without_qoe_loss() {
+        let mut cfg = GatewayConfig::default();
+        cfg.admission_enabled = false;
+        cfg.pacing_enabled = true;
+        let mut gw = Gateway::new(sim_engine(100_000), cfg);
+        // Light load → heavy overfast generation.
+        let res = gw.run_trace(trace(30, 0.5, 3)).unwrap();
+        let (raw, paced) = res.early_token_fractions();
+        assert!(raw > 0.2, "light load should generate ahead of digestion ({raw})");
+        assert!(paced < raw, "pacing must reduce early tokens ({paced} !< {raw})");
+        for s in &res.served {
+            assert!(
+                s.paced_qoe >= s.raw_qoe - 1e-6,
+                "pacing lowered QoE on {}: {} < {}",
+                s.id,
+                s.paced_qoe,
+                s.raw_qoe
+            );
+        }
+    }
+
+    #[test]
+    fn cluster_target_routes_and_completes() {
+        let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+        let ecfg = EngineConfig {
+            kv_capacity_tokens: 8000,
+            swap_capacity_tokens: 16_000,
+            ..EngineConfig::default()
+        };
+        let cluster = Cluster::new(
+            3,
+            ecfg,
+            latency,
+            &SchedulerConfig::Fcfs,
+            RoutingPolicy::QoeAware,
+        );
+        let mut gw = Gateway::new(cluster, disabled_cfg());
+        let res = gw.run_trace(trace(60, 3.0, 5)).unwrap();
+        assert_eq!(res.served.len(), 60);
+        assert_eq!(res.per_replica.len(), 3);
+        let total: usize = res.per_replica.iter().map(|m| m.requests.len()).sum();
+        assert_eq!(total, 60);
+    }
+
+    #[test]
+    fn early_token_counter_matches_intuition() {
+        let spec = QoeSpec::new(1.0, 2.0);
+        // Burst of 5 at t=1: the first displays immediately, 4 are early.
+        assert_eq!(count_early_tokens(&spec, &[1.0, 1.0, 1.0, 1.0, 1.0]), 4);
+        // Exactly paced delivery: never early.
+        let paced: Vec<f64> = (0..6).map(|i| 1.0 + i as f64 / 2.0).collect();
+        assert_eq!(count_early_tokens(&spec, &paced), 0);
+    }
+}

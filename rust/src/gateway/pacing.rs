@@ -1,0 +1,264 @@
+//! Server-side token delivery pacing.
+//!
+//! The engine generates tokens as fast as the batch allows — often far
+//! faster than the user's digestion speed (the paper's "overfast
+//! generation", Fig. 3). The client-side buffer (paper §5) hides the
+//! jitter, but the *server* still pays to push tokens nobody can read
+//! yet. The gateway pacer shapes delivery at the server: each request's
+//! tokens are released at its expected TDS (times a configurable safety
+//! factor), after letting a small lead buffer through unpaced so the
+//! client always has a few tokens in hand against network jitter and
+//! short preemptions.
+//!
+//! Invariants (tested below):
+//! - conservation: every pushed token is eventually released, in order;
+//! - a release never precedes its token's generation time;
+//! - paced releases are spaced at least `1/(tds × rate_factor)` apart
+//!   once the lead buffer has passed.
+
+use std::collections::VecDeque;
+
+use crate::qoe::spec::QoeSpec;
+
+/// Pacing configuration.
+#[derive(Debug, Clone)]
+pub struct PacingConfig {
+    /// Release-rate multiplier on the request's expected TDS. Values
+    /// slightly above 1 keep the client buffer from ever running dry
+    /// while still reclaiming almost all of the overfast surplus.
+    pub rate_factor: f64,
+    /// Tokens let through unpaced to build the client-side lead buffer.
+    pub lead_tokens: usize,
+}
+
+impl Default for PacingConfig {
+    fn default() -> Self {
+        PacingConfig { rate_factor: 1.25, lead_tokens: 4 }
+    }
+}
+
+/// Per-request delivery shaper.
+#[derive(Debug, Clone)]
+pub struct TokenPacer {
+    /// Minimum spacing between paced releases (s); 0 = pass-through.
+    interval: f64,
+    /// Tokens released unpaced before the interval applies.
+    lead: usize,
+    /// Generation timestamps of tokens not yet released.
+    pending: VecDeque<f64>,
+    released: usize,
+    /// Release time of the most recently released token.
+    last_release: f64,
+}
+
+impl TokenPacer {
+    pub fn new(spec: &QoeSpec, cfg: &PacingConfig) -> Self {
+        assert!(cfg.rate_factor > 0.0, "rate factor must be positive");
+        TokenPacer {
+            interval: 1.0 / (spec.tds * cfg.rate_factor),
+            lead: cfg.lead_tokens.max(1),
+            pending: VecDeque::new(),
+            released: 0,
+            last_release: f64::NEG_INFINITY,
+        }
+    }
+
+    /// A pacer that releases every token immediately (pacing disabled).
+    pub fn passthrough() -> Self {
+        TokenPacer {
+            interval: 0.0,
+            lead: usize::MAX,
+            pending: VecDeque::new(),
+            released: 0,
+            last_release: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Record a token generated at time `t`.
+    pub fn push(&mut self, generated_at: f64) {
+        self.pending.push_back(generated_at);
+    }
+
+    /// Record `n` tokens generated at time `t`.
+    pub fn push_n(&mut self, generated_at: f64, n: usize) {
+        for _ in 0..n {
+            self.pending.push_back(generated_at);
+        }
+    }
+
+    /// Earliest time the next pending token may be released.
+    pub fn next_due(&self) -> Option<f64> {
+        self.pending.front().map(|&gen_t| self.due_time(gen_t))
+    }
+
+    fn due_time(&self, gen_t: f64) -> f64 {
+        if self.released < self.lead {
+            gen_t.max(self.last_release)
+        } else {
+            gen_t.max(self.last_release + self.interval)
+        }
+    }
+
+    /// Release every token due by `now`; returns how many were released.
+    /// Calls must use non-decreasing `now`.
+    pub fn release_due(&mut self, now: f64) -> usize {
+        let mut n = 0;
+        while let Some(&gen_t) = self.pending.front() {
+            let due = self.due_time(gen_t);
+            if due > now {
+                break;
+            }
+            self.pending.pop_front();
+            self.released += 1;
+            self.last_release = due;
+            n += 1;
+        }
+        n
+    }
+
+    /// Tokens generated but not yet released.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Tokens released so far.
+    pub fn released(&self) -> usize {
+        self.released
+    }
+}
+
+/// Batch form of the pacer for trace post-processing: map generation
+/// times to release times under the same policy as [`TokenPacer`].
+/// Times are request-relative and must be non-decreasing.
+pub fn pace_times(spec: &QoeSpec, cfg: &PacingConfig, times: &[f64]) -> Vec<f64> {
+    let interval = 1.0 / (spec.tds * cfg.rate_factor);
+    let lead = cfg.lead_tokens.max(1);
+    let mut out = Vec::with_capacity(times.len());
+    let mut last = f64::NEG_INFINITY;
+    for (i, &t) in times.iter().enumerate() {
+        let r = if i < lead { t.max(last) } else { t.max(last + interval) };
+        out.push(r);
+        last = r;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> QoeSpec {
+        QoeSpec::new(1.0, 4.0) // 4 tok/s digestion
+    }
+
+    fn cfg() -> PacingConfig {
+        PacingConfig { rate_factor: 1.0, lead_tokens: 2 } // 0.25 s interval
+    }
+
+    #[test]
+    fn conservation_in_order() {
+        // Every generated token is eventually released, exactly once, in
+        // order, never before its generation time.
+        let mut p = TokenPacer::new(&spec(), &cfg());
+        let gen_times: Vec<f64> = vec![0.5, 0.5, 0.5, 0.5, 0.9, 2.0, 2.0, 2.0, 5.0, 5.1];
+        for &t in &gen_times {
+            p.push(t);
+        }
+        let mut releases: Vec<f64> = Vec::new();
+        let mut now = 0.0;
+        while p.pending() > 0 {
+            now += 0.05;
+            let n = p.release_due(now);
+            for _ in 0..n {
+                releases.push(now);
+            }
+            assert!(now < 100.0, "pacer failed to drain");
+        }
+        assert_eq!(releases.len(), gen_times.len(), "token conservation");
+        assert_eq!(p.released(), gen_times.len());
+        assert!(releases.windows(2).all(|w| w[1] >= w[0]), "in-order release");
+        for (r, g) in releases.iter().zip(&gen_times) {
+            assert!(r + 1e-9 >= *g, "released {r} before generated {g}");
+        }
+    }
+
+    #[test]
+    fn lead_burst_passes_then_paced() {
+        let mut p = TokenPacer::new(&spec(), &cfg());
+        p.push_n(1.0, 6);
+        // At t=1.0: the 2 lead tokens go out immediately, the rest wait.
+        assert_eq!(p.release_due(1.0), 2);
+        // Paced at 0.25 s spacing afterwards.
+        assert_eq!(p.release_due(1.24), 0);
+        assert_eq!(p.release_due(1.25), 1);
+        assert_eq!(p.release_due(1.75), 2);
+        assert_eq!(p.release_due(10.0), 1);
+        assert_eq!(p.pending(), 0);
+    }
+
+    #[test]
+    fn slow_generation_passes_through() {
+        // Generation slower than the pacing rate: release == generation.
+        let mut p = TokenPacer::new(&spec(), &cfg());
+        for i in 0..5 {
+            let t = 1.0 + i as f64; // 1 tok/s < 4 tok/s
+            p.push(t);
+            assert_eq!(p.release_due(t), 1, "token {i} should pass straight through");
+        }
+    }
+
+    #[test]
+    fn passthrough_never_delays() {
+        let mut p = TokenPacer::passthrough();
+        p.push_n(0.5, 100);
+        assert_eq!(p.release_due(0.5), 100);
+    }
+
+    #[test]
+    fn incremental_matches_batch() {
+        // release_due must realize exactly the schedule pace_times computes:
+        // stepping the pacer to each expected release instant yields at
+        // least that many cumulative releases, and nothing earlier.
+        let sp = spec();
+        let c = cfg();
+        let gen_times: Vec<f64> = vec![0.2, 0.2, 0.2, 1.0, 1.0, 1.0, 1.0, 3.0, 3.01, 3.02];
+        let expect = pace_times(&sp, &c, &gen_times);
+        let mut p = TokenPacer::new(&sp, &c);
+        for &t in &gen_times {
+            p.push(t);
+        }
+        let mut total = 0;
+        let mut prev = f64::NEG_INFINITY;
+        for (i, &e) in expect.iter().enumerate() {
+            if e > prev + 1e-9 {
+                // Nothing may be due strictly before the next expected
+                // instant (skip when several tokens share one instant).
+                total += p.release_due(e - 1e-6);
+                assert!(total <= i, "released early before {e}");
+                prev = e;
+            }
+            total += p.release_due(e);
+            assert!(total >= i + 1, "by t={e} expected {} releases, got {total}", i + 1);
+        }
+        assert_eq!(total, expect.len());
+        assert_eq!(p.pending(), 0);
+    }
+
+    #[test]
+    fn pace_times_monotone_and_bounded() {
+        let sp = spec();
+        let c = PacingConfig { rate_factor: 1.25, lead_tokens: 4 };
+        let times: Vec<f64> = (0..50).map(|i| 0.5 + 0.01 * i as f64).collect();
+        let paced = pace_times(&sp, &c, &times);
+        assert_eq!(paced.len(), times.len());
+        assert!(paced.windows(2).all(|w| w[1] >= w[0]));
+        for (p, t) in paced.iter().zip(&times) {
+            assert!(p >= t);
+        }
+        // After the lead, spacing is at least the pacing interval.
+        let interval = 1.0 / (sp.tds * c.rate_factor);
+        for w in paced[c.lead_tokens..].windows(2) {
+            assert!(w[1] - w[0] >= interval - 1e-9);
+        }
+    }
+}

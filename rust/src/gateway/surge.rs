@@ -1,0 +1,237 @@
+//! Windowed arrival-rate estimation and surge detection.
+//!
+//! The gateway needs to know *when* to switch admission from its
+//! permissive normal mode into surge mode (shed instead of queue,
+//! reroute onto the least-loaded replica). A sliding-window rate
+//! estimator with enter/exit hysteresis does that: the mode enters
+//! Surge when the windowed arrival rate exceeds `enter_factor ×
+//! baseline_rate` and only returns to Normal once it falls below
+//! `exit_factor × baseline_rate`, so rates hovering at the threshold
+//! cannot flap the mode (and with it, admission decisions).
+
+use std::collections::VecDeque;
+
+/// The gateway's load regime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadMode {
+    /// Arrival rate within sustainable capacity: queue, never shed.
+    Normal,
+    /// Arrival surge: shed load that cannot be served at acceptable QoE.
+    Surge,
+}
+
+impl LoadMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            LoadMode::Normal => "normal",
+            LoadMode::Surge => "surge",
+        }
+    }
+}
+
+/// Surge detector configuration.
+#[derive(Debug, Clone)]
+pub struct SurgeConfig {
+    /// Sliding window length for the rate estimate (s).
+    pub window_secs: f64,
+    /// Sustainable arrival rate of the deployment (req/s) — typically the
+    /// analytic capacity estimate of the serving tier behind the gateway.
+    pub baseline_rate: f64,
+    /// Enter Surge above `enter_factor × baseline_rate`.
+    pub enter_factor: f64,
+    /// Leave Surge below `exit_factor × baseline_rate` (< enter_factor:
+    /// the gap is the hysteresis band).
+    pub exit_factor: f64,
+    /// Minimum arrivals in the window before the estimate is trusted.
+    pub min_arrivals: usize,
+}
+
+impl Default for SurgeConfig {
+    fn default() -> Self {
+        SurgeConfig {
+            window_secs: 10.0,
+            baseline_rate: 3.0,
+            enter_factor: 1.5,
+            exit_factor: 1.1,
+            min_arrivals: 8,
+        }
+    }
+}
+
+/// Sliding-window arrival-rate estimator with hysteresis mode switching.
+#[derive(Debug, Clone)]
+pub struct SurgeDetector {
+    cfg: SurgeConfig,
+    /// Arrival timestamps inside the current window, oldest first.
+    arrivals: VecDeque<f64>,
+    mode: LoadMode,
+    transitions: u64,
+}
+
+impl SurgeDetector {
+    pub fn new(cfg: SurgeConfig) -> Self {
+        assert!(cfg.window_secs > 0.0, "window must be positive");
+        assert!(cfg.baseline_rate > 0.0, "baseline rate must be positive");
+        assert!(
+            cfg.enter_factor > cfg.exit_factor,
+            "enter factor must exceed exit factor (hysteresis band)"
+        );
+        SurgeDetector { cfg, arrivals: VecDeque::new(), mode: LoadMode::Normal, transitions: 0 }
+    }
+
+    pub fn config(&self) -> &SurgeConfig {
+        &self.cfg
+    }
+
+    /// Record an arrival at time `t` (monotone) and update the mode.
+    pub fn observe(&mut self, t: f64) {
+        self.arrivals.push_back(t);
+        let cutoff = t - self.cfg.window_secs;
+        while self.arrivals.front().is_some_and(|&a| a < cutoff) {
+            self.arrivals.pop_front();
+        }
+        self.update_mode(t);
+    }
+
+    /// Windowed arrival-rate estimate (req/s) as of time `t`.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let cutoff = t - self.cfg.window_secs;
+        let n = self.arrivals.iter().filter(|&&a| a >= cutoff).count();
+        n as f64 / self.cfg.window_secs
+    }
+
+    pub fn mode(&self) -> LoadMode {
+        self.mode
+    }
+
+    /// Number of Normal↔Surge transitions so far (flap diagnostics).
+    pub fn transitions(&self) -> u64 {
+        self.transitions
+    }
+
+    fn update_mode(&mut self, t: f64) {
+        let rate = self.rate_at(t);
+        // The min_arrivals guard gates only *entering* Surge (don't trust
+        // a thin sample); the exit must stay live even under sparse
+        // post-surge traffic, or the mode latches in Surge forever.
+        let next = match self.mode {
+            LoadMode::Normal
+                if self.arrivals.len() >= self.cfg.min_arrivals
+                    && rate > self.cfg.enter_factor * self.cfg.baseline_rate =>
+            {
+                LoadMode::Surge
+            }
+            LoadMode::Surge if rate < self.cfg.exit_factor * self.cfg.baseline_rate => {
+                LoadMode::Normal
+            }
+            same => same,
+        };
+        if next != self.mode {
+            self.mode = next;
+            self.transitions += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn detector() -> SurgeDetector {
+        // baseline 2 req/s, enter above 3, exit below 2.2, 5 s window.
+        SurgeDetector::new(SurgeConfig {
+            window_secs: 5.0,
+            baseline_rate: 2.0,
+            enter_factor: 1.5,
+            exit_factor: 1.1,
+            min_arrivals: 4,
+        })
+    }
+
+    /// Feed `n` arrivals at a constant rate starting at `t0`.
+    fn feed(d: &mut SurgeDetector, t0: f64, rate: f64, n: usize) -> f64 {
+        let mut t = t0;
+        for _ in 0..n {
+            t += 1.0 / rate;
+            d.observe(t);
+        }
+        t
+    }
+
+    #[test]
+    fn steady_load_stays_normal() {
+        let mut d = detector();
+        feed(&mut d, 0.0, 2.0, 60);
+        assert_eq!(d.mode(), LoadMode::Normal);
+        assert_eq!(d.transitions(), 0);
+    }
+
+    #[test]
+    fn burst_enters_surge_then_recovers() {
+        let mut d = detector();
+        let t = feed(&mut d, 0.0, 2.0, 20);
+        assert_eq!(d.mode(), LoadMode::Normal);
+        let t = feed(&mut d, t, 8.0, 60); // 4× burst
+        assert_eq!(d.mode(), LoadMode::Surge);
+        // Back to baseline: the window drains below the exit threshold.
+        feed(&mut d, t, 1.0, 30);
+        assert_eq!(d.mode(), LoadMode::Normal);
+        assert_eq!(d.transitions(), 2);
+    }
+
+    #[test]
+    fn rate_estimate_tracks_window() {
+        let mut d = detector();
+        let t = feed(&mut d, 0.0, 4.0, 40);
+        let r = d.rate_at(t);
+        assert!((r - 4.0).abs() < 0.5, "rate {r}");
+    }
+
+    #[test]
+    fn hysteresis_band_does_not_flap() {
+        // Rate oscillating between the exit and enter thresholds (2.2–3.0
+        // req/s here) must hold whatever mode it is in: at most the one
+        // transition that first entered Surge.
+        let mut d = detector();
+        let mut t = feed(&mut d, 0.0, 8.0, 40); // enter surge
+        assert_eq!(d.mode(), LoadMode::Surge);
+        let before = d.transitions();
+        for _ in 0..20 {
+            t = feed(&mut d, t, 2.8, 10); // inside the band
+            t = feed(&mut d, t, 2.4, 10); // still inside the band
+        }
+        assert_eq!(d.mode(), LoadMode::Surge);
+        assert_eq!(d.transitions(), before, "mode flapped inside the band");
+    }
+
+    #[test]
+    fn sparse_traffic_still_exits_surge() {
+        // After a burst, near-dead traffic (fewer than min_arrivals in
+        // the window) must still release the Surge latch.
+        let mut d = detector();
+        let t = feed(&mut d, 0.0, 8.0, 40);
+        assert_eq!(d.mode(), LoadMode::Surge);
+        feed(&mut d, t, 0.2, 4); // 1 arrival / 5 s — window nearly empty
+        assert_eq!(d.mode(), LoadMode::Normal);
+    }
+
+    #[test]
+    fn too_few_arrivals_keep_normal() {
+        let mut d = detector();
+        // 3 arrivals in a burst — below min_arrivals, no mode change.
+        for t in [0.0, 0.01, 0.02] {
+            d.observe(t);
+        }
+        assert_eq!(d.mode(), LoadMode::Normal);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_inverted_hysteresis() {
+        SurgeDetector::new(SurgeConfig {
+            enter_factor: 1.0,
+            exit_factor: 1.5,
+            ..SurgeConfig::default()
+        });
+    }
+}

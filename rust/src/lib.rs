@@ -9,6 +9,7 @@ pub mod backend;
 pub mod cluster;
 pub mod config;
 pub mod experiments;
+pub mod gateway;
 pub mod server;
 pub mod coordinator;
 pub mod model;

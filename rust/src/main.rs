@@ -112,19 +112,82 @@ fn cmd_exp(argv: &[String]) -> i32 {
 fn cmd_serve(argv: &[String]) -> i32 {
     let specs = [
         OptSpec::value("addr", Some("127.0.0.1:7878"), "listen address"),
-        OptSpec::value("kv-tokens", Some("2048"), "device KV capacity (tokens)"),
-        OptSpec::value("max-output", Some("128"), "max generated tokens per request"),
+        OptSpec::value("kv-tokens", None, "device KV capacity (tokens) [default: 2048 or config]"),
+        OptSpec::value("max-output", None, "max generated tokens per request [default: 128 or config]"),
+        OptSpec::value("model", Some("tiny-opt"), "latency-model profile (tiny-opt|opt-13b|...)"),
+        OptSpec::value("gpu", Some("a100-1x"), "gpu profile (a100-1x|a100-4x|a40)"),
+        OptSpec::value("sched", Some("andes"), "fcfs | rr | andes"),
+        OptSpec::value("config", None, "JSON deployment config (overrides model/gpu/sched/engine/gateway)"),
+        OptSpec::flag("no-gateway", "disable gateway admission control and token pacing"),
+        OptSpec::value("lead", None, "pacer lead tokens (default from config: 4)"),
     ];
     let about = "Serve the real tiny-OPT model over TCP (JSON lines)";
     let args = match Args::parse(argv, &specs) {
         Ok(a) => a,
         Err(e) => return die_on_cli("serve", about, &specs, e),
     };
-    let cfg = andes::server::ServerConfig {
+    // Precedence: explicit CLI flag > config file > built-in default.
+    let mut cfg = andes::server::ServerConfig {
         addr: args.get("addr").unwrap().to_string(),
-        kv_capacity_tokens: args.get_usize("kv-tokens").unwrap().unwrap(),
-        max_output_tokens: args.get_usize("max-output").unwrap().unwrap(),
+        ..andes::server::ServerConfig::default()
     };
+    if let Some(path) = args.get("config") {
+        match andes::config::AndesDeployment::from_file(std::path::Path::new(path)) {
+            Ok(d) => {
+                cfg.llm = d.llm;
+                cfg.gpu = d.gpu;
+                cfg.scheduler = d.scheduler;
+                cfg.gateway = d.gateway;
+                cfg.kv_capacity_tokens = d.engine.kv_capacity_tokens;
+                cfg.max_output_tokens = d.engine.max_output_tokens;
+            }
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                return 2;
+            }
+        }
+    } else {
+        if let Some(llm) = llm_by_name(args.get("model").unwrap()) {
+            cfg.llm = llm;
+        } else {
+            eprintln!("unknown model '{}'", args.get("model").unwrap());
+            return 2;
+        }
+        if let Some(gpu) = gpu_by_name(args.get("gpu").unwrap()) {
+            cfg.gpu = gpu;
+        } else {
+            eprintln!("unknown gpu '{}'", args.get("gpu").unwrap());
+            return 2;
+        }
+        cfg.scheduler = match args.get("sched").unwrap() {
+            "fcfs" => andes::config::SchedulerConfig::Fcfs,
+            "rr" => andes::config::SchedulerConfig::RoundRobin { quantum: 50 },
+            "andes" => andes::config::SchedulerConfig::Andes(Default::default()),
+            other => {
+                eprintln!("unknown scheduler '{other}'");
+                return 2;
+            }
+        };
+    }
+    if args.has_flag("no-gateway") {
+        cfg.gateway.admission_enabled = false;
+        cfg.gateway.pacing_enabled = false;
+    }
+    match args.get_usize("kv-tokens") {
+        Ok(Some(kv)) => cfg.kv_capacity_tokens = kv.max(1),
+        Ok(None) => {}
+        Err(e) => return die_on_cli("serve", about, &specs, e),
+    }
+    match args.get_usize("max-output") {
+        Ok(Some(m)) => cfg.max_output_tokens = m.max(1),
+        Ok(None) => {}
+        Err(e) => return die_on_cli("serve", about, &specs, e),
+    }
+    match args.get_usize("lead") {
+        Ok(Some(lead)) => cfg.gateway.pacing.lead_tokens = lead.max(1),
+        Ok(None) => {}
+        Err(e) => return die_on_cli("serve", about, &specs, e),
+    }
     match andes::server::serve(cfg, None) {
         Ok(()) => 0,
         Err(e) => {

@@ -5,18 +5,24 @@
 //!
 //! ```text
 //! → {"prompt": "...", "max_tokens": 64, "ttft": 1.0, "tds": 4.8}
-//! ← {"event":"token","text":"...","index":0}           (streamed)
+//! ← {"event":"token","text":"...","index":0}           (streamed, paced)
 //! ← {"event":"done","tokens":42,"ttft":0.18,"qoe":1.0}
+//! ← {"event":"rejected","reason":"surge-shed","detail":"..."}
 //! ```
 //!
 //! Architecture: one engine thread owns the PJRT model (the xla client
 //! is not Send) and runs the continuous-batching loop; connection
 //! threads submit requests through an mpsc channel and receive token
-//! events through per-request channels. The client-side token buffer
-//! (paper §5) lives in [`crate::qoe::buffer`] and is exercised by the
-//! example clients.
+//! events through per-request channels. The engine thread fronts the
+//! model with the gateway components ([`crate::gateway`]): an admission
+//! controller + surge detector decide admit/defer/reject per request,
+//! and a per-request [`TokenPacer`] releases tokens at the client's
+//! digestion speed instead of the raw generation speed. The model, GPU
+//! profile, and scheduler are configured through [`ServerConfig`]
+//! (reusing [`crate::config::SchedulerConfig`]), so the server and the
+//! gateway experiments share one config path.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -26,12 +32,16 @@ use anyhow::{Context, Result};
 
 use crate::backend::pjrt::PjrtBackend;
 use crate::backend::WallClock;
+use crate::config::SchedulerConfig;
 use crate::coordinator::engine::{Engine, EngineConfig};
 use crate::coordinator::request::RequestId;
-use crate::coordinator::sched::andes::AndesScheduler;
-use crate::model::gpu::a100_1x;
+use crate::gateway::{
+    engine_state, AdmissionController, AdmissionDecision, GatewayConfig, RejectReason,
+    SurgeDetector, TokenPacer,
+};
+use crate::model::gpu::{a100_1x, GpuProfile};
 use crate::model::latency::LatencyModel;
-use crate::model::llm::tiny_opt;
+use crate::model::llm::{tiny_opt, LlmProfile};
 use crate::qoe::spec::QoeSpec;
 use crate::runtime::engine::ModelRuntime;
 use crate::runtime::tokenizer::ByteTokenizer;
@@ -53,6 +63,7 @@ struct Submission {
 pub enum Event {
     Token { index: usize, token: u32 },
     Done { tokens: usize, ttft: f64, qoe: f64 },
+    Rejected { reason: RejectReason },
 }
 
 /// Server configuration.
@@ -60,6 +71,12 @@ pub struct ServerConfig {
     pub addr: String,
     pub kv_capacity_tokens: usize,
     pub max_output_tokens: usize,
+    /// Model profile driving the latency model the scheduler sees. The
+    /// generated tokens always come from the compiled tiny-OPT runtime.
+    pub llm: LlmProfile,
+    pub gpu: GpuProfile,
+    pub scheduler: SchedulerConfig,
+    pub gateway: GatewayConfig,
 }
 
 impl Default for ServerConfig {
@@ -68,11 +85,29 @@ impl Default for ServerConfig {
             addr: "127.0.0.1:7878".into(),
             kv_capacity_tokens: 2048,
             max_output_tokens: 128,
+            llm: tiny_opt(),
+            gpu: a100_1x(),
+            scheduler: SchedulerConfig::Andes(Default::default()),
+            gateway: GatewayConfig::default(),
         }
     }
 }
 
-/// Engine thread: owns the model, pulls submissions, streams events.
+/// Per-request serving state on the engine thread.
+struct Stream {
+    events: Sender<Event>,
+    pacer: TokenPacer,
+    /// Token values pulled from the backend as they are generated.
+    tokens: Vec<u32>,
+    /// Tokens released to the connection so far.
+    sent: usize,
+    /// Set when the engine finished the request; the Done event is held
+    /// until the pacer drains.
+    done: Option<(usize, f64, f64)>,
+}
+
+/// Engine thread: owns the model, pulls submissions, streams events
+/// through the gateway's admission controller and per-request pacers.
 fn engine_loop(cfg: ServerConfig, rx: Receiver<Submission>) -> Result<()> {
     let runtime = ModelRuntime::load(&ModelRuntime::default_dir())
         .context("loading artifacts (run `make artifacts`)")?;
@@ -83,21 +118,65 @@ fn engine_loop(cfg: ServerConfig, rx: Receiver<Submission>) -> Result<()> {
         max_output_tokens: cfg.max_output_tokens,
         ..EngineConfig::default()
     };
-    let latency = LatencyModel::for_deployment(&tiny_opt(), &a100_1x());
+    let latency = LatencyModel::for_deployment(&cfg.llm, &cfg.gpu);
     let mut engine = Engine::new(
         engine_cfg,
         backend,
         WallClock::new(),
-        Box::new(AndesScheduler::with_defaults()),
+        cfg.scheduler.build(),
         latency,
     );
 
-    let mut sinks: HashMap<RequestId, Sender<Event>> = HashMap::new();
-    let mut delivered: HashMap<RequestId, usize> = HashMap::new();
-    let mut reported = 0usize; // finished requests already notified
+    let mut admission = AdmissionController::new(cfg.gateway.admission.clone());
+    let mut surge = SurgeDetector::new(cfg.gateway.surge.clone());
+    let mut streams: HashMap<RequestId, Stream> = HashMap::new();
+    let mut deferred: VecDeque<(Submission, f64)> = VecDeque::new();
+    let mut reported = 0usize; // finished requests already examined
+
+    // `arrival` is the request's original arrival time: admit time for
+    // fresh submissions, enqueue time for deferred ones — so defer-queue
+    // wait is charged to TTFT/QoE exactly as in the simulated gateway.
+    fn admit(
+        sub: Submission,
+        arrival: f64,
+        engine: &mut Engine<PjrtBackend, WallClock>,
+        streams: &mut HashMap<RequestId, Stream>,
+        cfg: &ServerConfig,
+    ) {
+        let Submission { prompt, max_tokens, qoe, events } = sub;
+        let spec = RequestSpec {
+            id: 0, // engine assigns
+            arrival,
+            prompt_tokens: prompt.len(),
+            output_tokens: max_tokens,
+            qoe,
+        };
+        match engine.submit_with_prompt(spec, prompt) {
+            Ok(id) => {
+                let pacer = if cfg.gateway.pacing_enabled {
+                    TokenPacer::new(&qoe, &cfg.gateway.pacing)
+                } else {
+                    TokenPacer::passthrough()
+                };
+                streams.insert(
+                    id,
+                    Stream { events, pacer, tokens: Vec::new(), sent: 0, done: None },
+                );
+            }
+            Err(e) => {
+                let _ = events.send(Event::Done { tokens: 0, ttft: 0.0, qoe: 0.0 });
+                log::warn!("failed to submit request: {e:#}");
+            }
+        }
+    }
+
     loop {
-        // Drain new submissions (block briefly when idle).
-        let first = if engine.has_work() {
+        let pacing_busy =
+            streams.values().any(|s| s.pacer.pending() > 0 || s.done.is_some());
+        let busy = engine.has_work() || pacing_busy || !deferred.is_empty();
+
+        // Drain new submissions (block briefly when fully idle).
+        let first = if busy {
             rx.try_recv().ok()
         } else {
             match rx.recv_timeout(std::time::Duration::from_millis(50)) {
@@ -113,57 +192,112 @@ fn engine_loop(cfg: ServerConfig, rx: Receiver<Submission>) -> Result<()> {
         while let Ok(s) = rx.try_recv() {
             incoming.push(s);
         }
-        for sub in incoming {
-            let spec = RequestSpec {
-                id: 0, // engine assigns
-                arrival: 0.0,
-                prompt_tokens: sub.prompt.len(),
-                output_tokens: sub.max_tokens,
-                qoe: sub.qoe,
-            };
-            match engine.submit_with_prompt(spec, sub.prompt) {
-                Ok(id) => {
-                    sinks.insert(id, sub.events);
-                    delivered.insert(id, 0);
+
+        // Retry deferred submissions: admit, keep waiting, or time out.
+        let now = engine.now();
+        for _ in 0..deferred.len() {
+            let (sub, t0) = deferred.pop_front().unwrap();
+            let waited = now - t0;
+            if waited > cfg.gateway.admission.max_defer_wait {
+                let _ = sub
+                    .events
+                    .send(Event::Rejected { reason: RejectReason::DeferTimeout { waited } });
+                continue;
+            }
+            let state = [engine_state(&engine)];
+            match admission.decide(
+                sub.prompt.len(),
+                &sub.qoe,
+                &state,
+                surge.mode(),
+                deferred.len(),
+            ) {
+                AdmissionDecision::Admit => admit(sub, t0, &mut engine, &mut streams, &cfg),
+                _ => {
+                    deferred.push_front((sub, t0));
+                    break; // FIFO: the head blocks the rest
                 }
-                Err(e) => {
-                    let _ = sub.events.send(Event::Done { tokens: 0, ttft: f64::NAN, qoe: 0.0 });
-                    log::warn!("rejected request: {e:#}");
+            }
+        }
+
+        // Gateway admission for newcomers.
+        for sub in incoming {
+            let t = engine.now();
+            surge.observe(t);
+            if !cfg.gateway.admission_enabled {
+                admit(sub, t, &mut engine, &mut streams, &cfg);
+                continue;
+            }
+            let state = [engine_state(&engine)];
+            match admission.decide(
+                sub.prompt.len(),
+                &sub.qoe,
+                &state,
+                surge.mode(),
+                deferred.len(),
+            ) {
+                AdmissionDecision::Admit => admit(sub, t, &mut engine, &mut streams, &cfg),
+                AdmissionDecision::Defer => deferred.push_back((sub, t)),
+                AdmissionDecision::Reject(reason) => {
+                    let _ = sub.events.send(Event::Rejected { reason });
                 }
             }
         }
 
         if engine.has_work() {
             engine.tick()?;
-            // Push newly generated tokens to their sinks.
-            let ids: Vec<RequestId> = sinks.keys().copied().collect();
-            for id in ids {
-                let req = &engine.requests()[id];
-                let have = req.generated;
-                let sent = delivered.get_mut(&id).unwrap();
-                if have > *sent {
-                    if let Some(tokens) = engine.backend().generated(id) {
-                        for (idx, &tok) in tokens.iter().enumerate().take(have).skip(*sent) {
-                            let _ = sinks[&id].send(Event::Token { index: idx, token: tok });
-                        }
+        } else if pacing_busy || !deferred.is_empty() {
+            // Only pacers or the defer queue left: let wall time pass at
+            // a fine grain instead of busy-spinning on try_recv.
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+
+        // Pull newly generated tokens into their pacers, release what is
+        // due, and hold Done until each pacer drains.
+        let now = engine.now();
+        let ids: Vec<RequestId> = streams.keys().copied().collect();
+        for id in ids {
+            let have = engine.requests().get(id).map_or(0, |r| r.generated);
+            let s = streams.get_mut(&id).unwrap();
+            if have > s.tokens.len() {
+                if let Some(toks) = engine.backend().generated(id) {
+                    for &tok in toks.iter().take(have.min(toks.len())).skip(s.tokens.len()) {
+                        s.pacer.push(now);
+                        s.tokens.push(tok);
                     }
-                    *sent = have;
                 }
             }
-            // Report finishes.
+            let due = s.pacer.release_due(now);
+            for k in 0..due {
+                let idx = s.sent + k;
+                let _ = s.events.send(Event::Token { index: idx, token: s.tokens[idx] });
+            }
+            s.sent += due;
+        }
+
+        // Record newly finished requests (Done is sent once paced out).
+        {
             let metrics = engine.metrics();
             while reported < metrics.requests.len() {
                 let r = &metrics.requests[reported];
-                if let Some(sink) = sinks.remove(&r.id) {
-                    let _ = sink.send(Event::Done {
-                        tokens: r.output_tokens,
-                        ttft: r.ttft,
-                        qoe: r.final_qoe,
-                    });
+                if let Some(s) = streams.get_mut(&r.id) {
+                    s.done = Some((r.output_tokens, r.ttft, r.final_qoe));
                 }
-                delivered.remove(&r.id);
                 reported += 1;
             }
+        }
+        let mut finished: Vec<RequestId> = Vec::new();
+        for (&id, s) in streams.iter() {
+            if s.done.is_some() && s.pacer.pending() == 0 {
+                finished.push(id);
+            }
+        }
+        for id in finished {
+            if let Some(s) = streams.remove(&id) {
+                let (tokens, ttft, qoe) = s.done.unwrap();
+                let _ = s.events.send(Event::Done { tokens, ttft, qoe });
+            }
+            engine.backend_mut().forget(id);
         }
     }
 }
@@ -207,7 +341,7 @@ fn handle_conn(stream: TcpStream, tx: Sender<Submission>) {
             let _ = writeln!(writer, r#"{{"event":"error","message":"engine gone"}}"#);
             break;
         }
-        // Stream events for this request until Done.
+        // Stream events for this request until Done or Rejected.
         for ev in erx {
             let out = match ev {
                 Event::Token { index, token } => {
@@ -219,11 +353,23 @@ fn handle_conn(stream: TcpStream, tx: Sender<Submission>) {
                     ])
                 }
                 Event::Done { tokens, ttft, qoe } => {
+                    // Non-finite values would serialize as invalid JSON.
+                    let ttft = if ttft.is_finite() { ttft } else { 0.0 };
+                    let qoe = if qoe.is_finite() { qoe } else { 0.0 };
                     let j = Json::obj(vec![
                         ("event", "done".into()),
                         ("tokens", (tokens as u64).into()),
                         ("ttft", ttft.into()),
                         ("qoe", qoe.into()),
+                    ]);
+                    let _ = writeln!(writer, "{j}");
+                    break;
+                }
+                Event::Rejected { reason } => {
+                    let j = Json::obj(vec![
+                        ("event", "rejected".into()),
+                        ("reason", reason.label().into()),
+                        ("detail", reason.detail().as_str().into()),
                     ]);
                     let _ = writeln!(writer, "{j}");
                     break;

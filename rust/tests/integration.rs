@@ -267,6 +267,64 @@ fn workload_respects_context_budget() {
     });
 }
 
+// --------------------------------------------------------------- gateway
+
+#[test]
+fn gateway_full_stack_conserves_requests() {
+    // Every arrival must come back exactly once: served (with a QoE in
+    // range) or rejected (with a structured reason) — across loads and
+    // both arrival processes.
+    use andes::cluster::{Cluster, RoutingPolicy};
+    use andes::config::SchedulerConfig;
+    use andes::gateway::{Gateway, GatewayConfig};
+
+    let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+    for (rate, cv) in [(2.0, 1.0), (8.0, 3.0)] {
+        let cfg = EngineConfig {
+            kv_capacity_tokens: 6000,
+            swap_capacity_tokens: 12_000,
+            ..EngineConfig::default()
+        };
+        let cluster = Cluster::new(
+            2,
+            cfg,
+            latency.clone(),
+            &SchedulerConfig::Fcfs,
+            RoutingPolicy::QoeAware,
+        );
+        let mut gcfg = GatewayConfig::default();
+        gcfg.surge.baseline_rate = 2.0;
+        let mut gw = Gateway::new(cluster, gcfg);
+        let trace = Workload {
+            dataset: Dataset::ShareGpt,
+            arrivals: if cv == 1.0 {
+                ArrivalProcess::Poisson { rate }
+            } else {
+                ArrivalProcess::Gamma { rate, cv }
+            },
+            qoe_trace: QoeTrace::TextReading,
+            num_requests: 80,
+            seed: 13,
+        }
+        .generate();
+        let res = gw.run_trace(trace).unwrap();
+        assert_eq!(
+            res.served.len() + res.rejections.len(),
+            80,
+            "rate {rate} cv {cv}: request conservation"
+        );
+        for s in &res.served {
+            assert!((0.0..=1.0).contains(&s.paced_qoe), "qoe out of range");
+            assert!(s.paced_early_tokens <= s.output_tokens);
+        }
+        for r in &res.rejections {
+            assert!(!r.reason.label().is_empty());
+        }
+        assert_eq!(res.stats.admitted, res.served.len());
+        assert_eq!(res.stats.rejected, res.rejections.len());
+    }
+}
+
 // ---------------------------------------------------------------- server
 
 #[test]

@@ -1,0 +1,147 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The serving/simulation stack (engine, schedulers, cluster, gateway,
+//! experiments) has no XLA dependency at runtime — only the real-model
+//! backend ([`PjRtClient`] and friends) does. This stub provides the
+//! exact API surface `backend/pjrt.rs` and `runtime/engine.rs` compile
+//! against, so the whole crate builds and tests in environments without
+//! the XLA toolchain. Creating a client fails with a clear error at
+//! runtime; the TCP-server integration test already skips gracefully
+//! when the model artifacts are absent.
+//!
+//! To serve the real compiled tiny-OPT model, repoint the workspace
+//! dependency `xla = { path = "third_party/xla" }` at the actual PJRT
+//! bindings crate (same API).
+
+use std::fmt;
+use std::path::Path;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Error type mirroring the real bindings' (Display + std::error::Error,
+/// convertible into `anyhow::Error` via `?`).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: PJRT is unavailable in this build (offline `xla` stub); \
+             point the workspace `xla` dependency at the real bindings"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Element types accepted by [`Literal::vec1`].
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+
+/// Host-side literal (tensor). The stub only carries shape-free
+/// placeholder state — every data-bearing operation errors.
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+/// Device buffer returned by an executable.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// HLO module proto parsed from a text file.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// A computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_surfaces_clear_errors() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("stub"));
+        assert!(Literal::vec1(&[1.0f32, 2.0]).reshape(&[2, 1]).is_ok());
+        assert!(Literal.to_vec::<f32>().is_err());
+        assert!(HloModuleProto::from_text_file("nope.hlo.txt").is_err());
+    }
+}
