@@ -8,8 +8,8 @@
 //! the end.
 
 use andes::gateway::{
-    AdmissionConfig, AdmissionController, LoadMode, PacingConfig, ReplicaState, SurgeConfig,
-    SurgeDetector, TokenPacer,
+    AdmissionConfig, AdmissionController, AutoscaleConfig, LoadMode, PacingConfig,
+    PredictiveAutoscaler, ReplicaState, SurgeConfig, SurgeDetector, TokenPacer,
 };
 use andes::qoe::spec::QoeSpec;
 use andes::util::bench::{header, Bencher};
@@ -41,6 +41,24 @@ fn main() {
         t += 0.01;
         det.observe(t);
         det.mode()
+    });
+
+    // Predictive autoscaler: one planning step against the 16-replica
+    // snapshot, with the rate estimate oscillating so both the
+    // scale-out and hold paths are exercised.
+    let mut asc = PredictiveAutoscaler::new(AutoscaleConfig {
+        enabled: true,
+        min_replicas: 1,
+        max_replicas: 32,
+        replica_capacity: 2.0,
+        eval_interval_secs: 0.0,
+        ..AutoscaleConfig::default()
+    });
+    let mut at = 0.0;
+    b.bench("autoscale-evaluate/replicas=16", || {
+        at += 0.05;
+        let rate = 2.0 + 30.0 * (1.0 + (at * 0.1).sin()) / 2.0;
+        asc.evaluate(at, rate, &replicas, 16)
     });
 
     // One pacing round over 10k concurrent streams: push a fresh token

@@ -19,6 +19,16 @@
 //! per arrival instead of a scan over every request vector. The
 //! [`crate::gateway`] front door drives a cluster through the public
 //! `submit_with_policy`/`advance_all_to`/`drain` API.
+//!
+//! The cluster is **elastic**: [`Cluster::add_replica`] commissions a
+//! fresh replica mid-run (the gateway's predictive autoscaler models
+//! the cold-start delay before calling it) and
+//! [`Cluster::retire_replica`] begins a graceful drain — the replica
+//! receives no new routing and decommissions once its in-flight
+//! requests finish. Each replica's in-service window (commission →
+//! decommission) is tracked so runs can report **replica-seconds** as
+//! their resource-cost metric, the currency of the paper's
+//! "equal QoE at fewer GPUs" result.
 
 use anyhow::Result;
 
@@ -57,6 +67,21 @@ pub struct Cluster {
     active: Vec<usize>,
     /// Finished-request count already subtracted from `active`.
     finished_seen: Vec<usize>,
+    /// Replicas in graceful drain: no new routing, in-flight finishes.
+    draining: Vec<bool>,
+    /// When each replica entered service.
+    commissioned_at: Vec<f64>,
+    /// When each retired replica finished draining (None while serving).
+    decommissioned_at: Vec<Option<f64>>,
+    /// Kept so replicas can be commissioned mid-run.
+    engine_cfg: EngineConfig,
+    latency: LatencyModel,
+    scheduler: SchedulerConfig,
+    /// Replica-seconds consumed by retired replicas whose slot was
+    /// reused by a later `add_replica`.
+    retired_seconds: f64,
+    /// Metrics of reused-slot replicas, surfaced by `drain`.
+    retired_metrics: Vec<Metrics>,
 }
 
 impl Cluster {
@@ -86,6 +111,14 @@ impl Cluster {
             rr_next: 0,
             active: vec![0; n],
             finished_seen: vec![0; n],
+            draining: vec![false; n],
+            commissioned_at: vec![0.0; n],
+            decommissioned_at: vec![None; n],
+            engine_cfg,
+            latency,
+            scheduler: scheduler.clone(),
+            retired_seconds: 0.0,
+            retired_metrics: Vec::new(),
         }
     }
 
@@ -103,9 +136,104 @@ impl Cluster {
         &self.active
     }
 
+    /// Whether replica `i` is draining (retired, finishing in-flight
+    /// work).
+    pub fn is_draining(&self, i: usize) -> bool {
+        self.draining[i]
+    }
+
+    /// Replicas still accepting new routing.
+    pub fn routable_count(&self) -> usize {
+        self.draining.iter().filter(|&&d| !d).count()
+    }
+
+    /// When replica `i` finished draining (None while in service).
+    pub fn decommissioned_time(&self, i: usize) -> Option<f64> {
+        self.decommissioned_at[i]
+    }
+
     /// Latest simulated time across replicas.
     pub fn now(&self) -> f64 {
         self.replicas.iter().map(|e| e.now()).fold(0.0, f64::max)
+    }
+
+    /// Commission a fresh replica at time `t`; returns its index. The
+    /// caller (the gateway's autoscaler) models any cold-start delay —
+    /// by the time this is called the replica is ready to serve.
+    ///
+    /// A fully drained slot is reused instead of growing the replica
+    /// vector without bound under oscillating load; the retired
+    /// replica's metrics and replica-seconds are preserved.
+    pub fn add_replica(&mut self, t: f64) -> usize {
+        let mut e = Engine::new(
+            self.engine_cfg.clone(),
+            SimBackend::new(self.latency.clone()),
+            VirtualClock::default(),
+            self.scheduler.build(),
+            self.latency.clone(),
+        );
+        e.advance_clock_to(t);
+        let reusable = (0..self.replicas.len()).find(|&i| {
+            self.draining[i] && self.active[i] == 0 && self.decommissioned_at[i].is_some()
+        });
+        if let Some(i) = reusable {
+            let retired = self.decommissioned_at[i].unwrap() - self.commissioned_at[i];
+            self.retired_seconds += retired.max(0.0);
+            self.retired_metrics.push(std::mem::take(self.replicas[i].metrics_mut()));
+            self.replicas[i] = e;
+            self.finished_seen[i] = 0;
+            self.draining[i] = false;
+            self.commissioned_at[i] = t;
+            self.decommissioned_at[i] = None;
+            return i;
+        }
+        self.replicas.push(e);
+        self.active.push(0);
+        self.finished_seen.push(0);
+        self.draining.push(false);
+        self.commissioned_at.push(t);
+        self.decommissioned_at.push(None);
+        self.replicas.len() - 1
+    }
+
+    /// Begin retiring replica `idx` at time `t`: it is removed from
+    /// routing immediately and decommissions once its in-flight
+    /// requests finish (graceful drain — nothing is dropped).
+    pub fn retire_replica(&mut self, idx: usize, t: f64) {
+        if self.draining[idx] {
+            return;
+        }
+        self.draining[idx] = true;
+        if self.active[idx] == 0 {
+            self.decommissioned_at[idx] = Some(t.max(self.replicas[idx].now()));
+        }
+    }
+
+    /// Retire the least-loaded routable replica, keeping at least one
+    /// routable. Returns the retired index.
+    pub fn retire_least_loaded(&mut self, t: f64) -> Option<usize> {
+        let routable: Vec<usize> =
+            (0..self.replicas.len()).filter(|&i| !self.draining[i]).collect();
+        if routable.len() <= 1 {
+            return None;
+        }
+        let idx = routable.into_iter().min_by_key(|&i| self.active[i])?;
+        self.retire_replica(idx, t);
+        Some(idx)
+    }
+
+    /// Total replica-seconds consumed up to `t`: each replica is
+    /// charged from commissioning until decommissioning (or `t` while
+    /// still in service), plus the windows of retired replicas whose
+    /// slots were reused — the run's resource-cost metric.
+    pub fn replica_seconds(&self, t: f64) -> f64 {
+        self.retired_seconds
+            + (0..self.replicas.len())
+                .map(|i| {
+                    let end = self.decommissioned_at[i].unwrap_or(t).min(t);
+                    (end - self.commissioned_at[i]).max(0.0)
+                })
+                .sum::<f64>()
     }
 
     /// Fold replica `i`'s newly observed finishes into its active count.
@@ -116,33 +244,77 @@ impl Cluster {
             self.active[i] -= newly;
             self.finished_seen[i] = fin;
         }
+        if self.draining[i] && self.active[i] == 0 && self.decommissioned_at[i].is_none()
+        {
+            self.decommissioned_at[i] = Some(self.replicas[i].now());
+        }
     }
 
-    /// Pick a replica under `policy`.
+    /// Pick a replica under `policy` among routable (non-draining)
+    /// replicas.
     fn route(&mut self, policy: RoutingPolicy) -> usize {
+        let mut candidates: Vec<usize> =
+            (0..self.replicas.len()).filter(|&i| !self.draining[i]).collect();
+        if candidates.is_empty() {
+            // Defensive: with everything draining, reactivate the
+            // least-loaded replica rather than dropping the request —
+            // and clear its decommission mark so the service it renders
+            // from here on is charged to replica-seconds again (the
+            // idle gap stays charged too; honest and conservative).
+            let idx = (0..self.replicas.len()).min_by_key(|&i| self.active[i]).unwrap();
+            self.draining[idx] = false;
+            self.decommissioned_at[idx] = None;
+            candidates.push(idx);
+        }
         match policy {
             RoutingPolicy::RoundRobin => {
-                let idx = self.rr_next % self.replicas.len();
+                let idx = candidates[self.rr_next % candidates.len()];
                 self.rr_next += 1;
                 idx
             }
             RoutingPolicy::LeastLoaded => {
-                (0..self.active.len()).min_by_key(|&i| self.active[i]).unwrap()
+                candidates.into_iter().min_by_key(|&i| self.active[i]).unwrap()
             }
             RoutingPolicy::QoeAware => {
                 // Most free KV tokens per active request: replicas close
                 // to memory saturation will degrade everyone's QoE when
                 // given one more request.
-                (0..self.replicas.len())
+                candidates
+                    .into_iter()
                     .max_by(|&a, &b| {
                         let score = |i: usize| {
                             self.replicas[i].kv().device_free_tokens() as f64
                                 / (self.active[i] + 1) as f64
                         };
-                        score(a).partial_cmp(&score(b)).unwrap()
+                        score(a).total_cmp(&score(b))
                     })
                     .unwrap()
             }
+        }
+    }
+
+    /// Run the replica with work whose clock lags furthest behind
+    /// through one engine iteration; returns its new time, or `None`
+    /// when every replica is idle.
+    pub fn step_once(&mut self) -> Result<Option<f64>> {
+        let mut best: Option<usize> = None;
+        for i in 0..self.replicas.len() {
+            if self.replicas[i].has_work() {
+                best = match best {
+                    Some(j) if self.replicas[j].now() <= self.replicas[i].now() => {
+                        Some(j)
+                    }
+                    _ => Some(i),
+                };
+            }
+        }
+        match best {
+            Some(i) => {
+                self.replicas[i].tick()?;
+                self.sync_finished(i);
+                Ok(Some(self.replicas[i].now()))
+            }
+            None => Ok(None),
         }
     }
 
@@ -194,16 +366,19 @@ impl Cluster {
         // Taking the metrics resets each replica's finish history; keep
         // the incremental counters consistent with that.
         self.finished_seen.iter_mut().for_each(|f| *f = 0);
-        Ok(self
+        let mut out: Vec<Metrics> = self
             .replicas
             .iter_mut()
             .map(|e| std::mem::take(e.metrics_mut()))
-            .collect())
+            .collect();
+        // Requests served by retired replicas whose slots were reused.
+        out.append(&mut self.retired_metrics);
+        Ok(out)
     }
 
     /// Run a full trace through the cluster; returns per-replica metrics.
     pub fn run_trace(&mut self, mut trace: Vec<RequestSpec>) -> Result<Vec<Metrics>> {
-        trace.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        trace.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         for spec in trace {
             // Bring the cluster's clocks up to the arrival instant so
             // routing sees current loads.
@@ -305,6 +480,155 @@ mod tests {
         let all = c.drain().unwrap();
         assert_eq!(all.iter().map(|m| m.requests.len()).sum::<usize>(), 50);
         assert!(c.active_counts().iter().all(|&a| a == 0));
+    }
+
+    #[test]
+    fn added_replica_receives_routing() {
+        let mut c = small_cluster(RoutingPolicy::LeastLoaded, 1);
+        // Load replica 0, then commission a second replica: the next
+        // request must land on the fresh (empty) one.
+        c.submit(RequestSpec {
+            id: 0,
+            arrival: 0.1,
+            prompt_tokens: 200,
+            output_tokens: 50,
+            qoe: QoeSpec::new(1.0, 4.8),
+        })
+        .unwrap();
+        let idx = c.add_replica(0.2);
+        assert_eq!(idx, 1);
+        assert_eq!(c.num_replicas(), 2);
+        let routed = c
+            .submit(RequestSpec {
+                id: 1,
+                arrival: 0.3,
+                prompt_tokens: 200,
+                output_tokens: 50,
+                qoe: QoeSpec::new(1.0, 4.8),
+            })
+            .unwrap();
+        assert_eq!(routed, 1, "new replica must take the next request");
+        let all = c.drain().unwrap();
+        assert_eq!(all.iter().map(|m| m.requests.len()).sum::<usize>(), 2);
+    }
+
+    #[test]
+    fn retired_replica_drains_without_new_routing() {
+        let mut c = small_cluster(RoutingPolicy::LeastLoaded, 2);
+        let mk = |id: usize, arrival: f64| RequestSpec {
+            id,
+            arrival,
+            prompt_tokens: 300,
+            output_tokens: 60,
+            qoe: QoeSpec::new(1.0, 4.8),
+        };
+        c.advance_all_to(0.1).unwrap();
+        let first = c.submit(mk(0, 0.1)).unwrap();
+        c.retire_replica(first, 0.2);
+        assert!(c.is_draining(first));
+        assert_eq!(c.routable_count(), 1);
+        // Every subsequent request avoids the draining replica.
+        for i in 1..6 {
+            let r = c.submit(mk(i, 0.1 * (i + 1) as f64)).unwrap();
+            assert_ne!(r, first, "routed onto a draining replica");
+        }
+        let all = c.drain().unwrap();
+        // The in-flight request still finished (graceful drain).
+        assert_eq!(all.iter().map(|m| m.requests.len()).sum::<usize>(), 6);
+        assert_eq!(all[first].requests.len(), 1);
+    }
+
+    #[test]
+    fn all_draining_fallback_reactivates_a_replica() {
+        let mut c = small_cluster(RoutingPolicy::LeastLoaded, 1);
+        c.retire_replica(0, 1.0);
+        assert_eq!(c.routable_count(), 0);
+        let idx = c
+            .submit(RequestSpec {
+                id: 0,
+                arrival: 1.5,
+                prompt_tokens: 100,
+                output_tokens: 20,
+                qoe: QoeSpec::new(1.0, 4.8),
+            })
+            .unwrap();
+        assert_eq!(idx, 0);
+        assert!(!c.is_draining(0), "fallback must un-retire the replica");
+        // The cleared decommission mark means its service is charged to
+        // replica-seconds again (idle gap included).
+        assert!((c.replica_seconds(5.0) - 5.0).abs() < 1e-9);
+        let all = c.drain().unwrap();
+        assert_eq!(all[0].requests.len(), 1);
+    }
+
+    #[test]
+    fn replica_seconds_charge_commission_to_decommission() {
+        let mut c = small_cluster(RoutingPolicy::LeastLoaded, 1);
+        // Static single replica: cost is 1 × elapsed.
+        assert!((c.replica_seconds(10.0) - 10.0).abs() < 1e-9);
+        // A replica commissioned at t=4 adds only its own in-service
+        // window.
+        c.add_replica(4.0);
+        assert!((c.replica_seconds(10.0) - 16.0).abs() < 1e-9);
+        // Retiring the idle second replica at t=6 caps its charge.
+        c.retire_replica(1, 6.0);
+        assert!((c.replica_seconds(10.0) - 12.0).abs() < 1e-9);
+        // And the clamp: queries before decommission are unaffected.
+        assert!((c.replica_seconds(5.0) - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn add_replica_reuses_drained_slots() {
+        let mut c = small_cluster(RoutingPolicy::LeastLoaded, 2);
+        let mk = |id: usize, arrival: f64| RequestSpec {
+            id,
+            arrival,
+            prompt_tokens: 200,
+            output_tokens: 30,
+            qoe: QoeSpec::new(1.0, 4.8),
+        };
+        let first = c.submit(mk(0, 0.1)).unwrap();
+        c.advance_all_to(30.0).unwrap(); // request finishes
+        c.retire_replica(first, 30.0);
+        assert!(c.decommissioned_time(first).is_some());
+        // Commissioning again reuses the drained slot: the replica
+        // vector stays bounded under oscillating load.
+        let idx = c.add_replica(40.0);
+        assert_eq!(idx, first);
+        assert_eq!(c.num_replicas(), 2);
+        assert!(!c.is_draining(first));
+        // The retired window (0..30) is still charged, the reused slot
+        // from 40, the untouched replica for the whole span.
+        assert!((c.replica_seconds(50.0) - (30.0 + 10.0 + 50.0)).abs() < 1e-9);
+        // And the retired replica's served request survives into drain.
+        c.submit(mk(1, 40.0)).unwrap();
+        let all = c.drain().unwrap();
+        assert_eq!(all.len(), 3, "2 live slots + 1 retired metrics set");
+        assert_eq!(all.iter().map(|m| m.requests.len()).sum::<usize>(), 2);
+    }
+
+    #[test]
+    fn step_once_advances_lagging_replica() {
+        let mut c = small_cluster(RoutingPolicy::RoundRobin, 2);
+        assert!(c.step_once().unwrap().is_none(), "idle cluster has no events");
+        c.advance_all_to(0.1).unwrap();
+        c.submit(RequestSpec {
+            id: 0,
+            arrival: 0.1,
+            prompt_tokens: 100,
+            output_tokens: 30,
+            qoe: QoeSpec::new(1.0, 4.8),
+        })
+        .unwrap();
+        let t1 = c.step_once().unwrap().expect("busy replica must step");
+        assert!(t1 > 0.1, "stepping must advance time");
+        // Repeated stepping eventually drains the work.
+        let mut guard = 0;
+        while c.step_once().unwrap().is_some() {
+            guard += 1;
+            assert!(guard < 10_000, "step_once failed to make progress");
+        }
+        assert_eq!(c.active_counts(), &[0, 0]);
     }
 
     #[test]

@@ -27,6 +27,22 @@
 //!     "baseline_rate": 3.0,
 //!     "surge_enter": 1.5,
 //!     "surge_exit": 1.1
+//!   },
+//!   "autoscale": {
+//!     "enabled": true,
+//!     "min_replicas": 1,
+//!     "max_replicas": 4,
+//!     "replica_capacity": 1.2,
+//!     "target_utilization": 0.8,
+//!     "cold_start_secs": 15,
+//!     "scale_in_hold_secs": 30,
+//!     "kv_high_watermark": 0.9,
+//!     "eval_interval_secs": 1.0
+//!   },
+//!   "spill": {
+//!     "enabled": true,
+//!     "replicas": 1,
+//!     "kv_fraction": 0.5
 //!   }
 //! }
 //! ```
@@ -37,7 +53,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::engine::EngineConfig;
 use crate::coordinator::sched::andes::{AndesConfig, AndesScheduler, KnapsackSolver};
-use crate::gateway::GatewayConfig;
+use crate::gateway::{GatewayConfig, SpillConfig};
 use crate::coordinator::sched::fcfs::FcfsScheduler;
 use crate::coordinator::sched::objective::Objective;
 use crate::coordinator::sched::round_robin::RoundRobinScheduler;
@@ -54,6 +70,8 @@ pub struct AndesDeployment {
     pub scheduler: SchedulerConfig,
     pub engine: EngineConfig,
     pub gateway: GatewayConfig,
+    /// Overflow tier replaying primary rejections (disabled by default).
+    pub spill: SpillConfig,
 }
 
 /// Scheduler section.
@@ -91,6 +109,7 @@ impl Default for AndesDeployment {
             scheduler: SchedulerConfig::Andes(AndesConfig::default()),
             engine,
             gateway: GatewayConfig::default(),
+            spill: SpillConfig::default(),
         }
     }
 }
@@ -257,6 +276,85 @@ impl AndesDeployment {
                 );
             }
         }
+
+        let a = j.get("autoscale");
+        if !a.is_null() {
+            let asc = &mut d.gateway.autoscale;
+            if let Some(b) = a.get("enabled").as_bool() {
+                asc.enabled = b;
+            }
+            if let Some(n) = a.get("min_replicas").as_u64() {
+                if n == 0 {
+                    bail!("min_replicas must be >= 1");
+                }
+                asc.min_replicas = n as usize;
+            }
+            if let Some(n) = a.get("max_replicas").as_u64() {
+                asc.max_replicas = n as usize;
+            }
+            if let Some(v) = a.get("replica_capacity").as_f64() {
+                if v <= 0.0 {
+                    bail!("replica_capacity must be > 0");
+                }
+                asc.replica_capacity = v;
+            }
+            if let Some(v) = a.get("target_utilization").as_f64() {
+                if v <= 0.0 || v > 1.5 {
+                    bail!("target_utilization must be in (0, 1.5]");
+                }
+                asc.target_utilization = v;
+            }
+            if let Some(v) = a.get("cold_start_secs").as_f64() {
+                if v < 0.0 {
+                    bail!("cold_start_secs must be >= 0");
+                }
+                asc.cold_start_secs = v;
+            }
+            if let Some(v) = a.get("scale_in_hold_secs").as_f64() {
+                if v < 0.0 {
+                    bail!("scale_in_hold_secs must be >= 0");
+                }
+                asc.scale_in_hold_secs = v;
+            }
+            if let Some(v) = a.get("kv_high_watermark").as_f64() {
+                if !(0.0..=1.0).contains(&v) {
+                    bail!("kv_high_watermark must be in [0, 1]");
+                }
+                asc.kv_high_watermark = v;
+            }
+            if let Some(v) = a.get("eval_interval_secs").as_f64() {
+                if v < 0.0 {
+                    bail!("eval_interval_secs must be >= 0");
+                }
+                asc.eval_interval_secs = v;
+            }
+            if asc.min_replicas > asc.max_replicas {
+                bail!(
+                    "min_replicas ({}) must not exceed max_replicas ({})",
+                    asc.min_replicas,
+                    asc.max_replicas
+                );
+            }
+        }
+
+        let sp = j.get("spill");
+        if !sp.is_null() {
+            if let Some(b) = sp.get("enabled").as_bool() {
+                d.spill.enabled = b;
+            }
+            if let Some(n) = sp.get("replicas").as_u64() {
+                if n == 0 {
+                    bail!("spill replicas must be >= 1");
+                }
+                d.spill.replicas = n as usize;
+            }
+            if let Some(v) = sp.get("kv_fraction").as_f64() {
+                if v <= 0.0 || v > 1.0 {
+                    bail!("spill kv_fraction must be in (0, 1]");
+                }
+                d.spill.kv_fraction = v;
+            }
+        }
         Ok(d)
     }
 }
@@ -362,6 +460,54 @@ mod tests {
         assert_eq!(d.gateway.surge.window_secs, 20.0);
         assert_eq!(d.gateway.surge.enter_factor, 2.0);
         assert_eq!(d.gateway.surge.exit_factor, 1.2);
+    }
+
+    #[test]
+    fn autoscale_and_spill_sections_parse() {
+        let d = AndesDeployment::from_json_str(
+            r#"{"autoscale": {"enabled": true, "min_replicas": 2,
+                 "max_replicas": 6, "replica_capacity": 1.5,
+                 "target_utilization": 0.7, "cold_start_secs": 8,
+                 "scale_in_hold_secs": 25, "kv_high_watermark": 0.85,
+                 "eval_interval_secs": 0.5},
+                "spill": {"enabled": true, "replicas": 2,
+                          "kv_fraction": 0.4}}"#,
+        )
+        .unwrap();
+        let a = &d.gateway.autoscale;
+        assert!(a.enabled);
+        assert_eq!(a.min_replicas, 2);
+        assert_eq!(a.max_replicas, 6);
+        assert_eq!(a.replica_capacity, 1.5);
+        assert_eq!(a.target_utilization, 0.7);
+        assert_eq!(a.cold_start_secs, 8.0);
+        assert_eq!(a.scale_in_hold_secs, 25.0);
+        assert_eq!(a.kv_high_watermark, 0.85);
+        assert_eq!(a.eval_interval_secs, 0.5);
+        assert!(d.spill.enabled);
+        assert_eq!(d.spill.replicas, 2);
+        assert_eq!(d.spill.kv_fraction, 0.4);
+        // Defaults leave both disabled.
+        let plain = AndesDeployment::from_json_str("{}").unwrap();
+        assert!(!plain.gateway.autoscale.enabled);
+        assert!(!plain.spill.enabled);
+    }
+
+    #[test]
+    fn autoscale_and_spill_reject_bad_values() {
+        for bad in [
+            r#"{"autoscale": {"min_replicas": 0}}"#,
+            r#"{"autoscale": {"min_replicas": 5, "max_replicas": 2}}"#,
+            r#"{"autoscale": {"replica_capacity": -1}}"#,
+            r#"{"autoscale": {"target_utilization": 0}}"#,
+            r#"{"autoscale": {"kv_high_watermark": 1.5}}"#,
+            r#"{"autoscale": {"cold_start_secs": -1}}"#,
+            r#"{"spill": {"replicas": 0}}"#,
+            r#"{"spill": {"kv_fraction": 0}}"#,
+            r#"{"spill": {"kv_fraction": 1.2}}"#,
+        ] {
+            assert!(AndesDeployment::from_json_str(bad).is_err(), "{bad}");
+        }
     }
 
     #[test]

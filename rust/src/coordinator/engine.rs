@@ -150,9 +150,18 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
         (total / self.active.len()).max(1)
     }
 
-    /// Queue a whole workload trace (sim mode).
+    /// Queue a whole workload trace (sim mode). Non-finite arrivals are
+    /// clamped to the trace origin: a NaN would neither sort stably
+    /// (the old `partial_cmp().unwrap()` panicked here) nor ever be
+    /// ingested (`NaN <= now` is false — `run_to_completion` would hang
+    /// with the request pending forever).
     pub fn load_trace(&mut self, mut specs: Vec<RequestSpec>) {
-        specs.sort_by(|a, b| b.arrival.partial_cmp(&a.arrival).unwrap());
+        for s in &mut specs {
+            if !s.arrival.is_finite() {
+                s.arrival = 0.0;
+            }
+        }
+        specs.sort_by(|a, b| b.arrival.total_cmp(&a.arrival));
         self.pending = specs;
     }
 
@@ -367,8 +376,7 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
                 .max_by(|&a, &b| {
                     self.requests[a]
                         .arrival
-                        .partial_cmp(&self.requests[b].arrival)
-                        .unwrap()
+                        .total_cmp(&self.requests[b].arrival)
                         .then(a.cmp(&b))
                 });
             match victim {
@@ -612,6 +620,20 @@ mod tests {
         assert_eq!(e.metrics().requests.len(), 1);
         let r = &e.metrics().requests[0];
         assert_eq!(r.output_tokens, 8);
+    }
+
+    #[test]
+    fn load_trace_tolerates_nan_arrival() {
+        // `partial_cmp().unwrap()` panicked here, and a raw total_cmp
+        // sort would hang run_to_completion (a NaN arrival is never
+        // ingested). The clamp must make the run complete with every
+        // request served.
+        let mut e = sim_engine(Box::new(FcfsScheduler::new()), 100_000);
+        let mut bad = spec(1, 0.0, 50, 5);
+        bad.arrival = f64::NAN;
+        e.load_trace(vec![spec(0, 1.0, 50, 5), bad]);
+        let m = e.run_to_completion().unwrap();
+        assert_eq!(m.requests.len(), 2);
     }
 
     #[test]

@@ -1,0 +1,233 @@
+//! ext-autoscale: the QoE-vs-resource tradeoff at cluster scale.
+//!
+//! The paper's efficiency headline — equal QoE at far fewer GPUs —
+//! requires the serving tier to be elastic rather than provisioned for
+//! the peak. This experiment sweeps four provisioning strategies over
+//! Poisson and Gamma-burst (cv = 3) arrivals at a rate that needs ~2–3
+//! replicas on average but bursts past a single replica's capacity:
+//!
+//! - **static-min** — 1 replica, the cheapest fixed tier;
+//! - **static-max** — 4 replicas, peak provisioning (the QoE ceiling);
+//! - **autoscale** — elastic 1..4 replicas driven by the gateway's
+//!   predictive autoscaler (cold-start lead, scale-in hysteresis);
+//! - **autoscale+spill** — elastic primary plus a half-size overflow
+//!   replica that replays shed/saturated/timed-out requests.
+//!
+//! Reported per cell: mean QoE counting rejects as zero, rejected
+//! fraction, and **replica-seconds** (primary, spill, and cost-weighted
+//! total where a spill replica is charged at its `kv_fraction`). The
+//! shape checks assert the paper's tradeoff: autoscale+spill holds mean
+//! QoE within 5% of static-max while consuming measurably fewer
+//! replica-seconds.
+
+use anyhow::Result;
+
+use crate::cluster::{Cluster, RoutingPolicy};
+use crate::config::SchedulerConfig;
+use crate::coordinator::engine::EngineConfig;
+use crate::coordinator::sched::andes::AndesConfig;
+use crate::gateway::{AutoscaleConfig, Gateway, GatewayConfig, SpillConfig};
+use crate::model::gpu::a100_4x;
+use crate::model::latency::LatencyModel;
+use crate::model::llm::opt_66b;
+use crate::util::csv::Csv;
+use crate::workload::{ArrivalProcess, Dataset, QoeTrace, Workload};
+
+use super::runner::estimate_capacity;
+use super::ExpCtx;
+
+const SPILL_COST_WEIGHT: f64 = 0.5; // == kv_fraction of the spill tier
+
+struct Cell {
+    arrivals: &'static str,
+    variant: &'static str,
+    mean_qoe: f64,
+    reject_frac: f64,
+    /// Cost-weighted replica-seconds (primary + weight × spill).
+    cost: f64,
+}
+
+pub fn ext_autoscale(ctx: &ExpCtx) -> Result<String> {
+    let llm = opt_66b();
+    let gpu = a100_4x();
+    let latency = LatencyModel::for_deployment(&llm, &gpu);
+    let per_replica = estimate_capacity(&llm, &gpu, Dataset::ShareGpt);
+    let (min_r, max_r) = (1usize, 4usize);
+    let n = if ctx.quick { 240 } else { 600 };
+    // Mean load plans out to ~2 replicas; Gamma bursts transiently need
+    // more, and a single static replica runs near its empirical knee.
+    let rate = per_replica * 1.5;
+    let engine_cfg = EngineConfig {
+        kv_capacity_tokens: llm.kv_capacity_tokens(&gpu),
+        swap_capacity_tokens: llm.swap_capacity_tokens(&gpu),
+        ..EngineConfig::default()
+    };
+    let sched = SchedulerConfig::Andes(AndesConfig::default());
+    let autoscale_cfg = AutoscaleConfig {
+        enabled: true,
+        min_replicas: min_r,
+        max_replicas: max_r,
+        replica_capacity: per_replica,
+        // The analytic estimate is ~1.6× conservative vs the empirical
+        // knee, so planning at 0.8 of it still leaves ~2× real headroom
+        // (1.5× load / 0.8 → a steady-state target of 2 replicas).
+        target_utilization: 0.8,
+        cold_start_secs: 5.0,
+        scale_in_hold_secs: 20.0,
+        kv_high_watermark: 0.85,
+        eval_interval_secs: 0.5,
+    };
+    let spill_cfg = SpillConfig {
+        enabled: true,
+        replicas: 1,
+        kv_fraction: SPILL_COST_WEIGHT,
+    };
+    let variants: [(&'static str, bool, bool, usize); 4] = [
+        ("static-min", false, false, min_r),
+        ("static-max", false, false, max_r),
+        ("autoscale", true, false, min_r),
+        ("autoscale+spill", true, true, min_r),
+    ];
+    let mut csv = Csv::new(&[
+        "arrivals",
+        "variant",
+        "served",
+        "spilled",
+        "rejected",
+        "reject_frac",
+        "mean_served_qoe",
+        "mean_qoe_incl_rejects",
+        "replica_seconds",
+        "spill_replica_seconds",
+        "cost_weighted_replica_seconds",
+        "scale_out_requests",
+        "scale_ins",
+    ]);
+    let mut report = format!(
+        "ext-autoscale — elastic {min_r}..{max_r} replicas, \
+         per-replica capacity ≈ {per_replica:.2} req/s, rate {rate:.2} req/s\n"
+    );
+    let mut cells: Vec<Cell> = Vec::new();
+
+    for (alabel, cv) in [("poisson", 1.0), ("gamma-cv3", 3.0)] {
+        let trace = Workload {
+            dataset: Dataset::ShareGpt,
+            arrivals: if cv == 1.0 {
+                ArrivalProcess::Poisson { rate }
+            } else {
+                ArrivalProcess::Gamma { rate, cv }
+            },
+            qoe_trace: QoeTrace::TextReading,
+            num_requests: n,
+            seed: 42,
+        }
+        .generate();
+        for &(vname, elastic, spill, start_replicas) in &variants {
+            let cluster = Cluster::new(
+                start_replicas,
+                engine_cfg.clone(),
+                latency.clone(),
+                &sched,
+                RoutingPolicy::QoeAware,
+            );
+            let mut gcfg = GatewayConfig::default();
+            gcfg.pacing_enabled = false;
+            // Baseline = the mean provisioning level: Surge only for
+            // genuine bursts beyond it.
+            gcfg.surge.baseline_rate = rate;
+            if elastic {
+                gcfg.autoscale = autoscale_cfg.clone();
+            }
+            let mut gw = if spill {
+                let overflow = spill_cfg.build_cluster(&engine_cfg, &latency, &sched);
+                Gateway::with_spill(cluster, gcfg, overflow)
+            } else {
+                Gateway::new(cluster, gcfg)
+            };
+            let res = gw.run_trace(trace.clone())?;
+            let cost = res.replica_seconds + SPILL_COST_WEIGHT * res.spill_replica_seconds;
+            let cell = Cell {
+                arrivals: alabel,
+                variant: vname,
+                mean_qoe: res.mean_qoe_incl_rejects(),
+                reject_frac: res.rejected_fraction(),
+                cost,
+            };
+            csv.row(&[
+                alabel.to_string(),
+                vname.to_string(),
+                format!("{}", res.served.len()),
+                format!("{}", res.spilled.len()),
+                format!("{}", res.rejections.len()),
+                format!("{:.4}", cell.reject_frac),
+                format!("{:.4}", res.mean_served_qoe()),
+                format!("{:.4}", cell.mean_qoe),
+                format!("{:.1}", res.replica_seconds),
+                format!("{:.1}", res.spill_replica_seconds),
+                format!("{cost:.1}"),
+                format!("{}", res.stats.scale_out_requests),
+                format!("{}", res.stats.scale_ins),
+            ]);
+            report.push_str(&format!(
+                "  {alabel:<10} {vname:<16} served {:<4} spilled {:<4} rejected {:<4} \
+                 QoE {:.3} (incl-rej) cost {:.0} rs (primary {:.0} + spill {:.0})\n",
+                res.served.len(),
+                res.spilled.len(),
+                res.rejections.len(),
+                cell.mean_qoe,
+                cost,
+                res.replica_seconds,
+                res.spill_replica_seconds,
+            ));
+            cells.push(cell);
+        }
+    }
+    csv.write(&ctx.out_dir.join("ext_autoscale.csv"))?;
+
+    // Shape checks: the QoE-vs-resource tradeoff, per arrival process.
+    for alabel in ["poisson", "gamma-cv3"] {
+        let smin = find(&cells, "static-min", alabel);
+        let smax = find(&cells, "static-max", alabel);
+        let auto = find(&cells, "autoscale", alabel);
+        let spill = find(&cells, "autoscale+spill", alabel);
+        let c1 = spill.mean_qoe >= 0.95 * smax.mean_qoe;
+        let c2 = spill.cost < 0.9 * smax.cost;
+        let c3 = smin.mean_qoe < auto.mean_qoe;
+        let c4 = spill.reject_frac <= auto.reject_frac;
+        report.push_str(&format!(
+            "shape checks @{alabel}:\n\
+             \x20 autoscale+spill QoE within 5% of static-max ({:.3} vs {:.3}): {}\n\
+             \x20 autoscale+spill cost < 90% of static-max ({:.0} vs {:.0} rs): {}\n\
+             \x20 static-min QoE below autoscale ({:.3} vs {:.3}): {}\n\
+             \x20 spill does not increase rejected fraction ({:.3} vs {:.3}): {}\n",
+            spill.mean_qoe,
+            smax.mean_qoe,
+            verdict(c1),
+            spill.cost,
+            smax.cost,
+            verdict(c2),
+            smin.mean_qoe,
+            auto.mean_qoe,
+            verdict(c3),
+            spill.reject_frac,
+            auto.reject_frac,
+            verdict(c4),
+        ));
+    }
+    Ok(report)
+}
+
+fn verdict(ok: bool) -> &'static str {
+    if ok {
+        "HOLDS"
+    } else {
+        "VIOLATED"
+    }
+}
+
+fn find<'a>(cells: &'a [Cell], variant: &str, arrivals: &str) -> &'a Cell {
+    cells
+        .iter()
+        .find(|c| c.variant == variant && c.arrivals == arrivals)
+        .expect("cell missing")
+}

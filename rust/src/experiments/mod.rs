@@ -3,6 +3,7 @@
 //! them, writing CSVs + ASCII renderings under the output directory and
 //! printing a shape-check verdict per artifact.
 
+pub mod autoscale;
 pub mod breakdown;
 pub mod endtoend;
 pub mod extensions;
@@ -186,6 +187,12 @@ pub fn registry() -> Vec<Experiment> {
             paper_ref: "§5 (extension)",
             title: "QoE-aware gateway: admission, pacing, surge routing",
             run: gateway::ext_gateway,
+        },
+        Experiment {
+            id: "ext-autoscale",
+            paper_ref: "§7.4 (extension)",
+            title: "Predictive autoscaling + spill tier: QoE vs replica-seconds",
+            run: autoscale::ext_autoscale,
         },
         Experiment {
             id: "e2e",

@@ -1,0 +1,407 @@
+//! Predictive autoscaling: turn the surge detector's windowed rate
+//! estimate into a target replica count, ahead of the scheduler.
+//!
+//! The paper's headline efficiency result (61% GPU savings at equal
+//! QoE) presumes an *elastic* serving tier: capacity follows demand
+//! instead of being provisioned for the peak. The
+//! [`PredictiveAutoscaler`] closes that loop at the gateway, where the
+//! arrival-rate estimate already lives (cf. TokenFlow 2510.02758:
+//! burst-time decisions must be made ahead of the scheduler):
+//!
+//! - **scale-out** is *predictive but not free*: a requested replica
+//!   only starts serving after a configurable cold-start delay
+//!   (weights loading, KV allocation), so the planner works off the
+//!   rate estimate rather than waiting for queues to form;
+//! - **scale-in** is *reluctant*: the target must sit at or below the
+//!   live count for a hysteresis hold before any replica is retired,
+//!   so a gap between bursts does not thrash replicas down and
+//!   immediately pay the cold start again;
+//! - **memory pressure overrides**: mean KV utilization above the high
+//!   watermark forces one extra replica regardless of the rate signal
+//!   (long-context traffic saturates memory before it saturates rate).
+//!
+//! The autoscaler only plans; the [`super::Gateway`] applies the plan
+//! through [`super::GatewayTarget::scale_out`] / `scale_in`, and the
+//! cluster charges **replica-seconds** (commission → decommission) as
+//! the run's cost metric.
+
+use std::collections::VecDeque;
+
+use super::admission::ReplicaState;
+
+/// Autoscaler configuration.
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    pub enabled: bool,
+    /// Never retire below this many routable replicas.
+    pub min_replicas: usize,
+    /// Never provision beyond this many replicas.
+    pub max_replicas: usize,
+    /// Sustainable per-replica request rate (req/s) — typically the
+    /// analytic capacity estimate of one replica.
+    pub replica_capacity: f64,
+    /// Fraction of `replica_capacity` to plan for; values below 1
+    /// over-provision (headroom for estimate error and bursts).
+    pub target_utilization: f64,
+    /// Scale-out lead time: a requested replica serves only after this
+    /// cold-start delay (s).
+    pub cold_start_secs: f64,
+    /// Scale-in hysteresis: the target must stay at or below the live
+    /// count for this long before a replica is retired (s).
+    pub scale_in_hold_secs: f64,
+    /// Mean KV utilization above which one extra replica is requested
+    /// regardless of the rate estimate.
+    pub kv_high_watermark: f64,
+    /// Minimum time between target re-evaluations (s).
+    pub eval_interval_secs: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            enabled: false,
+            min_replicas: 1,
+            max_replicas: 4,
+            replica_capacity: 1.0,
+            target_utilization: 0.8,
+            cold_start_secs: 15.0,
+            scale_in_hold_secs: 30.0,
+            kv_high_watermark: 0.9,
+            eval_interval_secs: 1.0,
+        }
+    }
+}
+
+/// What the gateway should do right now: commission replicas whose cold
+/// start completed, and/or begin retiring live ones.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScalePlan {
+    pub commission: usize,
+    pub retire: usize,
+}
+
+impl ScalePlan {
+    pub fn is_noop(&self) -> bool {
+        self.commission == 0 && self.retire == 0
+    }
+}
+
+/// The predictive autoscaler. Pure planning state — it never touches
+/// the cluster itself.
+#[derive(Debug, Clone)]
+pub struct PredictiveAutoscaler {
+    cfg: AutoscaleConfig,
+    /// Ready times of requested-but-still-cold replicas, oldest first.
+    pending: VecDeque<f64>,
+    /// Since when the target has continuously been below the live count.
+    below_since: Option<f64>,
+    last_eval: Option<f64>,
+    scale_out_requests: u64,
+    retirements: u64,
+}
+
+impl PredictiveAutoscaler {
+    pub fn new(cfg: AutoscaleConfig) -> Self {
+        assert!(cfg.min_replicas >= 1, "min_replicas must be >= 1");
+        assert!(
+            cfg.max_replicas >= cfg.min_replicas,
+            "max_replicas must be >= min_replicas"
+        );
+        assert!(cfg.replica_capacity > 0.0, "replica_capacity must be > 0");
+        assert!(cfg.target_utilization > 0.0, "target_utilization must be > 0");
+        PredictiveAutoscaler {
+            cfg,
+            pending: VecDeque::new(),
+            below_since: None,
+            last_eval: None,
+            scale_out_requests: 0,
+            retirements: 0,
+        }
+    }
+
+    pub fn config(&self) -> &AutoscaleConfig {
+        &self.cfg
+    }
+
+    /// Replicas requested but still inside their cold-start window.
+    pub fn pending_replicas(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Lifetime scale-out requests (includes still-pending ones).
+    pub fn scale_out_requests(&self) -> u64 {
+        self.scale_out_requests
+    }
+
+    /// Lifetime retirements planned.
+    pub fn retirements(&self) -> u64 {
+        self.retirements
+    }
+
+    /// The next time the planner's state changes on its own — a pending
+    /// replica's cold start completing, or the scale-in hold expiring —
+    /// so the gateway can sweep at that instant instead of waiting for
+    /// the next arrival (idle gaps would otherwise inflate
+    /// replica-seconds, the cost metric).
+    pub fn next_event(&self) -> Option<f64> {
+        if !self.cfg.enabled {
+            return None;
+        }
+        let ready = self.pending.front().copied();
+        // A hold expiry only takes effect at an evaluation point, so
+        // never report it earlier than the next allowed evaluation
+        // (otherwise a sweep at the raw expiry would be gated off and
+        // the caller would spin on the same instant).
+        let hold = self.below_since.map(|since| {
+            let ev = since + self.cfg.scale_in_hold_secs;
+            match self.last_eval {
+                Some(last) => ev.max(last + self.cfg.eval_interval_secs),
+                None => ev,
+            }
+        });
+        match (ready, hold) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (Some(a), None) => Some(a),
+            (None, Some(b)) => Some(b),
+            (None, None) => None,
+        }
+    }
+
+    /// Replica count needed to serve `rate` at the planned utilization,
+    /// clamped to [min_replicas, max_replicas].
+    pub fn target_replicas(&self, rate: f64) -> usize {
+        let per = self.cfg.replica_capacity * self.cfg.target_utilization;
+        let need = (rate.max(0.0) / per).ceil() as usize;
+        need.clamp(self.cfg.min_replicas, self.cfg.max_replicas)
+    }
+
+    /// Re-plan at time `t` given the windowed arrival-rate estimate and
+    /// the live (routable) replica snapshots. `live` is the current
+    /// routable replica count. Returns the actions due *now*.
+    pub fn evaluate(
+        &mut self,
+        t: f64,
+        rate: f64,
+        states: &[ReplicaState],
+        live: usize,
+    ) -> ScalePlan {
+        let mut plan = ScalePlan::default();
+        if !self.cfg.enabled {
+            return plan;
+        }
+        // Commission every replica whose cold start has completed —
+        // this happens on every call, not just at eval intervals.
+        while self.pending.front().is_some_and(|&ready| ready <= t) {
+            self.pending.pop_front();
+            plan.commission += 1;
+        }
+        let live = live + plan.commission;
+        if self
+            .last_eval
+            .is_some_and(|last| t - last < self.cfg.eval_interval_secs)
+        {
+            return plan;
+        }
+        self.last_eval = Some(t);
+
+        let mut target = self.target_replicas(rate);
+        if !states.is_empty() {
+            let mean_util = states.iter().map(|s| s.kv_utilization()).sum::<f64>()
+                / states.len() as f64;
+            if mean_util > self.cfg.kv_high_watermark {
+                target = target.max((live + 1).min(self.cfg.max_replicas));
+            }
+        }
+
+        let provisioned = live + self.pending.len();
+        if target > provisioned {
+            for _ in provisioned..target {
+                self.pending.push_back(t + self.cfg.cold_start_secs);
+                self.scale_out_requests += 1;
+            }
+            self.below_since = None;
+        } else if target < provisioned {
+            // Abort still-cold replicas first: they are free to cancel.
+            // (They stay counted in `scale_out_requests` — aborted cold
+            // starts are real planner activity.)
+            while live + self.pending.len() > target.max(live) && !self.pending.is_empty()
+            {
+                self.pending.pop_back();
+            }
+            if target < live {
+                match self.below_since {
+                    None => self.below_since = Some(t),
+                    Some(since) if t - since >= self.cfg.scale_in_hold_secs => {
+                        plan.retire = live - target;
+                        self.retirements += plan.retire as u64;
+                        // Further scale-in requires a fresh hold.
+                        self.below_since = Some(t);
+                    }
+                    Some(_) => {}
+                }
+            } else {
+                self.below_since = None;
+            }
+        } else {
+            self.below_since = None;
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(free: usize, cap: usize) -> ReplicaState {
+        ReplicaState {
+            active_requests: 4,
+            kv_free_tokens: free,
+            kv_capacity_tokens: cap,
+            est_request_tds: 6.0,
+        }
+    }
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig {
+            enabled: true,
+            min_replicas: 1,
+            max_replicas: 4,
+            replica_capacity: 2.0,
+            target_utilization: 1.0,
+            cold_start_secs: 10.0,
+            scale_in_hold_secs: 30.0,
+            kv_high_watermark: 0.9,
+            eval_interval_secs: 1.0,
+        }
+    }
+
+    #[test]
+    fn target_tracks_rate_with_clamps() {
+        let a = PredictiveAutoscaler::new(cfg());
+        assert_eq!(a.target_replicas(0.0), 1); // min clamp
+        assert_eq!(a.target_replicas(1.9), 1);
+        assert_eq!(a.target_replicas(2.1), 2);
+        assert_eq!(a.target_replicas(6.0), 3);
+        assert_eq!(a.target_replicas(50.0), 4); // max clamp
+    }
+
+    #[test]
+    fn disabled_autoscaler_is_noop() {
+        let mut a = PredictiveAutoscaler::new(AutoscaleConfig::default());
+        let healthy = [state(60_000, 70_000)];
+        for t in 1..100 {
+            assert!(a.evaluate(t as f64, 50.0, &healthy, 1).is_noop());
+        }
+    }
+
+    #[test]
+    fn cold_start_delays_commissioning() {
+        let mut a = PredictiveAutoscaler::new(cfg());
+        let healthy = [state(60_000, 70_000)];
+        // Rate needs 3 replicas; only 1 live → 2 requested at t=0.
+        assert!(a.evaluate(0.0, 6.0, &healthy, 1).is_noop());
+        assert_eq!(a.pending_replicas(), 2);
+        // Still cold at t=9.9.
+        assert!(a.evaluate(9.9, 6.0, &healthy, 1).is_noop());
+        // Ready at t=10: both commission together.
+        let plan = a.evaluate(10.0, 6.0, &healthy, 1);
+        assert_eq!(plan.commission, 2);
+        assert_eq!(a.pending_replicas(), 0);
+    }
+
+    #[test]
+    fn scale_in_waits_for_hold_then_retires() {
+        let mut a = PredictiveAutoscaler::new(cfg());
+        let healthy = [state(60_000, 70_000)];
+        // Load vanished with 3 live replicas: target 1, but the hold
+        // (30 s) must elapse before anything retires.
+        assert!(a.evaluate(0.0, 0.5, &healthy, 3).is_noop());
+        assert!(a.evaluate(15.0, 0.5, &healthy, 3).is_noop());
+        let plan = a.evaluate(31.0, 0.5, &healthy, 3);
+        assert_eq!(plan.retire, 2);
+        assert_eq!(a.retirements(), 2);
+    }
+
+    #[test]
+    fn burst_gap_shorter_than_hold_does_not_thrash() {
+        let mut a = PredictiveAutoscaler::new(cfg());
+        let healthy = [state(60_000, 70_000)];
+        // 2 live, rate drops for 20 s (< hold 30 s) then recovers:
+        // nothing retires and nothing new is requested.
+        for t in 0..20 {
+            assert!(a.evaluate(t as f64, 0.5, &healthy, 2).is_noop(), "t={t}");
+        }
+        assert!(a.evaluate(20.0, 4.0, &healthy, 2).is_noop());
+        assert_eq!(a.retirements(), 0);
+        assert_eq!(a.pending_replicas(), 0);
+        // And the recovery reset the hold: another short dip still
+        // retires nothing.
+        assert!(a.evaluate(35.0, 0.5, &healthy, 2).is_noop());
+        assert!(a.evaluate(45.0, 0.5, &healthy, 2).is_noop());
+    }
+
+    #[test]
+    fn rate_drop_cancels_cold_replicas_first() {
+        let mut a = PredictiveAutoscaler::new(cfg());
+        let healthy = [state(60_000, 70_000)];
+        assert!(a.evaluate(0.0, 8.0, &healthy, 1).is_noop()); // wants 4 → 3 pending
+        assert_eq!(a.pending_replicas(), 3);
+        // Demand collapses before the cold start completes: the pending
+        // requests are aborted without ever serving.
+        assert!(a.evaluate(2.0, 0.5, &healthy, 1).is_noop());
+        assert_eq!(a.pending_replicas(), 0);
+        assert!(a.evaluate(12.0, 0.5, &healthy, 1).is_noop());
+        assert_eq!(a.retirements(), 0);
+    }
+
+    #[test]
+    fn kv_pressure_forces_scale_out() {
+        let mut a = PredictiveAutoscaler::new(cfg());
+        // Rate alone says 1 replica, but KV is 95% full.
+        let pressured = [state(3_500, 70_000)];
+        assert!(a.evaluate(0.0, 1.0, &pressured, 1).is_noop());
+        assert_eq!(a.pending_replicas(), 1);
+    }
+
+    #[test]
+    fn eval_interval_rate_limits_planning() {
+        let mut a = PredictiveAutoscaler::new(cfg());
+        let healthy = [state(60_000, 70_000)];
+        assert!(a.evaluate(0.0, 6.0, &healthy, 1).is_noop());
+        let before = a.pending_replicas();
+        // Calls inside the interval do not re-plan (no double-request).
+        for i in 1..9 {
+            a.evaluate(0.1 * i as f64, 20.0, &healthy, 1);
+        }
+        assert_eq!(a.pending_replicas(), before);
+    }
+
+    #[test]
+    fn next_event_reports_cold_starts_and_hold_expiry() {
+        let mut a = PredictiveAutoscaler::new(cfg());
+        let healthy = [state(60_000, 70_000)];
+        assert_eq!(a.next_event(), None);
+        // Scale-out request → next event is the cold-start completion.
+        a.evaluate(0.0, 6.0, &healthy, 1);
+        assert_eq!(a.next_event(), Some(10.0));
+        a.evaluate(10.0, 6.0, &healthy, 1); // commissions
+        assert_eq!(a.next_event(), None);
+        // Demand vanishes with 3 live → next event is the hold expiry.
+        a.evaluate(12.0, 0.5, &healthy, 3);
+        assert_eq!(a.next_event(), Some(42.0));
+        // Sweeping at the reported instant actually retires.
+        let plan = a.evaluate(42.0, 0.5, &healthy, 3);
+        assert_eq!(plan.retire, 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_inverted_bounds() {
+        PredictiveAutoscaler::new(AutoscaleConfig {
+            min_replicas: 4,
+            max_replicas: 2,
+            ..AutoscaleConfig::default()
+        });
+    }
+}

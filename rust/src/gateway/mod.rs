@@ -14,21 +14,29 @@
 //! - [`surge`] — a windowed arrival-rate detector that switches the
 //!   gateway between its permissive normal mode and load-shedding
 //!   surge mode (with hysteresis);
+//! - [`autoscale`] — a predictive autoscaler that turns the surge
+//!   detector's rate estimate (plus KV pressure) into a target replica
+//!   count, with cold-start lead time and scale-in hysteresis;
 //! - [`Gateway`] — the orchestrator, wrapping either a single simulated
 //!   [`Engine`] or a [`Cluster`] behind one submit/advance API, with
-//!   surge-aware routing-policy override for clusters.
+//!   surge-aware routing-policy override for clusters, elastic scaling,
+//!   and an optional **spill tier**: a second (cheaper) cluster that
+//!   replays requests the primary tier rejected, with the spill wait
+//!   charged to the request's original arrival so QoE stays honest.
 //!
 //! The live TCP server ([`crate::server`]) reuses the same components
 //! (admission controller, surge detector, per-request pacers) around
 //! its real-model engine.
 
 pub mod admission;
+pub mod autoscale;
 pub mod pacing;
 pub mod surge;
 
 pub use admission::{
     AdmissionConfig, AdmissionController, AdmissionDecision, RejectReason, ReplicaState,
 };
+pub use autoscale::{AutoscaleConfig, PredictiveAutoscaler, ScalePlan};
 pub use pacing::{pace_times, PacingConfig, TokenPacer};
 pub use surge::{LoadMode, SurgeConfig, SurgeDetector};
 
@@ -39,8 +47,10 @@ use anyhow::Result;
 use crate::backend::sim::SimBackend;
 use crate::backend::{Clock, ExecutionBackend, VirtualClock};
 use crate::cluster::{Cluster, RoutingPolicy};
-use crate::coordinator::engine::Engine;
+use crate::config::SchedulerConfig;
+use crate::coordinator::engine::{Engine, EngineConfig};
 use crate::coordinator::metrics::{Metrics, RequestRecord};
+use crate::model::latency::LatencyModel;
 use crate::qoe::metric::{qoe_finished, DigestState};
 use crate::qoe::spec::QoeSpec;
 use crate::workload::RequestSpec;
@@ -53,6 +63,9 @@ pub struct GatewayConfig {
     pub admission: AdmissionConfig,
     pub pacing: PacingConfig,
     pub surge: SurgeConfig,
+    /// Predictive autoscaling of the serving tier (cluster targets
+    /// only; disabled by default).
+    pub autoscale: AutoscaleConfig,
     /// Routing-policy override while in surge mode (cluster targets
     /// only): spread load instead of QoE-greedy placement.
     pub surge_routing: Option<RoutingPolicy>,
@@ -66,8 +79,56 @@ impl Default for GatewayConfig {
             admission: AdmissionConfig::default(),
             pacing: PacingConfig::default(),
             surge: SurgeConfig::default(),
+            autoscale: AutoscaleConfig::default(),
             surge_routing: Some(RoutingPolicy::LeastLoaded),
         }
+    }
+}
+
+/// Spill (overflow) tier configuration: a second, typically cheaper
+/// cluster that replays requests the primary tier rejected
+/// (`surge-shed`, `saturated`, `defer-timeout`).
+#[derive(Debug, Clone)]
+pub struct SpillConfig {
+    pub enabled: bool,
+    /// Number of spill replicas.
+    pub replicas: usize,
+    /// KV capacity of each spill replica relative to a primary replica
+    /// (the "cheaper hardware" knob); also its cost weight in
+    /// cost-weighted replica-seconds.
+    pub kv_fraction: f64,
+}
+
+impl Default for SpillConfig {
+    fn default() -> Self {
+        SpillConfig { enabled: false, replicas: 1, kv_fraction: 0.5 }
+    }
+}
+
+impl SpillConfig {
+    /// Build the overflow cluster: `replicas` engines with
+    /// `kv_fraction` of the primary KV budget, least-loaded routing
+    /// (the spill tier optimizes evacuation, not QoE placement).
+    pub fn build_cluster(
+        &self,
+        engine_cfg: &EngineConfig,
+        latency: &LatencyModel,
+        scheduler: &SchedulerConfig,
+    ) -> Cluster {
+        let mut cfg = engine_cfg.clone();
+        cfg.kv_capacity_tokens = ((cfg.kv_capacity_tokens as f64 * self.kv_fraction)
+            as usize)
+            .max(cfg.block_size * 4);
+        cfg.swap_capacity_tokens = ((cfg.swap_capacity_tokens as f64 * self.kv_fraction)
+            as usize)
+            .max(cfg.block_size * 8);
+        Cluster::new(
+            self.replicas.max(1),
+            cfg,
+            latency.clone(),
+            scheduler,
+            RoutingPolicy::LeastLoaded,
+        )
     }
 }
 
@@ -104,8 +165,30 @@ pub trait GatewayTarget {
         -> Result<()>;
     /// Advance simulated time to `t`, running pending work on the way.
     fn advance_to(&mut self, t: f64) -> Result<()>;
+    /// Run the target forward past its next internal event (one engine
+    /// iteration), returning the new time, or `None` when idle. Lets
+    /// the gateway resolve its defer queue event-by-event instead of
+    /// guessing a wall step.
+    fn step_once(&mut self) -> Result<Option<f64>>;
     /// Finish all remaining work and take the per-replica metrics.
     fn drain(&mut self) -> Result<Vec<Metrics>>;
+    /// Number of routable (non-draining) replicas.
+    fn routable_replicas(&self) -> usize {
+        self.replica_states().len()
+    }
+    /// Commission one replica at time `t` (elastic clusters only);
+    /// returns false when the target cannot scale.
+    fn scale_out(&mut self, _t: f64) -> bool {
+        false
+    }
+    /// Begin draining one replica at time `t`; returns false when
+    /// nothing can retire.
+    fn scale_in(&mut self, _t: f64) -> bool {
+        false
+    }
+    /// Replica-seconds consumed up to `t` — the run's cost metric
+    /// (static targets: replica count × elapsed time).
+    fn replica_seconds(&self, t: f64) -> f64;
 }
 
 impl GatewayTarget for Engine<SimBackend, VirtualClock> {
@@ -133,11 +216,24 @@ impl GatewayTarget for Engine<SimBackend, VirtualClock> {
         Ok(())
     }
 
+    fn step_once(&mut self) -> Result<Option<f64>> {
+        if !self.has_work() {
+            return Ok(None);
+        }
+        self.tick()?;
+        Ok(Some(self.clock().now()))
+    }
+
     fn drain(&mut self) -> Result<Vec<Metrics>> {
         while self.has_work() {
             self.tick()?;
         }
         Ok(vec![std::mem::take(self.metrics_mut())])
+    }
+
+    fn replica_seconds(&self, t: f64) -> f64 {
+        // One replica, commissioned at the virtual-time origin.
+        t.max(0.0)
     }
 }
 
@@ -147,7 +243,14 @@ impl GatewayTarget for Cluster {
     }
 
     fn replica_states(&self) -> Vec<ReplicaState> {
-        self.replicas().iter().map(engine_state).collect()
+        // Draining replicas take no new work, so admission must not
+        // count their headroom.
+        self.replicas()
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !self.is_draining(*i))
+            .map(|(_, e)| engine_state(e))
+            .collect()
     }
 
     fn submit_routed(
@@ -162,8 +265,29 @@ impl GatewayTarget for Cluster {
         self.advance_all_to(t)
     }
 
+    fn step_once(&mut self) -> Result<Option<f64>> {
+        Cluster::step_once(self)
+    }
+
     fn drain(&mut self) -> Result<Vec<Metrics>> {
         Cluster::drain(self)
+    }
+
+    fn routable_replicas(&self) -> usize {
+        self.routable_count()
+    }
+
+    fn scale_out(&mut self, t: f64) -> bool {
+        self.add_replica(t);
+        true
+    }
+
+    fn scale_in(&mut self, t: f64) -> bool {
+        self.retire_least_loaded(t).is_some()
+    }
+
+    fn replica_seconds(&self, t: f64) -> f64 {
+        Cluster::replica_seconds(self, t)
     }
 }
 
@@ -172,6 +296,8 @@ impl GatewayTarget for Cluster {
 pub enum SubmitOutcome {
     Admitted,
     Deferred,
+    /// Rejected by the primary tier but replayed on the spill tier.
+    Spilled(RejectReason),
     Rejected(RejectReason),
 }
 
@@ -191,7 +317,13 @@ pub struct GatewayStats {
     /// Requests that passed through the defer queue (admitted or not).
     pub deferred: usize,
     pub rejected: usize,
+    /// Primary-tier rejections replayed on the spill tier instead of
+    /// being dropped.
+    pub spilled: usize,
     pub surge_transitions: u64,
+    /// Autoscaler activity over the run (includes aborted cold starts).
+    pub scale_out_requests: u64,
+    pub scale_ins: u64,
 }
 
 /// One served request's delivery-layer outcome.
@@ -216,45 +348,69 @@ pub struct ServedRequest {
 pub struct GatewayRunResult {
     pub per_replica: Vec<Metrics>,
     pub served: Vec<ServedRequest>,
+    /// Requests the primary tier rejected that were replayed — and
+    /// ultimately served — on the spill tier.
+    pub spilled: Vec<ServedRequest>,
+    pub spill_per_replica: Vec<Metrics>,
     pub rejections: Vec<Rejection>,
     pub stats: GatewayStats,
+    /// Primary-tier replica-seconds consumed (commission through
+    /// decommission, or run end), the run's cost metric.
+    pub replica_seconds: f64,
+    /// Spill-tier replica-seconds (unweighted).
+    pub spill_replica_seconds: f64,
 }
 
 impl GatewayRunResult {
-    /// Mean final QoE over served requests (post-pacing).
+    fn served_qoe_sum(&self) -> f64 {
+        self.served.iter().chain(&self.spilled).map(|s| s.paced_qoe).sum::<f64>()
+    }
+
+    /// Count of requests that received service (either tier).
+    pub fn served_count(&self) -> usize {
+        self.served.len() + self.spilled.len()
+    }
+
+    /// Mean final QoE over served requests on either tier (post-pacing).
     pub fn mean_served_qoe(&self) -> f64 {
-        if self.served.is_empty() {
+        if self.served_count() == 0 {
             return 0.0;
         }
-        self.served.iter().map(|s| s.paced_qoe).sum::<f64>() / self.served.len() as f64
+        self.served_qoe_sum() / self.served_count() as f64
     }
 
     /// Mean QoE over *all* arrivals, counting each rejection as QoE 0.
     pub fn mean_qoe_incl_rejects(&self) -> f64 {
-        let n = self.served.len() + self.rejections.len();
+        let n = self.served_count() + self.rejections.len();
         if n == 0 {
             return 0.0;
         }
-        self.served.iter().map(|s| s.paced_qoe).sum::<f64>() / n as f64
+        self.served_qoe_sum() / n as f64
     }
 
     pub fn rejected_fraction(&self) -> f64 {
-        let n = self.served.len() + self.rejections.len();
+        let n = self.served_count() + self.rejections.len();
         if n == 0 {
             return 0.0;
         }
         self.rejections.len() as f64 / n as f64
     }
 
+    /// Primary plus spill replica-seconds (unweighted).
+    pub fn total_replica_seconds(&self) -> f64 {
+        self.replica_seconds + self.spill_replica_seconds
+    }
+
     /// (unshaped, shaped) fraction of tokens delivered ahead of the
-    /// digestion deadline.
+    /// digestion deadline, over both tiers.
     pub fn early_token_fractions(&self) -> (f64, f64) {
-        let total: usize = self.served.iter().map(|s| s.output_tokens).sum();
+        let all = || self.served.iter().chain(&self.spilled);
+        let total: usize = all().map(|s| s.output_tokens).sum();
         if total == 0 {
             return (0.0, 0.0);
         }
-        let raw: usize = self.served.iter().map(|s| s.raw_early_tokens).sum();
-        let paced: usize = self.served.iter().map(|s| s.paced_early_tokens).sum();
+        let raw: usize = all().map(|s| s.raw_early_tokens).sum();
+        let paced: usize = all().map(|s| s.paced_early_tokens).sum();
         (raw as f64 / total as f64, paced as f64 / total as f64)
     }
 }
@@ -319,6 +475,12 @@ pub struct Gateway<T: GatewayTarget> {
     target: T,
     admission: AdmissionController,
     surge: SurgeDetector,
+    autoscaler: PredictiveAutoscaler,
+    /// Set when the target refused a scale-out (single-engine targets):
+    /// stops the planner from re-requesting phantom replicas forever.
+    autoscale_unsupported: bool,
+    /// The overflow cluster replaying primary rejections, if any.
+    spill: Option<Cluster>,
     queue: VecDeque<DeferredRequest>,
     rejections: Vec<Rejection>,
     stats: GatewayStats,
@@ -328,15 +490,31 @@ impl<T: GatewayTarget> Gateway<T> {
     pub fn new(target: T, cfg: GatewayConfig) -> Self {
         let admission = AdmissionController::new(cfg.admission.clone());
         let surge = SurgeDetector::new(cfg.surge.clone());
+        let autoscaler = PredictiveAutoscaler::new(cfg.autoscale.clone());
         Gateway {
             cfg,
             target,
             admission,
             surge,
+            autoscaler,
+            autoscale_unsupported: false,
+            spill: None,
             queue: VecDeque::new(),
             rejections: Vec::new(),
             stats: GatewayStats::default(),
         }
+    }
+
+    /// Build a gateway with an overflow cluster that replays primary
+    /// rejections (`surge-shed` / `saturated` / `defer-timeout`).
+    pub fn with_spill(target: T, cfg: GatewayConfig, spill: Cluster) -> Self {
+        let mut gw = Gateway::new(target, cfg);
+        gw.spill = Some(spill);
+        gw
+    }
+
+    pub fn has_spill(&self) -> bool {
+        self.spill.is_some()
     }
 
     pub fn target(&self) -> &T {
@@ -356,11 +534,12 @@ impl<T: GatewayTarget> Gateway<T> {
     }
 
     /// Handle one arriving request at its arrival time: advance the
-    /// serving tier, update the surge estimate, retry the defer queue,
-    /// then admit/defer/reject the newcomer.
+    /// serving tier (sweeping any defer deadlines that fall before the
+    /// arrival), update the surge estimate, retry the defer queue, then
+    /// admit/defer/reject the newcomer.
     pub fn submit(&mut self, spec: RequestSpec) -> Result<SubmitOutcome> {
         let t = spec.arrival;
-        self.target.advance_to(t)?;
+        self.advance_world(t)?;
         self.surge.observe(t);
         self.flush_deferred(t)?;
         self.stats.arrivals += 1;
@@ -388,9 +567,99 @@ impl<T: GatewayTarget> Gateway<T> {
                 self.stats.deferred += 1;
                 Ok(SubmitOutcome::Deferred)
             }
-            AdmissionDecision::Reject(reason) => {
-                self.reject(spec.id, t, reason);
-                Ok(SubmitOutcome::Rejected(reason))
+            AdmissionDecision::Reject(reason) => self.reject_or_spill(spec, t, reason),
+        }
+    }
+
+    /// Earliest defer deadline (the queue is FIFO, so the front is due
+    /// first).
+    fn next_defer_deadline(&self) -> Option<f64> {
+        self.queue.front().map(|d| d.enqueued_at + self.cfg.admission.max_defer_wait)
+    }
+
+    /// Next instant before `t` at which gateway state changes on its
+    /// own: a defer deadline falling due, a cold start completing, or
+    /// a scale-in hold expiring.
+    fn next_sweep_event(&self, t: f64) -> Option<f64> {
+        let auto = if self.autoscale_unsupported {
+            None
+        } else {
+            self.autoscaler.next_event()
+        };
+        let ev = match (self.next_defer_deadline(), auto) {
+            (Some(a), Some(b)) => a.min(b),
+            (Some(a), None) | (None, Some(a)) => a,
+            (None, None) => return None,
+        };
+        (ev < t).then_some(ev)
+    }
+
+    /// Bring auxiliary state up to `t` and re-examine the defer queue:
+    /// spill clocks advance, the autoscaler plans (and the plan is
+    /// applied), deferred requests admit or expire.
+    fn sweep_at(&mut self, t: f64) -> Result<()> {
+        self.sync_spill(t)?;
+        self.autoscale_step(t);
+        self.flush_deferred(t)
+    }
+
+    /// Advance the whole world (primary tier, spill tier, autoscaler)
+    /// to `t`, sweeping every event that falls inside the gap at its
+    /// own due time — a deferred request is re-examined at its
+    /// deadline, not at the next arrival (which under sparse traffic
+    /// could be far later, inflating `waited` or admitting the request
+    /// seconds late), and autoscaler events (cold starts completing,
+    /// scale-in holds expiring) fire inside idle gaps instead of
+    /// charging replica-seconds until the next arrival.
+    fn advance_world(&mut self, t: f64) -> Result<()> {
+        let mut last_ev = f64::NEG_INFINITY;
+        while let Some(ev) = self.next_sweep_event(t) {
+            if ev <= last_ev {
+                // Defensive: every sweep must advance time (same-instant
+                // defer deadlines are all handled by one flush).
+                break;
+            }
+            last_ev = ev;
+            self.target.advance_to(ev)?;
+            self.sweep_at(ev)?;
+        }
+        self.target.advance_to(t)?;
+        self.sync_spill(t)?;
+        self.autoscale_step(t);
+        Ok(())
+    }
+
+    /// Keep the spill tier's clocks in lockstep with the primary tier.
+    fn sync_spill(&mut self, t: f64) -> Result<()> {
+        if let Some(sp) = self.spill.as_mut() {
+            sp.advance_all_to(t)?;
+        }
+        Ok(())
+    }
+
+    /// Run one autoscaler planning step at time `t` and apply the plan.
+    fn autoscale_step(&mut self, t: f64) {
+        if !self.cfg.autoscale.enabled || self.autoscale_unsupported {
+            return;
+        }
+        let states = self.target.replica_states();
+        let live = self.target.routable_replicas();
+        let rate = self.surge.rate_at(t);
+        let plan = self.autoscaler.evaluate(t, rate, &states, live);
+        for _ in 0..plan.commission {
+            if !self.target.scale_out(t) {
+                // The target cannot scale (e.g. a single engine): stop
+                // planning rather than re-request phantom replicas on
+                // every cold-start expiry for the rest of the run.
+                self.autoscale_unsupported = true;
+                break;
+            }
+        }
+        for _ in 0..plan.retire {
+            if self.target.routable_replicas() <= self.cfg.autoscale.min_replicas
+                || !self.target.scale_in(t)
+            {
+                break;
             }
         }
     }
@@ -407,70 +676,158 @@ impl<T: GatewayTarget> Gateway<T> {
         self.target.submit_routed(spec, policy)
     }
 
-    fn reject(&mut self, id: usize, time: f64, reason: RejectReason) {
-        self.rejections.push(Rejection { id, time, reason });
+    /// Drop a rejected request — unless the reason is spill-eligible
+    /// and an overflow tier exists, in which case the request is
+    /// replayed there. The spec keeps its original arrival timestamp,
+    /// so the whole spill wait is charged to the request's QoE.
+    fn reject_or_spill(
+        &mut self,
+        spec: RequestSpec,
+        t: f64,
+        reason: RejectReason,
+    ) -> Result<SubmitOutcome> {
+        let spillable = matches!(
+            reason,
+            RejectReason::SurgeShed { .. }
+                | RejectReason::Saturated { .. }
+                | RejectReason::DeferTimeout { .. }
+        );
+        if spillable {
+            if let Some(sp) = self.spill.as_mut() {
+                // The spill clocks are already at `t`: every caller
+                // (submit → advance_world, flush_deferred → sweep_at)
+                // runs sync_spill first.
+                sp.submit(spec)?;
+                self.stats.spilled += 1;
+                return Ok(SubmitOutcome::Spilled(reason));
+            }
+        }
+        self.rejections.push(Rejection { id: spec.id, time: t, reason });
         self.stats.rejected += 1;
+        Ok(SubmitOutcome::Rejected(reason))
     }
 
     /// Re-examine the defer queue (FIFO) at time `t`: admit what now
-    /// fits, expire what has waited too long, stop at the first request
-    /// that must keep waiting (order preserved).
+    /// fits, give requests at their deadline one final admission check
+    /// before expiring them, and stop at the first request that must
+    /// keep waiting (order preserved).
     fn flush_deferred(&mut self, t: f64) -> Result<()> {
         loop {
-            let (id, prompt, qoe, enqueued_at) = match self.queue.front() {
-                Some(d) => (d.spec.id, d.spec.prompt_tokens, d.spec.qoe, d.enqueued_at),
+            let (prompt, qoe, enqueued_at) = match self.queue.front() {
+                Some(d) => (d.spec.prompt_tokens, d.spec.qoe, d.enqueued_at),
                 None => return Ok(()),
             };
             let waited = t - enqueued_at;
-            if waited > self.cfg.admission.max_defer_wait {
-                self.queue.pop_front();
-                self.reject(id, t, RejectReason::DeferTimeout { waited });
-                continue;
-            }
+            let due = waited + 1e-9 >= self.cfg.admission.max_defer_wait;
             let states = self.target.replica_states();
             let depth = self.queue.len().saturating_sub(1);
             let decision =
                 self.admission.decide(prompt, &qoe, &states, self.surge.mode(), depth);
-            match decision {
-                AdmissionDecision::Admit => {
-                    let d = self.queue.pop_front().unwrap();
-                    self.route(d.spec)?;
-                    self.stats.admitted += 1;
-                }
-                _ => return Ok(()),
+            if decision == AdmissionDecision::Admit {
+                let d = self.queue.pop_front().unwrap();
+                self.route(d.spec)?;
+                self.stats.admitted += 1;
+                continue;
             }
+            if due {
+                // The admission check above was the request's final
+                // chance (a request that fits *right now* is admitted
+                // rather than rejected on a technicality); it failed,
+                // so the deadline stands.
+                let d = self.queue.pop_front().unwrap();
+                self.reject_or_spill(d.spec, t, RejectReason::DeferTimeout { waited })?;
+                continue;
+            }
+            return Ok(());
         }
     }
 
     /// Drain the serving tier, giving the defer queue its bounded chance
     /// to be admitted as capacity frees, then post-process delivery.
     pub fn finish(&mut self) -> Result<GatewayRunResult> {
-        // Step simulated time forward until the queue resolves: each
-        // entry either admits or hits its defer timeout.
+        // Resolve the defer queue by stepping simulated time to the
+        // earlier of the next defer deadline and the target's next
+        // internal event — not a fixed wall-step, which both overshot
+        // deadlines (inflating `waited`) and wasted iterations when the
+        // target was idle.
         while !self.queue.is_empty() {
-            let t = self.target.now() + 0.25;
-            self.target.advance_to(t)?;
-            self.flush_deferred(t)?;
+            let deadline = self.next_defer_deadline().expect("non-empty queue");
+            if self.target.now() + 1e-9 >= deadline {
+                // Due now (the clock may have overshot by at most one
+                // engine iteration): account the expiry at the deadline
+                // itself so `waited` stays exact.
+                self.sweep_at(deadline)?;
+                continue;
+            }
+            match self.target.step_once()? {
+                Some(stepped) => {
+                    self.sweep_at(stepped.min(deadline))?;
+                }
+                None => {
+                    // Idle target: jump straight to the deadline.
+                    self.target.advance_to(deadline)?;
+                    self.sweep_at(deadline)?;
+                }
+            }
+        }
+        // Drain the primary tier event by event so autoscaler events
+        // (cold starts completing, scale-in holds expiring) keep firing
+        // through the tail — otherwise idle replicas are charged
+        // replica-seconds until the last request finishes.
+        while let Some(stepped) = self.target.step_once()? {
+            self.sync_spill(stepped)?;
+            self.autoscale_step(stepped);
         }
         let per_replica = self.target.drain()?;
+        let replica_seconds = self.target.replica_seconds(self.target.now());
         self.stats.surge_transitions = self.surge.transitions();
+        self.stats.scale_out_requests = self.autoscaler.scale_out_requests();
+        self.stats.scale_ins = self.autoscaler.retirements();
         let mut served = Vec::new();
         for m in &per_replica {
             for r in &m.requests {
                 served.push(served_outcome(r, self.cfg.pacing_enabled, &self.cfg.pacing));
             }
         }
+        let mut spilled = Vec::new();
+        let mut spill_per_replica = Vec::new();
+        let mut spill_replica_seconds = 0.0;
+        if let Some(sp) = self.spill.as_mut() {
+            let metrics = sp.drain()?;
+            spill_replica_seconds = sp.replica_seconds(sp.now());
+            for m in &metrics {
+                for r in &m.requests {
+                    spilled.push(served_outcome(
+                        r,
+                        self.cfg.pacing_enabled,
+                        &self.cfg.pacing,
+                    ));
+                }
+            }
+            spill_per_replica = metrics;
+        }
         Ok(GatewayRunResult {
             per_replica,
             served,
+            spilled,
+            spill_per_replica,
             rejections: self.rejections.clone(),
             stats: self.stats.clone(),
+            replica_seconds,
+            spill_replica_seconds,
         })
     }
 
-    /// Run a whole trace through the gateway and finish.
+    /// Run a whole trace through the gateway and finish. Non-finite
+    /// arrivals are clamped to the trace origin (see
+    /// [`Engine::load_trace`] for why they must not flow downstream).
     pub fn run_trace(&mut self, mut trace: Vec<RequestSpec>) -> Result<GatewayRunResult> {
-        trace.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        for s in &mut trace {
+            if !s.arrival.is_finite() {
+                s.arrival = 0.0;
+            }
+        }
+        trace.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         for spec in trace {
             self.submit(spec)?;
         }
@@ -592,6 +949,231 @@ mod tests {
         let q0 = res.served.iter().find(|s| s.id == 0).unwrap().raw_qoe;
         let q1 = res.served.iter().find(|s| s.id == 1).unwrap().raw_qoe;
         assert!(q1 < q0, "deferral must cost QoE: {q1} !< {q0}");
+    }
+
+    #[test]
+    fn deferred_request_expires_at_deadline_not_next_arrival() {
+        // Regression: the defer queue used to be re-examined only when
+        // a new arrival called flush_deferred — under sparse post-burst
+        // traffic a deferred request sat far past max_defer_wait and
+        // was rejected with an inflated `waited`. It must now expire at
+        // its own deadline.
+        let mut cfg = GatewayConfig::default();
+        cfg.pacing_enabled = false;
+        cfg.admission.max_defer_wait = 2.0;
+        let mut gw = Gateway::new(sim_engine(2000), cfg);
+        let mk = |id: usize, arrival: f64, prompt: usize| RequestSpec {
+            id,
+            arrival,
+            prompt_tokens: prompt,
+            output_tokens: 200,
+            qoe: QoeSpec::new(1.0, 4.8),
+        };
+        // Request 0 pins the KV for tens of seconds.
+        assert_eq!(gw.submit(mk(0, 0.5, 1500)).unwrap(), SubmitOutcome::Admitted);
+        // Request 1 cannot fit → deferred at t=1.0, deadline t=3.0.
+        assert_eq!(gw.submit(mk(1, 1.0, 1200)).unwrap(), SubmitOutcome::Deferred);
+        // Sparse traffic: the next arrival is 29 s later.
+        let _ = gw.submit(mk(2, 30.0, 100)).unwrap();
+        let rej: Vec<&Rejection> =
+            gw.rejections().iter().filter(|r| r.id == 1).collect();
+        assert_eq!(rej.len(), 1, "deferred request must have expired");
+        assert!(
+            rej[0].time < 3.5,
+            "expired at t={} — deadline is 3.0, not the next arrival at 30",
+            rej[0].time
+        );
+        match rej[0].reason {
+            RejectReason::DeferTimeout { waited } => assert!(
+                (waited - 2.0).abs() < 0.25,
+                "waited {waited} must be ≈ max_defer_wait (2.0), not inflated to ~29"
+            ),
+            other => panic!("wrong reject reason {other:?}"),
+        }
+        gw.finish().unwrap();
+    }
+
+    #[test]
+    fn deferred_request_gets_final_admission_check_at_deadline() {
+        // Regression: a request whose deadline passed during an idle
+        // gap used to be rejected even if it fit right then. The expiry
+        // path must attempt admission first.
+        let mut cfg = GatewayConfig::default();
+        cfg.pacing_enabled = false;
+        cfg.admission.max_defer_wait = 5.0;
+        let mut gw = Gateway::new(sim_engine(2000), cfg);
+        let mk = |id: usize, arrival: f64, prompt: usize, output: usize| RequestSpec {
+            id,
+            arrival,
+            prompt_tokens: prompt,
+            output_tokens: output,
+            qoe: QoeSpec::new(1.0, 4.8),
+        };
+        // Request 0 fills the KV but finishes well before request 1's
+        // deadline (t=6.0); the next arrival is far later.
+        assert_eq!(gw.submit(mk(0, 0.5, 1500, 15)).unwrap(), SubmitOutcome::Admitted);
+        assert_eq!(gw.submit(mk(1, 1.0, 1200, 40)).unwrap(), SubmitOutcome::Deferred);
+        let _ = gw.submit(mk(2, 40.0, 100, 20)).unwrap();
+        let res = gw.finish().unwrap();
+        assert!(
+            res.rejections.iter().all(|r| r.id != 1),
+            "request 1 fit at its deadline and must not expire"
+        );
+        // Engine ids follow submission order, so spec id 1 is engine
+        // request 1.
+        let r1 = res.per_replica[0].requests.iter().find(|r| r.id == 1).unwrap();
+        assert!(
+            r1.token_times[0] < 10.0,
+            "first token at t={} — admission happened at the deadline sweep \
+             (t=6.0), not at the next arrival (t=40)",
+            r1.token_times[0]
+        );
+    }
+
+    #[test]
+    fn spill_tier_replays_rejections_and_conserves_requests() {
+        // Far past primary capacity, sheds are replayed on the spill
+        // cluster instead of being dropped.
+        let reqs = trace(120, 12.0, 7);
+        let mut cfg = GatewayConfig::default();
+        cfg.pacing_enabled = false;
+        cfg.surge.baseline_rate = 1.5;
+        let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+        let ecfg = EngineConfig {
+            kv_capacity_tokens: 8000,
+            swap_capacity_tokens: 16_000,
+            ..EngineConfig::default()
+        };
+        let spill = Cluster::new(
+            2,
+            ecfg,
+            latency,
+            &SchedulerConfig::Fcfs,
+            RoutingPolicy::LeastLoaded,
+        );
+        let mut gw = Gateway::with_spill(sim_engine(2500), cfg, spill);
+        let res = gw.run_trace(reqs).unwrap();
+        assert!(res.stats.spilled > 0, "8× overload must spill");
+        assert_eq!(res.spilled.len(), res.stats.spilled, "every spill must serve");
+        // Conservation across both tiers.
+        assert_eq!(res.served.len() + res.spilled.len() + res.rejections.len(), 120);
+        assert_eq!(
+            res.stats.admitted + res.stats.spilled + res.stats.rejected,
+            res.stats.arrivals
+        );
+        assert!(res.spill_replica_seconds > 0.0);
+    }
+
+    #[test]
+    fn spill_wait_is_charged_to_original_arrival() {
+        let mut cfg = GatewayConfig::default();
+        cfg.pacing_enabled = false;
+        cfg.admission.max_defer_wait = 3.0;
+        let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+        let ecfg = EngineConfig {
+            kv_capacity_tokens: 100_000,
+            swap_capacity_tokens: 200_000,
+            ..EngineConfig::default()
+        };
+        let spill = Cluster::new(
+            1,
+            ecfg,
+            latency,
+            &SchedulerConfig::Fcfs,
+            RoutingPolicy::LeastLoaded,
+        );
+        let mut gw = Gateway::with_spill(sim_engine(2000), cfg, spill);
+        let mk = |id: usize, arrival: f64, prompt: usize, output: usize| RequestSpec {
+            id,
+            arrival,
+            prompt_tokens: prompt,
+            output_tokens: output,
+            qoe: QoeSpec::new(1.0, 4.8),
+        };
+        // Request 0 pins the primary; request 1 defers at t=1.0 and
+        // times out at t=4.0, spilling onto an idle overflow replica.
+        assert_eq!(gw.submit(mk(0, 0.5, 1500, 200)).unwrap(), SubmitOutcome::Admitted);
+        assert_eq!(gw.submit(mk(1, 1.0, 1200, 40)).unwrap(), SubmitOutcome::Deferred);
+        let res = gw.finish().unwrap();
+        assert_eq!(res.stats.spilled, 1);
+        assert_eq!(res.spilled.len(), 1);
+        assert!(res.rejections.is_empty());
+        // The spill engine preserved the original arrival, so the
+        // 3 s defer wait plus replay is charged to the request's QoE.
+        let rec = &res.spill_per_replica[0].requests[0];
+        assert!((rec.arrival - 1.0).abs() < 1e-9, "arrival {}", rec.arrival);
+        assert!(
+            rec.token_times[0] >= 4.0 - 1e-9,
+            "service starts after the defer timeout, got {}",
+            rec.token_times[0]
+        );
+        assert!(
+            res.spilled[0].raw_qoe < 1.0 - 1e-6,
+            "the spill wait must cost QoE (got {})",
+            res.spilled[0].raw_qoe
+        );
+    }
+
+    #[test]
+    fn autoscaler_grows_and_shrinks_the_cluster() {
+        let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+        let ecfg = EngineConfig {
+            kv_capacity_tokens: 8000,
+            swap_capacity_tokens: 16_000,
+            ..EngineConfig::default()
+        };
+        let cluster = Cluster::new(
+            1,
+            ecfg,
+            latency,
+            &SchedulerConfig::Fcfs,
+            RoutingPolicy::LeastLoaded,
+        );
+        let mut cfg = GatewayConfig::default();
+        cfg.pacing_enabled = false;
+        cfg.surge.baseline_rate = 100.0; // keep shedding out of the way
+        cfg.autoscale = AutoscaleConfig {
+            enabled: true,
+            min_replicas: 1,
+            max_replicas: 3,
+            replica_capacity: 1.0,
+            target_utilization: 1.0,
+            cold_start_secs: 2.0,
+            scale_in_hold_secs: 10.0,
+            kv_high_watermark: 0.95,
+            eval_interval_secs: 0.5,
+        };
+        let mut gw = Gateway::new(cluster, cfg);
+        // A 15 s burst at 6 req/s, then sparse stragglers.
+        let mut reqs: Vec<RequestSpec> = (0..90)
+            .map(|i| RequestSpec {
+                id: i,
+                arrival: 0.5 + i as f64 / 6.0,
+                prompt_tokens: 150,
+                output_tokens: 30,
+                qoe: QoeSpec::new(1.0, 4.8),
+            })
+            .collect();
+        for k in 0..4usize {
+            reqs.push(RequestSpec {
+                id: 90 + k,
+                arrival: 40.0 + 15.0 * k as f64,
+                prompt_tokens: 100,
+                output_tokens: 20,
+                qoe: QoeSpec::new(1.0, 4.8),
+            });
+        }
+        let res = gw.run_trace(reqs).unwrap();
+        assert!(res.stats.scale_out_requests >= 1, "burst must trigger scale-out");
+        assert!(res.stats.scale_ins >= 1, "quiet tail must retire replicas");
+        assert_eq!(res.served_count() + res.rejections.len(), 94, "conservation");
+        assert!(gw.target().num_replicas() > 1, "cluster must have grown");
+        assert_eq!(
+            gw.target().routable_count(),
+            1,
+            "the tail must shrink routing back to min_replicas"
+        );
+        assert!(res.replica_seconds > 0.0);
     }
 
     #[test]

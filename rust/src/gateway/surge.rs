@@ -64,6 +64,10 @@ pub struct SurgeDetector {
     cfg: SurgeConfig,
     /// Arrival timestamps inside the current window, oldest first.
     arrivals: VecDeque<f64>,
+    /// First arrival ever observed (survives window eviction): before a
+    /// full window has elapsed, the rate is estimated over the observed
+    /// span rather than the window length.
+    first_arrival: Option<f64>,
     mode: LoadMode,
     transitions: u64,
 }
@@ -76,7 +80,13 @@ impl SurgeDetector {
             cfg.enter_factor > cfg.exit_factor,
             "enter factor must exceed exit factor (hysteresis band)"
         );
-        SurgeDetector { cfg, arrivals: VecDeque::new(), mode: LoadMode::Normal, transitions: 0 }
+        SurgeDetector {
+            cfg,
+            arrivals: VecDeque::new(),
+            first_arrival: None,
+            mode: LoadMode::Normal,
+            transitions: 0,
+        }
     }
 
     pub fn config(&self) -> &SurgeConfig {
@@ -85,6 +95,9 @@ impl SurgeDetector {
 
     /// Record an arrival at time `t` (monotone) and update the mode.
     pub fn observe(&mut self, t: f64) {
+        if self.first_arrival.is_none() {
+            self.first_arrival = Some(t);
+        }
         self.arrivals.push_back(t);
         let cutoff = t - self.cfg.window_secs;
         while self.arrivals.front().is_some_and(|&a| a < cutoff) {
@@ -94,10 +107,23 @@ impl SurgeDetector {
     }
 
     /// Windowed arrival-rate estimate (req/s) as of time `t`.
+    ///
+    /// Before a full window has elapsed since the first arrival, the
+    /// count is divided by the *observed span* rather than the window
+    /// length — dividing by the full window underestimates the rate at
+    /// cold start and delays surge entry during an opening burst. The
+    /// span is floored at a tenth of the window so a tight opening
+    /// burst cannot produce an unbounded estimate.
     pub fn rate_at(&self, t: f64) -> f64 {
         let cutoff = t - self.cfg.window_secs;
         let n = self.arrivals.iter().filter(|&&a| a >= cutoff).count();
-        n as f64 / self.cfg.window_secs
+        let span = match self.first_arrival {
+            Some(first) => {
+                (t - first).min(self.cfg.window_secs).max(self.cfg.window_secs * 0.1)
+            }
+            None => self.cfg.window_secs,
+        };
+        n as f64 / span
     }
 
     pub fn mode(&self) -> LoadMode {
@@ -213,6 +239,34 @@ mod tests {
         assert_eq!(d.mode(), LoadMode::Surge);
         feed(&mut d, t, 0.2, 4); // 1 arrival / 5 s — window nearly empty
         assert_eq!(d.mode(), LoadMode::Normal);
+    }
+
+    #[test]
+    fn cold_start_rate_uses_observed_span() {
+        // 8 req/s for one second into an empty 5 s window: dividing by
+        // the full window would report ~1.6 req/s; the estimate must
+        // track the actual opening rate instead.
+        let mut d = detector();
+        let t = feed(&mut d, 0.0, 8.0, 8);
+        let r = d.rate_at(t);
+        assert!(r > 6.0, "cold-start rate underestimated: {r}");
+    }
+
+    #[test]
+    fn opening_burst_enters_surge_promptly() {
+        // An 8 req/s burst from a cold start must flip to Surge as soon
+        // as min_arrivals trusts the sample — not only after enough
+        // arrivals to fill the whole window.
+        let mut d = detector();
+        let mut n = 0;
+        let mut t = 0.0;
+        while d.mode() == LoadMode::Normal && n < 40 {
+            t += 1.0 / 8.0;
+            d.observe(t);
+            n += 1;
+        }
+        assert_eq!(d.mode(), LoadMode::Surge);
+        assert!(n <= 6, "surge entry took {n} arrivals (window-fill lag)");
     }
 
     #[test]

@@ -138,6 +138,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
                 cfg.gpu = d.gpu;
                 cfg.scheduler = d.scheduler;
                 cfg.gateway = d.gateway;
+                cfg.spill = d.spill;
                 cfg.kv_capacity_tokens = d.engine.kv_capacity_tokens;
                 cfg.max_output_tokens = d.engine.max_output_tokens;
             }
@@ -270,6 +271,18 @@ fn cmd_simulate(argv: &[String]) -> i32 {
         OptSpec::value("n", Some("1000"), "number of requests"),
         OptSpec::value("seed", Some("42"), "PRNG seed"),
         OptSpec::value("trace", None, "replay a workload CSV instead of generating"),
+        OptSpec::value("replicas", Some("1"), "cluster replicas (>1 runs via the gateway)"),
+        OptSpec::flag("gateway", "front the run with the QoE-aware gateway"),
+        OptSpec::value(
+            "autoscale",
+            None,
+            "elastic replicas as min:max (enables the gateway + autoscaler)",
+        ),
+        OptSpec::value(
+            "spill-replicas",
+            Some("0"),
+            "spill-tier replicas replaying rejects (0 = no spill tier)",
+        ),
     ];
     let about = "One simulated serving run";
     let args = match Args::parse(argv, &specs) {
@@ -285,8 +298,34 @@ fn cmd_simulate(argv: &[String]) -> i32 {
     };
     let dataset = Dataset::by_name(args.get("dataset").unwrap()).unwrap_or(Dataset::ShareGpt);
 
+    // Cluster/gateway flags: --replicas > 1, --gateway, --autoscale, or
+    // --spill-replicas route the trace through the serving gateway.
+    let replicas = match args.get_usize("replicas") {
+        Ok(Some(r)) => r.max(1),
+        Ok(None) => 1,
+        Err(e) => return die_on_cli("simulate", about, &specs, e),
+    };
+    let spill_replicas = match args.get_usize("spill-replicas") {
+        Ok(Some(r)) => r,
+        Ok(None) => 0,
+        Err(e) => return die_on_cli("simulate", about, &specs, e),
+    };
+    let autoscale_arg = args.get("autoscale").map(str::to_string);
+    let use_gateway = args.has_flag("gateway")
+        || autoscale_arg.is_some()
+        || spill_replicas > 0
+        || replicas > 1;
+
     // Trace replay path: run the exact recorded workload.
     if let Some(path) = args.get("trace") {
+        if use_gateway {
+            eprintln!(
+                "--trace replays a recorded workload on a single static engine; \
+                 it cannot be combined with --gateway/--replicas/--autoscale/\
+                 --spill-replicas"
+            );
+            return 2;
+        }
         let text = match std::fs::read_to_string(path) {
             Ok(t) => t,
             Err(e) => {
@@ -328,6 +367,114 @@ fn cmd_simulate(argv: &[String]) -> i32 {
                 return 1;
             }
         }
+    }
+
+    // Gateway path: reports replica-seconds alongside QoE.
+    if use_gateway {
+        use andes::cluster::{Cluster, RoutingPolicy};
+        use andes::coordinator::engine::EngineConfig;
+        use andes::gateway::{AutoscaleConfig, Gateway, GatewayConfig, SpillConfig};
+
+        let sched_cfg = match args.get("sched").unwrap() {
+            "fcfs" => andes::config::SchedulerConfig::Fcfs,
+            "rr" => andes::config::SchedulerConfig::RoundRobin { quantum: 50 },
+            _ => andes::config::SchedulerConfig::Andes(Default::default()),
+        };
+        let latency = andes::model::latency::LatencyModel::for_deployment(&llm, &gpu);
+        let engine_cfg = EngineConfig {
+            kv_capacity_tokens: llm.kv_capacity_tokens(&gpu),
+            swap_capacity_tokens: llm.swap_capacity_tokens(&gpu),
+            ..EngineConfig::default()
+        };
+        let per_replica = experiments::runner::estimate_capacity(&llm, &gpu, dataset);
+        let mut gcfg = GatewayConfig::default();
+        if let Some(spec) = autoscale_arg.as_deref() {
+            let parsed: Option<(usize, usize)> = spec.split_once(':').and_then(|(lo, hi)| {
+                let lo = lo.trim().parse().ok()?;
+                let hi = hi.trim().parse().ok()?;
+                Some((lo, hi))
+            });
+            let (min_r, max_r) = match parsed {
+                Some((lo, hi)) if lo >= 1 && lo <= hi => (lo, hi),
+                _ => {
+                    eprintln!("--autoscale expects min:max with 1 <= min <= max");
+                    return 2;
+                }
+            };
+            gcfg.autoscale = AutoscaleConfig {
+                enabled: true,
+                min_replicas: min_r,
+                max_replicas: max_r,
+                replica_capacity: per_replica,
+                ..AutoscaleConfig::default()
+            };
+        }
+        // Surge baseline reflects the tier's reachable capacity: for an
+        // elastic tier that is the autoscale ceiling, not the starting
+        // replica count — otherwise the detector sheds during the very
+        // cold starts the autoscaler exists to cover.
+        let cap_replicas = if gcfg.autoscale.enabled {
+            gcfg.autoscale.max_replicas.max(replicas)
+        } else {
+            replicas
+        };
+        gcfg.surge.baseline_rate = (per_replica * cap_replicas as f64).max(0.1);
+        // With autoscale, start at least at the floor of the range.
+        let start_replicas = if gcfg.autoscale.enabled {
+            replicas.max(gcfg.autoscale.min_replicas)
+        } else {
+            replicas
+        };
+        let cluster = Cluster::new(
+            start_replicas,
+            engine_cfg.clone(),
+            latency.clone(),
+            &sched_cfg,
+            RoutingPolicy::QoeAware,
+        );
+        let mut gw = if spill_replicas > 0 {
+            let spill =
+                SpillConfig { enabled: true, replicas: spill_replicas, kv_fraction: 0.5 }
+                    .build_cluster(&engine_cfg, &latency, &sched_cfg);
+            Gateway::with_spill(cluster, gcfg, spill)
+        } else {
+            Gateway::new(cluster, gcfg)
+        };
+        let trace = Workload {
+            dataset,
+            arrivals: ArrivalProcess::Poisson {
+                rate: args.get_f64("rate").unwrap().unwrap(),
+            },
+            qoe_trace: QoeTrace::TextReading,
+            num_requests: args.get_usize("n").unwrap().unwrap(),
+            seed: args.get_u64("seed").unwrap().unwrap(),
+        }
+        .generate();
+        return match gw.run_trace(trace) {
+            Ok(res) => {
+                println!(
+                    "gateway: arrivals={} served={} spilled={} rejected={} deferred={} \
+                     mean_qoe={:.3} incl_rejects={:.3} replica_seconds={:.1} (spill {:.1}) \
+                     scale_outs={} scale_ins={}",
+                    res.stats.arrivals,
+                    res.served.len(),
+                    res.spilled.len(),
+                    res.rejections.len(),
+                    res.stats.deferred,
+                    res.mean_served_qoe(),
+                    res.mean_qoe_incl_rejects(),
+                    res.replica_seconds,
+                    res.spill_replica_seconds,
+                    res.stats.scale_out_requests,
+                    res.stats.scale_ins,
+                );
+                0
+            }
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                1
+            }
+        };
     }
 
     let run = experiments::runner::SimRun {

@@ -37,7 +37,7 @@ use crate::coordinator::engine::{Engine, EngineConfig};
 use crate::coordinator::request::RequestId;
 use crate::gateway::{
     engine_state, AdmissionController, AdmissionDecision, GatewayConfig, RejectReason,
-    SurgeDetector, TokenPacer,
+    SpillConfig, SurgeDetector, TokenPacer,
 };
 use crate::model::gpu::{a100_1x, GpuProfile};
 use crate::model::latency::LatencyModel;
@@ -77,6 +77,10 @@ pub struct ServerConfig {
     pub gpu: GpuProfile,
     pub scheduler: SchedulerConfig,
     pub gateway: GatewayConfig,
+    /// Spill-tier section from the deployment config. The live server
+    /// fronts a single engine, so this is advisory (see `engine_loop`);
+    /// the simulated cluster paths consume it for real.
+    pub spill: SpillConfig,
 }
 
 impl Default for ServerConfig {
@@ -89,6 +93,7 @@ impl Default for ServerConfig {
             gpu: a100_1x(),
             scheduler: SchedulerConfig::Andes(Default::default()),
             gateway: GatewayConfig::default(),
+            spill: SpillConfig::default(),
         }
     }
 }
@@ -127,6 +132,25 @@ fn engine_loop(cfg: ServerConfig, rx: Receiver<Submission>) -> Result<()> {
         latency,
     );
 
+    if cfg.gateway.autoscale.enabled {
+        // The live server fronts a single real-model engine; elastic
+        // replica scaling applies to the simulated cluster tier
+        // (`andes exp ext-autoscale`, `andes simulate --autoscale`).
+        log::info!(
+            "autoscale config present ({}..{} replicas) — advisory only for the \
+             single-engine live server",
+            cfg.gateway.autoscale.min_replicas,
+            cfg.gateway.autoscale.max_replicas
+        );
+    }
+    if cfg.spill.enabled {
+        log::info!(
+            "spill config present ({} replicas) — advisory only for the \
+             single-engine live server (use `andes simulate --spill-replicas` \
+             or `andes exp ext-autoscale`)",
+            cfg.spill.replicas
+        );
+    }
     let mut admission = AdmissionController::new(cfg.gateway.admission.clone());
     let mut surge = SurgeDetector::new(cfg.gateway.surge.clone());
     let mut streams: HashMap<RequestId, Stream> = HashMap::new();

@@ -29,15 +29,25 @@ pub fn parse_trace_csv(text: &str) -> anyhow::Result<Vec<RequestSpec>> {
             f[i].parse::<f64>()
                 .map_err(|_| anyhow::anyhow!("line {}: bad number '{}'", lineno + 1, f[i]))
         };
+        let arrival = parse_f(1)?;
+        // A non-finite arrival is never ingested by the engine
+        // (`NaN <= now` is false) — reject it loudly here rather than
+        // rely on the engine's defensive clamp-to-origin.
+        anyhow::ensure!(
+            arrival.is_finite(),
+            "line {}: non-finite arrival '{}'",
+            lineno + 1,
+            f[1]
+        );
         out.push(RequestSpec {
             id: parse_f(0)? as usize,
-            arrival: parse_f(1)?,
+            arrival,
             prompt_tokens: parse_f(2)? as usize,
             output_tokens: parse_f(3)? as usize,
             qoe: QoeSpec::new(parse_f(4)?, parse_f(5)?),
         });
     }
-    out.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    out.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
     Ok(out)
 }
 
@@ -148,6 +158,9 @@ mod tests {
         assert!(parse_trace_csv("1,2,3").is_err());
         assert!(parse_trace_csv("a,b,c,d,e,f").is_err());
         assert!(parse_trace_csv("").unwrap().is_empty());
+        // Non-finite arrivals would hang the engine's ingest loop.
+        assert!(parse_trace_csv("0,NaN,100,50,1.0,4.8").is_err());
+        assert!(parse_trace_csv("0,inf,100,50,1.0,4.8").is_err());
     }
 
     #[test]

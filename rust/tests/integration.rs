@@ -325,6 +325,95 @@ fn gateway_full_stack_conserves_requests() {
     }
 }
 
+#[test]
+fn gateway_conserves_requests_across_random_traces() {
+    // Property: for random traces, loads, and gateway shapes — plain,
+    // autoscaling, spilling, or both — every arrival is accounted for
+    // exactly once: admitted+spilled+rejected == arrivals at the stats
+    // layer, and served+spilled+rejections == arrivals at the result
+    // layer.
+    use andes::cluster::{Cluster, RoutingPolicy};
+    use andes::config::SchedulerConfig;
+    use andes::gateway::{AutoscaleConfig, Gateway, GatewayConfig, SpillConfig};
+
+    let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+    check_prop("gateway request conservation", 10, |rng| {
+        let n = rng.range(10, 45);
+        let rate = 0.5 + rng.f64() * 9.5;
+        let cv = if rng.chance(0.5) { 1.0 } else { 3.0 };
+        let ecfg = EngineConfig {
+            kv_capacity_tokens: rng.range(2500, 9000),
+            swap_capacity_tokens: 18_000,
+            ..EngineConfig::default()
+        };
+        let cluster = Cluster::new(
+            rng.range(1, 3),
+            ecfg.clone(),
+            latency.clone(),
+            &SchedulerConfig::Fcfs,
+            RoutingPolicy::QoeAware,
+        );
+        let mut gcfg = GatewayConfig::default();
+        gcfg.pacing_enabled = rng.chance(0.5);
+        gcfg.surge.baseline_rate = 0.5 + rng.f64() * 3.0;
+        gcfg.admission.max_defer_wait = 1.0 + rng.f64() * 9.0;
+        if rng.chance(0.5) {
+            gcfg.autoscale = AutoscaleConfig {
+                enabled: true,
+                min_replicas: 1,
+                max_replicas: 4,
+                replica_capacity: 0.5 + rng.f64() * 2.0,
+                target_utilization: 0.8,
+                cold_start_secs: rng.f64() * 5.0,
+                scale_in_hold_secs: 5.0 + rng.f64() * 20.0,
+                kv_high_watermark: 0.9,
+                eval_interval_secs: 0.5,
+            };
+        }
+        let trace = Workload {
+            dataset: Dataset::ShareGpt,
+            arrivals: if cv == 1.0 {
+                ArrivalProcess::Poisson { rate }
+            } else {
+                ArrivalProcess::Gamma { rate, cv }
+            },
+            qoe_trace: QoeTrace::TextReading,
+            num_requests: n,
+            seed: rng.next_u64(),
+        }
+        .generate();
+        let mut gw = if rng.chance(0.5) {
+            let spill = SpillConfig { enabled: true, replicas: 1, kv_fraction: 0.5 }
+                .build_cluster(&ecfg, &latency, &SchedulerConfig::Fcfs);
+            Gateway::with_spill(cluster, gcfg, spill)
+        } else {
+            Gateway::new(cluster, gcfg)
+        };
+        let res = gw.run_trace(trace).unwrap();
+        assert_eq!(res.stats.arrivals, n, "arrival count");
+        assert_eq!(
+            res.stats.admitted + res.stats.spilled + res.stats.rejected,
+            n,
+            "stats conservation (admitted {} spilled {} rejected {})",
+            res.stats.admitted,
+            res.stats.spilled,
+            res.stats.rejected
+        );
+        assert_eq!(
+            res.served.len() + res.spilled.len() + res.rejections.len(),
+            n,
+            "result conservation (served {} spilled {} rejected {})",
+            res.served.len(),
+            res.spilled.len(),
+            res.rejections.len()
+        );
+        assert_eq!(res.stats.admitted, res.served.len());
+        assert_eq!(res.stats.spilled, res.spilled.len());
+        assert_eq!(res.stats.rejected, res.rejections.len());
+        assert!(res.replica_seconds >= 0.0);
+    });
+}
+
 // ---------------------------------------------------------------- server
 
 #[test]
