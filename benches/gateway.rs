@@ -3,13 +3,16 @@
 //! The gateway sits in front of *every* request, so its per-arrival cost
 //! must be negligible next to an engine iteration (~150 ms decode). This
 //! measures the admission decision against a 16-replica cluster
-//! snapshot, the surge detector's observe path, and one pacing round
-//! across 10k concurrent streams — reporting admission decisions/sec at
-//! the end.
+//! snapshot (tier-blind and tier-weighted), the federation
+//! snapshot-merge, the surge detector's observe path, and one pacing
+//! round across 10k concurrent streams — reporting admission
+//! decisions/sec at the end and writing the perf baseline to
+//! `BENCH_gateway.json`.
 
 use andes::gateway::{
-    AdmissionConfig, AdmissionController, AutoscaleConfig, LoadMode, PacingConfig,
-    PredictiveAutoscaler, ReplicaState, SurgeConfig, SurgeDetector, TokenPacer,
+    merge_snapshot, AdmissionConfig, AdmissionController, AutoscaleConfig, LoadMode,
+    PacingConfig, PredictiveAutoscaler, ReplicaState, SurgeConfig, SurgeDetector,
+    TierWeights, TokenPacer,
 };
 use andes::qoe::spec::QoeSpec;
 use andes::util::bench::{header, Bencher};
@@ -32,6 +35,27 @@ fn main() {
     let mut ctl = AdmissionController::new(AdmissionConfig::default());
     b.bench("admission-decide/replicas=16,active=10k", || {
         ctl.decide(250, &spec, &replicas, LoadMode::Surge, 10)
+    });
+
+    // Tier-weighted scoring: same decision with non-uniform weights and
+    // a rotating tier mix, the federation/`ext-tiers` hot path.
+    let mut wctl = AdmissionController::new(AdmissionConfig {
+        tier_weights: TierWeights { premium: 2.0, standard: 1.0, economy: 0.5 },
+        ..AdmissionConfig::default()
+    });
+    let tier_specs =
+        [QoeSpec::new(0.5, 6.5), QoeSpec::new(1.0, 4.8), QoeSpec::new(2.0, 2.5)];
+    let mut tick = 0usize;
+    b.bench("admission-decide-weighted/replicas=16", || {
+        tick = tick.wrapping_add(1);
+        wctl.decide(250, &tier_specs[tick % 3], &replicas, LoadMode::Surge, 10)
+    });
+
+    // Federation snapshot merge: fold a 64-admission local ledger into
+    // the 16-replica snapshot — paid on every federated decision.
+    let ledger: Vec<usize> = (0..64).map(|i| 200 + (i % 7) * 90).collect();
+    b.bench("snapshot-merge/replicas=16,ledger=64", || {
+        merge_snapshot(&replicas, &ledger)
     });
 
     // Surge detector: observe + mode with a deep arrival window.
@@ -90,4 +114,12 @@ fn main() {
          (one decode iteration ≈ 150 ms ≈ {:.0} decisions)",
         decisions_per_sec * 0.150
     );
+
+    // Persist the perf baseline so regressions in the federation hot
+    // path (snapshot merge + weighted scoring) are diffable.
+    let path = "BENCH_gateway.json";
+    match std::fs::write(path, b.results_json()) {
+        Ok(()) => println!("baseline written to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

@@ -43,6 +43,16 @@
 //!     "enabled": true,
 //!     "replicas": 1,
 //!     "kv_fraction": 0.5
+//!   },
+//!   "federation": {
+//!     "gateways": 2,
+//!     "sync_interval_secs": 0.25,
+//!     "staleness_bound_secs": 2.0
+//!   },
+//!   "tiers": {
+//!     "premium": 2.0,
+//!     "standard": 1.0,
+//!     "economy": 0.5
 //!   }
 //! }
 //! ```
@@ -53,7 +63,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::engine::EngineConfig;
 use crate::coordinator::sched::andes::{AndesConfig, AndesScheduler, KnapsackSolver};
-use crate::gateway::{GatewayConfig, SpillConfig};
+use crate::gateway::{FederationConfig, GatewayConfig, SpillConfig};
 use crate::coordinator::sched::fcfs::FcfsScheduler;
 use crate::coordinator::sched::objective::Objective;
 use crate::coordinator::sched::round_robin::RoundRobinScheduler;
@@ -72,6 +82,16 @@ pub struct AndesDeployment {
     pub gateway: GatewayConfig,
     /// Overflow tier replaying primary rejections (disabled by default).
     pub spill: SpillConfig,
+    /// Multi-gateway federation (1 gateway — i.e. disabled — by
+    /// default). Per-tier admission weights live in
+    /// `gateway.admission.tier_weights` (the `"tiers"` section).
+    /// Note: the `andes` CLI currently drives federation through
+    /// `simulate --gateways/--sync-interval` flags rather than a config
+    /// file, and the live server fronts a single engine (it prints a
+    /// note when `gateways > 1`); this section is parsed and validated
+    /// so deployment descriptors can carry the topology for embedders
+    /// building a [`crate::gateway::FederatedGateway`] themselves.
+    pub federation: FederationConfig,
 }
 
 /// Scheduler section.
@@ -110,6 +130,7 @@ impl Default for AndesDeployment {
             engine,
             gateway: GatewayConfig::default(),
             spill: SpillConfig::default(),
+            federation: FederationConfig::default(),
         }
     }
 }
@@ -355,6 +376,45 @@ impl AndesDeployment {
                 d.spill.kv_fraction = v;
             }
         }
+
+        let f = j.get("federation");
+        if !f.is_null() {
+            if let Some(n) = f.get("gateways").as_u64() {
+                if n == 0 {
+                    bail!("federation gateways must be >= 1");
+                }
+                d.federation.gateways = n as usize;
+            }
+            if let Some(v) = f.get("sync_interval_secs").as_f64() {
+                if v <= 0.0 {
+                    bail!("sync_interval_secs must be > 0");
+                }
+                d.federation.sync_interval_secs = v;
+            }
+            if let Some(v) = f.get("staleness_bound_secs").as_f64() {
+                if v < 0.0 {
+                    bail!("staleness_bound_secs must be >= 0");
+                }
+                d.federation.staleness_bound_secs = v;
+            }
+        }
+
+        let tiers = j.get("tiers");
+        if !tiers.is_null() {
+            let w = &mut d.gateway.admission.tier_weights;
+            for (name, slot) in [
+                ("premium", &mut w.premium),
+                ("standard", &mut w.standard),
+                ("economy", &mut w.economy),
+            ] {
+                if let Some(v) = tiers.get(name).as_f64() {
+                    if !v.is_finite() || v <= 0.0 {
+                        bail!("tier weight '{name}' must be positive and finite");
+                    }
+                    *slot = v;
+                }
+            }
+        }
         Ok(d)
     }
 }
@@ -505,6 +565,40 @@ mod tests {
             r#"{"spill": {"replicas": 0}}"#,
             r#"{"spill": {"kv_fraction": 0}}"#,
             r#"{"spill": {"kv_fraction": 1.2}}"#,
+        ] {
+            assert!(AndesDeployment::from_json_str(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn federation_and_tiers_sections_parse() {
+        let d = AndesDeployment::from_json_str(
+            r#"{"federation": {"gateways": 4, "sync_interval_secs": 0.5,
+                               "staleness_bound_secs": 5.0},
+                "tiers": {"premium": 2.0, "economy": 0.5}}"#,
+        )
+        .unwrap();
+        assert_eq!(d.federation.gateways, 4);
+        assert_eq!(d.federation.sync_interval_secs, 0.5);
+        assert_eq!(d.federation.staleness_bound_secs, 5.0);
+        let w = &d.gateway.admission.tier_weights;
+        assert_eq!(w.premium, 2.0);
+        assert_eq!(w.standard, 1.0, "unset tier keeps its default");
+        assert_eq!(w.economy, 0.5);
+        // Defaults: single gateway, tier-blind.
+        let plain = AndesDeployment::from_json_str("{}").unwrap();
+        assert_eq!(plain.federation.gateways, 1);
+        assert!(plain.gateway.admission.tier_weights.is_uniform());
+    }
+
+    #[test]
+    fn federation_and_tiers_reject_bad_values() {
+        for bad in [
+            r#"{"federation": {"gateways": 0}}"#,
+            r#"{"federation": {"sync_interval_secs": 0}}"#,
+            r#"{"federation": {"staleness_bound_secs": -1}}"#,
+            r#"{"tiers": {"premium": 0}}"#,
+            r#"{"tiers": {"economy": -2}}"#,
         ] {
             assert!(AndesDeployment::from_json_str(bad).is_err(), "{bad}");
         }

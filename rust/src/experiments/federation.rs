@@ -1,0 +1,255 @@
+//! ext-federation: multi-gateway federation under tiered overload.
+//!
+//! Sweeps {1, 2, 4 gateways} × {fresh, stale snapshot sync} ×
+//! {tier-blind, tier-weighted admission} in front of a 2-replica Andes
+//! cluster at 2× aggregate capacity on the tiered QoE trace (paper
+//! §6.1's price tiers). Reported per cell: per-tier arrivals / served /
+//! rejected counts, mean and p10 QoE counting rejects as zero, and the
+//! **cross-gateway admission disagreement rate** (on each arrival,
+//! every node is asked what it would decide on its own — possibly
+//! stale — view; see `gateway/federation.rs`).
+//!
+//! Shape checks assert the federation story: scaling the front door to
+//! 4 gateways at fresh sync costs ≤ 5% mean QoE vs. a single gateway,
+//! stale sync disagrees at least as often as fresh, and premium weight
+//! 2 strictly improves premium p10 QoE over tier-blind admission at
+//! this overload.
+
+use anyhow::Result;
+
+use crate::cluster::{Cluster, RoutingPolicy};
+use crate::config::SchedulerConfig;
+use crate::coordinator::engine::EngineConfig;
+use crate::coordinator::sched::andes::AndesConfig;
+use crate::gateway::{FederatedGateway, FederationConfig, GatewayConfig, TierWeights};
+use crate::model::gpu::a100_4x;
+use crate::model::latency::LatencyModel;
+use crate::model::llm::opt_66b;
+use crate::qoe::spec::QoeSpec;
+use crate::util::csv::Csv;
+use crate::util::stats::{mean, percentile};
+use crate::workload::qoe_trace::QoeTrace;
+use crate::workload::{ArrivalProcess, Dataset, Workload};
+
+use super::runner::estimate_capacity;
+use super::ExpCtx;
+
+const TIERS: [&str; 3] = ["premium", "standard", "economy"];
+
+struct Cell {
+    gateways: usize,
+    sync: &'static str,
+    weights: &'static str,
+    mean_qoe: f64,
+    disagreement: f64,
+    /// Per-tier p10 QoE counting rejects as zero, in TIERS order.
+    tier_p10: [f64; 3],
+}
+
+fn tier_of_tds(tds: f64) -> &'static str {
+    QoeTrace::tier_of(&QoeSpec::new(1.0, tds))
+}
+
+pub fn ext_federation(ctx: &ExpCtx) -> Result<String> {
+    let llm = opt_66b();
+    let gpu = a100_4x();
+    let latency = LatencyModel::for_deployment(&llm, &gpu);
+    let replicas = 2usize;
+    let capacity = estimate_capacity(&llm, &gpu, Dataset::ShareGpt) * replicas as f64;
+    let rate = capacity * 2.0; // the acceptance point: 2× overload
+    let n = if ctx.quick { 320 } else { 800 };
+    let engine_cfg = EngineConfig {
+        kv_capacity_tokens: llm.kv_capacity_tokens(&gpu),
+        swap_capacity_tokens: llm.swap_capacity_tokens(&gpu),
+        ..EngineConfig::default()
+    };
+    let sched = SchedulerConfig::Andes(AndesConfig::default());
+    let trace = Workload {
+        dataset: Dataset::ShareGpt,
+        arrivals: ArrivalProcess::Poisson { rate },
+        qoe_trace: QoeTrace::Tiered,
+        num_requests: n,
+        seed: 42,
+    }
+    .generate();
+
+    let syncs: [(&'static str, f64, f64); 2] =
+        [("fresh", 0.25, 2.0), ("stale", 10.0, 60.0)];
+    let weight_variants: [(&'static str, TierWeights); 2] = [
+        ("blind", TierWeights::default()),
+        ("weighted", TierWeights { premium: 2.0, standard: 1.0, economy: 0.5 }),
+    ];
+
+    let mut csv = Csv::new(&[
+        "gateways",
+        "sync",
+        "weights",
+        "tier",
+        "arrivals",
+        "served",
+        "rejected",
+        "mean_qoe_incl_rejects",
+        "p10_qoe_incl_rejects",
+        "disagreement_rate",
+    ]);
+    let mut report = format!(
+        "ext-federation — {replicas}-replica Andes cluster at 2x overload \
+         ({rate:.1} req/s), tiered workload, {n} requests\n"
+    );
+    let mut cells: Vec<Cell> = Vec::new();
+
+    for gateways in [1usize, 2, 4] {
+        for &(slabel, sync_interval, staleness) in &syncs {
+            for &(wlabel, weights) in &weight_variants {
+                let cluster = Cluster::new(
+                    replicas,
+                    engine_cfg.clone(),
+                    latency.clone(),
+                    &sched,
+                    RoutingPolicy::QoeAware,
+                );
+                let mut gcfg = GatewayConfig::default();
+                gcfg.pacing_enabled = false;
+                gcfg.surge.baseline_rate = capacity;
+                gcfg.admission.tier_weights = weights;
+                let fed = FederationConfig {
+                    gateways,
+                    sync_interval_secs: sync_interval,
+                    staleness_bound_secs: staleness,
+                };
+                let mut gw = FederatedGateway::new(cluster, gcfg, fed);
+                let res = gw.run_trace(trace.clone())?;
+
+                // Per-tier QoE: served requests classified by their
+                // preserved QoE spec (engine ids follow admission order,
+                // not trace order), rejects by the workload spec.
+                let mut tier_qoes: [Vec<f64>; 3] = Default::default();
+                let mut tier_arrivals = [0usize; 3];
+                let mut tier_rejected = [0usize; 3];
+                for spec in &trace {
+                    let k = tier_index(QoeTrace::tier_of(&spec.qoe));
+                    tier_arrivals[k] += 1;
+                }
+                for s in &res.served {
+                    tier_qoes[tier_index(tier_of_tds(s.expected_tds))].push(s.paced_qoe);
+                }
+                for r in &res.rejections {
+                    let k = tier_index(QoeTrace::tier_of(&trace[r.id].qoe));
+                    tier_qoes[k].push(0.0);
+                    tier_rejected[k] += 1;
+                }
+
+                let disagreement = res.stats.disagreement_rate();
+                let mut tier_p10 = [0.0f64; 3];
+                for (k, tier) in TIERS.iter().enumerate() {
+                    let qoes = &tier_qoes[k];
+                    tier_p10[k] = percentile(qoes, 10.0);
+                    csv.row(&[
+                        format!("{gateways}"),
+                        slabel.to_string(),
+                        wlabel.to_string(),
+                        tier.to_string(),
+                        format!("{}", tier_arrivals[k]),
+                        format!("{}", qoes.len() - tier_rejected[k]),
+                        format!("{}", tier_rejected[k]),
+                        format!("{:.4}", mean(qoes)),
+                        format!("{:.4}", tier_p10[k]),
+                        format!("{disagreement:.4}"),
+                    ]);
+                }
+                let cell = Cell {
+                    gateways,
+                    sync: slabel,
+                    weights: wlabel,
+                    mean_qoe: res.mean_qoe_incl_rejects(),
+                    disagreement,
+                    tier_p10,
+                };
+                csv.row(&[
+                    format!("{gateways}"),
+                    slabel.to_string(),
+                    wlabel.to_string(),
+                    "all".to_string(),
+                    format!("{}", res.stats.arrivals),
+                    format!("{}", res.served.len()),
+                    format!("{}", res.rejections.len()),
+                    format!("{:.4}", cell.mean_qoe),
+                    format!("{:.4}", percentile_incl(&res)),
+                    format!("{disagreement:.4}"),
+                ]);
+                report.push_str(&format!(
+                    "  g={gateways} {slabel:<6} {wlabel:<9} served {:<4} rejected {:<4} \
+                     QoE {:.3} (incl-rej) disagreement {:.3} premium-p10 {:.3}\n",
+                    res.served.len(),
+                    res.rejections.len(),
+                    cell.mean_qoe,
+                    disagreement,
+                    cell.tier_p10[0],
+                ));
+                cells.push(cell);
+            }
+        }
+    }
+    csv.write(&ctx.out_dir.join("ext_federation.csv"))?;
+
+    // Shape checks.
+    let single = find(&cells, 1, "fresh", "blind");
+    let fed4 = find(&cells, 4, "fresh", "blind");
+    let fed4_stale = find(&cells, 4, "stale", "blind");
+    let weighted4 = find(&cells, 4, "fresh", "weighted");
+    let weighted1 = find(&cells, 1, "fresh", "weighted");
+    let c1 = fed4.mean_qoe >= 0.95 * single.mean_qoe;
+    let c2 = fed4_stale.disagreement >= fed4.disagreement;
+    let c3 = weighted4.tier_p10[0] > fed4.tier_p10[0];
+    let c4 = weighted1.tier_p10[0] > single.tier_p10[0];
+    report.push_str(&format!(
+        "shape checks @2x overload:\n\
+         \x20 4 fresh-sync gateways within 5% of a single gateway \
+         ({:.3} vs {:.3}): {}\n\
+         \x20 stale sync disagrees at least as often as fresh \
+         ({:.3} vs {:.3}): {}\n\
+         \x20 tier weights strictly improve premium p10, 4 gateways \
+         ({:.3} vs {:.3}): {}\n\
+         \x20 tier weights strictly improve premium p10, 1 gateway \
+         ({:.3} vs {:.3}): {}\n",
+        fed4.mean_qoe,
+        single.mean_qoe,
+        verdict(c1),
+        fed4_stale.disagreement,
+        fed4.disagreement,
+        verdict(c2),
+        weighted4.tier_p10[0],
+        fed4.tier_p10[0],
+        verdict(c3),
+        weighted1.tier_p10[0],
+        single.tier_p10[0],
+        verdict(c4),
+    ));
+    Ok(report)
+}
+
+/// Overall p10 QoE counting rejects as zero.
+fn percentile_incl(res: &crate::gateway::FederationRunResult) -> f64 {
+    let mut qoes: Vec<f64> = res.served.iter().map(|s| s.paced_qoe).collect();
+    qoes.resize(qoes.len() + res.rejections.len(), 0.0);
+    percentile(&qoes, 10.0)
+}
+
+fn tier_index(tier: &str) -> usize {
+    TIERS.iter().position(|t| *t == tier).expect("known tier")
+}
+
+fn verdict(ok: bool) -> &'static str {
+    if ok {
+        "HOLDS"
+    } else {
+        "VIOLATED"
+    }
+}
+
+fn find<'a>(cells: &'a [Cell], gateways: usize, sync: &str, weights: &str) -> &'a Cell {
+    cells
+        .iter()
+        .find(|c| c.gateways == gateways && c.sync == sync && c.weights == weights)
+        .expect("cell missing")
+}

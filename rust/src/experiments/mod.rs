@@ -7,6 +7,7 @@ pub mod autoscale;
 pub mod breakdown;
 pub mod endtoend;
 pub mod extensions;
+pub mod federation;
 pub mod gateway;
 pub mod micro;
 pub mod motivation;
@@ -193,6 +194,12 @@ pub fn registry() -> Vec<Experiment> {
             paper_ref: "§7.4 (extension)",
             title: "Predictive autoscaling + spill tier: QoE vs replica-seconds",
             run: autoscale::ext_autoscale,
+        },
+        Experiment {
+            id: "ext-federation",
+            paper_ref: "§6.1 (extension)",
+            title: "Multi-gateway federation × per-tier admission weights",
+            run: federation::ext_federation,
         },
         Experiment {
             id: "e2e",

@@ -9,17 +9,46 @@
 //!   contributes almost no QoE but still consumes capacity;
 //! - **marginal resource cost** — the fraction of the best replica's
 //!   free KV the request's context (prompt + expected output) would
-//!   claim.
+//!   claim;
+//! - **tier weight** — an optional per-tier multiplier
+//!   ([`TierWeights`], paper §6.1's price tiers) on the expected-QoE
+//!   score, so premium traffic survives shedding that economy traffic
+//!   absorbs. Uniform weights (the default) reproduce tier-blind
+//!   admission exactly.
 //!
 //! Normal mode never sheds: requests that don't currently fit are
-//! deferred to a bounded queue. Surge mode (see [`super::surge`])
-//! escalates to structured rejection, so clients get an immediate,
-//! actionable answer instead of a token stream that arrives too late to
-//! matter (the TokenFlow/DiSCo argument for front-end preemptive
-//! decisions). A hysteresis latch keeps decisions from flapping when
-//! the predicted QoE hovers at the admission floor.
+//! deferred to a bounded queue, re-examined at its own deadlines (not
+//! just at the next arrival) with one final admission check at expiry.
+//! Surge mode (see [`super::surge`]) escalates to structured rejection,
+//! so clients get an immediate, actionable answer instead of a token
+//! stream that arrives too late to matter (the TokenFlow/DiSCo argument
+//! for front-end preemptive decisions). A hysteresis latch keeps
+//! decisions from flapping when the predicted QoE hovers at the
+//! admission floor.
+//!
+//! ```
+//! use andes::gateway::{AdmissionConfig, AdmissionController, AdmissionDecision,
+//!                      LoadMode, ReplicaState};
+//! use andes::qoe::spec::QoeSpec;
+//!
+//! let mut ctl = AdmissionController::new(AdmissionConfig::default());
+//! let healthy = [ReplicaState {
+//!     active_requests: 4,
+//!     kv_free_tokens: 50_000,
+//!     kv_capacity_tokens: 70_000,
+//!     est_request_tds: 12.0,
+//! }];
+//! let spec = QoeSpec::new(1.0, 4.8);
+//! assert_eq!(
+//!     ctl.decide(200, &spec, &healthy, LoadMode::Normal, 0),
+//!     AdmissionDecision::Admit
+//! );
+//! ```
+
+use anyhow::{bail, Result};
 
 use crate::qoe::spec::QoeSpec;
+use crate::workload::qoe_trace::QoeTrace;
 
 use super::surge::LoadMode;
 
@@ -48,6 +77,74 @@ impl ReplicaState {
     }
 }
 
+/// Per-tier admission weights (paper §6.1's API price tiers). Each
+/// weight multiplies the tier's predicted-QoE score before the
+/// admission floor is applied and orders the gateway's defer queue, so
+/// a tier with weight 2 is shed half as eagerly as one with weight 1
+/// and jumps ahead of it while deferred. All-ones (the default) is
+/// tier-blind: decisions are bit-identical to the unweighted path.
+///
+/// ```
+/// use andes::gateway::TierWeights;
+/// use andes::qoe::spec::QoeSpec;
+///
+/// let w = TierWeights::parse("2:1:0.5").unwrap();
+/// assert_eq!(w.weight_for(&QoeSpec::new(0.5, 6.5)), 2.0); // premium
+/// assert_eq!(w.weight_for(&QoeSpec::new(2.0, 2.5)), 0.5); // economy
+/// assert!(TierWeights::default().is_uniform());
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierWeights {
+    pub premium: f64,
+    pub standard: f64,
+    pub economy: f64,
+}
+
+impl Default for TierWeights {
+    fn default() -> Self {
+        TierWeights { premium: 1.0, standard: 1.0, economy: 1.0 }
+    }
+}
+
+impl TierWeights {
+    /// Parse the CLI/`"tiers"` form `premium:standard:economy`,
+    /// e.g. `2:1:0.5`. All weights must be positive.
+    pub fn parse(s: &str) -> Result<TierWeights> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() != 3 {
+            bail!("tier weights must be premium:standard:economy, got '{s}'");
+        }
+        let mut vals = [0.0f64; 3];
+        for (v, p) in vals.iter_mut().zip(&parts) {
+            *v = p
+                .trim()
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("bad tier weight '{p}' in '{s}'"))?;
+            if !v.is_finite() || *v <= 0.0 {
+                bail!("tier weights must be positive and finite, got '{p}'");
+            }
+        }
+        Ok(TierWeights { premium: vals[0], standard: vals[1], economy: vals[2] })
+    }
+
+    /// Whether every tier carries the same weight (decisions reduce to
+    /// the tier-blind path).
+    pub fn is_uniform(&self) -> bool {
+        self.premium == self.standard && self.standard == self.economy
+    }
+
+    /// Weight of the tier a sampled QoE spec belongs to (tier membership
+    /// follows [`QoeTrace::tier_of`]; non-tiered traces map to
+    /// "standard").
+    pub fn weight_for(&self, spec: &QoeSpec) -> f64 {
+        match QoeTrace::tier_of(spec) {
+            "premium" => self.premium,
+            "economy" => self.economy,
+            _ => self.standard,
+        }
+    }
+}
+
 /// Admission controller configuration.
 #[derive(Debug, Clone)]
 pub struct AdmissionConfig {
@@ -61,8 +158,14 @@ pub struct AdmissionConfig {
     pub hysteresis: f64,
     /// Max requests in the defer queue before rejecting outright.
     pub max_deferred: usize,
-    /// Longest a deferred request may wait before rejection (s).
+    /// Longest a deferred request may wait in the defer queue (s). The
+    /// gateway sweeps the queue at this deadline (not at the next
+    /// arrival) and gives the request one final admission check before
+    /// expiring it.
     pub max_defer_wait: f64,
+    /// Per-tier multipliers on the predicted-QoE score and defer-queue
+    /// priority (uniform = tier-blind).
+    pub tier_weights: TierWeights,
 }
 
 impl Default for AdmissionConfig {
@@ -73,6 +176,7 @@ impl Default for AdmissionConfig {
             hysteresis: 0.1,
             max_deferred: 64,
             max_defer_wait: 10.0,
+            tier_weights: TierWeights::default(),
         }
     }
 }
@@ -122,7 +226,10 @@ impl RejectReason {
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum AdmissionDecision {
     Admit,
-    /// Park in the gateway queue until capacity frees (bounded wait).
+    /// Park in the gateway's weight-ordered queue. The gateway
+    /// re-examines the queue by *event-stepping* — as capacity frees
+    /// and at each request's own deadline — not merely when the next
+    /// request happens to arrive.
     Defer,
     Reject(RejectReason),
 }
@@ -171,6 +278,14 @@ impl AdmissionController {
     /// Decide the fate of a request with `prompt_tokens` and QoE spec
     /// `qoe`, given the replica snapshots, the load mode, and the current
     /// defer-queue depth.
+    ///
+    /// The hysteresis latch is driven by the *unweighted* predicted QoE
+    /// (it tracks system state, not any one tier); the per-request shed
+    /// test then compares the tier-weighted score against the latched
+    /// floor. Raising a tier's weight therefore only ever moves that
+    /// tier's decisions toward admission (the monotonicity property
+    /// tested in `tests/integration.rs`), and uniform weights reproduce
+    /// the tier-blind decisions exactly.
     pub fn decide(
         &mut self,
         prompt_tokens: usize,
@@ -192,7 +307,7 @@ impl AdmissionController {
             .map(|r| r.kv_utilization())
             .fold(f64::INFINITY, f64::min);
 
-        // Hysteresis latch on the predicted-QoE floor.
+        // Hysteresis latch on the (unweighted) predicted-QoE floor.
         if self.shedding {
             if best_pred >= (self.cfg.min_predicted_qoe + self.cfg.hysteresis).min(1.0) {
                 self.shedding = false;
@@ -201,9 +316,25 @@ impl AdmissionController {
             self.shedding = true;
         }
 
+        // Per-request shed test: tier-weighted score vs. the latched
+        // floor. While the latch is on, the floor includes the
+        // hysteresis band — with weight 1 that is exactly "latched ⇒
+        // shed", because the latch releases at the same threshold.
+        let weighted_pred =
+            (best_pred * self.cfg.tier_weights.weight_for(qoe)).clamp(0.0, 1.0);
+        let floor = if self.shedding {
+            (self.cfg.min_predicted_qoe + self.cfg.hysteresis).min(1.0)
+        } else {
+            self.cfg.min_predicted_qoe
+        };
+        let shed_this = weighted_pred < floor;
+
         match mode {
             LoadMode::Surge => {
-                if self.shedding {
+                if shed_this {
+                    // Report the *actual* predicted QoE, not the
+                    // weighted score — the client-visible reject detail
+                    // must not fabricate a QoE number.
                     AdmissionDecision::Reject(RejectReason::SurgeShed {
                         predicted_qoe: best_pred,
                     })
@@ -216,7 +347,7 @@ impl AdmissionController {
                 }
             }
             LoadMode::Normal => {
-                if self.shedding || !fits {
+                if shed_this || !fits {
                     if queue_depth >= self.cfg.max_deferred {
                         AdmissionDecision::Reject(RejectReason::QueueFull {
                             depth: queue_depth,
@@ -229,6 +360,21 @@ impl AdmissionController {
                 }
             }
         }
+    }
+
+    /// The decision [`Self::decide`] would return right now, without
+    /// mutating the hysteresis latch — the federation layer's
+    /// disagreement probe asks every peer this question on each arrival.
+    pub fn preview(
+        &self,
+        prompt_tokens: usize,
+        qoe: &QoeSpec,
+        replicas: &[ReplicaState],
+        mode: LoadMode,
+        queue_depth: usize,
+    ) -> AdmissionDecision {
+        let mut scratch = self.clone();
+        scratch.decide(prompt_tokens, qoe, replicas, mode, queue_depth)
     }
 }
 
@@ -373,5 +519,82 @@ mod tests {
             c.decide(100, &spec(), &[], LoadMode::Normal, 0),
             AdmissionDecision::Reject(RejectReason::Saturated { .. })
         ));
+    }
+
+    #[test]
+    fn tier_weights_parse_and_classify() {
+        let w = TierWeights::parse("2:1:0.5").unwrap();
+        assert_eq!(w, TierWeights { premium: 2.0, standard: 1.0, economy: 0.5 });
+        assert!(!w.is_uniform());
+        assert!(TierWeights::default().is_uniform());
+        // Tier membership mirrors QoeTrace::tier_of.
+        assert_eq!(w.weight_for(&QoeSpec::new(0.5, 6.5)), 2.0);
+        assert_eq!(w.weight_for(&QoeSpec::new(1.0, 4.8)), 1.0);
+        assert_eq!(w.weight_for(&QoeSpec::new(2.0, 2.5)), 0.5);
+        for bad in ["", "2:1", "1:2:3:4", "a:1:1", "0:1:1", "-1:1:1", "inf:1:1"] {
+            assert!(TierWeights::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn uniform_weights_reproduce_tier_blind_decisions() {
+        // Any uniform weight vector must give exactly the default-config
+        // decisions across a load ramp (the latch histories coincide).
+        let mut blind = ctl();
+        let mut uniform = AdmissionController::new(AdmissionConfig {
+            tier_weights: TierWeights { premium: 1.0, standard: 1.0, economy: 1.0 },
+            ..AdmissionConfig::default()
+        });
+        let sp = spec();
+        for tds in [12.0, 3.0, 1.2, 0.6, 1.9, 2.3, 6.0, 12.0] {
+            let r = [replica(100, 20_000, tds)];
+            for mode in [LoadMode::Normal, LoadMode::Surge] {
+                assert_eq!(
+                    blind.decide(300, &sp, &r, mode, 2),
+                    uniform.decide(300, &sp, &r, mode, 2),
+                    "diverged at tds {tds} mode {mode:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn premium_weight_survives_shedding_economy_sheds_earlier() {
+        let weights = TierWeights { premium: 2.0, standard: 1.0, economy: 0.5 };
+        let mut c = AdmissionController::new(AdmissionConfig {
+            tier_weights: weights,
+            ..AdmissionConfig::default()
+        });
+        // Unweighted predicted QoE for premium (tds 6.5) with a 1.6 tok/s
+        // share is ~0.25 (< 0.35 floor); weighted ×2 → ~0.49 admits.
+        let r = [replica(200, 30_000, 1.6)];
+        let premium = QoeSpec::new(0.5, 6.5);
+        assert_eq!(
+            c.decide(200, &premium, &r, LoadMode::Surge, 0),
+            AdmissionDecision::Admit,
+            "premium must ride out the shed band"
+        );
+        // Economy (tds 2.5) at the same share predicts 0.64 unweighted —
+        // comfortably above the floor — but ×0.5 → 0.32 sheds.
+        let economy = QoeSpec::new(2.0, 2.5);
+        assert!(matches!(
+            c.decide(200, &economy, &r, LoadMode::Surge, 0),
+            AdmissionDecision::Reject(RejectReason::SurgeShed { .. })
+        ));
+    }
+
+    #[test]
+    fn preview_matches_decide_without_latch_mutation() {
+        let mut c = ctl();
+        let sp = spec();
+        let low = [replica(400, 30_000, 1.0)];
+        let high = [replica(4, 60_000, 12.0)];
+        // Preview must predict what decide returns…
+        let p = c.preview(200, &sp, &low, LoadMode::Surge, 0);
+        assert_eq!(p, c.decide(200, &sp, &low, LoadMode::Surge, 0));
+        assert!(c.is_shedding());
+        // …and previewing a recovered state must not release the latch.
+        let _ = c.preview(200, &sp, &high, LoadMode::Surge, 0);
+        assert!(c.is_shedding(), "preview must not mutate the latch");
     }
 }

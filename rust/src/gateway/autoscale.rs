@@ -24,6 +24,22 @@
 //! through [`super::GatewayTarget::scale_out`] / `scale_in`, and the
 //! cluster charges **replica-seconds** (commission → decommission) as
 //! the run's cost metric.
+//!
+//! ```
+//! use andes::gateway::{AutoscaleConfig, PredictiveAutoscaler};
+//!
+//! let auto = PredictiveAutoscaler::new(AutoscaleConfig {
+//!     enabled: true,
+//!     min_replicas: 1,
+//!     max_replicas: 4,
+//!     replica_capacity: 2.0,
+//!     target_utilization: 1.0,
+//!     ..AutoscaleConfig::default()
+//! });
+//! assert_eq!(auto.target_replicas(0.0), 1); // min clamp
+//! assert_eq!(auto.target_replicas(5.0), 3); // ceil(5 / 2)
+//! assert_eq!(auto.target_replicas(50.0), 4); // max clamp
+//! ```
 
 use std::collections::VecDeque;
 

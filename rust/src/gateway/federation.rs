@@ -1,0 +1,842 @@
+//! Multi-gateway federation: N admission front doors over one cluster.
+//!
+//! A single [`super::Gateway`] is a serialization point — at
+//! "millions of users" scale the front door itself must scale out. This
+//! module runs N gateway instances ([`FederationNode`]s) in front of
+//! one shared serving tier, *without a central admission lock*:
+//!
+//! - each node owns its own [`AdmissionController`] (with its own
+//!   hysteresis latch), [`SurgeDetector`] (baseline scaled to the
+//!   node's 1/N share of arrivals), and weight-ordered defer queue;
+//! - nodes exchange **state snapshots** ([`StateSnapshot`]: per-replica
+//!   active counts, KV utilization, fair-share speed estimates) every
+//!   `sync_interval_secs`. Between syncs a node layers its **local
+//!   admission ledger** — the expected KV context of everything it
+//!   admitted since its snapshot — on top of the snapshot
+//!   ([`merge_snapshot`]), so its view stays optimistic-but-bounded
+//!   rather than frozen;
+//! - a node whose snapshot ages past `staleness_bound_secs` forces an
+//!   individual refresh instead of acting on arbitrarily stale state
+//!   (the TokenFlow burst result: admission on stale load state
+//!   degrades sharply).
+//!
+//! Decisions made on stale views can diverge across nodes; the
+//! **disagreement probe** asks every peer what it would have decided
+//! for each arrival (via the latch-preserving
+//! [`AdmissionController::preview`]) and reports the disagreement rate
+//! — the `ext-federation` experiment's convergence metric. See
+//! DESIGN.md §9 for the protocol and the admit/defer/reject decision
+//! table under disagreement.
+//!
+//! The federated path fronts a static (or externally scaled) cluster:
+//! the predictive autoscaler and spill tier remain single-gateway
+//! features (`super::Gateway`), since both need one owner for the
+//! scale/replay decisions.
+//!
+//! ```
+//! use andes::cluster::{Cluster, RoutingPolicy};
+//! use andes::config::SchedulerConfig;
+//! use andes::coordinator::engine::EngineConfig;
+//! use andes::gateway::{FederatedGateway, FederationConfig, GatewayConfig};
+//! use andes::model::gpu::a100_4x;
+//! use andes::model::latency::LatencyModel;
+//! use andes::model::llm::opt_66b;
+//! use andes::qoe::spec::QoeSpec;
+//! use andes::workload::RequestSpec;
+//!
+//! let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+//! let cluster = Cluster::new(
+//!     2,
+//!     EngineConfig::default(),
+//!     latency,
+//!     &SchedulerConfig::Fcfs,
+//!     RoutingPolicy::LeastLoaded,
+//! );
+//! let fed = FederationConfig { gateways: 2, ..FederationConfig::default() };
+//! let mut gw = FederatedGateway::new(cluster, GatewayConfig::default(), fed);
+//! let trace: Vec<RequestSpec> = (0..4)
+//!     .map(|i| RequestSpec {
+//!         id: i,
+//!         arrival: 0.2 * (i + 1) as f64,
+//!         prompt_tokens: 100,
+//!         output_tokens: 20,
+//!         qoe: QoeSpec::new(1.0, 4.8),
+//!     })
+//!     .collect();
+//! let res = gw.run_trace(trace).unwrap();
+//! assert_eq!(res.served.len() + res.rejections.len(), 4);
+//! ```
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::coordinator::metrics::Metrics;
+use crate::workload::RequestSpec;
+
+use super::admission::{AdmissionController, AdmissionDecision, RejectReason, ReplicaState};
+use super::surge::{LoadMode, SurgeDetector};
+use super::{
+    earliest_deadline, enqueue_by_weight, served_outcome, DeferredRequest, GatewayConfig,
+    GatewayTarget, Rejection, ServedRequest, SubmitOutcome,
+};
+
+/// Federation configuration.
+#[derive(Debug, Clone)]
+pub struct FederationConfig {
+    /// Number of gateway instances fronting the cluster (1 = the plain
+    /// single-gateway path).
+    pub gateways: usize,
+    /// Period between state-snapshot exchanges (s). Shorter syncs keep
+    /// node views closer to ground truth at higher exchange cost.
+    pub sync_interval_secs: f64,
+    /// Maximum snapshot age a node will act on before forcing its own
+    /// refresh (s). Bounds how wrong a node's view can be when the
+    /// exchange period is long or a sync is missed.
+    pub staleness_bound_secs: f64,
+}
+
+impl Default for FederationConfig {
+    fn default() -> Self {
+        FederationConfig {
+            gateways: 1,
+            sync_interval_secs: 0.25,
+            staleness_bound_secs: 2.0,
+        }
+    }
+}
+
+/// One node's view of the serving tier at a sync point — the state
+/// gateways exchange.
+#[derive(Debug, Clone)]
+pub struct StateSnapshot {
+    /// When the snapshot was taken.
+    pub taken_at: f64,
+    /// Per-replica state as of `taken_at`.
+    pub replicas: Vec<ReplicaState>,
+}
+
+/// Fold a node's local admission ledger into its last snapshot: each
+/// locally admitted request claims its expected KV context from the
+/// replica with the most free KV (mirroring where routing would have
+/// placed it), bumps that replica's active count, and shrinks its
+/// fair-share speed estimate accordingly. This is the optimistic view a
+/// node decides on until the next snapshot exchange; peers' admissions
+/// stay invisible until then, which is exactly the divergence the
+/// staleness bound caps.
+pub fn merge_snapshot(snapshot: &[ReplicaState], local_admits: &[usize]) -> Vec<ReplicaState> {
+    let mut view: Vec<ReplicaState> = snapshot.to_vec();
+    for &context_tokens in local_admits {
+        if let Some(r) = view.iter_mut().max_by_key(|r| r.kv_free_tokens) {
+            r.kv_free_tokens = r.kv_free_tokens.saturating_sub(context_tokens);
+            // est_request_tds is the fair share across (active + 1)
+            // requests; one more admission re-splits it.
+            let a = r.active_requests as f64;
+            r.est_request_tds *= (a + 1.0) / (a + 2.0);
+            r.active_requests += 1;
+        }
+    }
+    view
+}
+
+/// One gateway instance inside the federation: its own admission
+/// controller, surge detector, defer queue, snapshot, and local ledger.
+pub struct FederationNode {
+    admission: AdmissionController,
+    surge: SurgeDetector,
+    snapshot: StateSnapshot,
+    /// Expected context tokens (prompt + expected output) of requests
+    /// this node admitted since its snapshot was taken.
+    local_admits: Vec<usize>,
+    queue: VecDeque<DeferredRequest>,
+}
+
+impl FederationNode {
+    /// The replica states this node currently believes in.
+    fn view(&self) -> Vec<ReplicaState> {
+        merge_snapshot(&self.snapshot.replicas, &self.local_admits)
+    }
+
+    fn refresh(&mut self, replicas: Vec<ReplicaState>, t: f64) {
+        self.snapshot = StateSnapshot { taken_at: t, replicas };
+        self.local_admits.clear();
+    }
+}
+
+/// Lifetime counters across the federation.
+#[derive(Debug, Clone, Default)]
+pub struct FederationStats {
+    pub arrivals: usize,
+    pub admitted: usize,
+    /// Requests that passed through some node's defer queue.
+    pub deferred: usize,
+    pub rejected: usize,
+    /// Full snapshot exchanges (all nodes refreshed together).
+    pub syncs: u64,
+    /// Individual refreshes forced by the staleness bound.
+    pub forced_refreshes: u64,
+    /// Arrivals where at least one peer's would-be decision class
+    /// (admit / defer / reject) differed from the owning node's.
+    pub disagreements: usize,
+    /// Arrivals probed for disagreement (every admission-controlled
+    /// arrival when `gateways > 1`).
+    pub probed: usize,
+}
+
+impl FederationStats {
+    /// Fraction of probed arrivals on which the nodes disagreed.
+    pub fn disagreement_rate(&self) -> f64 {
+        if self.probed == 0 {
+            return 0.0;
+        }
+        self.disagreements as f64 / self.probed as f64
+    }
+}
+
+/// Result of a full federated trace run.
+#[derive(Debug)]
+pub struct FederationRunResult {
+    pub per_replica: Vec<Metrics>,
+    pub served: Vec<ServedRequest>,
+    pub rejections: Vec<Rejection>,
+    pub stats: FederationStats,
+    pub replica_seconds: f64,
+}
+
+impl FederationRunResult {
+    pub fn served_count(&self) -> usize {
+        self.served.len()
+    }
+
+    /// Mean final QoE over served requests (post-pacing).
+    pub fn mean_served_qoe(&self) -> f64 {
+        if self.served.is_empty() {
+            return 0.0;
+        }
+        self.served.iter().map(|s| s.paced_qoe).sum::<f64>() / self.served.len() as f64
+    }
+
+    /// Mean QoE over *all* arrivals, counting each rejection as QoE 0.
+    pub fn mean_qoe_incl_rejects(&self) -> f64 {
+        let n = self.served.len() + self.rejections.len();
+        if n == 0 {
+            return 0.0;
+        }
+        self.served.iter().map(|s| s.paced_qoe).sum::<f64>() / n as f64
+    }
+
+    pub fn rejected_fraction(&self) -> f64 {
+        let n = self.served.len() + self.rejections.len();
+        if n == 0 {
+            return 0.0;
+        }
+        self.rejections.len() as f64 / n as f64
+    }
+}
+
+/// N federated gateway instances over one shared serving tier.
+pub struct FederatedGateway<T: GatewayTarget> {
+    cfg: GatewayConfig,
+    fed: FederationConfig,
+    target: T,
+    nodes: Vec<FederationNode>,
+    /// Round-robin dispatch cursor (models a tier-blind L4 balancer in
+    /// front of the gateways).
+    next_node: usize,
+    last_sync: f64,
+    rejections: Vec<Rejection>,
+    stats: FederationStats,
+}
+
+impl<T: GatewayTarget> FederatedGateway<T> {
+    pub fn new(target: T, cfg: GatewayConfig, fed: FederationConfig) -> Self {
+        assert!(fed.gateways >= 1, "federation needs at least one gateway");
+        assert!(fed.sync_interval_secs > 0.0, "sync interval must be positive");
+        assert!(fed.staleness_bound_secs >= 0.0, "staleness bound must be non-negative");
+        let n = fed.gateways;
+        let t0 = target.now();
+        let states = target.replica_states();
+        // Each node sees ~1/N of the arrivals, so its surge baseline is
+        // its fair share of the cluster's sustainable rate.
+        let mut surge_cfg = cfg.surge.clone();
+        surge_cfg.baseline_rate = (surge_cfg.baseline_rate / n as f64).max(1e-9);
+        let nodes = (0..n)
+            .map(|_| FederationNode {
+                admission: AdmissionController::new(cfg.admission.clone()),
+                surge: SurgeDetector::new(surge_cfg.clone()),
+                snapshot: StateSnapshot { taken_at: t0, replicas: states.clone() },
+                local_admits: Vec::new(),
+                queue: VecDeque::new(),
+            })
+            .collect();
+        FederatedGateway {
+            cfg,
+            fed,
+            target,
+            nodes,
+            next_node: 0,
+            last_sync: t0,
+            rejections: Vec::new(),
+            stats: FederationStats::default(),
+        }
+    }
+
+    pub fn target(&self) -> &T {
+        &self.target
+    }
+
+    pub fn stats(&self) -> &FederationStats {
+        &self.stats
+    }
+
+    pub fn rejections(&self) -> &[Rejection] {
+        &self.rejections
+    }
+
+    pub fn num_gateways(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Refresh every node from ground truth — in the simulation all
+    /// nodes front the same target, so "exchange and merge everyone's
+    /// deltas" and "read the shared tier" converge to the same state.
+    fn sync_all(&mut self, t: f64) {
+        let states = self.target.replica_states();
+        for node in &mut self.nodes {
+            node.refresh(states.clone(), t);
+        }
+        self.last_sync = t;
+        self.stats.syncs += 1;
+    }
+
+    /// Run the snapshot-exchange protocol at time `t`: a full exchange
+    /// when the sync interval elapsed, else individual refreshes for
+    /// nodes past the staleness bound. A single node needs neither —
+    /// it reads ground truth on every decision (see [`Self::node_view`]).
+    fn maybe_sync(&mut self, t: f64) {
+        if self.nodes.len() <= 1 {
+            return;
+        }
+        if t - self.last_sync + 1e-9 >= self.fed.sync_interval_secs {
+            self.sync_all(t);
+            return;
+        }
+        for node in self.nodes.iter_mut() {
+            if t - node.snapshot.taken_at > self.fed.staleness_bound_secs {
+                node.refresh(self.target.replica_states(), t);
+                self.stats.forced_refreshes += 1;
+            }
+        }
+    }
+
+    /// The replica states node `i` decides on: its snapshot plus local
+    /// ledger when federated, the target's ground truth when it is the
+    /// only gateway (a lone node has nobody to be stale against, and
+    /// must reproduce [`super::Gateway`]'s decisions exactly).
+    fn node_view(&mut self, i: usize) -> Vec<ReplicaState> {
+        if self.nodes.len() == 1 {
+            let states = self.target.replica_states();
+            let now = self.target.now();
+            self.nodes[i].refresh(states.clone(), now);
+            states
+        } else {
+            self.nodes[i].view()
+        }
+    }
+
+    /// Earliest defer deadline across every node's queue.
+    fn next_defer_deadline(&self) -> Option<f64> {
+        self.nodes
+            .iter()
+            .filter_map(|n| earliest_deadline(&n.queue, self.cfg.admission.max_defer_wait))
+            .min_by(f64::total_cmp)
+    }
+
+    /// Next instant before `t` at which federation state changes on its
+    /// own: a defer deadline, or (with real federation) a snapshot
+    /// exchange falling due.
+    fn next_event(&self, t: f64) -> Option<f64> {
+        let sync = (self.nodes.len() > 1)
+            .then_some(self.last_sync + self.fed.sync_interval_secs);
+        let ev = match (self.next_defer_deadline(), sync) {
+            (Some(a), Some(b)) => a.min(b),
+            (Some(a), None) | (None, Some(a)) => a,
+            (None, None) => return None,
+        };
+        (ev < t).then_some(ev)
+    }
+
+    /// Advance the serving tier to `t`, sweeping every defer deadline
+    /// and sync point inside the gap at its own due time (the same
+    /// event-stepping discipline as [`super::Gateway::submit`] — never
+    /// arrival-driven).
+    fn advance_world(&mut self, t: f64) -> Result<()> {
+        let mut last_ev = f64::NEG_INFINITY;
+        while let Some(ev) = self.next_event(t) {
+            if ev <= last_ev {
+                // Defensive: same-instant deadlines are all handled by
+                // one flush; every sweep must advance time.
+                break;
+            }
+            last_ev = ev;
+            self.target.advance_to(ev)?;
+            self.maybe_sync(ev);
+            self.flush_all(ev)?;
+        }
+        self.target.advance_to(t)?;
+        self.maybe_sync(t);
+        Ok(())
+    }
+
+    /// Submit a request admitted by node `i` to the shared tier and
+    /// record it in the node's local ledger.
+    fn admit_to_target(&mut self, i: usize, spec: RequestSpec) -> Result<()> {
+        let policy = if self.cfg.admission_enabled
+            && self.nodes[i].surge.mode() == LoadMode::Surge
+        {
+            self.cfg.surge_routing
+        } else {
+            None
+        };
+        let context = spec.prompt_tokens + self.cfg.admission.expected_output_tokens;
+        self.target.submit_routed(spec, policy)?;
+        self.nodes[i].local_admits.push(context);
+        self.stats.admitted += 1;
+        Ok(())
+    }
+
+    fn reject(&mut self, spec: RequestSpec, t: f64, reason: RejectReason) {
+        self.rejections.push(Rejection { id: spec.id, time: t, reason });
+        self.stats.rejected += 1;
+    }
+
+    /// Re-examine node `i`'s defer queue at time `t` — the same
+    /// priority-ordered sweep as [`super::Gateway`]'s, against the
+    /// node's (possibly stale) view.
+    fn flush_node(&mut self, i: usize, t: f64) -> Result<()> {
+        loop {
+            if self.nodes[i].queue.is_empty() {
+                return Ok(());
+            }
+            let view = self.node_view(i);
+            let decision = {
+                let node = &mut self.nodes[i];
+                let (prompt, qoe) = match node.queue.front() {
+                    Some(d) => (d.spec.prompt_tokens, d.spec.qoe),
+                    None => return Ok(()),
+                };
+                let mode = node.surge.mode();
+                let depth = node.queue.len().saturating_sub(1);
+                node.admission.decide(prompt, &qoe, &view, mode, depth)
+            };
+            if decision == AdmissionDecision::Admit {
+                let d = self.nodes[i].queue.pop_front().unwrap();
+                self.admit_to_target(i, d.spec)?;
+                continue;
+            }
+            let due_idx = {
+                let node = &self.nodes[i];
+                (0..node.queue.len()).find(|&k| {
+                    t - node.queue[k].enqueued_at + 1e-9
+                        >= self.cfg.admission.max_defer_wait
+                })
+            };
+            match due_idx {
+                Some(0) => {
+                    // The decide above was the front's final chance.
+                    let d = self.nodes[i].queue.pop_front().unwrap();
+                    let waited = t - d.enqueued_at;
+                    self.reject(d.spec, t, RejectReason::DeferTimeout { waited });
+                }
+                Some(k) => {
+                    let view = self.node_view(i);
+                    let d2 = {
+                        let node = &mut self.nodes[i];
+                        let (p2, q2) =
+                            (node.queue[k].spec.prompt_tokens, node.queue[k].spec.qoe);
+                        let mode = node.surge.mode();
+                        let depth = node.queue.len().saturating_sub(1);
+                        node.admission.decide(p2, &q2, &view, mode, depth)
+                    };
+                    let d = self.nodes[i].queue.remove(k).unwrap();
+                    if d2 == AdmissionDecision::Admit {
+                        self.admit_to_target(i, d.spec)?;
+                    } else {
+                        let waited = t - d.enqueued_at;
+                        self.reject(d.spec, t, RejectReason::DeferTimeout { waited });
+                    }
+                }
+                None => return Ok(()),
+            }
+        }
+    }
+
+    fn flush_all(&mut self, t: f64) -> Result<()> {
+        for i in 0..self.nodes.len() {
+            self.flush_node(i, t)?;
+        }
+        Ok(())
+    }
+
+    /// Probe every node's would-be decision for this arrival on its own
+    /// view (latch-preserving), recording whether the federation agrees.
+    fn probe_disagreement(&mut self, spec: &RequestSpec) {
+        if self.nodes.len() <= 1 {
+            return;
+        }
+        self.stats.probed += 1;
+        let mut first: Option<u8> = None;
+        let mut disagreed = false;
+        for node in &self.nodes {
+            let view = node.view();
+            let d = node.admission.preview(
+                spec.prompt_tokens,
+                &spec.qoe,
+                &view,
+                node.surge.mode(),
+                node.queue.len(),
+            );
+            let class = match d {
+                AdmissionDecision::Admit => 0u8,
+                AdmissionDecision::Defer => 1,
+                AdmissionDecision::Reject(_) => 2,
+            };
+            match first {
+                None => first = Some(class),
+                Some(c) if c != class => disagreed = true,
+                Some(_) => {}
+            }
+        }
+        if disagreed {
+            self.stats.disagreements += 1;
+        }
+    }
+
+    /// Handle one arriving request: advance the world to its arrival
+    /// (sweeping defer deadlines and sync points on the way), dispatch
+    /// it round-robin to a node, and let that node decide on its local
+    /// view.
+    pub fn submit(&mut self, spec: RequestSpec) -> Result<SubmitOutcome> {
+        let t = spec.arrival;
+        self.advance_world(t)?;
+        self.stats.arrivals += 1;
+        let owner = self.next_node % self.nodes.len();
+        self.next_node += 1;
+        self.nodes[owner].surge.observe(t);
+        self.flush_node(owner, t)?;
+        if !self.cfg.admission_enabled {
+            self.target.submit_routed(spec, None)?;
+            self.stats.admitted += 1;
+            return Ok(SubmitOutcome::Admitted);
+        }
+        self.probe_disagreement(&spec);
+        let view = self.node_view(owner);
+        let decision = {
+            let node = &mut self.nodes[owner];
+            let mode = node.surge.mode();
+            let depth = node.queue.len();
+            node.admission.decide(spec.prompt_tokens, &spec.qoe, &view, mode, depth)
+        };
+        match decision {
+            AdmissionDecision::Admit => {
+                self.admit_to_target(owner, spec)?;
+                Ok(SubmitOutcome::Admitted)
+            }
+            AdmissionDecision::Defer => {
+                let weight = self.cfg.admission.tier_weights.weight_for(&spec.qoe);
+                enqueue_by_weight(
+                    &mut self.nodes[owner].queue,
+                    DeferredRequest { spec, enqueued_at: t, weight },
+                );
+                self.stats.deferred += 1;
+                Ok(SubmitOutcome::Deferred)
+            }
+            AdmissionDecision::Reject(reason) => {
+                self.reject(spec, t, reason);
+                Ok(SubmitOutcome::Rejected(reason))
+            }
+        }
+    }
+
+    /// Drain the serving tier, resolving every node's defer queue at
+    /// its own deadlines, then post-process delivery.
+    pub fn finish(&mut self) -> Result<FederationRunResult> {
+        while self.nodes.iter().any(|n| !n.queue.is_empty()) {
+            let deadline = self.next_defer_deadline().expect("non-empty queue");
+            if self.target.now() + 1e-9 >= deadline {
+                // Due now (the clock may have overshot by at most one
+                // engine iteration): account the expiry at the deadline
+                // itself so `waited` stays exact.
+                self.maybe_sync(deadline);
+                self.flush_all(deadline)?;
+                continue;
+            }
+            match self.target.step_once()? {
+                Some(stepped) => {
+                    let ev = stepped.min(deadline);
+                    self.maybe_sync(ev);
+                    self.flush_all(ev)?;
+                }
+                None => {
+                    self.target.advance_to(deadline)?;
+                    self.maybe_sync(deadline);
+                    self.flush_all(deadline)?;
+                }
+            }
+        }
+        let per_replica = self.target.drain()?;
+        let replica_seconds = self.target.replica_seconds(self.target.now());
+        let mut served = Vec::new();
+        for m in &per_replica {
+            for r in &m.requests {
+                served.push(served_outcome(r, self.cfg.pacing_enabled, &self.cfg.pacing));
+            }
+        }
+        Ok(FederationRunResult {
+            per_replica,
+            served,
+            rejections: self.rejections.clone(),
+            stats: self.stats.clone(),
+            replica_seconds,
+        })
+    }
+
+    /// Run a whole trace through the federation and finish. Non-finite
+    /// arrivals are clamped to the trace origin, as in
+    /// [`super::Gateway::run_trace`].
+    pub fn run_trace(&mut self, mut trace: Vec<RequestSpec>) -> Result<FederationRunResult> {
+        for s in &mut trace {
+            if !s.arrival.is_finite() {
+                s.arrival = 0.0;
+            }
+        }
+        trace.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        for spec in trace {
+            self.submit(spec)?;
+        }
+        self.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, RoutingPolicy};
+    use crate::config::SchedulerConfig;
+    use crate::coordinator::engine::EngineConfig;
+    use crate::gateway::Gateway;
+    use crate::model::gpu::a100_4x;
+    use crate::model::latency::LatencyModel;
+    use crate::model::llm::opt_66b;
+    use crate::workload::{ArrivalProcess, Dataset, QoeTrace, Workload};
+
+    fn cluster(replicas: usize, kv_tokens: usize) -> Cluster {
+        let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+        let cfg = EngineConfig {
+            kv_capacity_tokens: kv_tokens,
+            swap_capacity_tokens: kv_tokens * 2,
+            ..EngineConfig::default()
+        };
+        Cluster::new(
+            replicas,
+            cfg,
+            latency,
+            &SchedulerConfig::Fcfs,
+            RoutingPolicy::LeastLoaded,
+        )
+    }
+
+    fn trace(n: usize, rate: f64, seed: u64) -> Vec<RequestSpec> {
+        Workload {
+            dataset: Dataset::ShareGpt,
+            arrivals: ArrivalProcess::Poisson { rate },
+            qoe_trace: QoeTrace::TextReading,
+            num_requests: n,
+            seed,
+        }
+        .generate()
+    }
+
+    fn base_cfg() -> GatewayConfig {
+        let mut cfg = GatewayConfig::default();
+        cfg.pacing_enabled = false;
+        cfg
+    }
+
+    #[test]
+    fn merge_snapshot_applies_local_ledger() {
+        let snap = vec![
+            ReplicaState {
+                active_requests: 2,
+                kv_free_tokens: 10_000,
+                kv_capacity_tokens: 20_000,
+                est_request_tds: 6.0,
+            },
+            ReplicaState {
+                active_requests: 1,
+                kv_free_tokens: 4_000,
+                kv_capacity_tokens: 20_000,
+                est_request_tds: 8.0,
+            },
+        ];
+        let view = merge_snapshot(&snap, &[1_000, 1_000]);
+        // Both admits land on replica 0 (most free KV both times).
+        assert_eq!(view[0].kv_free_tokens, 8_000);
+        assert_eq!(view[0].active_requests, 4);
+        // Fair share re-split twice: 6.0 × 3/4 × 4/5.
+        assert!((view[0].est_request_tds - 6.0 * 0.75 * 0.8).abs() < 1e-9);
+        assert_eq!(view[1].kv_free_tokens, 4_000);
+        // Empty ledger is the identity.
+        let id = merge_snapshot(&snap, &[]);
+        assert_eq!(id[0].kv_free_tokens, snap[0].kv_free_tokens);
+        assert_eq!(id[1].active_requests, snap[1].active_requests);
+    }
+
+    #[test]
+    fn federation_conserves_requests() {
+        let reqs = trace(120, 12.0, 7);
+        let mut cfg = base_cfg();
+        cfg.surge.baseline_rate = 1.5;
+        let fed = FederationConfig { gateways: 3, ..FederationConfig::default() };
+        let mut gw = FederatedGateway::new(cluster(2, 2500), cfg, fed);
+        let res = gw.run_trace(reqs).unwrap();
+        assert_eq!(res.served.len() + res.rejections.len(), 120, "conservation");
+        assert_eq!(res.stats.admitted + res.stats.rejected, res.stats.arrivals);
+        assert!(res.stats.rejected > 0, "8x overload must shed somewhere");
+        assert!(res.replica_seconds > 0.0);
+    }
+
+    #[test]
+    fn single_node_federation_matches_gateway() {
+        // gateways = 1 must reproduce the plain Gateway's decisions: one
+        // admission controller, always-fresh state, same defer sweep.
+        let reqs = trace(80, 6.0, 11);
+        let mut cfg = base_cfg();
+        cfg.surge.baseline_rate = 2.0;
+
+        let mut plain = Gateway::new(cluster(2, 4000), cfg.clone());
+        let pres = plain.run_trace(reqs.clone()).unwrap();
+
+        let fed = FederationConfig::default();
+        let mut fgw = FederatedGateway::new(cluster(2, 4000), cfg, fed);
+        let fres = fgw.run_trace(reqs).unwrap();
+
+        assert_eq!(fres.served.len(), pres.served.len());
+        assert_eq!(fres.rejections.len(), pres.rejections.len());
+        assert!(
+            (fres.mean_served_qoe() - pres.mean_served_qoe()).abs() < 1e-9,
+            "single-node federation {:.6} vs gateway {:.6}",
+            fres.mean_served_qoe(),
+            pres.mean_served_qoe()
+        );
+    }
+
+    #[test]
+    fn stale_sync_disagrees_more_than_fresh() {
+        let reqs = trace(150, 10.0, 13);
+        let mut cfg = base_cfg();
+        cfg.surge.baseline_rate = 2.0;
+
+        let run = |sync: f64, stale: f64| {
+            let fed = FederationConfig {
+                gateways: 4,
+                sync_interval_secs: sync,
+                staleness_bound_secs: stale,
+            };
+            let mut gw = FederatedGateway::new(cluster(2, 2500), cfg.clone(), fed);
+            gw.run_trace(reqs.clone()).unwrap()
+        };
+        let fresh = run(0.05, 0.5);
+        let stale = run(8.0, 60.0);
+        assert!(fresh.stats.syncs > stale.stats.syncs);
+        // Stale views miss peers' admissions, so nodes believe in
+        // headroom that is long gone and over-admit relative to fresh
+        // sync (the TokenFlow stale-state failure mode).
+        assert!(
+            stale.stats.admitted >= fresh.stats.admitted,
+            "stale sync admitted {} < fresh {}",
+            stale.stats.admitted,
+            fresh.stats.admitted
+        );
+        assert!(
+            stale.stats.disagreements > 0,
+            "4 nodes on 8s-old snapshots at 8x overload must disagree somewhere"
+        );
+        // Both probed every arrival, and rates are well-formed.
+        assert_eq!(fresh.stats.probed, 150);
+        assert_eq!(stale.stats.probed, 150);
+        assert!((0.0..=1.0).contains(&fresh.stats.disagreement_rate()));
+        assert!((0.0..=1.0).contains(&stale.stats.disagreement_rate()));
+    }
+
+    #[test]
+    fn staleness_bound_forces_refreshes() {
+        // Long sync interval + tight staleness bound: nodes must refresh
+        // individually instead of acting on ancient snapshots.
+        let reqs = trace(60, 2.0, 17);
+        let cfg = base_cfg();
+        let fed = FederationConfig {
+            gateways: 2,
+            sync_interval_secs: 1_000.0,
+            staleness_bound_secs: 1.0,
+        };
+        let mut gw = FederatedGateway::new(cluster(1, 100_000), cfg, fed);
+        let res = gw.run_trace(reqs).unwrap();
+        assert!(
+            res.stats.forced_refreshes > 0,
+            "a 30s trace with a 1s bound must force refreshes"
+        );
+        assert_eq!(res.served.len(), 60, "light load serves everything");
+    }
+
+    #[test]
+    fn tier_weighted_federation_protects_premium() {
+        // Tiered workload at heavy overload: premium weight 2 must not
+        // serve a smaller fraction of premium arrivals than tier-blind.
+        let wl = Workload {
+            dataset: Dataset::ShareGpt,
+            arrivals: ArrivalProcess::Poisson { rate: 12.0 },
+            qoe_trace: QoeTrace::Tiered,
+            num_requests: 150,
+            seed: 23,
+        };
+        let reqs = wl.generate();
+        let premium_ids: Vec<usize> = reqs
+            .iter()
+            .filter(|r| QoeTrace::tier_of(&r.qoe) == "premium")
+            .map(|r| r.id)
+            .collect();
+        assert!(!premium_ids.is_empty());
+
+        let run = |weights: crate::gateway::TierWeights| {
+            let mut cfg = base_cfg();
+            cfg.surge.baseline_rate = 1.5;
+            cfg.admission.tier_weights = weights;
+            let fed = FederationConfig { gateways: 2, ..FederationConfig::default() };
+            let mut gw = FederatedGateway::new(cluster(2, 2500), cfg, fed);
+            let res = gw.run_trace(reqs.clone()).unwrap();
+            let rejected_premium = res
+                .rejections
+                .iter()
+                .filter(|r| premium_ids.contains(&r.id))
+                .count();
+            (res, rejected_premium)
+        };
+        let (blind, blind_rejects) = run(crate::gateway::TierWeights::default());
+        let (weighted, weighted_rejects) = run(crate::gateway::TierWeights {
+            premium: 2.0,
+            standard: 1.0,
+            economy: 0.5,
+        });
+        assert_eq!(
+            blind.served.len() + blind.rejections.len(),
+            weighted.served.len() + weighted.rejections.len(),
+            "both runs conserve"
+        );
+        assert!(
+            weighted_rejects <= blind_rejects,
+            "premium weight 2 rejected more premium ({weighted_rejects}) than \
+             tier-blind ({blind_rejects})"
+        );
+    }
+}

@@ -17,6 +17,9 @@
 //! - [`autoscale`] — a predictive autoscaler that turns the surge
 //!   detector's rate estimate (plus KV pressure) into a target replica
 //!   count, with cold-start lead time and scale-in hysteresis;
+//! - [`federation`] — N gateway instances fronting one cluster, each
+//!   deciding admission on a local ledger merged into periodically
+//!   exchanged state snapshots (bounded staleness, no central lock);
 //! - [`Gateway`] — the orchestrator, wrapping either a single simulated
 //!   [`Engine`] or a [`Cluster`] behind one submit/advance API, with
 //!   surge-aware routing-policy override for clusters, elastic scaling,
@@ -24,19 +27,60 @@
 //!   replays requests the primary tier rejected, with the spill wait
 //!   charged to the request's original arrival so QoE stays honest.
 //!
-//! The live TCP server ([`crate::server`]) reuses the same components
-//! (admission controller, surge detector, per-request pacers) around
-//! its real-model engine.
+//! The gateway steps time by *events*: defer-queue deadlines and
+//! autoscaler events are swept when they fall due, not when the next
+//! request happens to arrive. The live TCP server ([`crate::server`])
+//! reuses the same components (admission controller, surge detector,
+//! per-request pacers) around its real-model engine.
+//!
+//! ```
+//! use andes::backend::sim::SimBackend;
+//! use andes::backend::VirtualClock;
+//! use andes::coordinator::engine::{Engine, EngineConfig};
+//! use andes::coordinator::sched::fcfs::FcfsScheduler;
+//! use andes::gateway::{Gateway, GatewayConfig};
+//! use andes::model::gpu::a100_4x;
+//! use andes::model::latency::LatencyModel;
+//! use andes::model::llm::opt_66b;
+//! use andes::qoe::spec::QoeSpec;
+//! use andes::workload::RequestSpec;
+//!
+//! let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+//! let engine = Engine::new(
+//!     EngineConfig::default(),
+//!     SimBackend::new(latency.clone()),
+//!     VirtualClock::default(),
+//!     Box::new(FcfsScheduler::new()),
+//!     latency,
+//! );
+//! let mut gw = Gateway::new(engine, GatewayConfig::default());
+//! let trace = vec![RequestSpec {
+//!     id: 0,
+//!     arrival: 0.1,
+//!     prompt_tokens: 120,
+//!     output_tokens: 30,
+//!     qoe: QoeSpec::new(1.0, 4.8),
+//! }];
+//! let res = gw.run_trace(trace).unwrap();
+//! assert_eq!(res.served.len(), 1);
+//! assert!(res.rejections.is_empty());
+//! ```
 
 pub mod admission;
 pub mod autoscale;
+pub mod federation;
 pub mod pacing;
 pub mod surge;
 
 pub use admission::{
     AdmissionConfig, AdmissionController, AdmissionDecision, RejectReason, ReplicaState,
+    TierWeights,
 };
 pub use autoscale::{AutoscaleConfig, PredictiveAutoscaler, ScalePlan};
+pub use federation::{
+    merge_snapshot, FederatedGateway, FederationConfig, FederationRunResult,
+    FederationStats, StateSnapshot,
+};
 pub use pacing::{pace_times, PacingConfig, TokenPacer};
 pub use surge::{LoadMode, SurgeConfig, SurgeDetector};
 
@@ -341,6 +385,10 @@ pub struct ServedRequest {
     /// Same, for the shaped delivery the client actually sees.
     pub paced_early_tokens: usize,
     pub output_tokens: usize,
+    /// Expected TDS of the request's QoE spec — lets per-tier reporting
+    /// classify served requests (engine record ids follow submission
+    /// order, not trace order, once a defer queue reorders admissions).
+    pub expected_tds: f64,
 }
 
 /// Result of a full gateway trace run.
@@ -445,6 +493,7 @@ fn served_outcome(r: &RequestRecord, pacing_enabled: bool, cfg: &PacingConfig) -
             raw_early_tokens: raw_early,
             paced_early_tokens: raw_early,
             output_tokens: r.output_tokens,
+            expected_tds: r.expected_tds,
         };
     }
     let paced = pace_times(&spec, cfg, &rel);
@@ -461,12 +510,33 @@ fn served_outcome(r: &RequestRecord, pacing_enabled: bool, cfg: &PacingConfig) -
         raw_early_tokens: raw_early,
         paced_early_tokens: paced_early,
         output_tokens: r.output_tokens,
+        expected_tds: r.expected_tds,
     }
 }
 
 struct DeferredRequest {
     spec: RequestSpec,
     enqueued_at: f64,
+    /// Tier weight at enqueue time — the defer queue is kept ordered by
+    /// weight (descending), FIFO within a tier, so premium requests
+    /// re-attempt admission first. Uniform weights degrade to plain
+    /// FIFO.
+    weight: f64,
+}
+
+/// Insert into a weight-ordered defer queue: descending weight, FIFO
+/// within equal weights (skip everything with weight ≥ the newcomer's).
+fn enqueue_by_weight(queue: &mut VecDeque<DeferredRequest>, d: DeferredRequest) {
+    let pos = queue.iter().position(|q| q.weight < d.weight).unwrap_or(queue.len());
+    queue.insert(pos, d);
+}
+
+/// Earliest defer deadline in a (weight-ordered) queue.
+fn earliest_deadline(queue: &VecDeque<DeferredRequest>, max_wait: f64) -> Option<f64> {
+    queue
+        .iter()
+        .map(|d| d.enqueued_at + max_wait)
+        .min_by(f64::total_cmp)
 }
 
 /// The gateway orchestrator.
@@ -563,7 +633,11 @@ impl<T: GatewayTarget> Gateway<T> {
                 Ok(SubmitOutcome::Admitted)
             }
             AdmissionDecision::Defer => {
-                self.queue.push_back(DeferredRequest { spec, enqueued_at: t });
+                let weight = self.cfg.admission.tier_weights.weight_for(&spec.qoe);
+                enqueue_by_weight(
+                    &mut self.queue,
+                    DeferredRequest { spec, enqueued_at: t, weight },
+                );
                 self.stats.deferred += 1;
                 Ok(SubmitOutcome::Deferred)
             }
@@ -571,10 +645,11 @@ impl<T: GatewayTarget> Gateway<T> {
         }
     }
 
-    /// Earliest defer deadline (the queue is FIFO, so the front is due
-    /// first).
+    /// Earliest defer deadline. The queue is ordered by tier weight, so
+    /// the earliest enqueue need not be at the front; with uniform
+    /// weights the order is FIFO and this is the front's deadline.
     fn next_defer_deadline(&self) -> Option<f64> {
-        self.queue.front().map(|d| d.enqueued_at + self.cfg.admission.max_defer_wait)
+        earliest_deadline(&self.queue, self.cfg.admission.max_defer_wait)
     }
 
     /// Next instant before `t` at which gateway state changes on its
@@ -707,18 +782,19 @@ impl<T: GatewayTarget> Gateway<T> {
         Ok(SubmitOutcome::Rejected(reason))
     }
 
-    /// Re-examine the defer queue (FIFO) at time `t`: admit what now
-    /// fits, give requests at their deadline one final admission check
-    /// before expiring them, and stop at the first request that must
-    /// keep waiting (order preserved).
+    /// Re-examine the defer queue at time `t`. The queue is ordered by
+    /// tier weight (FIFO within a tier): the highest-priority request
+    /// re-attempts admission first, and admission stops at the first
+    /// front that must keep waiting (head-of-line order preserved, as
+    /// in the tier-blind FIFO). Requests at their deadline — wherever
+    /// they sit in the priority order — get one final admission check
+    /// before expiring.
     fn flush_deferred(&mut self, t: f64) -> Result<()> {
         loop {
-            let (prompt, qoe, enqueued_at) = match self.queue.front() {
-                Some(d) => (d.spec.prompt_tokens, d.spec.qoe, d.enqueued_at),
+            let (prompt, qoe) = match self.queue.front() {
+                Some(d) => (d.spec.prompt_tokens, d.spec.qoe),
                 None => return Ok(()),
             };
-            let waited = t - enqueued_at;
-            let due = waited + 1e-9 >= self.cfg.admission.max_defer_wait;
             let states = self.target.replica_states();
             let depth = self.queue.len().saturating_sub(1);
             let decision =
@@ -729,16 +805,49 @@ impl<T: GatewayTarget> Gateway<T> {
                 self.stats.admitted += 1;
                 continue;
             }
-            if due {
-                // The admission check above was the request's final
-                // chance (a request that fits *right now* is admitted
-                // rather than rejected on a technicality); it failed,
-                // so the deadline stands.
-                let d = self.queue.pop_front().unwrap();
-                self.reject_or_spill(d.spec, t, RejectReason::DeferTimeout { waited })?;
-                continue;
+            // The front must keep waiting: resolve whatever has reached
+            // its deadline. With uniform weights the front is also the
+            // oldest entry, so this reduces to the FIFO expiry sweep.
+            let due_idx = (0..self.queue.len()).find(|&i| {
+                t - self.queue[i].enqueued_at + 1e-9 >= self.cfg.admission.max_defer_wait
+            });
+            match due_idx {
+                Some(0) => {
+                    // The admission check above was the front's final
+                    // chance (a request that fits *right now* is
+                    // admitted rather than rejected on a technicality);
+                    // it failed, so the deadline stands.
+                    let d = self.queue.pop_front().unwrap();
+                    let waited = t - d.enqueued_at;
+                    self.reject_or_spill(d.spec, t, RejectReason::DeferTimeout { waited })?;
+                }
+                Some(i) => {
+                    // A lower-priority request hit its deadline while
+                    // the front blocks: its own final admission check.
+                    let (p2, q2) = (self.queue[i].spec.prompt_tokens, self.queue[i].spec.qoe);
+                    let states = self.target.replica_states();
+                    let d2 = self.admission.decide(
+                        p2,
+                        &q2,
+                        &states,
+                        self.surge.mode(),
+                        self.queue.len().saturating_sub(1),
+                    );
+                    let d = self.queue.remove(i).unwrap();
+                    if d2 == AdmissionDecision::Admit {
+                        self.route(d.spec)?;
+                        self.stats.admitted += 1;
+                    } else {
+                        let waited = t - d.enqueued_at;
+                        self.reject_or_spill(
+                            d.spec,
+                            t,
+                            RejectReason::DeferTimeout { waited },
+                        )?;
+                    }
+                }
+                None => return Ok(()),
             }
-            return Ok(());
         }
     }
 
@@ -1219,6 +1328,60 @@ mod tests {
         assert_eq!(res.per_replica.len(), 3);
         let total: usize = res.per_replica.iter().map(|m| m.requests.len()).sum();
         assert_eq!(total, 60);
+    }
+
+    #[test]
+    fn premium_jumps_the_defer_queue() {
+        // Two requests defer behind a KV-pinning request; the premium
+        // one arrived *later* but carries weight 2, so it re-attempts
+        // admission first once capacity frees. With uniform weights the
+        // queue is FIFO and the standard request would have gone first.
+        let mut cfg = GatewayConfig::default();
+        cfg.pacing_enabled = false;
+        cfg.admission.max_defer_wait = 120.0;
+        cfg.admission.tier_weights =
+            TierWeights { premium: 2.0, standard: 1.0, economy: 0.5 };
+        let mut gw = Gateway::new(sim_engine(2000), cfg);
+        let mk = |id: usize, arrival: f64, qoe: QoeSpec| RequestSpec {
+            id,
+            arrival,
+            prompt_tokens: 1200,
+            output_tokens: 40,
+            qoe,
+        };
+        let pin = RequestSpec {
+            id: 0,
+            arrival: 0.5,
+            prompt_tokens: 1500,
+            output_tokens: 60,
+            qoe: QoeSpec::new(1.0, 4.8),
+        };
+        assert_eq!(gw.submit(pin).unwrap(), SubmitOutcome::Admitted);
+        let standard = QoeSpec::new(1.0, 4.8);
+        let premium = QoeSpec::new(0.5, 6.5);
+        assert_eq!(gw.submit(mk(1, 1.0, standard)).unwrap(), SubmitOutcome::Deferred);
+        assert_eq!(gw.submit(mk(2, 1.2, premium)).unwrap(), SubmitOutcome::Deferred);
+        let res = gw.finish().unwrap();
+        assert_eq!(res.served.len(), 3, "everything must eventually serve");
+        assert!(res.rejections.is_empty());
+        // Engine ids follow admission order, so identify the deferred
+        // pair by their preserved arrival timestamps.
+        let reqs = &res.per_replica[0].requests;
+        let std_first = reqs
+            .iter()
+            .find(|r| (r.arrival - 1.0).abs() < 1e-9)
+            .unwrap()
+            .token_times[0];
+        let prem_first = reqs
+            .iter()
+            .find(|r| (r.arrival - 1.2).abs() < 1e-9)
+            .unwrap()
+            .token_times[0];
+        assert!(
+            prem_first < std_first,
+            "premium (first token {prem_first}) must be admitted before \
+             standard (first token {std_first})"
+        );
     }
 
     #[test]

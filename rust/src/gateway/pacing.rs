@@ -15,6 +15,18 @@
 //! - a release never precedes its token's generation time;
 //! - paced releases are spaced at least `1/(tds × rate_factor)` apart
 //!   once the lead buffer has passed.
+//!
+//! ```
+//! use andes::gateway::{pace_times, PacingConfig};
+//! use andes::qoe::spec::QoeSpec;
+//!
+//! // 5 tokens generated in one burst at t=1, digested at 4 tok/s.
+//! let spec = QoeSpec::new(1.0, 4.0);
+//! let cfg = PacingConfig { rate_factor: 1.0, lead_tokens: 2 };
+//! let released = pace_times(&spec, &cfg, &[1.0; 5]);
+//! // Two lead tokens pass through; the rest are spaced 0.25 s apart.
+//! assert_eq!(released, vec![1.0, 1.0, 1.25, 1.5, 1.75]);
+//! ```
 
 use std::collections::VecDeque;
 

@@ -8,6 +8,21 @@
 //! baseline_rate` and only returns to Normal once it falls below
 //! `exit_factor × baseline_rate`, so rates hovering at the threshold
 //! cannot flap the mode (and with it, admission decisions).
+//!
+//! ```
+//! use andes::gateway::{LoadMode, SurgeConfig, SurgeDetector};
+//!
+//! // Baseline 2 req/s; an 8 req/s burst must flip the mode to Surge.
+//! let mut det = SurgeDetector::new(SurgeConfig {
+//!     baseline_rate: 2.0,
+//!     ..SurgeConfig::default()
+//! });
+//! for i in 1..=40 {
+//!     det.observe(i as f64 / 8.0);
+//! }
+//! assert_eq!(det.mode(), LoadMode::Surge);
+//! assert!(det.rate_at(5.0) > 3.0);
+//! ```
 
 use std::collections::VecDeque;
 

@@ -1,8 +1,40 @@
 //! Andes: a QoE-aware serving system for LLM-based text streaming services.
 //!
 //! Reproduction of Liu et al., "Andes: Defining and Enhancing
-//! Quality-of-Experience in LLM-Based Text Streaming Services" (2024).
-//! See DESIGN.md for the architecture and experiment index.
+//! Quality-of-Experience in LLM-Based Text Streaming Services" (2024),
+//! grown toward a production-scale serving stack. See DESIGN.md for the
+//! full architecture and experiment index; ROADMAP.md for per-PR
+//! quickstarts.
+//!
+//! # Module map
+//!
+//! The crate layers bottom-up; simulated and real execution share every
+//! coordinator line:
+//!
+//! | Layer | Module | Role |
+//! |---|---|---|
+//! | L0 | [`util`] | PRNG, JSON, CLI, CSV, plotting, benchmarking, property testing (offline: no external crates beyond the `xla` closure) |
+//! | L1 | [`model`] | LLM/GPU profiles and the calibrated latency model |
+//! | L1 | [`qoe`] | QoE spec (TTFT/TDS), the Eq. 1 metric with incremental digest state, client token buffer |
+//! | L1 | [`workload`] | datasets, arrival processes, QoE traces (incl. §6.1 price tiers), record/replay CSV |
+//! | L2 | [`backend`] | `ExecutionBackend` + `Clock`: calibrated simulator (virtual clock) and PJRT real model (wall clock) |
+//! | L3 | [`coordinator`] | continuous-batching engine, block KV manager, schedulers (FCFS / RR / Andes greedy / exact DP), metrics |
+//! | L4 | [`cluster`] | elastic replica pool + routing policies, replica-seconds accounting |
+//! | L4 | [`gateway`] | the QoE-aware front door: admission (tier-weighted), pacing, surge detection, predictive autoscaling, spill tier, multi-gateway federation |
+//! | L5 | [`server`] | TCP streaming server (JSON lines) over the real tiny-OPT model |
+//! | L5 | [`experiments`] | one entry per paper figure/table plus the `ext-*` extensions |
+//! | — | [`config`] | JSON deployment config: model, GPU, scheduler, engine, gateway, autoscale, spill, federation, tiers |
+//! | — | [`runtime`] | PJRT loading and byte-level tokenizer for the compiled tiny-OPT model |
+//!
+//! # The serving path
+//!
+//! A request enters through the [`gateway`] (or a federation of
+//! gateways — [`gateway::federation`]), which admits, defers, or
+//! rejects it against the current cluster state; admitted requests are
+//! routed across [`cluster`] replicas, scheduled per-replica by a
+//! [`coordinator`] scheduler, and their tokens are released at the
+//! user's digestion speed by the gateway pacer. `andes exp <id|all>`
+//! regenerates every paper artifact from this same stack.
 
 pub mod util;
 pub mod backend;

@@ -120,6 +120,17 @@ fn cmd_serve(argv: &[String]) -> i32 {
         OptSpec::value("config", None, "JSON deployment config (overrides model/gpu/sched/engine/gateway)"),
         OptSpec::flag("no-gateway", "disable gateway admission control and token pacing"),
         OptSpec::value("lead", None, "pacer lead tokens (default from config: 4)"),
+        OptSpec::value(
+            "tier-weights",
+            None,
+            "per-tier admission weights premium:standard:economy (e.g. 2:1:0.5)",
+        ),
+        OptSpec::value(
+            "gateways",
+            None,
+            "federated gateway instances (the live server supports 1; \
+             use `andes simulate --gateways N` for federation)",
+        ),
     ];
     let about = "Serve the real tiny-OPT model over TCP (JSON lines)";
     let args = match Args::parse(argv, &specs) {
@@ -134,6 +145,14 @@ fn cmd_serve(argv: &[String]) -> i32 {
     if let Some(path) = args.get("config") {
         match andes::config::AndesDeployment::from_file(std::path::Path::new(path)) {
             Ok(d) => {
+                if d.federation.gateways > 1 {
+                    eprintln!(
+                        "note: config requests {g} federated gateways; the live server \
+                         fronts a single engine, so the federation section is ignored \
+                         (run `andes simulate --gateways {g}` to exercise federation)",
+                        g = d.federation.gateways
+                    );
+                }
                 cfg.llm = d.llm;
                 cfg.gpu = d.gpu;
                 cfg.scheduler = d.scheduler;
@@ -187,6 +206,26 @@ fn cmd_serve(argv: &[String]) -> i32 {
     match args.get_usize("lead") {
         Ok(Some(lead)) => cfg.gateway.pacing.lead_tokens = lead.max(1),
         Ok(None) => {}
+        Err(e) => return die_on_cli("serve", about, &specs, e),
+    }
+    if let Some(s) = args.get("tier-weights") {
+        match andes::gateway::TierWeights::parse(s) {
+            Ok(w) => cfg.gateway.admission.tier_weights = w,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                return 2;
+            }
+        }
+    }
+    match args.get_usize("gateways") {
+        Ok(Some(g)) if g > 1 => {
+            eprintln!(
+                "the live server fronts a single real-model engine; multi-gateway \
+                 federation is simulation-only (try `andes simulate --gateways {g}`)"
+            );
+            return 2;
+        }
+        Ok(_) => {}
         Err(e) => return die_on_cli("serve", about, &specs, e),
     }
     match andes::server::serve(cfg, None) {
@@ -283,6 +322,22 @@ fn cmd_simulate(argv: &[String]) -> i32 {
             Some("0"),
             "spill-tier replicas replaying rejects (0 = no spill tier)",
         ),
+        OptSpec::value(
+            "gateways",
+            Some("1"),
+            "federated gateway instances fronting the cluster (>1 enables the gateway)",
+        ),
+        OptSpec::value(
+            "sync-interval",
+            Some("0.25"),
+            "federation snapshot-exchange period (s)",
+        ),
+        OptSpec::value(
+            "tier-weights",
+            None,
+            "per-tier admission weights premium:standard:economy (e.g. 2:1:0.5); \
+             enables the gateway and the tiered QoE trace",
+        ),
     ];
     let about = "One simulated serving run";
     let args = match Args::parse(argv, &specs) {
@@ -311,10 +366,47 @@ fn cmd_simulate(argv: &[String]) -> i32 {
         Err(e) => return die_on_cli("simulate", about, &specs, e),
     };
     let autoscale_arg = args.get("autoscale").map(str::to_string);
+    let gateways = match args.get_usize("gateways") {
+        Ok(Some(0)) => {
+            eprintln!("--gateways must be >= 1");
+            return 2;
+        }
+        Ok(Some(g)) => g,
+        Ok(None) => 1,
+        Err(e) => return die_on_cli("simulate", about, &specs, e),
+    };
+    let sync_interval = match args.get_f64("sync-interval") {
+        Ok(Some(s)) if s > 0.0 => s,
+        Ok(Some(_)) => {
+            eprintln!("--sync-interval must be > 0");
+            return 2;
+        }
+        Ok(None) => 0.25,
+        Err(e) => return die_on_cli("simulate", about, &specs, e),
+    };
+    let tier_weights = match args.get("tier-weights") {
+        Some(s) => match andes::gateway::TierWeights::parse(s) {
+            Ok(w) => Some(w),
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                return 2;
+            }
+        },
+        None => None,
+    };
     let use_gateway = args.has_flag("gateway")
         || autoscale_arg.is_some()
         || spill_replicas > 0
-        || replicas > 1;
+        || replicas > 1
+        || gateways > 1
+        || tier_weights.is_some();
+    if gateways > 1 && (autoscale_arg.is_some() || spill_replicas > 0) {
+        eprintln!(
+            "--gateways > 1 fronts a static cluster; it cannot be combined with \
+             --autoscale or --spill-replicas (those are single-gateway features)"
+        );
+        return 2;
+    }
 
     // Trace replay path: run the exact recorded workload.
     if let Some(path) = args.get("trace") {
@@ -322,7 +414,7 @@ fn cmd_simulate(argv: &[String]) -> i32 {
             eprintln!(
                 "--trace replays a recorded workload on a single static engine; \
                  it cannot be combined with --gateway/--replicas/--autoscale/\
-                 --spill-replicas"
+                 --spill-replicas/--gateways/--tier-weights"
             );
             return 2;
         }
@@ -373,7 +465,10 @@ fn cmd_simulate(argv: &[String]) -> i32 {
     if use_gateway {
         use andes::cluster::{Cluster, RoutingPolicy};
         use andes::coordinator::engine::EngineConfig;
-        use andes::gateway::{AutoscaleConfig, Gateway, GatewayConfig, SpillConfig};
+        use andes::gateway::{
+            AutoscaleConfig, FederatedGateway, FederationConfig, Gateway, GatewayConfig,
+            SpillConfig,
+        };
 
         let sched_cfg = match args.get("sched").unwrap() {
             "fcfs" => andes::config::SchedulerConfig::Fcfs,
@@ -425,6 +520,9 @@ fn cmd_simulate(argv: &[String]) -> i32 {
         } else {
             replicas
         };
+        if let Some(w) = tier_weights {
+            gcfg.admission.tier_weights = w;
+        }
         let cluster = Cluster::new(
             start_replicas,
             engine_cfg.clone(),
@@ -432,6 +530,58 @@ fn cmd_simulate(argv: &[String]) -> i32 {
             &sched_cfg,
             RoutingPolicy::QoeAware,
         );
+        let trace = Workload {
+            dataset,
+            arrivals: ArrivalProcess::Poisson {
+                rate: args.get_f64("rate").unwrap().unwrap(),
+            },
+            // Tier weights only bite on a tiered workload.
+            qoe_trace: if tier_weights.is_some() {
+                QoeTrace::Tiered
+            } else {
+                QoeTrace::TextReading
+            },
+            num_requests: args.get_usize("n").unwrap().unwrap(),
+            seed: args.get_u64("seed").unwrap().unwrap(),
+        }
+        .generate();
+
+        // Federated front door: N gateway instances over the cluster.
+        if gateways > 1 {
+            let fed = FederationConfig {
+                gateways,
+                sync_interval_secs: sync_interval,
+                ..FederationConfig::default()
+            };
+            let mut gw = FederatedGateway::new(cluster, gcfg, fed);
+            return match gw.run_trace(trace) {
+                Ok(res) => {
+                    println!(
+                        "federation: gateways={} arrivals={} served={} rejected={} \
+                         deferred={} mean_qoe={:.3} incl_rejects={:.3} \
+                         disagreement_rate={:.3} syncs={} forced_refreshes={} \
+                         replica_seconds={:.1}",
+                        gateways,
+                        res.stats.arrivals,
+                        res.served.len(),
+                        res.rejections.len(),
+                        res.stats.deferred,
+                        res.mean_served_qoe(),
+                        res.mean_qoe_incl_rejects(),
+                        res.stats.disagreement_rate(),
+                        res.stats.syncs,
+                        res.stats.forced_refreshes,
+                        res.replica_seconds,
+                    );
+                    0
+                }
+                Err(e) => {
+                    eprintln!("error: {e:#}");
+                    1
+                }
+            };
+        }
+
         let mut gw = if spill_replicas > 0 {
             let spill =
                 SpillConfig { enabled: true, replicas: spill_replicas, kv_fraction: 0.5 }
@@ -440,16 +590,6 @@ fn cmd_simulate(argv: &[String]) -> i32 {
         } else {
             Gateway::new(cluster, gcfg)
         };
-        let trace = Workload {
-            dataset,
-            arrivals: ArrivalProcess::Poisson {
-                rate: args.get_f64("rate").unwrap().unwrap(),
-            },
-            qoe_trace: QoeTrace::TextReading,
-            num_requests: args.get_usize("n").unwrap().unwrap(),
-            seed: args.get_u64("seed").unwrap().unwrap(),
-        }
-        .generate();
         return match gw.run_trace(trace) {
             Ok(res) => {
                 println!(

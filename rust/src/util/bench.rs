@@ -133,6 +133,24 @@ impl Bencher {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// Serialize every recorded result as pretty-printed JSON — the
+    /// `BENCH_*.json` perf-baseline format (mean/p50/p99/min in
+    /// nanoseconds, plus iteration counts).
+    pub fn results_json(&self) -> String {
+        use super::json::{pretty, Json};
+        let cases = self.results.iter().map(|r| {
+            Json::obj(vec![
+                ("name", Json::from(r.name.as_str())),
+                ("iters", Json::from(r.iters)),
+                ("mean_ns", Json::from(r.mean.as_nanos() as f64)),
+                ("p50_ns", Json::from(r.p50.as_nanos() as f64)),
+                ("p99_ns", Json::from(r.p99.as_nanos() as f64)),
+                ("min_ns", Json::from(r.min.as_nanos() as f64)),
+            ])
+        });
+        pretty(&Json::obj(vec![("benchmarks", Json::arr(cases))]))
+    }
 }
 
 #[cfg(test)]
@@ -160,6 +178,22 @@ mod tests {
         assert!(r.mean.as_nanos() > 0);
         assert!(r.p99 >= r.p50 || r.p99.as_nanos() + 50 >= r.p50.as_nanos());
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn results_serialize_to_json() {
+        let mut b = Bencher {
+            measure_time: Duration::from_millis(5),
+            warmup_time: Duration::from_millis(1),
+            results: Vec::new(),
+        };
+        b.bench("case-a", || std::hint::black_box(3u64).wrapping_mul(7));
+        let json = b.results_json();
+        let parsed = super::super::json::Json::parse(&json).unwrap();
+        let cases = parsed.get("benchmarks").as_arr().unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].get("name").as_str(), Some("case-a"));
+        assert!(cases[0].get("mean_ns").as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -414,6 +414,166 @@ fn gateway_conserves_requests_across_random_traces() {
     });
 }
 
+#[test]
+fn raising_a_tier_weight_never_lowers_its_admitted_fraction() {
+    // Property (open loop, fixed load): feed two admission controllers
+    // the identical replica-state and request sequence, differing only
+    // in ONE tier's weight. The hysteresis latch is driven by the
+    // unweighted score, so both controllers latch identically; the
+    // weighted per-request shed test is monotone in the weight, so the
+    // raised tier's admitted fraction can only go up. This is the
+    // contract that makes `--tier-weights` safe to tune upward.
+    use andes::gateway::{
+        AdmissionConfig, AdmissionController, AdmissionDecision, LoadMode, ReplicaState,
+        TierWeights,
+    };
+    use andes::qoe::spec::QoeSpec;
+
+    let tier_specs = [
+        QoeSpec::new(0.5, 6.5), // premium
+        QoeSpec::new(1.0, 4.8), // standard
+        QoeSpec::new(2.0, 2.5), // economy
+    ];
+    check_prop("tier weight monotonicity", 40, |rng| {
+        let base = TierWeights {
+            premium: 0.25 + rng.f64() * 3.0,
+            standard: 0.25 + rng.f64() * 3.0,
+            economy: 0.25 + rng.f64() * 3.0,
+        };
+        let raised_tier = rng.below(3) as usize;
+        let mut raised = base;
+        let bump = 0.1 + rng.f64() * 3.0;
+        match raised_tier {
+            0 => raised.premium += bump,
+            1 => raised.standard += bump,
+            _ => raised.economy += bump,
+        }
+        let mk = |w: TierWeights| {
+            AdmissionController::new(AdmissionConfig {
+                tier_weights: w,
+                ..AdmissionConfig::default()
+            })
+        };
+        let (mut lo, mut hi) = (mk(base), mk(raised));
+        let (mut lo_admits, mut hi_admits, mut raised_arrivals) = (0usize, 0usize, 0usize);
+        for _ in 0..200 {
+            // A shared random load trajectory (the "fixed load").
+            let states = [ReplicaState {
+                active_requests: rng.range(0, 400),
+                kv_free_tokens: rng.range(100, 60_000),
+                kv_capacity_tokens: 70_000,
+                est_request_tds: 0.2 + rng.f64() * 12.0,
+            }];
+            let mode =
+                if rng.chance(0.5) { LoadMode::Surge } else { LoadMode::Normal };
+            let prompt = rng.range(50, 1500);
+            let depth = rng.range(0, 8);
+            let tier = rng.below(3) as usize;
+            let spec = tier_specs[tier];
+            let a = lo.decide(prompt, &spec, &states, mode, depth);
+            let b = hi.decide(prompt, &spec, &states, mode, depth);
+            if tier == raised_tier {
+                raised_arrivals += 1;
+                if a == AdmissionDecision::Admit {
+                    lo_admits += 1;
+                }
+                if b == AdmissionDecision::Admit {
+                    hi_admits += 1;
+                }
+                // Pointwise: an admit under the lower weight must stay
+                // an admit under the higher one.
+                if a == AdmissionDecision::Admit {
+                    assert_eq!(b, AdmissionDecision::Admit, "raised weight demoted an admit");
+                }
+            }
+        }
+        if raised_arrivals > 0 {
+            assert!(
+                hi_admits >= lo_admits,
+                "raised tier admitted fraction dropped: {hi_admits}/{raised_arrivals} \
+                 < {lo_admits}/{raised_arrivals}"
+            );
+        }
+    });
+}
+
+#[test]
+fn federation_conserves_requests_across_random_traces() {
+    // Property: for random traces, gateway counts, sync intervals, and
+    // tier weights, no request is lost or double-admitted across the
+    // federated front doors: admitted + rejected == arrivals at the
+    // stats layer, served + rejections == arrivals at the result layer.
+    use andes::cluster::{Cluster, RoutingPolicy};
+    use andes::config::SchedulerConfig;
+    use andes::gateway::{FederatedGateway, FederationConfig, GatewayConfig, TierWeights};
+
+    let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+    check_prop("federation request conservation", 10, |rng| {
+        let n = rng.range(10, 45);
+        let rate = 0.5 + rng.f64() * 9.5;
+        let ecfg = EngineConfig {
+            kv_capacity_tokens: rng.range(2500, 9000),
+            swap_capacity_tokens: 18_000,
+            ..EngineConfig::default()
+        };
+        let cluster = Cluster::new(
+            rng.range(1, 3),
+            ecfg,
+            latency.clone(),
+            &SchedulerConfig::Fcfs,
+            RoutingPolicy::QoeAware,
+        );
+        let mut gcfg = GatewayConfig::default();
+        gcfg.pacing_enabled = rng.chance(0.5);
+        gcfg.surge.baseline_rate = 0.5 + rng.f64() * 3.0;
+        gcfg.admission.max_defer_wait = 1.0 + rng.f64() * 9.0;
+        if rng.chance(0.5) {
+            gcfg.admission.tier_weights = TierWeights {
+                premium: 0.5 + rng.f64() * 2.5,
+                standard: 1.0,
+                economy: 0.25 + rng.f64() * 1.5,
+            };
+        }
+        let fed = FederationConfig {
+            gateways: rng.range(1, 4),
+            sync_interval_secs: 0.05 + rng.f64() * 5.0,
+            staleness_bound_secs: rng.f64() * 20.0,
+        };
+        let trace = Workload {
+            dataset: Dataset::ShareGpt,
+            arrivals: ArrivalProcess::Poisson { rate },
+            qoe_trace: if rng.chance(0.5) {
+                QoeTrace::Tiered
+            } else {
+                QoeTrace::TextReading
+            },
+            num_requests: n,
+            seed: rng.next_u64(),
+        }
+        .generate();
+        let mut gw = FederatedGateway::new(cluster, gcfg, fed);
+        let res = gw.run_trace(trace).unwrap();
+        assert_eq!(res.stats.arrivals, n, "arrival count");
+        assert_eq!(
+            res.stats.admitted + res.stats.rejected,
+            n,
+            "stats conservation (admitted {} rejected {})",
+            res.stats.admitted,
+            res.stats.rejected
+        );
+        assert_eq!(
+            res.served.len() + res.rejections.len(),
+            n,
+            "result conservation (served {} rejected {})",
+            res.served.len(),
+            res.rejections.len()
+        );
+        assert_eq!(res.stats.admitted, res.served.len(), "no double-admission");
+        assert_eq!(res.stats.rejected, res.rejections.len());
+        assert!(res.replica_seconds >= 0.0);
+    });
+}
+
 // ---------------------------------------------------------------- server
 
 #[test]
