@@ -9,11 +9,13 @@
 //! decisions/sec at the end and writing the perf baseline to
 //! `BENCH_gateway.json`.
 
+use andes::coordinator::kv::KvCacheManager;
 use andes::gateway::{
     merge_snapshot, AdmissionConfig, AdmissionController, AutoscaleConfig, LoadMode,
     PacingConfig, PredictiveAutoscaler, ReplicaState, SurgeConfig, SurgeDetector,
     TierWeights, TokenPacer,
 };
+use andes::qoe::buffer::TokenBuffer;
 use andes::qoe::spec::QoeSpec;
 use andes::util::bench::{header, Bencher};
 
@@ -101,6 +103,33 @@ fn main() {
             released += p.release_due(now);
         }
         released
+    });
+
+    // KV prefix park → claim cycle: the bookkeeping added to every
+    // session-turn finish and returning-turn admission (DESIGN.md §10).
+    let mut kv = KvCacheManager::new(16 * 4096, 16 * 8192, 16);
+    let mut key = 0u64;
+    b.bench("kv-park-claim/ctx=512", || {
+        key = key.wrapping_add(1);
+        kv.allocate(0, 512).expect("fresh alloc");
+        kv.park(key % 64, 0).expect("park");
+        kv.claim_parked(key % 64).expect("claim")
+    });
+
+    // Client-buffer depth probe over a 10k-token stream: guards the
+    // binary-search depth_at against regressing to the old O(n) scan
+    // (which went quadratic when polled per generated token).
+    let mut buf = TokenBuffer::new(&spec);
+    for i in 0..10_000 {
+        buf.push(i as f64 * 0.01);
+    }
+    let mut q = 0.0;
+    b.bench("buffer-depth/tokens=10k", || {
+        q += 0.37;
+        if q > 2_200.0 {
+            q = 0.0;
+        }
+        buf.depth_at(q)
     });
 
     let decisions_per_sec = b

@@ -73,6 +73,7 @@ fn main() -> anyhow::Result<()> {
             prompt_tokens: prompt_tokens.len(),
             output_tokens: 48 + (i * 8) % 40,
             qoe: QoeSpec::new(0.5, 4.8),
+            session: None,
         };
         engine.submit_with_prompt(spec, prompt_tokens)?;
     }

@@ -98,6 +98,11 @@ pub struct BackendRequest {
 pub struct PrefillJob {
     pub id: RequestId,
     pub context_tokens: usize,
+    /// Leading tokens whose KV was claimed from a parked session prefix
+    /// (DESIGN.md §10): the simulator charges a host→device transfer for
+    /// them instead of prefill compute. 0 for ordinary prefills; the
+    /// real PJRT backend has no prefix cache and ignores it.
+    pub cached_tokens: usize,
 }
 
 /// One generated token event.

@@ -51,8 +51,13 @@ impl ExecutionBackend for SimBackend {
     }
 
     fn prefill(&mut self, jobs: &[PrefillJob]) -> anyhow::Result<StepOutcome> {
-        let total: usize = jobs.iter().map(|j| j.context_tokens).sum();
-        let latency = self.latency.prefill(total);
+        // Tokens restored from a parked session prefix skip prefill
+        // compute and pay the (cheaper) host→device transfer instead —
+        // the prefix-hit TTFT win of DESIGN.md §10.
+        let compute: usize =
+            jobs.iter().map(|j| j.context_tokens - j.cached_tokens.min(j.context_tokens)).sum();
+        let cached: usize = jobs.iter().map(|j| j.cached_tokens).sum();
+        let latency = self.latency.prefill(compute) + self.latency.swap(cached);
         // A prefill replay (recompute) does NOT re-emit already-delivered
         // tokens; it delivers the *next* token. The engine tracks what
         // was delivered; here we just generate one more.
@@ -121,8 +126,10 @@ mod tests {
         let mut b = backend();
         reg(&mut b, 0, 5);
         reg(&mut b, 1, 5);
-        let small = b.prefill(&[PrefillJob { id: 0, context_tokens: 50 }]).unwrap();
-        let large = b.prefill(&[PrefillJob { id: 1, context_tokens: 800 }]).unwrap();
+        let small =
+            b.prefill(&[PrefillJob { id: 0, context_tokens: 50, cached_tokens: 0 }]).unwrap();
+        let large =
+            b.prefill(&[PrefillJob { id: 1, context_tokens: 800, cached_tokens: 0 }]).unwrap();
         assert!(large.latency > small.latency);
         assert_eq!(small.tokens.len(), 1);
         assert_eq!(small.tokens[0].token, 1);
@@ -136,8 +143,27 @@ mod tests {
         b.decode(&[0], 11).unwrap();
         b.drop_kv(0); // recompute-preempt
         // Replaying prefill generates token #3, not #1.
-        let out = b.prefill(&[PrefillJob { id: 0, context_tokens: 12 }]).unwrap();
+        let out =
+            b.prefill(&[PrefillJob { id: 0, context_tokens: 12, cached_tokens: 0 }]).unwrap();
         assert_eq!(out.tokens[0].token, 3);
+    }
+
+    #[test]
+    fn cached_prefix_tokens_cost_transfer_not_compute() {
+        let mut b = backend();
+        reg(&mut b, 0, 5);
+        reg(&mut b, 1, 5);
+        let cold =
+            b.prefill(&[PrefillJob { id: 0, context_tokens: 800, cached_tokens: 0 }]).unwrap();
+        let hit = b
+            .prefill(&[PrefillJob { id: 1, context_tokens: 800, cached_tokens: 600 }])
+            .unwrap();
+        // Transfer over PCIe is cheaper than recomputing the prefix.
+        assert!(hit.latency < cold.latency, "hit {} !< cold {}", hit.latency, cold.latency);
+        // And it still costs more than prefilling only the new suffix.
+        let suffix =
+            b.prefill(&[PrefillJob { id: 0, context_tokens: 200, cached_tokens: 0 }]).unwrap();
+        assert!(hit.latency > suffix.latency);
     }
 
     #[test]

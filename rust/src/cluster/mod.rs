@@ -82,6 +82,10 @@ pub struct Cluster {
     retired_seconds: f64,
     /// Metrics of reused-slot replicas, surfaced by `drain`.
     retired_metrics: Vec<Metrics>,
+    /// Route a returning session turn to the replica holding its parked
+    /// KV prefix (DESIGN.md §10). Off by default: routing is
+    /// bit-identical to pre-session behavior.
+    session_affinity: bool,
 }
 
 impl Cluster {
@@ -119,7 +123,19 @@ impl Cluster {
             scheduler: scheduler.clone(),
             retired_seconds: 0.0,
             retired_metrics: Vec::new(),
+            session_affinity: false,
         }
+    }
+
+    /// Enable or disable session-affinity routing (see
+    /// [`Cluster::parked_replica`]).
+    pub fn set_session_affinity(&mut self, on: bool) {
+        self.session_affinity = on;
+    }
+
+    /// Whether session-affinity routing is enabled.
+    pub fn session_affinity(&self) -> bool {
+        self.session_affinity
     }
 
     pub fn num_replicas(&self) -> usize {
@@ -318,19 +334,49 @@ impl Cluster {
         }
     }
 
+    /// The non-draining replica holding `session_id`'s parked KV
+    /// prefix, if any. Usually that is unique (the replica that served
+    /// the previous turn), but overlapping turns routed apart under
+    /// overload can each park under the same key on different
+    /// replicas; the longest prefix wins and the stale entry ages out
+    /// of the other replica's pool via LRU eviction.
+    pub fn parked_replica(&self, session_id: u64) -> Option<usize> {
+        (0..self.replicas.len())
+            .filter(|&i| !self.draining[i])
+            .map(|i| (i, self.replicas[i].parked_prefix_tokens(session_id)))
+            .filter(|&(_, tokens)| tokens > 0)
+            .max_by_key(|&(i, tokens)| (tokens, std::cmp::Reverse(i)))
+            .map(|(i, _)| i)
+    }
+
     /// Route and submit one request; returns the chosen replica index.
     pub fn submit(&mut self, spec: RequestSpec) -> Result<usize> {
         self.submit_with_policy(spec, None)
     }
 
     /// Submit with an optional routing-policy override — the gateway's
-    /// surge-aware routing hook.
+    /// surge-aware routing hook. With session affinity enabled, a
+    /// returning turn whose parked prefix survives on a routable
+    /// replica is pinned there (a hit elsewhere is impossible: prefixes
+    /// park where the previous turn ran); when that replica drained or
+    /// the prefix was evicted, routing falls back to the policy as if
+    /// the session were new.
     pub fn submit_with_policy(
         &mut self,
         spec: RequestSpec,
         policy: Option<RoutingPolicy>,
     ) -> Result<usize> {
-        let idx = self.route(policy.unwrap_or(self.policy));
+        let affinity = if self.session_affinity {
+            spec.session
+                .filter(|s| s.is_returning())
+                .and_then(|s| self.parked_replica(s.session_id))
+        } else {
+            None
+        };
+        let idx = match affinity {
+            Some(i) => i,
+            None => self.route(policy.unwrap_or(self.policy)),
+        };
         self.replicas[idx].submit(spec)?;
         self.active[idx] += 1;
         Ok(idx)
@@ -493,6 +539,7 @@ mod tests {
             prompt_tokens: 200,
             output_tokens: 50,
             qoe: QoeSpec::new(1.0, 4.8),
+            session: None,
         })
         .unwrap();
         let idx = c.add_replica(0.2);
@@ -505,6 +552,7 @@ mod tests {
                 prompt_tokens: 200,
                 output_tokens: 50,
                 qoe: QoeSpec::new(1.0, 4.8),
+                session: None,
             })
             .unwrap();
         assert_eq!(routed, 1, "new replica must take the next request");
@@ -521,6 +569,7 @@ mod tests {
             prompt_tokens: 300,
             output_tokens: 60,
             qoe: QoeSpec::new(1.0, 4.8),
+            session: None,
         };
         c.advance_all_to(0.1).unwrap();
         let first = c.submit(mk(0, 0.1)).unwrap();
@@ -550,6 +599,7 @@ mod tests {
                 prompt_tokens: 100,
                 output_tokens: 20,
                 qoe: QoeSpec::new(1.0, 4.8),
+                session: None,
             })
             .unwrap();
         assert_eq!(idx, 0);
@@ -586,6 +636,7 @@ mod tests {
             prompt_tokens: 200,
             output_tokens: 30,
             qoe: QoeSpec::new(1.0, 4.8),
+            session: None,
         };
         let first = c.submit(mk(0, 0.1)).unwrap();
         c.advance_all_to(30.0).unwrap(); // request finishes
@@ -618,6 +669,7 @@ mod tests {
             prompt_tokens: 100,
             output_tokens: 30,
             qoe: QoeSpec::new(1.0, 4.8),
+            session: None,
         })
         .unwrap();
         let t1 = c.step_once().unwrap().expect("busy replica must step");
@@ -629,6 +681,86 @@ mod tests {
             assert!(guard < 10_000, "step_once failed to make progress");
         }
         assert_eq!(c.active_counts(), &[0, 0]);
+    }
+
+    fn session_cluster(n: usize, policy: RoutingPolicy) -> Cluster {
+        let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+        let cfg = EngineConfig {
+            kv_capacity_tokens: 8000,
+            swap_capacity_tokens: 16_000,
+            park_prefixes: true,
+            ..EngineConfig::default()
+        };
+        let mut c = Cluster::new(n, cfg, latency, &SchedulerConfig::Fcfs, policy);
+        c.set_session_affinity(true);
+        c
+    }
+
+    fn turn_spec(id: usize, arrival: f64, turn: usize, prefix: usize) -> RequestSpec {
+        use crate::workload::SessionInfo;
+        RequestSpec {
+            id,
+            arrival,
+            prompt_tokens: prefix + 300,
+            output_tokens: 40,
+            qoe: QoeSpec::new(1.0, 4.8),
+            session: Some(SessionInfo {
+                session_id: 5,
+                turn,
+                turns_total: 3,
+                prefix_tokens: prefix,
+            }),
+        }
+    }
+
+    #[test]
+    fn session_affinity_routes_returning_turn_to_parked_replica() {
+        let mut c = session_cluster(2, RoutingPolicy::RoundRobin);
+        c.advance_all_to(0.1).unwrap();
+        let first = c.submit(turn_spec(0, 0.1, 0, 0)).unwrap();
+        // Let turn 0 finish and park its 340-token context.
+        c.advance_all_to(60.0).unwrap();
+        assert_eq!(c.parked_replica(5), Some(first));
+        // Round-robin would pick the other replica next; affinity pins
+        // the returning turn to the one holding the prefix.
+        let routed = c.submit(turn_spec(1, 60.0, 1, 340)).unwrap();
+        assert_eq!(routed, first, "returning turn must follow its parked prefix");
+        let all = c.drain().unwrap();
+        assert_eq!(all.iter().map(|m| m.requests.len()).sum::<usize>(), 2);
+        assert_eq!(all[first].prefix_hits, 1, "the pinned replica served a hit");
+    }
+
+    #[test]
+    fn session_affinity_falls_back_when_replica_drains() {
+        let mut c = session_cluster(2, RoutingPolicy::LeastLoaded);
+        c.advance_all_to(0.1).unwrap();
+        let first = c.submit(turn_spec(0, 0.1, 0, 0)).unwrap();
+        c.advance_all_to(60.0).unwrap();
+        assert_eq!(c.parked_replica(5), Some(first));
+        // The parking replica retires: its prefix is unreachable and
+        // the returning turn must route elsewhere, served cold.
+        c.retire_replica(first, 60.0);
+        assert_eq!(c.parked_replica(5), None, "draining replica is not a target");
+        let routed = c.submit(turn_spec(1, 60.0, 1, 340)).unwrap();
+        assert_ne!(routed, first, "affinity must not route onto a draining replica");
+        let all = c.drain().unwrap();
+        assert_eq!(all.iter().map(|m| m.requests.len()).sum::<usize>(), 2);
+        assert_eq!(all.iter().map(|m| m.prefix_hits).sum::<u64>(), 0, "cold fallback");
+    }
+
+    #[test]
+    fn affinity_disabled_leaves_routing_untouched() {
+        // Same scenario as the affinity test, affinity off: round-robin
+        // sends the returning turn to the other replica (a miss).
+        let mut c = session_cluster(2, RoutingPolicy::RoundRobin);
+        c.set_session_affinity(false);
+        c.advance_all_to(0.1).unwrap();
+        let first = c.submit(turn_spec(0, 0.1, 0, 0)).unwrap();
+        c.advance_all_to(60.0).unwrap();
+        let routed = c.submit(turn_spec(1, 60.0, 1, 340)).unwrap();
+        assert_ne!(routed, first, "round-robin must alternate with affinity off");
+        let all = c.drain().unwrap();
+        assert_eq!(all.iter().map(|m| m.prefix_hits).sum::<u64>(), 0);
     }
 
     #[test]
@@ -651,6 +783,7 @@ mod tests {
                     prompt_tokens: if i % 2 == 0 { 950 } else { 60 },
                     output_tokens: 120,
                     qoe: QoeSpec::new(1.0, 4.8),
+                    session: None,
                 })
                 .collect()
         };

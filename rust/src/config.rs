@@ -53,6 +53,10 @@
 //!     "premium": 2.0,
 //!     "standard": 1.0,
 //!     "economy": 0.5
+//!   },
+//!   "sessions": {
+//!     "park": true,
+//!     "affinity": true
 //!   }
 //! }
 //! ```
@@ -92,6 +96,22 @@ pub struct AndesDeployment {
     /// so deployment descriptors can carry the topology for embedders
     /// building a [`crate::gateway::FederatedGateway`] themselves.
     pub federation: FederationConfig,
+    /// Multi-turn session serving (DESIGN.md §10): `park` mirrors into
+    /// `engine.park_prefixes`; `affinity` is applied to the cluster by
+    /// whichever frontend builds one (`simulate`, embedders).
+    pub sessions: SessionsConfig,
+}
+
+/// `"sessions"` section: KV prefix parking + session-affinity routing.
+/// Both default to off, which reproduces pre-session behavior
+/// bit-identically.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SessionsConfig {
+    /// Park a finished turn's KV for the session's next turn.
+    pub park: bool,
+    /// Route returning turns to the replica holding their parked prefix
+    /// (requires `park`).
+    pub affinity: bool,
 }
 
 /// Scheduler section.
@@ -131,6 +151,7 @@ impl Default for AndesDeployment {
             gateway: GatewayConfig::default(),
             spill: SpillConfig::default(),
             federation: FederationConfig::default(),
+            sessions: SessionsConfig::default(),
         }
     }
 }
@@ -239,7 +260,8 @@ impl AndesDeployment {
                 d.gateway.pacing_enabled = b;
             }
             if let Some(n) = g.get("lead_tokens").as_u64() {
-                d.gateway.pacing.lead_tokens = (n as usize).max(1);
+                // 0 is a valid setting: it disables the lead buffer.
+                d.gateway.pacing.lead_tokens = n as usize;
             }
             if let Some(f) = g.get("pace_rate_factor").as_f64() {
                 if f <= 0.0 {
@@ -399,6 +421,20 @@ impl AndesDeployment {
             }
         }
 
+        let se = j.get("sessions");
+        if !se.is_null() {
+            if let Some(b) = se.get("park").as_bool() {
+                d.sessions.park = b;
+            }
+            if let Some(b) = se.get("affinity").as_bool() {
+                d.sessions.affinity = b;
+            }
+            if d.sessions.affinity && !d.sessions.park {
+                bail!("sessions.affinity requires sessions.park");
+            }
+            d.engine.park_prefixes = d.sessions.park;
+        }
+
         let tiers = j.get("tiers");
         if !tiers.is_null() {
             let w = &mut d.gateway.admission.tier_weights;
@@ -523,6 +559,15 @@ mod tests {
     }
 
     #[test]
+    fn lead_tokens_zero_disables_lead() {
+        // Regression: the parser used to promote 0 → 1, so a config
+        // could never actually disable the pacer's lead buffer.
+        let d =
+            AndesDeployment::from_json_str(r#"{"gateway": {"lead_tokens": 0}}"#).unwrap();
+        assert_eq!(d.gateway.pacing.lead_tokens, 0);
+    }
+
+    #[test]
     fn autoscale_and_spill_sections_parse() {
         let d = AndesDeployment::from_json_str(
             r#"{"autoscale": {"enabled": true, "min_replicas": 2,
@@ -589,6 +634,24 @@ mod tests {
         let plain = AndesDeployment::from_json_str("{}").unwrap();
         assert_eq!(plain.federation.gateways, 1);
         assert!(plain.gateway.admission.tier_weights.is_uniform());
+    }
+
+    #[test]
+    fn sessions_section_parses_and_mirrors_into_engine() {
+        let d = AndesDeployment::from_json_str(
+            r#"{"sessions": {"park": true, "affinity": true}}"#,
+        )
+        .unwrap();
+        assert!(d.sessions.park);
+        assert!(d.sessions.affinity);
+        assert!(d.engine.park_prefixes, "park must mirror into the engine config");
+        // Defaults: everything off, engine untouched.
+        let plain = AndesDeployment::from_json_str("{}").unwrap();
+        assert_eq!(plain.sessions, SessionsConfig::default());
+        assert!(!plain.engine.park_prefixes);
+        // Affinity without parking is a configuration error.
+        assert!(AndesDeployment::from_json_str(r#"{"sessions": {"affinity": true}}"#)
+            .is_err());
     }
 
     #[test]

@@ -34,6 +34,11 @@ pub struct EngineConfig {
     pub prefer_swap: bool,
     /// Initial Δt estimate before any request completes (s).
     pub initial_horizon: f64,
+    /// Park a finished session turn's KV in the host pool for the
+    /// session's next turn (prefix retention, DESIGN.md §10). Disabled
+    /// by default: off, the engine is bit-identical to pre-session
+    /// behavior even on session-annotated traces.
+    pub park_prefixes: bool,
 }
 
 impl Default for EngineConfig {
@@ -45,6 +50,7 @@ impl Default for EngineConfig {
             max_output_tokens: 2048,
             prefer_swap: true,
             initial_horizon: 60.0,
+            park_prefixes: false,
         }
     }
 }
@@ -140,6 +146,12 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
         self.active.len()
     }
 
+    /// Tokens parked for `session_id` on this engine's host pool (0
+    /// when absent) — the gateway's affinity/admission probe.
+    pub fn parked_prefix_tokens(&self, session_id: u64) -> usize {
+        self.kv.parked_tokens(session_id).unwrap_or(0)
+    }
+
     /// Mean context length across active requests (0 when idle).
     pub fn avg_active_context(&self) -> usize {
         if self.active.is_empty() {
@@ -193,7 +205,9 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
             prompt_tokens: spec.prompt_tokens,
             output_tokens: spec.output_tokens,
         })?;
-        self.requests.push(Request::new(id, arrival, spec.prompt_tokens, spec.qoe));
+        let mut req = Request::new(id, arrival, spec.prompt_tokens, spec.qoe);
+        req.session = spec.session;
+        self.requests.push(req);
         self.active.push(id);
         Ok(id)
     }
@@ -230,9 +244,55 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
         }
         self.requests[id].preemptions += 1;
         self.metrics.total_preemptions += 1;
+        // A swap-out may have evicted parked prefixes for room.
+        self.metrics.park_evictions = self.kv.park_evictions();
     }
 
-    /// Retire a finished request.
+    /// Claim a parked session prefix for a first admission, if one
+    /// exists. Returns the token count whose prefill is skipped — 0 on
+    /// a cold start, a one-shot request, or a recompute readmission
+    /// (the claimed prefix was dropped with the rest of the KV, so the
+    /// replay pays full prefill).
+    fn claim_prefix(&mut self, id: RequestId, ctx: usize) -> usize {
+        let r = &self.requests[id];
+        if r.generated > 0 || r.preemptions > 0 || r.prefix_hit_tokens > 0 {
+            return 0;
+        }
+        let Some(s) = r.session else { return 0 };
+        if !s.is_returning() {
+            return 0;
+        }
+        if self.kv.parked_tokens(s.session_id).is_none() {
+            return 0; // evicted, never parked, or parked on another replica
+        }
+        // The entry belongs to this session's previous turn; claim it
+        // whether or not it is usable — the turn now being served
+        // supersedes it either way.
+        let parked = self.kv.claim_parked(s.session_id).expect("checked above");
+        // The hit covers at most the declared shared prefix, and leaves
+        // at least one fresh token to prefill (producing the next
+        // token).
+        let hit = s.usable_prefix(parked).min(ctx.saturating_sub(1));
+        if hit == 0 {
+            return 0;
+        }
+        // The cheap (transfer-instead-of-compute) prefill runs in the
+        // same tick as this claim — preemption is decided before
+        // admissions and the OOM net skips prefilling requests — so a
+        // later recompute preemption cannot retroactively void the
+        // TTFT benefit these counters record.
+        self.requests[id].prefix_hit_tokens = hit;
+        self.metrics.prefix_hits += 1;
+        self.metrics.prefix_hit_tokens += hit as u64;
+        hit
+    }
+
+    /// Retire a finished request. With prefix parking enabled, a
+    /// session turn that expects a follow-up parks its KV in the host
+    /// pool (keyed by session id) instead of freeing it; the next turn
+    /// claims it and skips the shared-prefix prefill. Parking falls
+    /// back to a plain free when the host pool cannot hold the context
+    /// even after LRU eviction.
     fn finish(&mut self, id: RequestId, now: f64) {
         let r = &mut self.requests[id];
         r.phase = Phase::Finished;
@@ -241,7 +301,20 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
         self.completions += 1;
         self.completion_avg +=
             (completion - self.completion_avg) / self.completions as f64;
-        let _ = self.kv.free(id);
+        let park_key = match self.requests[id].session {
+            Some(s) if self.cfg.park_prefixes && s.expects_return() => Some(s.session_id),
+            _ => None,
+        };
+        let parked = match park_key {
+            Some(key) => self.kv.park(key, id).is_ok(),
+            None => false,
+        };
+        if parked {
+            self.metrics.prefixes_parked += 1;
+        } else {
+            let _ = self.kv.free(id);
+        }
+        self.metrics.park_evictions = self.kv.park_evictions();
         self.backend.release(id);
         self.metrics.record_finish(&self.requests[id]);
         self.scheduler.on_finish(id);
@@ -341,7 +414,15 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
                     let ctx = self.requests[id].context_len();
                     if self.kv.allocate(id, ctx).is_ok() {
                         self.requests[id].phase = Phase::Running;
-                        prefills.push(PrefillJob { id, context_tokens: ctx });
+                        // A returning turn may restore its shared prefix
+                        // from the session's parked KV (host→device
+                        // transfer instead of prefill compute).
+                        let cached = self.claim_prefix(id, ctx);
+                        prefills.push(PrefillJob {
+                            id,
+                            context_tokens: ctx,
+                            cached_tokens: cached,
+                        });
                     }
                     // else: scheduler overcommitted; skip this round.
                 }
@@ -512,6 +593,7 @@ mod tests {
             prompt_tokens: prompt,
             output_tokens: output,
             qoe: QoeSpec::new(1.0, 4.8),
+            session: None,
         }
     }
 
@@ -634,6 +716,160 @@ mod tests {
         e.load_trace(vec![spec(0, 1.0, 50, 5), bad]);
         let m = e.run_to_completion().unwrap();
         assert_eq!(m.requests.len(), 2);
+    }
+
+    fn sspec(
+        id: usize,
+        arrival: f64,
+        sid: u64,
+        turn: usize,
+        total: usize,
+        prefix: usize,
+        new_prompt: usize,
+        output: usize,
+    ) -> RequestSpec {
+        use crate::workload::SessionInfo;
+        RequestSpec {
+            id,
+            arrival,
+            prompt_tokens: prefix + new_prompt,
+            output_tokens: output,
+            qoe: QoeSpec::new(1.0, 4.8),
+            session: Some(SessionInfo {
+                session_id: sid,
+                turn,
+                turns_total: total,
+                prefix_tokens: prefix,
+            }),
+        }
+    }
+
+    fn session_engine(park: bool) -> Engine<SimBackend, VirtualClock> {
+        let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+        let cfg = EngineConfig {
+            kv_capacity_tokens: 100_000,
+            swap_capacity_tokens: 200_000,
+            park_prefixes: park,
+            ..EngineConfig::default()
+        };
+        Engine::new(
+            cfg,
+            SimBackend::new(latency.clone()),
+            VirtualClock::default(),
+            Box::new(FcfsScheduler::new()),
+            latency,
+        )
+    }
+
+    fn two_turn_trace() -> Vec<RequestSpec> {
+        vec![
+            sspec(0, 0.0, 9, 0, 2, 0, 400, 100), // turn 0: ctx 400 → 500 parked
+            sspec(1, 60.0, 9, 1, 2, 500, 300, 50), // turn 1 shares those 500
+        ]
+    }
+
+    #[test]
+    fn parked_prefix_shortens_returning_turn_ttft() {
+        let run = |park: bool| {
+            let mut e = session_engine(park);
+            e.load_trace(two_turn_trace());
+            let m = e.run_to_completion().unwrap();
+            assert_eq!(m.requests.len(), 2);
+            let t1 = m.requests.iter().find(|r| (r.arrival - 60.0).abs() < 1e-9).unwrap();
+            (m.prefix_hits, m.prefixes_parked, t1.prefix_hit_tokens, t1.ttft)
+        };
+        let (hits, parked, hit_tokens, cold_ttft) = run(false);
+        assert_eq!((hits, parked, hit_tokens), (0, 0, 0), "parking off must be inert");
+        let (hits, parked, hit_tokens, warm_ttft) = run(true);
+        assert_eq!(hits, 1);
+        assert_eq!(parked, 1);
+        assert_eq!(hit_tokens, 500, "the whole shared prefix is restored");
+        assert!(
+            warm_ttft < cold_ttft,
+            "prefix hit must shorten TTFT: {warm_ttft} !< {cold_ttft}"
+        );
+    }
+
+    #[test]
+    fn parked_prefix_drains_with_the_session() {
+        // The final turn claims the prefix and does not re-park
+        // (expects_return is false), so a completed session leaves both
+        // pools clean.
+        let mut e = session_engine(true);
+        e.load_trace(two_turn_trace());
+        e.run_to_completion().unwrap();
+        assert_eq!(e.kv().parked_count(), 0, "final turn must not park");
+        assert_eq!(e.kv().num_allocations(), 0);
+        assert_eq!(e.kv().device_free_tokens(), e.kv().device_capacity_tokens());
+        assert_eq!(e.parked_prefix_tokens(9), 0);
+    }
+
+    #[test]
+    fn parking_disabled_is_bit_identical_to_stripped_sessions() {
+        // Flag-off parity: with park_prefixes = false, session metadata
+        // must have zero effect — the run is bit-identical to the same
+        // trace with the session annotations removed.
+        let trace = crate::workload::SessionWorkload {
+            num_sessions: 12,
+            arrivals: crate::workload::ArrivalProcess::Poisson { rate: 0.8 },
+            qoe_trace: crate::workload::QoeTrace::TextReading,
+            min_turns: 2,
+            max_turns: 4,
+            think_time_mean: 3.0,
+            seed: 21,
+        }
+        .generate();
+        let mut with = session_engine(false);
+        with.load_trace(trace.clone());
+        let m1 = with.run_to_completion().unwrap();
+
+        let stripped: Vec<RequestSpec> =
+            trace.iter().cloned().map(|mut s| {
+                s.session = None;
+                s
+            }).collect();
+        let mut without = session_engine(false);
+        without.load_trace(stripped);
+        let m2 = without.run_to_completion().unwrap();
+
+        assert_eq!(m1.requests.len(), m2.requests.len());
+        for (a, b) in m1.requests.iter().zip(&m2.requests) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.token_times, b.token_times, "request {}", a.id);
+            assert_eq!(a.final_qoe, b.final_qoe);
+        }
+        assert_eq!(m1.total_tokens, m2.total_tokens);
+        assert_eq!(m1.total_preemptions, m2.total_preemptions);
+        assert_eq!(m1.prefix_hits, 0);
+        assert_eq!(m1.prefixes_parked, 0);
+    }
+
+    #[test]
+    fn evicted_prefix_falls_back_to_cold_prefill() {
+        // Host pool too small to hold the parked context → the park
+        // falls back to a plain free and the returning turn pays full
+        // prefill, with nothing lost or leaked.
+        let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+        let cfg = EngineConfig {
+            kv_capacity_tokens: 100_000,
+            swap_capacity_tokens: 256, // 16 blocks of 16 — too small for 500 tokens
+            park_prefixes: true,
+            ..EngineConfig::default()
+        };
+        let mut e = Engine::new(
+            cfg,
+            SimBackend::new(latency.clone()),
+            VirtualClock::default(),
+            Box::new(FcfsScheduler::new()),
+            latency,
+        );
+        e.load_trace(two_turn_trace());
+        let m = e.run_to_completion().unwrap();
+        assert_eq!(m.requests.len(), 2, "both turns served despite the failed park");
+        assert_eq!(m.prefixes_parked, 0);
+        assert_eq!(m.prefix_hits, 0);
+        assert_eq!(e.kv().parked_count(), 0);
+        assert_eq!(e.kv().num_allocations(), 0);
     }
 
     #[test]

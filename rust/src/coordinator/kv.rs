@@ -10,6 +10,17 @@
 //! 1. device blocks in use never exceed the device pool;
 //! 2. host blocks in use never exceed the host pool;
 //! 3. blocks never leak: freeing everything returns both pools to zero.
+//!
+//! The host pool doubles as a **prefix park** for multi-turn sessions
+//! (DESIGN.md §10): a finished turn may move its context blocks to the
+//! host keyed by session id ([`KvCacheManager::park`]) instead of
+//! freeing them; the session's next turn claims them back
+//! ([`KvCacheManager::claim_parked`]) and skips the shared-prefix
+//! portion of prefill. Parked prefixes are opportunistic cache, not
+//! live state: under host pressure — a swap-out or a newer park needing
+//! room — the least-recently-used parked prefix is evicted first, and
+//! invariant 3 extends to them (freeing every allocation and dropping
+//! every parked prefix returns both pools to zero).
 
 use std::collections::HashMap;
 
@@ -27,6 +38,16 @@ struct Allocation {
     blocks: usize,
     tokens: usize,
     residence: KvResidence,
+}
+
+/// A session's parked prefix: host blocks retained after a turn
+/// finished, waiting for the session's next turn.
+#[derive(Debug, Clone)]
+struct ParkedPrefix {
+    blocks: usize,
+    tokens: usize,
+    /// LRU stamp (monotone counter; smaller = older).
+    stamp: u64,
 }
 
 #[derive(Debug, thiserror::Error, PartialEq, Eq)]
@@ -50,8 +71,15 @@ pub struct KvCacheManager {
     device_blocks_total: usize,
     host_blocks_total: usize,
     device_blocks_used: usize,
+    /// Host blocks in use by swapped requests *and* parked prefixes.
     host_blocks_used: usize,
     allocs: HashMap<RequestId, Allocation>,
+    /// Parked session prefixes, keyed by session id.
+    parked: HashMap<u64, ParkedPrefix>,
+    /// Monotone stamp source for parked-prefix LRU order.
+    park_stamp: u64,
+    /// Parked prefixes dropped to relieve host pressure (lifetime).
+    park_evictions: u64,
 }
 
 impl KvCacheManager {
@@ -66,6 +94,9 @@ impl KvCacheManager {
             device_blocks_used: 0,
             host_blocks_used: 0,
             allocs: HashMap::new(),
+            parked: HashMap::new(),
+            park_stamp: 0,
+            park_evictions: 0,
         }
     }
 
@@ -157,19 +188,27 @@ impl KvCacheManager {
         Ok(())
     }
 
-    /// Swap a request's KV cache device → host. Fails (leaving state
-    /// unchanged) if the host pool cannot hold it — callers then fall
-    /// back to recomputation, as the paper specifies.
+    /// Swap a request's KV cache device → host. Live swap state outranks
+    /// opportunistically parked prefixes: LRU parked entries are evicted
+    /// to make room first. Fails (leaving allocations unchanged) if the
+    /// host pool still cannot hold it — callers then fall back to
+    /// recomputation, as the paper specifies.
     pub fn swap_out(&mut self, id: RequestId) -> Result<usize, KvError> {
-        let a = self.allocs.get_mut(&id).ok_or(KvError::NotAllocated(id))?;
-        if a.residence != KvResidence::Device {
-            return Err(KvError::WrongResidence(id, KvResidence::Device));
+        let need = match self.allocs.get(&id) {
+            None => return Err(KvError::NotAllocated(id)),
+            Some(a) if a.residence != KvResidence::Device => {
+                return Err(KvError::WrongResidence(id, KvResidence::Device));
+            }
+            Some(a) => a.blocks,
+        };
+        // Feasibility before eviction: an infeasible swap must not
+        // destroy the prefix cache on its way to failing anyway.
+        if self.host_free_blocks() + self.parked_blocks() < need {
+            return Err(KvError::HostFull { need, free: self.host_free_blocks() });
         }
-        let need = a.blocks;
-        let free = self.host_blocks_total - self.host_blocks_used;
-        if need > free {
-            return Err(KvError::HostFull { need, free });
-        }
+        let fits = self.make_host_room(need);
+        debug_assert!(fits, "feasibility was checked above");
+        let a = self.allocs.get_mut(&id).expect("checked above");
         a.residence = KvResidence::Host;
         self.device_blocks_used -= need;
         self.host_blocks_used += need;
@@ -202,6 +241,104 @@ impl KvCacheManager {
             KvResidence::Host => self.host_blocks_used -= a.blocks,
         }
         Ok(a.tokens)
+    }
+
+    /// Evict least-recently-parked prefixes until at least `need` host
+    /// blocks are free or no parked prefix remains; reports whether
+    /// `need` now fits. Eviction order is park time (a claim re-parks on
+    /// the next finish, refreshing the stamp).
+    fn make_host_room(&mut self, need: usize) -> bool {
+        while self.host_blocks_total - self.host_blocks_used < need {
+            let lru = self.parked.iter().min_by_key(|(_, p)| p.stamp).map(|(&k, _)| k);
+            match lru {
+                Some(k) => {
+                    let p = self.parked.remove(&k).expect("lru key present");
+                    self.host_blocks_used -= p.blocks;
+                    self.park_evictions += 1;
+                }
+                None => break,
+            }
+        }
+        self.host_blocks_total - self.host_blocks_used >= need
+    }
+
+    /// Park a finished turn's device KV in the host pool under session
+    /// `key` instead of freeing it, evicting LRU parked prefixes to make
+    /// room. Any previous prefix parked under `key` is replaced (it
+    /// described a stale, shorter context). On `HostFull` *nothing*
+    /// changes — the request's allocation and any previously parked
+    /// entry under `key` both survive — and the caller falls back to a
+    /// plain [`Self::free`]. Returns the parked token count.
+    pub fn park(&mut self, key: u64, id: RequestId) -> Result<usize, KvError> {
+        let (blocks, tokens) = match self.allocs.get(&id) {
+            None => return Err(KvError::NotAllocated(id)),
+            Some(a) if a.residence != KvResidence::Device => {
+                return Err(KvError::WrongResidence(id, KvResidence::Device));
+            }
+            Some(a) => (a.blocks, a.tokens),
+        };
+        // Feasibility first: every parked entry (including the one this
+        // park replaces) is evictable, so the new prefix fits iff it
+        // fits in free + parked. Checking before mutating keeps a
+        // failed re-park from losing the old (still-usable) entry.
+        if self.host_free_blocks() + self.parked_blocks() < blocks {
+            return Err(KvError::HostFull { need: blocks, free: self.host_free_blocks() });
+        }
+        if let Some(old) = self.parked.remove(&key) {
+            self.host_blocks_used -= old.blocks;
+        }
+        let fits = self.make_host_room(blocks);
+        debug_assert!(fits, "feasibility was checked above");
+        self.allocs.remove(&id);
+        self.device_blocks_used -= blocks;
+        self.host_blocks_used += blocks;
+        self.park_stamp += 1;
+        self.parked.insert(key, ParkedPrefix { blocks, tokens, stamp: self.park_stamp });
+        Ok(tokens)
+    }
+
+    /// Tokens parked under session `key`, if any (routing/admission
+    /// probe; does not touch LRU order).
+    pub fn parked_tokens(&self, key: u64) -> Option<usize> {
+        self.parked.get(&key).map(|p| p.tokens)
+    }
+
+    /// Claim (and release) the prefix parked under `key`: the session's
+    /// returning turn takes ownership, the host blocks are freed, and
+    /// the caller re-allocates the full context on device — charging a
+    /// host→device transfer for the claimed tokens instead of prefill
+    /// compute. Returns the claimed token count.
+    pub fn claim_parked(&mut self, key: u64) -> Option<usize> {
+        let p = self.parked.remove(&key)?;
+        self.host_blocks_used -= p.blocks;
+        Some(p.tokens)
+    }
+
+    /// Drop the prefix parked under `key` (session ended or expired)
+    /// without claiming it. Returns whether an entry existed.
+    pub fn drop_parked(&mut self, key: u64) -> bool {
+        match self.parked.remove(&key) {
+            Some(p) => {
+                self.host_blocks_used -= p.blocks;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Number of parked session prefixes.
+    pub fn parked_count(&self) -> usize {
+        self.parked.len()
+    }
+
+    /// Host blocks held by parked prefixes.
+    pub fn parked_blocks(&self) -> usize {
+        self.parked.values().map(|p| p.blocks).sum()
+    }
+
+    /// Lifetime count of parked prefixes evicted under host pressure.
+    pub fn park_evictions(&self) -> u64 {
+        self.park_evictions
     }
 
     /// Total tokens resident on device across all requests.
@@ -323,5 +460,125 @@ mod tests {
     fn capacity_rounds_down_to_blocks() {
         let m = KvCacheManager::new(100, 50, 16);
         assert_eq!(m.device_capacity_tokens(), 96);
+    }
+
+    #[test]
+    fn park_claim_roundtrip_conserves_blocks() {
+        let mut m = mgr();
+        m.allocate(1, 40).unwrap(); // 3 device blocks
+        assert_eq!(m.park(7, 1).unwrap(), 40);
+        // Device freed, host holds the parked prefix, allocation gone.
+        assert_eq!(m.device_free_blocks(), 10);
+        assert_eq!(m.host_free_blocks(), 2);
+        assert_eq!(m.num_allocations(), 0);
+        assert_eq!(m.parked_count(), 1);
+        assert_eq!(m.parked_tokens(7), Some(40));
+        assert_eq!(m.parked_tokens(8), None);
+        // Claim returns the tokens and both pools go back to zero use.
+        assert_eq!(m.claim_parked(7), Some(40));
+        assert_eq!(m.claim_parked(7), None, "claim is one-shot");
+        assert_eq!(m.host_free_blocks(), 5);
+        assert_eq!(m.parked_count(), 0);
+    }
+
+    #[test]
+    fn park_replaces_same_key_and_evicts_lru_under_pressure() {
+        // Host pool: 5 blocks. Park 3 sessions of 2 blocks each — the
+        // third park must evict the least-recently-parked entry.
+        let mut m = mgr();
+        m.allocate(1, 32).unwrap(); // 2 blocks
+        m.allocate(2, 32).unwrap();
+        m.allocate(3, 32).unwrap();
+        m.park(100, 1).unwrap();
+        m.park(200, 2).unwrap();
+        assert_eq!(m.host_free_blocks(), 1);
+        m.park(300, 3).unwrap(); // needs 2 > 1 free → evicts key 100
+        assert_eq!(m.park_evictions(), 1);
+        assert_eq!(m.parked_tokens(100), None, "LRU entry evicted");
+        assert_eq!(m.parked_tokens(200), Some(32));
+        assert_eq!(m.parked_tokens(300), Some(32));
+        // Re-parking a key replaces (not duplicates) its entry: the old
+        // 2 blocks free up, so the larger prefix fits without eviction.
+        m.allocate(4, 48).unwrap(); // 3 blocks
+        m.park(200, 4).unwrap();
+        assert_eq!(m.parked_tokens(200), Some(48));
+        assert_eq!(m.parked_tokens(300), Some(32));
+        assert_eq!(m.parked_count(), 2);
+        assert_eq!(m.park_evictions(), 1, "replacement is not an eviction");
+        assert_eq!(m.host_free_blocks(), 0);
+        // Cleanup: drop everything → both pools fully free.
+        assert!(m.drop_parked(200));
+        assert!(m.drop_parked(300));
+        assert!(!m.drop_parked(200));
+        assert_eq!(m.host_free_blocks(), 5);
+        assert_eq!(m.device_free_blocks(), 10);
+    }
+
+    #[test]
+    fn park_fails_oversized_leaving_allocation_intact() {
+        // Host pool (5 blocks) cannot hold a 6-block context even after
+        // evicting every parked prefix; the allocation must survive so
+        // the caller can fall back to a plain free.
+        let mut m = mgr();
+        m.allocate(1, 96).unwrap(); // 6 blocks
+        assert!(matches!(m.park(9, 1), Err(KvError::HostFull { .. })));
+        assert_eq!(m.device_tokens_of(1), 96);
+        assert_eq!(m.num_allocations(), 1);
+        assert_eq!(m.free(1).unwrap(), 96);
+    }
+
+    #[test]
+    fn failed_repark_keeps_the_previous_entry() {
+        // A same-key re-park that cannot fit must leave the old (still
+        // usable) parked prefix in place, not drop it on the way out.
+        let mut m = mgr();
+        m.allocate(1, 32).unwrap(); // 2 blocks
+        m.park(9, 1).unwrap();
+        m.allocate(2, 96).unwrap(); // 6 blocks — never fits in 5
+        assert!(matches!(m.park(9, 2), Err(KvError::HostFull { .. })));
+        assert_eq!(m.parked_tokens(9), Some(32), "old prefix must survive");
+        assert_eq!(m.park_evictions(), 0);
+        assert_eq!(m.device_tokens_of(2), 96);
+        // Cleanup drains both pools.
+        m.free(2).unwrap();
+        assert!(m.drop_parked(9));
+        assert_eq!(m.host_free_blocks(), 5);
+        assert_eq!(m.device_free_blocks(), 10);
+    }
+
+    #[test]
+    fn infeasible_swap_out_leaves_parked_prefixes_alone() {
+        // Host: 5 blocks = 4 swapped + 1 parked. A 2-block swap_out can
+        // never fit even after evicting the parked prefix, so it must
+        // fail *without* destroying the cache on the way.
+        let mut m = mgr();
+        m.allocate(1, 64).unwrap(); // 4 blocks
+        m.swap_out(1).unwrap();
+        m.allocate(2, 16).unwrap(); // 1 block
+        m.park(5, 2).unwrap();
+        assert_eq!(m.host_free_blocks(), 0);
+        m.allocate(3, 32).unwrap(); // 2 blocks
+        assert!(matches!(m.swap_out(3), Err(KvError::HostFull { .. })));
+        assert_eq!(m.parked_tokens(5), Some(16), "cache must survive a doomed swap");
+        assert_eq!(m.park_evictions(), 0);
+    }
+
+    #[test]
+    fn swap_out_evicts_parked_prefixes_first() {
+        // Host: 5 blocks. A 4-block parked prefix blocks a 2-block swap
+        // until the swap path evicts it (live state outranks cache).
+        let mut m = mgr();
+        m.allocate(1, 64).unwrap(); // 4 blocks
+        m.park(50, 1).unwrap();
+        assert_eq!(m.host_free_blocks(), 1);
+        m.allocate(2, 32).unwrap(); // 2 blocks
+        assert_eq!(m.swap_out(2).unwrap(), 32);
+        assert_eq!(m.park_evictions(), 1);
+        assert_eq!(m.parked_tokens(50), None);
+        assert_eq!(m.residence_of(2), Some(KvResidence::Host));
+        // Cleanup returns both pools to zero use.
+        m.free(2).unwrap();
+        assert_eq!(m.host_free_blocks(), 5);
+        assert_eq!(m.device_free_blocks(), 10);
     }
 }

@@ -3,6 +3,7 @@
 //! percentiles, throughput, normalized latency, preemption frequency).
 
 use crate::util::stats::{mean, pearson, percentile};
+use crate::workload::SessionInfo;
 
 use super::request::Request;
 
@@ -26,6 +27,11 @@ pub struct RequestRecord {
     pub finished_at: f64,
     /// Absolute delivery timestamps (the TDT, for Fig. 22).
     pub token_times: Vec<f64>,
+    /// Conversational-session membership (None = one-shot request).
+    pub session: Option<SessionInfo>,
+    /// Context tokens restored from a parked session prefix (0 = cold
+    /// prefill) — the per-request prefix-hit record (`ext-sessions`).
+    pub prefix_hit_tokens: usize,
 }
 
 impl RequestRecord {
@@ -44,6 +50,8 @@ impl RequestRecord {
             preemptions: r.preemptions,
             finished_at: r.finished_at.unwrap_or(f64::NAN),
             token_times: r.token_times.clone(),
+            session: r.session,
+            prefix_hit_tokens: r.prefix_hit_tokens,
         }
     }
 
@@ -74,6 +82,15 @@ pub struct Metrics {
     /// Preemptions initiated by the engine's OOM safety net (a running
     /// request could not grow), as opposed to scheduler decisions.
     pub oom_preemptions: u64,
+    /// Finished turns whose context was parked for the session's next
+    /// turn (KV prefix retention, DESIGN.md §10).
+    pub prefixes_parked: u64,
+    /// Returning turns admitted with a parked-prefix hit.
+    pub prefix_hits: u64,
+    /// Context tokens restored from parked prefixes (prefill skipped).
+    pub prefix_hit_tokens: u64,
+    /// Parked prefixes evicted under host-pool pressure.
+    pub park_evictions: u64,
     pub scheduler_time: f64,
     pub started_at: f64,
     pub ended_at: f64,
@@ -133,6 +150,22 @@ impl Metrics {
             return 0.0;
         }
         self.total_preemptions as f64 / self.requests.len() as f64
+    }
+
+    /// Fraction of served *returning* turns (session turn > 0) admitted
+    /// with a parked-prefix hit; NaN when the run had no returning
+    /// turns.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let returning = self
+            .requests
+            .iter()
+            .filter(|r| r.session.is_some_and(|s| s.is_returning()))
+            .count();
+        if returning == 0 {
+            return f64::NAN;
+        }
+        let hits = self.requests.iter().filter(|r| r.prefix_hit_tokens > 0).count();
+        hits as f64 / returning as f64
     }
 
     /// Pearson correlation between batch size and total context length

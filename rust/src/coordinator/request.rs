@@ -16,6 +16,7 @@
 
 use crate::qoe::metric::{qoe_at, qoe_finished, DigestState};
 use crate::qoe::spec::QoeSpec;
+use crate::workload::SessionInfo;
 
 pub type RequestId = usize;
 
@@ -53,6 +54,11 @@ pub struct Request {
     pub preemptions: usize,
     /// Iterations spent in the running batch (for RR quanta).
     pub service_iterations: u64,
+    /// Conversational-session membership (None = one-shot request).
+    pub session: Option<SessionInfo>,
+    /// Leading context tokens restored from a parked session prefix at
+    /// admission (0 = cold prefill). See DESIGN.md §10.
+    pub prefix_hit_tokens: usize,
 }
 
 impl Request {
@@ -75,6 +81,8 @@ impl Request {
             finished_at: None,
             preemptions: 0,
             service_iterations: 0,
+            session: None,
+            prefix_hit_tokens: 0,
         }
     }
 

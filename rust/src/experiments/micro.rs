@@ -102,6 +102,7 @@ pub fn e2e_real(ctx: &ExpCtx) -> Result<String> {
                 prompt_tokens: prompt.len(),
                 output_tokens: 32 + (i * 4) % 32,
                 qoe: QoeSpec::new(0.5, 4.8),
+                session: None,
             },
             prompt,
         )?;

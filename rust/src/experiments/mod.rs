@@ -14,6 +14,7 @@ pub mod motivation;
 pub mod robustness;
 pub mod runner;
 pub mod sensitivity;
+pub mod sessions;
 
 use std::path::PathBuf;
 
@@ -200,6 +201,12 @@ pub fn registry() -> Vec<Experiment> {
             paper_ref: "§6.1 (extension)",
             title: "Multi-gateway federation × per-tier admission weights",
             run: federation::ext_federation,
+        },
+        Experiment {
+            id: "ext-sessions",
+            paper_ref: "§2 (extension)",
+            title: "Multi-turn sessions: KV prefix retention × affinity routing",
+            run: sessions::ext_sessions,
         },
         Experiment {
             id: "e2e",

@@ -192,6 +192,7 @@ pub fn fig4(ctx: &ExpCtx) -> Result<String> {
                 prompt_tokens: p,
                 output_tokens: o,
                 qoe: QoeSpec::new(ttft, tds),
+                session: None,
             })
             .collect();
         engine.load_trace(trace);

@@ -1,0 +1,267 @@
+//! ext-sessions: multi-turn session serving with KV prefix retention
+//! and session-affinity routing (DESIGN.md §10).
+//!
+//! Sweeps {no-park, park, park+affinity} × {poisson, gamma-cv3} session
+//! openings on a 2-replica Andes cluster behind the gateway at mild
+//! overload (~1.3× aggregate capacity in turns). Reported per cell:
+//! served/rejected counts, **prefix-hit rate** over returning turns,
+//! parked/evicted prefix counts, **per-turn mean TTFT** (opening vs.
+//! returning), and mean QoE with rejects counted as zero.
+//!
+//! Shape checks assert the session story: no-park never hits (nothing
+//! is parked), park+affinity hits strictly more often than blind park
+//! (a hit requires landing on the replica that parked the prefix), and
+//! prefix retention + affinity does not lose mean QoE vs. no-park —
+//! returning turns skip most of their prefill, which is exactly the
+//! capacity the mild overload is short of.
+
+use anyhow::Result;
+
+use crate::cluster::{Cluster, RoutingPolicy};
+use crate::config::SchedulerConfig;
+use crate::coordinator::engine::EngineConfig;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::sched::andes::AndesConfig;
+use crate::gateway::{Gateway, GatewayConfig};
+use crate::model::gpu::a100_4x;
+use crate::model::latency::LatencyModel;
+use crate::model::llm::opt_66b;
+use crate::util::csv::Csv;
+use crate::util::stats::mean;
+use crate::workload::qoe_trace::QoeTrace;
+use crate::workload::{ArrivalProcess, Dataset, RequestSpec, SessionWorkload};
+
+use super::runner::estimate_capacity;
+use super::ExpCtx;
+
+struct Cell {
+    arrivals: &'static str,
+    mode: &'static str,
+    hit_rate: f64,
+    ttft_returning: f64,
+    mean_qoe: f64,
+}
+
+struct CellStats {
+    served: usize,
+    rejected: usize,
+    hits: u64,
+    returning_served: usize,
+    parked: u64,
+    evictions: u64,
+    ttft_opening: f64,
+    ttft_returning: f64,
+    qoe_served: f64,
+}
+
+fn aggregate(per_replica: &[Metrics], rejected: usize) -> CellStats {
+    let mut opening: Vec<f64> = Vec::new();
+    let mut returning: Vec<f64> = Vec::new();
+    let mut qoes: Vec<f64> = Vec::new();
+    let mut returning_served = 0usize;
+    let mut hits = 0u64;
+    let mut served = 0usize;
+    for m in per_replica {
+        for r in &m.requests {
+            served += 1;
+            qoes.push(r.final_qoe);
+            if r.ttft.is_finite() {
+                match r.session {
+                    Some(s) if s.is_returning() => returning.push(r.ttft),
+                    _ => opening.push(r.ttft),
+                }
+            }
+            if r.session.is_some_and(|s| s.is_returning()) {
+                returning_served += 1;
+                if r.prefix_hit_tokens > 0 {
+                    hits += 1;
+                }
+            }
+        }
+    }
+    CellStats {
+        served,
+        rejected,
+        hits,
+        returning_served,
+        parked: per_replica.iter().map(|m| m.prefixes_parked).sum(),
+        evictions: per_replica.iter().map(|m| m.park_evictions).sum(),
+        ttft_opening: mean(&opening),
+        ttft_returning: mean(&returning),
+        qoe_served: mean(&qoes),
+    }
+}
+
+pub fn ext_sessions(ctx: &ExpCtx) -> Result<String> {
+    let llm = opt_66b();
+    let gpu = a100_4x();
+    let latency = LatencyModel::for_deployment(&llm, &gpu);
+    let replicas = 2usize;
+    let capacity = estimate_capacity(&llm, &gpu, Dataset::ShareGpt) * replicas as f64;
+    // Session turns (≈3 per session) arrive at ~1.3× aggregate capacity
+    // in steady state: enough pressure that prefill savings matter,
+    // not so much that everything sheds.
+    let avg_turns = 3.0;
+    let session_rate = capacity * 1.3 / avg_turns;
+    let num_sessions = if ctx.quick { 60 } else { 150 };
+    let engine_base = EngineConfig {
+        kv_capacity_tokens: llm.kv_capacity_tokens(&gpu),
+        swap_capacity_tokens: llm.swap_capacity_tokens(&gpu),
+        ..EngineConfig::default()
+    };
+    let sched = SchedulerConfig::Andes(AndesConfig::default());
+
+    let arrival_variants: [(&'static str, fn(f64) -> ArrivalProcess); 2] = [
+        ("poisson", |rate| ArrivalProcess::Poisson { rate }),
+        ("gamma-cv3", |rate| ArrivalProcess::Gamma { rate, cv: 3.0 }),
+    ];
+    // (label, park, affinity)
+    let modes: [(&'static str, bool, bool); 3] = [
+        ("no-park", false, false),
+        ("park", true, false),
+        ("park+affinity", true, true),
+    ];
+
+    let mut csv = Csv::new(&[
+        "arrivals",
+        "mode",
+        "requests",
+        "served",
+        "rejected",
+        "prefix_hit_rate",
+        "prefixes_parked",
+        "park_evictions",
+        "mean_ttft_opening",
+        "mean_ttft_returning",
+        "mean_qoe_served",
+        "mean_qoe_incl_rejects",
+    ]);
+    let mut report = format!(
+        "ext-sessions — {replicas}-replica Andes cluster, ~1.3x capacity in turns \
+         ({:.2} sessions/s x ~{avg_turns} turns), {num_sessions} sessions\n",
+        session_rate
+    );
+    let mut cells: Vec<Cell> = Vec::new();
+
+    for &(alabel, mk_arrivals) in &arrival_variants {
+        let trace: Vec<RequestSpec> = SessionWorkload {
+            num_sessions,
+            arrivals: mk_arrivals(session_rate),
+            qoe_trace: QoeTrace::TextReading,
+            min_turns: 2,
+            max_turns: 4,
+            think_time_mean: 4.0,
+            seed: 42,
+        }
+        .generate();
+        let n = trace.len();
+
+        for &(mlabel, park, affinity) in &modes {
+            let mut ecfg = engine_base.clone();
+            ecfg.park_prefixes = park;
+            let mut cluster = Cluster::new(
+                replicas,
+                ecfg,
+                latency.clone(),
+                &sched,
+                RoutingPolicy::QoeAware,
+            );
+            cluster.set_session_affinity(affinity);
+            let mut gcfg = GatewayConfig::default();
+            gcfg.pacing_enabled = false;
+            gcfg.surge.baseline_rate = capacity;
+            let mut gw = Gateway::new(cluster, gcfg);
+            let res = gw.run_trace(trace.clone())?;
+            anyhow::ensure!(
+                res.served.len() + res.rejections.len() == n,
+                "{alabel}/{mlabel}: lost requests"
+            );
+            let s = aggregate(&res.per_replica, res.rejections.len());
+            let hit_rate = if s.returning_served == 0 {
+                0.0
+            } else {
+                s.hits as f64 / s.returning_served as f64
+            };
+            let mean_qoe = res.mean_qoe_incl_rejects();
+            csv.row(&[
+                alabel.to_string(),
+                mlabel.to_string(),
+                format!("{n}"),
+                format!("{}", s.served),
+                format!("{}", s.rejected),
+                format!("{hit_rate:.4}"),
+                format!("{}", s.parked),
+                format!("{}", s.evictions),
+                format!("{:.4}", s.ttft_opening),
+                format!("{:.4}", s.ttft_returning),
+                format!("{:.4}", s.qoe_served),
+                format!("{mean_qoe:.4}"),
+            ]);
+            report.push_str(&format!(
+                "  {alabel:<9} {mlabel:<13} served {:<4} rejected {:<3} hit-rate {:.3} \
+                 parked {:<4} ttft(open/return) {:.2}/{:.2}s QoE {:.3}\n",
+                s.served,
+                s.rejected,
+                hit_rate,
+                s.parked,
+                s.ttft_opening,
+                s.ttft_returning,
+                mean_qoe,
+            ));
+            cells.push(Cell {
+                arrivals: alabel,
+                mode: mlabel,
+                hit_rate,
+                ttft_returning: s.ttft_returning,
+                mean_qoe,
+            });
+        }
+    }
+    csv.write(&ctx.out_dir.join("ext_sessions.csv"))?;
+
+    // Shape checks per arrival process.
+    for &(alabel, _) in &arrival_variants {
+        let find = |mode: &str| {
+            cells
+                .iter()
+                .find(|c| c.arrivals == alabel && c.mode == mode)
+                .expect("cell missing")
+        };
+        let (noop, park, full) = (find("no-park"), find("park"), find("park+affinity"));
+        let c1 = noop.hit_rate == 0.0;
+        let c2 = full.hit_rate > 0.0;
+        let c3 = full.hit_rate >= park.hit_rate;
+        let c4 = full.mean_qoe >= noop.mean_qoe;
+        let c5 = full.ttft_returning <= noop.ttft_returning;
+        report.push_str(&format!(
+            "shape checks [{alabel}]:\n\
+             \x20 no-park never hits ({:.3}): {}\n\
+             \x20 park+affinity hits ({:.3} > 0): {}\n\
+             \x20 affinity hits at least as often as blind park ({:.3} vs {:.3}): {}\n\
+             \x20 park+affinity holds mean QoE ({:.3} vs {:.3}): {}\n\
+             \x20 returning-turn TTFT no worse ({:.2}s vs {:.2}s): {}\n",
+            noop.hit_rate,
+            verdict(c1),
+            full.hit_rate,
+            verdict(c2),
+            full.hit_rate,
+            park.hit_rate,
+            verdict(c3),
+            full.mean_qoe,
+            noop.mean_qoe,
+            verdict(c4),
+            full.ttft_returning,
+            noop.ttft_returning,
+            verdict(c5),
+        ));
+    }
+    Ok(report)
+}
+
+fn verdict(ok: bool) -> &'static str {
+    if ok {
+        "HOLDS"
+    } else {
+        "VIOLATED"
+    }
+}

@@ -52,6 +52,12 @@ use crate::workload::qoe_trace::QoeTrace;
 
 use super::surge::LoadMode;
 
+/// How much of the gap to perfect predicted QoE a *fully* parked prompt
+/// closes (the prefix-hit TTFT relief of
+/// [`AdmissionController::decide_with_prefix`]); partial prefixes scale
+/// linearly.
+const PREFIX_TTFT_RELIEF: f64 = 0.5;
+
 /// Snapshot of one serving replica, as the gateway sees it.
 #[derive(Debug, Clone, Copy)]
 pub struct ReplicaState {
@@ -294,6 +300,28 @@ impl AdmissionController {
         mode: LoadMode,
         queue_depth: usize,
     ) -> AdmissionDecision {
+        self.decide_with_prefix(prompt_tokens, 0, qoe, replicas, mode, queue_depth)
+    }
+
+    /// [`Self::decide`] for a request whose leading `prefix_tokens` are
+    /// parked on the serving tier (a returning session turn, DESIGN.md
+    /// §10): the prefix skips prefill, shortening expected TTFT, which
+    /// feeds into the predicted-QoE score as a relief proportional to
+    /// the skipped fraction of the prompt. The relief applies to the
+    /// per-request score only — the hysteresis latch stays driven by
+    /// the unweighted, prefix-blind score (it tracks system state, not
+    /// one request's cache luck) — so `prefix_tokens == 0` reproduces
+    /// [`Self::decide`] bit-identically and a larger prefix only ever
+    /// moves the decision toward admission.
+    pub fn decide_with_prefix(
+        &mut self,
+        prompt_tokens: usize,
+        prefix_tokens: usize,
+        qoe: &QoeSpec,
+        replicas: &[ReplicaState],
+        mode: LoadMode,
+        queue_depth: usize,
+    ) -> AdmissionDecision {
         if replicas.is_empty() {
             return AdmissionDecision::Reject(RejectReason::Saturated { kv_utilization: 1.0 });
         }
@@ -316,12 +344,21 @@ impl AdmissionController {
             self.shedding = true;
         }
 
+        // Prefix-hit TTFT relief: the parked fraction of the prompt
+        // skips prefill compute, closing part of the gap between the
+        // predicted and the perfect QoE (first-order model; the
+        // sustained-speed term is untouched).
+        let prefix_frac =
+            prefix_tokens.min(prompt_tokens) as f64 / prompt_tokens.max(1) as f64;
+        let relieved_pred =
+            (best_pred + (1.0 - best_pred) * PREFIX_TTFT_RELIEF * prefix_frac).clamp(0.0, 1.0);
+
         // Per-request shed test: tier-weighted score vs. the latched
         // floor. While the latch is on, the floor includes the
         // hysteresis band — with weight 1 that is exactly "latched ⇒
         // shed", because the latch releases at the same threshold.
         let weighted_pred =
-            (best_pred * self.cfg.tier_weights.weight_for(qoe)).clamp(0.0, 1.0);
+            (relieved_pred * self.cfg.tier_weights.weight_for(qoe)).clamp(0.0, 1.0);
         let floor = if self.shedding {
             (self.cfg.min_predicted_qoe + self.cfg.hysteresis).min(1.0)
         } else {
@@ -581,6 +618,52 @@ mod tests {
             c.decide(200, &economy, &r, LoadMode::Surge, 0),
             AdmissionDecision::Reject(RejectReason::SurgeShed { .. })
         ));
+    }
+
+    #[test]
+    fn prefix_relief_rescues_marginal_requests_only() {
+        // Share 1.2 tok/s vs expected 4.8 → predicted 0.25, below the
+        // 0.35 floor: a cold request sheds under surge. A parked prefix
+        // covering most of the prompt skips its prefill and relieves
+        // the score past the floor.
+        let r = [replica(200, 30_000, 1.2)];
+        let sp = spec();
+        let mut c = ctl();
+        assert!(matches!(
+            c.decide_with_prefix(800, 0, &sp, &r, LoadMode::Surge, 0),
+            AdmissionDecision::Reject(RejectReason::SurgeShed { .. })
+        ));
+        let mut c = ctl();
+        assert_eq!(
+            c.decide_with_prefix(800, 800, &sp, &r, LoadMode::Surge, 0),
+            AdmissionDecision::Admit,
+            "a fully parked prompt must ride out the marginal shed"
+        );
+        // A negligible prefix gives negligible relief: still shed.
+        let mut c = ctl();
+        assert!(matches!(
+            c.decide_with_prefix(800, 8, &sp, &r, LoadMode::Surge, 0),
+            AdmissionDecision::Reject(RejectReason::SurgeShed { .. }),
+            "a 1% prefix must not rescue a shed request"
+        ));
+    }
+
+    #[test]
+    fn prefix_relief_is_monotone() {
+        // A larger parked prefix never demotes an admit.
+        let r = [replica(200, 30_000, 1.2)];
+        let sp = spec();
+        let mut last_admitted = false;
+        for prefix in [0usize, 100, 200, 400, 600, 800] {
+            let mut c = ctl();
+            let admitted = c.decide_with_prefix(800, prefix, &sp, &r, LoadMode::Surge, 0)
+                == AdmissionDecision::Admit;
+            assert!(
+                admitted || !last_admitted,
+                "prefix {prefix} demoted an admit"
+            );
+            last_admitted = admitted;
+        }
     }
 
     #[test]

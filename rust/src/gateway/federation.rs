@@ -61,6 +61,7 @@
 //!         prompt_tokens: 100,
 //!         output_tokens: 20,
 //!         qoe: QoeSpec::new(1.0, 4.8),
+//!         session: None,
 //!     })
 //!     .collect();
 //! let res = gw.run_trace(trace).unwrap();

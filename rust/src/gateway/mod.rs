@@ -60,6 +60,7 @@
 //!     prompt_tokens: 120,
 //!     output_tokens: 30,
 //!     qoe: QoeSpec::new(1.0, 4.8),
+//!     session: None,
 //! }];
 //! let res = gw.run_trace(trace).unwrap();
 //! assert_eq!(res.served.len(), 1);
@@ -97,7 +98,7 @@ use crate::coordinator::metrics::{Metrics, RequestRecord};
 use crate::model::latency::LatencyModel;
 use crate::qoe::metric::{qoe_finished, DigestState};
 use crate::qoe::spec::QoeSpec;
-use crate::workload::RequestSpec;
+use crate::workload::{RequestSpec, SessionInfo};
 
 /// Gateway configuration.
 #[derive(Debug, Clone)]
@@ -220,6 +221,12 @@ pub trait GatewayTarget {
     fn routable_replicas(&self) -> usize {
         self.replica_states().len()
     }
+    /// Tokens parked for `session_id` on a routable replica (0 when
+    /// absent) — drives prefix-aware admission for returning session
+    /// turns (DESIGN.md §10).
+    fn parked_prefix_tokens(&self, _session_id: u64) -> usize {
+        0
+    }
     /// Commission one replica at time `t` (elastic clusters only);
     /// returns false when the target cannot scale.
     fn scale_out(&mut self, _t: f64) -> bool {
@@ -279,6 +286,10 @@ impl GatewayTarget for Engine<SimBackend, VirtualClock> {
         // One replica, commissioned at the virtual-time origin.
         t.max(0.0)
     }
+
+    fn parked_prefix_tokens(&self, session_id: u64) -> usize {
+        Engine::parked_prefix_tokens(self, session_id)
+    }
 }
 
 impl GatewayTarget for Cluster {
@@ -332,6 +343,20 @@ impl GatewayTarget for Cluster {
 
     fn replica_seconds(&self, t: f64) -> f64 {
         Cluster::replica_seconds(self, t)
+    }
+
+    fn parked_prefix_tokens(&self, session_id: u64) -> usize {
+        // Admission may only count a prefix the router will actually
+        // reach: with affinity on, the returning turn is pinned to the
+        // parking replica; without it, only a single routable replica
+        // guarantees the route, and scoring an unreachable prefix would
+        // admit marginal turns on a TTFT win that never materializes.
+        if !self.session_affinity() && self.routable_count() > 1 {
+            return 0;
+        }
+        self.parked_replica(session_id)
+            .map(|i| self.replicas()[i].parked_prefix_tokens(session_id))
+            .unwrap_or(0)
     }
 }
 
@@ -619,8 +644,10 @@ impl<T: GatewayTarget> Gateway<T> {
             return Ok(SubmitOutcome::Admitted);
         }
         let states = self.target.replica_states();
-        let decision = self.admission.decide(
+        let prefix = self.usable_prefix(spec.session);
+        let decision = self.admission.decide_with_prefix(
             spec.prompt_tokens,
+            prefix,
             &spec.qoe,
             &states,
             self.surge.mode(),
@@ -650,6 +677,14 @@ impl<T: GatewayTarget> Gateway<T> {
     /// weights the order is FIFO and this is the front's deadline.
     fn next_defer_deadline(&self) -> Option<f64> {
         earliest_deadline(&self.queue, self.cfg.admission.max_defer_wait)
+    }
+
+    /// Parked-prefix tokens usable by a request (0 for one-shot
+    /// requests, opening turns, and missing/evicted prefixes).
+    fn usable_prefix(&self, session: Option<SessionInfo>) -> usize {
+        session
+            .map(|s| s.usable_prefix(self.target.parked_prefix_tokens(s.session_id)))
+            .unwrap_or(0)
     }
 
     /// Next instant before `t` at which gateway state changes on its
@@ -791,14 +826,16 @@ impl<T: GatewayTarget> Gateway<T> {
     /// before expiring.
     fn flush_deferred(&mut self, t: f64) -> Result<()> {
         loop {
-            let (prompt, qoe) = match self.queue.front() {
-                Some(d) => (d.spec.prompt_tokens, d.spec.qoe),
+            let (prompt, qoe, session) = match self.queue.front() {
+                Some(d) => (d.spec.prompt_tokens, d.spec.qoe, d.spec.session),
                 None => return Ok(()),
             };
             let states = self.target.replica_states();
             let depth = self.queue.len().saturating_sub(1);
-            let decision =
-                self.admission.decide(prompt, &qoe, &states, self.surge.mode(), depth);
+            let prefix = self.usable_prefix(session);
+            let decision = self
+                .admission
+                .decide_with_prefix(prompt, prefix, &qoe, &states, self.surge.mode(), depth);
             if decision == AdmissionDecision::Admit {
                 let d = self.queue.pop_front().unwrap();
                 self.route(d.spec)?;
@@ -824,10 +861,16 @@ impl<T: GatewayTarget> Gateway<T> {
                 Some(i) => {
                     // A lower-priority request hit its deadline while
                     // the front blocks: its own final admission check.
-                    let (p2, q2) = (self.queue[i].spec.prompt_tokens, self.queue[i].spec.qoe);
+                    let (p2, q2, s2) = (
+                        self.queue[i].spec.prompt_tokens,
+                        self.queue[i].spec.qoe,
+                        self.queue[i].spec.session,
+                    );
                     let states = self.target.replica_states();
-                    let d2 = self.admission.decide(
+                    let prefix2 = self.usable_prefix(s2);
+                    let d2 = self.admission.decide_with_prefix(
                         p2,
+                        prefix2,
                         &q2,
                         &states,
                         self.surge.mode(),
@@ -1046,6 +1089,7 @@ mod tests {
             prompt_tokens: prompt,
             output_tokens: 40,
             qoe: QoeSpec::new(1.0, 4.8),
+            session: None,
         };
         assert_eq!(gw.submit(mk(0, 0.5, 1500)).unwrap(), SubmitOutcome::Admitted);
         assert_eq!(gw.submit(mk(1, 1.0, 1200)).unwrap(), SubmitOutcome::Deferred);
@@ -1077,6 +1121,7 @@ mod tests {
             prompt_tokens: prompt,
             output_tokens: 200,
             qoe: QoeSpec::new(1.0, 4.8),
+            session: None,
         };
         // Request 0 pins the KV for tens of seconds.
         assert_eq!(gw.submit(mk(0, 0.5, 1500)).unwrap(), SubmitOutcome::Admitted);
@@ -1117,6 +1162,7 @@ mod tests {
             prompt_tokens: prompt,
             output_tokens: output,
             qoe: QoeSpec::new(1.0, 4.8),
+            session: None,
         };
         // Request 0 fills the KV but finishes well before request 1's
         // deadline (t=6.0); the next arrival is far later.
@@ -1198,6 +1244,7 @@ mod tests {
             prompt_tokens: prompt,
             output_tokens: output,
             qoe: QoeSpec::new(1.0, 4.8),
+            session: None,
         };
         // Request 0 pins the primary; request 1 defers at t=1.0 and
         // times out at t=4.0, spilling onto an idle overflow replica.
@@ -1261,6 +1308,7 @@ mod tests {
                 prompt_tokens: 150,
                 output_tokens: 30,
                 qoe: QoeSpec::new(1.0, 4.8),
+                session: None,
             })
             .collect();
         for k in 0..4usize {
@@ -1270,6 +1318,7 @@ mod tests {
                 prompt_tokens: 100,
                 output_tokens: 20,
                 qoe: QoeSpec::new(1.0, 4.8),
+                session: None,
             });
         }
         let res = gw.run_trace(reqs).unwrap();
@@ -1348,6 +1397,7 @@ mod tests {
             prompt_tokens: 1200,
             output_tokens: 40,
             qoe,
+            session: None,
         };
         let pin = RequestSpec {
             id: 0,
@@ -1355,6 +1405,7 @@ mod tests {
             prompt_tokens: 1500,
             output_tokens: 60,
             qoe: QoeSpec::new(1.0, 4.8),
+            session: None,
         };
         assert_eq!(gw.submit(pin).unwrap(), SubmitOutcome::Admitted);
         let standard = QoeSpec::new(1.0, 4.8);
@@ -1382,6 +1433,53 @@ mod tests {
             "premium (first token {prem_first}) must be admitted before \
              standard (first token {std_first})"
         );
+    }
+
+    #[test]
+    fn session_cluster_through_gateway_hits_prefixes() {
+        // A session workload through the full gateway over a
+        // park+affinity cluster: returning turns find their parked
+        // prefixes, and request conservation still holds.
+        use crate::workload::SessionWorkload;
+        let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+        let ecfg = EngineConfig {
+            kv_capacity_tokens: 16_000,
+            swap_capacity_tokens: 32_000,
+            park_prefixes: true,
+            ..EngineConfig::default()
+        };
+        let mut cluster = Cluster::new(
+            2,
+            ecfg,
+            latency,
+            &SchedulerConfig::Fcfs,
+            RoutingPolicy::QoeAware,
+        );
+        cluster.set_session_affinity(true);
+        let mut cfg = GatewayConfig::default();
+        cfg.pacing_enabled = false;
+        let trace = SessionWorkload {
+            num_sessions: 20,
+            arrivals: ArrivalProcess::Poisson { rate: 0.5 },
+            qoe_trace: QoeTrace::TextReading,
+            min_turns: 2,
+            max_turns: 4,
+            think_time_mean: 3.0,
+            seed: 11,
+        }
+        .generate();
+        let n = trace.len();
+        let returning =
+            trace.iter().filter(|r| r.session.is_some_and(|s| s.is_returning())).count();
+        assert!(returning >= 20);
+        let mut gw = Gateway::new(cluster, cfg);
+        let res = gw.run_trace(trace).unwrap();
+        assert_eq!(res.served.len() + res.rejections.len(), n, "conservation");
+        let hits: u64 = res.per_replica.iter().map(|m| m.prefix_hits).sum();
+        let parked: u64 = res.per_replica.iter().map(|m| m.prefixes_parked).sum();
+        assert!(parked > 0, "turns expecting a return must park");
+        assert!(hits > 0, "lightly loaded returning turns must hit parked prefixes");
+        assert!(hits <= returning as u64);
     }
 
     #[test]

@@ -26,6 +26,11 @@
 //! let released = pace_times(&spec, &cfg, &[1.0; 5]);
 //! // Two lead tokens pass through; the rest are spaced 0.25 s apart.
 //! assert_eq!(released, vec![1.0, 1.0, 1.25, 1.5, 1.75]);
+//!
+//! // lead_tokens: 0 really means zero lead — every token is paced,
+//! // including the first (it releases at its own generation time).
+//! let none = PacingConfig { rate_factor: 1.0, lead_tokens: 0 };
+//! assert_eq!(pace_times(&spec, &none, &[1.0; 3]), vec![1.0, 1.25, 1.5]);
 //! ```
 
 use std::collections::VecDeque;
@@ -40,6 +45,8 @@ pub struct PacingConfig {
     /// while still reclaiming almost all of the overfast surplus.
     pub rate_factor: f64,
     /// Tokens let through unpaced to build the client-side lead buffer.
+    /// 0 disables the lead entirely: every token (including the first)
+    /// is released at the paced rate.
     pub lead_tokens: usize,
 }
 
@@ -68,7 +75,7 @@ impl TokenPacer {
         assert!(cfg.rate_factor > 0.0, "rate factor must be positive");
         TokenPacer {
             interval: 1.0 / (spec.tds * cfg.rate_factor),
-            lead: cfg.lead_tokens.max(1),
+            lead: cfg.lead_tokens,
             pending: VecDeque::new(),
             released: 0,
             last_release: f64::NEG_INFINITY,
@@ -144,7 +151,7 @@ impl TokenPacer {
 /// Times are request-relative and must be non-decreasing.
 pub fn pace_times(spec: &QoeSpec, cfg: &PacingConfig, times: &[f64]) -> Vec<f64> {
     let interval = 1.0 / (spec.tds * cfg.rate_factor);
-    let lead = cfg.lead_tokens.max(1);
+    let lead = cfg.lead_tokens;
     let mut out = Vec::with_capacity(times.len());
     let mut last = f64::NEG_INFINITY;
     for (i, &t) in times.iter().enumerate() {
@@ -217,6 +224,27 @@ mod tests {
             p.push(t);
             assert_eq!(p.release_due(t), 1, "token {i} should pass straight through");
         }
+    }
+
+    #[test]
+    fn zero_lead_means_no_unpaced_tokens() {
+        // Regression: `TokenPacer::new` used to promote `lead_tokens: 0`
+        // to 1, so the lead buffer could never actually be disabled.
+        // With zero lead, a burst drains strictly at the pacing rate —
+        // one token per interval, the first at its own generation time.
+        let c = PacingConfig { rate_factor: 1.0, lead_tokens: 0 };
+        let mut p = TokenPacer::new(&spec(), &c);
+        p.push_n(1.0, 4);
+        assert_eq!(p.release_due(1.0), 1, "first token paced, not passed through");
+        assert_eq!(p.release_due(1.24), 0);
+        assert_eq!(p.release_due(1.25), 1);
+        assert_eq!(p.release_due(2.0), 2);
+        assert_eq!(p.pending(), 0);
+        // The batch form agrees.
+        assert_eq!(
+            pace_times(&spec(), &c, &[1.0, 1.0, 1.0, 1.0]),
+            vec![1.0, 1.25, 1.5, 1.75]
+        );
     }
 
     #[test]

@@ -16,14 +16,14 @@
 //! | L0 | [`util`] | PRNG, JSON, CLI, CSV, plotting, benchmarking, property testing (offline: no external crates beyond the `xla` closure) |
 //! | L1 | [`model`] | LLM/GPU profiles and the calibrated latency model |
 //! | L1 | [`qoe`] | QoE spec (TTFT/TDS), the Eq. 1 metric with incremental digest state, client token buffer |
-//! | L1 | [`workload`] | datasets, arrival processes, QoE traces (incl. §6.1 price tiers), record/replay CSV |
+//! | L1 | [`workload`] | datasets, arrival processes, QoE traces (incl. §6.1 price tiers), multi-turn sessions, record/replay CSV |
 //! | L2 | [`backend`] | `ExecutionBackend` + `Clock`: calibrated simulator (virtual clock) and PJRT real model (wall clock) |
-//! | L3 | [`coordinator`] | continuous-batching engine, block KV manager, schedulers (FCFS / RR / Andes greedy / exact DP), metrics |
-//! | L4 | [`cluster`] | elastic replica pool + routing policies, replica-seconds accounting |
+//! | L3 | [`coordinator`] | continuous-batching engine, block KV manager with session prefix parking, schedulers (FCFS / RR / Andes greedy / exact DP), metrics |
+//! | L4 | [`cluster`] | elastic replica pool + routing policies (incl. session affinity), replica-seconds accounting |
 //! | L4 | [`gateway`] | the QoE-aware front door: admission (tier-weighted), pacing, surge detection, predictive autoscaling, spill tier, multi-gateway federation |
 //! | L5 | [`server`] | TCP streaming server (JSON lines) over the real tiny-OPT model |
 //! | L5 | [`experiments`] | one entry per paper figure/table plus the `ext-*` extensions |
-//! | — | [`config`] | JSON deployment config: model, GPU, scheduler, engine, gateway, autoscale, spill, federation, tiers |
+//! | — | [`config`] | JSON deployment config: model, GPU, scheduler, engine, gateway, autoscale, spill, federation, tiers, sessions |
 //! | — | [`runtime`] | PJRT loading and byte-level tokenizer for the compiled tiny-OPT model |
 //!
 //! # The serving path

@@ -12,7 +12,7 @@ use andes::experiments::{self, ExpCtx};
 use andes::model::gpu::{a100_4x, gpu_by_name};
 use andes::model::llm::{llm_by_name, opt_66b};
 use andes::util::cli::{usage, Args, CliError, OptSpec};
-use andes::workload::{ArrivalProcess, Dataset, QoeTrace, Workload};
+use andes::workload::{ArrivalProcess, Dataset, QoeTrace, SessionWorkload, Workload};
 
 fn main() {
     // Minimal stderr logger (no external logger crates offline).
@@ -119,7 +119,16 @@ fn cmd_serve(argv: &[String]) -> i32 {
         OptSpec::value("sched", Some("andes"), "fcfs | rr | andes"),
         OptSpec::value("config", None, "JSON deployment config (overrides model/gpu/sched/engine/gateway)"),
         OptSpec::flag("no-gateway", "disable gateway admission control and token pacing"),
-        OptSpec::value("lead", None, "pacer lead tokens (default from config: 4)"),
+        OptSpec::flag(
+            "park-prefixes",
+            "accept session KV retention config (advisory: the real backend \
+             has no prefix cache; see `simulate --park` / `exp ext-sessions`)",
+        ),
+        OptSpec::value(
+            "lead",
+            None,
+            "pacer lead tokens (default from config: 4; 0 disables the lead)",
+        ),
         OptSpec::value(
             "tier-weights",
             None,
@@ -160,6 +169,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
                 cfg.spill = d.spill;
                 cfg.kv_capacity_tokens = d.engine.kv_capacity_tokens;
                 cfg.max_output_tokens = d.engine.max_output_tokens;
+                cfg.park_prefixes = d.engine.park_prefixes;
             }
             Err(e) => {
                 eprintln!("error: {e:#}");
@@ -193,6 +203,9 @@ fn cmd_serve(argv: &[String]) -> i32 {
         cfg.gateway.admission_enabled = false;
         cfg.gateway.pacing_enabled = false;
     }
+    if args.has_flag("park-prefixes") {
+        cfg.park_prefixes = true;
+    }
     match args.get_usize("kv-tokens") {
         Ok(Some(kv)) => cfg.kv_capacity_tokens = kv.max(1),
         Ok(None) => {}
@@ -204,7 +217,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
         Err(e) => return die_on_cli("serve", about, &specs, e),
     }
     match args.get_usize("lead") {
-        Ok(Some(lead)) => cfg.gateway.pacing.lead_tokens = lead.max(1),
+        Ok(Some(lead)) => cfg.gateway.pacing.lead_tokens = lead,
         Ok(None) => {}
         Err(e) => return die_on_cli("serve", about, &specs, e),
     }
@@ -338,6 +351,19 @@ fn cmd_simulate(argv: &[String]) -> i32 {
             "per-tier admission weights premium:standard:economy (e.g. 2:1:0.5); \
              enables the gateway and the tiered QoE trace",
         ),
+        OptSpec::value(
+            "sessions",
+            None,
+            "multi-turn session workload: N sessions of 2-4 turns (enables the \
+             gateway; --rate becomes session openings/s and --n is ignored)",
+        ),
+        OptSpec::flag("park", "park finished turns' KV for the session's next turn"),
+        OptSpec::flag(
+            "affinity",
+            "route returning turns to the replica holding their parked prefix \
+             (requires --park)",
+        ),
+        OptSpec::value("think", Some("4.0"), "mean think time between session turns (s)"),
     ];
     let about = "One simulated serving run";
     let args = match Args::parse(argv, &specs) {
@@ -394,16 +420,43 @@ fn cmd_simulate(argv: &[String]) -> i32 {
         },
         None => None,
     };
+    let sessions = match args.get_usize("sessions") {
+        Ok(s) => s,
+        Err(e) => return die_on_cli("simulate", about, &specs, e),
+    };
+    let park = args.has_flag("park");
+    let affinity = args.has_flag("affinity");
+    if affinity && !park {
+        eprintln!("--affinity requires --park (nothing is parked to route back to)");
+        return 2;
+    }
+    let think = match args.get_f64("think") {
+        Ok(Some(t)) if t >= 0.0 => t,
+        Ok(_) => {
+            eprintln!("--think must be >= 0");
+            return 2;
+        }
+        Err(e) => return die_on_cli("simulate", about, &specs, e),
+    };
     let use_gateway = args.has_flag("gateway")
         || autoscale_arg.is_some()
         || spill_replicas > 0
         || replicas > 1
         || gateways > 1
-        || tier_weights.is_some();
+        || tier_weights.is_some()
+        || sessions.is_some()
+        || park;
     if gateways > 1 && (autoscale_arg.is_some() || spill_replicas > 0) {
         eprintln!(
             "--gateways > 1 fronts a static cluster; it cannot be combined with \
              --autoscale or --spill-replicas (those are single-gateway features)"
+        );
+        return 2;
+    }
+    if gateways > 1 && (sessions.is_some() || park) {
+        eprintln!(
+            "--gateways > 1 cannot be combined with --sessions/--park: prefix \
+             parking and affinity are single-gateway features"
         );
         return 2;
     }
@@ -414,7 +467,7 @@ fn cmd_simulate(argv: &[String]) -> i32 {
             eprintln!(
                 "--trace replays a recorded workload on a single static engine; \
                  it cannot be combined with --gateway/--replicas/--autoscale/\
-                 --spill-replicas/--gateways/--tier-weights"
+                 --spill-replicas/--gateways/--tier-weights/--sessions/--park"
             );
             return 2;
         }
@@ -479,6 +532,7 @@ fn cmd_simulate(argv: &[String]) -> i32 {
         let engine_cfg = EngineConfig {
             kv_capacity_tokens: llm.kv_capacity_tokens(&gpu),
             swap_capacity_tokens: llm.swap_capacity_tokens(&gpu),
+            park_prefixes: park,
             ..EngineConfig::default()
         };
         let per_replica = experiments::runner::estimate_capacity(&llm, &gpu, dataset);
@@ -523,28 +577,42 @@ fn cmd_simulate(argv: &[String]) -> i32 {
         if let Some(w) = tier_weights {
             gcfg.admission.tier_weights = w;
         }
-        let cluster = Cluster::new(
+        let mut cluster = Cluster::new(
             start_replicas,
             engine_cfg.clone(),
             latency.clone(),
             &sched_cfg,
             RoutingPolicy::QoeAware,
         );
-        let trace = Workload {
-            dataset,
-            arrivals: ArrivalProcess::Poisson {
-                rate: args.get_f64("rate").unwrap().unwrap(),
-            },
-            // Tier weights only bite on a tiered workload.
-            qoe_trace: if tier_weights.is_some() {
-                QoeTrace::Tiered
-            } else {
-                QoeTrace::TextReading
-            },
-            num_requests: args.get_usize("n").unwrap().unwrap(),
-            seed: args.get_u64("seed").unwrap().unwrap(),
-        }
-        .generate();
+        cluster.set_session_affinity(affinity);
+        // Tier weights only bite on a tiered workload.
+        let qoe_trace = if tier_weights.is_some() {
+            QoeTrace::Tiered
+        } else {
+            QoeTrace::TextReading
+        };
+        let rate = args.get_f64("rate").unwrap().unwrap();
+        let seed = args.get_u64("seed").unwrap().unwrap();
+        let trace = match sessions {
+            Some(num_sessions) => SessionWorkload {
+                num_sessions,
+                arrivals: ArrivalProcess::Poisson { rate },
+                qoe_trace,
+                min_turns: 2,
+                max_turns: 4,
+                think_time_mean: think,
+                seed,
+            }
+            .generate(),
+            None => Workload {
+                dataset,
+                arrivals: ArrivalProcess::Poisson { rate },
+                qoe_trace,
+                num_requests: args.get_usize("n").unwrap().unwrap(),
+                seed,
+            }
+            .generate(),
+        };
 
         // Federated front door: N gateway instances over the cluster.
         if gateways > 1 {
@@ -608,6 +676,17 @@ fn cmd_simulate(argv: &[String]) -> i32 {
                     res.stats.scale_out_requests,
                     res.stats.scale_ins,
                 );
+                if sessions.is_some() || park {
+                    let hits: u64 = res.per_replica.iter().map(|m| m.prefix_hits).sum();
+                    let parked: u64 =
+                        res.per_replica.iter().map(|m| m.prefixes_parked).sum();
+                    let evicted: u64 =
+                        res.per_replica.iter().map(|m| m.park_evictions).sum();
+                    println!(
+                        "sessions: prefixes_parked={parked} prefix_hits={hits} \
+                         park_evictions={evicted} affinity={affinity}"
+                    );
+                }
                 0
             }
             Err(e) => {

@@ -34,8 +34,12 @@ impl TokenBuffer {
     }
 
     /// Record a token arriving from the server at time `t`; returns its
-    /// scheduled display time.
+    /// scheduled display time. Delivery times must be non-decreasing
+    /// (tokens arrive in stream order) — `depth_at` relies on it.
     pub fn push(&mut self, t: f64) -> f64 {
+        if let Some(last) = self.timings.last() {
+            debug_assert!(t >= last.delivered_at, "tokens must be pushed in delivery order");
+        }
         // Display immediately if the pacing interval since the previous
         // token has already elapsed, else queue behind it.
         let display = t.max(self.last_display + self.interval);
@@ -45,8 +49,18 @@ impl TokenBuffer {
     }
 
     /// Number of tokens still undisplayed ("in the buffer") at time `t`.
+    ///
+    /// Both timing columns are non-decreasing in push order (delivery by
+    /// the `push` precondition, display by construction), so the depth
+    /// is the gap between two binary searches — O(log n) per query
+    /// instead of the full O(n) scan, which went quadratic when the
+    /// scheduler polled buffer depth per generated token.
     pub fn depth_at(&self, t: f64) -> usize {
-        self.timings.iter().filter(|tt| tt.delivered_at <= t && tt.displayed_at > t).count()
+        let delivered = self.timings.partition_point(|tt| tt.delivered_at <= t);
+        let displayed = self.timings.partition_point(|tt| tt.displayed_at <= t);
+        // displayed_at ≥ delivered_at per token, so `displayed` never
+        // exceeds `delivered`.
+        delivered - displayed
     }
 
     /// All token timings recorded so far.
@@ -110,6 +124,36 @@ mod tests {
         assert_eq!(b.depth_at(1.1), 3); // first displayed at 1.0
         assert_eq!(b.depth_at(1.6), 2);
         assert_eq!(b.depth_at(3.0), 0);
+    }
+
+    #[test]
+    fn depth_matches_linear_scan() {
+        // The binary-search depth must agree with the original O(n)
+        // definition at arbitrary query times, including boundaries.
+        let mut b = TokenBuffer::new(&QoeSpec::new(1.0, 4.0));
+        let mut rng = crate::util::rng::Rng::new(17);
+        let mut t = 0.0;
+        for _ in 0..500 {
+            t += rng.exponential(8.0); // bursty-ish deliveries
+            b.push(t);
+        }
+        let scan = |q: f64| {
+            b.timings()
+                .iter()
+                .filter(|tt| tt.delivered_at <= q && tt.displayed_at > q)
+                .count()
+        };
+        let mut q = 0.0;
+        for _ in 0..2000 {
+            q += rng.exponential(18.0);
+            assert_eq!(b.depth_at(q), scan(q), "depth diverged at t={q}");
+        }
+        // Exact boundary instants (delivery == query, display == query).
+        for tt in b.timings().iter().step_by(37) {
+            for q in [tt.delivered_at, tt.displayed_at] {
+                assert_eq!(b.depth_at(q), scan(q), "boundary t={q}");
+            }
+        }
     }
 
     #[test]

@@ -5,10 +5,17 @@
 //!
 //! ```text
 //! → {"prompt": "...", "max_tokens": 64, "ttft": 1.0, "tds": 4.8}
+//! → {"prompt": "...", "session": 7, "turn": 1}     (multi-turn client)
 //! ← {"event":"token","text":"...","index":0}           (streamed, paced)
 //! ← {"event":"done","tokens":42,"ttft":0.18,"qoe":1.0}
 //! ← {"event":"rejected","reason":"surge-shed","detail":"..."}
 //! ```
+//!
+//! Clients resuming a conversation send `session` (a stable numeric
+//! session key) and `turn` (0-based); the tags flow into the request
+//! records. KV prefix retention itself (DESIGN.md §10) is a
+//! simulation-tier feature — the PJRT backend has no prefix cache, so
+//! `--park-prefixes` is advisory here (see `engine_loop`).
 //!
 //! Architecture: one engine thread owns the PJRT model (the xla client
 //! is not Send) and runs the continuous-batching loop; connection
@@ -47,13 +54,16 @@ use crate::runtime::engine::ModelRuntime;
 use crate::runtime::tokenizer::ByteTokenizer;
 use crate::runtime::Sampling;
 use crate::util::json::Json;
-use crate::workload::RequestSpec;
+use crate::workload::{RequestSpec, SessionInfo};
 
 /// A request submitted by a connection thread.
 struct Submission {
     prompt: Vec<u32>,
     max_tokens: usize,
     qoe: QoeSpec,
+    /// Conversational-session membership from the client (None =
+    /// one-shot request).
+    session: Option<SessionInfo>,
     /// Channel for token events back to the connection.
     events: Sender<Event>,
 }
@@ -81,6 +91,12 @@ pub struct ServerConfig {
     /// fronts a single engine, so this is advisory (see `engine_loop`);
     /// the simulated cluster paths consume it for real.
     pub spill: SpillConfig,
+    /// Sessions section from the deployment config / `--park-prefixes`.
+    /// Advisory on the live server (see `engine_loop`): the PJRT
+    /// backend has no prefix cache, so prefix retention is a
+    /// simulation-tier feature; session/turn request tags are accepted
+    /// and recorded regardless.
+    pub park_prefixes: bool,
 }
 
 impl Default for ServerConfig {
@@ -94,6 +110,7 @@ impl Default for ServerConfig {
             scheduler: SchedulerConfig::Andes(Default::default()),
             gateway: GatewayConfig::default(),
             spill: SpillConfig::default(),
+            park_prefixes: false,
         }
     }
 }
@@ -121,6 +138,10 @@ fn engine_loop(cfg: ServerConfig, rx: Receiver<Submission>) -> Result<()> {
         kv_capacity_tokens: cfg.kv_capacity_tokens,
         swap_capacity_tokens: cfg.kv_capacity_tokens * 4,
         max_output_tokens: cfg.max_output_tokens,
+        // Parking is NOT enabled on the real engine (see below): the
+        // PJRT backend has no prefix cache, so parked KV would consume
+        // host-pool headroom and relieve admission scores without ever
+        // delivering the prefill saving.
         ..EngineConfig::default()
     };
     let latency = LatencyModel::for_deployment(&cfg.llm, &cfg.gpu);
@@ -151,11 +172,32 @@ fn engine_loop(cfg: ServerConfig, rx: Receiver<Submission>) -> Result<()> {
             cfg.spill.replicas
         );
     }
+    if cfg.park_prefixes {
+        // Session/turn tags are accepted and recorded either way; the
+        // prefix-aware admission path below stays inert until a real
+        // prefix cache exists (nothing is ever parked).
+        log::info!(
+            "park_prefixes requested — advisory only for the live server: the \
+             PJRT backend has no prefix cache, so retention is exercised by \
+             `andes simulate --park` and `andes exp ext-sessions`"
+        );
+    }
     let mut admission = AdmissionController::new(cfg.gateway.admission.clone());
     let mut surge = SurgeDetector::new(cfg.gateway.surge.clone());
     let mut streams: HashMap<RequestId, Stream> = HashMap::new();
     let mut deferred: VecDeque<(Submission, f64)> = VecDeque::new();
     let mut reported = 0usize; // finished requests already examined
+
+    // Parked-prefix tokens usable by a submission (0 for one-shot
+    // requests, opening turns, and missing/evicted prefixes).
+    fn usable_prefix(
+        engine: &Engine<PjrtBackend, WallClock>,
+        session: Option<SessionInfo>,
+    ) -> usize {
+        session
+            .map(|s| s.usable_prefix(engine.parked_prefix_tokens(s.session_id)))
+            .unwrap_or(0)
+    }
 
     // `arrival` is the request's original arrival time: admit time for
     // fresh submissions, enqueue time for deferred ones — so defer-queue
@@ -167,13 +209,14 @@ fn engine_loop(cfg: ServerConfig, rx: Receiver<Submission>) -> Result<()> {
         streams: &mut HashMap<RequestId, Stream>,
         cfg: &ServerConfig,
     ) {
-        let Submission { prompt, max_tokens, qoe, events } = sub;
+        let Submission { prompt, max_tokens, qoe, session, events } = sub;
         let spec = RequestSpec {
             id: 0, // engine assigns
             arrival,
             prompt_tokens: prompt.len(),
             output_tokens: max_tokens,
             qoe,
+            session,
         };
         match engine.submit_with_prompt(spec, prompt) {
             Ok(id) => {
@@ -229,8 +272,10 @@ fn engine_loop(cfg: ServerConfig, rx: Receiver<Submission>) -> Result<()> {
                 continue;
             }
             let state = [engine_state(&engine)];
-            match admission.decide(
+            let prefix = usable_prefix(&engine, sub.session);
+            match admission.decide_with_prefix(
                 sub.prompt.len(),
+                prefix,
                 &sub.qoe,
                 &state,
                 surge.mode(),
@@ -253,8 +298,10 @@ fn engine_loop(cfg: ServerConfig, rx: Receiver<Submission>) -> Result<()> {
                 continue;
             }
             let state = [engine_state(&engine)];
-            match admission.decide(
+            let prefix = usable_prefix(&engine, sub.session);
+            match admission.decide_with_prefix(
                 sub.prompt.len(),
+                prefix,
                 &sub.qoe,
                 &state,
                 surge.mode(),
@@ -352,12 +399,24 @@ fn handle_conn(stream: TcpStream, tx: Sender<Submission>) {
         let max_tokens = req.get("max_tokens").as_u64().unwrap_or(64) as usize;
         let ttft = req.get("ttft").as_f64().unwrap_or(1.0);
         let tds = req.get("tds").as_f64().unwrap_or(4.8);
+        let prompt = tokenizer.encode(&prompt_text);
+        // Multi-turn clients tag requests with a session key + turn
+        // index; the prompt carries the whole history, so the shareable
+        // prefix is bounded by the prompt itself (the engine further
+        // caps it at what is actually parked).
+        let session = req.get("session").as_u64().map(|sid| SessionInfo {
+            session_id: sid,
+            turn: req.get("turn").as_u64().unwrap_or(0) as usize,
+            turns_total: usize::MAX, // unknown: the client may always return
+            prefix_tokens: prompt.len(),
+        });
         let (etx, erx) = channel();
         if tx
             .send(Submission {
-                prompt: tokenizer.encode(&prompt_text),
+                prompt,
                 max_tokens,
                 qoe: QoeSpec::new(ttft.max(0.0), tds.max(0.1)),
+                session,
                 events: etx,
             })
             .is_err()

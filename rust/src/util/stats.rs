@@ -2,17 +2,20 @@
 //! harness: percentiles, running moments, histograms, Pearson correlation.
 
 /// Percentile of a sample by linear interpolation (like numpy's default).
-/// `p` in [0, 100]. Returns NaN on an empty slice.
+/// `p` in [0, 100]. Returns NaN on an empty slice (a per-tier report row
+/// with zero requests is a legitimate input, not a panic); NaN samples
+/// are sorted to the end (`total_cmp`) rather than poisoning the sort.
 pub fn percentile(samples: &[f64], p: f64) -> f64 {
     if samples.is_empty() {
         return f64::NAN;
     }
     let mut xs: Vec<f64> = samples.to_vec();
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.sort_by(f64::total_cmp);
     percentile_sorted(&xs, p)
 }
 
-/// Percentile of an already-sorted sample.
+/// Percentile of an already-sorted sample. Returns NaN on an empty
+/// slice, the sole element on a singleton.
 pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
         return f64::NAN;
@@ -193,8 +196,23 @@ mod tests {
 
     #[test]
     fn percentile_edge_cases() {
+        // Empty and singleton inputs (a per-tier CSV row with zero or
+        // one request) must not panic.
         assert!(percentile(&[], 50.0).is_nan());
+        assert!(percentile_sorted(&[], 10.0).is_nan());
         assert_eq!(percentile(&[7.0], 99.0), 7.0);
+        assert_eq!(percentile_sorted(&[7.0], 0.0), 7.0);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        // A NaN sample (e.g. an unfinished request's TTFT) used to
+        // panic the `partial_cmp().unwrap()` sort; total_cmp orders it
+        // after every finite value instead.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!(percentile(&xs, 100.0).is_nan());
     }
 
     #[test]

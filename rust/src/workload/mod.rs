@@ -1,13 +1,16 @@
 //! Workload generation: datasets (lengths), arrival processes, and QoE
 //! requirement traces, combined into full request traces for the engine.
+//! Multi-turn conversational sessions live in [`session`].
 
 pub mod arrivals;
 pub mod dataset;
 pub mod qoe_trace;
+pub mod session;
 
 pub use arrivals::ArrivalProcess;
 pub use dataset::{Dataset, LengthSample};
 pub use qoe_trace::QoeTrace;
+pub use session::{SessionInfo, SessionWorkload};
 
 use crate::qoe::spec::QoeSpec;
 use crate::util::rng::Rng;
@@ -45,6 +48,7 @@ pub fn parse_trace_csv(text: &str) -> anyhow::Result<Vec<RequestSpec>> {
             prompt_tokens: parse_f(2)? as usize,
             output_tokens: parse_f(3)? as usize,
             qoe: QoeSpec::new(parse_f(4)?, parse_f(5)?),
+            session: None,
         });
     }
     out.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
@@ -65,6 +69,9 @@ pub struct RequestSpec {
     /// output length).
     pub output_tokens: usize,
     pub qoe: QoeSpec,
+    /// Conversational-session membership (DESIGN.md §10); `None` for
+    /// one-shot requests, which behave exactly as before.
+    pub session: Option<SessionInfo>,
 }
 
 /// A complete workload description.
@@ -96,6 +103,7 @@ impl Workload {
                     prompt_tokens: len.prompt_tokens,
                     output_tokens: len.output_tokens,
                     qoe: self.qoe_trace.sample(&mut qoe_rng),
+                    session: None,
                 }
             })
             .collect()

@@ -1,0 +1,258 @@
+//! Multi-turn conversational sessions (DESIGN.md §10).
+//!
+//! The Multi-Round ShareGPT dataset already *shapes* prompts as
+//! concatenated conversation rounds, but every request still enters the
+//! system as an isolated one-shot. This module generates explicit
+//! `Session`s of `Turn`s: a user opens a session, sends a prompt, reads
+//! the response, thinks, and sends the next prompt whose context is the
+//! whole history so far (the **growing shared prefix**). The serving
+//! side exploits that structure via KV prefix parking
+//! ([`crate::coordinator::kv::KvCacheManager::park`]) and
+//! session-affinity routing ([`crate::cluster::Cluster`]).
+//!
+//! Turn timing is open-loop but user-shaped: turn *k+1* arrives at
+//! `arrival_k + expected_ttft + output_k / tds + think gap`, i.e. after
+//! the user is expected to have read the previous response plus an
+//! exponential think time. Under overload the previous turn may still
+//! be running (or parked KV may have been evicted) when the next turn
+//! arrives — the serving side must degrade gracefully to a cold
+//! prefill, never depend on a hit.
+//!
+//! ```
+//! use andes::workload::{ArrivalProcess, QoeTrace, SessionWorkload};
+//!
+//! let trace = SessionWorkload {
+//!     num_sessions: 10,
+//!     arrivals: ArrivalProcess::Poisson { rate: 0.5 },
+//!     qoe_trace: QoeTrace::TextReading,
+//!     min_turns: 2,
+//!     max_turns: 4,
+//!     think_time_mean: 5.0,
+//!     seed: 7,
+//! }
+//! .generate();
+//! assert!(trace.len() >= 20);
+//! // Returning turns carry their shared prefix with the previous turn.
+//! let returning = trace.iter().find(|r| r.session.unwrap().turn > 0).unwrap();
+//! assert!(returning.session.unwrap().prefix_tokens > 0);
+//! ```
+
+use crate::qoe::spec::QoeSpec;
+use crate::util::rng::Rng;
+
+use super::dataset::MAX_CONTEXT;
+use super::{ArrivalProcess, QoeTrace, RequestSpec};
+
+/// A request's membership in a conversational session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionInfo {
+    /// Stable session key (the KV park / affinity key).
+    pub session_id: u64,
+    /// 0-based turn index within the session.
+    pub turn: usize,
+    /// Total turns the session will make; `usize::MAX` when unknown
+    /// (live serving), in which case every turn may be followed by
+    /// another and parking stays worthwhile.
+    pub turns_total: usize,
+    /// Leading prompt tokens shared with the previous turn's full
+    /// context (its prompt + response) — the parkable prefix. 0 on the
+    /// opening turn.
+    pub prefix_tokens: usize,
+}
+
+impl SessionInfo {
+    /// Whether this is a returning (non-opening) turn.
+    pub fn is_returning(&self) -> bool {
+        self.turn > 0
+    }
+
+    /// Whether another turn is expected after this one (parking pays
+    /// off only then).
+    pub fn expects_return(&self) -> bool {
+        self.turn + 1 < self.turns_total
+    }
+
+    /// Portion of `parked_tokens` this turn can actually reuse: capped
+    /// at the declared shared prefix; opening turns reuse nothing. The
+    /// single definition keeps the simulated gateway, the live server,
+    /// and the engine's claim agreeing on what a prefix is worth.
+    pub fn usable_prefix(&self, parked_tokens: usize) -> usize {
+        if self.is_returning() {
+            parked_tokens.min(self.prefix_tokens)
+        } else {
+            0
+        }
+    }
+}
+
+/// Generator for multi-turn conversational workloads.
+#[derive(Debug, Clone)]
+pub struct SessionWorkload {
+    pub num_sessions: usize,
+    /// Arrival process of session *openings* (turn 0 of each session).
+    pub arrivals: ArrivalProcess,
+    /// One QoE spec per session (the same user reads every turn).
+    pub qoe_trace: QoeTrace,
+    /// Turns per session, drawn uniformly from `min_turns..=max_turns`.
+    pub min_turns: usize,
+    pub max_turns: usize,
+    /// Mean think time between reading a response and sending the next
+    /// prompt (exponential), seconds.
+    pub think_time_mean: f64,
+    pub seed: u64,
+}
+
+impl SessionWorkload {
+    /// Generate the full trace: every turn of every session, merged and
+    /// sorted by arrival, with dense ids in arrival order (the same
+    /// contract as [`super::Workload::generate`]).
+    pub fn generate(&self) -> Vec<RequestSpec> {
+        assert!(self.min_turns >= 1 && self.min_turns <= self.max_turns);
+        let mut rng = Rng::new(self.seed);
+        let mut arr_rng = rng.fork();
+        let mut len_rng = rng.fork();
+        let mut qoe_rng = rng.fork();
+        let mut think_rng = rng.fork();
+        let starts = self.arrivals.generate(&mut arr_rng, self.num_sessions);
+        let mut out: Vec<RequestSpec> = Vec::new();
+        for (sid, start) in starts.into_iter().enumerate() {
+            let qoe = self.qoe_trace.sample(&mut qoe_rng);
+            let turns = len_rng.range(self.min_turns, self.max_turns);
+            let mut arrival = start;
+            // Full context of the previous turn (prompt + response) —
+            // the prefix the next turn shares.
+            let mut prefix = 0usize;
+            for turn in 0..turns {
+                let (new_prompt, output) = sample_turn_lengths(&mut len_rng);
+                // The whole history rides along as the prompt; cap to
+                // the model context, trimming the *oldest* history first
+                // (a sliding window), so prefix + new + output fits.
+                let budget = MAX_CONTEXT.saturating_sub(new_prompt + output);
+                let kept_prefix = prefix.min(budget);
+                let spec = RequestSpec {
+                    id: 0, // assigned after the global sort
+                    arrival,
+                    prompt_tokens: kept_prefix + new_prompt,
+                    output_tokens: output,
+                    qoe,
+                    session: Some(SessionInfo {
+                        session_id: sid as u64,
+                        turn,
+                        turns_total: turns,
+                        prefix_tokens: kept_prefix,
+                    }),
+                };
+                prefix = spec.prompt_tokens + output;
+                // Reading + thinking before the next turn.
+                arrival += qoe.ttft
+                    + output as f64 / qoe.tds
+                    + think_rng.exponential(1.0 / self.think_time_mean.max(1e-9));
+                out.push(spec);
+            }
+        }
+        out.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        for (id, spec) in out.iter_mut().enumerate() {
+            spec.id = id;
+        }
+        out
+    }
+}
+
+/// One turn's fresh user prompt and response lengths (ShareGPT-shaped
+/// lognormals, the per-round marginals behind Multi-Round ShareGPT).
+fn sample_turn_lengths(rng: &mut Rng) -> (usize, usize) {
+    let prompt = (rng.lognormal(4.8, 1.0).round() as usize).clamp(4, MAX_CONTEXT / 4);
+    let output = (rng.lognormal(5.2, 0.85).round() as usize).clamp(4, MAX_CONTEXT / 4);
+    (prompt, output)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn wl(seed: u64) -> SessionWorkload {
+        SessionWorkload {
+            num_sessions: 50,
+            arrivals: ArrivalProcess::Poisson { rate: 1.0 },
+            qoe_trace: QoeTrace::TextReading,
+            min_turns: 2,
+            max_turns: 5,
+            think_time_mean: 4.0,
+            seed,
+        }
+    }
+
+    #[test]
+    fn turns_ordered_with_growing_prefix() {
+        let trace = wl(1).generate();
+        assert!(trace.windows(2).all(|w| w[1].arrival >= w[0].arrival));
+        assert!(trace.iter().enumerate().all(|(i, r)| r.id == i));
+        // Group by session and check per-session structure.
+        let mut by_session: HashMap<u64, Vec<&RequestSpec>> = HashMap::new();
+        for r in &trace {
+            by_session.entry(r.session.unwrap().session_id).or_default().push(r);
+        }
+        assert_eq!(by_session.len(), 50);
+        for turns in by_session.values() {
+            let mut turns = turns.clone();
+            turns.sort_by_key(|r| r.session.unwrap().turn);
+            let total = turns[0].session.unwrap().turns_total;
+            assert!((2..=5).contains(&total));
+            assert_eq!(turns.len(), total);
+            for (k, r) in turns.iter().enumerate() {
+                let s = r.session.unwrap();
+                assert_eq!(s.turn, k);
+                assert_eq!(s.turns_total, total);
+                assert!(s.prefix_tokens <= r.prompt_tokens);
+                assert!(r.prompt_tokens + r.output_tokens <= MAX_CONTEXT);
+                if k == 0 {
+                    assert_eq!(s.prefix_tokens, 0);
+                    assert!(!s.is_returning());
+                } else {
+                    assert!(s.is_returning());
+                    // The prefix is the previous turn's full context,
+                    // possibly trimmed by the sliding window.
+                    let prev = &turns[k - 1];
+                    assert!(
+                        s.prefix_tokens
+                            <= prev.prompt_tokens + prev.output_tokens,
+                        "prefix larger than the history it claims to share"
+                    );
+                    assert!(s.prefix_tokens > 0, "returning turn must share history");
+                    // Turns arrive strictly after the previous one.
+                    assert!(r.arrival > prev.arrival);
+                }
+                assert_eq!(s.expects_return(), k + 1 < total);
+            }
+            // The same user: one QoE spec across the session.
+            assert!(turns.iter().all(|r| r.qoe == turns[0].qoe));
+        }
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        assert_eq!(wl(3).generate(), wl(3).generate());
+        assert_ne!(wl(3).generate(), wl(4).generate());
+    }
+
+    #[test]
+    fn think_time_spaces_turns() {
+        let trace = wl(5).generate();
+        for r in &trace {
+            let s = r.session.unwrap();
+            if s.turn == 0 {
+                continue;
+            }
+            // Each returning turn waited at least the reading time of
+            // *some* response; spot-check a loose lower bound > 0.
+            assert!(r.arrival > 0.0);
+        }
+        // Sessions overlap: the trace is not one session at a time.
+        let first = trace.iter().position(|r| r.session.unwrap().turn > 0).unwrap();
+        assert!(
+            trace[first + 1..].iter().any(|r| r.session.unwrap().turn == 0),
+            "session openings must interleave with returning turns"
+        );
+    }
+}

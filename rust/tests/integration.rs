@@ -154,6 +154,11 @@ fn preemption_cap_zero_means_no_scheduler_preemptions() {
 
 #[test]
 fn kv_manager_invariants_under_random_ops() {
+    // Random alloc/extend/swap/free plus the prefix-park lifecycle
+    // (park → claim/drop, with LRU eviction under host pressure): the
+    // pool invariants must hold after every op, and releasing every
+    // allocation and parked prefix must return both pools to zero.
+    const PARK_KEYS: u64 = 6;
     check_prop("kv invariants", 200, |rng| {
         let block = 1 << rng.range(2, 5); // 4..16
         let device = block * rng.range(4, 40);
@@ -161,7 +166,7 @@ fn kv_manager_invariants_under_random_ops() {
         let mut kv = KvCacheManager::new(device, host, block);
         let mut live: Vec<usize> = Vec::new();
         let mut next_id = 0usize;
-        let ops = gen_vec(rng, 120, |r| r.below(5));
+        let ops = gen_vec(rng, 120, |r| r.below(8));
         for op in ops {
             match op {
                 0 => {
@@ -189,6 +194,23 @@ fn kv_manager_invariants_under_random_ops() {
                         let _ = kv.swap_in(id);
                     }
                 }
+                4 => {
+                    // Park a live allocation under a random session key;
+                    // on success the allocation is consumed.
+                    if !live.is_empty() {
+                        let idx = rng.range(0, live.len() - 1);
+                        let id = live[idx];
+                        if kv.park(rng.below(PARK_KEYS), id).is_ok() {
+                            live.swap_remove(idx);
+                        }
+                    }
+                }
+                5 => {
+                    let _ = kv.claim_parked(rng.below(PARK_KEYS));
+                }
+                6 => {
+                    let _ = kv.drop_parked(rng.below(PARK_KEYS));
+                }
                 _ => {
                     if !live.is_empty() {
                         let idx = rng.range(0, live.len() - 1);
@@ -201,13 +223,24 @@ fn kv_manager_invariants_under_random_ops() {
             assert!(kv.device_free_blocks() <= device / block);
             assert!(kv.host_free_blocks() <= host / block);
             assert!(kv.device_utilization() <= 1.0 + 1e-12);
+            assert!(
+                kv.parked_blocks() <= host / block - kv.host_free_blocks(),
+                "parked blocks must be accounted inside host usage"
+            );
+            assert!(kv.parked_count() as u64 <= PARK_KEYS);
         }
+        // Release everything: allocations, then parked prefixes.
         for id in live {
             kv.free(id).unwrap();
         }
+        for key in 0..PARK_KEYS {
+            kv.drop_parked(key);
+        }
         assert_eq!(kv.num_allocations(), 0);
+        assert_eq!(kv.parked_count(), 0);
+        assert_eq!(kv.parked_blocks(), 0);
         assert_eq!(kv.device_free_tokens(), (device / block) * block);
-        assert_eq!(kv.host_free_blocks(), host / block);
+        assert_eq!(kv.host_free_blocks(), host / block, "host pool must drain to zero");
     });
 }
 
@@ -327,32 +360,39 @@ fn gateway_full_stack_conserves_requests() {
 
 #[test]
 fn gateway_conserves_requests_across_random_traces() {
-    // Property: for random traces, loads, and gateway shapes — plain,
-    // autoscaling, spilling, or both — every arrival is accounted for
+    // Property: for random traces (one-shot or multi-turn sessions),
+    // loads, and gateway shapes — plain, autoscaling, spilling, prefix
+    // parking, session affinity — every arrival is accounted for
     // exactly once: admitted+spilled+rejected == arrivals at the stats
     // layer, and served+spilled+rejections == arrivals at the result
     // layer.
     use andes::cluster::{Cluster, RoutingPolicy};
     use andes::config::SchedulerConfig;
     use andes::gateway::{AutoscaleConfig, Gateway, GatewayConfig, SpillConfig};
+    use andes::workload::SessionWorkload;
 
     let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
     check_prop("gateway request conservation", 10, |rng| {
         let n = rng.range(10, 45);
         let rate = 0.5 + rng.f64() * 9.5;
         let cv = if rng.chance(0.5) { 1.0 } else { 3.0 };
+        let sessions = rng.chance(0.5);
+        let park = sessions && rng.chance(0.7);
+        let affinity = park && rng.chance(0.5);
         let ecfg = EngineConfig {
             kv_capacity_tokens: rng.range(2500, 9000),
             swap_capacity_tokens: 18_000,
+            park_prefixes: park,
             ..EngineConfig::default()
         };
-        let cluster = Cluster::new(
+        let mut cluster = Cluster::new(
             rng.range(1, 3),
             ecfg.clone(),
             latency.clone(),
             &SchedulerConfig::Fcfs,
             RoutingPolicy::QoeAware,
         );
+        cluster.set_session_affinity(affinity);
         let mut gcfg = GatewayConfig::default();
         gcfg.pacing_enabled = rng.chance(0.5);
         gcfg.surge.baseline_rate = 0.5 + rng.f64() * 3.0;
@@ -370,18 +410,33 @@ fn gateway_conserves_requests_across_random_traces() {
                 eval_interval_secs: 0.5,
             };
         }
-        let trace = Workload {
-            dataset: Dataset::ShareGpt,
-            arrivals: if cv == 1.0 {
-                ArrivalProcess::Poisson { rate }
-            } else {
-                ArrivalProcess::Gamma { rate, cv }
-            },
-            qoe_trace: QoeTrace::TextReading,
-            num_requests: n,
-            seed: rng.next_u64(),
-        }
-        .generate();
+        let arrivals = if cv == 1.0 {
+            ArrivalProcess::Poisson { rate }
+        } else {
+            ArrivalProcess::Gamma { rate, cv }
+        };
+        let trace = if sessions {
+            SessionWorkload {
+                num_sessions: n.div_ceil(3),
+                arrivals,
+                qoe_trace: QoeTrace::TextReading,
+                min_turns: 2,
+                max_turns: 4,
+                think_time_mean: rng.f64() * 6.0,
+                seed: rng.next_u64(),
+            }
+            .generate()
+        } else {
+            Workload {
+                dataset: Dataset::ShareGpt,
+                arrivals,
+                qoe_trace: QoeTrace::TextReading,
+                num_requests: n,
+                seed: rng.next_u64(),
+            }
+            .generate()
+        };
+        let n = trace.len();
         let mut gw = if rng.chance(0.5) {
             let spill = SpillConfig { enabled: true, replicas: 1, kv_fraction: 0.5 }
                 .build_cluster(&ecfg, &latency, &SchedulerConfig::Fcfs);
@@ -412,6 +467,74 @@ fn gateway_conserves_requests_across_random_traces() {
         assert_eq!(res.stats.rejected, res.rejections.len());
         assert!(res.replica_seconds >= 0.0);
     });
+}
+
+#[test]
+fn sessions_disabled_reproduce_one_shot_serving_bit_identically() {
+    // Flag-off parity: with parking and affinity off, session metadata
+    // must be inert — a session-annotated trace through the full
+    // gateway+cluster stack produces bit-identical results to the same
+    // trace with the annotations stripped.
+    use andes::cluster::{Cluster, RoutingPolicy};
+    use andes::config::SchedulerConfig;
+    use andes::gateway::{Gateway, GatewayConfig};
+    use andes::workload::SessionWorkload;
+
+    let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+    let trace = SessionWorkload {
+        num_sessions: 30,
+        arrivals: ArrivalProcess::Poisson { rate: 1.5 },
+        qoe_trace: QoeTrace::TextReading,
+        min_turns: 2,
+        max_turns: 4,
+        think_time_mean: 3.0,
+        seed: 99,
+    }
+    .generate();
+    let run = |trace: Vec<andes::workload::RequestSpec>| {
+        let ecfg = EngineConfig {
+            kv_capacity_tokens: 6000,
+            swap_capacity_tokens: 12_000,
+            ..EngineConfig::default() // park_prefixes: false
+        };
+        let cluster = Cluster::new(
+            2,
+            ecfg,
+            latency.clone(),
+            &SchedulerConfig::Fcfs,
+            RoutingPolicy::QoeAware,
+        );
+        let mut gcfg = GatewayConfig::default();
+        gcfg.surge.baseline_rate = 2.0;
+        let mut gw = Gateway::new(cluster, gcfg);
+        gw.run_trace(trace).unwrap()
+    };
+    let with = run(trace.clone());
+    let stripped = trace
+        .into_iter()
+        .map(|mut s| {
+            s.session = None;
+            s
+        })
+        .collect();
+    let without = run(stripped);
+    assert_eq!(with.served.len(), without.served.len());
+    assert_eq!(with.rejections.len(), without.rejections.len());
+    for (a, b) in with.served.iter().zip(&without.served) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.raw_qoe, b.raw_qoe, "request {} diverged", a.id);
+        assert_eq!(a.paced_qoe, b.paced_qoe);
+        assert_eq!(a.output_tokens, b.output_tokens);
+    }
+    for (a, b) in with.rejections.iter().zip(&without.rejections) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.time, b.time);
+    }
+    assert_eq!(
+        with.per_replica.iter().map(|m| m.prefix_hits).sum::<u64>(),
+        0,
+        "nothing may hit with parking disabled"
+    );
 }
 
 #[test]
