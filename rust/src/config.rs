@@ -57,6 +57,14 @@
 //!   "sessions": {
 //!     "park": true,
 //!     "affinity": true
+//!   },
+//!   "network": {
+//!     "enabled": true,
+//!     "mix": {"fiber": 0.6, "wifi": 0.3, "lte": 0.1},
+//!     "adaptive_lead": true,
+//!     "jitter_headroom": 4.0,
+//!     "max_lead": 64,
+//!     "seed": 7
 //!   }
 //! }
 //! ```
@@ -435,6 +443,56 @@ impl AndesDeployment {
             d.engine.park_prefixes = d.sessions.park;
         }
 
+        let net = j.get("network");
+        if !net.is_null() {
+            let n = &mut d.gateway.network;
+            if let Some(b) = net.get("enabled").as_bool() {
+                n.enabled = b;
+            }
+            let mix = net.get("mix");
+            if let Some(m) = mix.as_obj() {
+                let mut parsed = Vec::new();
+                for (name, w) in m {
+                    let profile = crate::delivery::NetworkProfile::by_name(name)
+                        .with_context(|| {
+                            format!(
+                                "unknown network profile '{name}' \
+                                 (ideal|fiber|wifi|lte)"
+                            )
+                        })?;
+                    let w = w.as_f64().unwrap_or(f64::NAN);
+                    if !w.is_finite() || w <= 0.0 {
+                        bail!("network mix weight '{name}' must be positive and finite");
+                    }
+                    parsed.push((profile, w));
+                }
+                if parsed.is_empty() {
+                    bail!("network mix must name at least one profile");
+                }
+                n.mix = parsed;
+            } else if !mix.is_null() {
+                bail!("network mix must be an object of profile: weight pairs");
+            }
+            if let Some(b) = net.get("adaptive_lead").as_bool() {
+                n.adaptive_lead = b;
+            }
+            if let Some(h) = net.get("jitter_headroom").as_f64() {
+                if !h.is_finite() || h <= 0.0 {
+                    bail!("jitter_headroom must be positive and finite");
+                }
+                n.adaptive.headroom = h;
+            }
+            if let Some(m) = net.get("max_lead").as_u64() {
+                if m == 0 {
+                    bail!("network max_lead must be >= 1");
+                }
+                n.adaptive.max_lead = m as usize;
+            }
+            if let Some(s) = net.get("seed").as_u64() {
+                n.seed = s;
+            }
+        }
+
         let tiers = j.get("tiers");
         if !tiers.is_null() {
             let w = &mut d.gateway.admission.tier_weights;
@@ -652,6 +710,43 @@ mod tests {
         // Affinity without parking is a configuration error.
         assert!(AndesDeployment::from_json_str(r#"{"sessions": {"affinity": true}}"#)
             .is_err());
+    }
+
+    #[test]
+    fn network_section_parses() {
+        let d = AndesDeployment::from_json_str(
+            r#"{"network": {"enabled": true,
+                 "mix": {"fiber": 0.6, "wifi": 0.3, "lte": 0.1},
+                 "adaptive_lead": true, "jitter_headroom": 6.0,
+                 "max_lead": 32, "seed": 7}}"#,
+        )
+        .unwrap();
+        let n = &d.gateway.network;
+        assert!(n.enabled);
+        assert!(n.adaptive_lead);
+        assert_eq!(n.mix.len(), 3);
+        assert_eq!(n.adaptive.headroom, 6.0);
+        assert_eq!(n.adaptive.max_lead, 32);
+        assert_eq!(n.seed, 7);
+        // Defaults leave the delivery layer off entirely.
+        let plain = AndesDeployment::from_json_str("{}").unwrap();
+        assert!(!plain.gateway.network.enabled);
+        assert!(!plain.gateway.network.adaptive_lead);
+    }
+
+    #[test]
+    fn network_section_rejects_bad_values() {
+        for bad in [
+            r#"{"network": {"mix": {"warp-drive": 1.0}}}"#,
+            r#"{"network": {"mix": {"lte": 0}}}"#,
+            r#"{"network": {"mix": {"lte": -1}}}"#,
+            r#"{"network": {"mix": {}}}"#,
+            r#"{"network": {"mix": ["lte"]}}"#,
+            r#"{"network": {"jitter_headroom": 0}}"#,
+            r#"{"network": {"max_lead": 0}}"#,
+        ] {
+            assert!(AndesDeployment::from_json_str(bad).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -1,0 +1,147 @@
+//! Jitter-adaptive lead control for the gateway pacer.
+//!
+//! The static pacer lets a fixed `lead_tokens` through unpaced so the
+//! client holds a small reserve against network jitter. A fixed lead is
+//! wrong in both directions: wasteful on fiber, hopeless on cellular.
+//! Eloquent's insight is to size the reserve from *observed* delivery
+//! jitter: the server watches per-token acknowledgement times, keeps an
+//! RFC 6298-style EWMA of the transit-time mean and deviation, and grows
+//! the lead so the client buffers roughly `headroom × deviation` seconds
+//! of playback.
+//!
+//! Control law (DESIGN.md §11):
+//!
+//! ```text
+//! dev  ← (1−β)·dev + β·|x − mean|      (β = dev_alpha)
+//! mean ← (1−α)·mean + α·x              (α = mean_alpha)
+//! lead  = base_lead + ⌈dev × headroom × TDS⌉, clamped to max_lead
+//! ```
+//!
+//! The first sample initializes `mean = x`, `dev = x/2` (as RFC 6298
+//! seeds RTTVAR), so the controller reacts within a handful of tokens.
+//! With zero observed jitter the lead equals the static `base_lead`
+//! exactly — the adaptive mode is a strict generalization.
+//!
+//! ```
+//! use andes::delivery::{AdaptiveLead, AdaptiveLeadConfig};
+//!
+//! let mut ctl = AdaptiveLead::new(AdaptiveLeadConfig::default(), 4, 4.8);
+//! assert_eq!(ctl.lead(), 4); // nothing observed yet: static behavior
+//! for _ in 0..8 {
+//!     ctl.observe(0.05); // steady transit → deviation decays toward 0
+//! }
+//! assert!(ctl.lead() <= 5); // at most one token of residual slack
+//! for x in [0.05, 0.9, 0.1, 1.2] {
+//!     ctl.observe(x); // jittery link
+//! }
+//! assert!(ctl.lead() > 4, "observed jitter must grow the lead");
+//! ```
+
+/// Tuning knobs of the adaptive-lead controller.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveLeadConfig {
+    /// EWMA gain for the transit-time mean (RFC 6298 SRTT gain).
+    pub mean_alpha: f64,
+    /// EWMA gain for the transit-time deviation (RFC 6298 RTTVAR gain).
+    pub dev_alpha: f64,
+    /// Seconds of playback the lead should cover per second of observed
+    /// deviation (the safety multiplier).
+    pub headroom: f64,
+    /// Hard cap on the adaptive lead, bounding how much of the paced
+    /// surplus the controller may hand back to the wire.
+    pub max_lead: usize,
+}
+
+impl Default for AdaptiveLeadConfig {
+    fn default() -> Self {
+        AdaptiveLeadConfig { mean_alpha: 0.125, dev_alpha: 0.25, headroom: 4.0, max_lead: 64 }
+    }
+}
+
+/// EWMA state of the controller for one request.
+#[derive(Debug, Clone)]
+pub struct AdaptiveLead {
+    cfg: AdaptiveLeadConfig,
+    base_lead: usize,
+    tds: f64,
+    mean: Option<f64>,
+    dev: f64,
+}
+
+impl AdaptiveLead {
+    /// `base_lead` is the static `lead_tokens` floor; `tds` the
+    /// request's digestion speed (tokens/s).
+    pub fn new(cfg: AdaptiveLeadConfig, base_lead: usize, tds: f64) -> Self {
+        assert!(tds > 0.0, "tds must be positive");
+        AdaptiveLead { cfg, base_lead, tds, mean: None, dev: 0.0 }
+    }
+
+    /// Feed one acknowledged token's transit time (seconds from release
+    /// to client arrival, as observed via its ack).
+    pub fn observe(&mut self, transit: f64) {
+        match self.mean {
+            None => {
+                self.mean = Some(transit);
+                self.dev = transit / 2.0;
+            }
+            Some(m) => {
+                let (a, b) = (self.cfg.mean_alpha, self.cfg.dev_alpha);
+                self.dev = (1.0 - b) * self.dev + b * (transit - m).abs();
+                self.mean = Some((1.0 - a) * m + a * transit);
+            }
+        }
+    }
+
+    /// EWMA of the transit-time deviation (seconds).
+    pub fn deviation(&self) -> f64 {
+        self.dev
+    }
+
+    /// Current lead-token target.
+    pub fn lead(&self) -> usize {
+        let extra = (self.dev * self.cfg.headroom * self.tds).ceil() as usize;
+        (self.base_lead + extra).min(self.cfg.max_lead.max(self.base_lead))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_jitter_keeps_static_lead() {
+        let mut ctl = AdaptiveLead::new(AdaptiveLeadConfig::default(), 4, 4.8);
+        for _ in 0..100 {
+            ctl.observe(0.02);
+        }
+        // After the first-sample seed decays, steady transit → base lead.
+        assert!(ctl.lead() <= 5, "steady link grew the lead to {}", ctl.lead());
+        // An exactly-zero transit stream never leaves the base.
+        let mut zero = AdaptiveLead::new(AdaptiveLeadConfig::default(), 4, 4.8);
+        for _ in 0..10 {
+            zero.observe(0.0);
+        }
+        assert_eq!(zero.lead(), 4);
+    }
+
+    #[test]
+    fn jitter_grows_lead_and_cap_binds() {
+        let cfg = AdaptiveLeadConfig { max_lead: 10, ..AdaptiveLeadConfig::default() };
+        let mut ctl = AdaptiveLead::new(cfg, 4, 4.8);
+        for i in 0..50 {
+            ctl.observe(if i % 2 == 0 { 0.05 } else { 2.0 });
+        }
+        assert_eq!(ctl.lead(), 10, "heavy jitter must saturate the cap");
+        // The cap can never undercut the static base.
+        let tight = AdaptiveLeadConfig { max_lead: 2, ..AdaptiveLeadConfig::default() };
+        let ctl = AdaptiveLead::new(tight, 4, 4.8);
+        assert_eq!(ctl.lead(), 4);
+    }
+
+    #[test]
+    fn adapts_within_a_few_samples() {
+        let mut ctl = AdaptiveLead::new(AdaptiveLeadConfig::default(), 4, 4.8);
+        ctl.observe(0.5); // one jittery sample seeds dev = 0.25
+        assert!(ctl.lead() > 4, "first-sample seed must already react");
+    }
+}

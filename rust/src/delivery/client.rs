@@ -1,0 +1,180 @@
+//! The client playback buffer: where tokens actually become QoE.
+//!
+//! Tokens arrive over the network in order; the client renders them at
+//! the user's digestion speed. When the next token has not arrived by
+//! the time playback wants it, the stream **stalls** — the visible
+//! artifact jittery links inflict on text streaming. [`ClientBuffer`]
+//! replays arrivals into a [`DigestState`] (so QoE is computed from
+//! client-perceived times) and accounts stalls against the playback
+//! cursor.
+//!
+//! Stall accounting: playback of token 0 starts at its arrival (TTFT
+//! lateness is the QoE metric's domain, not a stall); token `i` is due
+//! one digestion interval after token `i−1` started rendering. An
+//! arrival past its due time is a stall of that length. Consequently,
+//! stall time is exactly zero whenever the cumulative-arrival staircase
+//! stays on or above the digestion ramp anchored at the first arrival —
+//! the invariant the property tests pin.
+//!
+//! ```
+//! use andes::delivery::ClientBuffer;
+//! use andes::qoe::spec::QoeSpec;
+//!
+//! let spec = QoeSpec::new(1.0, 2.0); // digest at 2 tok/s
+//! let mut buf = ClientBuffer::new(&spec);
+//! for &t in &[1.0, 1.5, 2.0, 2.5] {
+//!     buf.receive(t); // exactly on the digestion ramp
+//! }
+//! assert_eq!(buf.stall_time(), 0.0);
+//! let mut late = ClientBuffer::new(&spec);
+//! late.receive(1.0);
+//! late.receive(3.0); // due at 1.5 → 1.5 s stall
+//! assert_eq!(late.stall_count(), 1);
+//! assert!((late.stall_time() - 1.5).abs() < 1e-12);
+//! ```
+
+use crate::qoe::metric::{qoe_finished, DigestState};
+use crate::qoe::spec::QoeSpec;
+
+/// Client-side receive buffer + playback cursor for one request.
+#[derive(Debug, Clone)]
+pub struct ClientBuffer {
+    spec: QoeSpec,
+    digest: DigestState,
+    received: usize,
+    /// Time the most recent token started rendering.
+    last_render: f64,
+    stall_count: usize,
+    stall_time: f64,
+    last_arrival: f64,
+}
+
+impl ClientBuffer {
+    pub fn new(spec: &QoeSpec) -> Self {
+        ClientBuffer {
+            spec: *spec,
+            digest: DigestState::new(spec),
+            received: 0,
+            last_render: f64::NEG_INFINITY,
+            stall_count: 0,
+            stall_time: 0.0,
+            last_arrival: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Receive the next token at request-relative time `t`. Arrivals
+    /// must be in order (the network model guarantees it); each token is
+    /// replayed into the digestion state exactly once.
+    pub fn receive(&mut self, t: f64) {
+        debug_assert!(t >= self.last_arrival, "arrivals must be non-decreasing");
+        self.last_arrival = t;
+        if self.received == 0 {
+            // First token: playback starts at arrival.
+            self.last_render = t;
+        } else {
+            let due = self.last_render + 1.0 / self.spec.tds;
+            if t > due + 1e-12 {
+                self.stall_count += 1;
+                self.stall_time += t - due;
+                self.last_render = t;
+            } else {
+                self.last_render = due;
+            }
+        }
+        self.digest.deliver(t);
+        self.received += 1;
+    }
+
+    /// Tokens received so far.
+    pub fn received(&self) -> usize {
+        self.received
+    }
+
+    /// Number of playback stalls (distinct late arrivals).
+    pub fn stall_count(&self) -> usize {
+        self.stall_count
+    }
+
+    /// Total seconds playback spent waiting on late tokens.
+    pub fn stall_time(&self) -> f64 {
+        self.stall_time
+    }
+
+    /// The digestion state fed from client arrivals (read-only).
+    pub fn digest(&self) -> &DigestState {
+        &self.digest
+    }
+
+    /// Final client-perceived QoE once the stream is complete.
+    /// `response_len` must equal the number of received tokens.
+    pub fn final_qoe(&self, response_len: usize) -> f64 {
+        qoe_finished(&self.spec, &self.digest, response_len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::assert_close;
+
+    fn spec() -> QoeSpec {
+        QoeSpec::new(1.0, 2.0)
+    }
+
+    #[test]
+    fn on_time_stream_never_stalls() {
+        let mut buf = ClientBuffer::new(&spec());
+        for i in 0..20 {
+            buf.receive(0.5 + i as f64 * 0.5);
+        }
+        assert_eq!(buf.stall_count(), 0);
+        assert_eq!(buf.stall_time(), 0.0);
+        assert_eq!(buf.received(), 20);
+    }
+
+    #[test]
+    fn burst_then_gap_stalls_once() {
+        let mut buf = ClientBuffer::new(&spec());
+        // 4 tokens at t=1: playback covered until 1 + 3*0.5 = 2.5.
+        for _ in 0..4 {
+            buf.receive(1.0);
+        }
+        // Token 4 due at 3.0; arriving at 5.0 stalls for 2 s.
+        buf.receive(5.0);
+        assert_eq!(buf.stall_count(), 1);
+        assert_close(buf.stall_time(), 2.0, 1e-12);
+        // The next token rides the new cursor: due 5.5.
+        buf.receive(5.4);
+        assert_eq!(buf.stall_count(), 1);
+    }
+
+    #[test]
+    fn late_first_token_is_not_a_stall() {
+        // TTFT lateness is the QoE metric's business, not the stall
+        // counter's.
+        let mut buf = ClientBuffer::new(&spec());
+        buf.receive(30.0);
+        assert_eq!(buf.stall_count(), 0);
+        assert!(buf.final_qoe(1) < 1.0, "late TTFT still costs QoE");
+    }
+
+    #[test]
+    fn digestion_never_precedes_arrival() {
+        let mut buf = ClientBuffer::new(&spec());
+        for &t in &[1.0, 1.2, 4.0, 4.0, 9.0] {
+            buf.receive(t);
+            assert!(buf.digest().digested() <= buf.digest().delivered() + 1e-12);
+            assert_eq!(buf.digest().delivered(), buf.received() as f64);
+        }
+    }
+
+    #[test]
+    fn perfect_delivery_perfect_qoe() {
+        let sp = spec();
+        let mut buf = ClientBuffer::new(&sp);
+        for i in 0..10 {
+            buf.receive(sp.ttft + i as f64 / sp.tds);
+        }
+        assert!(buf.final_qoe(10) > 0.99);
+    }
+}

@@ -1,0 +1,357 @@
+//! Client-side delivery: the network and playback layer between the
+//! gateway pacer and the QoE metric (DESIGN.md §11).
+//!
+//! Andes defines QoE on the *user's* perceived timeline, but the rest of
+//! the stack stops at the server: a paced token counts as digested the
+//! instant it is released. This module closes the gap with three pieces:
+//!
+//! - [`network`] — a per-request, seeded last-mile link model (latency,
+//!   jitter, burst loss with retransmission, disconnect/reconnect
+//!   episodes), TCP-like in-order delivery;
+//! - [`client`] — the client playback buffer, replaying arrivals into
+//!   the digestion state so QoE is computed from client-perceived
+//!   times, and accounting playback stalls;
+//! - [`adaptive`] — an Eloquent-style jitter-adaptive mode of the
+//!   gateway pacer that grows its lead buffer from an EWMA of observed
+//!   ack jitter instead of a static `lead_tokens`.
+//!
+//! [`deliver_request`] runs all three jointly for one finished request:
+//! the pacer releases tokens (its lead possibly adapting to acks the
+//! server has seen so far), the network carries them, the client buffer
+//! replays them. With the layer disabled — or under the explicit
+//! [`NetworkProfile::ideal`] link — the result is bit-identical to the
+//! pacer-only path (property-tested in `rust/tests/delivery.rs`).
+//!
+//! ```
+//! use andes::delivery::{deliver_request, NetworkConfig, NetworkProfile};
+//! use andes::gateway::PacingConfig;
+//! use andes::qoe::spec::QoeSpec;
+//!
+//! let spec = QoeSpec::new(1.0, 4.0);
+//! let pacing = PacingConfig { rate_factor: 1.0, lead_tokens: 2 };
+//! let gen: Vec<f64> = vec![1.0; 12]; // a 12-token burst at t=1
+//!
+//! // The ideal link adds nothing: arrivals == paced releases, no stalls.
+//! let ideal = NetworkConfig { enabled: true, ..NetworkConfig::default() }
+//!     .with_mix(vec![(NetworkProfile::ideal(), 1.0)]);
+//! let out = deliver_request(&spec, true, &pacing, &ideal, 0, &gen);
+//! assert_eq!(out.client_arrivals, out.release_times);
+//! assert_eq!(out.stall_count, 0);
+//!
+//! // A cellular link delays and may stall; QoE can only drop.
+//! let lte = ideal.clone().with_mix(vec![(NetworkProfile::lte(), 1.0)]);
+//! let rough = deliver_request(&spec, true, &pacing, &lte, 0, &gen);
+//! assert!(rough.client_qoe <= out.client_qoe + 1e-12);
+//! ```
+
+pub mod adaptive;
+pub mod client;
+pub mod network;
+
+pub use adaptive::{AdaptiveLead, AdaptiveLeadConfig};
+pub use client::ClientBuffer;
+pub use network::{NetworkModel, NetworkProfile, TokenState, TokenTransit};
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Context, Result};
+
+use crate::gateway::pacing::{PacingConfig, TokenPacer};
+use crate::qoe::spec::QoeSpec;
+use crate::util::rng::{splitmix64, Rng};
+
+/// The gateway's `"network"` section: which last-mile links requests
+/// ride, and whether the pacer lead adapts to observed jitter.
+#[derive(Debug, Clone)]
+pub struct NetworkConfig {
+    /// Master switch. Off (the default) keeps every downstream number
+    /// bit-identical to the pacer-only path.
+    pub enabled: bool,
+    /// Link-class mix: each request draws one profile, weighted.
+    pub mix: Vec<(NetworkProfile, f64)>,
+    /// Grow the pacer lead from observed ack jitter (Eloquent-style)
+    /// instead of keeping the static `lead_tokens`.
+    pub adaptive_lead: bool,
+    pub adaptive: AdaptiveLeadConfig,
+    /// Root seed for per-request link draws; combined with the request
+    /// id so each "user" gets an independent, reproducible link.
+    pub seed: u64,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        NetworkConfig {
+            enabled: false,
+            mix: vec![(NetworkProfile::fiber(), 1.0)],
+            adaptive_lead: false,
+            adaptive: AdaptiveLeadConfig::default(),
+            seed: 0xA11D_E500,
+        }
+    }
+}
+
+impl NetworkConfig {
+    /// Builder-style mix override (used by tests and experiments).
+    pub fn with_mix(mut self, mix: Vec<(NetworkProfile, f64)>) -> Self {
+        self.mix = mix;
+        self
+    }
+
+    /// Parse a CLI mix spec: either one profile name (`"lte"`) or a
+    /// weighted list (`"fiber:0.6,wifi:0.3,lte:0.1"`).
+    ///
+    /// ```
+    /// use andes::delivery::NetworkConfig;
+    /// let mix = NetworkConfig::parse_mix("fiber:0.6,lte:0.4").unwrap();
+    /// assert_eq!(mix.len(), 2);
+    /// assert_eq!(mix[0].0.name, "fiber");
+    /// assert!(NetworkConfig::parse_mix("warp-drive").is_err());
+    /// ```
+    pub fn parse_mix(s: &str) -> Result<Vec<(NetworkProfile, f64)>> {
+        let mut mix = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, weight) = match part.split_once(':') {
+                Some((n, w)) => {
+                    let w: f64 = w
+                        .trim()
+                        .parse()
+                        .with_context(|| format!("bad mix weight in '{part}'"))?;
+                    (n.trim(), w)
+                }
+                None => (part, 1.0),
+            };
+            let profile = NetworkProfile::by_name(name).with_context(|| {
+                format!("unknown network profile '{name}' (ideal|fiber|wifi|lte)")
+            })?;
+            if !weight.is_finite() || weight <= 0.0 {
+                bail!("network mix weight for '{name}' must be positive and finite");
+            }
+            mix.push((profile, weight));
+        }
+        if mix.is_empty() {
+            bail!("empty network mix");
+        }
+        Ok(mix)
+    }
+
+    /// Deterministically draw the link for one request: profile chosen
+    /// from the mix, plus the RNG that will drive its jitter/loss/
+    /// disconnect streams. Depends only on `(seed, request_id)`, so a
+    /// request keeps its "user's" link across replays (e.g. a spill).
+    pub fn draw_for(&self, request_id: usize) -> (NetworkProfile, Rng) {
+        let mut state = self.seed ^ (request_id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(splitmix64(&mut state));
+        let weights: Vec<f64> = self.mix.iter().map(|(_, w)| *w).collect();
+        let idx = rng.categorical(&weights);
+        (self.mix[idx].0, rng)
+    }
+}
+
+/// One request's delivery-layer outcome (all times request-relative).
+#[derive(Debug, Clone)]
+pub struct DeliveryOutcome {
+    /// Server-side release times (post-pacing; the adaptive lead may
+    /// burst extra unpaced tokens after jitter is observed).
+    pub release_times: Vec<f64>,
+    /// Client-side arrival times (in order, one per token).
+    pub client_arrivals: Vec<f64>,
+    /// Final QoE computed from the client arrivals.
+    pub client_qoe: f64,
+    pub stall_count: usize,
+    pub stall_time: f64,
+    pub retransmits: usize,
+    /// Tokens that waited out a disconnect episode.
+    pub disconnects: usize,
+    /// The pacer's lead at end of stream (== `lead_tokens` when the
+    /// adaptive mode is off or nothing jittered; 0 with pacing
+    /// disabled).
+    pub final_lead: usize,
+}
+
+/// Jointly simulate pacer → network → client buffer for one finished
+/// request.
+///
+/// * `gen_times` — request-relative token generation times, as recorded
+///   by the engine (non-decreasing).
+/// * `pacing_enabled: false` sends tokens as generated (the network
+///   still applies).
+///
+/// Adaptive-lead causality: before releasing token *i*, the controller
+/// only sees acks that reached the server by the earliest instant token
+/// *i* could release (`max(generated, last_release)`) — the server
+/// never peeks at the future.
+pub fn deliver_request(
+    spec: &QoeSpec,
+    pacing_enabled: bool,
+    pacing: &PacingConfig,
+    cfg: &NetworkConfig,
+    request_id: usize,
+    gen_times: &[f64],
+) -> DeliveryOutcome {
+    let (profile, rng) = cfg.draw_for(request_id);
+    let mut pacer = if pacing_enabled {
+        TokenPacer::new(spec, pacing)
+    } else {
+        TokenPacer::passthrough()
+    };
+    let mut controller = (pacing_enabled && cfg.adaptive_lead)
+        .then(|| AdaptiveLead::new(cfg.adaptive, pacing.lead_tokens, spec.tds));
+    let mut net = NetworkModel::new(profile, rng);
+    let mut client = ClientBuffer::new(spec);
+    // (ack arrival at server, observed transit) for sent tokens; acks
+    // ride the deterministic return path, so they stay in send order.
+    let mut acks: VecDeque<(f64, f64)> = VecDeque::new();
+    let mut releases = Vec::with_capacity(gen_times.len());
+    let mut arrivals = Vec::with_capacity(gen_times.len());
+    for &g in gen_times {
+        if let Some(ctl) = controller.as_mut() {
+            let horizon = g.max(pacer.last_release());
+            while let Some(&(ack_at, transit)) = acks.front() {
+                if ack_at > horizon {
+                    break;
+                }
+                ctl.observe(transit);
+                acks.pop_front();
+            }
+            pacer.set_lead(ctl.lead());
+        }
+        pacer.push(g);
+        let due = pacer.next_due().expect("token just pushed");
+        let released = pacer.release_due(due);
+        debug_assert_eq!(released, 1, "exactly the pushed token releases at its due time");
+        let transit = net.send(due);
+        client.receive(transit.arrived_at);
+        acks.push_back((transit.arrived_at + profile.base_latency, transit.arrived_at - due));
+        releases.push(due);
+        arrivals.push(transit.arrived_at);
+    }
+    DeliveryOutcome {
+        client_qoe: client.final_qoe(arrivals.len()),
+        release_times: releases,
+        client_arrivals: arrivals,
+        stall_count: client.stall_count(),
+        stall_time: client.stall_time(),
+        retransmits: net.retransmits(),
+        disconnects: net.disconnects_hit(),
+        // The passthrough pacer's "lead" is a sentinel ∞ — report 0.
+        final_lead: if pacing_enabled { pacer.lead() } else { 0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gateway::pacing::pace_times;
+
+    fn spec() -> QoeSpec {
+        QoeSpec::new(1.0, 4.0)
+    }
+
+    fn cfg_with(profile: NetworkProfile) -> NetworkConfig {
+        NetworkConfig { enabled: true, ..NetworkConfig::default() }
+            .with_mix(vec![(profile, 1.0)])
+    }
+
+    #[test]
+    fn ideal_static_matches_batch_pacer_exactly() {
+        // Under the identity link with the adaptive mode off, releases
+        // must equal `pace_times` and arrivals must equal releases.
+        let sp = spec();
+        let pacing = PacingConfig { rate_factor: 1.0, lead_tokens: 3 };
+        let gen: Vec<f64> = vec![0.5, 0.5, 0.5, 0.5, 0.9, 2.0, 2.0, 5.0];
+        let out =
+            deliver_request(&sp, true, &pacing, &cfg_with(NetworkProfile::ideal()), 7, &gen);
+        assert_eq!(out.release_times, pace_times(&sp, &pacing, &gen));
+        assert_eq!(out.client_arrivals, out.release_times);
+        assert_eq!(out.stall_count, 0);
+        assert_eq!(out.retransmits, 0);
+        assert_eq!(out.final_lead, 3);
+    }
+
+    #[test]
+    fn adaptive_on_ideal_link_stays_static() {
+        // Zero observed jitter ⇒ the controller never leaves the base
+        // lead, so adaptive and static schedules coincide.
+        let sp = spec();
+        let pacing = PacingConfig::default();
+        let gen: Vec<f64> = (0..30).map(|i| 0.3 + 0.05 * i as f64).collect();
+        let mut cfg = cfg_with(NetworkProfile::ideal());
+        let static_out = deliver_request(&sp, true, &pacing, &cfg, 3, &gen);
+        cfg.adaptive_lead = true;
+        let adaptive_out = deliver_request(&sp, true, &pacing, &cfg, 3, &gen);
+        assert_eq!(static_out.release_times, adaptive_out.release_times);
+        assert_eq!(static_out.client_arrivals, adaptive_out.client_arrivals);
+        assert_eq!(adaptive_out.final_lead, pacing.lead_tokens);
+    }
+
+    #[test]
+    fn adaptive_lead_grows_under_jitter() {
+        let sp = spec();
+        let pacing = PacingConfig { rate_factor: 1.0, lead_tokens: 4 };
+        let mut cfg = cfg_with(NetworkProfile::lte());
+        cfg.adaptive_lead = true;
+        let gen: Vec<f64> = vec![0.5; 120];
+        let out = deliver_request(&sp, true, &pacing, &cfg, 11, &gen);
+        assert!(out.final_lead > pacing.lead_tokens, "lte jitter must grow the lead");
+    }
+
+    #[test]
+    fn mix_draw_is_deterministic_per_request() {
+        let cfg = NetworkConfig { enabled: true, ..NetworkConfig::default() }.with_mix(
+            vec![
+                (NetworkProfile::fiber(), 0.5),
+                (NetworkProfile::wifi(), 0.3),
+                (NetworkProfile::lte(), 0.2),
+            ],
+        );
+        let mut seen_lte = false;
+        for id in 0..200 {
+            let (a, _) = cfg.draw_for(id);
+            let (b, _) = cfg.draw_for(id);
+            assert_eq!(a, b, "request {id} must redraw the same link");
+            seen_lte |= a.name == "lte";
+        }
+        assert!(seen_lte, "a 20% share must appear in 200 draws");
+        // A different root seed reshuffles the assignment.
+        let reseeded = NetworkConfig { seed: 99, ..cfg.clone() };
+        let moved = (0..200)
+            .filter(|&id| cfg.draw_for(id).0 != reseeded.draw_for(id).0)
+            .count();
+        assert!(moved > 0);
+    }
+
+    #[test]
+    fn pacing_disabled_sends_as_generated() {
+        let sp = spec();
+        let gen: Vec<f64> = vec![0.2, 0.4, 0.6, 0.8];
+        let out = deliver_request(
+            &sp,
+            false,
+            &PacingConfig::default(),
+            &cfg_with(NetworkProfile::ideal()),
+            0,
+            &gen,
+        );
+        assert_eq!(out.release_times, gen);
+        assert_eq!(out.client_arrivals, gen);
+    }
+
+    #[test]
+    fn empty_stream_is_well_defined() {
+        let out = deliver_request(
+            &spec(),
+            true,
+            &PacingConfig::default(),
+            &cfg_with(NetworkProfile::lte()),
+            0,
+            &[],
+        );
+        assert!(out.release_times.is_empty());
+        assert_eq!(out.client_qoe, 1.0, "zero-length responses are perfect");
+        assert_eq!(out.stall_count, 0);
+    }
+}

@@ -1,0 +1,428 @@
+//! The last-mile network between the gateway pacer and the user's
+//! device.
+//!
+//! The serving stack so far counts a token as *digested* the instant the
+//! server releases it — an implicit perfect-network assumption. Real
+//! delivery paths (wifi, cellular) add base latency, jitter, burst loss
+//! with retransmission, and outright disconnect/reconnect episodes; all
+//! of them move the client-perceived arrival curve that QoE is actually
+//! defined on (Eloquent; DiSCo). [`NetworkModel`] simulates that path
+//! per request, deterministically from a seed.
+//!
+//! The model is TCP-like: tokens arrive **in order** (a delayed token
+//! head-of-line-blocks everything behind it), a lost token is
+//! retransmitted after a timeout, and tokens released during a
+//! disconnect episode are flushed at reconnect.
+//!
+//! ```
+//! use andes::delivery::{NetworkModel, NetworkProfile};
+//! use andes::util::rng::Rng;
+//!
+//! // An ideal link is the identity: arrival == release, no losses.
+//! let mut net = NetworkModel::new(NetworkProfile::ideal(), Rng::new(7));
+//! let t = net.send(1.0);
+//! assert_eq!(t.arrived_at, 1.0);
+//! assert_eq!(t.retransmits, 0);
+//!
+//! // A lossy link can only delay, never reorder or drop for good.
+//! let mut net = NetworkModel::new(NetworkProfile::lte(), Rng::new(7));
+//! let mut last = f64::NEG_INFINITY;
+//! for i in 0..50 {
+//!     let t = net.send(i as f64 * 0.2);
+//!     assert!(t.arrived_at >= i as f64 * 0.2);
+//!     assert!(t.arrived_at >= last, "in-order delivery");
+//!     last = t.arrived_at;
+//! }
+//! assert_eq!(net.sent(), 50);
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Parameters of one last-mile link class. All times in seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkProfile {
+    /// Profile name (as accepted by [`NetworkProfile::by_name`]).
+    pub name: &'static str,
+    /// Deterministic one-way propagation delay.
+    pub base_latency: f64,
+    /// Mean of the exponential per-token extra delay (0 = no jitter).
+    pub jitter_mean: f64,
+    /// Per-transmission loss probability (each retransmission re-rolls,
+    /// so burst losses emerge geometrically).
+    pub loss_prob: f64,
+    /// Timeout before a lost transmission is retried.
+    pub retransmit_delay: f64,
+    /// Disconnect episodes per second of stream time (0 = never).
+    pub disconnect_rate: f64,
+    /// Mean duration of a disconnect episode (exponential).
+    pub disconnect_mean: f64,
+}
+
+impl NetworkProfile {
+    /// Zero-cost link: arrival == release. The parity anchor — the whole
+    /// delivery layer must be bit-identical to no delivery layer at all
+    /// under this profile.
+    pub fn ideal() -> Self {
+        NetworkProfile {
+            name: "ideal",
+            base_latency: 0.0,
+            jitter_mean: 0.0,
+            loss_prob: 0.0,
+            retransmit_delay: 0.0,
+            disconnect_rate: 0.0,
+            disconnect_mean: 0.0,
+        }
+    }
+
+    /// Wired broadband: a few milliseconds, effectively jitter-free.
+    pub fn fiber() -> Self {
+        NetworkProfile {
+            name: "fiber",
+            base_latency: 0.005,
+            jitter_mean: 0.002,
+            loss_prob: 0.0,
+            retransmit_delay: 0.05,
+            disconnect_rate: 0.0,
+            disconnect_mean: 0.0,
+        }
+    }
+
+    /// Home/office WLAN: moderate jitter, rare losses and dropouts.
+    pub fn wifi() -> Self {
+        NetworkProfile {
+            name: "wifi",
+            base_latency: 0.015,
+            jitter_mean: 0.03,
+            loss_prob: 0.005,
+            retransmit_delay: 0.08,
+            disconnect_rate: 1.0 / 300.0,
+            disconnect_mean: 0.5,
+        }
+    }
+
+    /// Mobile cellular: heavy jitter, burst loss, and disconnect
+    /// episodes — the profile where the client buffer earns its keep.
+    pub fn lte() -> Self {
+        NetworkProfile {
+            name: "lte",
+            base_latency: 0.06,
+            jitter_mean: 0.25,
+            loss_prob: 0.02,
+            retransmit_delay: 0.2,
+            disconnect_rate: 1.0 / 45.0,
+            disconnect_mean: 1.5,
+        }
+    }
+
+    /// Look up a built-in profile by its name.
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "ideal" => Some(Self::ideal()),
+            "fiber" => Some(Self::fiber()),
+            "wifi" => Some(Self::wifi()),
+            "lte" => Some(Self::lte()),
+            _ => None,
+        }
+    }
+
+    /// True when the profile is exactly the identity link (every knob
+    /// zero): the delivery layer adds nothing under it.
+    pub fn is_identity(&self) -> bool {
+        self.base_latency == 0.0
+            && self.jitter_mean == 0.0
+            && self.loss_prob == 0.0
+            && self.disconnect_rate == 0.0
+    }
+}
+
+/// Fate of one token on the wire (request-relative times).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TokenTransit {
+    /// Server release time.
+    pub sent_at: f64,
+    /// End of the loss phase: `sent_at + retransmits × retransmit_delay`.
+    /// Before this instant the token (if it was ever lost) is waiting on
+    /// a retransmission, not in flight.
+    pub lost_until: f64,
+    /// Client arrival time (after in-order head-of-line blocking).
+    pub arrived_at: f64,
+    /// Failed transmission attempts before the one that got through.
+    pub retransmits: usize,
+    /// Seconds the token spent parked behind a disconnect episode.
+    pub disconnect_wait: f64,
+}
+
+impl TokenTransit {
+    /// Where this token is at time `t`: `None` = not yet sent,
+    /// `Some(TokenState)` otherwise. The three live states partition
+    /// `[sent_at, ∞)`, which is what the conservation property tests.
+    pub fn state_at(&self, t: f64) -> Option<TokenState> {
+        if t < self.sent_at {
+            None
+        } else if t >= self.arrived_at {
+            Some(TokenState::Delivered)
+        } else if t < self.lost_until {
+            Some(TokenState::LostPendingRetransmit)
+        } else {
+            Some(TokenState::InFlight)
+        }
+    }
+}
+
+/// Mutually exclusive states of a sent token (see
+/// [`TokenTransit::state_at`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenState {
+    InFlight,
+    LostPendingRetransmit,
+    Delivered,
+}
+
+/// Per-request simulated last-mile link. Deterministic given the profile
+/// and the seed of its [`Rng`]; sends must use non-decreasing times.
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    profile: NetworkProfile,
+    rng: Rng,
+    /// In-order floor: no token may arrive before its predecessor.
+    last_arrival: f64,
+    /// Current/next disconnect episode window, drawn lazily.
+    episode_start: f64,
+    episode_end: f64,
+    transits: Vec<TokenTransit>,
+    retransmits_total: usize,
+    disconnects_hit: usize,
+}
+
+/// Retransmission attempts are capped so a pathological RNG stream
+/// cannot stall a request forever (the cap is far beyond anything the
+/// built-in loss probabilities reach in practice).
+const MAX_RETRANSMITS: usize = 16;
+
+impl NetworkModel {
+    pub fn new(profile: NetworkProfile, mut rng: Rng) -> Self {
+        let (episode_start, episode_end) = if profile.disconnect_rate > 0.0 {
+            let start = rng.exponential(profile.disconnect_rate);
+            let dur = rng.exponential(1.0 / profile.disconnect_mean.max(1e-9));
+            (start, start + dur)
+        } else {
+            (f64::INFINITY, f64::INFINITY)
+        };
+        NetworkModel {
+            profile,
+            rng,
+            last_arrival: f64::NEG_INFINITY,
+            episode_start,
+            episode_end,
+            transits: Vec::new(),
+            retransmits_total: 0,
+            disconnects_hit: 0,
+        }
+    }
+
+    pub fn profile(&self) -> &NetworkProfile {
+        &self.profile
+    }
+
+    /// Transmit a token released by the server at time `t` (must be
+    /// ≥ every earlier send) and return its fate.
+    pub fn send(&mut self, t: f64) -> TokenTransit {
+        if let Some(prev) = self.transits.last() {
+            debug_assert!(t >= prev.sent_at, "sends must be in release order");
+        }
+        // Loss phase: each attempt re-rolls; a loss costs one timeout.
+        let mut retransmits = 0usize;
+        while self.profile.loss_prob > 0.0
+            && retransmits < MAX_RETRANSMITS
+            && self.rng.chance(self.profile.loss_prob)
+        {
+            retransmits += 1;
+        }
+        let lost_until = t + retransmits as f64 * self.profile.retransmit_delay;
+        // Wire phase: propagation plus exponential jitter.
+        let jitter = if self.profile.jitter_mean > 0.0 {
+            self.rng.exponential(1.0 / self.profile.jitter_mean)
+        } else {
+            0.0
+        };
+        let raw = lost_until + self.profile.base_latency + jitter;
+        // Disconnect phase: an arrival falling inside an episode waits
+        // for the reconnect and flushes then.
+        let after_disc = self.hold_for_disconnect(raw);
+        let disconnect_wait = after_disc - raw;
+        if disconnect_wait > 0.0 {
+            self.disconnects_hit += 1;
+        }
+        // In-order floor (head-of-line blocking).
+        let arrived_at = after_disc.max(self.last_arrival).max(t);
+        self.last_arrival = arrived_at;
+        self.retransmits_total += retransmits;
+        let transit =
+            TokenTransit { sent_at: t, lost_until, arrived_at, retransmits, disconnect_wait };
+        self.transits.push(transit);
+        transit
+    }
+
+    /// Push `t` past any disconnect episode it falls into, advancing the
+    /// lazily drawn episode timeline. Callers present non-decreasing
+    /// probe times (guaranteed by the in-order send contract plus the
+    /// monotone floor).
+    fn hold_for_disconnect(&mut self, t: f64) -> f64 {
+        if self.profile.disconnect_rate <= 0.0 {
+            return t;
+        }
+        let mut t = t;
+        while t >= self.episode_start {
+            if t < self.episode_end {
+                t = self.episode_end;
+            }
+            // Past this episode: draw the next one.
+            let gap = self.rng.exponential(self.profile.disconnect_rate);
+            let dur = self.rng.exponential(1.0 / self.profile.disconnect_mean.max(1e-9));
+            self.episode_start = self.episode_end + gap;
+            self.episode_end = self.episode_start + dur;
+        }
+        t
+    }
+
+    /// Every token's recorded fate, in send order.
+    pub fn transits(&self) -> &[TokenTransit] {
+        &self.transits
+    }
+
+    pub fn sent(&self) -> usize {
+        self.transits.len()
+    }
+
+    pub fn retransmits(&self) -> usize {
+        self.retransmits_total
+    }
+
+    /// Tokens that waited out at least one disconnect episode.
+    pub fn disconnects_hit(&self) -> usize {
+        self.disconnects_hit
+    }
+
+    /// (delivered, in_flight, lost_pending) token counts at time `t` —
+    /// the conservation partition: the three always sum to the number
+    /// of tokens sent by `t`.
+    pub fn census_at(&self, t: f64) -> (usize, usize, usize) {
+        let mut delivered = 0;
+        let mut in_flight = 0;
+        let mut lost = 0;
+        for tr in &self.transits {
+            match tr.state_at(t) {
+                Some(TokenState::Delivered) => delivered += 1,
+                Some(TokenState::InFlight) => in_flight += 1,
+                Some(TokenState::LostPendingRetransmit) => lost += 1,
+                None => {}
+            }
+        }
+        (delivered, in_flight, lost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_link_is_identity() {
+        let mut net = NetworkModel::new(NetworkProfile::ideal(), Rng::new(1));
+        for i in 0..20 {
+            let t = i as f64 * 0.1;
+            let tr = net.send(t);
+            assert_eq!(tr.arrived_at, t);
+            assert_eq!(tr.retransmits, 0);
+            assert_eq!(tr.disconnect_wait, 0.0);
+        }
+        assert_eq!(net.retransmits(), 0);
+        assert_eq!(net.disconnects_hit(), 0);
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let run = |seed| {
+            let mut net = NetworkModel::new(NetworkProfile::lte(), Rng::new(seed));
+            (0..200).map(|i| net.send(i as f64 * 0.2).arrived_at).collect::<Vec<_>>()
+        };
+        assert_eq!(run(9), run(9));
+        assert_ne!(run(9), run(10));
+    }
+
+    #[test]
+    fn in_order_and_never_early() {
+        let mut net = NetworkModel::new(NetworkProfile::lte(), Rng::new(3));
+        let mut last = f64::NEG_INFINITY;
+        for i in 0..300 {
+            let t = i as f64 * 0.15;
+            let tr = net.send(t);
+            assert!(tr.arrived_at >= t, "token arrived before release");
+            assert!(tr.arrived_at >= last, "reordered delivery");
+            assert!(tr.lost_until >= tr.sent_at);
+            assert!(tr.arrived_at >= tr.lost_until);
+            last = tr.arrived_at;
+        }
+    }
+
+    #[test]
+    fn lossy_link_retransmits() {
+        let profile = NetworkProfile { loss_prob: 0.4, ..NetworkProfile::lte() };
+        let mut net = NetworkModel::new(profile, Rng::new(5));
+        for i in 0..200 {
+            net.send(i as f64 * 0.1);
+        }
+        assert!(net.retransmits() > 10, "40% loss must retransmit often");
+        // A retransmitted token pays at least one timeout.
+        for tr in net.transits() {
+            if tr.retransmits > 0 {
+                assert!(tr.arrived_at - tr.sent_at >= profile.retransmit_delay - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn disconnect_episode_flushes_at_reconnect() {
+        // Very frequent, long episodes: most tokens flush together at
+        // reconnect boundaries with zero inter-arrival gap.
+        let profile = NetworkProfile {
+            disconnect_rate: 1.0,
+            disconnect_mean: 2.0,
+            jitter_mean: 0.0,
+            loss_prob: 0.0,
+            base_latency: 0.0,
+            ..NetworkProfile::lte()
+        };
+        let mut net = NetworkModel::new(profile, Rng::new(11));
+        let arrivals: Vec<f64> = (0..100).map(|i| net.send(i as f64 * 0.1).arrived_at).collect();
+        assert!(net.disconnects_hit() > 0, "episodes must be hit");
+        let flushes = arrivals.windows(2).filter(|w| w[1] == w[0]).count();
+        assert!(flushes > 0, "reconnect must flush a burst");
+    }
+
+    #[test]
+    fn census_partitions_sent_tokens() {
+        let mut net = NetworkModel::new(NetworkProfile::lte(), Rng::new(17));
+        for i in 0..100 {
+            net.send(i as f64 * 0.2);
+        }
+        for probe in [0.0, 1.0, 5.0, 10.0, 19.9, 25.0, 1000.0] {
+            let sent_by_probe =
+                net.transits().iter().filter(|tr| tr.sent_at <= probe).count();
+            let (d, f, l) = net.census_at(probe);
+            assert_eq!(d + f + l, sent_by_probe, "partition at t={probe}");
+        }
+        let (d, f, l) = net.census_at(f64::INFINITY);
+        assert_eq!((d, f, l), (100, 0, 0), "everything eventually delivers");
+    }
+
+    #[test]
+    fn profiles_by_name() {
+        for name in ["ideal", "fiber", "wifi", "lte"] {
+            assert_eq!(NetworkProfile::by_name(name).unwrap().name, name);
+        }
+        assert!(NetworkProfile::by_name("carrier-pigeon").is_none());
+        assert!(NetworkProfile::ideal().is_identity());
+        assert!(!NetworkProfile::wifi().is_identity());
+    }
+}

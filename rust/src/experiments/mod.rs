@@ -11,6 +11,7 @@ pub mod federation;
 pub mod gateway;
 pub mod micro;
 pub mod motivation;
+pub mod network;
 pub mod robustness;
 pub mod runner;
 pub mod sensitivity;
@@ -207,6 +208,12 @@ pub fn registry() -> Vec<Experiment> {
             paper_ref: "§2 (extension)",
             title: "Multi-turn sessions: KV prefix retention × affinity routing",
             run: sessions::ext_sessions,
+        },
+        Experiment {
+            id: "ext-network",
+            paper_ref: "§2.2 (extension)",
+            title: "Client-side delivery: network jitter × adaptive pacer lead",
+            run: network::ext_network,
         },
         Experiment {
             id: "e2e",

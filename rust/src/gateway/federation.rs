@@ -590,7 +590,7 @@ impl<T: GatewayTarget> FederatedGateway<T> {
         let mut served = Vec::new();
         for m in &per_replica {
             for r in &m.requests {
-                served.push(served_outcome(r, self.cfg.pacing_enabled, &self.cfg.pacing));
+                served.push(served_outcome(r, &self.cfg));
             }
         }
         Ok(FederationRunResult {

@@ -95,6 +95,7 @@ use crate::cluster::{Cluster, RoutingPolicy};
 use crate::config::SchedulerConfig;
 use crate::coordinator::engine::{Engine, EngineConfig};
 use crate::coordinator::metrics::{Metrics, RequestRecord};
+use crate::delivery::{deliver_request, NetworkConfig};
 use crate::model::latency::LatencyModel;
 use crate::qoe::metric::{qoe_finished, DigestState};
 use crate::qoe::spec::QoeSpec;
@@ -114,6 +115,10 @@ pub struct GatewayConfig {
     /// Routing-policy override while in surge mode (cluster targets
     /// only): spread load instead of QoE-greedy placement.
     pub surge_routing: Option<RoutingPolicy>,
+    /// Client-side delivery model (network + playback buffer +
+    /// jitter-adaptive pacer lead; DESIGN.md §11). Disabled by default,
+    /// which keeps every number bit-identical to the pacer-only path.
+    pub network: NetworkConfig,
 }
 
 impl Default for GatewayConfig {
@@ -126,6 +131,7 @@ impl Default for GatewayConfig {
             surge: SurgeConfig::default(),
             autoscale: AutoscaleConfig::default(),
             surge_routing: Some(RoutingPolicy::LeastLoaded),
+            network: NetworkConfig::default(),
         }
     }
 }
@@ -404,6 +410,19 @@ pub struct ServedRequest {
     /// Final QoE after the gateway pacer shapes delivery (== raw when
     /// pacing is disabled).
     pub paced_qoe: f64,
+    /// Final QoE computed from *client-perceived* arrival times, after
+    /// the last-mile network and playback buffer ([`crate::delivery`]).
+    /// Equals `paced_qoe` when the delivery model is disabled.
+    pub client_qoe: f64,
+    /// Client playback stalls (late arrivals past the digestion ramp);
+    /// 0 when the delivery model is disabled.
+    pub stall_count: usize,
+    /// Total seconds the client playback stalled.
+    pub stall_time: f64,
+    /// Token retransmissions on this request's link.
+    pub retransmits: usize,
+    /// Tokens that waited out a disconnect episode.
+    pub disconnects: usize,
     /// Tokens delivered while the client buffer already held undigested
     /// tokens (ahead of the digestion deadline), unshaped delivery.
     pub raw_early_tokens: usize,
@@ -474,6 +493,48 @@ impl GatewayRunResult {
         self.replica_seconds + self.spill_replica_seconds
     }
 
+    /// Mean final QoE computed from client-perceived arrival times,
+    /// over served requests on either tier (== [`Self::mean_served_qoe`]
+    /// when the delivery model is disabled).
+    pub fn mean_client_qoe(&self) -> f64 {
+        if self.served_count() == 0 {
+            return 0.0;
+        }
+        let sum: f64 =
+            self.served.iter().chain(&self.spilled).map(|s| s.client_qoe).sum();
+        sum / self.served_count() as f64
+    }
+
+    /// The client-vs-server QoE gap: mean server-side (paced) QoE minus
+    /// mean client-perceived QoE. 0 with the delivery model disabled;
+    /// grows with network quality loss.
+    pub fn client_qoe_gap(&self) -> f64 {
+        if self.served_count() == 0 {
+            return 0.0;
+        }
+        self.mean_served_qoe() - self.mean_client_qoe()
+    }
+
+    /// Total client playback stalls over both tiers.
+    pub fn total_stalls(&self) -> usize {
+        self.served.iter().chain(&self.spilled).map(|s| s.stall_count).sum()
+    }
+
+    /// Total seconds of client playback stall over both tiers.
+    pub fn total_stall_time(&self) -> f64 {
+        self.served.iter().chain(&self.spilled).map(|s| s.stall_time).sum()
+    }
+
+    /// Total token retransmissions over both tiers.
+    pub fn total_retransmits(&self) -> usize {
+        self.served.iter().chain(&self.spilled).map(|s| s.retransmits).sum()
+    }
+
+    /// Total tokens held by disconnect episodes over both tiers.
+    pub fn total_disconnects(&self) -> usize {
+        self.served.iter().chain(&self.spilled).map(|s| s.disconnects).sum()
+    }
+
     /// (unshaped, shaped) fraction of tokens delivered ahead of the
     /// digestion deadline, over both tiers.
     pub fn early_token_fractions(&self) -> (f64, f64) {
@@ -505,23 +566,67 @@ pub fn count_early_tokens(spec: &QoeSpec, times: &[f64]) -> usize {
 }
 
 /// Evaluate one finished request's delivery-layer outcome, optionally
-/// re-shaping its token timeline through the pacer.
-fn served_outcome(r: &RequestRecord, pacing_enabled: bool, cfg: &PacingConfig) -> ServedRequest {
+/// re-shaping its token timeline through the pacer and carrying it over
+/// the simulated last-mile network ([`crate::delivery`]).
+fn served_outcome(r: &RequestRecord, cfg: &GatewayConfig) -> ServedRequest {
     let spec = QoeSpec::new(r.expected_ttft.max(0.0), r.expected_tds.max(0.1));
     let rel: Vec<f64> = r.token_times.iter().map(|t| (t - r.arrival).max(0.0)).collect();
     let raw_early = count_early_tokens(&spec, &rel);
-    if !pacing_enabled {
+    if cfg.network.enabled {
+        // Joint pacer → network → client simulation: QoE timestamps come
+        // from the client side, and the pacer lead may adapt to jitter.
+        let out = deliver_request(
+            &spec,
+            cfg.pacing_enabled,
+            &cfg.pacing,
+            &cfg.network,
+            r.id,
+            &rel,
+        );
+        let (paced_qoe, paced_early) = if cfg.pacing_enabled {
+            let mut st = DigestState::new(&spec);
+            for &t in &out.release_times {
+                st.deliver(t);
+            }
+            (
+                qoe_finished(&spec, &st, out.release_times.len()),
+                count_early_tokens(&spec, &out.release_times),
+            )
+        } else {
+            (r.final_qoe, raw_early)
+        };
+        return ServedRequest {
+            id: r.id,
+            raw_qoe: r.final_qoe,
+            paced_qoe,
+            client_qoe: out.client_qoe,
+            stall_count: out.stall_count,
+            stall_time: out.stall_time,
+            retransmits: out.retransmits,
+            disconnects: out.disconnects,
+            raw_early_tokens: raw_early,
+            paced_early_tokens: paced_early,
+            output_tokens: r.output_tokens,
+            expected_tds: r.expected_tds,
+        };
+    }
+    if !cfg.pacing_enabled {
         return ServedRequest {
             id: r.id,
             raw_qoe: r.final_qoe,
             paced_qoe: r.final_qoe,
+            client_qoe: r.final_qoe,
+            stall_count: 0,
+            stall_time: 0.0,
+            retransmits: 0,
+            disconnects: 0,
             raw_early_tokens: raw_early,
             paced_early_tokens: raw_early,
             output_tokens: r.output_tokens,
             expected_tds: r.expected_tds,
         };
     }
-    let paced = pace_times(&spec, cfg, &rel);
+    let paced = pace_times(&spec, &cfg.pacing, &rel);
     let mut st = DigestState::new(&spec);
     for &t in &paced {
         st.deliver(t);
@@ -532,6 +637,11 @@ fn served_outcome(r: &RequestRecord, pacing_enabled: bool, cfg: &PacingConfig) -
         id: r.id,
         raw_qoe: r.final_qoe,
         paced_qoe,
+        client_qoe: paced_qoe,
+        stall_count: 0,
+        stall_time: 0.0,
+        retransmits: 0,
+        disconnects: 0,
         raw_early_tokens: raw_early,
         paced_early_tokens: paced_early,
         output_tokens: r.output_tokens,
@@ -938,7 +1048,7 @@ impl<T: GatewayTarget> Gateway<T> {
         let mut served = Vec::new();
         for m in &per_replica {
             for r in &m.requests {
-                served.push(served_outcome(r, self.cfg.pacing_enabled, &self.cfg.pacing));
+                served.push(served_outcome(r, &self.cfg));
             }
         }
         let mut spilled = Vec::new();
@@ -949,11 +1059,7 @@ impl<T: GatewayTarget> Gateway<T> {
             spill_replica_seconds = sp.replica_seconds(sp.now());
             for m in &metrics {
                 for r in &m.requests {
-                    spilled.push(served_outcome(
-                        r,
-                        self.cfg.pacing_enabled,
-                        &self.cfg.pacing,
-                    ));
+                    spilled.push(served_outcome(r, &self.cfg));
                 }
             }
             spill_per_replica = metrics;

@@ -61,8 +61,12 @@ impl Default for PacingConfig {
 pub struct TokenPacer {
     /// Minimum spacing between paced releases (s); 0 = pass-through.
     interval: f64,
-    /// Tokens released unpaced before the interval applies.
+    /// Unpaced-release budget target: tokens released unpaced before
+    /// the interval applies. May be raised mid-stream (see
+    /// [`TokenPacer::set_lead`]).
     lead: usize,
+    /// Unpaced releases consumed so far (≤ `lead`).
+    unpaced_used: usize,
     /// Generation timestamps of tokens not yet released.
     pending: VecDeque<f64>,
     released: usize,
@@ -76,6 +80,7 @@ impl TokenPacer {
         TokenPacer {
             interval: 1.0 / (spec.tds * cfg.rate_factor),
             lead: cfg.lead_tokens,
+            unpaced_used: 0,
             pending: VecDeque::new(),
             released: 0,
             last_release: f64::NEG_INFINITY,
@@ -87,10 +92,32 @@ impl TokenPacer {
         TokenPacer {
             interval: 0.0,
             lead: usize::MAX,
+            unpaced_used: 0,
             pending: VecDeque::new(),
             released: 0,
             last_release: f64::NEG_INFINITY,
         }
+    }
+
+    /// Retarget the lead buffer mid-stream (the jitter-adaptive mode,
+    /// [`crate::delivery`]). Growing the lead grants immediate unpaced
+    /// budget — the pacer bursts the difference to refill the client
+    /// buffer; shrinking it only limits future unpaced releases (tokens
+    /// already on the wire are not clawed back). With a constant lead
+    /// this is exactly the static behavior.
+    pub fn set_lead(&mut self, lead: usize) {
+        self.lead = lead;
+    }
+
+    /// Current lead-token target.
+    pub fn lead(&self) -> usize {
+        self.lead
+    }
+
+    /// Release time of the most recently released token
+    /// (`NEG_INFINITY` before the first release).
+    pub fn last_release(&self) -> f64 {
+        self.last_release
     }
 
     /// Record a token generated at time `t`.
@@ -111,7 +138,7 @@ impl TokenPacer {
     }
 
     fn due_time(&self, gen_t: f64) -> f64 {
-        if self.released < self.lead {
+        if self.unpaced_used < self.lead {
             gen_t.max(self.last_release)
         } else {
             gen_t.max(self.last_release + self.interval)
@@ -123,12 +150,16 @@ impl TokenPacer {
     pub fn release_due(&mut self, now: f64) -> usize {
         let mut n = 0;
         while let Some(&gen_t) = self.pending.front() {
+            let unpaced = self.unpaced_used < self.lead;
             let due = self.due_time(gen_t);
             if due > now {
                 break;
             }
             self.pending.pop_front();
             self.released += 1;
+            if unpaced {
+                self.unpaced_used += 1;
+            }
             self.last_release = due;
             n += 1;
         }
@@ -245,6 +276,28 @@ mod tests {
             pace_times(&spec(), &c, &[1.0, 1.0, 1.0, 1.0]),
             vec![1.0, 1.25, 1.5, 1.75]
         );
+    }
+
+    #[test]
+    fn raising_lead_mid_stream_grants_unpaced_budget() {
+        // The adaptive mode's contract: growing the lead from L to L+Δ
+        // after the original budget was spent releases Δ more tokens
+        // unpaced (refilling the client buffer), then pacing resumes.
+        let mut p = TokenPacer::new(&spec(), &cfg()); // lead 2, 0.25 s
+        p.push_n(1.0, 10);
+        assert_eq!(p.release_due(1.0), 2, "static lead of 2 passes");
+        assert_eq!(p.release_due(1.5), 2, "paced at 1.25, 1.5");
+        p.set_lead(5); // +3 budget (2 already used)
+        assert_eq!(p.release_due(1.5), 3, "the raise bursts immediately");
+        assert_eq!(p.release_due(1.74), 0, "then pacing resumes");
+        assert_eq!(p.release_due(1.75), 1);
+        // Shrinking below what was used never claws anything back and
+        // simply leaves the pacer in paced mode.
+        p.set_lead(1);
+        assert_eq!(p.release_due(2.0), 1);
+        assert_eq!(p.release_due(10.0), 1);
+        assert_eq!(p.pending(), 0);
+        assert_eq!(p.released(), 10);
     }
 
     #[test]

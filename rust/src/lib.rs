@@ -21,6 +21,7 @@
 //! | L3 | [`coordinator`] | continuous-batching engine, block KV manager with session prefix parking, schedulers (FCFS / RR / Andes greedy / exact DP), metrics |
 //! | L4 | [`cluster`] | elastic replica pool + routing policies (incl. session affinity), replica-seconds accounting |
 //! | L4 | [`gateway`] | the QoE-aware front door: admission (tier-weighted), pacing, surge detection, predictive autoscaling, spill tier, multi-gateway federation |
+//! | L4 | [`delivery`] | client-side delivery: per-request network model (jitter/loss/disconnects), client playback buffer with stall accounting, jitter-adaptive pacer lead |
 //! | L5 | [`server`] | TCP streaming server (JSON lines) over the real tiny-OPT model |
 //! | L5 | [`experiments`] | one entry per paper figure/table plus the `ext-*` extensions |
 //! | — | [`config`] | JSON deployment config: model, GPU, scheduler, engine, gateway, autoscale, spill, federation, tiers, sessions |
@@ -40,6 +41,7 @@ pub mod util;
 pub mod backend;
 pub mod cluster;
 pub mod config;
+pub mod delivery;
 pub mod experiments;
 pub mod gateway;
 pub mod server;

@@ -140,6 +140,14 @@ fn cmd_serve(argv: &[String]) -> i32 {
             "federated gateway instances (the live server supports 1; \
              use `andes simulate --gateways N` for federation)",
         ),
+        OptSpec::value(
+            "network",
+            None,
+            "client-side delivery model mix, e.g. lte or fiber:0.6,lte:0.4 \
+             (advisory: the live server streams over a real network; the \
+             model is exercised by `andes simulate --network` and \
+             `andes exp ext-network`)",
+        ),
     ];
     let about = "Serve the real tiny-OPT model over TCP (JSON lines)";
     let args = match Args::parse(argv, &specs) {
@@ -240,6 +248,18 @@ fn cmd_serve(argv: &[String]) -> i32 {
         }
         Ok(_) => {}
         Err(e) => return die_on_cli("serve", about, &specs, e),
+    }
+    if let Some(s) = args.get("network") {
+        match andes::delivery::NetworkConfig::parse_mix(s) {
+            Ok(mix) => {
+                cfg.gateway.network.enabled = true;
+                cfg.gateway.network.mix = mix;
+            }
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                return 2;
+            }
+        }
     }
     match andes::server::serve(cfg, None) {
         Ok(()) => 0,
@@ -364,6 +384,17 @@ fn cmd_simulate(argv: &[String]) -> i32 {
              (requires --park)",
         ),
         OptSpec::value("think", Some("4.0"), "mean think time between session turns (s)"),
+        OptSpec::value(
+            "network",
+            None,
+            "client-side delivery model: a profile (ideal|fiber|wifi|lte) or a \
+             weighted mix like fiber:0.6,wifi:0.3,lte:0.1 (enables the gateway)",
+        ),
+        OptSpec::flag(
+            "adaptive-lead",
+            "grow the pacer lead from observed ack jitter instead of the static \
+             lead (requires --network)",
+        ),
     ];
     let about = "One simulated serving run";
     let args = match Args::parse(argv, &specs) {
@@ -438,6 +469,21 @@ fn cmd_simulate(argv: &[String]) -> i32 {
         }
         Err(e) => return die_on_cli("simulate", about, &specs, e),
     };
+    let network_mix = match args.get("network") {
+        Some(s) => match andes::delivery::NetworkConfig::parse_mix(s) {
+            Ok(mix) => Some(mix),
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                return 2;
+            }
+        },
+        None => None,
+    };
+    let adaptive_lead = args.has_flag("adaptive-lead");
+    if adaptive_lead && network_mix.is_none() {
+        eprintln!("--adaptive-lead requires --network (nothing to observe jitter on)");
+        return 2;
+    }
     let use_gateway = args.has_flag("gateway")
         || autoscale_arg.is_some()
         || spill_replicas > 0
@@ -445,7 +491,8 @@ fn cmd_simulate(argv: &[String]) -> i32 {
         || gateways > 1
         || tier_weights.is_some()
         || sessions.is_some()
-        || park;
+        || park
+        || network_mix.is_some();
     if gateways > 1 && (autoscale_arg.is_some() || spill_replicas > 0) {
         eprintln!(
             "--gateways > 1 fronts a static cluster; it cannot be combined with \
@@ -467,7 +514,8 @@ fn cmd_simulate(argv: &[String]) -> i32 {
             eprintln!(
                 "--trace replays a recorded workload on a single static engine; \
                  it cannot be combined with --gateway/--replicas/--autoscale/\
-                 --spill-replicas/--gateways/--tier-weights/--sessions/--park"
+                 --spill-replicas/--gateways/--tier-weights/--sessions/--park/\
+                 --network"
             );
             return 2;
         }
@@ -577,6 +625,11 @@ fn cmd_simulate(argv: &[String]) -> i32 {
         if let Some(w) = tier_weights {
             gcfg.admission.tier_weights = w;
         }
+        if let Some(mix) = network_mix.clone() {
+            gcfg.network.enabled = true;
+            gcfg.network.mix = mix;
+            gcfg.network.adaptive_lead = adaptive_lead;
+        }
         let mut cluster = Cluster::new(
             start_replicas,
             engine_cfg.clone(),
@@ -641,6 +694,23 @@ fn cmd_simulate(argv: &[String]) -> i32 {
                         res.stats.forced_refreshes,
                         res.replica_seconds,
                     );
+                    if network_mix.is_some() && !res.served.is_empty() {
+                        let n = res.served.len() as f64;
+                        let client: f64 =
+                            res.served.iter().map(|s| s.client_qoe).sum::<f64>() / n;
+                        let stalls: usize =
+                            res.served.iter().map(|s| s.stall_count).sum();
+                        let stall_time: f64 =
+                            res.served.iter().map(|s| s.stall_time).sum();
+                        let rtx: usize =
+                            res.served.iter().map(|s| s.retransmits).sum();
+                        println!(
+                            "delivery: client_qoe={client:.3} qoe_gap={:.3} \
+                             stalls={stalls} stall_time={stall_time:.1}s \
+                             retransmits={rtx} adaptive_lead={adaptive_lead}",
+                            res.mean_served_qoe() - client,
+                        );
+                    }
                     0
                 }
                 Err(e) => {
@@ -676,6 +746,20 @@ fn cmd_simulate(argv: &[String]) -> i32 {
                     res.stats.scale_out_requests,
                     res.stats.scale_ins,
                 );
+                if network_mix.is_some() {
+                    println!(
+                        "delivery: client_qoe={:.3} qoe_gap={:.3} stalls={} \
+                         stall_time={:.1}s retransmits={} disconnects={} \
+                         adaptive_lead={}",
+                        res.mean_client_qoe(),
+                        res.client_qoe_gap(),
+                        res.total_stalls(),
+                        res.total_stall_time(),
+                        res.total_retransmits(),
+                        res.total_disconnects(),
+                        adaptive_lead,
+                    );
+                }
                 if sessions.is_some() || park {
                     let hits: u64 = res.per_replica.iter().map(|m| m.prefix_hits).sum();
                     let parked: u64 =

@@ -519,6 +519,55 @@ mod tests {
     }
 
     #[test]
+    fn qoe_at_zero_cap_and_ttft_boundary_edges() {
+        // Pinned now that arrival times come from the client side: the
+        // delivery layer can push every arrival past the expected-TTFT
+        // boundary, so the boundary itself must be well-defined.
+        let sp = spec(); // ttft 1, tds 2
+        let mut st = DigestState::new(&sp);
+        st.deliver_n(0.5, 3);
+        // Zero-length cap: the user expects nothing — perfect service.
+        assert_eq!(qoe_at(&sp, &st, 5.0, Some(0.0)), 1.0);
+        // Exactly at the expected TTFT the expected area is still zero.
+        assert_eq!(qoe_at(&sp, &DigestState::new(&sp), sp.ttft, None), 1.0);
+        // Epsilon past it with nothing delivered, QoE collapses.
+        assert_eq!(qoe_at(&sp, &DigestState::new(&sp), sp.ttft + 1e-9, None), 0.0);
+    }
+
+    #[test]
+    fn ttft_penalty_edges() {
+        let sp = spec();
+        let mut st = DigestState::new(&sp);
+        st.deliver_n(1.0, 4);
+        st.advance_to(4.0);
+        let base = qoe_at(&sp, &st, 4.0, Some(4.0));
+        // On-time first token: any alpha is a no-op (alpha^0 == 1,
+        // including alpha = 0, since 0^0 == 1 in IEEE powf).
+        for alpha in [0.0, 0.5, 1.0] {
+            let q = qoe_with_ttft_penalty(&sp, &st, 4.0, Some(4.0), alpha, Some(1.0));
+            assert_close(q, base, 1e-12);
+        }
+        // Still waiting exactly at the boundary: lateness 0, no penalty.
+        let empty = DigestState::new(&sp);
+        assert_eq!(qoe_with_ttft_penalty(&sp, &empty, sp.ttft, None, 0.5, None), 1.0);
+        // alpha = 0 annihilates any actual lateness.
+        assert_eq!(qoe_with_ttft_penalty(&sp, &st, 4.0, Some(4.0), 0.0, Some(3.0)), 0.0);
+    }
+
+    #[test]
+    fn near_zero_tds_is_stable() {
+        // QoeSpec rejects tds == 0 outright (pinned in spec.rs); the
+        // smallest usable digestion speeds must still produce finite,
+        // in-range QoE rather than overflow the ramp arithmetic.
+        let sp = QoeSpec::new(1.0, 1e-9);
+        let mut st = DigestState::new(&sp);
+        st.deliver_n(0.5, 3);
+        let q = qoe_at(&sp, &st, 2.0, Some(3.0));
+        assert!((0.0..=1.0).contains(&q), "q = {q}");
+        assert!(q.is_finite());
+    }
+
+    #[test]
     fn qoe_monotone_in_lateness() {
         // Property: shifting every delivery later can only reduce QoE.
         let sp = spec();

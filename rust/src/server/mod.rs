@@ -172,6 +172,16 @@ fn engine_loop(cfg: ServerConfig, rx: Receiver<Submission>) -> Result<()> {
             cfg.spill.replicas
         );
     }
+    if cfg.gateway.network.enabled {
+        // The live server's tokens ride a real TCP link; the simulated
+        // delivery model (and its client-vs-server QoE split) is a
+        // simulation-tier feature.
+        log::info!(
+            "network delivery model configured — advisory only for the live \
+             server (its clients sit on a real network); exercised by \
+             `andes simulate --network` and `andes exp ext-network`"
+        );
+    }
     if cfg.park_prefixes {
         // Session/turn tags are accepted and recorded either way; the
         // prefix-aware admission path below stays inert until a real

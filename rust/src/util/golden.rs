@@ -1,0 +1,196 @@
+//! Golden-snapshot comparison for seeded regression runs.
+//!
+//! A golden test runs a fixed-seed scenario, reduces it to a flat set of
+//! named metrics, and compares them against a JSON snapshot committed
+//! under `rust/tests/golden/`. Each metric carries its own **relative
+//! tolerance**: counts pin exactly (`rel_tol = 0`), floats absorb
+//! platform-libm noise (`rel_tol ≈ 1e-6`) while still catching any real
+//! behavior change.
+//!
+//! Lifecycle:
+//!
+//! - **Missing snapshot** → the run *blesses* it (writes the file) and
+//!   passes with a notice. This bootstraps a fresh scenario: run the
+//!   suite once, review the generated JSON, and commit it.
+//! - **Intentional behavior change** → regenerate with
+//!   `GOLDEN_BLESS=1 cargo test --test golden` and commit the diff.
+//! - **Unintentional drift** → the comparison fails, naming every
+//!   metric outside its tolerance.
+//!
+//! ```
+//! use andes::util::golden::{metric, check_or_bless};
+//! let dir = std::env::temp_dir().join("andes-golden-doc");
+//! let path = dir.join("demo.json");
+//! let _ = std::fs::remove_file(&path);
+//! let metrics = [metric("served", 42.0, 0.0), metric("mean_qoe", 0.87, 1e-6)];
+//! // First run blesses, second run verifies.
+//! check_or_bless(&path, &metrics).unwrap();
+//! check_or_bless(&path, &metrics).unwrap();
+//! // Out-of-tolerance drift is caught.
+//! let drifted = [metric("served", 41.0, 0.0), metric("mean_qoe", 0.87, 1e-6)];
+//! assert!(check_or_bless(&path, &drifted).is_err());
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::json::{pretty, Json};
+
+/// One pinned metric: name, observed value, relative tolerance.
+#[derive(Debug, Clone, Copy)]
+pub struct GoldenMetric {
+    pub name: &'static str,
+    pub value: f64,
+    /// Allowed relative drift: `|observed − golden| ≤ rel_tol ×
+    /// max(|golden|, 1)`. 0 pins the value exactly (use for counts).
+    pub rel_tol: f64,
+}
+
+/// Shorthand constructor.
+pub fn metric(name: &'static str, value: f64, rel_tol: f64) -> GoldenMetric {
+    GoldenMetric { name, value, rel_tol }
+}
+
+/// Compare `metrics` against the snapshot at `path`, blessing it when
+/// missing or when `GOLDEN_BLESS=1` is set (see the module docs).
+pub fn check_or_bless(path: &Path, metrics: &[GoldenMetric]) -> Result<()> {
+    // A non-finite metric would serialize as invalid JSON and poison
+    // every later run with an opaque parse error — refuse it by name.
+    if let Some(bad) = metrics.iter().find(|m| !m.value.is_finite()) {
+        bail!(
+            "golden metric '{}' is non-finite ({}) — fix the scenario before pinning",
+            bad.name,
+            bad.value
+        );
+    }
+    let bless = std::env::var("GOLDEN_BLESS").map(|v| v == "1").unwrap_or(false);
+    if bless || !path.exists() {
+        write_snapshot(path, metrics)?;
+        eprintln!(
+            "golden: blessed {} ({} metrics) — review and commit it",
+            path.display(),
+            metrics.len()
+        );
+        return Ok(());
+    }
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading golden snapshot {}", path.display()))?;
+    let j = Json::parse(&text)
+        .with_context(|| format!("parsing golden snapshot {}", path.display()))?;
+    let obj = match j.as_obj() {
+        Some(m) => m,
+        None => bail!("golden snapshot {} is not a JSON object", path.display()),
+    };
+    let mut failures: Vec<String> = Vec::new();
+    for m in metrics {
+        match obj.get(m.name).and_then(|v| v.as_f64()) {
+            None => failures.push(format!(
+                "  {}: missing from the snapshot (new metric? re-bless)",
+                m.name
+            )),
+            Some(golden) => {
+                let tol = m.rel_tol * golden.abs().max(1.0);
+                // NaN-safe: a NaN on either side fails the comparison.
+                let within = (m.value - golden).abs() <= tol;
+                if !within {
+                    failures.push(format!(
+                        "  {}: observed {} vs golden {} (tol {})",
+                        m.name, m.value, golden, tol
+                    ));
+                }
+            }
+        }
+    }
+    for name in obj.keys() {
+        if !metrics.iter().any(|m| m.name == name.as_str()) {
+            failures.push(format!(
+                "  {name}: present in the snapshot but no longer reported"
+            ));
+        }
+    }
+    if !failures.is_empty() {
+        bail!(
+            "golden snapshot {} drifted:\n{}\n\
+             (intentional change? regenerate with GOLDEN_BLESS=1)",
+            path.display(),
+            failures.join("\n")
+        );
+    }
+    Ok(())
+}
+
+fn write_snapshot(path: &Path, metrics: &[GoldenMetric]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("creating {}", parent.display()))?;
+    }
+    let obj = Json::Obj(
+        metrics.iter().map(|m| (m.name.to_string(), Json::Num(m.value))).collect(),
+    );
+    let mut text = pretty(&obj);
+    text.push('\n');
+    std::fs::write(path, text)
+        .with_context(|| format!("writing golden snapshot {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("andes-golden-tests");
+        let _ = std::fs::create_dir_all(&dir);
+        dir.join(name)
+    }
+
+    #[test]
+    fn bless_then_verify_roundtrip() {
+        let path = tmp("roundtrip.json");
+        let _ = std::fs::remove_file(&path);
+        let ms = [metric("count", 12.0, 0.0), metric("qoe", 0.923456, 1e-6)];
+        check_or_bless(&path, &ms).unwrap();
+        assert!(path.exists());
+        check_or_bless(&path, &ms).unwrap();
+    }
+
+    #[test]
+    fn drift_beyond_tolerance_fails() {
+        let path = tmp("drift.json");
+        let _ = std::fs::remove_file(&path);
+        check_or_bless(&path, &[metric("qoe", 0.9, 1e-6)]).unwrap();
+        // Inside tolerance: passes.
+        check_or_bless(&path, &[metric("qoe", 0.9 + 5e-7, 1e-6)]).unwrap();
+        // Outside: fails and names the metric.
+        let err = check_or_bless(&path, &[metric("qoe", 0.91, 1e-6)]).unwrap_err();
+        assert!(err.to_string().contains("qoe"), "{err:#}");
+    }
+
+    #[test]
+    fn non_finite_metrics_are_rejected_before_blessing() {
+        let path = tmp("nan.json");
+        let _ = std::fs::remove_file(&path);
+        let err =
+            check_or_bless(&path, &[metric("bad", f64::NAN, 0.0)]).unwrap_err();
+        assert!(err.to_string().contains("bad"), "{err:#}");
+        assert!(!path.exists(), "a poisoned snapshot must never be written");
+    }
+
+    #[test]
+    fn exact_pins_and_key_set_changes() {
+        let path = tmp("keys.json");
+        let _ = std::fs::remove_file(&path);
+        check_or_bless(&path, &[metric("served", 40.0, 0.0)]).unwrap();
+        // rel_tol 0 pins exactly.
+        assert!(check_or_bless(&path, &[metric("served", 41.0, 0.0)]).is_err());
+        // A metric vanishing from the report is drift too.
+        assert!(check_or_bless(&path, &[metric("other", 40.0, 0.0)]).is_err());
+        // As is a brand-new metric the snapshot has never seen.
+        assert!(check_or_bless(
+            &path,
+            &[metric("served", 40.0, 0.0), metric("new", 1.0, 0.0)]
+        )
+        .is_err());
+    }
+}

@@ -1,11 +1,12 @@
 //! In-tree substrates: the offline build environment provides no crates
 //! beyond the `xla` closure, so PRNG/distributions, JSON, CLI parsing,
-//! CSV, plotting, micro-benchmarking, and property testing are implemented
-//! here (see DESIGN.md §1, §3).
+//! CSV, plotting, micro-benchmarking, property testing, and golden-snapshot
+//! comparison are implemented here (see DESIGN.md §1, §3).
 
 pub mod bench;
 pub mod cli;
 pub mod csv;
+pub mod golden;
 pub mod json;
 pub mod plot;
 pub mod rng;

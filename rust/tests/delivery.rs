@@ -1,0 +1,375 @@
+//! Delivery-layer integration & property tests (DESIGN.md §11): parity
+//! with the pacer-only path, client-buffer invariants, token
+//! conservation on the wire, run determinism, and client-side QoE edge
+//! cases.
+
+use andes::cluster::{Cluster, RoutingPolicy};
+use andes::config::SchedulerConfig;
+use andes::coordinator::engine::EngineConfig;
+use andes::delivery::{
+    deliver_request, ClientBuffer, NetworkConfig, NetworkModel, NetworkProfile,
+};
+use andes::gateway::{Gateway, GatewayConfig, GatewayRunResult};
+use andes::model::gpu::a100_4x;
+use andes::model::latency::LatencyModel;
+use andes::model::llm::opt_66b;
+use andes::qoe::metric::qoe_with_ttft_penalty;
+use andes::qoe::spec::QoeSpec;
+use andes::util::rng::Rng;
+use andes::util::testing::check_prop;
+use andes::workload::{ArrivalProcess, Dataset, QoeTrace, SessionWorkload, Workload};
+
+fn small_cluster(latency: &LatencyModel) -> Cluster {
+    let ecfg = EngineConfig {
+        kv_capacity_tokens: 6000,
+        swap_capacity_tokens: 12_000,
+        ..EngineConfig::default()
+    };
+    Cluster::new(2, ecfg, latency.clone(), &SchedulerConfig::Fcfs, RoutingPolicy::QoeAware)
+}
+
+// ------------------------------------------------------------- parity
+
+#[test]
+fn zero_profile_delivery_is_bit_identical_to_pacer_only_path() {
+    // Satellite: with the network section absent — and with an explicit
+    // zero-latency/zero-jitter profile — per-request QoE, stats, and
+    // the rejection stream are bit-identical to the pacer-only path,
+    // across random traces, with and without pacing/adaptive-lead.
+    let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+    check_prop("delivery zero-profile parity", 6, |rng| {
+        let n = rng.range(15, 40);
+        let rate = 0.5 + rng.f64() * 6.0;
+        let pacing_enabled = rng.chance(0.7);
+        let adaptive = rng.chance(0.5);
+        let trace = Workload {
+            dataset: Dataset::ShareGpt,
+            arrivals: ArrivalProcess::Poisson { rate },
+            qoe_trace: QoeTrace::TextReading,
+            num_requests: n,
+            seed: rng.next_u64(),
+        }
+        .generate();
+        let mut run = |network: Option<NetworkConfig>| -> GatewayRunResult {
+            let mut gcfg = GatewayConfig::default();
+            gcfg.pacing_enabled = pacing_enabled;
+            gcfg.surge.baseline_rate = 2.0;
+            if let Some(net) = network {
+                gcfg.network = net;
+            }
+            let mut gw = Gateway::new(small_cluster(&latency), gcfg);
+            gw.run_trace(trace.clone()).unwrap()
+        };
+        let plain = run(None);
+        let zero = NetworkConfig {
+            enabled: true,
+            adaptive_lead: adaptive,
+            ..NetworkConfig::default()
+        }
+        .with_mix(vec![(NetworkProfile::ideal(), 1.0)]);
+        let ideal = run(Some(zero));
+
+        assert_eq!(plain.served.len(), ideal.served.len());
+        for (a, b) in plain.served.iter().zip(&ideal.served) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.raw_qoe.to_bits(), b.raw_qoe.to_bits(), "raw qoe {}", a.id);
+            assert_eq!(a.paced_qoe.to_bits(), b.paced_qoe.to_bits(), "paced qoe {}", a.id);
+            assert_eq!(a.raw_early_tokens, b.raw_early_tokens);
+            assert_eq!(a.paced_early_tokens, b.paced_early_tokens);
+            assert_eq!(a.output_tokens, b.output_tokens);
+            // The zero link adds nothing on top of the server schedule.
+            assert_eq!(
+                b.client_qoe.to_bits(),
+                b.paced_qoe.to_bits(),
+                "ideal-link client qoe must equal server qoe on {}",
+                a.id
+            );
+            // Stalls are an end-to-end playback metric: even the ideal
+            // link reports underruns caused by generation gaps, so they
+            // are not asserted zero here — only the link's own effects.
+            assert_eq!(b.retransmits, 0);
+            assert_eq!(b.disconnects, 0);
+        }
+        assert_eq!(plain.rejections.len(), ideal.rejections.len());
+        for (a, b) in plain.rejections.iter().zip(&ideal.rejections) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.time.to_bits(), b.time.to_bits());
+            assert_eq!(a.reason.label(), b.reason.label());
+        }
+        let (s, t) = (&plain.stats, &ideal.stats);
+        assert_eq!(s.arrivals, t.arrivals);
+        assert_eq!(s.admitted, t.admitted);
+        assert_eq!(s.deferred, t.deferred);
+        assert_eq!(s.rejected, t.rejected);
+        assert_eq!(s.surge_transitions, t.surge_transitions);
+        // Aggregates collapse to the pacer-only numbers.
+        assert_eq!(
+            ideal.mean_client_qoe().to_bits(),
+            ideal.mean_served_qoe().to_bits()
+        );
+        assert_eq!(ideal.client_qoe_gap(), 0.0);
+        assert_eq!(ideal.total_retransmits(), 0);
+    });
+}
+
+// ------------------------------------------- client-buffer invariants
+
+#[test]
+fn client_buffer_invariants_under_random_links() {
+    // Satellite: tokens replay in order exactly once, nothing digests
+    // before its client arrival, stall time is zero whenever delivery
+    // stays ahead of the digestion curve, and the wire conserves tokens
+    // (sent == delivered + in-flight + lost-pending-retransmit) at
+    // every probe instant — across random jitter/loss/disconnect links.
+    check_prop("client buffer invariants", 60, |rng| {
+        let profile = NetworkProfile {
+            name: "random",
+            base_latency: rng.f64() * 0.1,
+            jitter_mean: rng.f64() * 0.4,
+            loss_prob: rng.f64() * 0.1,
+            retransmit_delay: 0.05 + rng.f64() * 0.3,
+            disconnect_rate: if rng.chance(0.5) { rng.f64() * 0.2 } else { 0.0 },
+            disconnect_mean: 0.2 + rng.f64() * 2.0,
+        };
+        let spec = QoeSpec::new(rng.f64() * 2.0, 1.0 + rng.f64() * 8.0);
+        let n = rng.range(1, 120);
+        let mut releases = Vec::with_capacity(n);
+        let mut t = 0.0;
+        for _ in 0..n {
+            t += rng.f64() * 0.5;
+            releases.push(t);
+        }
+        let mut net = NetworkModel::new(profile, Rng::new(rng.next_u64()));
+        let mut buf = ClientBuffer::new(&spec);
+        let mut prev = f64::NEG_INFINITY;
+        for &r in &releases {
+            let tr = net.send(r);
+            assert!(tr.arrived_at >= r, "token arrived before its release");
+            assert!(tr.arrived_at >= prev, "reordered delivery");
+            prev = tr.arrived_at;
+            buf.receive(tr.arrived_at);
+            // In order, exactly once: the digest curve has seen every
+            // received token and nothing else.
+            assert_eq!(buf.digest().delivered(), buf.received() as f64);
+            assert!(
+                buf.digest().digested() <= buf.digest().delivered() + 1e-9,
+                "digestion ran ahead of delivery"
+            );
+        }
+        assert_eq!(buf.received(), n, "exactly-once replay");
+        // Conservation partition at random probe instants.
+        for _ in 0..20 {
+            let probe = rng.f64() * (prev + 1.0);
+            let sent_by = releases.iter().filter(|&&s| s <= probe).count();
+            let (d, f, l) = net.census_at(probe);
+            assert_eq!(d + f + l, sent_by, "wire conservation at t={probe}");
+        }
+        let (d, _, _) = net.census_at(f64::INFINITY);
+        assert_eq!(d, n, "every token eventually delivers");
+        // Stall-free whenever delivery stays (strictly) ahead of the
+        // digestion ramp anchored at the first arrival.
+        let arrivals: Vec<f64> = net.transits().iter().map(|tr| tr.arrived_at).collect();
+        let a0 = arrivals[0];
+        let strictly_ahead = arrivals
+            .iter()
+            .enumerate()
+            .all(|(i, &a)| i == 0 || a <= a0 + i as f64 / spec.tds - 1e-9);
+        if strictly_ahead {
+            assert_eq!(buf.stall_count(), 0, "delivery ahead of digestion yet stalled");
+            assert_eq!(buf.stall_time(), 0.0);
+        }
+    });
+}
+
+#[test]
+fn burst_delivery_never_stalls() {
+    // Constructive anchor for the stall invariant: everything arrives
+    // at once, so delivery is always ahead and playback never waits.
+    let spec = QoeSpec::new(1.0, 4.0);
+    let mut buf = ClientBuffer::new(&spec);
+    for _ in 0..50 {
+        buf.receive(2.0);
+    }
+    assert_eq!(buf.stall_count(), 0);
+    assert_eq!(buf.stall_time(), 0.0);
+}
+
+// -------------------------------------------------------- determinism
+
+#[test]
+fn ext_network_summary_is_byte_identical_across_runs() {
+    // Satellite: same seed ⇒ byte-identical ext-network summary across
+    // two in-process runs (all grid randomness flows from fixed seeds).
+    let a = andes::experiments::network::run_grid(40, None).unwrap();
+    let b = andes::experiments::network::run_grid(40, None).unwrap();
+    assert_eq!(a, b, "ext-network grid must be deterministic");
+    assert!(a.contains("shape checks"), "summary must include the verdicts");
+}
+
+#[test]
+fn session_workload_with_network_is_deterministic() {
+    // Pins the whole RNG plumbing: SessionWorkload → arrivals → network
+    // draws. Two in-process runs must agree to the last bit.
+    let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+    let run = || -> String {
+        let trace = SessionWorkload {
+            num_sessions: 15,
+            arrivals: ArrivalProcess::Poisson { rate: 1.0 },
+            qoe_trace: QoeTrace::TextReading,
+            min_turns: 2,
+            max_turns: 4,
+            think_time_mean: 3.0,
+            seed: 7,
+        }
+        .generate();
+        let mut gcfg = GatewayConfig::default();
+        gcfg.surge.baseline_rate = 2.0;
+        gcfg.network.enabled = true;
+        gcfg.network.adaptive_lead = true;
+        gcfg.network =
+            gcfg.network.clone().with_mix(vec![(NetworkProfile::lte(), 1.0)]);
+        let mut gw = Gateway::new(small_cluster(&latency), gcfg);
+        let res = gw.run_trace(trace).unwrap();
+        let mut out = String::new();
+        for s in &res.served {
+            out.push_str(&format!(
+                "{}:{:x}:{:x}:{}:{}:{}\n",
+                s.id,
+                s.client_qoe.to_bits(),
+                s.stall_time.to_bits(),
+                s.stall_count,
+                s.retransmits,
+                s.disconnects,
+            ));
+        }
+        out
+    };
+    assert_eq!(run(), run());
+}
+
+// -------------------------------------------------- client-side edges
+
+#[test]
+fn disconnect_spanning_expected_ttft_boundary() {
+    // Satellite: a disconnect episode that straddles the expected-TTFT
+    // instant pushes the *client's* first token past the deadline even
+    // though the server released it on time — the TTFT penalty must
+    // bite on the client timeline and stay inert on the server one.
+    let spec = QoeSpec::new(1.0, 4.0);
+    let profile = NetworkProfile {
+        disconnect_rate: 2.0,
+        disconnect_mean: 3.0,
+        jitter_mean: 0.0,
+        loss_prob: 0.0,
+        base_latency: 0.0,
+        ..NetworkProfile::lte()
+    };
+    // Find a seed whose first episode covers the release at t=0.9 and
+    // ends past the expected TTFT of 1.0 (deterministic thereafter).
+    let mut found = None;
+    for seed in 0..200u64 {
+        let mut net = NetworkModel::new(profile, Rng::new(seed));
+        let tr = net.send(0.9);
+        if tr.disconnect_wait > 0.0 && tr.arrived_at > spec.ttft + 0.5 {
+            found = Some((seed, tr));
+            break;
+        }
+    }
+    let (seed, first) = found.expect("an episode straddling t=0.9 must exist in 200 seeds");
+    // Replay the full stream on that seed through the client buffer.
+    let mut net = NetworkModel::new(profile, Rng::new(seed));
+    let mut buf = ClientBuffer::new(&spec);
+    let releases: Vec<f64> = (0..12).map(|i| 0.9 + i as f64 * 0.25).collect();
+    let mut first_arrival = None;
+    for &r in &releases {
+        let tr = net.send(r);
+        if first_arrival.is_none() {
+            first_arrival = Some(tr.arrived_at);
+        }
+        buf.receive(tr.arrived_at);
+    }
+    let client_ttft = first_arrival.unwrap();
+    assert_eq!(client_ttft, first.arrived_at);
+    assert!(client_ttft > spec.ttft, "the disconnect must push TTFT past expected");
+    let horizon = buf.digest().digest_end().max(client_ttft + 1.0);
+    let cap = Some(releases.len() as f64);
+    let base = qoe_with_ttft_penalty(&spec, buf.digest(), horizon, cap, 1.0, Some(client_ttft));
+    let penalized =
+        qoe_with_ttft_penalty(&spec, buf.digest(), horizon, cap, 0.5, Some(client_ttft));
+    let lateness = client_ttft - spec.ttft;
+    let expect = 0.5f64.powf(lateness) * base;
+    assert!(
+        (penalized - expect).abs() < 1e-9,
+        "penalty must follow the client-side lateness: {penalized} vs {expect}"
+    );
+    // A server-side observer (on-time release at 0.9) sees no penalty.
+    let server =
+        qoe_with_ttft_penalty(&spec, buf.digest(), horizon, cap, 0.5, Some(releases[0]));
+    assert_eq!(server, base, "server-side TTFT was on time");
+}
+
+#[test]
+fn zero_length_response_is_perfect_on_any_link() {
+    // Satellite edge: an empty stream has nothing to deliver — QoE 1,
+    // no stalls, regardless of link quality or adaptive mode.
+    for adaptive in [false, true] {
+        let cfg = NetworkConfig {
+            enabled: true,
+            adaptive_lead: adaptive,
+            ..NetworkConfig::default()
+        }
+        .with_mix(vec![(NetworkProfile::lte(), 1.0)]);
+        let out = deliver_request(
+            &QoeSpec::new(1.0, 4.8),
+            true,
+            &andes::gateway::PacingConfig::default(),
+            &cfg,
+            3,
+            &[],
+        );
+        assert_eq!(out.client_qoe, 1.0);
+        assert_eq!(out.stall_count, 0);
+        assert_eq!(out.retransmits, 0);
+    }
+}
+
+// ------------------------------------------------- adaptive-lead story
+
+#[test]
+fn adaptive_lead_cuts_stalls_on_jittery_links() {
+    // The tentpole's control-law claim, as a direct test: across many
+    // seeded lte links, the adaptive lead must strictly reduce total
+    // stall time versus the static lead, and never lose client QoE on
+    // aggregate.
+    let spec = QoeSpec::new(1.0, 4.8);
+    let pacing = andes::gateway::PacingConfig { rate_factor: 1.0, lead_tokens: 4 };
+    let gen: Vec<f64> = vec![0.5; 250]; // a long overfast stream
+    let mk = |adaptive: bool| {
+        NetworkConfig { enabled: true, adaptive_lead: adaptive, ..NetworkConfig::default() }
+            .with_mix(vec![(NetworkProfile::lte(), 1.0)])
+    };
+    let (mut stall_static, mut stall_adaptive) = (0.0f64, 0.0f64);
+    let (mut qoe_static, mut qoe_adaptive) = (0.0f64, 0.0f64);
+    for id in 0..40 {
+        let s = deliver_request(&spec, true, &pacing, &mk(false), id, &gen);
+        let a = deliver_request(&spec, true, &pacing, &mk(true), id, &gen);
+        stall_static += s.stall_time;
+        stall_adaptive += a.stall_time;
+        qoe_static += s.client_qoe;
+        qoe_adaptive += a.client_qoe;
+        assert!(a.final_lead >= pacing.lead_tokens);
+    }
+    assert!(stall_static > 0.0, "the static lead must stall on lte jitter");
+    assert!(
+        stall_adaptive < stall_static,
+        "adaptive lead must strictly cut stall time ({stall_adaptive:.2}s vs \
+         {stall_static:.2}s)"
+    );
+    // The two modes consume the per-link RNG streams differently (the
+    // episode timeline is probed at different instants), so compare on
+    // aggregate with a small tolerance rather than pointwise.
+    assert!(
+        qoe_adaptive >= qoe_static - 1e-3,
+        "adaptive lead must not lose client QoE ({qoe_adaptive:.4} vs {qoe_static:.4})"
+    );
+}

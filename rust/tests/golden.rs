@@ -1,0 +1,186 @@
+//! Golden-trace regression suite: seeded, reduced-size `ext-gateway`
+//! and `ext-sessions` scenarios pinned against JSON snapshots committed
+//! under `rust/tests/golden/`, with per-metric relative tolerances
+//! (counts exact, floats to 1e-6).
+//!
+//! Regeneration after an intentional behavior change:
+//!
+//! ```text
+//! GOLDEN_BLESS=1 cargo test --test golden
+//! git diff rust/tests/golden/   # review, then commit
+//! ```
+//!
+//! A missing snapshot is blessed on first run (see
+//! `andes::util::golden`), which is how a new scenario bootstraps.
+
+use std::path::PathBuf;
+
+use andes::cluster::{Cluster, RoutingPolicy};
+use andes::config::SchedulerConfig;
+use andes::coordinator::engine::EngineConfig;
+use andes::coordinator::sched::andes::AndesConfig;
+use andes::experiments::runner::estimate_capacity;
+use andes::gateway::{Gateway, GatewayConfig};
+use andes::model::gpu::a100_4x;
+use andes::model::latency::LatencyModel;
+use andes::model::llm::opt_66b;
+use andes::util::golden::{check_or_bless, metric};
+use andes::util::stats::{mean, percentile};
+use andes::workload::{ArrivalProcess, Dataset, QoeTrace, SessionWorkload, Workload};
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/golden")
+        .join(name)
+}
+
+/// Count exactly.
+const EXACT: f64 = 0.0;
+/// Absorb platform-libm noise in float metrics while catching any real
+/// behavior change.
+const FLOAT: f64 = 1e-6;
+
+#[test]
+fn golden_ext_gateway_cell() {
+    // A reduced `ext-gateway` stress cell: the full gateway (admission +
+    // pacing) fronting a 2-replica Andes cluster under gamma-burst
+    // arrivals at 2× estimated aggregate capacity, seed 42.
+    let llm = opt_66b();
+    let gpu = a100_4x();
+    let latency = LatencyModel::for_deployment(&llm, &gpu);
+    let replicas = 2usize;
+    let capacity = estimate_capacity(&llm, &gpu, Dataset::ShareGpt) * replicas as f64;
+    let engine_cfg = EngineConfig {
+        kv_capacity_tokens: llm.kv_capacity_tokens(&gpu),
+        swap_capacity_tokens: llm.swap_capacity_tokens(&gpu),
+        ..EngineConfig::default()
+    };
+    let sched = SchedulerConfig::Andes(AndesConfig::default());
+    let cluster = Cluster::new(
+        replicas,
+        engine_cfg,
+        latency,
+        &sched,
+        RoutingPolicy::QoeAware,
+    );
+    let mut gcfg = GatewayConfig::default();
+    gcfg.surge.baseline_rate = capacity;
+    let trace = Workload {
+        dataset: Dataset::ShareGpt,
+        arrivals: ArrivalProcess::Gamma { rate: capacity * 2.0, cv: 3.0 },
+        qoe_trace: QoeTrace::TextReading,
+        num_requests: 150,
+        seed: 42,
+    }
+    .generate();
+    let mut gw = Gateway::new(cluster, gcfg);
+    let res = gw.run_trace(trace).unwrap();
+
+    let served: Vec<f64> = res.served.iter().map(|s| s.paced_qoe).collect();
+    let (early_raw, early_shaped) = res.early_token_fractions();
+    check_or_bless(
+        &golden_path("ext_gateway.json"),
+        &[
+            metric("served", res.served.len() as f64, EXACT),
+            metric("rejected", res.rejections.len() as f64, EXACT),
+            metric("deferred", res.stats.deferred as f64, EXACT),
+            metric("surge_transitions", res.stats.surge_transitions as f64, EXACT),
+            metric("mean_served_qoe", res.mean_served_qoe(), FLOAT),
+            metric("p10_served_qoe", percentile(&served, 10.0), FLOAT),
+            metric("mean_qoe_incl_rejects", res.mean_qoe_incl_rejects(), FLOAT),
+            metric("early_frac_unshaped", early_raw, FLOAT),
+            metric("early_frac_delivered", early_shaped, FLOAT),
+            metric("replica_seconds", res.replica_seconds, FLOAT),
+        ],
+    )
+    .unwrap();
+}
+
+#[test]
+fn golden_ext_sessions_cell() {
+    // A reduced `ext-sessions` park+affinity cell: 40 multi-turn
+    // sessions through the gateway over a 2-replica parking cluster
+    // with affinity routing, seed 42, pacing off (as in the experiment).
+    let llm = opt_66b();
+    let gpu = a100_4x();
+    let latency = LatencyModel::for_deployment(&llm, &gpu);
+    let replicas = 2usize;
+    let capacity = estimate_capacity(&llm, &gpu, Dataset::ShareGpt) * replicas as f64;
+    let engine_cfg = EngineConfig {
+        kv_capacity_tokens: llm.kv_capacity_tokens(&gpu),
+        swap_capacity_tokens: llm.swap_capacity_tokens(&gpu),
+        park_prefixes: true,
+        ..EngineConfig::default()
+    };
+    let sched = SchedulerConfig::Andes(AndesConfig::default());
+    let mut cluster = Cluster::new(
+        replicas,
+        engine_cfg,
+        latency,
+        &sched,
+        RoutingPolicy::QoeAware,
+    );
+    cluster.set_session_affinity(true);
+    let mut gcfg = GatewayConfig::default();
+    gcfg.pacing_enabled = false;
+    gcfg.surge.baseline_rate = capacity;
+    let trace = SessionWorkload {
+        num_sessions: 40,
+        arrivals: ArrivalProcess::Poisson { rate: capacity * 1.3 / 3.0 },
+        qoe_trace: QoeTrace::TextReading,
+        min_turns: 2,
+        max_turns: 4,
+        think_time_mean: 4.0,
+        seed: 42,
+    }
+    .generate();
+    let requests = trace.len();
+    let mut gw = Gateway::new(cluster, gcfg);
+    let res = gw.run_trace(trace).unwrap();
+
+    let mut returning_ttfts: Vec<f64> = Vec::new();
+    let mut returning_served = 0usize;
+    let mut hits = 0u64;
+    let mut qoes: Vec<f64> = Vec::new();
+    for m in &res.per_replica {
+        for r in &m.requests {
+            qoes.push(r.final_qoe);
+            if r.session.is_some_and(|s| s.is_returning()) {
+                returning_served += 1;
+                if r.ttft.is_finite() {
+                    returning_ttfts.push(r.ttft);
+                }
+                if r.prefix_hit_tokens > 0 {
+                    hits += 1;
+                }
+            }
+        }
+    }
+    let parked: u64 = res.per_replica.iter().map(|m| m.prefixes_parked).sum();
+    let evictions: u64 = res.per_replica.iter().map(|m| m.park_evictions).sum();
+    let hit_rate = if returning_served == 0 {
+        0.0
+    } else {
+        hits as f64 / returning_served as f64
+    };
+    // Guard the mean like hit_rate: a config tweak that leaves no served
+    // returning turns must not pin NaN (check_or_bless rejects it).
+    let ttft_returning =
+        if returning_ttfts.is_empty() { 0.0 } else { mean(&returning_ttfts) };
+    check_or_bless(
+        &golden_path("ext_sessions.json"),
+        &[
+            metric("requests", requests as f64, EXACT),
+            metric("served", res.served.len() as f64, EXACT),
+            metric("rejected", res.rejections.len() as f64, EXACT),
+            metric("prefix_hits", hits as f64, EXACT),
+            metric("prefixes_parked", parked as f64, EXACT),
+            metric("park_evictions", evictions as f64, EXACT),
+            metric("prefix_hit_rate", hit_rate, FLOAT),
+            metric("mean_qoe_served", mean(&qoes), FLOAT),
+            metric("mean_ttft_returning", ttft_returning, FLOAT),
+            metric("mean_qoe_incl_rejects", res.mean_qoe_incl_rejects(), FLOAT),
+        ],
+    )
+    .unwrap();
+}
