@@ -6,8 +6,10 @@
 //! snapshot (tier-blind and tier-weighted), the federation
 //! snapshot-merge, the surge detector's observe path, and one pacing
 //! round across 10k concurrent streams — reporting admission
-//! decisions/sec at the end and writing the perf baseline to
-//! `BENCH_gateway.json`.
+//! decisions/sec at the end. Doubles as the perf regression gate: runs
+//! are compared against the committed `BENCH_gateway.json` baseline and
+//! exit non-zero on a >25% mean slowdown (bless with `BENCH_BLESS=1`,
+//! or automatically when the baseline is missing or provisional).
 
 use andes::coordinator::kv::KvCacheManager;
 use andes::gateway::{
@@ -144,11 +146,75 @@ fn main() {
         decisions_per_sec * 0.150
     );
 
-    // Persist the perf baseline so regressions in the federation hot
-    // path (snapshot merge + weighted scoring) are diffable.
+    // Perf baseline + regression gate: compare each case's mean against
+    // the committed BENCH_gateway.json and fail on >25% slowdowns.
+    // Bless (rewrite) the baseline when it is missing, marked
+    // `"provisional": true`, or BENCH_BLESS=1 — CI runs this bench
+    // twice, so the first pass blesses machine-local numbers and the
+    // second gates against them (committed numbers stay provisional
+    // because CI hardware differs from any dev box).
     let path = "BENCH_gateway.json";
-    match std::fs::write(path, b.results_json()) {
-        Ok(()) => println!("baseline written to {path}"),
-        Err(e) => eprintln!("could not write {path}: {e}"),
+    let factor = 1.25;
+    let bless_forced = std::env::var("BENCH_BLESS").ok().as_deref() == Some("1");
+    let baseline = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| andes::util::json::Json::parse(&t).ok());
+    let provisional = match &baseline {
+        Some(j) => j.get("provisional").as_bool().unwrap_or(false),
+        None => true,
+    };
+    if bless_forced || provisional {
+        match std::fs::write(path, b.results_json()) {
+            Ok(()) => println!("baseline blessed to {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+        return;
     }
+    let base = baseline.expect("non-provisional implies a parsed baseline");
+    let mut compared = 0usize;
+    let mut regressed = 0usize;
+    if let Some(cases) = base.get("benchmarks").as_arr() {
+        for c in cases {
+            let name = match c.get("name").as_str() {
+                Some(n) => n.to_string(),
+                None => continue,
+            };
+            let base_mean = match c.get("mean_ns").as_f64() {
+                Some(m) if m > 0.0 => m,
+                _ => continue,
+            };
+            let cur = match b.results().iter().find(|r| r.name == name) {
+                Some(r) => r,
+                None => continue,
+            };
+            compared += 1;
+            let cur_mean = cur.mean.as_nanos() as f64;
+            let pct = (cur_mean / base_mean - 1.0) * 100.0;
+            if cur_mean > base_mean * factor {
+                regressed += 1;
+                eprintln!(
+                    "REGRESSION {name}: mean {cur_mean:.0} ns vs baseline \
+                     {base_mean:.0} ns ({pct:+.1}%)"
+                );
+            } else {
+                println!("gate ok {name}: {cur_mean:.0} ns vs {base_mean:.0} ns ({pct:+.1}%)");
+            }
+        }
+    }
+    if compared == 0 {
+        eprintln!("baseline {path} shares no cases with this run; re-bless with BENCH_BLESS=1");
+        std::process::exit(1);
+    }
+    if regressed > 0 {
+        eprintln!(
+            "{regressed} benchmark(s) regressed more than {:.0}% vs {path} \
+             (set BENCH_BLESS=1 to re-bless after an intentional change)",
+            (factor - 1.0) * 100.0
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "perf gate: {compared} case(s) within {:.0}% of {path}",
+        (factor - 1.0) * 100.0
+    );
 }

@@ -149,4 +149,15 @@ pub trait ExecutionBackend {
 
     /// Forget the request entirely (finished and recorded).
     fn release(&mut self, id: RequestId);
+
+    /// Generated token ids so far, if the backend retains concrete
+    /// token values (real backends streaming text). Simulators return
+    /// `None` — callers streaming to clients substitute placeholders.
+    fn generated_tokens(&self, _id: RequestId) -> Option<&[u32]> {
+        None
+    }
+
+    /// Drop a finished request's retained token values once delivery is
+    /// confirmed. No-op for backends that retain none.
+    fn forget(&mut self, _id: RequestId) {}
 }

@@ -206,6 +206,14 @@ impl PjrtBackend {
 }
 
 impl ExecutionBackend for PjrtBackend {
+    fn generated_tokens(&self, id: RequestId) -> Option<&[u32]> {
+        PjrtBackend::generated(self, id)
+    }
+
+    fn forget(&mut self, id: RequestId) {
+        PjrtBackend::forget(self, id);
+    }
+
     fn register(&mut self, req: BackendRequest) -> Result<()> {
         let max_seq = self.runtime.meta.max_seq;
         anyhow::ensure!(

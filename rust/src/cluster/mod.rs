@@ -38,6 +38,7 @@ use crate::config::SchedulerConfig;
 use crate::coordinator::engine::{Engine, EngineConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::model::latency::LatencyModel;
+use crate::telemetry::Telemetry;
 use crate::workload::RequestSpec;
 
 /// Request routing policies.
@@ -86,6 +87,9 @@ pub struct Cluster {
     /// KV prefix (DESIGN.md §10). Off by default: routing is
     /// bit-identical to pre-session behavior.
     session_affinity: bool,
+    /// Observation handle, propagated to every replica (disabled by
+    /// default).
+    telemetry: Telemetry,
 }
 
 impl Cluster {
@@ -124,7 +128,20 @@ impl Cluster {
             retired_seconds: 0.0,
             retired_metrics: Vec::new(),
             session_affinity: false,
+            telemetry: Telemetry::disabled(),
         }
+    }
+
+    /// Attach a telemetry handle, propagated to every replica (current
+    /// and future) with its slot index as the `replica` label. The
+    /// cluster itself records replica lifecycle events and the live
+    /// routable-replica gauge.
+    pub fn set_telemetry(&mut self, tel: Telemetry) {
+        self.telemetry = tel;
+        for (i, e) in self.replicas.iter_mut().enumerate() {
+            e.set_telemetry(self.telemetry.clone(), i);
+        }
+        self.telemetry.set_gauge("andes_replicas", &[], self.routable_count() as f64);
     }
 
     /// Enable or disable session-affinity routing (see
@@ -192,6 +209,9 @@ impl Cluster {
         let reusable = (0..self.replicas.len()).find(|&i| {
             self.draining[i] && self.active[i] == 0 && self.decommissioned_at[i].is_some()
         });
+        let slot = reusable.unwrap_or(self.replicas.len());
+        e.set_telemetry(self.telemetry.clone(), slot);
+        self.telemetry.inc("andes_replica_events_total", &[("action", "add")], 1.0);
         if let Some(i) = reusable {
             let retired = self.decommissioned_at[i].unwrap() - self.commissioned_at[i];
             self.retired_seconds += retired.max(0.0);
@@ -201,6 +221,7 @@ impl Cluster {
             self.draining[i] = false;
             self.commissioned_at[i] = t;
             self.decommissioned_at[i] = None;
+            self.telemetry.set_gauge("andes_replicas", &[], self.routable_count() as f64);
             return i;
         }
         self.replicas.push(e);
@@ -209,6 +230,7 @@ impl Cluster {
         self.draining.push(false);
         self.commissioned_at.push(t);
         self.decommissioned_at.push(None);
+        self.telemetry.set_gauge("andes_replicas", &[], self.routable_count() as f64);
         self.replicas.len() - 1
     }
 
@@ -223,6 +245,8 @@ impl Cluster {
         if self.active[idx] == 0 {
             self.decommissioned_at[idx] = Some(t.max(self.replicas[idx].now()));
         }
+        self.telemetry.inc("andes_replica_events_total", &[("action", "retire")], 1.0);
+        self.telemetry.set_gauge("andes_replicas", &[], self.routable_count() as f64);
     }
 
     /// Retire the least-loaded routable replica, keeping at least one

@@ -58,6 +58,11 @@
 //!     "park": true,
 //!     "affinity": true
 //!   },
+//!   "telemetry": {
+//!     "enabled": true,
+//!     "trace_capacity": 65536,
+//!     "snapshot_interval": 1.0
+//!   },
 //!   "network": {
 //!     "enabled": true,
 //!     "mix": {"fiber": 0.6, "wifi": 0.3, "lte": 0.1},
@@ -82,6 +87,7 @@ use crate::coordinator::sched::round_robin::RoundRobinScheduler;
 use crate::coordinator::sched::Scheduler;
 use crate::model::gpu::{gpu_by_name, GpuProfile};
 use crate::model::llm::{llm_by_name, LlmProfile};
+use crate::telemetry::TelemetryConfig;
 use crate::util::json::Json;
 
 /// Parsed deployment configuration.
@@ -108,6 +114,11 @@ pub struct AndesDeployment {
     /// `engine.park_prefixes`; `affinity` is applied to the cluster by
     /// whichever frontend builds one (`simulate`, embedders).
     pub sessions: SessionsConfig,
+    /// `"telemetry"` section (DESIGN.md §12): metric registry + event
+    /// tracer. `None` when the config carries no section, so each
+    /// frontend keeps its own default (live server: on; simulation
+    /// paths: off for bit-identical parity).
+    pub telemetry: Option<TelemetryConfig>,
 }
 
 /// `"sessions"` section: KV prefix parking + session-affinity routing.
@@ -160,6 +171,7 @@ impl Default for AndesDeployment {
             spill: SpillConfig::default(),
             federation: FederationConfig::default(),
             sessions: SessionsConfig::default(),
+            telemetry: None,
         }
     }
 }
@@ -493,6 +505,27 @@ impl AndesDeployment {
             }
         }
 
+        let t = j.get("telemetry");
+        if !t.is_null() {
+            let mut tc = TelemetryConfig::default();
+            if let Some(b) = t.get("enabled").as_bool() {
+                tc.enabled = b;
+            }
+            if let Some(n) = t.get("trace_capacity").as_u64() {
+                if n == 0 {
+                    bail!("telemetry trace_capacity must be >= 1");
+                }
+                tc.trace_capacity = n as usize;
+            }
+            if let Some(v) = t.get("snapshot_interval").as_f64() {
+                if !v.is_finite() || v < 0.0 {
+                    bail!("telemetry snapshot_interval must be >= 0 (0 disables)");
+                }
+                tc.snapshot_interval = v;
+            }
+            d.telemetry = Some(tc);
+        }
+
         let tiers = j.get("tiers");
         if !tiers.is_null() {
             let w = &mut d.gateway.admission.tier_weights;
@@ -769,6 +802,38 @@ mod tests {
             r#"{"gateway": {"min_predicted_qoe": 1.5}}"#,
             r#"{"gateway": {"pace_rate_factor": 0}}"#,
             r#"{"gateway": {"baseline_rate": -2}}"#,
+        ] {
+            assert!(AndesDeployment::from_json_str(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn telemetry_section_parses() {
+        let d = AndesDeployment::from_json_str(
+            r#"{"telemetry": {"enabled": true, "trace_capacity": 1024,
+                              "snapshot_interval": 0.5}}"#,
+        )
+        .unwrap();
+        let t = d.telemetry.expect("section present");
+        assert!(t.enabled);
+        assert_eq!(t.trace_capacity, 1024);
+        assert_eq!(t.snapshot_interval, 0.5);
+        // No section → None, so frontends keep their own defaults.
+        let plain = AndesDeployment::from_json_str("{}").unwrap();
+        assert!(plain.telemetry.is_none());
+        // Partial section fills from TelemetryConfig defaults.
+        let partial =
+            AndesDeployment::from_json_str(r#"{"telemetry": {"enabled": false}}"#).unwrap();
+        let t = partial.telemetry.expect("section present");
+        assert!(!t.enabled);
+        assert_eq!(t.trace_capacity, TelemetryConfig::default().trace_capacity);
+    }
+
+    #[test]
+    fn telemetry_section_rejects_bad_values() {
+        for bad in [
+            r#"{"telemetry": {"trace_capacity": 0}}"#,
+            r#"{"telemetry": {"snapshot_interval": -1}}"#,
         ] {
             assert!(AndesDeployment::from_json_str(bad).is_err(), "{bad}");
         }

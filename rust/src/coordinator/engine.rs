@@ -12,6 +12,7 @@
 
 use crate::backend::{BackendRequest, Clock, ExecutionBackend, PrefillJob};
 use crate::model::latency::LatencyModel;
+use crate::telemetry::Telemetry;
 use crate::workload::RequestSpec;
 
 use super::kv::KvCacheManager;
@@ -73,6 +74,10 @@ pub struct Engine<B: ExecutionBackend, C: Clock> {
     completion_avg: f64,
     completions: u64,
     started: bool,
+    /// Observation handle (disabled by default — zero-cost no-ops).
+    telemetry: Telemetry,
+    /// Replica label for metric series ("r0", "r1", …).
+    replica_label: String,
 }
 
 impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
@@ -102,7 +107,23 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
             completion_avg: 0.0,
             completions: 0,
             started: false,
+            telemetry: Telemetry::disabled(),
+            replica_label: "r0".to_string(),
         }
+    }
+
+    /// Attach a telemetry handle, labeling this engine's series as
+    /// replica `replica`. The engine records batch occupancy and KV
+    /// watermark gauges per iteration, iteration/preemption/prefix-hit
+    /// counters, and per-request prefill/first-token/preempt/restore
+    /// trace events keyed by the submitting spec's trace id.
+    pub fn set_telemetry(&mut self, tel: Telemetry, replica: usize) {
+        self.telemetry = tel;
+        self.replica_label = format!("r{replica}");
+    }
+
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.telemetry
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -206,6 +227,7 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
             output_tokens: spec.output_tokens,
         })?;
         let mut req = Request::new(id, arrival, spec.prompt_tokens, spec.qoe);
+        req.spec_id = spec.id;
         req.session = spec.session;
         self.requests.push(req);
         self.active.push(id);
@@ -246,6 +268,20 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
         self.metrics.total_preemptions += 1;
         // A swap-out may have evicted parked prefixes for room.
         self.metrics.park_evictions = self.kv.park_evictions();
+        if self.telemetry.is_enabled() {
+            let kind = if swapped { "swap" } else { "recompute" };
+            self.telemetry.inc(
+                "andes_preemptions_total",
+                &[("kind", kind), ("replica", &self.replica_label)],
+                1.0,
+            );
+            self.telemetry.event(
+                self.requests[id].spec_id as u64,
+                "preempt",
+                self.clock.now(),
+                &[("kind", kind.into())],
+            );
+        }
     }
 
     /// Claim a parked session prefix for a first admission, if one
@@ -284,6 +320,11 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
         self.requests[id].prefix_hit_tokens = hit;
         self.metrics.prefix_hits += 1;
         self.metrics.prefix_hit_tokens += hit as u64;
+        self.telemetry.inc(
+            "andes_prefix_hits_total",
+            &[("replica", &self.replica_label)],
+            1.0,
+        );
         hit
     }
 
@@ -407,6 +448,12 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
                         let cost = self.backend.swap_cost(self.requests[id].context_len());
                         self.clock.advance(cost);
                         self.requests[id].phase = Phase::Running;
+                        self.telemetry.event(
+                            self.requests[id].spec_id as u64,
+                            "restore",
+                            self.clock.now(),
+                            &[("kind", "swap_in".into())],
+                        );
                     }
                     // else: no room this round; stays swapped.
                 }
@@ -418,6 +465,24 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
                         // from the session's parked KV (host→device
                         // transfer instead of prefill compute).
                         let cached = self.claim_prefix(id, ctx);
+                        if self.telemetry.is_enabled() {
+                            // A recompute readmission replays prefill;
+                            // only the first pass is the span's
+                            // prefill_start.
+                            if self.requests[id].generated == 0
+                                && self.requests[id].preemptions == 0
+                            {
+                                self.telemetry.event(
+                                    self.requests[id].spec_id as u64,
+                                    "prefill_start",
+                                    self.clock.now(),
+                                    &[
+                                        ("context_tokens", (ctx as u64).into()),
+                                        ("cached_tokens", (cached as u64).into()),
+                                    ],
+                                );
+                            }
+                        }
                         prefills.push(PrefillJob {
                             id,
                             context_tokens: ctx,
@@ -483,6 +548,7 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
                 latency: outcome.latency,
                 is_prefill: true,
             });
+            self.note_iteration(prefills.len(), "prefill");
             for ev in outcome.tokens {
                 // The prefill pass produces each request's next token.
                 self.kv.extend(ev.id, 1).ok();
@@ -524,6 +590,7 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
                 latency: outcome.latency,
                 is_prefill: false,
             });
+            self.note_iteration(running.len(), "decode");
             for ev in outcome.tokens {
                 self.kv.extend(ev.id, 1).ok();
                 self.deliver(ev.id, ev.finished, now);
@@ -535,6 +602,28 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
 
         self.metrics.ended_at = self.clock.now();
         Ok(true)
+    }
+
+    /// Batch-occupancy and KV-watermark gauges plus the iteration
+    /// counter, per replica (no-op on a disabled handle).
+    fn note_iteration(&self, batch: usize, phase: &'static str) {
+        if !self.telemetry.is_enabled() {
+            return;
+        }
+        let labels = [("replica", self.replica_label.as_str())];
+        self.telemetry.set_gauge("andes_batch_size", &labels, batch as f64);
+        let cap = self.kv.device_capacity_tokens().max(1);
+        let used = cap.saturating_sub(self.kv.device_free_tokens());
+        self.telemetry.set_gauge(
+            "andes_kv_used_fraction",
+            &labels,
+            used as f64 / cap as f64,
+        );
+        self.telemetry.inc(
+            "andes_iterations_total",
+            &[("phase", phase), ("replica", &self.replica_label)],
+            1.0,
+        );
     }
 
     fn deliver(&mut self, id: RequestId, finished: bool, now: f64) {

@@ -11,6 +11,8 @@ use super::request::Request;
 #[derive(Debug, Clone)]
 pub struct RequestRecord {
     pub id: usize,
+    /// Trace-level id of the submitting spec (see [`Request::spec_id`]).
+    pub spec_id: usize,
     pub arrival: f64,
     pub prompt_tokens: usize,
     pub output_tokens: usize,
@@ -38,6 +40,7 @@ impl RequestRecord {
     pub fn from_request(r: &Request) -> Self {
         RequestRecord {
             id: r.id,
+            spec_id: r.spec_id,
             arrival: r.arrival,
             prompt_tokens: r.prompt_tokens,
             output_tokens: r.generated,

@@ -37,6 +37,11 @@ pub enum Phase {
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: RequestId,
+    /// The submitting spec's trace-level id. Engine ids follow
+    /// submission order per engine, so once a gateway defer queue or a
+    /// cluster router reorders admissions only `spec_id` ties the
+    /// record back to the trace (and to its telemetry span).
+    pub spec_id: usize,
     /// Absolute arrival time (s).
     pub arrival: f64,
     pub prompt_tokens: usize,
@@ -70,6 +75,7 @@ impl Request {
     ) -> Self {
         Request {
             id,
+            spec_id: id,
             arrival,
             prompt_tokens,
             qoe_spec,

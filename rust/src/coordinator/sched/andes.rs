@@ -340,7 +340,7 @@ impl AndesScheduler {
             .floor()
             .max(0.0) as usize;
         if std::env::var("ANDES_TRACE_CAP").is_ok() && !preempted.is_empty() {
-            eprintln!(
+            log::debug!(
                 "cap: seen={} preempts={} allowed={} this_round={}",
                 view.total_requests_seen,
                 view.total_preemptions,

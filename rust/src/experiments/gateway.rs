@@ -18,6 +18,7 @@ use crate::gateway::{Gateway, GatewayConfig};
 use crate::model::gpu::a100_4x;
 use crate::model::latency::LatencyModel;
 use crate::model::llm::opt_66b;
+use crate::telemetry::{Telemetry, TelemetryConfig};
 use crate::util::csv::Csv;
 use crate::util::stats::percentile;
 use crate::workload::{ArrivalProcess, Dataset, QoeTrace, Workload};
@@ -96,7 +97,7 @@ pub fn ext_gateway(ctx: &ExpCtx) -> Result<String> {
             }
             .generate();
             for v in &variants {
-                let cluster = Cluster::new(
+                let mut cluster = Cluster::new(
                     replicas,
                     engine_cfg.clone(),
                     latency.clone(),
@@ -107,8 +108,40 @@ pub fn ext_gateway(ctx: &ExpCtx) -> Result<String> {
                 gcfg.admission_enabled = v.admission;
                 gcfg.pacing_enabled = v.pacing;
                 gcfg.surge.baseline_rate = capacity;
+                // `--trace-out` instruments exactly the stress cell (4×
+                // Gamma-burst, full gateway) — the cell the shape checks
+                // interrogate — and exports its trace + snapshots below.
+                let instrument = ctx.trace_out.is_some()
+                    && alabel == "gamma-cv3"
+                    && load == 4.0
+                    && v.name == "full";
+                let telemetry = if instrument {
+                    Telemetry::new(&TelemetryConfig {
+                        enabled: true,
+                        snapshot_interval: 1.0,
+                        ..TelemetryConfig::default()
+                    })
+                } else {
+                    Telemetry::disabled()
+                };
+                telemetry.set_time_domain("sim");
+                cluster.set_telemetry(telemetry.clone());
                 let mut gw = Gateway::new(cluster, gcfg);
+                gw.set_telemetry(telemetry.clone());
                 let res = gw.run_trace(trace.clone())?;
+                if instrument {
+                    if let Some(path) = &ctx.trace_out {
+                        std::fs::write(path, telemetry.trace_jsonl())?;
+                        let csv_path = path.with_extension("metrics.csv");
+                        std::fs::write(&csv_path, telemetry.snapshot_csv())?;
+                        report.push_str(&format!(
+                            "  trace: {} ({} events) + {}\n",
+                            path.display(),
+                            telemetry.trace_stats().0,
+                            csv_path.display(),
+                        ));
+                    }
+                }
                 let served: Vec<f64> = res.served.iter().map(|s| s.paced_qoe).collect();
                 let (early_raw, early_shaped) = res.early_token_fractions();
                 let cell = Cell {

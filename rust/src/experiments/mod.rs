@@ -28,6 +28,10 @@ pub struct ExpCtx {
     pub out_dir: PathBuf,
     /// Reduced request counts / grids for smoke runs.
     pub quick: bool,
+    /// When set, instrumented experiments (currently `ext-gateway`)
+    /// export their telemetry event trace as JSONL here, plus periodic
+    /// metric snapshots next to it (`<stem>.metrics.csv`).
+    pub trace_out: Option<PathBuf>,
 }
 
 /// One registered experiment.

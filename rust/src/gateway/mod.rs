@@ -99,6 +99,9 @@ use crate::delivery::{deliver_request, NetworkConfig};
 use crate::model::latency::LatencyModel;
 use crate::qoe::metric::{qoe_finished, DigestState};
 use crate::qoe::spec::QoeSpec;
+use crate::telemetry::Telemetry;
+use crate::util::json::Json;
+use crate::workload::qoe_trace::QoeTrace;
 use crate::workload::{RequestSpec, SessionInfo};
 
 /// Gateway configuration.
@@ -689,6 +692,9 @@ pub struct Gateway<T: GatewayTarget> {
     queue: VecDeque<DeferredRequest>,
     rejections: Vec<Rejection>,
     stats: GatewayStats,
+    /// Observation handle (defaults to the disabled no-op handle, which
+    /// keeps every path bit-identical to the pre-telemetry gateway).
+    telemetry: Telemetry,
 }
 
 impl<T: GatewayTarget> Gateway<T> {
@@ -707,7 +713,20 @@ impl<T: GatewayTarget> Gateway<T> {
             queue: VecDeque::new(),
             rejections: Vec::new(),
             stats: GatewayStats::default(),
+            telemetry: Telemetry::disabled(),
         }
+    }
+
+    /// Attach a telemetry handle. The gateway records admission
+    /// decisions (counters + per-request trace events), defer-queue
+    /// depth, surge mode, and — at drain time — per-request TTFT/TPOT/
+    /// QoE histograms and delivery counters, all labeled by price tier.
+    pub fn set_telemetry(&mut self, tel: Telemetry) {
+        self.telemetry = tel;
+    }
+
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.telemetry
     }
 
     /// Build a gateway with an overflow cluster that replays primary
@@ -748,9 +767,23 @@ impl<T: GatewayTarget> Gateway<T> {
         self.surge.observe(t);
         self.flush_deferred(t)?;
         self.stats.arrivals += 1;
+        let tier = QoeTrace::tier_of(&spec.qoe);
+        let id = spec.id as u64;
+        self.telemetry.event(
+            id,
+            "arrival",
+            t,
+            &[("tier", tier.into()), ("prompt_tokens", Json::from(spec.prompt_tokens as u64))],
+        );
+        self.telemetry.set_gauge(
+            "andes_surge_mode",
+            &[],
+            if self.surge.mode() == LoadMode::Surge { 1.0 } else { 0.0 },
+        );
         if !self.cfg.admission_enabled {
             self.route(spec)?;
             self.stats.admitted += 1;
+            self.note_admitted(id, tier, t, None);
             return Ok(SubmitOutcome::Admitted);
         }
         let states = self.target.replica_states();
@@ -767,6 +800,7 @@ impl<T: GatewayTarget> Gateway<T> {
             AdmissionDecision::Admit => {
                 self.route(spec)?;
                 self.stats.admitted += 1;
+                self.note_admitted(id, tier, t, None);
                 Ok(SubmitOutcome::Admitted)
             }
             AdmissionDecision::Defer => {
@@ -776,6 +810,22 @@ impl<T: GatewayTarget> Gateway<T> {
                     DeferredRequest { spec, enqueued_at: t, weight },
                 );
                 self.stats.deferred += 1;
+                self.telemetry.inc(
+                    "andes_requests_total",
+                    &[("outcome", "deferred"), ("tier", tier)],
+                    1.0,
+                );
+                self.telemetry.event(
+                    id,
+                    "defer",
+                    t,
+                    &[("depth", Json::from(self.queue.len() as u64))],
+                );
+                self.telemetry.set_gauge(
+                    "andes_defer_queue_depth",
+                    &[],
+                    self.queue.len() as f64,
+                );
                 Ok(SubmitOutcome::Deferred)
             }
             AdmissionDecision::Reject(reason) => self.reject_or_spill(spec, t, reason),
@@ -846,6 +896,11 @@ impl<T: GatewayTarget> Gateway<T> {
         self.target.advance_to(t)?;
         self.sync_spill(t)?;
         self.autoscale_step(t);
+        if self.telemetry.is_enabled() {
+            self.telemetry
+                .set_gauge("andes_replicas", &[], self.target.routable_replicas() as f64);
+            self.telemetry.maybe_snapshot(t);
+        }
         Ok(())
     }
 
@@ -896,6 +951,112 @@ impl<T: GatewayTarget> Gateway<T> {
         self.target.submit_routed(spec, policy)
     }
 
+    /// Record one drained request into the registry and tracer:
+    /// per-tier TTFT/TPOT/QoE histograms, token and delivery counters,
+    /// and the tail of its trace span (first token, summarized pacer
+    /// releases, network incidents, finish).
+    fn record_served(&self, r: &RequestRecord, s: &ServedRequest, spill: bool) {
+        if !self.telemetry.is_enabled() {
+            return;
+        }
+        let tier = QoeTrace::tier_of(&QoeSpec::new(
+            r.expected_ttft.max(0.0),
+            r.expected_tds.max(0.1),
+        ));
+        let labels = [("tier", tier)];
+        // Span key: the trace-level spec id, not the engine-local record
+        // id — routing/defer reordering makes the two diverge.
+        let id = r.spec_id as u64;
+        if r.ttft.is_finite() && r.ttft >= 0.0 {
+            self.telemetry.observe_latency("andes_ttft_seconds", &labels, r.ttft);
+            self.telemetry.event(
+                id,
+                "first_token",
+                r.arrival + r.ttft,
+                &[("ttft", r.ttft.into())],
+            );
+        }
+        if r.avg_tds.is_finite() && r.avg_tds > 0.0 {
+            self.telemetry.observe_tpot("andes_tpot_seconds", &labels, 1.0 / r.avg_tds);
+        }
+        self.telemetry.observe_unit("andes_qoe", &labels, s.client_qoe.clamp(0.0, 1.0));
+        self.telemetry.inc("andes_tokens_total", &labels, s.output_tokens as f64);
+        if self.cfg.pacing_enabled {
+            // Pacer releases are summarized into one event per stream
+            // (one event per token would dominate the ring buffer).
+            self.telemetry.event(
+                id,
+                "pacer_release",
+                r.finished_at,
+                &[
+                    ("tokens", Json::from(s.output_tokens as u64)),
+                    ("early_tokens", Json::from(s.paced_early_tokens as u64)),
+                ],
+            );
+            self.telemetry.set_gauge(
+                "andes_pacer_lead_tokens",
+                &[],
+                self.cfg.pacing.lead_tokens as f64,
+            );
+        }
+        if s.stall_count > 0 {
+            self.telemetry.inc("andes_net_stalls_total", &labels, s.stall_count as f64);
+            self.telemetry.inc("andes_net_stall_seconds_total", &labels, s.stall_time);
+            self.telemetry.event(
+                id,
+                "net_stall",
+                r.finished_at,
+                &[
+                    ("count", Json::from(s.stall_count as u64)),
+                    ("seconds", s.stall_time.into()),
+                ],
+            );
+        }
+        if s.retransmits > 0 {
+            self.telemetry.inc("andes_net_retransmits_total", &labels, s.retransmits as f64);
+            self.telemetry.event(
+                id,
+                "retransmit",
+                r.finished_at,
+                &[("count", Json::from(s.retransmits as u64))],
+            );
+        }
+        if s.disconnects > 0 {
+            self.telemetry.inc("andes_net_disconnects_total", &labels, s.disconnects as f64);
+            self.telemetry.event(
+                id,
+                "disconnect",
+                r.finished_at,
+                &[("tokens", Json::from(s.disconnects as u64))],
+            );
+        }
+        self.telemetry.event(
+            id,
+            "finish",
+            r.finished_at,
+            &[
+                ("tokens", Json::from(s.output_tokens as u64)),
+                ("qoe", s.client_qoe.into()),
+                ("tier", tier.into()),
+                ("spill", spill.into()),
+            ],
+        );
+    }
+
+    /// Counter + trace event for an admitted request; `waited` is set
+    /// when the request sat in the defer queue first.
+    fn note_admitted(&self, id: u64, tier: &str, t: f64, waited: Option<f64>) {
+        self.telemetry.inc(
+            "andes_requests_total",
+            &[("outcome", "admitted"), ("tier", tier)],
+            1.0,
+        );
+        match waited {
+            Some(w) => self.telemetry.event(id, "admit", t, &[("waited", w.into())]),
+            None => self.telemetry.event(id, "admit", t, &[]),
+        }
+    }
+
     /// Drop a rejected request — unless the reason is spill-eligible
     /// and an overflow tier exists, in which case the request is
     /// replayed there. The spec keeps its original arrival timestamp,
@@ -912,6 +1073,8 @@ impl<T: GatewayTarget> Gateway<T> {
                 | RejectReason::Saturated { .. }
                 | RejectReason::DeferTimeout { .. }
         );
+        let id = spec.id as u64;
+        let tier = QoeTrace::tier_of(&spec.qoe);
         if spillable {
             if let Some(sp) = self.spill.as_mut() {
                 // The spill clocks are already at `t`: every caller
@@ -919,11 +1082,24 @@ impl<T: GatewayTarget> Gateway<T> {
                 // runs sync_spill first.
                 sp.submit(spec)?;
                 self.stats.spilled += 1;
+                self.telemetry.inc(
+                    "andes_requests_total",
+                    &[("outcome", "spilled"), ("tier", tier)],
+                    1.0,
+                );
+                self.telemetry.event(id, "spill", t, &[("cause", reason.label().into())]);
                 return Ok(SubmitOutcome::Spilled(reason));
             }
         }
         self.rejections.push(Rejection { id: spec.id, time: t, reason });
         self.stats.rejected += 1;
+        self.telemetry.inc(
+            "andes_requests_total",
+            &[("outcome", "rejected"), ("tier", tier)],
+            1.0,
+        );
+        self.telemetry.inc("andes_rejects_total", &[("cause", reason.label())], 1.0);
+        self.telemetry.event(id, "reject", t, &[("cause", reason.label().into())]);
         Ok(SubmitOutcome::Rejected(reason))
     }
 
@@ -948,8 +1124,16 @@ impl<T: GatewayTarget> Gateway<T> {
                 .decide_with_prefix(prompt, prefix, &qoe, &states, self.surge.mode(), depth);
             if decision == AdmissionDecision::Admit {
                 let d = self.queue.pop_front().unwrap();
+                let (id, tier, waited) =
+                    (d.spec.id as u64, QoeTrace::tier_of(&d.spec.qoe), t - d.enqueued_at);
                 self.route(d.spec)?;
                 self.stats.admitted += 1;
+                self.note_admitted(id, tier, t, Some(waited));
+                self.telemetry.set_gauge(
+                    "andes_defer_queue_depth",
+                    &[],
+                    self.queue.len() as f64,
+                );
                 continue;
             }
             // The front must keep waiting: resolve whatever has reached
@@ -967,6 +1151,11 @@ impl<T: GatewayTarget> Gateway<T> {
                     let d = self.queue.pop_front().unwrap();
                     let waited = t - d.enqueued_at;
                     self.reject_or_spill(d.spec, t, RejectReason::DeferTimeout { waited })?;
+                    self.telemetry.set_gauge(
+                        "andes_defer_queue_depth",
+                        &[],
+                        self.queue.len() as f64,
+                    );
                 }
                 Some(i) => {
                     // A lower-priority request hit its deadline while
@@ -988,8 +1177,11 @@ impl<T: GatewayTarget> Gateway<T> {
                     );
                     let d = self.queue.remove(i).unwrap();
                     if d2 == AdmissionDecision::Admit {
+                        let (id, tier, waited) =
+                            (d.spec.id as u64, QoeTrace::tier_of(&d.spec.qoe), t - d.enqueued_at);
                         self.route(d.spec)?;
                         self.stats.admitted += 1;
+                        self.note_admitted(id, tier, t, Some(waited));
                     } else {
                         let waited = t - d.enqueued_at;
                         self.reject_or_spill(
@@ -998,6 +1190,11 @@ impl<T: GatewayTarget> Gateway<T> {
                             RejectReason::DeferTimeout { waited },
                         )?;
                     }
+                    self.telemetry.set_gauge(
+                        "andes_defer_queue_depth",
+                        &[],
+                        self.queue.len() as f64,
+                    );
                 }
                 None => return Ok(()),
             }
@@ -1048,21 +1245,24 @@ impl<T: GatewayTarget> Gateway<T> {
         let mut served = Vec::new();
         for m in &per_replica {
             for r in &m.requests {
-                served.push(served_outcome(r, &self.cfg));
+                let s = served_outcome(r, &self.cfg);
+                self.record_served(r, &s, false);
+                served.push(s);
             }
         }
         let mut spilled = Vec::new();
         let mut spill_per_replica = Vec::new();
         let mut spill_replica_seconds = 0.0;
         if let Some(sp) = self.spill.as_mut() {
-            let metrics = sp.drain()?;
+            spill_per_replica = sp.drain()?;
             spill_replica_seconds = sp.replica_seconds(sp.now());
-            for m in &metrics {
-                for r in &m.requests {
-                    spilled.push(served_outcome(r, &self.cfg));
-                }
+        }
+        for m in &spill_per_replica {
+            for r in &m.requests {
+                let s = served_outcome(r, &self.cfg);
+                self.record_served(r, &s, true);
+                spilled.push(s);
             }
-            spill_per_replica = metrics;
         }
         Ok(GatewayRunResult {
             per_replica,

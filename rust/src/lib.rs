@@ -22,9 +22,10 @@
 //! | L4 | [`cluster`] | elastic replica pool + routing policies (incl. session affinity), replica-seconds accounting |
 //! | L4 | [`gateway`] | the QoE-aware front door: admission (tier-weighted), pacing, surge detection, predictive autoscaling, spill tier, multi-gateway federation |
 //! | L4 | [`delivery`] | client-side delivery: per-request network model (jitter/loss/disconnects), client playback buffer with stall accounting, jitter-adaptive pacer lead |
-//! | L5 | [`server`] | TCP streaming server (JSON lines) over the real tiny-OPT model |
+//! | L5 | [`server`] | TCP streaming server (JSON lines) over the real tiny-OPT model or the simulator, with `/metrics` + `/health` on the same port |
 //! | L5 | [`experiments`] | one entry per paper figure/table plus the `ext-*` extensions |
-//! | — | [`config`] | JSON deployment config: model, GPU, scheduler, engine, gateway, autoscale, spill, federation, tiers, sessions |
+//! | — | [`telemetry`] | metric registry (Prometheus exposition), per-request event tracer (JSONL), leveled logging — the observation layer every subsystem reports into |
+//! | — | [`config`] | JSON deployment config: model, GPU, scheduler, engine, gateway, autoscale, spill, federation, tiers, sessions, telemetry |
 //! | — | [`runtime`] | PJRT loading and byte-level tokenizer for the compiled tiny-OPT model |
 //!
 //! # The serving path
@@ -50,3 +51,4 @@ pub mod model;
 pub mod workload;
 pub mod qoe;
 pub mod runtime;
+pub mod telemetry;

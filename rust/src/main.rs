@@ -1,10 +1,15 @@
 //! `andes` — QoE-aware LLM text-streaming serving (paper reproduction).
 //!
 //! Subcommands:
-//!   serve      run the TCP streaming server over the real tiny-OPT model
-//!   exp        regenerate paper tables/figures (CSV + ASCII)
-//!   workload   generate a workload trace as CSV
-//!   simulate   one simulated serving run, printing summary metrics
+//!   serve           run the TCP streaming server (tiny-OPT or simulator)
+//!   exp             regenerate paper tables/figures (CSV + ASCII)
+//!   workload        generate a workload trace as CSV
+//!   simulate        one simulated serving run, printing summary metrics
+//!   trace-validate  schema-check a telemetry trace JSONL file
+//!
+//! Global flags (any position): `--log-level <off|error|warn|info|debug|trace>`
+//! and `--quiet` (alias for `--log-level error`) control the leveled
+//! stderr logger every subcommand shares.
 
 use std::path::PathBuf;
 
@@ -14,24 +19,41 @@ use andes::model::llm::{llm_by_name, opt_66b};
 use andes::util::cli::{usage, Args, CliError, OptSpec};
 use andes::workload::{ArrivalProcess, Dataset, QoeTrace, SessionWorkload, Workload};
 
-fn main() {
-    // Minimal stderr logger (no external logger crates offline).
-    struct StderrLog;
-    impl log::Log for StderrLog {
-        fn enabled(&self, m: &log::Metadata) -> bool {
-            m.level() <= log::Level::Info
-        }
-        fn log(&self, r: &log::Record) {
-            if self.enabled(r.metadata()) {
-                eprintln!("[{}] {}", r.level(), r.args());
+/// Extract the global logging flags from anywhere in the argv and
+/// initialise the leveled stderr logger; returns the remaining args.
+fn init_logging(argv: Vec<String>) -> Vec<String> {
+    let mut level = log::LevelFilter::Info;
+    let mut rest = Vec::with_capacity(argv.len());
+    let mut it = argv.into_iter();
+    while let Some(a) = it.next() {
+        if a == "--quiet" || a == "-q" {
+            level = log::LevelFilter::Error;
+        } else if a == "--log-level" {
+            match it.next().as_deref().and_then(andes::telemetry::parse_level) {
+                Some(l) => level = l,
+                None => {
+                    eprintln!("--log-level expects off|error|warn|info|debug|trace");
+                    std::process::exit(2);
+                }
             }
+        } else if let Some(v) = a.strip_prefix("--log-level=") {
+            match andes::telemetry::parse_level(v) {
+                Some(l) => level = l,
+                None => {
+                    eprintln!("unknown log level '{v}'");
+                    std::process::exit(2);
+                }
+            }
+        } else {
+            rest.push(a);
         }
-        fn flush(&self) {}
     }
-    static LOGGER: StderrLog = StderrLog;
-    let _ = log::set_logger(&LOGGER).map(|_| log::set_max_level(log::LevelFilter::Info));
+    andes::telemetry::init_logging(level);
+    rest
+}
 
-    let argv: Vec<String> = std::env::args().skip(1).collect();
+fn main() {
+    let argv = init_logging(std::env::args().skip(1).collect());
     let (cmd, rest) = match argv.split_first() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
@@ -44,6 +66,7 @@ fn main() {
         "serve" => cmd_serve(&rest),
         "workload" => cmd_workload(&rest),
         "simulate" => cmd_simulate(&rest),
+        "trace-validate" => cmd_trace_validate(&rest),
         "--help" | "-h" | "help" => {
             println!("{}", top_usage());
             0
@@ -58,14 +81,47 @@ fn main() {
 
 fn top_usage() -> String {
     "andes — QoE-aware LLM text-streaming serving\n\n\
-     Usage: andes <command> [options]\n\n\
+     Usage: andes [--log-level L|--quiet] <command> [options]\n\n\
      Commands:\n\
-       exp <id|all>   regenerate paper tables/figures (see DESIGN.md §5)\n\
-       serve          TCP streaming server over the real tiny-OPT model\n\
-       workload       generate a workload trace CSV\n\
-       simulate       one simulated serving run with summary metrics\n\n\
+       exp <id|all>           regenerate paper tables/figures (see DESIGN.md §5)\n\
+       serve                  TCP streaming server (tiny-OPT or --backend sim)\n\
+       workload               generate a workload trace CSV\n\
+       simulate               one simulated serving run with summary metrics\n\
+       trace-validate <path>  schema-check a telemetry trace JSONL file\n\n\
      Run `andes <command> --help` for options."
         .to_string()
+}
+
+fn cmd_trace_validate(argv: &[String]) -> i32 {
+    let path = match argv.first() {
+        Some(p) if p != "--help" && p != "-h" => p,
+        _ => {
+            println!(
+                "Usage: andes trace-validate <trace.jsonl>\n\n\
+                 Validates a telemetry trace export (DESIGN.md §12): every line\n\
+                 must be a JSON object with finite non-negative time, integer\n\
+                 request id, a known event kind, and scalar-only fields."
+            );
+            return if argv.first().is_some() { 0 } else { 2 };
+        }
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("reading {path}: {e}");
+            return 1;
+        }
+    };
+    match andes::telemetry::validate_jsonl(&text) {
+        Ok(n) => {
+            println!("{path}: {n} events ok");
+            0
+        }
+        Err(e) => {
+            eprintln!("{path}: invalid trace: {e:#}");
+            1
+        }
+    }
 }
 
 fn die_on_cli(cmd: &str, about: &str, specs: &[OptSpec], e: CliError) -> i32 {
@@ -85,6 +141,12 @@ fn cmd_exp(argv: &[String]) -> i32 {
     let specs = [
         OptSpec::value("out", Some("results"), "output directory for CSVs"),
         OptSpec::flag("quick", "reduced request counts (smoke run)"),
+        OptSpec::value(
+            "trace-out",
+            None,
+            "export telemetry traces from instrumented experiments (JSONL; \
+             currently ext-gateway) plus metric snapshots beside it",
+        ),
     ];
     let about = "Regenerate paper tables and figures";
     let args = match Args::parse(argv, &specs) {
@@ -95,6 +157,7 @@ fn cmd_exp(argv: &[String]) -> i32 {
     let ctx = ExpCtx {
         out_dir: PathBuf::from(args.get("out").unwrap()),
         quick: args.has_flag("quick"),
+        trace_out: args.get("trace-out").map(PathBuf::from),
     };
     match experiments::run(&id, &ctx) {
         Ok(report) => {
@@ -112,6 +175,16 @@ fn cmd_exp(argv: &[String]) -> i32 {
 fn cmd_serve(argv: &[String]) -> i32 {
     let specs = [
         OptSpec::value("addr", Some("127.0.0.1:7878"), "listen address"),
+        OptSpec::value(
+            "backend",
+            Some("pjrt"),
+            "pjrt (compiled tiny-OPT, needs `make artifacts`) | sim (calibrated \
+             simulator on the wall clock; placeholder token glyphs)",
+        ),
+        OptSpec::flag(
+            "no-telemetry",
+            "disable the metric registry and tracer (/metrics answers 503)",
+        ),
         OptSpec::value("kv-tokens", None, "device KV capacity (tokens) [default: 2048 or config]"),
         OptSpec::value("max-output", None, "max generated tokens per request [default: 128 or config]"),
         OptSpec::value("model", Some("tiny-opt"), "latency-model profile (tiny-opt|opt-13b|...)"),
@@ -149,7 +222,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
              `andes exp ext-network`)",
         ),
     ];
-    let about = "Serve the real tiny-OPT model over TCP (JSON lines)";
+    let about = "Serve the streaming model over TCP (JSON lines + HTTP /metrics, /health)";
     let args = match Args::parse(argv, &specs) {
         Ok(a) => a,
         Err(e) => return die_on_cli("serve", about, &specs, e),
@@ -159,6 +232,13 @@ fn cmd_serve(argv: &[String]) -> i32 {
         addr: args.get("addr").unwrap().to_string(),
         ..andes::server::ServerConfig::default()
     };
+    match andes::server::ServeBackend::parse(args.get("backend").unwrap()) {
+        Some(b) => cfg.backend = b,
+        None => {
+            eprintln!("unknown backend '{}' (pjrt|sim)", args.get("backend").unwrap());
+            return 2;
+        }
+    }
     if let Some(path) = args.get("config") {
         match andes::config::AndesDeployment::from_file(std::path::Path::new(path)) {
             Ok(d) => {
@@ -178,6 +258,11 @@ fn cmd_serve(argv: &[String]) -> i32 {
                 cfg.kv_capacity_tokens = d.engine.kv_capacity_tokens;
                 cfg.max_output_tokens = d.engine.max_output_tokens;
                 cfg.park_prefixes = d.engine.park_prefixes;
+                // The live surface defaults telemetry on; a config file
+                // takes over only when it has an explicit section.
+                if let Some(t) = d.telemetry {
+                    cfg.telemetry = t;
+                }
             }
             Err(e) => {
                 eprintln!("error: {e:#}");
@@ -210,6 +295,9 @@ fn cmd_serve(argv: &[String]) -> i32 {
     if args.has_flag("no-gateway") {
         cfg.gateway.admission_enabled = false;
         cfg.gateway.pacing_enabled = false;
+    }
+    if args.has_flag("no-telemetry") {
+        cfg.telemetry.enabled = false;
     }
     if args.has_flag("park-prefixes") {
         cfg.park_prefixes = true;
@@ -395,6 +483,23 @@ fn cmd_simulate(argv: &[String]) -> i32 {
             "grow the pacer lead from observed ack jitter instead of the static \
              lead (requires --network)",
         ),
+        OptSpec::value(
+            "trace-out",
+            None,
+            "write the per-request telemetry event trace as JSONL (enables the \
+             gateway + telemetry; validate with `andes trace-validate`)",
+        ),
+        OptSpec::value(
+            "metrics-out",
+            None,
+            "write periodic metric snapshots as CSV (enables the gateway + \
+             telemetry; see DESIGN.md §12)",
+        ),
+        OptSpec::value(
+            "snapshot-interval",
+            Some("1.0"),
+            "sim-seconds between metric snapshots for --metrics-out",
+        ),
     ];
     let about = "One simulated serving run";
     let args = match Args::parse(argv, &specs) {
@@ -484,6 +589,18 @@ fn cmd_simulate(argv: &[String]) -> i32 {
         eprintln!("--adaptive-lead requires --network (nothing to observe jitter on)");
         return 2;
     }
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    let metrics_out = args.get("metrics-out").map(PathBuf::from);
+    let snapshot_interval = match args.get_f64("snapshot-interval") {
+        Ok(Some(s)) if s > 0.0 => s,
+        Ok(Some(_)) => {
+            eprintln!("--snapshot-interval must be > 0");
+            return 2;
+        }
+        Ok(None) => 1.0,
+        Err(e) => return die_on_cli("simulate", about, &specs, e),
+    };
+    let telemetry_on = trace_out.is_some() || metrics_out.is_some();
     let use_gateway = args.has_flag("gateway")
         || autoscale_arg.is_some()
         || spill_replicas > 0
@@ -492,7 +609,15 @@ fn cmd_simulate(argv: &[String]) -> i32 {
         || tier_weights.is_some()
         || sessions.is_some()
         || park
-        || network_mix.is_some();
+        || network_mix.is_some()
+        || telemetry_on;
+    if telemetry_on && gateways > 1 {
+        eprintln!(
+            "--trace-out/--metrics-out instrument the single-gateway path; they \
+             cannot be combined with --gateways > 1"
+        );
+        return 2;
+    }
     if gateways > 1 && (autoscale_arg.is_some() || spill_replicas > 0) {
         eprintln!(
             "--gateways > 1 fronts a static cluster; it cannot be combined with \
@@ -638,6 +763,19 @@ fn cmd_simulate(argv: &[String]) -> i32 {
             RoutingPolicy::QoeAware,
         );
         cluster.set_session_affinity(affinity);
+        // Telemetry rides the sim clock here; snapshots only tick when
+        // a CSV sink was requested.
+        let telemetry = if telemetry_on {
+            andes::telemetry::Telemetry::new(&andes::telemetry::TelemetryConfig {
+                enabled: true,
+                snapshot_interval: if metrics_out.is_some() { snapshot_interval } else { 0.0 },
+                ..Default::default()
+            })
+        } else {
+            andes::telemetry::Telemetry::disabled()
+        };
+        telemetry.set_time_domain("sim");
+        cluster.set_telemetry(telemetry.clone());
         // Tier weights only bite on a tiered workload.
         let qoe_trace = if tier_weights.is_some() {
             QoeTrace::Tiered
@@ -728,6 +866,7 @@ fn cmd_simulate(argv: &[String]) -> i32 {
         } else {
             Gateway::new(cluster, gcfg)
         };
+        gw.set_telemetry(telemetry.clone());
         return match gw.run_trace(trace) {
             Ok(res) => {
                 println!(
@@ -769,6 +908,29 @@ fn cmd_simulate(argv: &[String]) -> i32 {
                     println!(
                         "sessions: prefixes_parked={parked} prefix_hits={hits} \
                          park_evictions={evicted} affinity={affinity}"
+                    );
+                }
+                if let Some(p) = &trace_out {
+                    if let Err(e) = std::fs::write(p, gw.telemetry().trace_jsonl()) {
+                        eprintln!("writing {}: {e}", p.display());
+                        return 1;
+                    }
+                    let (buffered, open, dropped) = gw.telemetry().trace_stats();
+                    eprintln!(
+                        "wrote {} ({buffered} events, {open} open spans, \
+                         {dropped} evicted spans)",
+                        p.display()
+                    );
+                }
+                if let Some(p) = &metrics_out {
+                    if let Err(e) = std::fs::write(p, gw.telemetry().snapshot_csv()) {
+                        eprintln!("writing {}: {e}", p.display());
+                        return 1;
+                    }
+                    eprintln!(
+                        "wrote {} ({} snapshot rows)",
+                        p.display(),
+                        gw.telemetry().snapshot_rows_len()
                     );
                 }
                 0

@@ -17,34 +17,46 @@
 //! simulation-tier feature — the PJRT backend has no prefix cache, so
 //! `--park-prefixes` is advisory here (see `engine_loop`).
 //!
-//! Architecture: one engine thread owns the PJRT model (the xla client
-//! is not Send) and runs the continuous-batching loop; connection
-//! threads submit requests through an mpsc channel and receive token
-//! events through per-request channels. The engine thread fronts the
-//! model with the gateway components ([`crate::gateway`]): an admission
-//! controller + surge detector decide admit/defer/reject per request,
-//! and a per-request [`TokenPacer`] releases tokens at the client's
-//! digestion speed instead of the raw generation speed. The model, GPU
-//! profile, and scheduler are configured through [`ServerConfig`]
-//! (reusing [`crate::config::SchedulerConfig`]), so the server and the
-//! gateway experiments share one config path.
+//! Architecture: one engine thread owns the execution backend (the
+//! PJRT xla client is not Send) and runs the continuous-batching loop;
+//! connection threads submit requests through an mpsc channel and
+//! receive token events through per-request channels. The engine
+//! thread fronts the model with the gateway components
+//! ([`crate::gateway`]): an admission controller + surge detector
+//! decide admit/defer/reject per request, and a per-request
+//! [`TokenPacer`] releases tokens at the client's digestion speed
+//! instead of the raw generation speed. The model, GPU profile, and
+//! scheduler are configured through [`ServerConfig`] (reusing
+//! [`crate::config::SchedulerConfig`]), so the server and the gateway
+//! experiments share one config path.
+//!
+//! The same port also answers plain HTTP (DESIGN.md §12): a first line
+//! starting with `GET` switches the connection to the observability
+//! surface — `/metrics` serves the Prometheus text exposition of the
+//! server's [`Telemetry`] registry, `/health` a JSON readiness document
+//! (backend, replica count, active requests, defer depth). With
+//! `--backend sim` the engine runs the calibrated simulator on the wall
+//! clock (no compiled artifacts needed; token payloads are placeholder
+//! glyphs, while admission, pacing, and QoE accounting are real) — the
+//! configuration CI smokes against.
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
 use crate::backend::pjrt::PjrtBackend;
-use crate::backend::WallClock;
+use crate::backend::sim::SimBackend;
+use crate::backend::{ExecutionBackend, WallClock};
 use crate::config::SchedulerConfig;
 use crate::coordinator::engine::{Engine, EngineConfig};
 use crate::coordinator::request::RequestId;
 use crate::gateway::{
-    engine_state, AdmissionController, AdmissionDecision, GatewayConfig, RejectReason,
-    SpillConfig, SurgeDetector, TokenPacer,
+    engine_state, AdmissionController, AdmissionDecision, GatewayConfig, LoadMode,
+    RejectReason, SpillConfig, SurgeDetector, TokenPacer,
 };
 use crate::model::gpu::{a100_1x, GpuProfile};
 use crate::model::latency::LatencyModel;
@@ -53,7 +65,9 @@ use crate::qoe::spec::QoeSpec;
 use crate::runtime::engine::ModelRuntime;
 use crate::runtime::tokenizer::ByteTokenizer;
 use crate::runtime::Sampling;
+use crate::telemetry::{Telemetry, TelemetryConfig};
 use crate::util::json::Json;
+use crate::workload::qoe_trace::QoeTrace;
 use crate::workload::{RequestSpec, SessionInfo};
 
 /// A request submitted by a connection thread.
@@ -76,11 +90,56 @@ pub enum Event {
     Rejected { reason: RejectReason },
 }
 
+/// Which execution backend the live server fronts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeBackend {
+    /// The compiled tiny-OPT model via PJRT (requires `make artifacts`).
+    Pjrt,
+    /// The calibrated simulator on the wall clock — no artifacts
+    /// needed. Token payloads are placeholder glyphs; admission,
+    /// pacing, and QoE accounting are real.
+    Sim,
+}
+
+impl ServeBackend {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ServeBackend::Pjrt => "pjrt",
+            ServeBackend::Sim => "sim",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "pjrt" | "real" => Some(ServeBackend::Pjrt),
+            "sim" | "simulator" => Some(ServeBackend::Sim),
+            _ => None,
+        }
+    }
+}
+
+/// Live readiness state shared between the engine thread and the
+/// `/health` endpoint.
+#[derive(Debug, Clone, Default)]
+pub struct HealthState {
+    /// Set once the engine thread is serving.
+    pub ready: bool,
+    pub backend: String,
+    pub replicas: usize,
+    pub active_requests: usize,
+    pub defer_depth: usize,
+    pub served_requests: usize,
+}
+
 /// Server configuration.
 pub struct ServerConfig {
     pub addr: String,
     pub kv_capacity_tokens: usize,
     pub max_output_tokens: usize,
+    /// Execution backend (`--backend pjrt|sim`).
+    pub backend: ServeBackend,
+    /// Telemetry section: registry + tracer behind `/metrics`.
+    pub telemetry: TelemetryConfig,
     /// Model profile driving the latency model the scheduler sees. The
     /// generated tokens always come from the compiled tiny-OPT runtime.
     pub llm: LlmProfile,
@@ -105,6 +164,11 @@ impl Default for ServerConfig {
             addr: "127.0.0.1:7878".into(),
             kv_capacity_tokens: 2048,
             max_output_tokens: 128,
+            backend: ServeBackend::Pjrt,
+            // The live surface defaults to observable: /metrics and
+            // /health answer out of the box (simulation paths default
+            // to telemetry off for bit-identical parity instead).
+            telemetry: TelemetryConfig { enabled: true, ..TelemetryConfig::default() },
             llm: tiny_opt(),
             gpu: a100_1x(),
             scheduler: SchedulerConfig::Andes(Default::default()),
@@ -130,10 +194,15 @@ struct Stream {
 
 /// Engine thread: owns the model, pulls submissions, streams events
 /// through the gateway's admission controller and per-request pacers.
-fn engine_loop(cfg: ServerConfig, rx: Receiver<Submission>) -> Result<()> {
-    let runtime = ModelRuntime::load(&ModelRuntime::default_dir())
-        .context("loading artifacts (run `make artifacts`)")?;
-    let backend = PjrtBackend::new(runtime, Sampling::TopK { k: 40, temperature: 1.0 }, 1234);
+/// Generic over the execution backend: PJRT for real serving, the
+/// calibrated simulator for artifact-free smokes.
+fn engine_loop<B: ExecutionBackend>(
+    cfg: ServerConfig,
+    rx: Receiver<Submission>,
+    backend: B,
+    telemetry: Telemetry,
+    health: Arc<Mutex<HealthState>>,
+) -> Result<()> {
     let engine_cfg = EngineConfig {
         kv_capacity_tokens: cfg.kv_capacity_tokens,
         swap_capacity_tokens: cfg.kv_capacity_tokens * 4,
@@ -152,6 +221,13 @@ fn engine_loop(cfg: ServerConfig, rx: Receiver<Submission>) -> Result<()> {
         cfg.scheduler.build(),
         latency,
     );
+    telemetry.set_time_domain("wall");
+    engine.set_telemetry(telemetry.clone(), 0);
+    if let Ok(mut h) = health.lock() {
+        h.ready = true;
+        h.backend = cfg.backend.label().to_string();
+        h.replicas = 1;
+    }
 
     if cfg.gateway.autoscale.enabled {
         // The live server fronts a single real-model engine; elastic
@@ -195,13 +271,14 @@ fn engine_loop(cfg: ServerConfig, rx: Receiver<Submission>) -> Result<()> {
     let mut admission = AdmissionController::new(cfg.gateway.admission.clone());
     let mut surge = SurgeDetector::new(cfg.gateway.surge.clone());
     let mut streams: HashMap<RequestId, Stream> = HashMap::new();
-    let mut deferred: VecDeque<(Submission, f64)> = VecDeque::new();
+    let mut deferred: VecDeque<(Submission, f64, usize)> = VecDeque::new();
     let mut reported = 0usize; // finished requests already examined
+    let mut next_req = 0usize; // arrival ordinal → spec id / trace span key
 
     // Parked-prefix tokens usable by a submission (0 for one-shot
     // requests, opening turns, and missing/evicted prefixes).
-    fn usable_prefix(
-        engine: &Engine<PjrtBackend, WallClock>,
+    fn usable_prefix<B: ExecutionBackend>(
+        engine: &Engine<B, WallClock>,
         session: Option<SessionInfo>,
     ) -> usize {
         session
@@ -212,16 +289,19 @@ fn engine_loop(cfg: ServerConfig, rx: Receiver<Submission>) -> Result<()> {
     // `arrival` is the request's original arrival time: admit time for
     // fresh submissions, enqueue time for deferred ones — so defer-queue
     // wait is charged to TTFT/QoE exactly as in the simulated gateway.
-    fn admit(
+    // `arrival_id` is the server-level arrival ordinal; it becomes the
+    // spec id, which keys the telemetry trace span across defer/admit.
+    fn admit<B: ExecutionBackend>(
         sub: Submission,
         arrival: f64,
-        engine: &mut Engine<PjrtBackend, WallClock>,
+        arrival_id: usize,
+        engine: &mut Engine<B, WallClock>,
         streams: &mut HashMap<RequestId, Stream>,
         cfg: &ServerConfig,
     ) {
         let Submission { prompt, max_tokens, qoe, session, events } = sub;
         let spec = RequestSpec {
-            id: 0, // engine assigns
+            id: arrival_id,
             arrival,
             prompt_tokens: prompt.len(),
             output_tokens: max_tokens,
@@ -273,12 +353,26 @@ fn engine_loop(cfg: ServerConfig, rx: Receiver<Submission>) -> Result<()> {
         // Retry deferred submissions: admit, keep waiting, or time out.
         let now = engine.now();
         for _ in 0..deferred.len() {
-            let (sub, t0) = deferred.pop_front().unwrap();
+            let (sub, t0, rid) = deferred.pop_front().unwrap();
             let waited = now - t0;
             if waited > cfg.gateway.admission.max_defer_wait {
-                let _ = sub
-                    .events
-                    .send(Event::Rejected { reason: RejectReason::DeferTimeout { waited } });
+                let reason = RejectReason::DeferTimeout { waited };
+                if telemetry.is_enabled() {
+                    let tier = QoeTrace::tier_of(&sub.qoe);
+                    telemetry.inc(
+                        "andes_requests_total",
+                        &[("outcome", "rejected"), ("tier", tier)],
+                        1.0,
+                    );
+                    telemetry.inc("andes_rejects_total", &[("cause", reason.label())], 1.0);
+                    telemetry.event(
+                        rid as u64,
+                        "reject",
+                        now,
+                        &[("cause", reason.label().into()), ("waited", waited.into())],
+                    );
+                }
+                let _ = sub.events.send(Event::Rejected { reason });
                 continue;
             }
             let state = [engine_state(&engine)];
@@ -291,9 +385,25 @@ fn engine_loop(cfg: ServerConfig, rx: Receiver<Submission>) -> Result<()> {
                 surge.mode(),
                 deferred.len(),
             ) {
-                AdmissionDecision::Admit => admit(sub, t0, &mut engine, &mut streams, &cfg),
+                AdmissionDecision::Admit => {
+                    if telemetry.is_enabled() {
+                        let tier = QoeTrace::tier_of(&sub.qoe);
+                        telemetry.inc(
+                            "andes_requests_total",
+                            &[("outcome", "admitted"), ("tier", tier)],
+                            1.0,
+                        );
+                        telemetry.event(
+                            rid as u64,
+                            "admit",
+                            now,
+                            &[("waited", waited.into())],
+                        );
+                    }
+                    admit(sub, t0, rid, &mut engine, &mut streams, &cfg)
+                }
                 _ => {
-                    deferred.push_front((sub, t0));
+                    deferred.push_front((sub, t0, rid));
                     break; // FIFO: the head blocks the rest
                 }
             }
@@ -303,8 +413,32 @@ fn engine_loop(cfg: ServerConfig, rx: Receiver<Submission>) -> Result<()> {
         for sub in incoming {
             let t = engine.now();
             surge.observe(t);
+            let rid = next_req;
+            next_req += 1;
+            let tier = QoeTrace::tier_of(&sub.qoe);
+            if telemetry.is_enabled() {
+                telemetry.event(
+                    rid as u64,
+                    "arrival",
+                    t,
+                    &[("tier", tier.into()), ("prompt_tokens", sub.prompt.len().into())],
+                );
+                telemetry.set_gauge(
+                    "andes_surge_mode",
+                    &[],
+                    if surge.mode() == LoadMode::Surge { 1.0 } else { 0.0 },
+                );
+            }
             if !cfg.gateway.admission_enabled {
-                admit(sub, t, &mut engine, &mut streams, &cfg);
+                if telemetry.is_enabled() {
+                    telemetry.inc(
+                        "andes_requests_total",
+                        &[("outcome", "admitted"), ("tier", tier)],
+                        1.0,
+                    );
+                    telemetry.event(rid as u64, "admit", t, &[]);
+                }
+                admit(sub, t, rid, &mut engine, &mut streams, &cfg);
                 continue;
             }
             let state = [engine_state(&engine)];
@@ -317,9 +451,52 @@ fn engine_loop(cfg: ServerConfig, rx: Receiver<Submission>) -> Result<()> {
                 surge.mode(),
                 deferred.len(),
             ) {
-                AdmissionDecision::Admit => admit(sub, t, &mut engine, &mut streams, &cfg),
-                AdmissionDecision::Defer => deferred.push_back((sub, t)),
+                AdmissionDecision::Admit => {
+                    if telemetry.is_enabled() {
+                        telemetry.inc(
+                            "andes_requests_total",
+                            &[("outcome", "admitted"), ("tier", tier)],
+                            1.0,
+                        );
+                        telemetry.event(rid as u64, "admit", t, &[]);
+                    }
+                    admit(sub, t, rid, &mut engine, &mut streams, &cfg)
+                }
+                AdmissionDecision::Defer => {
+                    if telemetry.is_enabled() {
+                        telemetry.inc(
+                            "andes_requests_total",
+                            &[("outcome", "deferred"), ("tier", tier)],
+                            1.0,
+                        );
+                        telemetry.event(
+                            rid as u64,
+                            "defer",
+                            t,
+                            &[("depth", (deferred.len() + 1).into())],
+                        );
+                    }
+                    deferred.push_back((sub, t, rid));
+                }
                 AdmissionDecision::Reject(reason) => {
+                    if telemetry.is_enabled() {
+                        telemetry.inc(
+                            "andes_requests_total",
+                            &[("outcome", "rejected"), ("tier", tier)],
+                            1.0,
+                        );
+                        telemetry.inc(
+                            "andes_rejects_total",
+                            &[("cause", reason.label())],
+                            1.0,
+                        );
+                        telemetry.event(
+                            rid as u64,
+                            "reject",
+                            t,
+                            &[("cause", reason.label().into())],
+                        );
+                    }
                     let _ = sub.events.send(Event::Rejected { reason });
                 }
             }
@@ -334,17 +511,29 @@ fn engine_loop(cfg: ServerConfig, rx: Receiver<Submission>) -> Result<()> {
         }
 
         // Pull newly generated tokens into their pacers, release what is
-        // due, and hold Done until each pacer drains.
+        // due, and hold Done until each pacer drains. Backends that
+        // retain no token values (the simulator) stream a placeholder
+        // glyph per generated token — cadence is what matters here.
         let now = engine.now();
         let ids: Vec<RequestId> = streams.keys().copied().collect();
         for id in ids {
             let have = engine.requests().get(id).map_or(0, |r| r.generated);
             let s = streams.get_mut(&id).unwrap();
             if have > s.tokens.len() {
-                if let Some(toks) = engine.backend().generated(id) {
-                    for &tok in toks.iter().take(have.min(toks.len())).skip(s.tokens.len()) {
-                        s.pacer.push(now);
-                        s.tokens.push(tok);
+                match engine.backend().generated_tokens(id) {
+                    Some(toks) => {
+                        for &tok in
+                            toks.iter().take(have.min(toks.len())).skip(s.tokens.len())
+                        {
+                            s.pacer.push(now);
+                            s.tokens.push(tok);
+                        }
+                    }
+                    None => {
+                        while s.tokens.len() < have {
+                            s.pacer.push(now);
+                            s.tokens.push(u32::from(b'.'));
+                        }
                     }
                 }
             }
@@ -364,6 +553,43 @@ fn engine_loop(cfg: ServerConfig, rx: Receiver<Submission>) -> Result<()> {
                 if let Some(s) = streams.get_mut(&r.id) {
                     s.done = Some((r.output_tokens, r.ttft, r.final_qoe));
                 }
+                if telemetry.is_enabled() {
+                    let spec =
+                        QoeSpec::new(r.expected_ttft.max(0.0), r.expected_tds.max(0.1));
+                    let tier = QoeTrace::tier_of(&spec);
+                    let labels = [("tier", tier)];
+                    let sid = r.spec_id as u64;
+                    if r.ttft.is_finite() && r.ttft >= 0.0 {
+                        telemetry.observe_latency("andes_ttft_seconds", &labels, r.ttft);
+                        telemetry.event(
+                            sid,
+                            "first_token",
+                            r.arrival + r.ttft,
+                            &[("ttft", r.ttft.into())],
+                        );
+                    }
+                    if r.avg_tds.is_finite() && r.avg_tds > 0.0 {
+                        telemetry.observe_tpot("andes_tpot_seconds", &labels, 1.0 / r.avg_tds);
+                    }
+                    if r.final_qoe.is_finite() {
+                        telemetry.observe_unit(
+                            "andes_qoe",
+                            &labels,
+                            r.final_qoe.clamp(0.0, 1.0),
+                        );
+                    }
+                    telemetry.inc("andes_tokens_total", &labels, r.output_tokens as f64);
+                    telemetry.event(
+                        sid,
+                        "finish",
+                        now,
+                        &[
+                            ("tokens", r.output_tokens.into()),
+                            ("qoe", r.final_qoe.into()),
+                            ("tier", tier.into()),
+                        ],
+                    );
+                }
                 reported += 1;
             }
         }
@@ -380,15 +606,107 @@ fn engine_loop(cfg: ServerConfig, rx: Receiver<Submission>) -> Result<()> {
             }
             engine.backend_mut().forget(id);
         }
+
+        // Observability heartbeat: queue-depth gauge, periodic metric
+        // snapshots, and the /health readiness document.
+        if telemetry.is_enabled() {
+            telemetry.set_gauge("andes_defer_queue_depth", &[], deferred.len() as f64);
+            telemetry.maybe_snapshot(engine.now());
+        }
+        if let Ok(mut h) = health.lock() {
+            h.active_requests = streams.len();
+            h.defer_depth = deferred.len();
+            h.served_requests = reported;
+        }
     }
 }
 
-fn handle_conn(stream: TcpStream, tx: Sender<Submission>) {
+/// Answer one plain-HTTP request on a connection whose first line was a
+/// `GET`. Headers are drained and ignored; the response closes the
+/// connection (curl-friendly, no keep-alive state to manage).
+fn serve_http(
+    request_line: &str,
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+    telemetry: &Telemetry,
+    health: &Arc<Mutex<HealthState>>,
+) {
+    // Drain headers up to the blank line.
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) if line.trim().is_empty() => break,
+            Ok(_) => continue,
+            Err(_) => break,
+        }
+    }
+    let path = request_line.split_whitespace().nth(1).unwrap_or("/");
+    let (status, content_type, body) = match path {
+        "/metrics" => {
+            let text = telemetry.render_prometheus();
+            if text.is_empty() {
+                (
+                    "503 Service Unavailable",
+                    "text/plain; charset=utf-8",
+                    "telemetry disabled\n".to_string(),
+                )
+            } else {
+                ("200 OK", "text/plain; version=0.0.4; charset=utf-8", text)
+            }
+        }
+        "/health" => {
+            let h = health.lock().map(|h| h.clone()).unwrap_or_default();
+            let j = Json::obj(vec![
+                ("status", if h.ready { "ok" } else { "starting" }.into()),
+                ("backend", h.backend.as_str().into()),
+                ("replicas", (h.replicas as u64).into()),
+                ("active_requests", (h.active_requests as u64).into()),
+                ("defer_depth", (h.defer_depth as u64).into()),
+                ("served_requests", (h.served_requests as u64).into()),
+            ]);
+            ("200 OK", "application/json", format!("{j}\n"))
+        }
+        _ => (
+            "404 Not Found",
+            "text/plain; charset=utf-8",
+            "not found (try /metrics or /health)\n".to_string(),
+        ),
+    };
+    let _ = write!(
+        writer,
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = writer.flush();
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    tx: Sender<Submission>,
+    telemetry: Telemetry,
+    health: Arc<Mutex<HealthState>>,
+) {
     let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     let tokenizer = ByteTokenizer::new();
-    let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
     let mut writer = stream;
-    for line in reader.lines() {
+
+    // Peek the first line: `GET …` switches the connection to the HTTP
+    // observability surface; anything else is the JSONL protocol.
+    let mut first = String::new();
+    match reader.read_line(&mut first) {
+        Ok(0) | Err(_) => return,
+        Ok(_) => {}
+    }
+    if first.starts_with("GET ") || first.starts_with("HEAD ") {
+        serve_http(&first, &mut reader, &mut writer, &telemetry, &health);
+        log::debug!("http {peer} {}", first.trim());
+        return;
+    }
+
+    for line in std::iter::once(Ok::<String, std::io::Error>(first)).chain(reader.lines()) {
         let line = match line {
             Ok(l) if !l.trim().is_empty() => l,
             Ok(_) => continue,
@@ -482,14 +800,43 @@ pub fn serve(cfg: ServerConfig, ready: Option<Sender<String>>) -> Result<()> {
     let listener = TcpListener::bind(&cfg.addr)
         .with_context(|| format!("binding {}", cfg.addr))?;
     let local = listener.local_addr()?.to_string();
-    log::info!("andes serving on {local}");
+    log::info!("andes serving on {local} (backend={})", cfg.backend.label());
     if let Some(r) = ready {
         let _ = r.send(local);
     }
+    let telemetry = Telemetry::new(&cfg.telemetry);
+    let health = Arc::new(Mutex::new(HealthState {
+        backend: cfg.backend.label().to_string(),
+        ..HealthState::default()
+    }));
     let (tx, rx) = channel::<Submission>();
+    // Backends are constructed inside the engine thread: the PJRT xla
+    // client is not Send, and the simulator needs no sharing either.
+    let backend_kind = cfg.backend;
+    let engine_tel = telemetry.clone();
+    let engine_health = Arc::clone(&health);
     let engine_handle = std::thread::spawn(move || {
-        if let Err(e) = engine_loop(cfg, rx) {
-            eprintln!("engine thread error: {e:#}");
+        let run = || -> Result<()> {
+            match backend_kind {
+                ServeBackend::Sim => {
+                    let latency = LatencyModel::for_deployment(&cfg.llm, &cfg.gpu);
+                    let backend = SimBackend::new(latency);
+                    engine_loop(cfg, rx, backend, engine_tel, engine_health)
+                }
+                ServeBackend::Pjrt => {
+                    let runtime = ModelRuntime::load(&ModelRuntime::default_dir())
+                        .context("loading artifacts (run `make artifacts`)")?;
+                    let backend = PjrtBackend::new(
+                        runtime,
+                        Sampling::TopK { k: 40, temperature: 1.0 },
+                        1234,
+                    );
+                    engine_loop(cfg, rx, backend, engine_tel, engine_health)
+                }
+            }
+        };
+        if let Err(e) = run() {
+            log::error!("engine thread error: {e:#}");
         }
     });
     let tx = Arc::new(tx);
@@ -497,7 +844,9 @@ pub fn serve(cfg: ServerConfig, ready: Option<Sender<String>>) -> Result<()> {
         match stream {
             Ok(s) => {
                 let tx = Sender::clone(&tx);
-                std::thread::spawn(move || handle_conn(s, tx));
+                let tel = telemetry.clone();
+                let h = Arc::clone(&health);
+                std::thread::spawn(move || handle_conn(s, tx, tel, h));
             }
             Err(e) => log::warn!("accept error: {e}"),
         }

@@ -1,0 +1,100 @@
+//! Leveled structured logging to stderr, replacing the old hardcoded
+//! Info-only logger in `main.rs` so `--quiet` / `--log-level` behave
+//! consistently across subcommands.
+//!
+//! Lines render as `[  12.345s LEVEL target] message` — elapsed process
+//! time, level, and the emitting module — so advisory logs from the
+//! serving stack (autoscale/spill/network/park) are grep-able and
+//! filterable without a crates.io logging framework.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+
+static START: OnceLock<Instant> = OnceLock::new();
+static LOGGER: StderrLogger = StderrLogger;
+
+struct StderrLogger;
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let elapsed = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+        let target = record.target().rsplit("::").next().unwrap_or("andes");
+        eprintln!(
+            "[{elapsed:>9.3}s {:<5} {target}] {}",
+            record.level(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Parse a CLI level name. `--quiet` maps to [`LevelFilter::Error`].
+pub fn parse_level(s: &str) -> Option<LevelFilter> {
+    match s.to_ascii_lowercase().as_str() {
+        "off" => Some(LevelFilter::Off),
+        "error" => Some(LevelFilter::Error),
+        "warn" => Some(LevelFilter::Warn),
+        "info" => Some(LevelFilter::Info),
+        "debug" => Some(LevelFilter::Debug),
+        "trace" => Some(LevelFilter::Trace),
+        _ => None,
+    }
+}
+
+/// Install the stderr logger at `level`. Safe to call repeatedly: later
+/// calls only adjust the max level (the first logger installation wins,
+/// which is the same logger).
+pub fn init(level: LevelFilter) {
+    START.get_or_init(Instant::now);
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+}
+
+/// Convenience: map a `Level` to the label used in log lines (tested
+/// so the format stays stable for scrapers).
+pub fn level_label(level: Level) -> &'static str {
+    match level {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN",
+        Level::Info => "INFO",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(parse_level("info"), Some(LevelFilter::Info));
+        assert_eq!(parse_level("WARN"), Some(LevelFilter::Warn));
+        assert_eq!(parse_level("off"), Some(LevelFilter::Off));
+        assert_eq!(parse_level("loud"), None);
+    }
+
+    #[test]
+    fn init_adjusts_max_level() {
+        init(LevelFilter::Warn);
+        assert_eq!(log::max_level(), LevelFilter::Warn);
+        init(LevelFilter::Error);
+        assert_eq!(log::max_level(), LevelFilter::Error);
+    }
+
+    #[test]
+    fn level_labels() {
+        assert_eq!(level_label(Level::Info), "INFO");
+        assert_eq!(level_label(Level::Error), "ERROR");
+    }
+}

@@ -1,0 +1,326 @@
+//! Telemetry: metric registry, per-request event tracing, and the data
+//! behind the live `/metrics` + `/health` surface (DESIGN.md §12).
+//!
+//! The stack-wide handle is [`Telemetry`]: a cloneable, thread-safe
+//! wrapper that is either **enabled** (shared registry + tracer behind a
+//! mutex) or **disabled** (every call a no-op). The disabled handle is
+//! the default everywhere, so a run with `telemetry: off` executes the
+//! exact pre-telemetry code path — parity-tested in
+//! `rust/tests/telemetry.rs`.
+//!
+//! Time domains: the telemetry layer never reads a clock of its own.
+//! Every event/snapshot timestamp is supplied by the caller from the
+//! engine's [`crate::backend::Clock`] — virtual seconds in simulation,
+//! wall seconds in live serving — and the domain is recorded once via
+//! [`Telemetry::set_time_domain`] so exports are self-describing.
+//!
+//! ```
+//! use andes::telemetry::{Telemetry, TelemetryConfig};
+//!
+//! let tel = Telemetry::new(&TelemetryConfig { enabled: true, ..TelemetryConfig::default() });
+//! tel.inc("andes_requests_total", &[("tier", "standard"), ("outcome", "admitted")], 1.0);
+//! tel.event(3, "arrival", 0.5, &[("tier", "standard".into())]);
+//! assert!(tel.render_prometheus().contains("andes_requests_total"));
+//!
+//! // The disabled handle observes nothing and renders nothing.
+//! let off = Telemetry::disabled();
+//! off.inc("andes_requests_total", &[], 1.0);
+//! assert_eq!(off.render_prometheus(), "");
+//! ```
+
+pub mod logging;
+pub mod registry;
+pub mod trace;
+
+pub use logging::{init as init_logging, parse_level};
+pub use registry::{validate_exposition, Registry};
+pub use trace::{validate_jsonl, TraceEvent, Tracer, EVENT_KINDS};
+
+use std::sync::{Arc, Mutex};
+
+use crate::util::csv::{fmt_f64, Csv};
+use crate::util::json::Json;
+
+use registry::{LATENCY_BUCKETS, TPOT_BUCKETS, UNIT_BUCKETS};
+
+/// The `"telemetry"` config section / CLI knobs.
+#[derive(Debug, Clone)]
+pub struct TelemetryConfig {
+    /// Master switch. Off (the default in simulation) keeps every code
+    /// path bit-identical to the pre-telemetry stack.
+    pub enabled: bool,
+    /// Tracer ring-buffer capacity in events (closed spans evicted
+    /// oldest-first past this; open spans never dropped).
+    pub trace_capacity: usize,
+    /// Period of the metrics-snapshot CSV in engine-clock seconds;
+    /// 0 disables periodic snapshots.
+    pub snapshot_interval: f64,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig { enabled: false, trace_capacity: 65_536, snapshot_interval: 0.0 }
+    }
+}
+
+struct Inner {
+    registry: Registry,
+    tracer: Tracer,
+    snapshot_interval: f64,
+    next_snapshot: f64,
+    snapshots: Csv,
+}
+
+/// Cloneable stack-wide telemetry handle (see module docs).
+#[derive(Clone, Default)]
+pub struct Telemetry {
+    inner: Option<Arc<Mutex<Inner>>>,
+}
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Telemetry").field("enabled", &self.is_enabled()).finish()
+    }
+}
+
+impl Telemetry {
+    /// The no-op handle: every record call returns immediately.
+    pub fn disabled() -> Self {
+        Telemetry { inner: None }
+    }
+
+    /// Build from config; `cfg.enabled == false` yields [`Self::disabled`].
+    pub fn new(cfg: &TelemetryConfig) -> Self {
+        if !cfg.enabled {
+            return Telemetry::disabled();
+        }
+        let mut registry = Registry::new();
+        declare_base_families(&mut registry);
+        Telemetry {
+            inner: Some(Arc::new(Mutex::new(Inner {
+                registry,
+                tracer: Tracer::new(cfg.trace_capacity),
+                snapshot_interval: cfg.snapshot_interval,
+                next_snapshot: 0.0,
+                snapshots: Csv::new(&["time", "metric", "labels", "value"]),
+            }))),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    fn with_inner<R>(&self, f: impl FnOnce(&mut Inner) -> R) -> Option<R> {
+        self.inner.as_ref().map(|m| f(&mut m.lock().expect("telemetry lock")))
+    }
+
+    /// Record which clock domain timestamps come from ("sim" | "wall").
+    pub fn set_time_domain(&self, domain: &str) {
+        let wall = if domain == "wall" { 1.0 } else { 0.0 };
+        self.with_inner(|i| i.registry.set("andes_time_domain_wall", &[], wall));
+    }
+
+    /// Increment a counter family.
+    pub fn inc(&self, name: &str, labels: &[(&str, &str)], by: f64) {
+        self.with_inner(|i| i.registry.inc(name, labels, by));
+    }
+
+    /// Set a gauge family.
+    pub fn set_gauge(&self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.with_inner(|i| i.registry.set(name, labels, v));
+    }
+
+    /// Observe into a latency histogram (TTFT-style buckets).
+    pub fn observe_latency(&self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.with_inner(|i| i.registry.observe(name, labels, v, LATENCY_BUCKETS));
+    }
+
+    /// Observe into a per-token latency histogram (TPOT-style buckets).
+    pub fn observe_tpot(&self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.with_inner(|i| i.registry.observe(name, labels, v, TPOT_BUCKETS));
+    }
+
+    /// Observe into a unit-interval histogram (QoE-style buckets).
+    pub fn observe_unit(&self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.with_inner(|i| i.registry.observe(name, labels, v, UNIT_BUCKETS));
+    }
+
+    /// Append a structured trace event to `request`'s span.
+    pub fn event(&self, request: u64, kind: &'static str, time: f64, fields: &[(&str, Json)]) {
+        self.with_inner(|i| i.tracer.record(request, kind, time, fields));
+    }
+
+    /// Take a periodic metrics snapshot if `now` crossed the interval
+    /// boundary (no-op when snapshots are disabled). Call from the hot
+    /// loop that owns the engine clock.
+    pub fn maybe_snapshot(&self, now: f64) {
+        self.with_inner(|i| {
+            if i.snapshot_interval <= 0.0 || now < i.next_snapshot {
+                return;
+            }
+            // One row per (metric, labels); skip ahead past gaps so an
+            // idle stretch doesn't emit a burst of identical snapshots.
+            i.next_snapshot = now + i.snapshot_interval;
+            let rows = i.registry.snapshot_rows();
+            for (metric, labels, value) in rows {
+                i.snapshots.row(&[fmt_f64(now), metric, labels, fmt_f64(value)]);
+            }
+        });
+    }
+
+    /// Render the registry in Prometheus text exposition format (empty
+    /// when disabled).
+    pub fn render_prometheus(&self) -> String {
+        self.with_inner(|i| i.registry.render()).unwrap_or_default()
+    }
+
+    /// Export the tracer ring buffer as JSONL (empty when disabled).
+    pub fn trace_jsonl(&self) -> String {
+        self.with_inner(|i| i.tracer.export_jsonl()).unwrap_or_default()
+    }
+
+    /// The accumulated metrics-snapshot CSV text (header-only when no
+    /// snapshot fired).
+    pub fn snapshot_csv(&self) -> String {
+        self.with_inner(|i| i.snapshots.to_string()).unwrap_or_default()
+    }
+
+    /// Number of snapshot rows accumulated so far.
+    pub fn snapshot_rows_len(&self) -> usize {
+        self.with_inner(|i| i.snapshots.len()).unwrap_or(0)
+    }
+
+    /// Current value of a counter/gauge series (0 when disabled/absent).
+    pub fn value(&self, name: &str, labels: &[(&str, &str)]) -> f64 {
+        self.with_inner(|i| i.registry.value(name, labels)).unwrap_or(0.0)
+    }
+
+    /// Histogram percentile via the shared estimator (NaN when absent).
+    pub fn histogram_percentile(&self, name: &str, labels: &[(&str, &str)], p: f64) -> f64 {
+        self.with_inner(|i| i.registry.histogram_percentile(name, labels, p))
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Buffered trace events / open spans (diagnostics, tests).
+    pub fn trace_stats(&self) -> (usize, usize, u64) {
+        self.with_inner(|i| {
+            (i.tracer.buffered_events(), i.tracer.open_spans(), i.tracer.dropped_spans())
+        })
+        .unwrap_or((0, 0, 0))
+    }
+}
+
+/// Pre-declare the stack's metric taxonomy (DESIGN.md §12) so `/metrics`
+/// advertises every family — HELP/TYPE lines — before traffic arrives.
+fn declare_base_families(r: &mut Registry) {
+    r.declare_gauge("andes_time_domain_wall", "1 when timestamps are wall-clock, 0 for sim time");
+    r.declare_counter("andes_requests_total", "arrivals by tier and admission outcome");
+    r.declare_counter("andes_rejects_total", "structured rejections by cause");
+    r.declare_counter("andes_tokens_total", "output tokens delivered, by tier");
+    r.declare_histogram("andes_ttft_seconds", "time to first token, by tier", LATENCY_BUCKETS);
+    r.declare_histogram(
+        "andes_tpot_seconds",
+        "mean time per output token after the first, by tier",
+        TPOT_BUCKETS,
+    );
+    r.declare_histogram("andes_qoe", "final per-request QoE in [0,1], by tier", UNIT_BUCKETS);
+    r.declare_gauge("andes_defer_queue_depth", "requests parked in the gateway defer queue");
+    r.declare_gauge("andes_surge_mode", "1 while the surge detector reports surge load");
+    r.declare_gauge("andes_pacer_lead_tokens", "pacer lead of the most recent finished stream");
+    r.declare_gauge("andes_batch_size", "requests in the current engine iteration, per replica");
+    r.declare_gauge(
+        "andes_kv_used_fraction",
+        "device KV cache utilization in [0,1], per replica",
+    );
+    r.declare_counter("andes_iterations_total", "engine iterations by replica and phase");
+    r.declare_counter("andes_preemptions_total", "preemptions by replica and kind");
+    r.declare_counter("andes_prefix_hits_total", "parked-prefix claims, per replica");
+    r.declare_gauge("andes_replicas", "routable serving replicas");
+    r.declare_counter("andes_replica_events_total", "replica lifecycle events by action");
+    r.declare_counter("andes_net_stalls_total", "client playback stalls, by tier");
+    r.declare_counter("andes_net_stall_seconds_total", "client stall time, by tier");
+    r.declare_counter("andes_net_retransmits_total", "network retransmissions, by tier");
+    r.declare_counter("andes_net_disconnects_total", "tokens delayed by disconnects, by tier");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enabled() -> Telemetry {
+        Telemetry::new(&TelemetryConfig { enabled: true, ..TelemetryConfig::default() })
+    }
+
+    #[test]
+    fn disabled_handle_is_inert() {
+        let t = Telemetry::disabled();
+        t.inc("andes_requests_total", &[("tier", "premium")], 1.0);
+        t.event(1, "arrival", 0.0, &[]);
+        t.maybe_snapshot(10.0);
+        assert!(!t.is_enabled());
+        assert_eq!(t.render_prometheus(), "");
+        assert_eq!(t.trace_jsonl(), "");
+        assert_eq!(t.value("andes_requests_total", &[("tier", "premium")]), 0.0);
+    }
+
+    #[test]
+    fn config_off_is_disabled() {
+        assert!(!Telemetry::new(&TelemetryConfig::default()).is_enabled());
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let a = enabled();
+        let b = a.clone();
+        b.inc("andes_tokens_total", &[("tier", "standard")], 42.0);
+        assert_eq!(a.value("andes_tokens_total", &[("tier", "standard")]), 42.0);
+    }
+
+    #[test]
+    fn base_families_render_and_validate_before_traffic() {
+        let t = enabled();
+        let text = t.render_prometheus();
+        for family in [
+            "andes_requests_total",
+            "andes_ttft_seconds",
+            "andes_tpot_seconds",
+            "andes_qoe",
+            "andes_tokens_total",
+            "andes_rejects_total",
+            "andes_defer_queue_depth",
+            "andes_batch_size",
+        ] {
+            assert!(text.contains(&format!("# TYPE {family}")), "{family} missing");
+        }
+        assert!(validate_exposition(&text).is_ok());
+    }
+
+    #[test]
+    fn snapshots_fire_on_interval() {
+        let t = Telemetry::new(&TelemetryConfig {
+            enabled: true,
+            snapshot_interval: 1.0,
+            ..TelemetryConfig::default()
+        });
+        t.set_gauge("andes_defer_queue_depth", &[], 3.0);
+        t.maybe_snapshot(0.0); // fires (first boundary at 0)
+        t.maybe_snapshot(0.5); // inside interval: no row
+        let after_first = t.snapshot_rows_len();
+        assert!(after_first > 0);
+        t.maybe_snapshot(1.5); // next boundary crossed
+        assert!(t.snapshot_rows_len() > after_first);
+        let csv = t.snapshot_csv();
+        assert!(csv.starts_with("time,metric,labels,value"));
+        assert!(csv.contains("andes_defer_queue_depth"));
+    }
+
+    #[test]
+    fn time_domain_gauge() {
+        let t = enabled();
+        t.set_time_domain("wall");
+        assert_eq!(t.value("andes_time_domain_wall", &[]), 1.0);
+        t.set_time_domain("sim");
+        assert_eq!(t.value("andes_time_domain_wall", &[]), 0.0);
+    }
+}

@@ -1,0 +1,541 @@
+//! Labeled metric families — counters, gauges, fixed-bucket histograms —
+//! with Prometheus text exposition (stable label ordering) and
+//! percentile extraction shared with `util::stats`.
+//!
+//! The registry is dependency-light by design: label sets are
+//! `BTreeMap`s so every render walks families and series in one
+//! deterministic order, which is what lets the golden suite pin the
+//! exposition text byte-for-byte.
+//!
+//! ```
+//! use andes::telemetry::registry::{Registry, UNIT_BUCKETS};
+//!
+//! let mut r = Registry::new();
+//! r.inc("andes_requests_total", &[("tier", "premium"), ("outcome", "admitted")], 1.0);
+//! r.observe("andes_qoe", &[("tier", "premium")], 0.93, UNIT_BUCKETS);
+//! let text = r.render();
+//! assert!(text.contains("andes_requests_total{outcome=\"admitted\",tier=\"premium\"} 1"));
+//! assert!(andes::telemetry::registry::validate_exposition(&text).is_ok());
+//! assert!((r.histogram_percentile("andes_qoe", &[("tier", "premium")], 50.0) - 1.0).abs() < 1e-9);
+//! ```
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{bail, Result};
+
+use crate::util::stats::percentile_of_buckets;
+
+/// Upper bounds (seconds) for request-latency histograms (TTFT).
+pub const LATENCY_BUCKETS: &[f64] =
+    &[0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0, 120.0];
+
+/// Upper bounds (seconds/token) for per-token latency histograms (TPOT).
+pub const TPOT_BUCKETS: &[f64] = &[0.01, 0.02, 0.05, 0.1, 0.2, 0.35, 0.5, 1.0, 2.0];
+
+/// Upper bounds for unit-interval scores (QoE ∈ [0, 1]).
+pub const UNIT_BUCKETS: &[f64] = &[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0];
+
+/// Canonical sorted label set; ordering is what stabilises exposition.
+pub type LabelSet = BTreeMap<String, String>;
+
+fn label_set(labels: &[(&str, &str)]) -> LabelSet {
+    labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Render a label set as `{k="v",...}` (empty string for no labels);
+/// `extra` is appended last (used for the histogram `le` label).
+fn render_labels(labels: &LabelSet, extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{v}\""));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+/// One fixed-bucket histogram series: cumulative exposition, with
+/// percentile extraction via the shared `util::stats` estimator.
+#[derive(Debug, Clone)]
+pub struct HistogramCell {
+    /// Finite upper bounds, ascending; the `+Inf` bucket is implicit.
+    bounds: Vec<f64>,
+    /// One count per finite bound, plus the overflow count last.
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl HistogramCell {
+    fn new(bounds: &[f64]) -> Self {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        HistogramCell {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            sum: 0.0,
+            count: 0,
+        }
+    }
+
+    /// Record one sample. Non-finite samples are dropped (a NaN TTFT —
+    /// an unfinished request — must not poison the sum).
+    pub fn observe(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let idx = self.bounds.partition_point(|b| f64::total_cmp(b, &v).is_lt());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Percentile estimate via [`percentile_of_buckets`] — the single
+    /// shared implementation; overflow samples are conservatively
+    /// attributed to the last finite bucket.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let n = self.bounds.len();
+        let mut counts = self.counts[..n].to_vec();
+        counts[n - 1] += self.counts[n];
+        percentile_of_buckets(&self.bounds, &counts, p)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn name(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Cell {
+    Value(f64),
+    Hist(HistogramCell),
+}
+
+#[derive(Debug, Clone)]
+struct Family {
+    kind: Kind,
+    help: String,
+    bounds: Vec<f64>,
+    cells: BTreeMap<LabelSet, Cell>,
+}
+
+/// The metric registry: families keyed by name, series by label set.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    families: BTreeMap<String, Family>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Pre-declare a family so `/metrics` lists it (HELP/TYPE) before
+    /// any traffic touches it.
+    pub fn declare_counter(&mut self, name: &str, help: &str) {
+        self.declare(name, Kind::Counter, help, &[]);
+    }
+
+    pub fn declare_gauge(&mut self, name: &str, help: &str) {
+        self.declare(name, Kind::Gauge, help, &[]);
+    }
+
+    pub fn declare_histogram(&mut self, name: &str, help: &str, bounds: &[f64]) {
+        self.declare(name, Kind::Histogram, help, bounds);
+    }
+
+    fn declare(&mut self, name: &str, kind: Kind, help: &str, bounds: &[f64]) {
+        self.families.entry(name.to_string()).or_insert_with(|| Family {
+            kind,
+            help: help.to_string(),
+            bounds: bounds.to_vec(),
+            cells: BTreeMap::new(),
+        });
+    }
+
+    /// Increment a counter series by `by` (auto-declared if new).
+    pub fn inc(&mut self, name: &str, labels: &[(&str, &str)], by: f64) {
+        let fam = self.family_mut(name, Kind::Counter, &[]);
+        match fam.cells.entry(label_set(labels)).or_insert(Cell::Value(0.0)) {
+            Cell::Value(v) => *v += by,
+            Cell::Hist(_) => debug_assert!(false, "{name} is a histogram"),
+        }
+    }
+
+    /// Set a gauge series to `v` (auto-declared if new).
+    pub fn set(&mut self, name: &str, labels: &[(&str, &str)], v: f64) {
+        let fam = self.family_mut(name, Kind::Gauge, &[]);
+        match fam.cells.entry(label_set(labels)).or_insert(Cell::Value(0.0)) {
+            Cell::Value(g) => *g = v,
+            Cell::Hist(_) => debug_assert!(false, "{name} is a histogram"),
+        }
+    }
+
+    /// Record one histogram observation; `bounds` applies when the
+    /// family is auto-declared by this call.
+    pub fn observe(&mut self, name: &str, labels: &[(&str, &str)], v: f64, bounds: &[f64]) {
+        let fam = self.family_mut(name, Kind::Histogram, bounds);
+        let fam_bounds = fam.bounds.clone();
+        match fam
+            .cells
+            .entry(label_set(labels))
+            .or_insert_with(|| Cell::Hist(HistogramCell::new(&fam_bounds)))
+        {
+            Cell::Hist(h) => h.observe(v),
+            Cell::Value(_) => debug_assert!(false, "{name} is not a histogram"),
+        }
+    }
+
+    fn family_mut(&mut self, name: &str, kind: Kind, bounds: &[f64]) -> &mut Family {
+        self.declare(name, kind, "andes metric", bounds);
+        self.families.get_mut(name).expect("just declared")
+    }
+
+    /// Current value of a counter/gauge series (0 when absent) — used by
+    /// tests and the health endpoint.
+    pub fn value(&self, name: &str, labels: &[(&str, &str)]) -> f64 {
+        match self.families.get(name).and_then(|f| f.cells.get(&label_set(labels))) {
+            Some(Cell::Value(v)) => *v,
+            Some(Cell::Hist(h)) => h.count() as f64,
+            None => 0.0,
+        }
+    }
+
+    /// Percentile of a histogram series (NaN when absent/empty).
+    pub fn histogram_percentile(&self, name: &str, labels: &[(&str, &str)], p: f64) -> f64 {
+        match self.families.get(name).and_then(|f| f.cells.get(&label_set(labels))) {
+            Some(Cell::Hist(h)) => h.percentile(p),
+            _ => f64::NAN,
+        }
+    }
+
+    /// Long-format rows `(metric, labels, value)` for the periodic
+    /// snapshot CSV. Histograms export their `_count`, `_sum`, and
+    /// p50/p90/p99 estimates.
+    pub fn snapshot_rows(&self) -> Vec<(String, String, f64)> {
+        let mut rows = Vec::new();
+        for (name, fam) in &self.families {
+            for (labels, cell) in &fam.cells {
+                let l = render_labels(labels, None);
+                match cell {
+                    Cell::Value(v) => rows.push((name.clone(), l, *v)),
+                    Cell::Hist(h) => {
+                        rows.push((format!("{name}_count"), l.clone(), h.count() as f64));
+                        rows.push((format!("{name}_sum"), l.clone(), h.sum()));
+                        for (tag, p) in [("p50", 50.0), ("p90", 90.0), ("p99", 99.0)] {
+                            let v = h.percentile(p);
+                            if v.is_finite() {
+                                rows.push((format!("{name}_{tag}"), l.clone(), v));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        rows
+    }
+
+    /// Render the whole registry in Prometheus text exposition format.
+    /// Families, series, and labels all iterate in `BTreeMap` order, so
+    /// the output is deterministic for a deterministic run.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, fam) in &self.families {
+            let _ = writeln!(out, "# HELP {name} {}", fam.help);
+            let _ = writeln!(out, "# TYPE {name} {}", fam.kind.name());
+            for (labels, cell) in &fam.cells {
+                match cell {
+                    Cell::Value(v) => {
+                        let _ = writeln!(out, "{name}{} {v}", render_labels(labels, None));
+                    }
+                    Cell::Hist(h) => {
+                        let mut cum = 0u64;
+                        for (i, b) in h.bounds.iter().enumerate() {
+                            cum += h.counts[i];
+                            let _ = writeln!(
+                                out,
+                                "{name}_bucket{} {cum}",
+                                render_labels(labels, Some(("le", &format!("{b}"))))
+                            );
+                        }
+                        let _ = writeln!(
+                            out,
+                            "{name}_bucket{} {}",
+                            render_labels(labels, Some(("le", "+Inf"))),
+                            h.count()
+                        );
+                        let _ = writeln!(
+                            out,
+                            "{name}_sum{} {}",
+                            render_labels(labels, None),
+                            h.sum()
+                        );
+                        let _ = writeln!(
+                            out,
+                            "{name}_count{} {}",
+                            render_labels(labels, None),
+                            h.count()
+                        );
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+fn valid_metric_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Strip a histogram series suffix to its family name.
+fn histogram_base(name: &str) -> Option<&str> {
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = name.strip_suffix(suffix) {
+            return Some(base);
+        }
+    }
+    None
+}
+
+/// Parse one sample line into `(series_name, labels, value)`.
+fn parse_sample(line: &str) -> Result<(String, Vec<(String, String)>, f64)> {
+    let (name_part, rest) = match line.find('{') {
+        Some(i) => (&line[..i], &line[i..]),
+        None => match line.split_once(' ') {
+            Some((n, v)) => (n, v),
+            None => bail!("sample line without value: '{line}'"),
+        },
+    };
+    if !valid_metric_name(name_part) {
+        bail!("invalid metric name '{name_part}'");
+    }
+    let (labels, value_str) = if let Some(body) = rest.strip_prefix('{') {
+        let close = body.find('}').ok_or_else(|| anyhow::anyhow!("unclosed labels: '{line}'"))?;
+        let label_body = &body[..close];
+        let value_str = body[close + 1..].trim();
+        let mut labels = Vec::new();
+        // Label values in our renderer never contain commas/braces, so a
+        // comma split is a faithful parse of what `render` emits.
+        for pair in label_body.split(',').filter(|p| !p.is_empty()) {
+            let (k, v) = pair
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad label pair '{pair}'"))?;
+            let v = v
+                .strip_prefix('"')
+                .and_then(|v| v.strip_suffix('"'))
+                .ok_or_else(|| anyhow::anyhow!("unquoted label value '{pair}'"))?;
+            if !valid_metric_name(k) {
+                bail!("invalid label name '{k}'");
+            }
+            labels.push((k.to_string(), v.to_string()));
+        }
+        (labels, value_str)
+    } else {
+        (Vec::new(), rest.trim())
+    };
+    let value: f64 = value_str
+        .parse()
+        .map_err(|_| anyhow::anyhow!("unparseable sample value '{value_str}' in '{line}'"))?;
+    Ok((name_part.to_string(), labels, value))
+}
+
+/// Validate Prometheus text exposition: HELP/TYPE lines well-formed,
+/// every sample's family TYPE-declared before use, histogram bucket
+/// counts cumulative with a `+Inf` bucket equal to `_count`. Returns the
+/// number of sample lines checked.
+pub fn validate_exposition(text: &str) -> Result<usize> {
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    // (family, labels-sans-le) -> (last cumulative count, saw +Inf, inf value)
+    let mut hist: BTreeMap<(String, String), (f64, bool, f64)> = BTreeMap::new();
+    let mut counts: BTreeMap<(String, String), f64> = BTreeMap::new();
+    let mut samples = 0usize;
+    for line in text.lines() {
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(meta) = line.strip_prefix("# ") {
+            let mut it = meta.splitn(3, ' ');
+            let (kw, name) = (it.next().unwrap_or(""), it.next().unwrap_or(""));
+            match kw {
+                "HELP" => {
+                    if !valid_metric_name(name) {
+                        bail!("HELP for invalid name '{name}'");
+                    }
+                }
+                "TYPE" => {
+                    let t = it.next().unwrap_or("");
+                    if !matches!(t, "counter" | "gauge" | "histogram") {
+                        bail!("unknown TYPE '{t}' for '{name}'");
+                    }
+                    types.insert(name.to_string(), t.to_string());
+                }
+                _ => bail!("unknown comment directive '{kw}'"),
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // plain comment
+        }
+        let (series, labels, value) = parse_sample(line)?;
+        samples += 1;
+        let family = histogram_base(&series)
+            .filter(|b| types.get(*b).is_some_and(|t| t == "histogram"))
+            .unwrap_or(&series)
+            .to_string();
+        let declared = types
+            .get(&family)
+            .ok_or_else(|| anyhow::anyhow!("sample '{series}' precedes its TYPE line"))?;
+        if declared == "counter" && value < 0.0 {
+            bail!("negative counter sample '{line}'");
+        }
+        if declared == "histogram" {
+            let base_labels: Vec<String> = labels
+                .iter()
+                .filter(|(k, _)| k != "le")
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect();
+            let key = (family.clone(), base_labels.join(","));
+            if series.ends_with("_bucket") {
+                let le = labels
+                    .iter()
+                    .find(|(k, _)| k == "le")
+                    .map(|(_, v)| v.clone())
+                    .ok_or_else(|| anyhow::anyhow!("bucket without le: '{line}'"))?;
+                let entry = hist.entry(key).or_insert((0.0, false, 0.0));
+                if value + 1e-9 < entry.0 {
+                    bail!("non-cumulative bucket counts at '{line}'");
+                }
+                entry.0 = value;
+                if le == "+Inf" {
+                    entry.1 = true;
+                    entry.2 = value;
+                }
+            } else if series.ends_with("_count") {
+                counts.insert(key, value);
+            }
+        }
+    }
+    for (key, count) in &counts {
+        match hist.get(key) {
+            Some((_, true, inf)) if (inf - count).abs() < 1e-9 => {}
+            Some((_, true, inf)) => {
+                bail!("histogram {}: +Inf bucket {inf} != count {count}", key.0)
+            }
+            _ => bail!("histogram {} lacks a +Inf bucket", key.0),
+        }
+    }
+    Ok(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_render_sorted_labels() {
+        let mut r = Registry::new();
+        r.inc("reqs_total", &[("tier", "premium"), ("outcome", "admit")], 2.0);
+        r.set("depth", &[], 7.0);
+        let text = r.render();
+        // Labels render alphabetically regardless of insertion order.
+        assert!(text.contains("reqs_total{outcome=\"admit\",tier=\"premium\"} 2"));
+        assert!(text.contains("depth 7"));
+        assert!(validate_exposition(&text).is_ok());
+    }
+
+    #[test]
+    fn histogram_renders_cumulative_buckets() {
+        let mut r = Registry::new();
+        for v in [0.05, 0.15, 0.15, 0.95, 5.0] {
+            r.observe("ttft", &[("tier", "standard")], v, &[0.1, 0.5, 1.0]);
+        }
+        let text = r.render();
+        assert!(text.contains("ttft_bucket{tier=\"standard\",le=\"0.1\"} 1"));
+        assert!(text.contains("ttft_bucket{tier=\"standard\",le=\"0.5\"} 3"));
+        assert!(text.contains("ttft_bucket{tier=\"standard\",le=\"1\"} 4"));
+        assert!(text.contains("ttft_bucket{tier=\"standard\",le=\"+Inf\"} 5"));
+        assert!(text.contains("ttft_count{tier=\"standard\"} 5"));
+        assert!(validate_exposition(&text).is_ok());
+    }
+
+    #[test]
+    fn histogram_percentiles_use_shared_estimator() {
+        let mut h = HistogramCell::new(&[1.0, 2.0, 4.0]);
+        for _ in 0..10 {
+            h.observe(1.5);
+        }
+        // All samples in the (1, 2] bucket: p0 → lower edge, p100 → upper.
+        assert_eq!(h.percentile(0.0), 1.0);
+        assert_eq!(h.percentile(100.0), 2.0);
+        // Empty → NaN; NaN observations are dropped.
+        let mut e = HistogramCell::new(&[1.0]);
+        assert!(e.percentile(50.0).is_nan());
+        e.observe(f64::NAN);
+        assert_eq!(e.count(), 0);
+    }
+
+    #[test]
+    fn declared_families_render_before_traffic() {
+        let mut r = Registry::new();
+        r.declare_counter("andes_requests_total", "requests by outcome");
+        r.declare_histogram("andes_ttft_seconds", "time to first token", LATENCY_BUCKETS);
+        let text = r.render();
+        assert!(text.contains("# TYPE andes_requests_total counter"));
+        assert!(text.contains("# TYPE andes_ttft_seconds histogram"));
+        assert!(validate_exposition(&text).is_ok());
+    }
+
+    #[test]
+    fn validator_rejects_malformed_exposition() {
+        assert!(validate_exposition("no_type_line 1\n").is_err());
+        assert!(validate_exposition("# TYPE x counter\nx{a=b} 1\n").is_err());
+        assert!(validate_exposition("# TYPE x counter\nx -1\n").is_err());
+        assert!(validate_exposition("# TYPE x histogram\nx_bucket{le=\"1\"} 2\nx_count 2\n")
+            .is_err(), "missing +Inf bucket must fail");
+        let ok = "# HELP x h\n# TYPE x histogram\nx_bucket{le=\"1\"} 1\n\
+                  x_bucket{le=\"+Inf\"} 2\nx_sum 3\nx_count 2\n";
+        assert_eq!(validate_exposition(ok).unwrap(), 4);
+    }
+
+    #[test]
+    fn label_values_escape() {
+        let mut r = Registry::new();
+        r.inc("m", &[("detail", "say \"hi\"\nnow")], 1.0);
+        let text = r.render();
+        assert!(text.contains(r#"m{detail="say \"hi\"\nnow"} 1"#));
+    }
+}

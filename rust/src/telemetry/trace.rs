@@ -1,0 +1,320 @@
+//! Per-request structured event tracing with bounded-memory ring
+//! buffering and JSONL export.
+//!
+//! Every request's life is a *span* of [`TraceEvent`]s — arrival →
+//! admit/defer/reject → prefill start → first token → pacing releases →
+//! preempt/restore → network stall/retransmit → finish. The tracer
+//! bounds its memory by evicting whole **closed** spans, oldest first,
+//! once the buffered event count exceeds the configured capacity; a
+//! span still open (its request in flight) is never evicted, so a live
+//! request's timeline survives any amount of churn around it
+//! (property-tested in `rust/tests/telemetry.rs`).
+//!
+//! ```
+//! use andes::telemetry::trace::{validate_jsonl, Tracer};
+//!
+//! let mut t = Tracer::new(1024);
+//! t.record(7, "arrival", 0.5, &[("tier", "premium".into())]);
+//! t.record(7, "admit", 0.5, &[("replica", 0u64.into())]);
+//! t.record(7, "finish", 3.2, &[("tokens", 120u64.into())]);
+//! let jsonl = t.export_jsonl();
+//! assert_eq!(validate_jsonl(&jsonl).unwrap(), 3);
+//! ```
+
+use std::collections::{BTreeMap, VecDeque};
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// The closed vocabulary of trace event kinds — the JSONL schema the CI
+/// smoke validates against (see [`validate_jsonl`]).
+pub const EVENT_KINDS: &[&str] = &[
+    "arrival",
+    "admit",
+    "defer",
+    "reject",
+    "spill",
+    "prefill_start",
+    "first_token",
+    "pacer_release",
+    "preempt",
+    "restore",
+    "net_stall",
+    "retransmit",
+    "disconnect",
+    "finish",
+];
+
+/// Kinds that end a request's span (further events reopen nothing).
+const CLOSING_KINDS: &[&str] = &["reject", "finish"];
+
+/// One structured event inside a request's span.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Global record order (export order).
+    pub seq: u64,
+    /// Engine-clock time (sim or wall seconds, per the run's clock).
+    pub time: f64,
+    /// Span key: the request this event belongs to.
+    pub request: u64,
+    pub kind: &'static str,
+    /// Event-specific payload, flattened into the JSONL line.
+    pub fields: Vec<(String, Json)>,
+}
+
+#[derive(Debug, Default)]
+struct Span {
+    events: Vec<TraceEvent>,
+    open: bool,
+}
+
+/// Bounded per-request event buffer (see module docs for the eviction
+/// contract).
+#[derive(Debug)]
+pub struct Tracer {
+    capacity: usize,
+    next_seq: u64,
+    spans: BTreeMap<u64, Span>,
+    /// Closed spans in closing order — the eviction queue.
+    closed: VecDeque<u64>,
+    buffered: usize,
+    dropped_spans: u64,
+    dropped_events: u64,
+}
+
+impl Tracer {
+    /// `capacity` bounds the buffered event count (≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        Tracer {
+            capacity: capacity.max(1),
+            next_seq: 0,
+            spans: BTreeMap::new(),
+            closed: VecDeque::new(),
+            buffered: 0,
+            dropped_spans: 0,
+            dropped_events: 0,
+        }
+    }
+
+    /// Append one event to `request`'s span, opening it if needed and
+    /// closing it on a terminal kind, then evict closed spans (oldest
+    /// first) while over capacity.
+    pub fn record(&mut self, request: u64, kind: &'static str, time: f64, fields: &[(&str, Json)]) {
+        debug_assert!(EVENT_KINDS.contains(&kind), "unknown event kind '{kind}'");
+        let span = self.spans.entry(request).or_insert_with(|| Span {
+            events: Vec::new(),
+            open: true,
+        });
+        let was_open = span.open;
+        span.events.push(TraceEvent {
+            seq: self.next_seq,
+            time,
+            request,
+            kind,
+            fields: fields.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+        });
+        self.next_seq += 1;
+        self.buffered += 1;
+        if was_open && CLOSING_KINDS.contains(&kind) {
+            span.open = false;
+            self.closed.push_back(request);
+        }
+        while self.buffered > self.capacity {
+            let Some(victim) = self.closed.pop_front() else {
+                // Only open spans remain: never evict them. The buffer
+                // overshoots until something closes (bounded in practice
+                // by in-flight concurrency × span length).
+                break;
+            };
+            if let Some(s) = self.spans.remove(&victim) {
+                self.buffered -= s.events.len();
+                self.dropped_spans += 1;
+                self.dropped_events += s.events.len() as u64;
+            }
+        }
+    }
+
+    pub fn buffered_events(&self) -> usize {
+        self.buffered
+    }
+
+    pub fn open_spans(&self) -> usize {
+        self.spans.values().filter(|s| s.open).count()
+    }
+
+    pub fn dropped_spans(&self) -> u64 {
+        self.dropped_spans
+    }
+
+    pub fn dropped_events(&self) -> u64 {
+        self.dropped_events
+    }
+
+    /// The buffered events of one request's span, in record order.
+    pub fn events_for(&self, request: u64) -> Option<&[TraceEvent]> {
+        self.spans.get(&request).map(|s| s.events.as_slice())
+    }
+
+    /// Export every buffered event as JSON Lines, in global record
+    /// order. Each line carries `time`, `request`, `event`, plus the
+    /// event's flattened payload fields.
+    pub fn export_jsonl(&self) -> String {
+        let mut events: Vec<&TraceEvent> =
+            self.spans.values().flat_map(|s| s.events.iter()).collect();
+        events.sort_by_key(|e| e.seq);
+        let mut out = String::new();
+        for e in events {
+            let mut pairs: Vec<(&str, Json)> = vec![
+                ("time", Json::from(e.time)),
+                ("request", Json::from(e.request)),
+                ("event", Json::from(e.kind)),
+            ];
+            for (k, v) in &e.fields {
+                pairs.push((k.as_str(), v.clone()));
+            }
+            out.push_str(&Json::obj(pairs).to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Validate a JSONL trace export against the event schema: every line a
+/// JSON object with a finite non-negative `time`, an integer `request`,
+/// an `event` drawn from [`EVENT_KINDS`], and only scalar payload
+/// fields. Returns the number of validated lines.
+pub fn validate_jsonl(text: &str) -> Result<usize> {
+    let mut n = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let lineno = i + 1;
+        let v = Json::parse(line).map_err(|e| anyhow::anyhow!("line {lineno}: {e}"))?;
+        let o = match &v {
+            Json::Obj(o) => o,
+            _ => bail!("line {lineno}: not a JSON object"),
+        };
+        let time = v
+            .get("time")
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("line {lineno}: missing numeric 'time'"))?;
+        if !time.is_finite() || time < 0.0 {
+            bail!("line {lineno}: 'time' must be finite and non-negative, got {time}");
+        }
+        let req = v
+            .get("request")
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("line {lineno}: missing numeric 'request'"))?;
+        if req < 0.0 || req.fract() != 0.0 {
+            bail!("line {lineno}: 'request' must be a non-negative integer");
+        }
+        let kind = v
+            .get("event")
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("line {lineno}: missing string 'event'"))?;
+        if !EVENT_KINDS.contains(&kind) {
+            bail!("line {lineno}: unknown event kind '{kind}'");
+        }
+        for (k, field) in o {
+            if matches!(field, Json::Arr(_) | Json::Obj(_)) {
+                bail!("line {lineno}: field '{k}' must be scalar");
+            }
+        }
+        n += 1;
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: &mut Tracer, req: u64, kind: &'static str) {
+        t.record(req, kind, req as f64, &[]);
+    }
+
+    #[test]
+    fn span_records_in_order_and_closes() {
+        let mut t = Tracer::new(100);
+        ev(&mut t, 1, "arrival");
+        ev(&mut t, 1, "admit");
+        ev(&mut t, 1, "first_token");
+        assert_eq!(t.open_spans(), 1);
+        ev(&mut t, 1, "finish");
+        assert_eq!(t.open_spans(), 0);
+        let kinds: Vec<&str> = t.events_for(1).unwrap().iter().map(|e| e.kind).collect();
+        assert_eq!(kinds, ["arrival", "admit", "first_token", "finish"]);
+    }
+
+    #[test]
+    fn eviction_drops_oldest_closed_span_first() {
+        let mut t = Tracer::new(4);
+        ev(&mut t, 1, "arrival");
+        ev(&mut t, 1, "finish"); // closed, 2 events
+        ev(&mut t, 2, "arrival");
+        ev(&mut t, 2, "finish"); // closed, 2 events — at capacity
+        ev(&mut t, 3, "arrival"); // over capacity → span 1 evicted
+        assert!(t.events_for(1).is_none());
+        assert!(t.events_for(2).is_some());
+        assert_eq!(t.dropped_spans(), 1);
+        assert_eq!(t.dropped_events(), 2);
+        assert!(t.buffered_events() <= 4);
+    }
+
+    #[test]
+    fn open_spans_survive_overflow() {
+        let mut t = Tracer::new(3);
+        for i in 0..10 {
+            ev(&mut t, 42, "pacer_release");
+            // Closed churn around the open span.
+            ev(&mut t, 100 + i, "arrival");
+            ev(&mut t, 100 + i, "finish");
+        }
+        // Every event of the open span is still buffered.
+        assert_eq!(t.events_for(42).unwrap().len(), 10);
+        assert_eq!(t.open_spans(), 1);
+    }
+
+    #[test]
+    fn rejected_span_is_closed() {
+        let mut t = Tracer::new(10);
+        ev(&mut t, 5, "arrival");
+        ev(&mut t, 5, "reject");
+        assert_eq!(t.open_spans(), 0);
+    }
+
+    #[test]
+    fn jsonl_roundtrip_validates() {
+        let mut t = Tracer::new(64);
+        t.record(0, "arrival", 0.25, &[("tier", "economy".into())]);
+        t.record(0, "reject", 0.25, &[("cause", "surge-shed".into())]);
+        t.record(1, "arrival", 0.50, &[]);
+        t.record(1, "admit", 0.50, &[("replica", 1u64.into())]);
+        t.record(1, "finish", 2.0, &[("tokens", 64u64.into())]);
+        let jsonl = t.export_jsonl();
+        assert_eq!(validate_jsonl(&jsonl).unwrap(), 5);
+        assert!(jsonl.lines().next().unwrap().contains("\"event\":\"arrival\""));
+    }
+
+    #[test]
+    fn validator_rejects_bad_lines() {
+        assert!(validate_jsonl("not json\n").is_err());
+        assert!(validate_jsonl("{\"time\":1,\"request\":0}\n").is_err(), "missing event");
+        assert!(
+            validate_jsonl("{\"time\":1,\"request\":0,\"event\":\"warp\"}\n").is_err(),
+            "unknown kind"
+        );
+        assert!(
+            validate_jsonl("{\"time\":-1,\"request\":0,\"event\":\"arrival\"}\n").is_err(),
+            "negative time"
+        );
+        assert!(
+            validate_jsonl("{\"time\":1,\"request\":0.5,\"event\":\"arrival\"}\n").is_err(),
+            "fractional request id"
+        );
+        assert_eq!(validate_jsonl("\n\n").unwrap(), 0);
+    }
+}

@@ -120,6 +120,62 @@ pub fn check_or_bless(path: &Path, metrics: &[GoldenMetric]) -> Result<()> {
     Ok(())
 }
 
+/// Compare verbatim text against the snapshot at `path`, blessing it
+/// when missing or when `GOLDEN_BLESS=1` is set. Used for exact textual
+/// surfaces (e.g. the Prometheus exposition of a seeded run) where the
+/// whole byte sequence — family order, label order, bucket layout — is
+/// the contract. On mismatch the error names the first differing line.
+pub fn check_or_bless_text(path: &Path, observed: &str) -> Result<()> {
+    let bless = std::env::var("GOLDEN_BLESS").map(|v| v == "1").unwrap_or(false);
+    if bless || !path.exists() {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+        std::fs::write(path, observed)
+            .with_context(|| format!("writing golden text {}", path.display()))?;
+        eprintln!(
+            "golden: blessed {} ({} lines) — review and commit it",
+            path.display(),
+            observed.lines().count()
+        );
+        return Ok(());
+    }
+    let golden = std::fs::read_to_string(path)
+        .with_context(|| format!("reading golden text {}", path.display()))?;
+    if golden == observed {
+        return Ok(());
+    }
+    let mut gl = golden.lines();
+    let mut ol = observed.lines();
+    let mut lineno = 0usize;
+    loop {
+        lineno += 1;
+        match (gl.next(), ol.next()) {
+            (Some(g), Some(o)) if g == o => continue,
+            (Some(g), Some(o)) => bail!(
+                "golden text {} drifted at line {lineno}:\n  golden:   {g}\n  observed: {o}\n\
+                 (intentional change? regenerate with GOLDEN_BLESS=1)",
+                path.display()
+            ),
+            (Some(g), None) => bail!(
+                "golden text {} drifted: observed output ends at line {lineno}, \
+                 golden continues with: {g}",
+                path.display()
+            ),
+            (None, Some(o)) => bail!(
+                "golden text {} drifted: golden ends at line {lineno}, \
+                 observed continues with: {o}",
+                path.display()
+            ),
+            (None, None) => bail!(
+                "golden text {} drifted in trailing whitespace only",
+                path.display()
+            ),
+        }
+    }
+}
+
 fn write_snapshot(path: &Path, metrics: &[GoldenMetric]) -> Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)
@@ -175,6 +231,23 @@ mod tests {
             check_or_bless(&path, &[metric("bad", f64::NAN, 0.0)]).unwrap_err();
         assert!(err.to_string().contains("bad"), "{err:#}");
         assert!(!path.exists(), "a poisoned snapshot must never be written");
+    }
+
+    #[test]
+    fn text_snapshot_roundtrip_and_drift() {
+        let path = tmp("text.golden");
+        let _ = std::fs::remove_file(&path);
+        let text = "# HELP x y\n# TYPE x counter\nx 1\n";
+        check_or_bless_text(&path, text).unwrap();
+        assert!(path.exists());
+        check_or_bless_text(&path, text).unwrap();
+        let err = check_or_bless_text(&path, "# HELP x y\n# TYPE x counter\nx 2\n")
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("line 3"), "{msg}");
+        assert!(msg.contains("x 1") && msg.contains("x 2"), "{msg}");
+        // Truncated output is drift too.
+        assert!(check_or_bless_text(&path, "# HELP x y\n").is_err());
     }
 
     #[test]

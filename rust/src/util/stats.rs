@@ -24,11 +24,54 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     if n == 1 {
         return sorted[0];
     }
-    let rank = (p.clamp(0.0, 100.0) / 100.0) * (n - 1) as f64;
+    let rank = percentile_rank(n, p);
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     let frac = rank - lo as f64;
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Fractional 0-based rank of percentile `p` among `n` ordered samples —
+/// the one interpolation rule shared by [`percentile_sorted`] and the
+/// telemetry bucket histograms ([`percentile_of_buckets`]), so the two
+/// estimators cannot drift apart again.
+pub fn percentile_rank(n: usize, p: f64) -> f64 {
+    (p.clamp(0.0, 100.0) / 100.0) * n.saturating_sub(1) as f64
+}
+
+/// Percentile extracted from a fixed-bucket histogram: `bounds[i]` is the
+/// inclusive upper edge of bucket `i` (ascending), `counts[i]` its count.
+/// Samples are assumed uniformly spread inside their bucket, so the
+/// estimate interpolates linearly between the bucket's edges using the
+/// same fractional rank as [`percentile_sorted`]. Returns NaN on an
+/// empty histogram; a bucket holding a single sample reports its upper
+/// edge (mirroring the singleton rule above, to bucket resolution).
+pub fn percentile_of_buckets(bounds: &[f64], counts: &[u64], p: f64) -> f64 {
+    assert_eq!(bounds.len(), counts.len(), "bucket arity mismatch");
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return f64::NAN;
+    }
+    let rank = percentile_rank(total as usize, p);
+    let mut cum = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        let first = cum as f64;
+        let last = (cum + c - 1) as f64;
+        if rank <= last {
+            let lo = if i == 0 { bounds[0].min(0.0) } else { bounds[i - 1] };
+            let hi = bounds[i];
+            if last == first {
+                return hi;
+            }
+            let frac = ((rank - first) / (last - first)).clamp(0.0, 1.0);
+            return lo + (hi - lo) * frac;
+        }
+        cum += c;
+    }
+    bounds[bounds.len() - 1]
 }
 
 /// Arithmetic mean; NaN on empty input.
@@ -213,6 +256,50 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
         assert!(percentile(&xs, 100.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_all_equal() {
+        // A constant sample must report that constant at every p (the
+        // interpolation between equal neighbours is exact).
+        let xs = [4.2; 9];
+        for p in [0.0, 10.0, 50.0, 90.0, 100.0] {
+            assert_eq!(percentile(&xs, p), 4.2, "p={p}");
+        }
+    }
+
+    #[test]
+    fn bucket_percentile_edge_cases() {
+        let bounds = [1.0, 2.0, 4.0, 8.0];
+        // Empty histogram → NaN, like the sample estimator.
+        assert!(percentile_of_buckets(&bounds, &[0, 0, 0, 0], 50.0).is_nan());
+        // Singleton → the sample's bucket upper edge, independent of p.
+        for p in [0.0, 50.0, 100.0] {
+            assert_eq!(percentile_of_buckets(&bounds, &[0, 1, 0, 0], p), 2.0);
+        }
+        // All-equal (everything in one bucket) → constant estimate to
+        // bucket resolution: p0 pins the lower edge, p100 the upper.
+        assert_eq!(percentile_of_buckets(&bounds, &[0, 0, 7, 0], 0.0), 2.0);
+        assert_eq!(percentile_of_buckets(&bounds, &[0, 0, 7, 0], 100.0), 4.0);
+    }
+
+    #[test]
+    fn bucket_percentile_tracks_sample_percentile() {
+        // Samples placed exactly on bucket edges: the bucket estimator
+        // must agree with the sample estimator to bucket resolution.
+        let bounds: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        let samples: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        let counts = vec![1u64; 10];
+        for p in [0.0, 25.0, 50.0, 75.0, 90.0, 100.0] {
+            let exact = percentile(&samples, p);
+            let approx = percentile_of_buckets(&bounds, &counts, p);
+            assert!(
+                (exact - approx).abs() <= 1.0 + 1e-12,
+                "p={p}: sample {exact} vs bucket {approx}"
+            );
+        }
+        // The shared rank rule: median of 10 one-per-bucket samples.
+        assert!((percentile_of_buckets(&bounds, &counts, 100.0) - 10.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! Golden-trace regression suite: seeded, reduced-size `ext-gateway`
 //! and `ext-sessions` scenarios pinned against JSON snapshots committed
 //! under `rust/tests/golden/`, with per-metric relative tolerances
-//! (counts exact, floats to 1e-6).
+//! (counts exact, floats to 1e-6) — plus a byte-for-byte pin of the
+//! Prometheus text exposition the instrumented gateway cell emits.
 //!
 //! Regeneration after an intentional behavior change:
 //!
@@ -24,7 +25,8 @@ use andes::gateway::{Gateway, GatewayConfig};
 use andes::model::gpu::a100_4x;
 use andes::model::latency::LatencyModel;
 use andes::model::llm::opt_66b;
-use andes::util::golden::{check_or_bless, metric};
+use andes::telemetry::{validate_exposition, Telemetry, TelemetryConfig};
+use andes::util::golden::{check_or_bless, check_or_bless_text, metric};
 use andes::util::stats::{mean, percentile};
 use andes::workload::{ArrivalProcess, Dataset, QoeTrace, SessionWorkload, Workload};
 
@@ -94,6 +96,69 @@ fn golden_ext_gateway_cell() {
         ],
     )
     .unwrap();
+}
+
+#[test]
+fn golden_ext_gateway_prometheus_exposition() {
+    // The same seeded cell as `golden_ext_gateway_cell`, but pinning the
+    // *entire* Prometheus text exposition byte-for-byte: family order
+    // (declaration order), label order (alphabetical, `le` last),
+    // bucket layout, and every counter/gauge value. Stable label
+    // ordering is part of the contract scrapers rely on.
+    let llm = opt_66b();
+    let gpu = a100_4x();
+    let latency = LatencyModel::for_deployment(&llm, &gpu);
+    let replicas = 2usize;
+    let capacity = estimate_capacity(&llm, &gpu, Dataset::ShareGpt) * replicas as f64;
+    let engine_cfg = EngineConfig {
+        kv_capacity_tokens: llm.kv_capacity_tokens(&gpu),
+        swap_capacity_tokens: llm.swap_capacity_tokens(&gpu),
+        ..EngineConfig::default()
+    };
+    let sched = SchedulerConfig::Andes(AndesConfig::default());
+    let mut cluster = Cluster::new(
+        replicas,
+        engine_cfg,
+        latency,
+        &sched,
+        RoutingPolicy::QoeAware,
+    );
+    let mut gcfg = GatewayConfig::default();
+    gcfg.surge.baseline_rate = capacity;
+    let telemetry =
+        Telemetry::new(&TelemetryConfig { enabled: true, ..TelemetryConfig::default() });
+    telemetry.set_time_domain("sim");
+    cluster.set_telemetry(telemetry.clone());
+    let trace = Workload {
+        dataset: Dataset::ShareGpt,
+        arrivals: ArrivalProcess::Gamma { rate: capacity * 2.0, cv: 3.0 },
+        qoe_trace: QoeTrace::TextReading,
+        num_requests: 150,
+        seed: 42,
+    }
+    .generate();
+    let mut gw = Gateway::new(cluster, gcfg);
+    gw.set_telemetry(telemetry.clone());
+    gw.run_trace(trace).unwrap();
+
+    let text = telemetry.render_prometheus();
+    // Hard guarantees first: the exposition parses and carries the core
+    // families — so a drift failure below is about *values*, not shape.
+    let samples = validate_exposition(&text).unwrap();
+    assert!(samples > 0, "seeded run produced an empty exposition");
+    for family in [
+        "andes_requests_total",
+        "andes_ttft_seconds",
+        "andes_tpot_seconds",
+        "andes_qoe",
+        "andes_tokens_total",
+        "andes_batch_size",
+        "andes_kv_used_fraction",
+        "andes_defer_queue_depth",
+    ] {
+        assert!(text.contains(family), "exposition lost family {family}:\n{text}");
+    }
+    check_or_bless_text(&golden_path("ext_gateway_prometheus.txt"), &text).unwrap();
 }
 
 #[test]

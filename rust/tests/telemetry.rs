@@ -1,0 +1,293 @@
+//! Telemetry integration suite (DESIGN.md §12):
+//!
+//! - **Parity**: attaching a telemetry handle — disabled *or* enabled —
+//!   to the seeded gateway cell changes no per-request result bit.
+//! - **Tracer ring**: property test that bounded-memory eviction never
+//!   drops an open span, across randomized open/event/close schedules.
+//! - **Trace export**: the gateway cell's JSONL validates against the
+//!   event schema and every served request's span joins arrival→finish
+//!   on one key (the spec-id span key, not the engine-local record id).
+//! - **Live surface**: `serve --backend sim` answers a streaming request
+//!   plus `/metrics` (valid Prometheus exposition with the core
+//!   families) and `/health` (JSON readiness) on the same port.
+
+use std::collections::{HashMap, HashSet};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+use andes::cluster::{Cluster, RoutingPolicy};
+use andes::config::SchedulerConfig;
+use andes::coordinator::engine::EngineConfig;
+use andes::coordinator::sched::andes::AndesConfig;
+use andes::experiments::runner::estimate_capacity;
+use andes::gateway::{Gateway, GatewayConfig, GatewayRunResult};
+use andes::model::gpu::a100_4x;
+use andes::model::latency::LatencyModel;
+use andes::model::llm::opt_66b;
+use andes::server::{serve, ServeBackend, ServerConfig};
+use andes::telemetry::{
+    validate_exposition, validate_jsonl, Telemetry, TelemetryConfig, Tracer,
+};
+use andes::util::json::Json;
+use andes::util::testing::check_prop;
+use andes::workload::{ArrivalProcess, Dataset, QoeTrace, Workload};
+
+/// Per-request fingerprint: bit-exact floats via `to_bits`.
+type Fingerprint = Vec<(usize, u64, u64, usize)>;
+
+/// Run the seeded gateway stress cell, optionally instrumented, and
+/// return (result, bit-exact served fingerprint).
+fn run_cell(telemetry: Option<Telemetry>) -> (GatewayRunResult, Fingerprint) {
+    let llm = opt_66b();
+    let gpu = a100_4x();
+    let latency = LatencyModel::for_deployment(&llm, &gpu);
+    let replicas = 2usize;
+    let capacity = estimate_capacity(&llm, &gpu, Dataset::ShareGpt) * replicas as f64;
+    let engine_cfg = EngineConfig {
+        kv_capacity_tokens: llm.kv_capacity_tokens(&gpu),
+        swap_capacity_tokens: llm.swap_capacity_tokens(&gpu),
+        ..EngineConfig::default()
+    };
+    let sched = SchedulerConfig::Andes(AndesConfig::default());
+    let mut cluster = Cluster::new(
+        replicas,
+        engine_cfg,
+        latency,
+        &sched,
+        RoutingPolicy::QoeAware,
+    );
+    let mut gcfg = GatewayConfig::default();
+    gcfg.surge.baseline_rate = capacity;
+    if let Some(tel) = &telemetry {
+        cluster.set_telemetry(tel.clone());
+    }
+    let trace = Workload {
+        dataset: Dataset::ShareGpt,
+        arrivals: ArrivalProcess::Gamma { rate: capacity * 2.0, cv: 3.0 },
+        qoe_trace: QoeTrace::TextReading,
+        num_requests: 80,
+        seed: 42,
+    }
+    .generate();
+    let mut gw = Gateway::new(cluster, gcfg);
+    if let Some(tel) = telemetry {
+        gw.set_telemetry(tel);
+    }
+    let res = gw.run_trace(trace).unwrap();
+    let fp: Fingerprint = res
+        .served
+        .iter()
+        .map(|s| (s.id, s.paced_qoe.to_bits(), s.client_qoe.to_bits(), s.output_tokens))
+        .collect();
+    (res, fp)
+}
+
+fn enabled_telemetry() -> Telemetry {
+    let tel =
+        Telemetry::new(&TelemetryConfig { enabled: true, ..TelemetryConfig::default() });
+    tel.set_time_domain("sim");
+    tel
+}
+
+#[test]
+fn telemetry_handles_do_not_perturb_results() {
+    // Baseline: no handle attached at all (pre-telemetry construction).
+    let (base_res, base) = run_cell(None);
+    // An explicitly disabled handle must be bit-identical — this is the
+    // `telemetry: off` parity contract.
+    let (off_res, off) = run_cell(Some(Telemetry::disabled()));
+    assert_eq!(base, off, "disabled telemetry perturbed per-request results");
+    assert_eq!(base_res.rejections.len(), off_res.rejections.len());
+    // Stronger: a *recording* handle must also observe without
+    // perturbing (instrumentation only reads engine state).
+    let tel = enabled_telemetry();
+    let (on_res, on) = run_cell(Some(tel.clone()));
+    assert_eq!(base, on, "enabled telemetry perturbed per-request results");
+    assert_eq!(base_res.rejections.len(), on_res.rejections.len());
+    // And it actually recorded the run.
+    assert!(
+        tel.value("andes_requests_total", &[("outcome", "admitted"), ("tier", "standard")])
+            > 0.0
+    );
+    assert!(!tel.render_prometheus().is_empty());
+}
+
+#[test]
+fn tracer_ring_eviction_never_drops_open_spans() {
+    check_prop("open spans survive ring eviction", 150, |rng| {
+        let capacity = (rng.below(48) + 1) as usize;
+        let mut t = Tracer::new(capacity);
+        let mut open_counts: HashMap<u64, usize> = HashMap::new();
+        let mut closed: HashSet<u64> = HashSet::new();
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        let ops = rng.below(250) + 20;
+        for i in 0..ops {
+            let action = rng.below(10);
+            if live.is_empty() || action < 3 {
+                let id = next_id;
+                next_id += 1;
+                t.record(id, "arrival", i as f64, &[]);
+                live.push(id);
+                open_counts.insert(id, 1);
+            } else if action < 8 {
+                let id = live[rng.below(live.len() as u64) as usize];
+                t.record(id, "pacer_release", i as f64, &[("tokens", 1u64.into())]);
+                *open_counts.get_mut(&id).unwrap() += 1;
+            } else {
+                let id = live.swap_remove(rng.below(live.len() as u64) as usize);
+                t.record(id, "finish", i as f64, &[]);
+                open_counts.remove(&id);
+                closed.insert(id);
+            }
+            // Invariant 1: every open span keeps every one of its events.
+            for (id, n) in &open_counts {
+                let evs = t
+                    .events_for(*id)
+                    .unwrap_or_else(|| panic!("open span {id} was evicted"));
+                assert_eq!(evs.len(), *n, "open span {id} lost events");
+            }
+            // Invariant 2: the buffer respects capacity except when only
+            // open spans remain (they are never evicted).
+            let open_events: usize = open_counts.values().sum();
+            assert!(
+                t.buffered_events() <= capacity || t.buffered_events() == open_events,
+                "buffer over capacity ({} > {capacity}) with closed spans retained",
+                t.buffered_events()
+            );
+        }
+        assert_eq!(t.open_spans(), open_counts.len());
+        // Anything evicted was a span we closed.
+        assert!(t.dropped_spans() <= closed.len() as u64);
+        // The export of whatever survived is schema-valid.
+        validate_jsonl(&t.export_jsonl()).unwrap();
+    });
+}
+
+#[test]
+fn gateway_trace_export_validates_and_spans_join() {
+    let tel = enabled_telemetry();
+    let (res, _) = run_cell(Some(tel.clone()));
+    let jsonl = tel.trace_jsonl();
+    let n = validate_jsonl(&jsonl).unwrap();
+    assert!(n > 0, "instrumented run exported no events");
+    // Group events by span key: every served request's span must join
+    // arrival → finish on ONE key. (Regression guard: the gateway keys
+    // spans by spec id; using the engine-local record id would split
+    // every span in two once routing reorders submissions.)
+    let mut by_req: HashMap<u64, Vec<String>> = HashMap::new();
+    for line in jsonl.lines() {
+        let j = Json::parse(line).unwrap();
+        by_req
+            .entry(j.get("request").as_u64().unwrap())
+            .or_default()
+            .push(j.get("event").as_str().unwrap().to_string());
+    }
+    let joined = by_req
+        .values()
+        .filter(|evs| {
+            evs.iter().any(|e| e == "arrival") && evs.iter().any(|e| e == "finish")
+        })
+        .count();
+    assert!(
+        joined >= res.served.len(),
+        "only {joined} of {} served spans join arrival→finish",
+        res.served.len()
+    );
+    // No eviction at default capacity on this small run.
+    assert_eq!(tel.trace_stats().2, 0, "default capacity evicted spans on 80 requests");
+}
+
+fn http_get(addr: &str, path: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: test\r\nAccept: */*\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).expect("read http response");
+    let (head, body) = buf.split_once("\r\n\r\n").expect("malformed http response");
+    (head.lines().next().unwrap_or("").to_string(), body.to_string())
+}
+
+#[test]
+fn live_serve_sim_backend_metrics_and_health() {
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        backend: ServeBackend::Sim,
+        max_output_tokens: 16,
+        ..ServerConfig::default()
+    };
+    let (ready_tx, ready_rx) = channel();
+    std::thread::spawn(move || {
+        let _ = serve(cfg, Some(ready_tx));
+    });
+    let addr = ready_rx.recv_timeout(Duration::from_secs(10)).expect("server ready");
+
+    // One streaming request end-to-end (placeholder glyph tokens; a
+    // fast digestion speed keeps the pacer from stretching the test).
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    writeln!(s, r#"{{"prompt": "hello telemetry", "max_tokens": 4, "ttft": 1.0, "tds": 40.0}}"#)
+        .unwrap();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    let mut line = String::new();
+    let mut done = false;
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {
+                if line.contains(r#""event":"done""#) {
+                    done = true;
+                    break;
+                }
+                if line.contains(r#""event":"rejected""#) {
+                    break;
+                }
+            }
+        }
+    }
+    assert!(done, "streaming request did not complete: {line}");
+    drop(reader);
+
+    // /metrics on the same port: a valid Prometheus exposition carrying
+    // the core request/latency/QoE families with tier labels.
+    let (status, body) = http_get(&addr, "/metrics");
+    assert!(status.contains("200"), "{status}");
+    let samples = validate_exposition(&body).expect("exposition must parse");
+    assert!(samples > 0, "empty exposition");
+    for family in [
+        "andes_requests_total",
+        "andes_ttft_seconds",
+        "andes_qoe",
+        "andes_tokens_total",
+        "andes_time_domain_wall",
+    ] {
+        assert!(body.contains(family), "missing family {family} in:\n{body}");
+    }
+    assert!(body.contains("tier="), "per-tier labels missing:\n{body}");
+
+    // /health: JSON readiness document; poll briefly for the served
+    // count (the engine thread updates it at the end of its iteration).
+    let mut healthy = false;
+    for _ in 0..100 {
+        let (status, body) = http_get(&addr, "/health");
+        assert!(status.contains("200"), "{status}");
+        let j = Json::parse(body.trim()).expect("health must be valid JSON");
+        if j.get("status").as_str() == Some("ok")
+            && j.get("served_requests").as_u64().unwrap_or(0) >= 1
+        {
+            assert_eq!(j.get("backend").as_str(), Some("sim"));
+            assert_eq!(j.get("replicas").as_u64(), Some(1));
+            healthy = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(healthy, "/health never reported ok with a served request");
+
+    // Unknown paths 404 instead of hanging the connection.
+    let (status, _) = http_get(&addr, "/nope");
+    assert!(status.contains("404"), "{status}");
+}
