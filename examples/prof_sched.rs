@@ -36,6 +36,7 @@ fn main() {
             b_grid: grid,
             ..Default::default()
         });
+        // lint:allow(D2, example profiles scheduler throughput against the wall clock)
         let t0 = std::time::Instant::now();
         let mut acc = 0usize;
         let iters = 500;

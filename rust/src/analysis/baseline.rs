@@ -1,0 +1,172 @@
+//! Grandfather baseline for lint findings.
+//!
+//! `lint-baseline.json` at the repo root records, per (rule, file), how
+//! many findings existed when the gate was adopted. [`Baseline::apply`]
+//! subtracts those from a fresh scan so `andes lint --deny` only fails
+//! on *new* debt; `--update-baseline` re-blesses the current state. CI
+//! additionally refuses any commit that grows the file's `total`, which
+//! makes the baseline ratchet-only: counts can shrink as findings are
+//! fixed, never grow. The tree currently carries an empty baseline —
+//! every pre-existing finding was either fixed or suppressed inline
+//! with a reason — so the file exists purely as the ratchet anchor.
+
+use std::collections::BTreeMap;
+
+use super::rules::Finding;
+use crate::util::json::{self, Json};
+
+/// Current on-disk format version.
+const VERSION: u64 = 1;
+
+/// Allowance counts keyed by (rule, file).
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct Baseline {
+    entries: BTreeMap<(String, String), u64>,
+}
+
+impl Baseline {
+    /// A baseline that allows nothing.
+    pub fn empty() -> Baseline {
+        Baseline::default()
+    }
+
+    /// Parse the JSON document produced by [`Baseline::to_json`].
+    pub fn parse(text: &str) -> Result<Baseline, String> {
+        let v = Json::parse(text).map_err(|e| format!("baseline: {e}"))?;
+        let version = v.get("version").as_u64().unwrap_or(0);
+        if version != VERSION {
+            return Err(format!("baseline: unsupported version {version}"));
+        }
+        let mut entries = BTreeMap::new();
+        let list = v.get("entries").as_arr().unwrap_or(&[]);
+        for e in list {
+            let rule = e.get("rule").as_str().unwrap_or("").to_string();
+            let file = e.get("file").as_str().unwrap_or("").to_string();
+            let count = e.get("count").as_u64().unwrap_or(0);
+            if rule.is_empty() || file.is_empty() || count == 0 {
+                return Err("baseline: entry missing rule/file/count".to_string());
+            }
+            *entries.entry((rule, file)).or_insert(0) += count;
+        }
+        Ok(Baseline { entries })
+    }
+
+    /// Bless the given findings as the new baseline.
+    pub fn from_findings(findings: &[Finding]) -> Baseline {
+        let mut entries: BTreeMap<(String, String), u64> = BTreeMap::new();
+        for f in findings {
+            *entries.entry((f.rule.to_string(), f.file.clone())).or_insert(0) += 1;
+        }
+        Baseline { entries }
+    }
+
+    /// Split findings into (new, grandfathered-count). Within each
+    /// (rule, file) bucket the first `count` findings — scan order, i.e.
+    /// ascending line — are absorbed by the baseline.
+    pub fn apply(&self, findings: Vec<Finding>) -> (Vec<Finding>, usize) {
+        let mut remaining = self.entries.clone();
+        let mut fresh = Vec::new();
+        let mut absorbed = 0usize;
+        for f in findings {
+            let key = (f.rule.to_string(), f.file.clone());
+            match remaining.get_mut(&key) {
+                Some(n) if *n > 0 => {
+                    *n -= 1;
+                    absorbed += 1;
+                }
+                _ => fresh.push(f),
+            }
+        }
+        (fresh, absorbed)
+    }
+
+    /// Total allowance across all entries (the CI ratchet quantity).
+    pub fn total(&self) -> u64 {
+        self.entries.values().sum()
+    }
+
+    /// Serialize; stable field order via util::json's BTreeMap objects.
+    pub fn to_json(&self) -> Json {
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|((rule, file), count)| {
+                Json::obj(vec![
+                    ("rule", Json::from(rule.as_str())),
+                    ("file", Json::from(file.as_str())),
+                    ("count", Json::from(*count)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::from(VERSION)),
+            ("total", Json::from(self.total())),
+            ("entries", Json::arr(entries)),
+        ])
+    }
+
+    /// Pretty document for `lint-baseline.json`, newline-terminated.
+    pub fn render(&self) -> String {
+        let mut s = json::pretty(&self.to_json());
+        s.push('\n');
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(rule: &'static str, file: &str, line: usize) -> Finding {
+        Finding {
+            rule,
+            file: file.to_string(),
+            line,
+            excerpt: String::new(),
+            message: String::new(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_and_apply() {
+        let found = vec![
+            finding("D6", "rust/src/a.rs", 3),
+            finding("D6", "rust/src/a.rs", 9),
+            finding("D2", "rust/src/b.rs", 1),
+        ];
+        let base = Baseline::from_findings(&found);
+        assert_eq!(base.total(), 3);
+        let reparsed = Baseline::parse(&base.render()).expect("roundtrip");
+        assert_eq!(reparsed, base);
+
+        // Same findings: all absorbed.
+        let (fresh, absorbed) = reparsed.apply(found.clone());
+        assert!(fresh.is_empty());
+        assert_eq!(absorbed, 3);
+
+        // One extra D6 in a.rs: exactly one surfaces (the last in scan
+        // order), and the ratchet quantity is unchanged.
+        let mut grown = found;
+        grown.insert(2, finding("D6", "rust/src/a.rs", 40));
+        let (fresh, absorbed) = reparsed.apply(grown);
+        assert_eq!(fresh.len(), 1);
+        assert_eq!(fresh[0].line, 40);
+        assert_eq!(absorbed, 3);
+    }
+
+    #[test]
+    fn empty_baseline_absorbs_nothing() {
+        let (fresh, absorbed) = Baseline::empty().apply(vec![finding("D1", "x.rs", 1)]);
+        assert_eq!(fresh.len(), 1);
+        assert_eq!(absorbed, 0);
+        assert_eq!(Baseline::empty().total(), 0);
+    }
+
+    #[test]
+    fn rejects_bad_documents() {
+        assert!(Baseline::parse("not json").is_err());
+        assert!(Baseline::parse("{\"version\": 9, \"entries\": []}").is_err());
+        let missing = "{\"version\": 1, \"entries\": [{\"rule\": \"D1\"}]}";
+        assert!(Baseline::parse(missing).is_err());
+    }
+}

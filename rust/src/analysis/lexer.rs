@@ -1,0 +1,334 @@
+//! Comment/string strip pass for the determinism lint.
+//!
+//! Rule matching must never fire on a pattern that only occurs inside a
+//! doc comment or a string literal (`DESIGN.md` §13), so every file is
+//! first run through [`strip_source`]: a line-preserving scanner that
+//! blanks comments and literal contents with spaces. Columns survive
+//! (each stripped span is replaced by exactly as many characters as it
+//! covered), which is what lets the rules report accurate positions and
+//! the X1 cross-check associate string literals with the call tokens in
+//! front of them. The strip pass is property-tested to never change the
+//! line count (`rust/tests/lint.rs`).
+//!
+//! ```
+//! let s = andes::analysis::lexer::strip_source("let x = 1; // Instant::now()\n");
+//! assert!(!s.code[0].contains("Instant"));
+//! assert!(s.comments[0].contains("Instant::now()"));
+//! ```
+
+/// A string literal found during the strip pass, with its contents and
+/// the (0-based) line/column where it opened.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StrLit {
+    pub line: usize,
+    pub col: usize,
+    pub content: String,
+}
+
+/// Result of [`strip_source`]: `code` and `comments` always hold exactly
+/// one entry per input line.
+#[derive(Debug, Clone, Default)]
+pub struct Stripped {
+    /// Source with comments and string/char-literal contents blanked.
+    pub code: Vec<String>,
+    /// The comment text found on each line (empty when none).
+    pub comments: Vec<String>,
+    /// Every string literal, in source order.
+    pub strings: Vec<StrLit>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Normal,
+    /// Inside `/* */`, tracking nesting depth.
+    Block(u32),
+    /// Inside a `"…"` (or `b"…"`) literal.
+    Str,
+    /// Inside a raw string, remembering the `#` count of the opener.
+    RawStr(usize),
+}
+
+/// Strip comments and literal contents from Rust source (see module
+/// docs). Total over arbitrary input: unterminated constructs simply
+/// run to end-of-file without panicking.
+pub fn strip_source(text: &str) -> Stripped {
+    let mut out = Stripped::default();
+    let mut state = State::Normal;
+    let mut lit = String::new();
+    let mut lit_start = (0usize, 0usize);
+    for (li, raw_line) in text.split('\n').enumerate() {
+        let line: Vec<char> = raw_line.chars().collect();
+        let n = line.len();
+        let mut code = String::with_capacity(n);
+        let mut comment = String::new();
+        let mut i = 0usize;
+        while i < n {
+            let c = line[i];
+            match state {
+                State::Block(depth) => {
+                    if starts(&line, i, "/*") {
+                        state = State::Block(depth + 1);
+                        comment.push_str("/*");
+                        code.push_str("  ");
+                        i += 2;
+                    } else if starts(&line, i, "*/") {
+                        comment.push_str("*/");
+                        code.push_str("  ");
+                        i += 2;
+                        state = if depth <= 1 {
+                            State::Normal
+                        } else {
+                            State::Block(depth - 1)
+                        };
+                    } else {
+                        comment.push(c);
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                State::Str => {
+                    if c == '\\' && i + 1 < n {
+                        lit.push(c);
+                        lit.push(line[i + 1]);
+                        code.push_str("  ");
+                        i += 2;
+                    } else if c == '"' {
+                        out.strings.push(StrLit {
+                            line: lit_start.0,
+                            col: lit_start.1,
+                            content: std::mem::take(&mut lit),
+                        });
+                        code.push(' ');
+                        i += 1;
+                        state = State::Normal;
+                    } else {
+                        lit.push(c);
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                State::RawStr(hashes) => {
+                    if c == '"' && count_hashes(&line, i + 1) >= hashes {
+                        out.strings.push(StrLit {
+                            line: lit_start.0,
+                            col: lit_start.1,
+                            content: std::mem::take(&mut lit),
+                        });
+                        for _ in 0..hashes + 1 {
+                            code.push(' ');
+                        }
+                        i += hashes + 1;
+                        state = State::Normal;
+                    } else {
+                        lit.push(c);
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                State::Normal => {
+                    if starts(&line, i, "//") {
+                        for &cc in &line[i..] {
+                            comment.push(cc);
+                            code.push(' ');
+                        }
+                        i = n;
+                    } else if starts(&line, i, "/*") {
+                        state = State::Block(1);
+                        comment.push_str("/*");
+                        code.push_str("  ");
+                        i += 2;
+                    } else if c == '"' {
+                        state = State::Str;
+                        lit_start = (li, i);
+                        code.push(' ');
+                        i += 1;
+                    } else if let Some(hashes) = raw_string_start(&line, i) {
+                        // `r"`, `r#"`, `br"`, … — consume prefix + hashes
+                        // + the opening quote.
+                        let prefix = if c == 'b' { 2 } else { 1 };
+                        state = State::RawStr(hashes);
+                        lit_start = (li, i);
+                        for _ in 0..prefix + hashes + 1 {
+                            code.push(' ');
+                        }
+                        i += prefix + hashes + 1;
+                    } else if !ident_before(&line, i) && starts(&line, i, "b\"") {
+                        state = State::Str;
+                        lit_start = (li, i);
+                        code.push_str("b ");
+                        i += 2;
+                    } else if c == '\'' {
+                        match char_literal_len(&line, i) {
+                            Some(len) => {
+                                code.push('\'');
+                                for _ in 0..len.saturating_sub(2) {
+                                    code.push(' ');
+                                }
+                                code.push('\'');
+                                i += len;
+                            }
+                            None => {
+                                // Lifetime marker — plain code.
+                                code.push(c);
+                                i += 1;
+                            }
+                        }
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        // A literal that continues past the line keeps its newline.
+        if matches!(state, State::Str | State::RawStr(_)) {
+            lit.push('\n');
+        }
+        out.code.push(code);
+        out.comments.push(comment);
+    }
+    out
+}
+
+fn starts(line: &[char], i: usize, pat: &str) -> bool {
+    let pat: Vec<char> = pat.chars().collect();
+    i + pat.len() <= line.len() && line[i..i + pat.len()] == pat[..]
+}
+
+fn count_hashes(line: &[char], mut i: usize) -> usize {
+    let mut h = 0;
+    while i < line.len() && line[i] == '#' {
+        h += 1;
+        i += 1;
+    }
+    h
+}
+
+fn ident_before(line: &[char], i: usize) -> bool {
+    i > 0 && (line[i - 1].is_alphanumeric() || line[i - 1] == '_')
+}
+
+/// If `line[i..]` opens a raw string (`r"`, `r#…#"`, `br"`, `br#…#"`),
+/// return its `#` count; `None` otherwise. Identifiers ending in `r`
+/// (e.g. `var"` cannot appear, but `attr` before `"` could in macros)
+/// are rejected via the preceding-character check.
+fn raw_string_start(line: &[char], i: usize) -> Option<usize> {
+    if ident_before(line, i) {
+        return None;
+    }
+    let rest = &line[i..];
+    let after_prefix = if rest.first() == Some(&'r') {
+        1
+    } else if rest.first() == Some(&'b') && rest.get(1) == Some(&'r') {
+        2
+    } else {
+        return None;
+    };
+    let hashes = count_hashes(line, i + after_prefix);
+    if line.get(i + after_prefix + hashes) == Some(&'"') {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+/// Total length of the char literal starting at `line[i] == '\''`
+/// (`'x'`, `'\n'`, `'\u{1F600}'`), or `None` when this is a lifetime.
+fn char_literal_len(line: &[char], i: usize) -> Option<usize> {
+    let n = line.len();
+    if i + 1 >= n {
+        return None;
+    }
+    if line[i + 1] == '\\' {
+        if i + 2 < n && line[i + 2] == 'u' {
+            // '\u{…}' — find the closing quote.
+            for j in i + 3..n {
+                if line[j] == '\'' {
+                    return Some(j - i + 1);
+                }
+            }
+            return None;
+        }
+        // One escaped character then the closing quote.
+        if i + 3 < n && line[i + 3] == '\'' {
+            return Some(4);
+        }
+        return None;
+    }
+    // 'x' — exactly one character, then the closing quote.
+    if i + 2 < n && line[i + 2] == '\'' && line[i + 1] != '\'' {
+        return Some(3);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_comments_are_stripped_and_captured() {
+        let s = strip_source("let a = 1; // trailing note\n/// doc with partial_cmp\nlet b = 2;");
+        assert_eq!(s.code.len(), 3);
+        assert!(!s.code[0].contains("trailing"));
+        assert!(s.comments[0].contains("trailing note"));
+        assert!(!s.code[1].contains("partial_cmp"));
+        assert!(s.code[2].contains("let b"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let s = strip_source("a /* one /* two */ still */ b\nc /* open\nmid\nclose */ d");
+        assert!(s.code[0].contains('a') && s.code[0].contains('b'));
+        assert!(!s.code[0].contains("still"));
+        assert!(s.code[1].contains('c') && !s.code[1].contains("open"));
+        assert_eq!(s.code[2].trim(), "");
+        assert!(s.code[3].contains('d'));
+    }
+
+    #[test]
+    fn strings_are_blanked_but_recorded() {
+        let s = strip_source(r#"emit("unwrap() in a string", "two \"quoted\"");"#);
+        assert!(!s.code[0].contains("unwrap"));
+        assert_eq!(s.strings.len(), 2);
+        assert_eq!(s.strings[0].content, "unwrap() in a string");
+        assert!(s.strings[1].content.contains("quoted"));
+        // Columns survive blanking: the call and punctuation remain.
+        assert!(s.code[0].starts_with("emit("));
+    }
+
+    #[test]
+    fn raw_strings_and_byte_strings() {
+        let s = strip_source("let a = r#\"thread_rng()\"#; let b = b\"from_entropy\";");
+        assert!(!s.code[0].contains("thread_rng"));
+        assert!(!s.code[0].contains("from_entropy"));
+        assert_eq!(s.strings[0].content, "thread_rng()");
+        assert_eq!(s.strings[1].content, "from_entropy");
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let s = strip_source("let q = '\"'; fn f<'a>(x: &'a str) -> char { '\\n' }");
+        // The quote char literal must not open a string.
+        assert!(s.strings.is_empty());
+        assert!(s.code[0].contains("fn f<'a>"));
+    }
+
+    #[test]
+    fn multiline_string_preserves_line_count() {
+        let text = "let s = \"line one\nline two\";\nafter();";
+        let s = strip_source(text);
+        assert_eq!(s.code.len(), 3);
+        assert_eq!(s.strings.len(), 1);
+        assert_eq!(s.strings[0].content, "line one\nline two");
+        assert!(s.code[2].contains("after"));
+    }
+
+    #[test]
+    fn unterminated_constructs_do_not_panic() {
+        for text in ["\"open", "/* open", "r#\"open", "let a = 'x"] {
+            let s = strip_source(text);
+            assert_eq!(s.code.len(), 1, "{text:?}");
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! In-tree determinism lint (`andes lint`).
+//!
+//! A dependency-light static-analysis pass over the repository's own
+//! Rust sources that enforces the determinism contract the simulation
+//! relies on (DESIGN.md §13): no hash-order iteration feeding results
+//! (D1), no wall-clock reads outside the wall domain (D2), no NaN-unsafe
+//! float comparisons (D3), no unseeded randomness (D4), no stray prints
+//! in library code (D5), no unwrap/expect in simulation paths without a
+//! reasoned waiver (D6), and a declared-vs-emitted cross-check of the
+//! telemetry metric taxonomy (X1).
+//!
+//! The pipeline is: [`lexer`] strips comments/strings while preserving
+//! line and column positions, [`rules`] matches on the stripped text,
+//! [`suppress`] applies inline `// lint:allow(...)` waivers, [`baseline`]
+//! subtracts grandfathered findings, and [`report`] renders the rest.
+//! Everything is deterministic by construction: files are walked in
+//! sorted order and all intermediate maps are BTreeMaps, so two runs on
+//! the same tree produce byte-identical reports.
+
+pub mod baseline;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+pub mod suppress;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use baseline::Baseline;
+use rules::{Finding, MetricUsage};
+
+/// Directories scanned relative to the repo root. Fixture corpora under
+/// any `lint_fixtures/` directory are exercised by the lint's own tests
+/// and are skipped here.
+pub const SCAN_ROOTS: &[&str] = &["rust/src", "rust/tests", "benches", "examples"];
+
+/// Knobs for one lint run.
+#[derive(Debug, Default)]
+pub struct LintOptions {
+    /// Restrict the report to a single rule id (e.g. `D3`).
+    pub rule: Option<String>,
+    /// Grandfathered findings to subtract (`lint-baseline.json`).
+    pub baseline: Baseline,
+}
+
+/// Aggregated result of a lint run; `findings` holds only new (non-
+/// suppressed, non-baselined) findings, sorted by file, line, rule.
+#[derive(Debug, Default)]
+pub struct LintOutcome {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    pub suppressed: usize,
+    pub baselined: usize,
+    /// Distinct metric families seen in `declare_base_families`.
+    pub declared: usize,
+    /// Distinct metric families seen at emit sites.
+    pub emitted: usize,
+}
+
+/// Lint a repository checkout rooted at `root`.
+pub fn lint_repo(root: &Path, opts: &LintOptions) -> Result<LintOutcome, String> {
+    let files = collect_sources(root)?;
+    Ok(lint_sources(&files, opts))
+}
+
+/// Gather `(repo-relative path, contents)` for every `.rs` file under
+/// [`SCAN_ROOTS`], in sorted order for run-to-run determinism.
+pub fn collect_sources(root: &Path) -> Result<Vec<(String, String)>, String> {
+    let mut out = Vec::new();
+    for sub in SCAN_ROOTS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            walk_dir(&dir, sub, &mut out)?;
+        }
+    }
+    Ok(out)
+}
+
+/// Lint an in-memory file set. Split out from [`lint_repo`] so tests can
+/// scan synthetic trees and fixture corpora without touching the disk
+/// layout.
+pub fn lint_sources(files: &[(String, String)], opts: &LintOptions) -> LintOutcome {
+    let mut usage = MetricUsage::default();
+    let mut findings = Vec::new();
+    let mut suppressed = 0usize;
+    for (rel, text) in files {
+        let scan = rules::scan_source(rel, text, &mut usage);
+        suppressed += scan.suppressed;
+        findings.extend(scan.findings);
+    }
+    findings.extend(rules::cross_check(&usage));
+    findings.sort_by(|a, b| {
+        let ka = (a.file.as_str(), a.line, a.rule);
+        ka.cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    if let Some(rule) = &opts.rule {
+        findings.retain(|f| f.rule == rule.as_str());
+    }
+    let (fresh, baselined) = opts.baseline.apply(findings);
+    LintOutcome {
+        findings: fresh,
+        files_scanned: files.len(),
+        suppressed,
+        baselined,
+        declared: usage.declared.len(),
+        emitted: usage.emitted.len(),
+    }
+}
+
+fn walk_dir(dir: &Path, rel: &str, out: &mut Vec<(String, String)>) -> Result<(), String> {
+    let rd = fs::read_dir(dir).map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+    let mut entries: Vec<(String, PathBuf)> = Vec::new();
+    for ent in rd {
+        let ent = ent.map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+        let name = ent.file_name().to_string_lossy().into_owned();
+        entries.push((name, ent.path()));
+    }
+    entries.sort();
+    for (name, path) in entries {
+        let child_rel = format!("{rel}/{name}");
+        if path.is_dir() {
+            // Fixture corpora are known-bad on purpose; the lint's own
+            // tests feed them through lint_sources directly.
+            if name == "lint_fixtures" {
+                continue;
+            }
+            walk_dir(&path, &child_rel, out)?;
+        } else if name.ends_with(".rs") {
+            let text =
+                fs::read_to_string(&path).map_err(|e| format!("read {}: {e}", path.display()))?;
+            out.push((child_rel, text));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src(rel: &str, text: &str) -> (String, String) {
+        (rel.to_string(), text.to_string())
+    }
+
+    #[test]
+    fn lint_sources_sorts_and_counts() {
+        let files = vec![
+            src("rust/src/b.rs", "fn f() { let t = Instant::now(); }"),
+            src(
+                "rust/src/a.rs",
+                "fn g(v: Vec<f64>) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }",
+            ),
+        ];
+        let out = lint_sources(&files, &LintOptions::default());
+        assert_eq!(out.files_scanned, 2);
+        let rules: Vec<&str> = out.findings.iter().map(|f| f.rule).collect();
+        assert_eq!(rules, vec!["D3", "D2"]);
+        assert!(out.findings[0].file < out.findings[1].file);
+    }
+
+    #[test]
+    fn rule_filter_narrows_report() {
+        let files = vec![src(
+            "rust/src/a.rs",
+            "fn f() { let t = Instant::now(); let r = thread_rng(); }",
+        )];
+        let opts = LintOptions { rule: Some("D4".to_string()), ..Default::default() };
+        let out = lint_sources(&files, &opts);
+        assert_eq!(out.findings.len(), 1);
+        assert_eq!(out.findings[0].rule, "D4");
+    }
+
+    #[test]
+    fn baseline_absorbs_known_findings() {
+        let files = vec![src("rust/src/a.rs", "fn f() { let t = Instant::now(); }")];
+        let all = lint_sources(&files, &LintOptions::default());
+        assert_eq!(all.findings.len(), 1);
+        let opts = LintOptions {
+            rule: None,
+            baseline: Baseline::from_findings(&all.findings),
+        };
+        let out = lint_sources(&files, &opts);
+        assert!(out.findings.is_empty());
+        assert_eq!(out.baselined, 1);
+    }
+}

@@ -1,0 +1,122 @@
+//! Human and JSON rendering of a lint run.
+
+use crate::util::json::{self, Json};
+
+use super::rules::{Finding, RULE_TABLE};
+use super::LintOutcome;
+
+/// clippy/rustc-style one-line-per-finding report with a summary tail.
+pub fn render_human(outcome: &LintOutcome) -> String {
+    let mut out = String::new();
+    for f in &outcome.findings {
+        out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+        if !f.excerpt.is_empty() {
+            out.push_str(&format!("    {}\n", f.excerpt));
+        }
+    }
+    if !outcome.findings.is_empty() {
+        out.push('\n');
+    }
+    let counts = rule_counts(&outcome.findings);
+    if !counts.is_empty() {
+        let parts: Vec<String> = counts.iter().map(|(r, n)| format!("{r}={n}")).collect();
+        out.push_str(&format!("by rule: {}\n", parts.join(" ")));
+    }
+    out.push_str(&format!(
+        "lint: {} finding(s) in {} file(s); {} suppressed, {} baselined\n",
+        outcome.findings.len(),
+        outcome.files_scanned,
+        outcome.suppressed,
+        outcome.baselined
+    ));
+    out.push_str(&format!(
+        "metric families: {} declared, {} emitted\n",
+        outcome.declared, outcome.emitted
+    ));
+    out
+}
+
+/// Machine-readable document for `andes lint --json`.
+pub fn render_json(outcome: &LintOutcome) -> String {
+    let findings: Vec<Json> = outcome
+        .findings
+        .iter()
+        .map(|f| {
+            Json::obj(vec![
+                ("rule", Json::from(f.rule)),
+                ("file", Json::from(f.file.as_str())),
+                ("line", Json::from(f.line)),
+                ("excerpt", Json::from(f.excerpt.as_str())),
+                ("message", Json::from(f.message.as_str())),
+            ])
+        })
+        .collect();
+    let counts: Vec<Json> = rule_counts(&outcome.findings)
+        .into_iter()
+        .map(|(r, n)| Json::obj(vec![("rule", Json::from(r)), ("count", Json::from(n))]))
+        .collect();
+    let doc = Json::obj(vec![
+        ("findings", Json::arr(findings)),
+        ("by_rule", Json::arr(counts)),
+        ("files_scanned", Json::from(outcome.files_scanned)),
+        ("suppressed", Json::from(outcome.suppressed)),
+        ("baselined", Json::from(outcome.baselined)),
+        ("declared_families", Json::from(outcome.declared)),
+        ("emitted_families", Json::from(outcome.emitted)),
+    ]);
+    let mut s = json::pretty(&doc);
+    s.push('\n');
+    s
+}
+
+/// Per-rule finding counts in [`RULE_TABLE`] order, zero rows omitted.
+fn rule_counts(findings: &[Finding]) -> Vec<(&'static str, usize)> {
+    RULE_TABLE
+        .iter()
+        .map(|&(rule, _)| (rule, findings.iter().filter(|f| f.rule == rule).count()))
+        .filter(|&(_, n)| n > 0)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome() -> LintOutcome {
+        LintOutcome {
+            findings: vec![Finding {
+                rule: "D3",
+                file: "rust/src/x.rs".to_string(),
+                line: 7,
+                excerpt: "xs.sort_by(...)".to_string(),
+                message: "use total_cmp".to_string(),
+            }],
+            files_scanned: 4,
+            suppressed: 2,
+            baselined: 1,
+            declared: 21,
+            emitted: 21,
+        }
+    }
+
+    #[test]
+    fn human_report_lists_findings_and_summary() {
+        let text = render_human(&outcome());
+        assert!(text.contains("rust/src/x.rs:7: [D3] use total_cmp"));
+        assert!(text.contains("by rule: D3=1"));
+        assert!(text.contains("1 finding(s) in 4 file(s); 2 suppressed, 1 baselined"));
+        assert!(text.contains("21 declared, 21 emitted"));
+    }
+
+    #[test]
+    fn json_report_parses_back() {
+        let text = render_json(&outcome());
+        let v = Json::parse(&text).expect("valid json");
+        let fs = v.get("findings").as_arr().expect("findings array");
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].get("rule").as_str(), Some("D3"));
+        assert_eq!(fs[0].get("line").as_u64(), Some(7));
+        assert_eq!(v.get("by_rule").as_arr().map(|a| a.len()), Some(1));
+        assert_eq!(v.get("files_scanned").as_u64(), Some(4));
+    }
+}

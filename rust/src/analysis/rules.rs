@@ -1,0 +1,593 @@
+//! The determinism rule set (D1–D6) and the metric taxonomy cross-check
+//! (X1). See DESIGN.md §13 for the rule table with rationale and fixes.
+//!
+//! Every rule matches against the *stripped* source from
+//! [`super::lexer::strip_source`], so patterns inside comments or string
+//! literals can never fire. Matching is token-ish string scanning, not a
+//! parse: the rules are tuned to the idioms rustfmt actually produces in
+//! this tree, and the fixture corpus in `rust/tests/lint_fixtures/` pins
+//! both the positive and negative space.
+
+use std::collections::BTreeMap;
+
+use super::lexer::strip_source;
+use super::suppress::{in_ranges, test_ranges, Suppressions};
+
+/// Rule ids with one-line summaries, in report order.
+pub const RULE_TABLE: &[(&str, &str)] = &[
+    ("D1", "HashMap/HashSet iteration feeding output or simulation order"),
+    ("D2", "wall-clock read outside wall-domain modules"),
+    ("D3", "partial_cmp on floats in sorts/unwraps; use total_cmp"),
+    ("D4", "unseeded randomness"),
+    ("D5", "println!/eprintln! in library code; use log::"),
+    ("D6", "unwrap()/expect() in simulation paths without lint:allow"),
+    ("X1", "metric family declared/emitted mismatch"),
+];
+
+/// Is `id` a known rule id?
+pub fn known_rule(id: &str) -> bool {
+    RULE_TABLE.iter().any(|&(r, _)| r == id)
+}
+
+/// One lint finding, pointing at a 1-based source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub excerpt: String,
+    pub message: String,
+}
+
+/// Declared vs emitted `andes_*` metric families, accumulated across
+/// files and reconciled by [`cross_check`]. Maps family name to the
+/// first site (file, 1-based line) that contributed it.
+#[derive(Debug, Default)]
+pub struct MetricUsage {
+    pub declared: BTreeMap<String, (String, usize)>,
+    pub emitted: BTreeMap<String, (String, usize)>,
+}
+
+/// Result of scanning one file.
+#[derive(Debug, Default)]
+pub struct ScanResult {
+    pub findings: Vec<Finding>,
+    /// Findings waived by inline `lint:allow` directives.
+    pub suppressed: usize,
+}
+
+/// Module prefixes that legitimately read the wall clock (D2). These are
+/// the wall-domain side of the clock split in DESIGN.md §12; everything
+/// else must go through the engine `Clock`.
+const WALL_ALLOW: &[&str] = &[
+    "rust/src/server/",
+    "rust/src/telemetry/",
+    "rust/src/util/bench.rs",
+];
+
+/// Files allowed to print directly to stdout/stderr (D5).
+const PRINT_ALLOW: &[&str] = &["rust/src/main.rs", "rust/src/telemetry/logging.rs"];
+
+/// Library paths on the seeded simulation side where a panic corrupts an
+/// experiment cell (D6). CLI/server/bench plumbing is out of scope.
+const D6_SCOPE: &[&str] = &[
+    "rust/src/coordinator/",
+    "rust/src/cluster/",
+    "rust/src/gateway/",
+    "rust/src/delivery/",
+    "rust/src/qoe/",
+    "rust/src/workload/",
+    "rust/src/model/",
+    "rust/src/backend/sim.rs",
+    "rust/src/util/stats.rs",
+    "rust/src/util/rng.rs",
+];
+
+/// Hash-collection methods whose call sites mean "iterate" (D1).
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "values",
+    "values_mut",
+    "keys",
+    "drain",
+    "into_iter",
+    "retain",
+];
+
+/// Call tokens that emit a metric sample; a nearby `andes_*` string
+/// literal names the family being emitted (X1).
+const EMIT_TOKENS: &[&str] = &[
+    ".inc(",
+    ".set(",
+    ".set_gauge(",
+    ".observe(",
+    ".observe_latency(",
+    ".observe_tpot(",
+    ".observe_unit(",
+    "declare_counter(",
+    "declare_gauge(",
+    "declare_histogram(",
+];
+
+const D4_TOKENS: &[&str] = &["thread_rng", "from_entropy", "rand::random", "getrandom"];
+const D5_TOKENS: &[&str] = &["println!", "eprintln!", "print!", "eprint!", "dbg!"];
+const SORT_TOKENS: &[&str] = &[
+    "sort_by(",
+    "sort_unstable_by(",
+    "sort_by_key(",
+    "min_by(",
+    "max_by(",
+];
+
+/// Scan one file. `rel` is the repo-relative path with `/` separators
+/// (it selects per-path rule scopes); X1 family sightings are added to
+/// `usage` for the cross-file reconciliation pass.
+pub fn scan_source(rel: &str, text: &str, usage: &mut MetricUsage) -> ScanResult {
+    let stripped = strip_source(text);
+    let code = &stripped.code;
+    let tranges = test_ranges(code);
+    let mut sup = Suppressions::parse(&stripped);
+    let raw_lines: Vec<&str> = text.split('\n').collect();
+    let is_src = rel.starts_with("rust/src/");
+    let mut findings = Vec::new();
+
+    let mut emit = |rule: &'static str, li: usize, message: String, sup: &mut Suppressions| {
+        if sup.allows(li, rule) {
+            return;
+        }
+        let excerpt: String = raw_lines
+            .get(li)
+            .map(|l| l.trim().chars().take(120).collect())
+            .unwrap_or_default();
+        findings.push(Finding {
+            rule,
+            file: rel.to_string(),
+            line: li + 1,
+            excerpt,
+            message,
+        });
+    };
+
+    // D1: collect declared hash-collection names, then flag iteration.
+    let mut hash_names: Vec<String> = Vec::new();
+    for (li, line) in code.iter().enumerate() {
+        if in_ranges(&tranges, li) {
+            continue;
+        }
+        for name in hash_decl_names(line) {
+            if !hash_names.contains(&name) {
+                hash_names.push(name);
+            }
+        }
+    }
+    for (li, line) in code.iter().enumerate() {
+        if in_ranges(&tranges, li) {
+            continue;
+        }
+        for name in &hash_names {
+            if iterates_hash(line, name) {
+                let msg =
+                    format!("hash iteration over `{name}`; use BTreeMap or sort at the emit site");
+                emit("D1", li, msg, &mut sup);
+                break;
+            }
+        }
+    }
+
+    // D2: wall-clock reads outside the wall domain.
+    if !WALL_ALLOW.iter().any(|p| rel.starts_with(p)) {
+        for (li, line) in code.iter().enumerate() {
+            if line.contains("Instant::now") || line.contains("SystemTime") {
+                let msg = "wall-clock read outside the wall domain; use the sim Clock";
+                emit("D2", li, msg.to_string(), &mut sup);
+            }
+        }
+    }
+
+    // D3: partial_cmp feeding a sort or an unwrap. The unwrap may sit on
+    // the next line after rustfmt wraps a long comparator, so look ahead
+    // three lines; the sort adapter may sit up to two lines back.
+    for (li, line) in code.iter().enumerate() {
+        if !line.contains("partial_cmp") {
+            continue;
+        }
+        let fwd = code[li..code.len().min(li + 3)].join("\n");
+        let back = code[li.saturating_sub(2)..=li].join("\n");
+        if fwd.contains(".unwrap()") || SORT_TOKENS.iter().any(|t| back.contains(t)) {
+            let msg = "partial_cmp on floats panics or reorders on NaN; use f64::total_cmp";
+            emit("D3", li, msg.to_string(), &mut sup);
+        }
+    }
+
+    // D4: unseeded randomness, anywhere (tests included — a test seeded
+    // from entropy cannot be rerun).
+    for (li, line) in code.iter().enumerate() {
+        if D4_TOKENS.iter().any(|t| line.contains(t)) {
+            let msg = "unseeded randomness; use util::rng::Rng with an explicit seed";
+            emit("D4", li, msg.to_string(), &mut sup);
+        }
+    }
+
+    // D5: direct prints in library code.
+    if is_src && !PRINT_ALLOW.contains(&rel) {
+        for (li, line) in code.iter().enumerate() {
+            if in_ranges(&tranges, li) {
+                continue;
+            }
+            if D5_TOKENS.iter().any(|t| line.contains(t)) {
+                let msg = "direct stdout/stderr print in library code; use log::";
+                emit("D5", li, msg.to_string(), &mut sup);
+            }
+        }
+    }
+
+    // D6: unwrap/expect in seeded simulation paths.
+    if D6_SCOPE.iter().any(|p| rel.starts_with(p)) {
+        for (li, line) in code.iter().enumerate() {
+            if in_ranges(&tranges, li) {
+                continue;
+            }
+            let count = line.matches(".unwrap()").count() + line.matches(".expect(").count();
+            for _ in 0..count {
+                let msg = "unwrap/expect in a sim path; handle it or lint:allow(D6, reason)";
+                emit("D6", li, msg.to_string(), &mut sup);
+            }
+        }
+    }
+
+    // X1 collection: record every `andes_*` family string next to an
+    // emit token, split into declared (inside declare_base_families) vs
+    // emitted (everywhere else in library code).
+    if is_src {
+        let decl_range = declare_fn_range(code);
+        for lit in &stripped.strings {
+            if !lit.content.starts_with("andes_") || in_ranges(&tranges, lit.line) {
+                continue;
+            }
+            if !emit_token_nearby(code, lit.line, lit.col) {
+                continue;
+            }
+            let in_decl = decl_range
+                .map(|(a, b)| a <= lit.line && lit.line <= b)
+                .unwrap_or(false);
+            let target = if in_decl {
+                &mut usage.declared
+            } else {
+                &mut usage.emitted
+            };
+            target
+                .entry(lit.content.clone())
+                .or_insert_with(|| (rel.to_string(), lit.line + 1));
+        }
+    }
+
+    ScanResult {
+        findings,
+        suppressed: sup.hits(),
+    }
+}
+
+/// Reconcile declared vs emitted metric families into X1 findings.
+pub fn cross_check(usage: &MetricUsage) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for (fam, (file, line)) in &usage.emitted {
+        if !usage.declared.contains_key(fam) {
+            findings.push(Finding {
+                rule: "X1",
+                file: file.clone(),
+                line: *line,
+                excerpt: fam.clone(),
+                message: format!("family `{fam}` is emitted but not declared"),
+            });
+        }
+    }
+    for (fam, (file, line)) in &usage.declared {
+        if !usage.emitted.contains_key(fam) {
+            findings.push(Finding {
+                rule: "X1",
+                file: file.clone(),
+                line: *line,
+                excerpt: fam.clone(),
+                message: format!("family `{fam}` is declared but never emitted"),
+            });
+        }
+    }
+    findings
+}
+
+// --------------------------------------------------------------- D1 helpers
+
+/// Names bound to `HashMap`/`HashSet` on this (stripped) line, via either
+/// a struct-field/param type (`name: HashMap<...>`) or a constructor
+/// binding (`name = HashMap::new()`).
+fn hash_decl_names(line: &str) -> Vec<String> {
+    let mut names = Vec::new();
+    for key in ["HashMap<", "HashSet<", "HashMap::", "HashSet::"] {
+        let mut from = 0;
+        while let Some(rel_pos) = line[from..].find(key) {
+            let pos = from + rel_pos;
+            from = pos + key.len();
+            let before = strip_suffix_path(&line[..pos]);
+            let name = if key.ends_with('<') {
+                // `name: HashMap<` (field or typed local).
+                ident_before_char(before, ':')
+            } else {
+                // `name = HashMap::new()` — reject `==`, `<=`, etc.
+                ident_before_char(before, '=').filter(|_| {
+                    let t = before.trim_end();
+                    !t.ends_with("==") && !t.ends_with("<=") && !t.ends_with(">=")
+                })
+            };
+            if let Some(name) = name {
+                if !names.contains(&name) {
+                    names.push(name);
+                }
+            }
+        }
+    }
+    names
+}
+
+/// Drop a trailing `std::collections::`-style path prefix so the
+/// character before the type name can be inspected.
+fn strip_suffix_path(s: &str) -> &str {
+    let mut out = s;
+    for p in ["std::collections::", "collections::", "std::"] {
+        if let Some(t) = out.strip_suffix(p) {
+            out = t;
+        }
+    }
+    out
+}
+
+/// If `s` ends (modulo spaces) with `<sep>` preceded by an identifier,
+/// return that identifier. `name: ` → Some("name") for sep ':'. Rejects
+/// the path separator `::` when sep is ':'.
+fn ident_before_char(s: &str, sep: char) -> Option<String> {
+    let t = s.trim_end();
+    let t = t.strip_suffix(sep)?;
+    if sep == ':' && t.ends_with(':') {
+        return None;
+    }
+    let t = t.trim_end();
+    let ident: String = t
+        .chars()
+        .rev()
+        .take_while(|c| c.is_alphanumeric() || *c == '_')
+        .collect::<Vec<_>>()
+        .into_iter()
+        .rev()
+        .collect();
+    if ident.is_empty() || ident.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        None
+    } else {
+        Some(ident)
+    }
+}
+
+/// Does this line iterate the hash collection `name`? Matches
+/// `name.iter()`-style calls (only bare `name` or `self.name` — a
+/// `view.name` refers to some other binding) and `for … in …name` loops.
+fn iterates_hash(line: &str, name: &str) -> bool {
+    // Method form: name.<iter-method>(
+    let mut from = 0;
+    while let Some(rel_pos) = line[from..].find(name) {
+        let pos = from + rel_pos;
+        from = pos + name.len();
+        if !receiver_boundary_ok(line, pos) {
+            continue;
+        }
+        let after = &line[pos + name.len()..];
+        let Some(rest) = after.strip_prefix('.') else {
+            continue;
+        };
+        let method: String = rest
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || *c == '_')
+            .collect();
+        if ITER_METHODS.contains(&method.as_str())
+            && rest[method.len()..].trim_start().starts_with('(')
+        {
+            return true;
+        }
+    }
+    // Loop form: for … in [&][mut ][self.]name<non-ident>
+    if let Some(for_pos) = find_token(line, "for ") {
+        if let Some(in_rel) = line[for_pos..].find(" in ") {
+            let mut rhs = line[for_pos + in_rel + 4..].trim_start();
+            rhs = rhs.strip_prefix('&').unwrap_or(rhs);
+            rhs = rhs.strip_prefix("mut ").unwrap_or(rhs).trim_start();
+            rhs = rhs.strip_prefix("self.").unwrap_or(rhs);
+            if let Some(after) = rhs.strip_prefix(name) {
+                let next = after.chars().next();
+                if !matches!(next, Some(c) if c.is_alphanumeric() || c == '_' || c == '.') {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+/// The characters before a receiver occurrence must be either nothing,
+/// a non-identifier character, or exactly `self.` — so `other.name.iter()`
+/// never matches a field named `name`.
+fn receiver_boundary_ok(line: &str, pos: usize) -> bool {
+    let before = &line[..pos];
+    match before.chars().next_back() {
+        None => true,
+        Some('.') => {
+            let t = &before[..before.len() - 1];
+            t.ends_with("self")
+                && !t[..t.len() - 4]
+                    .chars()
+                    .next_back()
+                    .is_some_and(|c| c.is_alphanumeric() || c == '_' || c == '.')
+        }
+        Some(c) => !(c.is_alphanumeric() || c == '_'),
+    }
+}
+
+/// Find `token` at an identifier boundary (the char before must not be
+/// part of an identifier).
+fn find_token(line: &str, token: &str) -> Option<usize> {
+    let mut from = 0;
+    while let Some(rel_pos) = line[from..].find(token) {
+        let pos = from + rel_pos;
+        let ok = line[..pos]
+            .chars()
+            .next_back()
+            .map(|c| !(c.is_alphanumeric() || c == '_'))
+            .unwrap_or(true);
+        if ok {
+            return Some(pos);
+        }
+        from = pos + token.len();
+    }
+    None
+}
+
+// --------------------------------------------------------------- X1 helpers
+
+/// The (inclusive, 0-based) line range of `fn declare_base_families`, if
+/// this file defines it, via brace-depth tracking.
+fn declare_fn_range(code: &[String]) -> Option<(usize, usize)> {
+    let start = code
+        .iter()
+        .position(|l| l.contains("fn declare_base_families"))?;
+    let mut depth: i64 = 0;
+    let mut opened = false;
+    for (li, line) in code.iter().enumerate().skip(start) {
+        for c in line.chars() {
+            if c == '{' {
+                depth += 1;
+                opened = true;
+            } else if c == '}' {
+                depth -= 1;
+            }
+        }
+        if opened && depth == 0 {
+            return Some((start, li));
+        }
+    }
+    Some((start, code.len().saturating_sub(1)))
+}
+
+/// Is there an emit-call token on the literal's line before its column,
+/// or on one of up to two continuation lines above it (rustfmt wraps
+/// `registry.observe(` and the family name onto separate lines)?
+fn emit_token_nearby(code: &[String], line: usize, col: usize) -> bool {
+    for back in 0..3usize {
+        let Some(li) = line.checked_sub(back) else {
+            break;
+        };
+        let Some(lcode) = code.get(li) else {
+            continue;
+        };
+        let limit = if back == 0 { col } else { lcode.len() };
+        if EMIT_TOKENS
+            .iter()
+            .any(|t| lcode.find(t).is_some_and(|p| p <= limit))
+        {
+            return true;
+        }
+        // A non-continuation line above ends the lookback: the literal
+        // belongs to whatever expression starts there.
+        if back > 0 {
+            let trimmed = lcode.trim_end();
+            if !trimmed.is_empty() && !trimmed.ends_with('(') && !trimmed.ends_with(',') {
+                break;
+            }
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(rel: &str, text: &str) -> Vec<Finding> {
+        let mut usage = MetricUsage::default();
+        scan_source(rel, text, &mut usage).findings
+    }
+
+    #[test]
+    fn d1_flags_iteration_not_lookup() {
+        let src = "struct S { m: HashMap<u64, u32> }\nimpl S {\n fn f(&self) {\n  \
+                   for (k, v) in &self.m {}\n  let _ = self.m.get(&1);\n } }";
+        let f = scan("rust/src/x.rs", src);
+        assert_eq!(f.iter().filter(|f| f.rule == "D1").count(), 1);
+        assert_eq!(f[0].line, 4);
+    }
+
+    #[test]
+    fn d1_respects_receiver_boundaries() {
+        // `view.active` is not the declared `active` — no finding.
+        let src = "struct S { active: HashSet<u64> }\nfn f(view: &View) { \
+                   for id in view.active.iter() {} }";
+        assert!(scan("rust/src/x.rs", src).is_empty());
+        // But `self.active.iter()` and bare `active.iter()` are.
+        let src2 = "struct S { active: HashSet<u64> }\nfn g(s: &S) { s.x(); }\n\
+                    impl S { fn h(&self) { self.active.iter().count(); } }";
+        assert_eq!(scan("rust/src/x.rs", src2).len(), 1);
+    }
+
+    #[test]
+    fn d2_scoped_to_wall_domain() {
+        let src = "fn f() { let t = Instant::now(); }";
+        assert_eq!(scan("rust/src/coordinator/engine.rs", src).len(), 1);
+        assert!(scan("rust/src/server/mod.rs", src).is_empty());
+        assert!(scan("rust/src/util/bench.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d3_catches_wrapped_unwrap() {
+        let src = "xs.sort_by(|a, b| {\n a.partial_cmp(b)\n  .unwrap()\n});";
+        let f = scan("rust/src/x.rs", src);
+        assert_eq!(f.iter().filter(|f| f.rule == "D3").count(), 1);
+        // total_cmp is the fix and must not fire.
+        assert!(scan("rust/src/x.rs", "xs.sort_by(|a, b| a.total_cmp(b));").is_empty());
+    }
+
+    #[test]
+    fn d5_and_d6_skip_cfg_test_blocks() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n fn t() { println!(\"x\"); \
+                   None::<u8>.unwrap(); }\n}";
+        assert!(scan("rust/src/coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d6_suppression_with_reason() {
+        let src = "fn f(v: &[u8]) {\n // lint:allow(D6, slice checked non-empty above)\n \
+                   v.first().unwrap();\n}";
+        let mut usage = MetricUsage::default();
+        let r = scan_source("rust/src/coordinator/x.rs", src, &mut usage);
+        assert!(r.findings.is_empty());
+        assert_eq!(r.suppressed, 1);
+    }
+
+    #[test]
+    fn x1_reconciles_declared_and_emitted() {
+        let mut usage = MetricUsage::default();
+        let decl = "fn declare_base_families(r: &mut Registry) {\n \
+                    r.declare_counter(\"andes_a_total\");\n \
+                    r.declare_gauge(\"andes_ghost\");\n}";
+        scan_source("rust/src/telemetry/mod.rs", decl, &mut usage);
+        let emit = "fn f(m: &Metrics) {\n m.inc(\"andes_a_total\", 1);\n \
+                    m.inc(\"andes_rogue_total\", 1);\n}";
+        scan_source("rust/src/gateway/mod.rs", emit, &mut usage);
+        let x = cross_check(&usage);
+        let msgs: Vec<&str> = x.iter().map(|f| f.excerpt.as_str()).collect();
+        assert_eq!(msgs, vec!["andes_rogue_total", "andes_ghost"]);
+    }
+
+    #[test]
+    fn strings_and_comments_never_fire() {
+        let src = "// partial_cmp(a).unwrap() in a comment\n\
+                   let s = \"Instant::now() thread_rng println!\";\n\
+                   /* SystemTime */ fn f() {}";
+        assert!(scan("rust/src/coordinator/x.rs", src).is_empty());
+    }
+}

@@ -1,0 +1,169 @@
+//! Inline suppression directives and `#[cfg(test)]` range detection.
+//!
+//! A finding can be waived at the site with a comment directive:
+//!
+//! ```text
+//! // lint:allow(D6, pop() follows a non-empty check on the same branch)
+//! ```
+//!
+//! The rule id is required; the reason is free text and strongly
+//! encouraged (DESIGN.md §13 treats a missing reason as a review smell,
+//! though the scanner accepts it). A directive suppresses matching
+//! findings on its own line; when the directive sits on a comment-only
+//! line it also covers the line immediately below, so it can be placed
+//! above the offending statement without fighting rustfmt's line width.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::Stripped;
+
+/// Parsed `lint:allow` directives for one file, keyed by 0-based line.
+#[derive(Debug, Default)]
+pub struct Suppressions {
+    by_line: BTreeMap<usize, BTreeSet<String>>,
+    /// Lines whose directive was consulted at least once (for
+    /// unused-suppression accounting in the report).
+    used: usize,
+}
+
+impl Suppressions {
+    /// Extract directives from the comment text of a stripped file.
+    pub fn parse(stripped: &Stripped) -> Self {
+        let mut by_line: BTreeMap<usize, BTreeSet<String>> = BTreeMap::new();
+        for (li, com) in stripped.comments.iter().enumerate() {
+            for rule in directives(com) {
+                by_line.entry(li).or_default().insert(rule.clone());
+                // Comment-only line: the directive covers the next line.
+                let code_only_ws = stripped
+                    .code
+                    .get(li)
+                    .map(|c| c.trim().is_empty())
+                    .unwrap_or(true);
+                if code_only_ws {
+                    by_line.entry(li + 1).or_default().insert(rule);
+                }
+            }
+        }
+        Suppressions { by_line, used: 0 }
+    }
+
+    /// Does a directive on `line` (0-based) waive `rule`? Counts a hit.
+    pub fn allows(&mut self, line: usize, rule: &str) -> bool {
+        let hit = self
+            .by_line
+            .get(&line)
+            .map(|set| set.contains(rule))
+            .unwrap_or(false);
+        if hit {
+            self.used += 1;
+        }
+        hit
+    }
+
+    /// Number of findings waived through this file's directives.
+    pub fn hits(&self) -> usize {
+        self.used
+    }
+}
+
+/// Pull every `lint:allow(<rule>[, reason])` rule id out of a comment.
+fn directives(comment: &str) -> Vec<String> {
+    const NEEDLE: &str = "lint:allow(";
+    let mut out = Vec::new();
+    let mut rest = comment;
+    while let Some(pos) = rest.find(NEEDLE) {
+        let after = &rest[pos + NEEDLE.len()..];
+        let body: String = after.chars().take_while(|&c| c != ')').collect();
+        let rule = body.split(',').next().unwrap_or("").trim();
+        if is_rule_id(rule) {
+            out.push(rule.to_string());
+        }
+        rest = &rest[pos + NEEDLE.len()..];
+    }
+    out
+}
+
+/// Rule ids look like `D1`..`D9` or `X1`..`X9`.
+fn is_rule_id(s: &str) -> bool {
+    let b = s.as_bytes();
+    b.len() == 2 && (b[0] == b'D' || b[0] == b'X') && b[1].is_ascii_digit()
+}
+
+/// Inclusive 0-based line ranges covered by `#[cfg(test)]` blocks, found
+/// by brace-depth tracking from each attribute to its matching close.
+/// Rules that only govern shipping code (D1, D5, D6, X1) skip these
+/// ranges; tests are free to iterate hash maps or unwrap.
+pub fn test_ranges(code: &[String]) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    let mut pending = false;
+    let mut depth: i64 = 0;
+    let mut start = 0usize;
+    for (li, line) in code.iter().enumerate() {
+        if line.contains("#[cfg(test)]") {
+            pending = true;
+        }
+        if pending {
+            for c in line.chars() {
+                if c == '{' {
+                    if depth == 0 {
+                        start = li;
+                    }
+                    depth += 1;
+                } else if c == '}' && depth > 0 {
+                    depth -= 1;
+                    if depth == 0 {
+                        ranges.push((start, li));
+                        pending = false;
+                    }
+                }
+            }
+        }
+    }
+    if pending && depth > 0 {
+        ranges.push((start, code.len().saturating_sub(1)));
+    }
+    ranges
+}
+
+/// Is 0-based line `li` inside any of `ranges`?
+pub fn in_ranges(ranges: &[(usize, usize)], li: usize) -> bool {
+    ranges.iter().any(|&(a, b)| a <= li && li <= b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::strip_source;
+
+    #[test]
+    fn directive_on_own_line_covers_next_line() {
+        let s = strip_source(
+            "// lint:allow(D6, checked above)\nx.unwrap();\ny.unwrap(); // lint:allow(D6)\nz();",
+        );
+        let mut sup = Suppressions::parse(&s);
+        assert!(sup.allows(0, "D6"));
+        assert!(sup.allows(1, "D6"));
+        assert!(sup.allows(2, "D6"));
+        assert!(!sup.allows(3, "D6"));
+        assert!(!sup.allows(1, "D2"));
+        assert_eq!(sup.hits(), 3);
+    }
+
+    #[test]
+    fn malformed_directives_are_ignored() {
+        let s = strip_source("// lint:allow(banana)\n// lint:allow(D66)\nx.unwrap();");
+        let mut sup = Suppressions::parse(&s);
+        assert!(!sup.allows(2, "D6"));
+    }
+
+    #[test]
+    fn cfg_test_ranges_track_braces() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n  fn t() {\n  }\n}\nfn b() {}";
+        let s = strip_source(src);
+        let ranges = test_ranges(&s.code);
+        assert_eq!(ranges, vec![(2, 5)]);
+        assert!(!in_ranges(&ranges, 0));
+        assert!(in_ranges(&ranges, 4));
+        assert!(!in_ranges(&ranges, 6));
+    }
+}

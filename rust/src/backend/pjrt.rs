@@ -90,6 +90,7 @@ impl PjrtBackend {
 
     /// Fast-path decode against the cached batch literals.
     fn decode_cached(&mut self, batch: &[RequestId]) -> Result<StepOutcome> {
+        // lint:allow(D2, real-hardware step timing is the measurement itself)
         let t0 = Instant::now();
         let cache = self.cache.take().expect("decode_cached without cache");
         let b = cache.exec_b;
@@ -154,6 +155,7 @@ impl PjrtBackend {
     /// literals from per-request KV, execute, keep the outputs as the
     /// new cache.
     fn decode_assemble_and_cache(&mut self, batch: &[RequestId]) -> Result<StepOutcome> {
+        // lint:allow(D2, real-hardware step timing is the measurement itself)
         let t0 = Instant::now();
         let m = self.runtime.meta.clone();
         let b = self.runtime.decode_exec_batch(batch.len());
@@ -237,6 +239,7 @@ impl ExecutionBackend for PjrtBackend {
 
     fn prefill(&mut self, jobs: &[PrefillJob]) -> Result<StepOutcome> {
         self.flush_cache()?;
+        // lint:allow(D2, real-hardware step timing is the measurement itself)
         let t0 = Instant::now();
         // Replay context = prompt + already-generated (recompute case).
         let prompts: Vec<Vec<u32>> = jobs
@@ -280,6 +283,7 @@ impl ExecutionBackend for PjrtBackend {
             return self.decode_assemble_and_cache(batch);
         }
         // Oversized batch: chunked slow path (no caching).
+        // lint:allow(D2, real-hardware step timing is the measurement itself)
         let t0 = Instant::now();
         // Assemble (last_token, position, kv) per sequence. The KV flats
         // are moved out to satisfy the borrow checker, then moved back.

@@ -35,6 +35,7 @@ impl SimBackend {
     }
 
     fn gen_token(&mut self, id: RequestId) -> TokenEvent {
+        // lint:allow(D6, decode of an unregistered request is a caller contract bug)
         let r = self.requests.get_mut(&id).expect("decode of unregistered request");
         r.generated += 1;
         TokenEvent { id, token: r.generated as u32, finished: r.generated >= r.output_tokens }

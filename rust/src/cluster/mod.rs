@@ -213,6 +213,7 @@ impl Cluster {
         e.set_telemetry(self.telemetry.clone(), slot);
         self.telemetry.inc("andes_replica_events_total", &[("action", "add")], 1.0);
         if let Some(i) = reusable {
+            // lint:allow(D6, reusable slots are filtered on decommissioned_at.is_some())
             let retired = self.decommissioned_at[i].unwrap() - self.commissioned_at[i];
             self.retired_seconds += retired.max(0.0);
             self.retired_metrics.push(std::mem::take(self.replicas[i].metrics_mut()));
@@ -301,6 +302,7 @@ impl Cluster {
             // and clear its decommission mark so the service it renders
             // from here on is charged to replica-seconds again (the
             // idle gap stays charged too; honest and conservative).
+            // lint:allow(D6, a cluster always owns at least one replica)
             let idx = (0..self.replicas.len()).min_by_key(|&i| self.active[i]).unwrap();
             self.draining[idx] = false;
             self.decommissioned_at[idx] = None;
@@ -313,6 +315,7 @@ impl Cluster {
                 idx
             }
             RoutingPolicy::LeastLoaded => {
+                // lint:allow(D6, candidates was made non-empty above)
                 candidates.into_iter().min_by_key(|&i| self.active[i]).unwrap()
             }
             RoutingPolicy::QoeAware => {
@@ -328,6 +331,7 @@ impl Cluster {
                         };
                         score(a).total_cmp(&score(b))
                     })
+                    // lint:allow(D6, candidates was made non-empty above)
                     .unwrap()
             }
         }
@@ -538,7 +542,7 @@ mod tests {
         // arrival instant.
         let mut c = small_cluster(RoutingPolicy::LeastLoaded, 3);
         let mut reqs = trace(50, 5.0, 9);
-        reqs.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        reqs.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         for spec in reqs {
             c.advance_all_to(spec.arrival).unwrap();
             c.submit(spec).unwrap();

@@ -237,6 +237,7 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
     fn ingest_arrivals(&mut self) -> anyhow::Result<()> {
         let now = self.clock.now();
         while self.pending.last().is_some_and(|s| s.arrival <= now) {
+            // lint:allow(D6, last() just returned Some in the loop condition)
             let spec = self.pending.pop().unwrap();
             self.submit(spec)?;
         }
@@ -304,6 +305,7 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
         // The entry belongs to this session's previous turn; claim it
         // whether or not it is usable — the turn now being served
         // supersedes it either way.
+        // lint:allow(D6, parked_tokens() returned Some for this session just above)
         let parked = self.kv.claim_parked(s.session_id).expect("checked above");
         // The hit covers at most the declared shared prefix, and leaves
         // at least one fresh token to prefill (producing the next
@@ -399,6 +401,7 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
 
         // ② Scheduling decision. (Split borrows: the scheduler is &mut
         // while the view borrows the rest of the engine immutably.)
+        // lint:allow(D2, wall-clock profiling of scheduler overhead, reported outside sim results)
         let sched_t0 = std::time::Instant::now();
         let view = SchedView {
             now: self.clock.now(),

@@ -22,7 +22,7 @@
 //! invariant 3 extends to them (freeing every allocation and dropping
 //! every parked prefix returns both pools to zero).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::request::RequestId;
 
@@ -73,9 +73,11 @@ pub struct KvCacheManager {
     device_blocks_used: usize,
     /// Host blocks in use by swapped requests *and* parked prefixes.
     host_blocks_used: usize,
-    allocs: HashMap<RequestId, Allocation>,
+    // BTreeMap: both maps are iterated (usage sums, LRU scan) and the
+    // LRU scan breaks stamp ties by iteration order — keep it keyed.
+    allocs: BTreeMap<RequestId, Allocation>,
     /// Parked session prefixes, keyed by session id.
-    parked: HashMap<u64, ParkedPrefix>,
+    parked: BTreeMap<u64, ParkedPrefix>,
     /// Monotone stamp source for parked-prefix LRU order.
     park_stamp: u64,
     /// Parked prefixes dropped to relieve host pressure (lifetime).
@@ -93,8 +95,8 @@ impl KvCacheManager {
             host_blocks_total: host_capacity_tokens / block_size,
             device_blocks_used: 0,
             host_blocks_used: 0,
-            allocs: HashMap::new(),
-            parked: HashMap::new(),
+            allocs: BTreeMap::new(),
+            parked: BTreeMap::new(),
             park_stamp: 0,
             park_evictions: 0,
         }
@@ -208,6 +210,7 @@ impl KvCacheManager {
         }
         let fits = self.make_host_room(need);
         debug_assert!(fits, "feasibility was checked above");
+        // lint:allow(D6, entry existence was verified at the top of this fn)
         let a = self.allocs.get_mut(&id).expect("checked above");
         a.residence = KvResidence::Host;
         self.device_blocks_used -= need;
@@ -252,6 +255,7 @@ impl KvCacheManager {
             let lru = self.parked.iter().min_by_key(|(_, p)| p.stamp).map(|(&k, _)| k);
             match lru {
                 Some(k) => {
+                    // lint:allow(D6, the key came out of the same map one line up)
                     let p = self.parked.remove(&k).expect("lru key present");
                     self.host_blocks_used -= p.blocks;
                     self.park_evictions += 1;

@@ -120,6 +120,7 @@ impl Request {
         if self.token_times.len() < 2 {
             return None;
         }
+        // lint:allow(D6, len >= 2 was checked above)
         let span = self.token_times.last().unwrap() - self.token_times[0];
         if span <= 0.0 {
             return None;

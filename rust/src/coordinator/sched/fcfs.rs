@@ -40,7 +40,7 @@ impl Scheduler for FcfsScheduler {
         // Running requests stay, in arrival order.
         let mut desired = view.running();
         desired.sort_by(|&a, &b| {
-            view.req(a).arrival.partial_cmp(&view.req(b).arrival).unwrap().then(a.cmp(&b))
+            view.req(a).arrival.total_cmp(&view.req(b).arrival).then(a.cmp(&b))
         });
         let mut used_blocks: usize = desired.iter().map(|&id| view.block_cost(id)).sum();
 
@@ -51,7 +51,7 @@ impl Scheduler for FcfsScheduler {
             let pa = view.req(a).phase == Phase::SwappedOut;
             let pb = view.req(b).phase == Phase::SwappedOut;
             pb.cmp(&pa)
-                .then(view.req(a).arrival.partial_cmp(&view.req(b).arrival).unwrap())
+                .then(view.req(a).arrival.total_cmp(&view.req(b).arrival))
                 .then(a.cmp(&b))
         });
         for id in candidates {

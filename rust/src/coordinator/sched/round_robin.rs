@@ -35,7 +35,7 @@ impl RoundRobinScheduler {
         let mut newcomers: Vec<RequestId> =
             view.active.iter().copied().filter(|id| !known.contains(id)).collect();
         newcomers.sort_by(|&a, &b| {
-            view.req(a).arrival.partial_cmp(&view.req(b).arrival).unwrap().then(a.cmp(&b))
+            view.req(a).arrival.total_cmp(&view.req(b).arrival).then(a.cmp(&b))
         });
         self.ring.extend(newcomers);
     }
@@ -67,6 +67,7 @@ impl Scheduler for RoundRobinScheduler {
             let mut yielded = Vec::new();
             while let Some(&front) = self.ring.front() {
                 if running.contains(&front) {
+                    // lint:allow(D6, front() just returned Some for this element)
                     yielded.push(self.ring.pop_front().unwrap());
                 } else {
                     break;

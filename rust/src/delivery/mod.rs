@@ -220,6 +220,7 @@ pub fn deliver_request(
             pacer.set_lead(ctl.lead());
         }
         pacer.push(g);
+        // lint:allow(D6, push() one line up makes the pacer non-empty)
         let due = pacer.next_due().expect("token just pushed");
         let released = pacer.release_due(due);
         debug_assert_eq!(released, 1, "exactly the pushed token releases at its due time");

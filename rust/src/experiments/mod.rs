@@ -237,6 +237,7 @@ pub fn run(id: &str, ctx: &ExpCtx) -> Result<String> {
     for exp in &registry {
         if id == "all" || id == exp.id {
             matched = true;
+            // lint:allow(D2, operator-facing wall-time per experiment, not a sim input)
             let t0 = std::time::Instant::now();
             report.push_str(&format!(
                 "\n================ {} [{}] {} ================\n",

@@ -431,6 +431,7 @@ impl<T: GatewayTarget> FederatedGateway<T> {
                 node.admission.decide(prompt, &qoe, &view, mode, depth)
             };
             if decision == AdmissionDecision::Admit {
+                // lint:allow(D6, front() returned Some when forming the decision)
                 let d = self.nodes[i].queue.pop_front().unwrap();
                 self.admit_to_target(i, d.spec)?;
                 continue;
@@ -445,6 +446,7 @@ impl<T: GatewayTarget> FederatedGateway<T> {
             match due_idx {
                 Some(0) => {
                     // The decide above was the front's final chance.
+                    // lint:allow(D6, due_idx == Some(0) proves the queue is non-empty)
                     let d = self.nodes[i].queue.pop_front().unwrap();
                     let waited = t - d.enqueued_at;
                     self.reject(d.spec, t, RejectReason::DeferTimeout { waited });
@@ -459,6 +461,7 @@ impl<T: GatewayTarget> FederatedGateway<T> {
                         let depth = node.queue.len().saturating_sub(1);
                         node.admission.decide(p2, &q2, &view, mode, depth)
                     };
+                    // lint:allow(D6, k indexes into the queue per the find() above)
                     let d = self.nodes[i].queue.remove(k).unwrap();
                     if d2 == AdmissionDecision::Admit {
                         self.admit_to_target(i, d.spec)?;
@@ -563,6 +566,7 @@ impl<T: GatewayTarget> FederatedGateway<T> {
     /// its own deadlines, then post-process delivery.
     pub fn finish(&mut self) -> Result<FederationRunResult> {
         while self.nodes.iter().any(|n| !n.queue.is_empty()) {
+            // lint:allow(D6, the while condition guarantees a non-empty queue)
             let deadline = self.next_defer_deadline().expect("non-empty queue");
             if self.target.now() + 1e-9 >= deadline {
                 // Due now (the clock may have overshot by at most one

@@ -1123,6 +1123,7 @@ impl<T: GatewayTarget> Gateway<T> {
                 .admission
                 .decide_with_prefix(prompt, prefix, &qoe, &states, self.surge.mode(), depth);
             if decision == AdmissionDecision::Admit {
+                // lint:allow(D6, front() returned Some at the top of the loop)
                 let d = self.queue.pop_front().unwrap();
                 let (id, tier, waited) =
                     (d.spec.id as u64, QoeTrace::tier_of(&d.spec.qoe), t - d.enqueued_at);
@@ -1148,6 +1149,7 @@ impl<T: GatewayTarget> Gateway<T> {
                     // chance (a request that fits *right now* is
                     // admitted rather than rejected on a technicality);
                     // it failed, so the deadline stands.
+                    // lint:allow(D6, due_idx == Some(0) proves the queue is non-empty)
                     let d = self.queue.pop_front().unwrap();
                     let waited = t - d.enqueued_at;
                     self.reject_or_spill(d.spec, t, RejectReason::DeferTimeout { waited })?;
@@ -1175,6 +1177,7 @@ impl<T: GatewayTarget> Gateway<T> {
                         self.surge.mode(),
                         self.queue.len().saturating_sub(1),
                     );
+                    // lint:allow(D6, i indexes into the queue per the find() above)
                     let d = self.queue.remove(i).unwrap();
                     if d2 == AdmissionDecision::Admit {
                         let (id, tier, waited) =
@@ -1210,6 +1213,7 @@ impl<T: GatewayTarget> Gateway<T> {
         // deadlines (inflating `waited`) and wasted iterations when the
         // target was idle.
         while !self.queue.is_empty() {
+            // lint:allow(D6, the while condition guarantees a non-empty queue)
             let deadline = self.next_defer_deadline().expect("non-empty queue");
             if self.target.now() + 1e-9 >= deadline {
                 // Due now (the clock may have overshot by at most one

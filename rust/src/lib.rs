@@ -25,6 +25,7 @@
 //! | L5 | [`server`] | TCP streaming server (JSON lines) over the real tiny-OPT model or the simulator, with `/metrics` + `/health` on the same port |
 //! | L5 | [`experiments`] | one entry per paper figure/table plus the `ext-*` extensions |
 //! | — | [`telemetry`] | metric registry (Prometheus exposition), per-request event tracer (JSONL), leveled logging — the observation layer every subsystem reports into |
+//! | — | [`analysis`] | in-tree determinism lint (`andes lint`): hand-rolled lexer + rules D1–D6 and the X1 metric-taxonomy cross-check, with inline suppressions and a ratcheting baseline |
 //! | — | [`config`] | JSON deployment config: model, GPU, scheduler, engine, gateway, autoscale, spill, federation, tiers, sessions, telemetry |
 //! | — | [`runtime`] | PJRT loading and byte-level tokenizer for the compiled tiny-OPT model |
 //!
@@ -39,6 +40,7 @@
 //! regenerates every paper artifact from this same stack.
 
 pub mod util;
+pub mod analysis;
 pub mod backend;
 pub mod cluster;
 pub mod config;

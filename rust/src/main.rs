@@ -6,6 +6,7 @@
 //!   workload        generate a workload trace as CSV
 //!   simulate        one simulated serving run, printing summary metrics
 //!   trace-validate  schema-check a telemetry trace JSONL file
+//!   lint            determinism static analysis over the repo's own sources
 //!
 //! Global flags (any position): `--log-level <off|error|warn|info|debug|trace>`
 //! and `--quiet` (alias for `--log-level error`) control the leveled
@@ -67,6 +68,7 @@ fn main() {
         "workload" => cmd_workload(&rest),
         "simulate" => cmd_simulate(&rest),
         "trace-validate" => cmd_trace_validate(&rest),
+        "lint" => cmd_lint(&rest),
         "--help" | "-h" | "help" => {
             println!("{}", top_usage());
             0
@@ -87,7 +89,8 @@ fn top_usage() -> String {
        serve                  TCP streaming server (tiny-OPT or --backend sim)\n\
        workload               generate a workload trace CSV\n\
        simulate               one simulated serving run with summary metrics\n\
-       trace-validate <path>  schema-check a telemetry trace JSONL file\n\n\
+       trace-validate <path>  schema-check a telemetry trace JSONL file\n\
+       lint                   determinism lint over the repo's own sources\n\n\
      Run `andes <command> --help` for options."
         .to_string()
 }
@@ -122,6 +125,87 @@ fn cmd_trace_validate(argv: &[String]) -> i32 {
             1
         }
     }
+}
+
+fn cmd_lint(argv: &[String]) -> i32 {
+    use andes::analysis::{self, baseline::Baseline, report, rules, LintOptions};
+    let specs = [
+        OptSpec::flag("deny", "exit non-zero when any new finding remains"),
+        OptSpec::flag("json", "machine-readable report on stdout"),
+        OptSpec::value("rule", None, "restrict the report to one rule id (D1..D6, X1)"),
+        OptSpec::flag("update-baseline", "re-bless all current findings into the baseline"),
+        OptSpec::value("root", Some("."), "repository root to scan"),
+        OptSpec::value("baseline", Some("lint-baseline.json"), "baseline file, relative to root"),
+    ];
+    let about = "Determinism lint over the repo's own Rust sources (DESIGN.md §13)";
+    let args = match Args::parse(argv, &specs) {
+        Ok(a) => a,
+        Err(e) => return die_on_cli("lint", about, &specs, e),
+    };
+    let rule = args.get("rule").map(str::to_string);
+    if let Some(r) = &rule {
+        if !rules::known_rule(r) {
+            eprintln!("unknown rule '{r}' (known: D1 D2 D3 D4 D5 D6 X1)");
+            return 2;
+        }
+    }
+    let update = args.has_flag("update-baseline");
+    if update && rule.is_some() {
+        eprintln!("--update-baseline blesses the full rule set; drop --rule");
+        return 2;
+    }
+    let root = PathBuf::from(args.get("root").unwrap());
+    let baseline_path = root.join(args.get("baseline").unwrap());
+    // When re-blessing, scan against an empty baseline so every current
+    // finding lands in the new file.
+    let baseline = if update || !baseline_path.is_file() {
+        Baseline::empty()
+    } else {
+        let text = match std::fs::read_to_string(&baseline_path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("reading {}: {e}", baseline_path.display());
+                return 1;
+            }
+        };
+        match Baseline::parse(&text) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("{}: {e}", baseline_path.display());
+                return 1;
+            }
+        }
+    };
+    let opts = LintOptions { rule, baseline };
+    let outcome = match analysis::lint_repo(&root, &opts) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("lint: {e}");
+            return 1;
+        }
+    };
+    if args.has_flag("json") {
+        print!("{}", report::render_json(&outcome));
+    } else {
+        print!("{}", report::render_human(&outcome));
+    }
+    if update {
+        let blessed = Baseline::from_findings(&outcome.findings);
+        if let Err(e) = std::fs::write(&baseline_path, blessed.render()) {
+            eprintln!("writing {}: {e}", baseline_path.display());
+            return 1;
+        }
+        eprintln!(
+            "blessed {} finding(s) into {}",
+            blessed.total(),
+            baseline_path.display()
+        );
+        return 0;
+    }
+    if args.has_flag("deny") && !outcome.findings.is_empty() {
+        return 1;
+    }
+    0
 }
 
 fn die_on_cli(cmd: &str, about: &str, specs: &[OptSpec], e: CliError) -> i32 {

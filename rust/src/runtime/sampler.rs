@@ -26,7 +26,7 @@ pub fn sample(logits: &[f32], strategy: Sampling, rng: &mut Rng) -> u32 {
             let k = k.max(1).min(logits.len());
             // Indices of the top-k logits.
             let mut idx: Vec<usize> = (0..logits.len()).collect();
-            idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+            idx.sort_unstable_by(|&a, &b| logits[b].total_cmp(&logits[a]));
             idx.truncate(k);
             let top: Vec<f32> = idx.iter().map(|&i| logits[i]).collect();
             let probs = softmax_scaled(&top, temperature);

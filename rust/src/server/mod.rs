@@ -40,7 +40,7 @@
 //! glyphs, while admission, pacing, and QoE accounting are real) — the
 //! configuration CI smokes against.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -270,7 +270,9 @@ fn engine_loop<B: ExecutionBackend>(
     }
     let mut admission = AdmissionController::new(cfg.gateway.admission.clone());
     let mut surge = SurgeDetector::new(cfg.gateway.surge.clone());
-    let mut streams: HashMap<RequestId, Stream> = HashMap::new();
+    // BTreeMap: the tick loop iterates streams to emit tokens, so the
+    // emission order across requests must not depend on hash order.
+    let mut streams: BTreeMap<RequestId, Stream> = BTreeMap::new();
     let mut deferred: VecDeque<(Submission, f64, usize)> = VecDeque::new();
     let mut reported = 0usize; // finished requests already examined
     let mut next_req = 0usize; // arrival ordinal → spec id / trace span key
@@ -296,7 +298,7 @@ fn engine_loop<B: ExecutionBackend>(
         arrival: f64,
         arrival_id: usize,
         engine: &mut Engine<B, WallClock>,
-        streams: &mut HashMap<RequestId, Stream>,
+        streams: &mut BTreeMap<RequestId, Stream>,
         cfg: &ServerConfig,
     ) {
         let Submission { prompt, max_tokens, qoe, session, events } = sub;

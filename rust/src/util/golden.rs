@@ -67,6 +67,7 @@ pub fn check_or_bless(path: &Path, metrics: &[GoldenMetric]) -> Result<()> {
     let bless = std::env::var("GOLDEN_BLESS").map(|v| v == "1").unwrap_or(false);
     if bless || !path.exists() {
         write_snapshot(path, metrics)?;
+        // lint:allow(D5, bless mode talks to the operator who just set GOLDEN_BLESS=1)
         eprintln!(
             "golden: blessed {} ({} metrics) — review and commit it",
             path.display(),
@@ -134,6 +135,7 @@ pub fn check_or_bless_text(path: &Path, observed: &str) -> Result<()> {
         }
         std::fs::write(path, observed)
             .with_context(|| format!("writing golden text {}", path.display()))?;
+        // lint:allow(D5, bless mode talks to the operator who just set GOLDEN_BLESS=1)
         eprintln!(
             "golden: blessed {} ({} lines) — review and commit it",
             path.display(),

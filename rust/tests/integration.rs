@@ -260,9 +260,7 @@ fn greedy_never_beats_dp_value() {
         // Simple greedy replica of Algorithm 1.
         let mut order: Vec<usize> = (0..n).collect();
         order.sort_by(|&i, &j| {
-            (values[j] / weights[j] as f64)
-                .partial_cmp(&(values[i] / weights[i] as f64))
-                .unwrap()
+            (values[j] / weights[j] as f64).total_cmp(&(values[i] / weights[i] as f64))
         });
         let mut used = 0usize;
         let mut cnt = 0usize;

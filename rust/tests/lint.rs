@@ -1,0 +1,226 @@
+//! Integration tests for the in-tree determinism lint (`andes lint`).
+//!
+//! Two jobs: (1) the repository itself must lint clean — every finding
+//! is either fixed or carries a reasoned inline waiver, so the committed
+//! baseline stays empty; (2) the rule engine must keep firing on the
+//! known-bad fixture corpus under `rust/tests/lint_fixtures/` and stay
+//! quiet on the known-good counterparts.
+
+use std::path::Path;
+
+use andes::analysis::baseline::Baseline;
+use andes::analysis::lexer::strip_source;
+use andes::analysis::{lint_repo, lint_sources, LintOptions, LintOutcome};
+use andes::util::testing::check_prop;
+
+/// Read a fixture file from the corpus (skipped by the repo walker).
+fn fixture(name: &str) -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/lint_fixtures")
+        .join(name);
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("fixture {} unreadable: {e}", path.display()))
+}
+
+/// Lint one fixture under a synthetic repo-relative path (the path picks
+/// the per-rule scopes: D2 wall domain, D5 library code, D6 sim paths).
+fn lint_one(rel: &str, text: &str) -> LintOutcome {
+    lint_sources(&[(rel.to_string(), text.to_string())], &LintOptions::default())
+}
+
+fn rules_of(outcome: &LintOutcome) -> Vec<&str> {
+    outcome.findings.iter().map(|f| f.rule).collect()
+}
+
+#[test]
+fn repository_lints_clean_with_empty_baseline() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let opts = LintOptions::default(); // empty baseline: nothing grandfathered
+    let out = lint_repo(root, &opts).expect("lint walk failed");
+    assert!(
+        out.findings.is_empty(),
+        "repository must lint clean; fresh findings:\n{}",
+        out.findings
+            .iter()
+            .map(|f| format!("  {}:{}: [{}] {}", f.file, f.line, f.rule, f.excerpt))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(out.files_scanned > 40, "walker found too few files: {}", out.files_scanned);
+    // X1 sanity: the metric taxonomy is present and reconciles.
+    assert!(out.declared > 0, "declare_base_families not found");
+    assert_eq!(out.declared, out.emitted, "metric families must reconcile");
+}
+
+#[test]
+fn committed_baseline_is_empty_and_parses() {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("lint-baseline.json");
+    let text = std::fs::read_to_string(&path).expect("lint-baseline.json missing");
+    let base = Baseline::parse(&text).expect("lint-baseline.json malformed");
+    assert_eq!(base.total(), 0, "baseline must stay empty; fix or waive instead");
+}
+
+#[test]
+fn d1_fixtures() {
+    let bad = lint_one("rust/src/coordinator/fx.rs", &fixture("d1_bad.rs"));
+    assert_eq!(rules_of(&bad), vec!["D1", "D1"], "{:?}", bad.findings);
+    let good = lint_one("rust/src/coordinator/fx.rs", &fixture("d1_good.rs"));
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+}
+
+#[test]
+fn d2_fixtures() {
+    let bad = lint_one("rust/src/coordinator/fx.rs", &fixture("d2_bad.rs"));
+    assert_eq!(rules_of(&bad), vec!["D2", "D2"], "{:?}", bad.findings);
+    // The same file inside the wall domain is fine.
+    let allowed = lint_one("rust/src/server/fx.rs", &fixture("d2_bad.rs"));
+    assert!(allowed.findings.is_empty(), "{:?}", allowed.findings);
+    let good = lint_one("rust/src/coordinator/fx.rs", &fixture("d2_good.rs"));
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+}
+
+#[test]
+fn d3_fixtures() {
+    let bad = lint_one("rust/src/util/fx.rs", &fixture("d3_bad.rs"));
+    assert_eq!(rules_of(&bad), vec!["D3", "D3"], "{:?}", bad.findings);
+    let good = lint_one("rust/src/util/fx.rs", &fixture("d3_good.rs"));
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+}
+
+#[test]
+fn d4_fixtures() {
+    let bad = lint_one("rust/src/workload/fx.rs", &fixture("d4_bad.rs"));
+    assert_eq!(rules_of(&bad), vec!["D4", "D4"], "{:?}", bad.findings);
+    let good = lint_one("rust/src/workload/fx.rs", &fixture("d4_good.rs"));
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+}
+
+#[test]
+fn d5_fixtures() {
+    let bad = lint_one("rust/src/qoe/fx.rs", &fixture("d5_bad.rs"));
+    assert_eq!(rules_of(&bad), vec!["D5", "D5"], "{:?}", bad.findings);
+    // The same text under rust/tests/ is out of D5 scope.
+    let test_side = lint_one("rust/tests/fx.rs", &fixture("d5_bad.rs"));
+    assert!(test_side.findings.is_empty(), "{:?}", test_side.findings);
+    let good = lint_one("rust/src/qoe/fx.rs", &fixture("d5_good.rs"));
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+}
+
+#[test]
+fn d6_fixtures() {
+    let bad = lint_one("rust/src/qoe/fx.rs", &fixture("d6_bad.rs"));
+    assert_eq!(rules_of(&bad), vec!["D6", "D6"], "{:?}", bad.findings);
+    // Outside the sim scope the same unwraps are accepted.
+    let cli_side = lint_one("rust/src/experiments/fx.rs", &fixture("d6_bad.rs"));
+    assert!(cli_side.findings.is_empty(), "{:?}", cli_side.findings);
+    let good = lint_one("rust/src/qoe/fx.rs", &fixture("d6_good.rs"));
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+}
+
+#[test]
+fn x1_fixtures() {
+    let bad = lint_one("rust/src/telemetry_fx.rs", &fixture("x1_bad.rs"));
+    assert_eq!(rules_of(&bad), vec!["X1", "X1"], "{:?}", bad.findings);
+    let excerpts: Vec<&str> = bad.findings.iter().map(|f| f.excerpt.as_str()).collect();
+    assert!(
+        excerpts.contains(&"andes_declared_only_total")
+            && excerpts.contains(&"andes_ghost_total"),
+        "{excerpts:?}"
+    );
+    let good = lint_one("rust/src/telemetry_fx.rs", &fixture("x1_good.rs"));
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+    assert_eq!(good.declared, 2);
+    assert_eq!(good.emitted, 2);
+}
+
+#[test]
+fn suppression_fixture_lints_clean_with_counted_waivers() {
+    let out = lint_one("rust/src/qoe/fx.rs", &fixture("suppressed.rs"));
+    assert!(out.findings.is_empty(), "{:?}", out.findings);
+    // D2 + D3 + D6 (sort line) + D6 (head line) all consumed a waiver.
+    assert_eq!(out.suppressed, 4);
+}
+
+#[test]
+fn strings_and_comments_never_produce_findings() {
+    // Scanned under the strictest scope (D6 active, outside wall domain):
+    // every forbidden token sits in a comment or literal, so the lexer
+    // must blank them all.
+    let out = lint_one("rust/src/coordinator/fx.rs", &fixture("strings_comments.rs"));
+    assert!(out.findings.is_empty(), "{:?}", out.findings);
+}
+
+#[test]
+fn baseline_ratchets_only_new_findings() {
+    let rel = "rust/src/coordinator/fx.rs";
+    let text = fixture("d2_bad.rs");
+    let all = lint_one(rel, &text);
+    assert_eq!(all.findings.len(), 2);
+    // Grandfather today's findings: a re-run reports nothing fresh.
+    let opts = LintOptions {
+        rule: None,
+        baseline: Baseline::from_findings(&all.findings),
+    };
+    let again = lint_sources(&[(rel.to_string(), text.clone())], &opts);
+    assert!(again.findings.is_empty(), "{:?}", again.findings);
+    assert_eq!(again.baselined, 2);
+    // A newly introduced violation surfaces despite the baseline.
+    let grown = format!("{text}\npub fn extra() -> u64 {{ SystemTime::now_stub() }}\n");
+    let regressed = lint_sources(&[(rel.to_string(), grown)], &opts);
+    assert_eq!(regressed.findings.len(), 1, "{:?}", regressed.findings);
+    assert_eq!(regressed.findings[0].rule, "D2");
+    assert!(regressed.findings[0].excerpt.contains("extra"));
+}
+
+#[test]
+fn rule_filter_restricts_fixture_report() {
+    let files = vec![
+        ("rust/src/coordinator/a.rs".to_string(), fixture("d2_bad.rs")),
+        ("rust/src/util/b.rs".to_string(), fixture("d3_bad.rs")),
+    ];
+    let opts = LintOptions { rule: Some("D3".to_string()), ..Default::default() };
+    let out = lint_sources(&files, &opts);
+    assert_eq!(rules_of(&out), vec!["D3", "D3"], "{:?}", out.findings);
+}
+
+#[test]
+fn strip_pass_preserves_line_numbers() {
+    // Property: whatever mix of comments, strings, raw strings, char
+    // literals, and unterminated constructs the lexer sees, the stripped
+    // views keep exactly one entry per input line — findings and
+    // suppressions would otherwise drift off their source lines.
+    let frags = [
+        "let x = 1;",
+        "/* open",
+        "still inside */ let y = 2;",
+        "let s = \"literal with // and /* inside\";",
+        "let r = r#\"raw \" quote\"#;",
+        "// line comment with \" quote",
+        "let c = '\"';",
+        "let multi = \"spans",
+        "two lines\";",
+        "let b = b\"bytes\";",
+        "let lt: &'static str = \"x\";",
+        "/* nested /* depth */ two */",
+        "}",
+        "{",
+        "",
+    ];
+    check_prop("strip preserves line count", 300, |rng| {
+        let n = rng.range(1, 40);
+        let mut src = String::new();
+        for i in 0..n {
+            if i > 0 {
+                src.push('\n');
+            }
+            src.push_str(frags[rng.below(frags.len() as u64) as usize]);
+        }
+        let lines = src.split('\n').count();
+        let stripped = strip_source(&src);
+        assert_eq!(stripped.code.len(), lines, "code lines drifted for:\n{src}");
+        assert_eq!(stripped.comments.len(), lines, "comment lines drifted for:\n{src}");
+        for lit in &stripped.strings {
+            assert!(lit.line < lines, "literal anchored past EOF in:\n{src}");
+        }
+    });
+}

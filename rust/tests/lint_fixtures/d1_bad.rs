@@ -1,0 +1,20 @@
+//! Known-bad D1 fixture: hash-order iteration feeding output.
+use std::collections::HashMap;
+
+pub struct Index {
+    counts: HashMap<String, usize>,
+}
+
+impl Index {
+    pub fn dump(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for (k, v) in self.counts.iter() {
+            out.push(format!("{k}={v}"));
+        }
+        out
+    }
+
+    pub fn total(&self) -> usize {
+        self.counts.values().sum()
+    }
+}

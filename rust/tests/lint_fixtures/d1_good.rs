@@ -1,0 +1,32 @@
+//! Known-good D1 fixture: point lookups on a hash map are fine, ordered
+//! iteration goes through a BTreeMap, and a foreign receiver that merely
+//! shares a declared field's name must not fire.
+use std::collections::{BTreeMap, HashMap};
+
+pub struct Index {
+    counts: HashMap<String, usize>,
+    ordered: BTreeMap<String, usize>,
+}
+
+impl Index {
+    pub fn get(&self, k: &str) -> Option<usize> {
+        self.counts.get(k).copied()
+    }
+
+    pub fn put(&mut self, k: String, v: usize) {
+        self.counts.insert(k.clone(), v);
+        self.ordered.insert(k, v);
+    }
+
+    pub fn dump(&self) -> Vec<String> {
+        self.ordered.iter().map(|(k, v)| format!("{k}={v}")).collect()
+    }
+}
+
+pub struct View {
+    pub counts: Vec<usize>,
+}
+
+pub fn scan(view: &View) -> usize {
+    view.counts.iter().sum()
+}

@@ -1,0 +1,10 @@
+//! Known-bad D2 fixture: wall-clock reads outside the wall domain.
+
+pub fn stamp() -> f64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn epoch() -> u64 {
+    std::time::SystemTime::now().elapsed().map(|d| d.as_secs()).unwrap_or(0)
+}

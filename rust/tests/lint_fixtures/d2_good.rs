@@ -1,0 +1,9 @@
+//! Known-good D2 fixture: time flows through the injected sim clock.
+
+pub trait Clock {
+    fn now(&self) -> f64;
+}
+
+pub fn stamp(clock: &dyn Clock) -> f64 {
+    clock.now()
+}

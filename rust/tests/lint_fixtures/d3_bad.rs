@@ -1,0 +1,15 @@
+//! Known-bad D3 fixture: partial_cmp feeding sorts and unwraps,
+//! including the rustfmt-wrapped form where the unwrap lands on the
+//! next line.
+
+pub fn rank(mut xs: Vec<f64>) -> Vec<f64> {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs
+}
+
+pub fn worst(xs: &[f64]) -> Option<&f64> {
+    xs.iter().max_by(|a, b| {
+        a.partial_cmp(b)
+            .unwrap()
+    })
+}

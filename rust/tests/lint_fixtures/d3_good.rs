@@ -1,0 +1,12 @@
+//! Known-good D3 fixture: total_cmp for ordering; a partial_cmp whose
+//! None case is handled explicitly is fine.
+use std::cmp::Ordering;
+
+pub fn rank(mut xs: Vec<f64>) -> Vec<f64> {
+    xs.sort_by(|a, b| a.total_cmp(b));
+    xs
+}
+
+pub fn strictly_less(a: f64, b: f64) -> bool {
+    matches!(a.partial_cmp(&b), Some(Ordering::Less))
+}

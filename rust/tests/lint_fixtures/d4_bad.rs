@@ -1,0 +1,10 @@
+//! Known-bad D4 fixture: entropy-seeded randomness is unreproducible.
+
+pub fn roll() -> u64 {
+    let mut rng = rand::thread_rng();
+    rng.gen()
+}
+
+pub fn seed_rng() -> SmallRng {
+    SmallRng::from_entropy()
+}

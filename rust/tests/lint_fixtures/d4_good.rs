@@ -1,0 +1,7 @@
+//! Known-good D4 fixture: explicit seeds only.
+use crate::util::rng::Rng;
+
+pub fn roll(seed: u64) -> u64 {
+    let mut rng = Rng::new(seed);
+    rng.next_u64()
+}

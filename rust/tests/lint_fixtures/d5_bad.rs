@@ -1,0 +1,6 @@
+//! Known-bad D5 fixture: direct prints in library code.
+
+pub fn report(value: f64) {
+    println!("value = {value}");
+    eprintln!("warning: value observed");
+}

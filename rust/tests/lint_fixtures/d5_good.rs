@@ -1,0 +1,14 @@
+//! Known-good D5 fixture: library code logs through `log::`; a print
+//! inside a #[cfg(test)] module is test-only output and out of scope.
+
+pub fn report(value: f64) {
+    log::info!("value = {value}");
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn prints_are_fine_in_tests() {
+        println!("test diagnostics are allowed");
+    }
+}

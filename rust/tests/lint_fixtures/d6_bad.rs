@@ -1,0 +1,7 @@
+//! Known-bad D6 fixture: bare unwrap/expect in a simulation path.
+
+pub fn pick(xs: &[f64]) -> f64 {
+    let first = xs.first().unwrap();
+    let last = xs.last().expect("non-empty");
+    first + last
+}

@@ -1,0 +1,18 @@
+//! Known-good D6 fixture: fallible paths surface errors instead of
+//! panicking mid-experiment.
+
+pub fn pick(xs: &[f64]) -> Option<f64> {
+    let first = xs.first()?;
+    let last = xs.last()?;
+    Some(first + last)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        assert_eq!(pick(&[1.0, 2.0]).unwrap(), 3.0);
+    }
+}

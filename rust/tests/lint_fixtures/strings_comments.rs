@@ -1,0 +1,24 @@
+//! False-positive corpus: every forbidden token below is inert because
+//! it sits inside a comment or a string literal. A lexer that fails to
+//! strip any of these produces findings and fails the fixture test.
+
+// Instant::now() thread_rng() println!("x") partial_cmp(a).unwrap()
+/* block comment: for k in counts.keys() { SystemTime::now(); }
+   nested /* still a comment: xs.sort_by(|a, b| a.partial_cmp(b).unwrap()) */
+   tail */
+
+pub fn docs() -> &'static str {
+    "Instant::now SystemTime thread_rng println! .unwrap() counts.iter()"
+}
+
+pub fn raw() -> &'static str {
+    r#"sort_by(|a, b| a.partial_cmp(b).unwrap()) and "quoted" eprintln!"#
+}
+
+pub fn bytes() -> &'static [u8] {
+    b"from_entropy() dbg!(x) .expect(msg)"
+}
+
+pub fn tricky_char() -> char {
+    '"'
+}

@@ -1,0 +1,20 @@
+//! Suppression fixture: each violation below carries a reasoned inline
+//! waiver, so the file lints clean. A directive on its own comment line
+//! covers the next line; a trailing comment covers its own line; one
+//! comment may carry several directives.
+
+pub fn profile() -> f64 {
+    // lint:allow(D2, this fixture models a wall-domain profiling helper)
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn rank(mut xs: Vec<f64>) -> Vec<f64> {
+    // lint:allow(D3, callers pre-filter NaN) lint:allow(D6, same contract)
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs
+}
+
+pub fn head(xs: &[f64]) -> f64 {
+    *xs.first().unwrap() // lint:allow(D6, callers guarantee a non-empty slice)
+}

@@ -1,0 +1,12 @@
+//! Known-bad X1 fixture: one family declared but never emitted, one
+//! emitted but never declared.
+
+pub fn declare_base_families(reg: &mut Registry) {
+    reg.declare_counter("andes_declared_only_total", "never emitted anywhere");
+    reg.declare_counter("andes_used_total", "declared and emitted");
+}
+
+pub fn tick(reg: &mut Registry) {
+    reg.inc("andes_used_total", &[]);
+    reg.inc("andes_ghost_total", &[]);
+}

@@ -1,0 +1,11 @@
+//! Known-good X1 fixture: the declared and emitted family sets match.
+
+pub fn declare_base_families(reg: &mut Registry) {
+    reg.declare_counter("andes_used_total", "declared and emitted");
+    reg.declare_gauge("andes_depth", "declared and emitted");
+}
+
+pub fn tick(reg: &mut Registry) {
+    reg.inc("andes_used_total", &[]);
+    reg.set_gauge("andes_depth", &[], 1.0);
+}

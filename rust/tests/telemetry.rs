@@ -11,7 +11,7 @@
 //!   plus `/metrics` (valid Prometheus exposition with the core
 //!   families) and `/health` (JSON readiness) on the same port.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, HashSet};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::sync::mpsc::channel;
@@ -119,7 +119,9 @@ fn tracer_ring_eviction_never_drops_open_spans() {
     check_prop("open spans survive ring eviction", 150, |rng| {
         let capacity = (rng.below(48) + 1) as usize;
         let mut t = Tracer::new(capacity);
-        let mut open_counts: HashMap<u64, usize> = HashMap::new();
+        // BTreeMap: the invariant loop iterates this map, and its panic
+        // messages should name spans in a stable order across runs.
+        let mut open_counts: BTreeMap<u64, usize> = BTreeMap::new();
         let mut closed: HashSet<u64> = HashSet::new();
         let mut live: Vec<u64> = Vec::new();
         let mut next_id = 0u64;
@@ -177,7 +179,8 @@ fn gateway_trace_export_validates_and_spans_join() {
     // arrival → finish on ONE key. (Regression guard: the gateway keys
     // spans by spec id; using the engine-local record id would split
     // every span in two once routing reorders submissions.)
-    let mut by_req: HashMap<u64, Vec<String>> = HashMap::new();
+    // BTreeMap: the span grouping below is iterated for the join check.
+    let mut by_req: BTreeMap<u64, Vec<String>> = BTreeMap::new();
     for line in jsonl.lines() {
         let j = Json::parse(line).unwrap();
         by_req
