@@ -1,0 +1,224 @@
+//! Event-calendar and sharded-grid benchmarks.
+//!
+//! The calendar replaced every per-step next-event scan in the
+//! simulation stack, so its register/cancel/pop cycle is paid on every
+//! simulated event; this measures those micro-ops, the kind-filtered
+//! index query, the shard runner's spawn/merge overhead — and, as the
+//! headline case, a one-million-request synthetic trace simulated as an
+//! 8-cell grid over [`andes::experiments::shard::run_grid`]. Doubles as
+//! the perf regression gate against the committed `BENCH_calendar.json`
+//! baseline (>25% mean slowdown fails; bless with `BENCH_BLESS=1`, or
+//! automatically when the baseline is missing or provisional).
+
+use andes::backend::sim::SimBackend;
+use andes::backend::VirtualClock;
+use andes::coordinator::calendar::{EventCalendar, EventKind};
+use andes::coordinator::engine::{Engine, EngineConfig};
+use andes::experiments::runner::SchedKind;
+use andes::experiments::shard::run_grid;
+use andes::model::gpu::a100_4x;
+use andes::model::latency::LatencyModel;
+use andes::model::llm::opt_66b;
+use andes::qoe::spec::QoeSpec;
+use andes::util::bench::{header, Bencher};
+use andes::workload::RequestSpec;
+
+/// A cheap deterministic trace: small prompts and short outputs, paced
+/// well below a replica's service rate so the FCFS waiting queue stays
+/// shallow and the measurement covers event stepping, not queue sorts.
+fn synth_trace(n: usize, seed: u64) -> Vec<RequestSpec> {
+    (0..n)
+        .map(|i| {
+            let j = (i as u64).wrapping_add(seed).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            RequestSpec {
+                id: i,
+                arrival: i as f64 * 0.25,
+                prompt_tokens: 8 + (j % 25) as usize,
+                output_tokens: 3 + (j % 7) as usize,
+                qoe: QoeSpec::new(1.0, 4.8),
+                session: None,
+            }
+        })
+        .collect()
+}
+
+/// Run one grid cell: a plain FCFS engine over a synthetic trace,
+/// returning the number of requests it finished.
+fn run_cell(n: usize, seed: u64) -> usize {
+    let llm = opt_66b();
+    let gpu = a100_4x();
+    let latency = LatencyModel::for_deployment(&llm, &gpu);
+    let cfg = EngineConfig {
+        kv_capacity_tokens: llm.kv_capacity_tokens(&gpu),
+        swap_capacity_tokens: llm.swap_capacity_tokens(&gpu),
+        ..EngineConfig::default()
+    };
+    let mut e = Engine::new(
+        cfg,
+        SimBackend::new(latency.clone()),
+        VirtualClock::default(),
+        SchedKind::Fcfs.build(),
+        latency,
+    );
+    e.load_trace(synth_trace(n, seed));
+    e.run_to_completion().expect("cell must complete").requests.len()
+}
+
+fn main() {
+    println!("{}", header());
+    let mut b = Bencher::new();
+
+    // Bulk registration: mirror a 10k-request trace onto a fresh
+    // calendar, the load_trace hot path.
+    b.bench("calendar-register/batch=10k", || {
+        let mut cal = EventCalendar::new();
+        for i in 0..10_000u64 {
+            cal.register(i as f64 * 1e-3, EventKind::Arrival, i);
+        }
+        cal.len()
+    });
+
+    // Steady-state pop-then-register against a 1k-deep timeline — the
+    // per-event cost of every simulated arrival.
+    let mut cal = EventCalendar::new();
+    for i in 0..1024u64 {
+        cal.register(i as f64 * 0.5, EventKind::Arrival, i);
+    }
+    let mut t = 1024.0 * 0.5;
+    b.bench("calendar-pop-register/depth=1k", || {
+        let w = cal.pop().expect("timeline is kept at depth 1k");
+        t += 0.5;
+        cal.register(t, EventKind::Arrival, w.payload);
+        w.seq
+    });
+
+    // Churn with cancellation: two registrations, one cancel, one pop
+    // per cycle — the defer-deadline admit/expire pattern.
+    let mut cal = EventCalendar::new();
+    let mut ct = 0.0f64;
+    for i in 0..1024u64 {
+        ct += 0.25;
+        cal.register(ct, EventKind::DeferDeadline, i);
+    }
+    b.bench("calendar-churn/register-cancel-pop", || {
+        ct += 0.25;
+        let a = cal.register(ct, EventKind::DeferDeadline, 1);
+        cal.register(ct + 0.1, EventKind::AutoscaleTick, 2);
+        cal.cancel(a);
+        cal.pop().map(|w| w.seq)
+    });
+
+    // Kind-filtered index query over a mixed 4k-wakeup timeline — the
+    // gateway/federation `next_defer_deadline` path (an O(n) scan by
+    // design; this pins its constant).
+    let mut cal = EventCalendar::new();
+    let kinds = [
+        EventKind::DeferDeadline,
+        EventKind::AutoscaleTick,
+        EventKind::FederationSync,
+        EventKind::DeliveryAck,
+    ];
+    for i in 0..4096u64 {
+        cal.register(i as f64 * 0.01, kinds[(i % 4) as usize], i);
+    }
+    b.bench("calendar-next-time-of/live=4k", || {
+        cal.next_time_of(EventKind::FederationSync)
+    });
+
+    // Shard-runner overhead: spawn, fan out 64 trivial cells over 8
+    // workers, merge in cell order.
+    b.bench("shard-grid-overhead/cells=64,shards=8", || {
+        let cells: Vec<u64> = (0..64).collect();
+        let outs = run_grid(&cells, 8, |_, &c| {
+            let mut acc = c;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        outs.iter().sum::<u64>()
+    });
+
+    // Headline: a one-million-request trace as an 8-cell sharded grid,
+    // every cell a full engine simulation. One timed run — this is the
+    // "1M requests in minutes" claim, kept honest by the gate.
+    let cells: Vec<u64> = (0..8).collect();
+    b.bench_once("grid-sim/requests=1M,cells=8,shards=8", || {
+        let outs = run_grid(&cells, 8, |_, &seed| run_cell(125_000, seed));
+        let total: usize = outs.iter().sum();
+        assert_eq!(total, 1_000_000, "the grid must serve the full 1M-request trace");
+        total
+    });
+
+    // Perf baseline + regression gate: compare each case's mean against
+    // the committed BENCH_calendar.json and fail on >25% slowdowns.
+    // Bless (rewrite) the baseline when it is missing, marked
+    // `"provisional": true`, or BENCH_BLESS=1 — CI runs this bench
+    // twice, so the first pass blesses machine-local numbers and the
+    // second gates against them (committed numbers stay provisional
+    // because CI hardware differs from any dev box).
+    let path = "BENCH_calendar.json";
+    let factor = 1.25;
+    let bless_forced = std::env::var("BENCH_BLESS").ok().as_deref() == Some("1");
+    let baseline = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| andes::util::json::Json::parse(&t).ok());
+    let provisional = match &baseline {
+        Some(j) => j.get("provisional").as_bool().unwrap_or(false),
+        None => true,
+    };
+    if bless_forced || provisional {
+        match std::fs::write(path, b.results_json()) {
+            Ok(()) => println!("baseline blessed to {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+        return;
+    }
+    let base = baseline.expect("non-provisional implies a parsed baseline");
+    let mut compared = 0usize;
+    let mut regressed = 0usize;
+    if let Some(cases) = base.get("benchmarks").as_arr() {
+        for c in cases {
+            let name = match c.get("name").as_str() {
+                Some(n) => n.to_string(),
+                None => continue,
+            };
+            let base_mean = match c.get("mean_ns").as_f64() {
+                Some(m) if m > 0.0 => m,
+                _ => continue,
+            };
+            let cur = match b.results().iter().find(|r| r.name == name) {
+                Some(r) => r,
+                None => continue,
+            };
+            compared += 1;
+            let cur_mean = cur.mean.as_nanos() as f64;
+            let pct = (cur_mean / base_mean - 1.0) * 100.0;
+            if cur_mean > base_mean * factor {
+                regressed += 1;
+                eprintln!(
+                    "REGRESSION {name}: mean {cur_mean:.0} ns vs baseline \
+                     {base_mean:.0} ns ({pct:+.1}%)"
+                );
+            } else {
+                println!("gate ok {name}: {cur_mean:.0} ns vs {base_mean:.0} ns ({pct:+.1}%)");
+            }
+        }
+    }
+    if compared == 0 {
+        eprintln!("baseline {path} shares no cases with this run; re-bless with BENCH_BLESS=1");
+        std::process::exit(1);
+    }
+    if regressed > 0 {
+        eprintln!(
+            "{regressed} benchmark(s) regressed more than {:.0}% vs {path} \
+             (set BENCH_BLESS=1 to re-bless after an intentional change)",
+            (factor - 1.0) * 100.0
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "perf gate: {compared} case(s) within {:.0}% of {path}",
+        (factor - 1.0) * 100.0
+    );
+}

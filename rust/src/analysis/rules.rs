@@ -69,7 +69,11 @@ const WALL_ALLOW: &[&str] = &[
 const PRINT_ALLOW: &[&str] = &["rust/src/main.rs", "rust/src/telemetry/logging.rs"];
 
 /// Library paths on the seeded simulation side where a panic corrupts an
-/// experiment cell (D6). CLI/server/bench plumbing is out of scope.
+/// experiment cell (D6). CLI/server/bench plumbing is out of scope. The
+/// event calendar rides the `coordinator/` prefix; the shard runner is
+/// listed explicitly because the rest of `experiments/` is CLI-side
+/// report plumbing — but a panic on a grid worker kills every cell of
+/// the run.
 const D6_SCOPE: &[&str] = &[
     "rust/src/coordinator/",
     "rust/src/cluster/",
@@ -79,6 +83,7 @@ const D6_SCOPE: &[&str] = &[
     "rust/src/workload/",
     "rust/src/model/",
     "rust/src/backend/sim.rs",
+    "rust/src/experiments/shard.rs",
     "rust/src/util/stats.rs",
     "rust/src/util/rng.rs",
 ];

@@ -337,10 +337,14 @@ impl Cluster {
         }
     }
 
-    /// Run the replica with work whose clock lags furthest behind
-    /// through one engine iteration; returns its new time, or `None`
-    /// when every replica is idle.
-    pub fn step_once(&mut self) -> Result<Option<f64>> {
+    /// The replica with work whose clock lags furthest behind, ties
+    /// broken toward the lower index. This is the cluster's next-event
+    /// selection, but deliberately *not* on the event calendar
+    /// (DESIGN.md §14): the lag is derived from live replica state that
+    /// changes on every tick, so a registered wakeup would be stale the
+    /// moment it was scheduled. A state scan each step is the
+    /// deterministic choice here.
+    fn next_lagging_replica(&self) -> Option<usize> {
         let mut best: Option<usize> = None;
         for i in 0..self.replicas.len() {
             if self.replicas[i].has_work() {
@@ -352,7 +356,14 @@ impl Cluster {
                 };
             }
         }
-        match best {
+        best
+    }
+
+    /// Run the replica with work whose clock lags furthest behind
+    /// through one engine iteration; returns its new time, or `None`
+    /// when every replica is idle.
+    pub fn step_once(&mut self) -> Result<Option<f64>> {
+        match self.next_lagging_replica() {
             Some(i) => {
                 self.replicas[i].tick()?;
                 self.sync_finished(i);

@@ -1,0 +1,322 @@
+//! The event calendar: one monotone timeline every simulated subsystem
+//! schedules against (DESIGN.md §14).
+//!
+//! Before this module, each subsystem hand-rolled its own "next event"
+//! special case — the gateway scanned its defer queue for the earliest
+//! deadline, the autoscaler exposed `next_event()`, federation kept a
+//! `last_sync + interval` counter, the engine peeked the pending-arrival
+//! vector, and the delivery layer drained an ack `VecDeque`. The
+//! calendar replaces those scans with a single binary-heap timeline:
+//! subsystems **register** wakeups, hold a [`WakeupToken`] to cancel
+//! them, and either **pop** fired events in order (consumers like the
+//! engine's arrival stream) or **query** the earliest pending instant
+//! (index users like the gateway's sweep loop).
+//!
+//! The ordering rule is the determinism contract: wakeups fire by
+//! `(time, seq)` where `time` compares via `f64::total_cmp` and `seq`
+//! is the registration counter. Two wakeups at the same instant always
+//! fire in registration order — heap layout, event kind, and payload
+//! never influence the schedule, so a calendar-driven run is
+//! reproducible bit for bit.
+//!
+//! Cancellation is lazy: `cancel` marks the seq and the heap entry is
+//! dropped when it surfaces, so cancel is O(log n) and never reorders
+//! the heap. `len`/`is_empty` count only live wakeups.
+
+use std::cmp::Ordering;
+use std::collections::{BTreeSet, BinaryHeap};
+
+/// What a wakeup means to the subsystem that registered it. The kind
+/// never participates in ordering — two wakeups at the same time fire
+/// in registration (`seq`) order regardless of kind — it only lets an
+/// index user ask "when is the next X?" via
+/// [`EventCalendar::next_time_of`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A workload request reaches the front door.
+    Arrival,
+    /// A session turn returns after its think-time gap.
+    SessionReturn,
+    /// A deferred request's admission deadline expires.
+    DeferDeadline,
+    /// The predictive autoscaler's next evaluation instant.
+    AutoscaleTick,
+    /// A federation snapshot exchange comes due.
+    FederationSync,
+    /// A delivery-layer ack becomes observable to the pacer.
+    DeliveryAck,
+}
+
+/// Handle for cancelling a registered wakeup. Tokens stay inert after
+/// their wakeup fires, after cancellation, and across [`EventCalendar::
+/// clear`] (seqs are never reused), so holding a stale token is safe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WakeupToken(u64);
+
+/// One registered wakeup, as returned by [`EventCalendar::pop`] /
+/// [`EventCalendar::peek`].
+#[derive(Debug, Clone, Copy)]
+pub struct Wakeup {
+    /// Simulation instant the wakeup fires at.
+    pub time: f64,
+    /// Registration sequence number — the deterministic tie-break.
+    pub seq: u64,
+    /// What the wakeup means to its registrant.
+    pub kind: EventKind,
+    /// Registrant-defined correlation value (request id, node index,
+    /// ack index — whatever the subsystem needs to route the event).
+    pub payload: u64,
+}
+
+/// Heap entry with the `(time, seq)` ordering reversed so the std
+/// max-heap yields the earliest wakeup first.
+struct Entry(Wakeup);
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .0
+            .time
+            .total_cmp(&self.0.time)
+            .then(other.0.seq.cmp(&self.0.seq))
+    }
+}
+
+/// Binary-heap event timeline with deterministic `(time, seq)` ordering
+/// and token-based lazy cancellation. See the module docs for the
+/// ordering contract.
+///
+/// ```
+/// use andes::coordinator::calendar::{EventCalendar, EventKind};
+/// let mut cal = EventCalendar::new();
+/// let late = cal.register(2.0, EventKind::DeferDeadline, 7);
+/// cal.register(1.0, EventKind::Arrival, 0);
+/// cal.register(1.0, EventKind::Arrival, 1); // same instant: fires second
+/// assert_eq!(cal.next_time(), Some(1.0));
+/// assert!(cal.cancel(late));
+/// let first = cal.pop().unwrap();
+/// let second = cal.pop().unwrap();
+/// assert_eq!((first.payload, second.payload), (0, 1));
+/// assert!(cal.pop().is_none(), "cancelled wakeups never fire");
+/// ```
+#[derive(Default)]
+pub struct EventCalendar {
+    heap: BinaryHeap<Entry>,
+    /// Seqs registered but not yet fired or cancelled.
+    live: BTreeSet<u64>,
+    /// Cancelled seqs whose heap entries have not surfaced yet.
+    cancelled: BTreeSet<u64>,
+    next_seq: u64,
+    fired: u64,
+    last_fired: Option<f64>,
+}
+
+impl EventCalendar {
+    pub fn new() -> Self {
+        EventCalendar::default()
+    }
+
+    /// Register a wakeup at `time`. Returns the cancellation token.
+    pub fn register(&mut self, time: f64, kind: EventKind, payload: u64) -> WakeupToken {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Entry(Wakeup { time, seq, kind, payload }));
+        self.live.insert(seq);
+        WakeupToken(seq)
+    }
+
+    /// Cancel a pending wakeup. Returns whether the token was live
+    /// (false for already-fired, already-cancelled, or pre-`clear`
+    /// tokens — all inert).
+    pub fn cancel(&mut self, token: WakeupToken) -> bool {
+        if self.live.remove(&token.0) {
+            self.cancelled.insert(token.0);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Drop cancelled entries off the top of the heap.
+    fn purge(&mut self) {
+        while let Some(top) = self.heap.peek() {
+            if self.cancelled.remove(&top.0.seq) {
+                self.heap.pop();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// The earliest live wakeup, without firing it. O(log n) amortized.
+    pub fn peek(&mut self) -> Option<Wakeup> {
+        self.purge();
+        self.heap.peek().map(|e| e.0)
+    }
+
+    /// The earliest live fire time. O(log n) amortized; for the
+    /// borrow-friendly `&self` variant restricted to one kind see
+    /// [`Self::next_time_of`].
+    pub fn next_time(&mut self) -> Option<f64> {
+        self.peek().map(|w| w.time)
+    }
+
+    /// The earliest live fire time among wakeups of `kind`. O(n) scan
+    /// over the heap — fine for the small index-style calendars (defer
+    /// queues, sync timers) this serves, and deterministic regardless
+    /// of heap layout because an unordered min is order-independent.
+    pub fn next_time_of(&self, kind: EventKind) -> Option<f64> {
+        let mut best: Option<(f64, u64)> = None;
+        for e in self.heap.iter() {
+            let w = &e.0;
+            if w.kind != kind || !self.live.contains(&w.seq) {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((t, s)) => match w.time.total_cmp(&t) {
+                    Ordering::Less => true,
+                    Ordering::Equal => w.seq < s,
+                    Ordering::Greater => false,
+                },
+            };
+            if better {
+                best = Some((w.time, w.seq));
+            }
+        }
+        best.map(|(t, _)| t)
+    }
+
+    /// Fire the earliest live wakeup. Fire times are monotone
+    /// non-decreasing over the calendar's lifetime (debug-asserted);
+    /// registering a wakeup earlier than the last fired instant is a
+    /// scheduling bug in the registrant.
+    pub fn pop(&mut self) -> Option<Wakeup> {
+        self.purge();
+        let w = self.heap.pop()?.0;
+        self.live.remove(&w.seq);
+        debug_assert!(
+            self.last_fired.is_none_or(|last| !(w.time < last)),
+            "calendar fired backwards: {} after {:?}",
+            w.time,
+            self.last_fired
+        );
+        self.last_fired = Some(w.time);
+        self.fired += 1;
+        Some(w)
+    }
+
+    /// Number of live (pending) wakeups.
+    pub fn len(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live.is_empty()
+    }
+
+    /// Total wakeups fired over the calendar's lifetime.
+    pub fn fired(&self) -> u64 {
+        self.fired
+    }
+
+    /// The instant of the most recent fire, if any.
+    pub fn last_fired(&self) -> Option<f64> {
+        self.last_fired
+    }
+
+    /// Drop every pending wakeup and re-anchor the monotonicity check
+    /// (a fresh schedule may start earlier than the old one ended).
+    /// Seqs keep counting up so tokens issued before the clear stay
+    /// inert rather than aliasing new wakeups.
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.live.clear();
+        self.cancelled.clear();
+        self.last_fired = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_in_time_then_registration_order() {
+        let mut cal = EventCalendar::new();
+        cal.register(3.0, EventKind::Arrival, 30);
+        cal.register(1.0, EventKind::Arrival, 10);
+        cal.register(2.0, EventKind::Arrival, 20);
+        cal.register(1.0, EventKind::SessionReturn, 11); // tie: after 10
+        let order: Vec<u64> = std::iter::from_fn(|| cal.pop()).map(|w| w.payload).collect();
+        assert_eq!(order, vec![10, 11, 20, 30]);
+        assert_eq!(cal.fired(), 4);
+        assert!(cal.is_empty());
+    }
+
+    #[test]
+    fn cancellation_is_lazy_and_exact() {
+        let mut cal = EventCalendar::new();
+        let a = cal.register(1.0, EventKind::DeferDeadline, 1);
+        let b = cal.register(2.0, EventKind::DeferDeadline, 2);
+        assert_eq!(cal.len(), 2);
+        assert!(cal.cancel(a));
+        assert!(!cal.cancel(a), "double-cancel is inert");
+        assert_eq!(cal.len(), 1);
+        assert_eq!(cal.next_time(), Some(2.0), "cancelled top is skipped");
+        let w = cal.pop().unwrap();
+        assert_eq!(w.payload, 2);
+        assert!(!cal.cancel(b), "fired tokens are inert");
+        assert!(cal.pop().is_none());
+    }
+
+    #[test]
+    fn kind_filtered_queries_ignore_other_kinds_and_cancelled() {
+        let mut cal = EventCalendar::new();
+        cal.register(5.0, EventKind::AutoscaleTick, 0);
+        let d = cal.register(3.0, EventKind::DeferDeadline, 0);
+        cal.register(4.0, EventKind::DeferDeadline, 1);
+        assert_eq!(cal.next_time_of(EventKind::DeferDeadline), Some(3.0));
+        assert_eq!(cal.next_time_of(EventKind::AutoscaleTick), Some(5.0));
+        assert_eq!(cal.next_time_of(EventKind::FederationSync), None);
+        cal.cancel(d);
+        assert_eq!(cal.next_time_of(EventKind::DeferDeadline), Some(4.0));
+    }
+
+    #[test]
+    fn clear_re_anchors_and_keeps_old_tokens_inert() {
+        let mut cal = EventCalendar::new();
+        let stale = cal.register(10.0, EventKind::Arrival, 0);
+        cal.pop().unwrap();
+        cal.clear();
+        // A fresh schedule may start before the old one ended.
+        cal.register(1.0, EventKind::Arrival, 7);
+        assert!(!cal.cancel(stale), "pre-clear tokens must not alias new wakeups");
+        assert_eq!(cal.pop().unwrap().payload, 7);
+    }
+
+    #[test]
+    fn peek_matches_pop_without_consuming() {
+        let mut cal = EventCalendar::new();
+        cal.register(2.5, EventKind::DeliveryAck, 9);
+        let p = cal.peek().unwrap();
+        assert_eq!((p.time, p.payload), (2.5, 9));
+        assert_eq!(cal.len(), 1, "peek must not consume");
+        let w = cal.pop().unwrap();
+        assert_eq!(w.seq, p.seq);
+    }
+}

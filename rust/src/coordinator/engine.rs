@@ -15,6 +15,7 @@ use crate::model::latency::LatencyModel;
 use crate::telemetry::Telemetry;
 use crate::workload::RequestSpec;
 
+use super::calendar::{EventCalendar, EventKind};
 use super::kv::KvCacheManager;
 use super::metrics::{IterationSample, Metrics};
 use super::request::{Phase, Request, RequestId};
@@ -40,6 +41,12 @@ pub struct EngineConfig {
     /// by default: off, the engine is bit-identical to pre-session
     /// behavior even on session-annotated traces.
     pub park_prefixes: bool,
+    /// Drive trace arrivals from the legacy reverse-sorted pending
+    /// vector instead of the event calendar. Both paths are proven
+    /// bit-identical by `tests/calendar.rs`; the toggle exists so the
+    /// parity suite can keep exercising the pre-calendar stepping until
+    /// the legacy path is deleted.
+    pub legacy_stepping: bool,
 }
 
 impl Default for EngineConfig {
@@ -52,6 +59,7 @@ impl Default for EngineConfig {
             prefer_swap: true,
             initial_horizon: 60.0,
             park_prefixes: false,
+            legacy_stepping: false,
         }
     }
 }
@@ -69,6 +77,9 @@ pub struct Engine<B: ExecutionBackend, C: Clock> {
     active: Vec<RequestId>,
     /// Pending trace arrivals, reverse-sorted so pop() yields earliest.
     pending: Vec<RequestSpec>,
+    /// Event timeline mirroring `pending` (one Arrival/SessionReturn
+    /// wakeup per spec, in pop order) — the calendar stepping path.
+    calendar: EventCalendar,
     metrics: Metrics,
     /// Running average of request completion time (the Δt estimate).
     completion_avg: f64,
@@ -103,6 +114,7 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
             requests: Vec::new(),
             active: Vec::new(),
             pending: Vec::new(),
+            calendar: EventCalendar::new(),
             metrics: Metrics::new(),
             completion_avg: 0.0,
             completions: 0,
@@ -196,6 +208,21 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
         }
         specs.sort_by(|a, b| b.arrival.total_cmp(&a.arrival));
         self.pending = specs;
+        if !self.cfg.legacy_stepping {
+            // Mirror the pending vector onto the calendar in pop order
+            // (earliest first; ties keep the pop order of the stable
+            // descending sort), so `(time, seq)` firing order equals
+            // the legacy `pending.pop()` order exactly.
+            self.calendar.clear();
+            for s in self.pending.iter().rev() {
+                let kind = if s.session.is_some_and(|sess| sess.is_returning()) {
+                    EventKind::SessionReturn
+                } else {
+                    EventKind::Arrival
+                };
+                self.calendar.register(s.arrival, kind, s.id as u64);
+            }
+        }
     }
 
     /// Submit one request immediately (live serving mode). Returns its id.
@@ -236,12 +263,34 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
 
     fn ingest_arrivals(&mut self) -> anyhow::Result<()> {
         let now = self.clock.now();
-        while self.pending.last().is_some_and(|s| s.arrival <= now) {
-            // lint:allow(D6, last() just returned Some in the loop condition)
-            let spec = self.pending.pop().unwrap();
-            self.submit(spec)?;
+        if self.cfg.legacy_stepping {
+            while self.pending.last().is_some_and(|s| s.arrival <= now) {
+                // lint:allow(D6, last() just returned Some in the loop condition)
+                let spec = self.pending.pop().unwrap();
+                self.submit(spec)?;
+            }
+        } else {
+            // The calendar fires in the same order the legacy path
+            // pops, so draining both in lockstep keeps `pending` and
+            // the timeline consistent.
+            while self.calendar.peek().is_some_and(|w| w.time <= now) {
+                self.calendar.pop();
+                // lint:allow(D6, the calendar holds one wakeup per pending spec)
+                let spec = self.pending.pop().unwrap();
+                self.submit(spec)?;
+            }
         }
         Ok(())
+    }
+
+    /// Earliest pending trace arrival — the legacy vector peek or the
+    /// calendar's next live wakeup, depending on the stepping mode.
+    fn next_arrival_time(&mut self) -> Option<f64> {
+        if self.cfg.legacy_stepping {
+            self.pending.last().map(|s| s.arrival)
+        } else {
+            self.calendar.next_time()
+        }
     }
 
     /// Preempt `id` out of the running batch: swap if preferred and
@@ -385,9 +434,8 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
         self.ingest_arrivals()?;
 
         if self.active.is_empty() {
-            match self.pending.last() {
-                Some(next) => {
-                    let t = next.arrival;
+            match self.next_arrival_time() {
+                Some(t) => {
                     self.clock.advance_to(t);
                     self.metrics.ended_at = self.clock.now();
                     return Ok(true);
@@ -568,11 +616,8 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
                 // Everything waiting couldn't be admitted (e.g. one giant
                 // request larger than memory) — drop the smallest-context
                 // blocked request to avoid livelock, or jump time.
-                match self.pending.last() {
-                    Some(next) => {
-                        let t = next.arrival;
-                        self.clock.advance_to(t)
-                    }
+                match self.next_arrival_time() {
+                    Some(t) => self.clock.advance_to(t),
                     None => anyhow::bail!(
                         "livelock: {} active requests, none runnable",
                         self.active.len()

@@ -2,11 +2,13 @@
 //! scheduling policies (FCFS / Round-Robin / Andes), and the continuous
 //! batching engine that ties them to an execution backend.
 
+pub mod calendar;
 pub mod engine;
 pub mod kv;
 pub mod metrics;
 pub mod request;
 pub mod sched;
 
+pub use calendar::{EventCalendar, EventKind, Wakeup, WakeupToken};
 pub use kv::{KvCacheManager, KvResidence};
 pub use request::{Phase, Request, RequestId};

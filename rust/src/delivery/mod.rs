@@ -56,6 +56,7 @@ use std::collections::VecDeque;
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::calendar::{EventCalendar, EventKind};
 use crate::gateway::pacing::{PacingConfig, TokenPacer};
 use crate::qoe::spec::QoeSpec;
 use crate::util::rng::{splitmix64, Rng};
@@ -76,6 +77,10 @@ pub struct NetworkConfig {
     /// Root seed for per-request link draws; combined with the request
     /// id so each "user" gets an independent, reproducible link.
     pub seed: u64,
+    /// Drain acks from the legacy in-order scan instead of the event
+    /// calendar (DESIGN.md §14). Both paths are bit-identical; the
+    /// toggle exists for the step-vs-calendar parity suite.
+    pub legacy_stepping: bool,
 }
 
 impl Default for NetworkConfig {
@@ -86,6 +91,7 @@ impl Default for NetworkConfig {
             adaptive_lead: false,
             adaptive: AdaptiveLeadConfig::default(),
             seed: 0xA11D_E500,
+            legacy_stepping: false,
         }
     }
 }
@@ -204,18 +210,30 @@ pub fn deliver_request(
     let mut client = ClientBuffer::new(spec);
     // (ack arrival at server, observed transit) for sent tokens; acks
     // ride the deterministic return path, so they stay in send order.
+    // `acks` serves the legacy path; the calendar mirrors it
+    // event-for-event (the observed transit travels in the payload
+    // bits), so draining either structure observes identical values.
     let mut acks: VecDeque<(f64, f64)> = VecDeque::new();
+    let mut ack_calendar = EventCalendar::new();
     let mut releases = Vec::with_capacity(gen_times.len());
     let mut arrivals = Vec::with_capacity(gen_times.len());
     for &g in gen_times {
         if let Some(ctl) = controller.as_mut() {
             let horizon = g.max(pacer.last_release());
-            while let Some(&(ack_at, transit)) = acks.front() {
-                if ack_at > horizon {
-                    break;
+            if cfg.legacy_stepping {
+                while let Some(&(ack_at, transit)) = acks.front() {
+                    if ack_at > horizon {
+                        break;
+                    }
+                    ctl.observe(transit);
+                    acks.pop_front();
                 }
-                ctl.observe(transit);
-                acks.pop_front();
+            } else {
+                while ack_calendar.peek().is_some_and(|w| w.time <= horizon) {
+                    // lint:allow(D6, peek() just returned a due wakeup)
+                    let w = ack_calendar.pop().unwrap();
+                    ctl.observe(f64::from_bits(w.payload));
+                }
             }
             pacer.set_lead(ctl.lead());
         }
@@ -226,7 +244,13 @@ pub fn deliver_request(
         debug_assert_eq!(released, 1, "exactly the pushed token releases at its due time");
         let transit = net.send(due);
         client.receive(transit.arrived_at);
-        acks.push_back((transit.arrived_at + profile.base_latency, transit.arrived_at - due));
+        let ack_at = transit.arrived_at + profile.base_latency;
+        let observed = transit.arrived_at - due;
+        if cfg.legacy_stepping {
+            acks.push_back((ack_at, observed));
+        } else {
+            ack_calendar.register(ack_at, EventKind::DeliveryAck, observed.to_bits());
+        }
         releases.push(due);
         arrivals.push(transit.arrived_at);
     }
@@ -339,6 +363,25 @@ mod tests {
         );
         assert_eq!(out.release_times, gen);
         assert_eq!(out.client_arrivals, gen);
+    }
+
+    #[test]
+    fn legacy_and_calendar_ack_paths_agree() {
+        // The calendar drain must observe exactly the acks the legacy
+        // scan does, at the same horizons, so the adaptive schedule is
+        // bit-identical either way.
+        let sp = spec();
+        let pacing = PacingConfig { rate_factor: 1.0, lead_tokens: 4 };
+        let mut cfg = cfg_with(NetworkProfile::lte());
+        cfg.adaptive_lead = true;
+        let gen: Vec<f64> = (0..150).map(|i| 0.4 + 0.03 * i as f64).collect();
+        let calendar_out = deliver_request(&sp, true, &pacing, &cfg, 23, &gen);
+        cfg.legacy_stepping = true;
+        let legacy_out = deliver_request(&sp, true, &pacing, &cfg, 23, &gen);
+        assert_eq!(legacy_out.release_times, calendar_out.release_times);
+        assert_eq!(legacy_out.client_arrivals, calendar_out.client_arrivals);
+        assert_eq!(legacy_out.final_lead, calendar_out.final_lead);
+        assert_eq!(legacy_out.client_qoe.to_bits(), calendar_out.client_qoe.to_bits());
     }
 
     #[test]

@@ -7,6 +7,11 @@
 //! counts, mean and p10 QoE over served requests, mean QoE counting
 //! rejects as zero, and the fraction of tokens delivered ahead of the
 //! digestion deadline before/after delivery shaping.
+//!
+//! The 24-cell grid fans out over [`super::shard::run_grid`]
+//! (`--shards N`); every cell is a self-contained simulation, and the
+//! CSV/report/telemetry are assembled from the merged results in cell
+//! order, so the artifacts are byte-identical at any shard count.
 
 use anyhow::Result;
 
@@ -24,8 +29,9 @@ use crate::util::stats::percentile;
 use crate::workload::{ArrivalProcess, Dataset, QoeTrace, Workload};
 
 use super::runner::estimate_capacity;
-use super::ExpCtx;
+use super::{shard, ExpCtx};
 
+#[derive(Clone, Copy)]
 struct Variant {
     name: &'static str,
     admission: bool,
@@ -41,6 +47,26 @@ struct Cell {
     reject_frac: f64,
     early_raw: f64,
     early_shaped: f64,
+}
+
+/// One cell of the sharded grid: arrivals × load × variant.
+struct GridCell {
+    alabel: &'static str,
+    cv: f64,
+    load: f64,
+    variant: Variant,
+}
+
+/// Everything a worker brings back from one cell; the CSV, report, and
+/// telemetry artifacts are assembled from these post-merge so file
+/// output order never depends on thread scheduling.
+struct CellOut {
+    cell: Cell,
+    csv_row: Vec<String>,
+    line: String,
+    /// `(trace jsonl, snapshot csv, event count)` from the single
+    /// instrumented stress cell, when `--trace-out` is set.
+    telemetry: Option<(String, String, usize)>,
 }
 
 pub fn ext_gateway(ctx: &ExpCtx) -> Result<String> {
@@ -62,6 +88,113 @@ pub fn ext_gateway(ctx: &ExpCtx) -> Result<String> {
         Variant { name: "pacing", admission: false, pacing: true },
         Variant { name: "full", admission: true, pacing: true },
     ];
+    let mut grid: Vec<GridCell> = Vec::new();
+    for (alabel, cv) in [("poisson", 1.0), ("gamma-cv3", 3.0)] {
+        for load in [1.0, 2.0, 4.0] {
+            for variant in variants {
+                grid.push(GridCell { alabel, cv, load, variant });
+            }
+        }
+    }
+
+    let outs = shard::run_grid(&grid, ctx.shards, |_, g| -> Result<CellOut> {
+        let v = g.variant;
+        let rate = capacity * g.load;
+        // Each cell regenerates its (seeded) trace so cells stay fully
+        // independent across worker threads.
+        let trace = Workload {
+            dataset: Dataset::ShareGpt,
+            arrivals: if g.cv == 1.0 {
+                ArrivalProcess::Poisson { rate }
+            } else {
+                ArrivalProcess::Gamma { rate, cv: g.cv }
+            },
+            qoe_trace: QoeTrace::TextReading,
+            num_requests: n,
+            seed: 42,
+        }
+        .generate();
+        let mut cluster = Cluster::new(
+            replicas,
+            engine_cfg.clone(),
+            latency.clone(),
+            &sched,
+            RoutingPolicy::QoeAware,
+        );
+        let mut gcfg = GatewayConfig::default();
+        gcfg.admission_enabled = v.admission;
+        gcfg.pacing_enabled = v.pacing;
+        gcfg.surge.baseline_rate = capacity;
+        // `--trace-out` instruments exactly the stress cell (4×
+        // Gamma-burst, full gateway) — the cell the shape checks
+        // interrogate; its artifacts are written post-merge.
+        let instrument = ctx.trace_out.is_some()
+            && g.alabel == "gamma-cv3"
+            && g.load == 4.0
+            && v.name == "full";
+        let telemetry = if instrument {
+            Telemetry::new(&TelemetryConfig {
+                enabled: true,
+                snapshot_interval: 1.0,
+                ..TelemetryConfig::default()
+            })
+        } else {
+            Telemetry::disabled()
+        };
+        telemetry.set_time_domain("sim");
+        cluster.set_telemetry(telemetry.clone());
+        let mut gw = Gateway::new(cluster, gcfg);
+        gw.set_telemetry(telemetry.clone());
+        let res = gw.run_trace(trace)?;
+        let served: Vec<f64> = res.served.iter().map(|s| s.paced_qoe).collect();
+        let (early_raw, early_shaped) = res.early_token_fractions();
+        let cell = Cell {
+            arrivals: g.alabel,
+            load: g.load,
+            variant: v.name,
+            mean_served: res.mean_served_qoe(),
+            reject_frac: res.rejected_fraction(),
+            early_raw,
+            early_shaped,
+        };
+        let csv_row = vec![
+            g.alabel.to_string(),
+            format!("{}", g.load),
+            v.name.to_string(),
+            format!("{}", served.len()),
+            format!("{}", res.rejections.len()),
+            format!("{:.4}", cell.reject_frac),
+            format!("{:.4}", cell.mean_served),
+            format!("{:.4}", percentile(&served, 10.0)),
+            format!("{:.4}", res.mean_qoe_incl_rejects()),
+            format!("{early_raw:.4}"),
+            format!("{early_shaped:.4}"),
+            format!("{}", res.stats.surge_transitions),
+        ];
+        let line = format!(
+            "  {:<10} {:.0}x {:<10} served {:<4} rejected {:<4} \
+             QoE {:.3} (p10 {:.3}, incl-rej {:.3}) early {:.2}→{:.2}\n",
+            g.alabel,
+            g.load,
+            v.name,
+            served.len(),
+            res.rejections.len(),
+            cell.mean_served,
+            percentile(&served, 10.0),
+            res.mean_qoe_incl_rejects(),
+            early_raw,
+            early_shaped,
+        );
+        let telemetry_out = instrument.then(|| {
+            (
+                telemetry.trace_jsonl(),
+                telemetry.snapshot_csv(),
+                telemetry.trace_stats().0,
+            )
+        });
+        Ok(CellOut { cell, csv_row, line, telemetry: telemetry_out })
+    });
+
     let mut csv = Csv::new(&[
         "arrivals",
         "load",
@@ -80,108 +213,24 @@ pub fn ext_gateway(ctx: &ExpCtx) -> Result<String> {
         "ext-gateway — {replicas}-replica Andes cluster, aggregate capacity ≈ {capacity:.1} req/s\n"
     );
     let mut cells: Vec<Cell> = Vec::new();
-
-    for (alabel, cv) in [("poisson", 1.0), ("gamma-cv3", 3.0)] {
-        for load in [1.0, 2.0, 4.0] {
-            let rate = capacity * load;
-            let trace = Workload {
-                dataset: Dataset::ShareGpt,
-                arrivals: if cv == 1.0 {
-                    ArrivalProcess::Poisson { rate }
-                } else {
-                    ArrivalProcess::Gamma { rate, cv }
-                },
-                qoe_trace: QoeTrace::TextReading,
-                num_requests: n,
-                seed: 42,
-            }
-            .generate();
-            for v in &variants {
-                let mut cluster = Cluster::new(
-                    replicas,
-                    engine_cfg.clone(),
-                    latency.clone(),
-                    &sched,
-                    RoutingPolicy::QoeAware,
-                );
-                let mut gcfg = GatewayConfig::default();
-                gcfg.admission_enabled = v.admission;
-                gcfg.pacing_enabled = v.pacing;
-                gcfg.surge.baseline_rate = capacity;
-                // `--trace-out` instruments exactly the stress cell (4×
-                // Gamma-burst, full gateway) — the cell the shape checks
-                // interrogate — and exports its trace + snapshots below.
-                let instrument = ctx.trace_out.is_some()
-                    && alabel == "gamma-cv3"
-                    && load == 4.0
-                    && v.name == "full";
-                let telemetry = if instrument {
-                    Telemetry::new(&TelemetryConfig {
-                        enabled: true,
-                        snapshot_interval: 1.0,
-                        ..TelemetryConfig::default()
-                    })
-                } else {
-                    Telemetry::disabled()
-                };
-                telemetry.set_time_domain("sim");
-                cluster.set_telemetry(telemetry.clone());
-                let mut gw = Gateway::new(cluster, gcfg);
-                gw.set_telemetry(telemetry.clone());
-                let res = gw.run_trace(trace.clone())?;
-                if instrument {
-                    if let Some(path) = &ctx.trace_out {
-                        std::fs::write(path, telemetry.trace_jsonl())?;
-                        let csv_path = path.with_extension("metrics.csv");
-                        std::fs::write(&csv_path, telemetry.snapshot_csv())?;
-                        report.push_str(&format!(
-                            "  trace: {} ({} events) + {}\n",
-                            path.display(),
-                            telemetry.trace_stats().0,
-                            csv_path.display(),
-                        ));
-                    }
-                }
-                let served: Vec<f64> = res.served.iter().map(|s| s.paced_qoe).collect();
-                let (early_raw, early_shaped) = res.early_token_fractions();
-                let cell = Cell {
-                    arrivals: alabel,
-                    load,
-                    variant: v.name,
-                    mean_served: res.mean_served_qoe(),
-                    reject_frac: res.rejected_fraction(),
-                    early_raw,
-                    early_shaped,
-                };
-                csv.row(&[
-                    alabel.to_string(),
-                    format!("{load}"),
-                    v.name.to_string(),
-                    format!("{}", served.len()),
-                    format!("{}", res.rejections.len()),
-                    format!("{:.4}", cell.reject_frac),
-                    format!("{:.4}", cell.mean_served),
-                    format!("{:.4}", percentile(&served, 10.0)),
-                    format!("{:.4}", res.mean_qoe_incl_rejects()),
-                    format!("{early_raw:.4}"),
-                    format!("{early_shaped:.4}"),
-                    format!("{}", res.stats.surge_transitions),
-                ]);
-                report.push_str(&format!(
-                    "  {alabel:<10} {load:.0}x {:<10} served {:<4} rejected {:<4} \
-                     QoE {:.3} (p10 {:.3}, incl-rej {:.3}) early {:.2}→{:.2}\n",
-                    v.name,
-                    served.len(),
-                    res.rejections.len(),
-                    cell.mean_served,
-                    percentile(&served, 10.0),
-                    res.mean_qoe_incl_rejects(),
-                    early_raw,
-                    early_shaped,
-                ));
-                cells.push(cell);
-            }
+    for out in outs {
+        let out = out?;
+        if let (Some((jsonl, snapshots, events)), Some(path)) =
+            (&out.telemetry, &ctx.trace_out)
+        {
+            std::fs::write(path, jsonl)?;
+            let csv_path = path.with_extension("metrics.csv");
+            std::fs::write(&csv_path, snapshots)?;
+            report.push_str(&format!(
+                "  trace: {} ({} events) + {}\n",
+                path.display(),
+                events,
+                csv_path.display(),
+            ));
         }
+        csv.row(&out.csv_row);
+        report.push_str(&out.line);
+        cells.push(out.cell);
     }
     csv.write(&ctx.out_dir.join("ext_gateway.csv"))?;
 

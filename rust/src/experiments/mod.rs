@@ -16,6 +16,7 @@ pub mod robustness;
 pub mod runner;
 pub mod sensitivity;
 pub mod sessions;
+pub mod shard;
 
 use std::path::PathBuf;
 
@@ -32,6 +33,9 @@ pub struct ExpCtx {
     /// export their telemetry event trace as JSONL here, plus periodic
     /// metric snapshots next to it (`<stem>.metrics.csv`).
     pub trace_out: Option<PathBuf>,
+    /// Worker threads for grid-sharded experiments ([`shard::run_grid`]);
+    /// 1 runs every cell inline. Outputs are identical at any value.
+    pub shards: usize,
 }
 
 /// One registered experiment.

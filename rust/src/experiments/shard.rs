@@ -1,0 +1,106 @@
+//! Sharded grid runner: split whole-simulation grids across
+//! `std::thread` workers with a deterministic merge (DESIGN.md §14).
+//!
+//! Each cell of an experiment grid is an *entire* simulation — its own
+//! trace, cluster, and gateway — so cells share no mutable state and can
+//! run on any thread. Worker `w` of `n` takes cell indices `w, w + n,
+//! w + 2n, …`; results travel back over a channel tagged with their cell
+//! index and are merged into cell order before anything downstream (CSV
+//! rows, report lines, telemetry) is assembled. The output is therefore
+//! a pure function of the cell list — byte-identical for every shard
+//! count, which `rust/tests/calendar.rs` locks in.
+
+use std::sync::mpsc;
+
+/// Run `run(i, &cells[i])` for every cell, fanned out across `shards`
+/// worker threads, and return the outputs in cell order.
+///
+/// `shards <= 1` (or a grid of at most one cell) runs inline on the
+/// caller's thread — the zero-thread baseline the sharded path must
+/// match byte for byte.
+///
+/// # Panics
+///
+/// A panic in any worker aborts the run and propagates to the caller
+/// (via [`std::thread::scope`]); no partial result is returned.
+///
+/// ```
+/// use andes::experiments::shard::run_grid;
+/// let cells: Vec<u64> = (0..10).collect();
+/// let one = run_grid(&cells, 1, |i, c| i as u64 * 100 + c * c);
+/// let four = run_grid(&cells, 4, |i, c| i as u64 * 100 + c * c);
+/// assert_eq!(one, four);
+/// ```
+pub fn run_grid<C, T, F>(cells: &[C], shards: usize, run: F) -> Vec<T>
+where
+    C: Sync,
+    T: Send,
+    F: Fn(usize, &C) -> T + Sync,
+{
+    if shards <= 1 || cells.len() <= 1 {
+        return cells.iter().enumerate().map(|(i, c)| run(i, c)).collect();
+    }
+    let workers = shards.min(cells.len());
+    let mut slots: Vec<Option<T>> = Vec::with_capacity(cells.len());
+    slots.resize_with(cells.len(), || None);
+    let run = &run;
+    std::thread::scope(|scope| {
+        let (tx, rx) = mpsc::channel::<(usize, T)>();
+        for w in 0..workers {
+            let tx = tx.clone();
+            scope.spawn(move || {
+                for i in (w..cells.len()).step_by(workers) {
+                    // A failed send means the receiver is gone, i.e. the
+                    // collector below already panicked; nothing to do.
+                    let _ = tx.send((i, run(i, &cells[i])));
+                }
+            });
+        }
+        drop(tx);
+        for (i, out) in rx {
+            slots[i] = Some(out);
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| {
+            // lint:allow(D6, an empty slot means a worker panicked, which scope propagated)
+            s.expect("every cell index is covered by exactly one worker")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_order_is_cell_order_for_any_shard_count() {
+        let cells: Vec<usize> = (0..23).collect();
+        let baseline = run_grid(&cells, 1, |i, c| format!("{i}:{c}"));
+        for shards in [2, 3, 4, 8, 23, 64] {
+            assert_eq!(
+                run_grid(&cells, shards, |i, c| format!("{i}:{c}")),
+                baseline,
+                "shards={shards} must merge identically"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_grids() {
+        let none: Vec<u8> = vec![];
+        assert!(run_grid(&none, 4, |_, c| *c).is_empty());
+        assert_eq!(run_grid(&[7u8], 4, |i, c| (i, *c)), vec![(0, 7)]);
+    }
+
+    #[test]
+    fn index_matches_cell() {
+        let cells: Vec<usize> = (100..140).collect();
+        let out = run_grid(&cells, 5, |i, c| (i, *c));
+        for (i, (idx, c)) in out.iter().enumerate() {
+            assert_eq!(*idx, i);
+            assert_eq!(*c, 100 + i);
+        }
+    }
+}

@@ -114,6 +114,14 @@ pub struct PredictiveAutoscaler {
     last_eval: Option<f64>,
     scale_out_requests: u64,
     retirements: u64,
+    /// Latest `t` ever passed to [`Self::evaluate`] — watchdog state
+    /// for the clock-drift regression counter below.
+    last_t: f64,
+    /// Times `evaluate` observed `t` run backwards. The gateway clamps
+    /// sweep times to the serving-tier clock precisely so this stays 0
+    /// (see `tests/calendar.rs`); a nonzero count means a caller let
+    /// the defer sweep and the evaluation tick disagree on "now".
+    time_regressions: u64,
 }
 
 impl PredictiveAutoscaler {
@@ -132,6 +140,8 @@ impl PredictiveAutoscaler {
             last_eval: None,
             scale_out_requests: 0,
             retirements: 0,
+            last_t: f64::NEG_INFINITY,
+            time_regressions: 0,
         }
     }
 
@@ -152,6 +162,12 @@ impl PredictiveAutoscaler {
     /// Lifetime retirements planned.
     pub fn retirements(&self) -> u64 {
         self.retirements
+    }
+
+    /// Times the planner observed its clock run backwards (should stay
+    /// 0 — see the field docs).
+    pub fn time_regressions(&self) -> u64 {
+        self.time_regressions
     }
 
     /// The next time the planner's state changes on its own — a pending
@@ -205,6 +221,10 @@ impl PredictiveAutoscaler {
         if !self.cfg.enabled {
             return plan;
         }
+        if t < self.last_t {
+            self.time_regressions += 1;
+        }
+        self.last_t = t;
         // Commission every replica whose cold start has completed —
         // this happens on every call, not just at eval intervals.
         while self.pending.front().is_some_and(|&ready| ready <= t) {

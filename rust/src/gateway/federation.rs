@@ -72,6 +72,7 @@ use std::collections::VecDeque;
 
 use anyhow::Result;
 
+use crate::coordinator::calendar::{EventCalendar, EventKind, WakeupToken};
 use crate::coordinator::metrics::Metrics;
 use crate::workload::RequestSpec;
 
@@ -245,6 +246,13 @@ pub struct FederatedGateway<T: GatewayTarget> {
     /// front of the gateways).
     next_node: usize,
     last_sync: f64,
+    /// Event-time index (DESIGN.md §14): one DeferDeadline wakeup per
+    /// queued request (payload = owning node) plus at most one
+    /// FederationSync wakeup mirroring `last_sync + sync_interval`.
+    /// Unused on the legacy path.
+    calendar: EventCalendar,
+    /// Token for the single registered FederationSync wakeup, if any.
+    sync_wakeup: Option<WakeupToken>,
     rejections: Vec<Rejection>,
     stats: FederationStats,
 }
@@ -270,16 +278,20 @@ impl<T: GatewayTarget> FederatedGateway<T> {
                 queue: VecDeque::new(),
             })
             .collect();
-        FederatedGateway {
+        let mut fgw = FederatedGateway {
             cfg,
             fed,
             target,
             nodes,
             next_node: 0,
             last_sync: t0,
+            calendar: EventCalendar::new(),
+            sync_wakeup: None,
             rejections: Vec::new(),
             stats: FederationStats::default(),
-        }
+        };
+        fgw.reconcile_sync_wakeup();
+        fgw
     }
 
     pub fn target(&self) -> &T {
@@ -308,6 +320,28 @@ impl<T: GatewayTarget> FederatedGateway<T> {
         }
         self.last_sync = t;
         self.stats.syncs += 1;
+        self.reconcile_sync_wakeup();
+    }
+
+    /// Re-point the calendar's single FederationSync wakeup at
+    /// `last_sync + sync_interval`. `last_sync` only changes in
+    /// [`Self::sync_all`] (forced per-node refreshes leave the exchange
+    /// schedule alone), so reconciling there keeps the calendar index
+    /// exactly equal to the legacy path's live computation.
+    fn reconcile_sync_wakeup(&mut self) {
+        if self.cfg.legacy_stepping {
+            return;
+        }
+        if let Some(w) = self.sync_wakeup.take() {
+            self.calendar.cancel(w);
+        }
+        if self.nodes.len() > 1 {
+            self.sync_wakeup = Some(self.calendar.register(
+                self.last_sync + self.fed.sync_interval_secs,
+                EventKind::FederationSync,
+                0,
+            ));
+        }
     }
 
     /// Run the snapshot-exchange protocol at time `t`: a full exchange
@@ -345,20 +379,32 @@ impl<T: GatewayTarget> FederatedGateway<T> {
         }
     }
 
-    /// Earliest defer deadline across every node's queue.
+    /// Earliest defer deadline across every node's queue. The calendar
+    /// query and the legacy per-node scans compute the same value
+    /// (`enqueued_at + max_defer_wait`), so the two paths agree bit for
+    /// bit.
     fn next_defer_deadline(&self) -> Option<f64> {
-        self.nodes
-            .iter()
-            .filter_map(|n| earliest_deadline(&n.queue, self.cfg.admission.max_defer_wait))
-            .min_by(f64::total_cmp)
+        if self.cfg.legacy_stepping {
+            self.nodes
+                .iter()
+                .filter_map(|n| {
+                    earliest_deadline(&n.queue, self.cfg.admission.max_defer_wait)
+                })
+                .min_by(f64::total_cmp)
+        } else {
+            self.calendar.next_time_of(EventKind::DeferDeadline)
+        }
     }
 
     /// Next instant before `t` at which federation state changes on its
     /// own: a defer deadline, or (with real federation) a snapshot
     /// exchange falling due.
     fn next_event(&self, t: f64) -> Option<f64> {
-        let sync = (self.nodes.len() > 1)
-            .then_some(self.last_sync + self.fed.sync_interval_secs);
+        let sync = if self.cfg.legacy_stepping {
+            (self.nodes.len() > 1).then_some(self.last_sync + self.fed.sync_interval_secs)
+        } else {
+            self.calendar.next_time_of(EventKind::FederationSync)
+        };
         let ev = match (self.next_defer_deadline(), sync) {
             (Some(a), Some(b)) => a.min(b),
             (Some(a), None) | (None, Some(a)) => a,
@@ -433,6 +479,9 @@ impl<T: GatewayTarget> FederatedGateway<T> {
             if decision == AdmissionDecision::Admit {
                 // lint:allow(D6, front() returned Some when forming the decision)
                 let d = self.nodes[i].queue.pop_front().unwrap();
+                if let Some(w) = d.wakeup {
+                    self.calendar.cancel(w);
+                }
                 self.admit_to_target(i, d.spec)?;
                 continue;
             }
@@ -448,6 +497,9 @@ impl<T: GatewayTarget> FederatedGateway<T> {
                     // The decide above was the front's final chance.
                     // lint:allow(D6, due_idx == Some(0) proves the queue is non-empty)
                     let d = self.nodes[i].queue.pop_front().unwrap();
+                    if let Some(w) = d.wakeup {
+                        self.calendar.cancel(w);
+                    }
                     let waited = t - d.enqueued_at;
                     self.reject(d.spec, t, RejectReason::DeferTimeout { waited });
                 }
@@ -463,6 +515,9 @@ impl<T: GatewayTarget> FederatedGateway<T> {
                     };
                     // lint:allow(D6, k indexes into the queue per the find() above)
                     let d = self.nodes[i].queue.remove(k).unwrap();
+                    if let Some(w) = d.wakeup {
+                        self.calendar.cancel(w);
+                    }
                     if d2 == AdmissionDecision::Admit {
                         self.admit_to_target(i, d.spec)?;
                     } else {
@@ -548,9 +603,16 @@ impl<T: GatewayTarget> FederatedGateway<T> {
             }
             AdmissionDecision::Defer => {
                 let weight = self.cfg.admission.tier_weights.weight_for(&spec.qoe);
+                let wakeup = (!self.cfg.legacy_stepping).then(|| {
+                    self.calendar.register(
+                        t + self.cfg.admission.max_defer_wait,
+                        EventKind::DeferDeadline,
+                        owner as u64,
+                    )
+                });
                 enqueue_by_weight(
                     &mut self.nodes[owner].queue,
-                    DeferredRequest { spec, enqueued_at: t, weight },
+                    DeferredRequest { spec, enqueued_at: t, weight, wakeup },
                 );
                 self.stats.deferred += 1;
                 Ok(SubmitOutcome::Deferred)

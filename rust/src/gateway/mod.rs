@@ -93,6 +93,7 @@ use crate::backend::sim::SimBackend;
 use crate::backend::{Clock, ExecutionBackend, VirtualClock};
 use crate::cluster::{Cluster, RoutingPolicy};
 use crate::config::SchedulerConfig;
+use crate::coordinator::calendar::{EventCalendar, EventKind, WakeupToken};
 use crate::coordinator::engine::{Engine, EngineConfig};
 use crate::coordinator::metrics::{Metrics, RequestRecord};
 use crate::delivery::{deliver_request, NetworkConfig};
@@ -122,6 +123,11 @@ pub struct GatewayConfig {
     /// jitter-adaptive pacer lead; DESIGN.md §11). Disabled by default,
     /// which keeps every number bit-identical to the pacer-only path.
     pub network: NetworkConfig,
+    /// Compute sweep events from live per-subsystem scans (the
+    /// pre-calendar stepping) instead of the event-calendar index.
+    /// Proven bit-identical to the calendar path by `tests/calendar.rs`;
+    /// kept until the legacy scans are deleted.
+    pub legacy_stepping: bool,
 }
 
 impl Default for GatewayConfig {
@@ -135,6 +141,7 @@ impl Default for GatewayConfig {
             autoscale: AutoscaleConfig::default(),
             surge_routing: Some(RoutingPolicy::LeastLoaded),
             network: NetworkConfig::default(),
+            legacy_stepping: false,
         }
     }
 }
@@ -660,6 +667,11 @@ struct DeferredRequest {
     /// re-attempt admission first. Uniform weights degrade to plain
     /// FIFO.
     weight: f64,
+    /// Calendar wakeup for this request's admission deadline (None on
+    /// the legacy stepping path). Cancelled when the request leaves the
+    /// queue for any reason, so the calendar never carries a stale
+    /// deadline.
+    wakeup: Option<WakeupToken>,
 }
 
 /// Insert into a weight-ordered defer queue: descending weight, FIFO
@@ -690,6 +702,12 @@ pub struct Gateway<T: GatewayTarget> {
     /// The overflow cluster replaying primary rejections, if any.
     spill: Option<Cluster>,
     queue: VecDeque<DeferredRequest>,
+    /// Event-time index (DESIGN.md §14): one DeferDeadline wakeup per
+    /// queued request plus at most one AutoscaleTick wakeup mirroring
+    /// the planner's `next_event()`. Unused on the legacy path.
+    calendar: EventCalendar,
+    /// Token for the single registered AutoscaleTick wakeup, if any.
+    autoscale_wakeup: Option<WakeupToken>,
     rejections: Vec<Rejection>,
     stats: GatewayStats,
     /// Observation handle (defaults to the disabled no-op handle, which
@@ -711,10 +729,18 @@ impl<T: GatewayTarget> Gateway<T> {
             autoscale_unsupported: false,
             spill: None,
             queue: VecDeque::new(),
+            calendar: EventCalendar::new(),
+            autoscale_wakeup: None,
             rejections: Vec::new(),
             stats: GatewayStats::default(),
             telemetry: Telemetry::disabled(),
         }
+    }
+
+    /// The autoscaling planner (read-only; drives the drift regression
+    /// test in `tests/calendar.rs`).
+    pub fn autoscaler(&self) -> &PredictiveAutoscaler {
+        &self.autoscaler
     }
 
     /// Attach a telemetry handle. The gateway records admission
@@ -805,9 +831,16 @@ impl<T: GatewayTarget> Gateway<T> {
             }
             AdmissionDecision::Defer => {
                 let weight = self.cfg.admission.tier_weights.weight_for(&spec.qoe);
+                let wakeup = (!self.cfg.legacy_stepping).then(|| {
+                    self.calendar.register(
+                        t + self.cfg.admission.max_defer_wait,
+                        EventKind::DeferDeadline,
+                        spec.id as u64,
+                    )
+                });
                 enqueue_by_weight(
                     &mut self.queue,
-                    DeferredRequest { spec, enqueued_at: t, weight },
+                    DeferredRequest { spec, enqueued_at: t, weight, wakeup },
                 );
                 self.stats.deferred += 1;
                 self.telemetry.inc(
@@ -834,9 +867,16 @@ impl<T: GatewayTarget> Gateway<T> {
 
     /// Earliest defer deadline. The queue is ordered by tier weight, so
     /// the earliest enqueue need not be at the front; with uniform
-    /// weights the order is FIFO and this is the front's deadline.
+    /// weights the order is FIFO and this is the front's deadline. The
+    /// calendar query and the legacy queue scan compute the same value
+    /// (`enqueued_at + max_defer_wait`), so the two paths agree bit for
+    /// bit.
     fn next_defer_deadline(&self) -> Option<f64> {
-        earliest_deadline(&self.queue, self.cfg.admission.max_defer_wait)
+        if self.cfg.legacy_stepping {
+            earliest_deadline(&self.queue, self.cfg.admission.max_defer_wait)
+        } else {
+            self.calendar.next_time_of(EventKind::DeferDeadline)
+        }
     }
 
     /// Parked-prefix tokens usable by a request (0 for one-shot
@@ -849,9 +889,15 @@ impl<T: GatewayTarget> Gateway<T> {
 
     /// Next instant before `t` at which gateway state changes on its
     /// own: a defer deadline falling due, a cold start completing, or
-    /// a scale-in hold expiring.
+    /// a scale-in hold expiring. On the calendar path the autoscaler's
+    /// wakeup is read from the calendar index, which
+    /// [`Self::reconcile_autoscale_wakeup`] keeps equal to the
+    /// planner's live `next_event()` (planner state only changes inside
+    /// `autoscale_step`).
     fn next_sweep_event(&self, t: f64) -> Option<f64> {
-        let auto = if self.autoscale_unsupported {
+        let auto = if !self.cfg.legacy_stepping {
+            self.calendar.next_time_of(EventKind::AutoscaleTick)
+        } else if self.autoscale_unsupported {
             None
         } else {
             self.autoscaler.next_event()
@@ -915,8 +961,19 @@ impl<T: GatewayTarget> Gateway<T> {
     /// Run one autoscaler planning step at time `t` and apply the plan.
     fn autoscale_step(&mut self, t: f64) {
         if !self.cfg.autoscale.enabled || self.autoscale_unsupported {
+            self.reconcile_autoscale_wakeup();
             return;
         }
+        // The planner must never observe time running backwards. A
+        // sweep accounted at a defer deadline the serving tier already
+        // overshot passes the deadline itself as `t` while the tier
+        // clock sits later; evaluating there silently rewound the
+        // planner (stale cold-start commissioning, a regressing
+        // `last_eval`). Clamp to the tier clock so the defer sweep and
+        // the evaluation tick agree on "now" within one advance — the
+        // expiry itself stays accounted at the exact deadline by
+        // `flush_deferred`.
+        let t = t.max(self.target.now());
         let states = self.target.replica_states();
         let live = self.target.routable_replicas();
         let rate = self.surge.rate_at(t);
@@ -936,6 +993,28 @@ impl<T: GatewayTarget> Gateway<T> {
             {
                 break;
             }
+        }
+        self.reconcile_autoscale_wakeup();
+    }
+
+    /// Re-point the calendar's single AutoscaleTick wakeup at the
+    /// planner's `next_event()`. Planner state only changes inside
+    /// [`Self::autoscale_step`], so reconciling here (on every exit
+    /// path) keeps the calendar index exactly equal to the live scan
+    /// the legacy path performs.
+    fn reconcile_autoscale_wakeup(&mut self) {
+        if self.cfg.legacy_stepping {
+            return;
+        }
+        if let Some(w) = self.autoscale_wakeup.take() {
+            self.calendar.cancel(w);
+        }
+        if self.autoscale_unsupported {
+            return;
+        }
+        if let Some(ev) = self.autoscaler.next_event() {
+            self.autoscale_wakeup =
+                Some(self.calendar.register(ev, EventKind::AutoscaleTick, 0));
         }
     }
 
@@ -1125,6 +1204,9 @@ impl<T: GatewayTarget> Gateway<T> {
             if decision == AdmissionDecision::Admit {
                 // lint:allow(D6, front() returned Some at the top of the loop)
                 let d = self.queue.pop_front().unwrap();
+                if let Some(w) = d.wakeup {
+                    self.calendar.cancel(w);
+                }
                 let (id, tier, waited) =
                     (d.spec.id as u64, QoeTrace::tier_of(&d.spec.qoe), t - d.enqueued_at);
                 self.route(d.spec)?;
@@ -1151,6 +1233,9 @@ impl<T: GatewayTarget> Gateway<T> {
                     // it failed, so the deadline stands.
                     // lint:allow(D6, due_idx == Some(0) proves the queue is non-empty)
                     let d = self.queue.pop_front().unwrap();
+                    if let Some(w) = d.wakeup {
+                        self.calendar.cancel(w);
+                    }
                     let waited = t - d.enqueued_at;
                     self.reject_or_spill(d.spec, t, RejectReason::DeferTimeout { waited })?;
                     self.telemetry.set_gauge(
@@ -1179,6 +1264,9 @@ impl<T: GatewayTarget> Gateway<T> {
                     );
                     // lint:allow(D6, i indexes into the queue per the find() above)
                     let d = self.queue.remove(i).unwrap();
+                    if let Some(w) = d.wakeup {
+                        self.calendar.cancel(w);
+                    }
                     if d2 == AdmissionDecision::Admit {
                         let (id, tier, waited) =
                             (d.spec.id as u64, QoeTrace::tier_of(&d.spec.qoe), t - d.enqueued_at);

@@ -231,6 +231,12 @@ fn cmd_exp(argv: &[String]) -> i32 {
             "export telemetry traces from instrumented experiments (JSONL; \
              currently ext-gateway) plus metric snapshots beside it",
         ),
+        OptSpec::value(
+            "shards",
+            Some("1"),
+            "worker threads for grid-sharded experiments (outputs are \
+             byte-identical at any value)",
+        ),
     ];
     let about = "Regenerate paper tables and figures";
     let args = match Args::parse(argv, &specs) {
@@ -238,10 +244,18 @@ fn cmd_exp(argv: &[String]) -> i32 {
         Err(e) => return die_on_cli("exp", about, &specs, e),
     };
     let id = args.positional().first().cloned().unwrap_or_else(|| "all".into());
+    let shards: usize = match args.get("shards").unwrap().parse() {
+        Ok(s) if s >= 1 => s,
+        _ => {
+            eprintln!("error: --shards must be a positive integer");
+            return 2;
+        }
+    };
     let ctx = ExpCtx {
         out_dir: PathBuf::from(args.get("out").unwrap()),
         quick: args.has_flag("quick"),
         trace_out: args.get("trace-out").map(PathBuf::from),
+        shards,
     };
     match experiments::run(&id, &ctx) {
         Ok(report) => {
@@ -584,6 +598,12 @@ fn cmd_simulate(argv: &[String]) -> i32 {
             Some("1.0"),
             "sim-seconds between metric snapshots for --metrics-out",
         ),
+        OptSpec::value(
+            "shards",
+            Some("1"),
+            "run this many seed replications (seed, seed+1, ...) across worker \
+             threads, reported in seed order (plain engine runs only)",
+        ),
     ];
     let about = "One simulated serving run";
     let args = match Args::parse(argv, &specs) {
@@ -684,6 +704,15 @@ fn cmd_simulate(argv: &[String]) -> i32 {
         Ok(None) => 1.0,
         Err(e) => return die_on_cli("simulate", about, &specs, e),
     };
+    let shards = match args.get_usize("shards") {
+        Ok(Some(0)) => {
+            eprintln!("--shards must be >= 1");
+            return 2;
+        }
+        Ok(Some(s)) => s,
+        Ok(None) => 1,
+        Err(e) => return die_on_cli("simulate", about, &specs, e),
+    };
     let telemetry_on = trace_out.is_some() || metrics_out.is_some();
     let use_gateway = args.has_flag("gateway")
         || autoscale_arg.is_some()
@@ -713,6 +742,13 @@ fn cmd_simulate(argv: &[String]) -> i32 {
         eprintln!(
             "--gateways > 1 cannot be combined with --sessions/--park: prefix \
              parking and affinity are single-gateway features"
+        );
+        return 2;
+    }
+    if shards > 1 && (use_gateway || args.get("trace").is_some()) {
+        eprintln!(
+            "--shards > 1 fans seed replications of the plain engine run across \
+             threads; it cannot be combined with gateway modes or --trace"
         );
         return 2;
     }
@@ -1036,6 +1072,18 @@ fn cmd_simulate(argv: &[String]) -> i32 {
         num_requests: args.get_usize("n").unwrap().unwrap(),
         seed: args.get_u64("seed").unwrap().unwrap(),
     };
+    if shards > 1 {
+        // Seed replications sharded across threads; summaries print in
+        // seed order regardless of which worker finished first.
+        let seeds: Vec<u64> = (0..shards as u64).map(|i| run.seed + i).collect();
+        let summaries = experiments::shard::run_grid(&seeds, shards, |_, &seed| {
+            experiments::runner::SimRun { seed, ..run.clone() }.execute().summary()
+        });
+        for (seed, summary) in seeds.iter().zip(&summaries) {
+            println!("--- seed {seed} ---\n{summary}");
+        }
+        return 0;
+    }
     let m = run.execute();
     println!("{}", m.summary());
     0

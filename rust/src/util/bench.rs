@@ -131,6 +131,29 @@ impl Bencher {
         self.results.last().unwrap()
     }
 
+    /// Time a single invocation of `f` and record it as a
+    /// one-iteration case (mean == p50 == p99 == min == the one
+    /// measurement). For whole-simulation benchmarks that run for
+    /// seconds — far past the adaptive sampling loop's budget — where
+    /// one run is the measurement.
+    pub fn bench_once<T, F: FnOnce() -> T>(&mut self, name: &str, f: F) -> &BenchResult {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let elapsed = t0.elapsed();
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            mean: elapsed,
+            p50: elapsed,
+            p99: elapsed,
+            min: elapsed,
+        };
+        // lint:allow(D5, live per-case progress line is the bench harness contract)
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
@@ -178,6 +201,24 @@ mod tests {
         assert!(r.iters > 0);
         assert!(r.mean.as_nanos() > 0);
         assert!(r.p99 >= r.p50 || r.p99.as_nanos() + 50 >= r.p50.as_nanos());
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn bench_once_records_a_single_sample() {
+        let mut b = Bencher::quick();
+        let r = b.bench_once("one-shot", || {
+            let n = std::hint::black_box(1000u64);
+            let mut acc = 0u64;
+            for i in 0..n {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert_eq!(r.iters, 1);
+        assert_eq!(r.mean, r.p99);
+        assert_eq!(r.mean, r.min);
+        assert!(r.mean.as_nanos() > 0);
         assert_eq!(b.results().len(), 1);
     }
 

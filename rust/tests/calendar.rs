@@ -1,0 +1,669 @@
+//! Step-vs-calendar parity suite (DESIGN.md §14).
+//!
+//! The event calendar replaced every hand-rolled next-event scan in the
+//! simulation stack — engine arrival peeks, gateway defer-deadline
+//! sweeps, autoscaler ticks, federation sync timers, delivery ack
+//! drains. Each port kept the legacy path behind a `legacy_stepping`
+//! toggle; this suite drives the golden experiment cells through both
+//! paths and demands *bit-identical* results: per-request QoE, event
+//! traces, rejection streams, and summary metrics.
+//!
+//! Alongside parity: property tests for the calendar's ordering and
+//! cancellation invariants, shard-determinism for the grid runner, and
+//! a regression test for the defer-sweep clock drift the port fixed.
+
+use andes::backend::sim::SimBackend;
+use andes::backend::VirtualClock;
+use andes::cluster::{Cluster, RoutingPolicy};
+use andes::config::SchedulerConfig;
+use andes::coordinator::calendar::{EventCalendar, EventKind, WakeupToken};
+use andes::coordinator::engine::{Engine, EngineConfig};
+use andes::coordinator::metrics::Metrics;
+use andes::coordinator::sched::andes::AndesConfig;
+use andes::delivery::NetworkProfile;
+use andes::experiments::runner::{estimate_capacity, SchedKind};
+use andes::experiments::shard::run_grid;
+use andes::gateway::{
+    AutoscaleConfig, FederatedGateway, FederationConfig, Gateway, GatewayConfig,
+    GatewayRunResult, RejectReason, Rejection, ServedRequest,
+};
+use andes::model::gpu::a100_4x;
+use andes::model::latency::LatencyModel;
+use andes::model::llm::opt_66b;
+use andes::util::testing::check_prop;
+use andes::workload::{ArrivalProcess, Dataset, QoeTrace, SessionWorkload, Workload};
+
+// ---------------------------------------------------------- fingerprints
+
+/// Bit-exact rendering of one served request (floats as hex bit
+/// patterns, so two fingerprints agree iff every f64 agrees bitwise).
+fn fp_served(s: &ServedRequest) -> String {
+    format!(
+        "{}:{:x}:{:x}:{:x}:{}:{:x}:{}:{}:{}:{}:{}:{:x}",
+        s.id,
+        s.raw_qoe.to_bits(),
+        s.paced_qoe.to_bits(),
+        s.client_qoe.to_bits(),
+        s.stall_count,
+        s.stall_time.to_bits(),
+        s.retransmits,
+        s.disconnects,
+        s.raw_early_tokens,
+        s.paced_early_tokens,
+        s.output_tokens,
+        s.expected_tds.to_bits(),
+    )
+}
+
+fn fp_rejection(r: &Rejection) -> String {
+    format!("rej {}:{:x}:{:?}", r.id, r.time.to_bits(), r.reason)
+}
+
+/// Per-request engine records including the full token-delivery event
+/// trace (every token timestamp, bitwise).
+fn fp_metrics(m: &Metrics) -> String {
+    let mut out = String::new();
+    for r in &m.requests {
+        out.push_str(&format!(
+            "req {}:{}:{:x}:{}:{}:{:x}:{:x}:{:x}:{}:{:x}:{:?}:{} tt",
+            r.id,
+            r.spec_id,
+            r.arrival.to_bits(),
+            r.prompt_tokens,
+            r.output_tokens,
+            r.ttft.to_bits(),
+            r.final_qoe.to_bits(),
+            r.normalized_latency.to_bits(),
+            r.preemptions,
+            r.finished_at.to_bits(),
+            r.session,
+            r.prefix_hit_tokens,
+        ));
+        for t in &r.token_times {
+            out.push_str(&format!(" {:x}", t.to_bits()));
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "sum {}:{}:{}:{}:{}:{}:{}:{}:{}:{:x}:{:x}\n",
+        m.total_tokens,
+        m.total_preemptions,
+        m.swap_preemptions,
+        m.recompute_preemptions,
+        m.oom_preemptions,
+        m.prefixes_parked,
+        m.prefix_hits,
+        m.prefix_hit_tokens,
+        m.park_evictions,
+        m.started_at.to_bits(),
+        m.ended_at.to_bits(),
+    ));
+    out
+}
+
+/// Full-run fingerprint: served stream, rejection stream, summary
+/// counters, replica-seconds, and every per-replica request record.
+fn fp_gateway(res: &GatewayRunResult) -> String {
+    let mut out = String::new();
+    for s in &res.served {
+        out.push_str(&fp_served(s));
+        out.push('\n');
+    }
+    for s in &res.spilled {
+        out.push_str("spill ");
+        out.push_str(&fp_served(s));
+        out.push('\n');
+    }
+    for r in &res.rejections {
+        out.push_str(&fp_rejection(r));
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "stats {:?}\nrs {:x} {:x}\n",
+        res.stats,
+        res.replica_seconds.to_bits(),
+        res.spill_replica_seconds.to_bits(),
+    ));
+    for m in &res.per_replica {
+        out.push_str(&fp_metrics(m));
+    }
+    out
+}
+
+// ------------------------------------------------------- parity: engine
+
+fn engine_trace_fp(trace: Vec<andes::workload::RequestSpec>, legacy: bool) -> String {
+    let llm = opt_66b();
+    let gpu = a100_4x();
+    let latency = LatencyModel::for_deployment(&llm, &gpu);
+    let cfg = EngineConfig {
+        kv_capacity_tokens: llm.kv_capacity_tokens(&gpu),
+        swap_capacity_tokens: llm.swap_capacity_tokens(&gpu),
+        legacy_stepping: legacy,
+        ..EngineConfig::default()
+    };
+    let mut e = Engine::new(
+        cfg,
+        SimBackend::new(latency.clone()),
+        VirtualClock::default(),
+        SchedKind::andes_default().build(),
+        latency,
+    );
+    e.load_trace(trace);
+    fp_metrics(e.run_to_completion().unwrap())
+}
+
+#[test]
+fn engine_arrival_stream_parity() {
+    // The engine's pending-arrival peeks vs the calendar's Arrival /
+    // SessionReturn wakeups: identical per-request records and token
+    // traces on both a one-shot and a session trace.
+    let one_shot = Workload {
+        dataset: Dataset::ShareGpt,
+        arrivals: ArrivalProcess::Gamma { rate: 3.0, cv: 3.0 },
+        qoe_trace: QoeTrace::TextReading,
+        num_requests: 80,
+        seed: 42,
+    }
+    .generate();
+    let sessions = SessionWorkload {
+        num_sessions: 20,
+        arrivals: ArrivalProcess::Poisson { rate: 1.5 },
+        qoe_trace: QoeTrace::TextReading,
+        min_turns: 2,
+        max_turns: 4,
+        think_time_mean: 4.0,
+        seed: 42,
+    }
+    .generate();
+    for trace in [one_shot, sessions] {
+        let stepped = engine_trace_fp(trace.clone(), true);
+        let calendar = engine_trace_fp(trace, false);
+        assert_eq!(stepped, calendar, "engine step-vs-calendar parity broke");
+    }
+}
+
+// ------------------------------------------------ parity: golden cells
+
+fn golden_cluster(latency: &LatencyModel, park: bool, legacy: bool) -> Cluster {
+    let llm = opt_66b();
+    let gpu = a100_4x();
+    let engine_cfg = EngineConfig {
+        kv_capacity_tokens: llm.kv_capacity_tokens(&gpu),
+        swap_capacity_tokens: llm.swap_capacity_tokens(&gpu),
+        park_prefixes: park,
+        legacy_stepping: legacy,
+        ..EngineConfig::default()
+    };
+    let sched = SchedulerConfig::Andes(AndesConfig::default());
+    Cluster::new(2, engine_cfg, latency.clone(), &sched, RoutingPolicy::QoeAware)
+}
+
+#[test]
+fn gateway_stress_cell_parity() {
+    // The `ext-gateway` golden cell: gamma-burst (cv 3) at 2× capacity
+    // through the full gateway. Defer deadlines, autoscale queries, and
+    // pacing all exercise the calendar.
+    let llm = opt_66b();
+    let gpu = a100_4x();
+    let latency = LatencyModel::for_deployment(&llm, &gpu);
+    let capacity = estimate_capacity(&llm, &gpu, Dataset::ShareGpt) * 2.0;
+    let trace = Workload {
+        dataset: Dataset::ShareGpt,
+        arrivals: ArrivalProcess::Gamma { rate: capacity * 2.0, cv: 3.0 },
+        qoe_trace: QoeTrace::TextReading,
+        num_requests: 150,
+        seed: 42,
+    }
+    .generate();
+    let run = |legacy: bool| -> String {
+        let mut gcfg = GatewayConfig::default();
+        gcfg.surge.baseline_rate = capacity;
+        gcfg.legacy_stepping = legacy;
+        let mut gw = Gateway::new(golden_cluster(&latency, false, legacy), gcfg);
+        fp_gateway(&gw.run_trace(trace.clone()).unwrap())
+    };
+    assert_eq!(run(true), run(false), "gateway step-vs-calendar parity broke");
+}
+
+#[test]
+fn sessions_cell_parity() {
+    // The `ext-sessions` golden cell: 40 multi-turn sessions, prefix
+    // parking + affinity routing, pacing off. Think-time returns ride
+    // SessionReturn wakeups on the calendar path.
+    let llm = opt_66b();
+    let gpu = a100_4x();
+    let latency = LatencyModel::for_deployment(&llm, &gpu);
+    let capacity = estimate_capacity(&llm, &gpu, Dataset::ShareGpt) * 2.0;
+    let trace = SessionWorkload {
+        num_sessions: 40,
+        arrivals: ArrivalProcess::Poisson { rate: capacity * 1.3 / 3.0 },
+        qoe_trace: QoeTrace::TextReading,
+        min_turns: 2,
+        max_turns: 4,
+        think_time_mean: 4.0,
+        seed: 42,
+    }
+    .generate();
+    let run = |legacy: bool| -> String {
+        let mut cluster = golden_cluster(&latency, true, legacy);
+        cluster.set_session_affinity(true);
+        let mut gcfg = GatewayConfig::default();
+        gcfg.pacing_enabled = false;
+        gcfg.surge.baseline_rate = capacity;
+        gcfg.legacy_stepping = legacy;
+        let mut gw = Gateway::new(cluster, gcfg);
+        fp_gateway(&gw.run_trace(trace.clone()).unwrap())
+    };
+    assert_eq!(run(true), run(false), "sessions step-vs-calendar parity broke");
+}
+
+#[test]
+fn network_cell_parity() {
+    // The `ext-network` lte cell: session workload over a jittery
+    // last-mile link with the adaptive pacer lead. The delivery ack
+    // drain rides DeliveryAck wakeups on the calendar path.
+    let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+    let trace = SessionWorkload {
+        num_sessions: 15,
+        arrivals: ArrivalProcess::Poisson { rate: 1.0 },
+        qoe_trace: QoeTrace::TextReading,
+        min_turns: 2,
+        max_turns: 4,
+        think_time_mean: 3.0,
+        seed: 7,
+    }
+    .generate();
+    let run = |legacy: bool| -> String {
+        let ecfg = EngineConfig {
+            kv_capacity_tokens: 6000,
+            swap_capacity_tokens: 12_000,
+            legacy_stepping: legacy,
+            ..EngineConfig::default()
+        };
+        let cluster =
+            Cluster::new(2, ecfg, latency.clone(), &SchedulerConfig::Fcfs, RoutingPolicy::QoeAware);
+        let mut gcfg = GatewayConfig::default();
+        gcfg.surge.baseline_rate = 2.0;
+        gcfg.legacy_stepping = legacy;
+        gcfg.network.enabled = true;
+        gcfg.network.adaptive_lead = true;
+        gcfg.network.legacy_stepping = legacy;
+        gcfg.network = gcfg.network.clone().with_mix(vec![(NetworkProfile::lte(), 1.0)]);
+        let mut gw = Gateway::new(cluster, gcfg);
+        fp_gateway(&gw.run_trace(trace.clone()).unwrap())
+    };
+    assert_eq!(run(true), run(false), "network step-vs-calendar parity broke");
+}
+
+#[test]
+fn federation_parity() {
+    // Two federated gateways over the stress-cell cluster: sync timers
+    // ride FederationSync wakeups, per-node defer deadlines ride
+    // DeferDeadline wakeups.
+    let llm = opt_66b();
+    let gpu = a100_4x();
+    let latency = LatencyModel::for_deployment(&llm, &gpu);
+    let capacity = estimate_capacity(&llm, &gpu, Dataset::ShareGpt) * 2.0;
+    let trace = Workload {
+        dataset: Dataset::ShareGpt,
+        arrivals: ArrivalProcess::Gamma { rate: capacity * 2.0, cv: 3.0 },
+        qoe_trace: QoeTrace::TextReading,
+        num_requests: 120,
+        seed: 42,
+    }
+    .generate();
+    let run = |legacy: bool| -> String {
+        let mut gcfg = GatewayConfig::default();
+        gcfg.surge.baseline_rate = capacity;
+        gcfg.legacy_stepping = legacy;
+        let fed = FederationConfig {
+            gateways: 2,
+            sync_interval_secs: 0.25,
+            ..FederationConfig::default()
+        };
+        let mut gw = FederatedGateway::new(golden_cluster(&latency, false, legacy), gcfg, fed);
+        let res = gw.run_trace(trace.clone()).unwrap();
+        let mut out = String::new();
+        for s in &res.served {
+            out.push_str(&fp_served(s));
+            out.push('\n');
+        }
+        for r in &res.rejections {
+            out.push_str(&fp_rejection(r));
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "stats {:?}\nrs {:x}\n",
+            res.stats,
+            res.replica_seconds.to_bits()
+        ));
+        for m in &res.per_replica {
+            out.push_str(&fp_metrics(m));
+        }
+        out
+    };
+    assert_eq!(run(true), run(false), "federation step-vs-calendar parity broke");
+}
+
+// ------------------------------------------------- calendar invariants
+
+#[test]
+fn calendar_invariants_under_random_interleaving() {
+    // Random register/cancel/fire schedules against a brute-force
+    // model: fire order is exactly (time, seq), fire times are monotone
+    // non-decreasing, cancelled wakeups never fire, nothing is lost,
+    // nothing fires twice.
+    #[derive(Clone, Copy, PartialEq)]
+    enum State {
+        Live,
+        Cancelled,
+        Fired,
+    }
+    check_prop("calendar invariants", 300, |rng| {
+        let mut cal = EventCalendar::new();
+        // Model entry: (time, token, state); index == payload == seq order.
+        let mut model: Vec<(f64, WakeupToken, State)> = Vec::new();
+        let mut fired_count = 0u64;
+        let ops = 1 + rng.below(120);
+        for _ in 0..ops {
+            match rng.below(10) {
+                // Register (weighted): time >= last fired instant, with
+                // deliberate ties to exercise the seq tie-break.
+                0..=5 => {
+                    let base = cal.last_fired().unwrap_or(0.0);
+                    let time = base + (rng.below(8) as f64) * 0.25;
+                    let kinds = [
+                        EventKind::Arrival,
+                        EventKind::DeferDeadline,
+                        EventKind::AutoscaleTick,
+                        EventKind::DeliveryAck,
+                    ];
+                    let kind = kinds[rng.below(kinds.len() as u64) as usize];
+                    let token = cal.register(time, kind, model.len() as u64);
+                    model.push((time, token, State::Live));
+                }
+                // Cancel a random live wakeup (double-cancel is inert).
+                6..=7 => {
+                    let live: Vec<usize> = (0..model.len())
+                        .filter(|&i| model[i].2 == State::Live)
+                        .collect();
+                    if let Some(&i) = live.get(rng.below(live.len().max(1) as u64) as usize) {
+                        assert!(cal.cancel(model[i].1), "live token must cancel");
+                        assert!(!cal.cancel(model[i].1), "double-cancel must be inert");
+                        model[i].2 = State::Cancelled;
+                    }
+                }
+                // Fire the earliest live wakeup and check it against the
+                // model's brute-force minimum.
+                _ => {
+                    let expected = (0..model.len())
+                        .filter(|&i| model[i].2 == State::Live)
+                        .min_by(|&a, &b| model[a].0.total_cmp(&model[b].0).then(a.cmp(&b)));
+                    let before = cal.last_fired();
+                    match (cal.pop(), expected) {
+                        (Some(w), Some(i)) => {
+                            assert_eq!(w.payload as usize, i, "fired out of (time, seq) order");
+                            assert_eq!(w.time.to_bits(), model[i].0.to_bits());
+                            assert!(
+                                before.is_none_or(|last| w.time >= last),
+                                "fire times must be monotone non-decreasing"
+                            );
+                            model[i].2 = State::Fired;
+                            fired_count += 1;
+                        }
+                        (None, None) => {}
+                        (got, want) => panic!(
+                            "pop() disagreed with the model: got {:?}, wanted index {:?}",
+                            got.map(|w| w.payload),
+                            want
+                        ),
+                    }
+                }
+            }
+            let live_in_model = model.iter().filter(|e| e.2 == State::Live).count();
+            assert_eq!(cal.len(), live_in_model, "len() must count exactly the live wakeups");
+        }
+        // Drain: every remaining live wakeup fires exactly once, in
+        // (time, seq) order; cancelled ones never surface.
+        let mut remaining: Vec<usize> =
+            (0..model.len()).filter(|&i| model[i].2 == State::Live).collect();
+        remaining.sort_by(|&a, &b| model[a].0.total_cmp(&model[b].0).then(a.cmp(&b)));
+        for &i in &remaining {
+            let w = cal.pop().expect("a live wakeup was lost");
+            assert_eq!(w.payload as usize, i, "drain fired out of order");
+            model[i].2 = State::Fired;
+            fired_count += 1;
+        }
+        assert!(cal.pop().is_none(), "a cancelled or fired wakeup surfaced twice");
+        assert_eq!(cal.fired(), fired_count);
+        assert_eq!(
+            fired_count as usize,
+            model.iter().filter(|e| e.2 == State::Fired).count()
+        );
+    });
+}
+
+#[test]
+fn next_time_of_matches_filtered_model() {
+    // The &self kind-filtered query must agree with a brute-force scan
+    // regardless of heap layout, registration order, or cancellations.
+    check_prop("next_time_of", 200, |rng| {
+        let mut cal = EventCalendar::new();
+        let mut entries: Vec<(f64, EventKind, WakeupToken, bool)> = Vec::new();
+        let kinds = [
+            EventKind::DeferDeadline,
+            EventKind::AutoscaleTick,
+            EventKind::FederationSync,
+        ];
+        for _ in 0..rng.below(60) {
+            let time = (rng.below(20) as f64) * 0.5;
+            let kind = kinds[rng.below(3) as usize];
+            let token = cal.register(time, kind, 0);
+            let cancel = rng.below(4) == 0;
+            if cancel {
+                cal.cancel(token);
+            }
+            entries.push((time, kind, token, cancel));
+        }
+        for kind in kinds {
+            let want = entries
+                .iter()
+                .filter(|(_, k, _, cancelled)| *k == kind && !cancelled)
+                .map(|(t, ..)| *t)
+                .min_by(f64::total_cmp);
+            assert_eq!(
+                cal.next_time_of(kind).map(f64::to_bits),
+                want.map(f64::to_bits),
+                "kind-filtered minimum diverged from the model"
+            );
+        }
+    });
+}
+
+// ------------------------------------------------- shard determinism
+
+#[test]
+fn shard_counts_are_byte_identical() {
+    // Six reduced gateway cells producing (JSONL trace, summary CSV)
+    // pairs: the concatenated artifacts must be byte-identical between
+    // shards=1 and shards=4, across repeated runs.
+    let llm = opt_66b();
+    let gpu = a100_4x();
+    let latency = LatencyModel::for_deployment(&llm, &gpu);
+    let capacity = estimate_capacity(&llm, &gpu, Dataset::ShareGpt) * 2.0;
+    let cells: Vec<(f64, bool)> = vec![
+        (1.0, false),
+        (1.0, true),
+        (2.0, false),
+        (2.0, true),
+        (4.0, false),
+        (4.0, true),
+    ];
+    let run_cells = |shards: usize| -> (String, String) {
+        let outs = run_grid(&cells, shards, |i, &(load, pacing)| {
+            let trace = Workload {
+                dataset: Dataset::ShareGpt,
+                arrivals: ArrivalProcess::Gamma { rate: capacity * load, cv: 3.0 },
+                qoe_trace: QoeTrace::TextReading,
+                num_requests: 60,
+                seed: 42 + i as u64,
+            }
+            .generate();
+            let mut gcfg = GatewayConfig::default();
+            gcfg.pacing_enabled = pacing;
+            gcfg.surge.baseline_rate = capacity;
+            let mut gw = Gateway::new(golden_cluster(&latency, false, false), gcfg);
+            let res = gw.run_trace(trace).unwrap();
+            let mut jsonl = String::new();
+            for s in &res.served {
+                jsonl.push_str(&format!(
+                    "{{\"cell\":{i},\"id\":{},\"qoe\":\"{:x}\"}}\n",
+                    s.id,
+                    s.paced_qoe.to_bits()
+                ));
+            }
+            let csv = format!(
+                "{i},{load},{pacing},{},{},{:x}\n",
+                res.served.len(),
+                res.rejections.len(),
+                res.mean_served_qoe().to_bits()
+            );
+            (jsonl, csv)
+        });
+        let mut jsonl = String::new();
+        let mut csv = String::from("cell,load,pacing,served,rejected,mean_qoe_bits\n");
+        for (j, c) in outs {
+            jsonl.push_str(&j);
+            csv.push_str(&c);
+        }
+        (jsonl, csv)
+    };
+    let base = run_cells(1);
+    for _ in 0..2 {
+        assert_eq!(run_cells(4), base, "sharded run diverged from the inline baseline");
+        assert_eq!(run_cells(1), base, "repeated inline run diverged");
+    }
+}
+
+// ------------------------------------------- defer-sweep drift fix
+
+#[test]
+fn defer_expiry_lands_on_deadline_with_autoscale_ticking() {
+    // Regression for the defer-sweep clock drift: during `finish()` the
+    // engine can step past a defer deadline, and the catch-up sweep at
+    // the deadline used to hand the autoscaler a *smaller* t than its
+    // previous evaluation — backwards time. With the calendar clock and
+    // the monotonicity clamp: the planner never observes a regression,
+    // and every defer-timeout rejection lands on its exact deadline.
+    let llm = opt_66b();
+    let gpu = a100_4x();
+    let latency = LatencyModel::for_deployment(&llm, &gpu);
+    let per_replica = estimate_capacity(&llm, &gpu, Dataset::ShareGpt);
+    let trace = Workload {
+        dataset: Dataset::ShareGpt,
+        arrivals: ArrivalProcess::Gamma { rate: per_replica * 6.0, cv: 3.0 },
+        qoe_trace: QoeTrace::TextReading,
+        num_requests: 120,
+        seed: 42,
+    }
+    .generate();
+    let arrivals: Vec<(usize, f64)> = trace.iter().map(|s| (s.id, s.arrival)).collect();
+    let run = |legacy: bool| -> (String, u64, usize) {
+        let llm = opt_66b();
+        let gpu = a100_4x();
+        let engine_cfg = EngineConfig {
+            kv_capacity_tokens: llm.kv_capacity_tokens(&gpu),
+            swap_capacity_tokens: llm.swap_capacity_tokens(&gpu),
+            legacy_stepping: legacy,
+            ..EngineConfig::default()
+        };
+        let sched = SchedulerConfig::Andes(AndesConfig::default());
+        let cluster =
+            Cluster::new(1, engine_cfg, latency.clone(), &sched, RoutingPolicy::QoeAware);
+        let mut gcfg = GatewayConfig::default();
+        gcfg.admission_enabled = true;
+        gcfg.legacy_stepping = legacy;
+        gcfg.surge.baseline_rate = per_replica * 3.0;
+        gcfg.autoscale = AutoscaleConfig {
+            enabled: true,
+            min_replicas: 1,
+            max_replicas: 3,
+            replica_capacity: per_replica,
+            ..AutoscaleConfig::default()
+        };
+        let mut gw = Gateway::new(cluster, gcfg.clone());
+        let res = gw.run_trace(trace.clone()).unwrap();
+        let mut timeouts = 0usize;
+        for r in &res.rejections {
+            if let RejectReason::DeferTimeout { .. } = r.reason {
+                timeouts += 1;
+                let arrival = arrivals
+                    .iter()
+                    .find(|(id, _)| *id == r.id)
+                    .map(|(_, a)| *a)
+                    .expect("rejected id must come from the trace");
+                let deadline = arrival + gcfg.admission.max_defer_wait;
+                assert!(
+                    (r.time - deadline).abs() <= 1e-9,
+                    "defer expiry drifted off its deadline: id {} expired at {} vs {}",
+                    r.id,
+                    r.time,
+                    deadline
+                );
+            }
+        }
+        (fp_gateway(&res), gw.autoscaler().time_regressions(), timeouts)
+    };
+    let (calendar_fp, calendar_regressions, calendar_timeouts) = run(false);
+    let (legacy_fp, legacy_regressions, _) = run(true);
+    assert!(calendar_timeouts > 0, "scenario must produce defer timeouts to be meaningful");
+    assert_eq!(calendar_regressions, 0, "autoscaler observed backwards time (calendar path)");
+    assert_eq!(legacy_regressions, 0, "autoscaler observed backwards time (legacy path)");
+    assert_eq!(legacy_fp, calendar_fp, "autoscale step-vs-calendar parity broke");
+}
+
+// --------------------------------------------------- calendar vs clear
+
+#[test]
+fn engine_reload_reanchors_the_calendar() {
+    // Back-to-back load_trace calls on one engine: the second trace's
+    // arrivals all lie *before* the times the first run fired, which
+    // only works because load_trace clears the calendar and clear()
+    // re-anchors the monotone-firing guard (while keeping seqs fresh so
+    // stale tokens from the first schedule stay inert). Pre-clear, the
+    // debug assertion in pop() would trip on the first re-fired wakeup.
+    let trace = Workload {
+        dataset: Dataset::ShareGpt,
+        arrivals: ArrivalProcess::Poisson { rate: 2.0 },
+        qoe_trace: QoeTrace::TextReading,
+        num_requests: 30,
+        seed: 11,
+    }
+    .generate();
+    let llm = opt_66b();
+    let gpu = a100_4x();
+    let latency = LatencyModel::for_deployment(&llm, &gpu);
+    let cfg = EngineConfig {
+        kv_capacity_tokens: llm.kv_capacity_tokens(&gpu),
+        swap_capacity_tokens: llm.swap_capacity_tokens(&gpu),
+        ..EngineConfig::default()
+    };
+    let mut e = Engine::new(
+        cfg,
+        SimBackend::new(latency.clone()),
+        VirtualClock::default(),
+        SchedKind::andes_default().build(),
+        latency,
+    );
+    e.load_trace(trace.clone());
+    let served = e.run_to_completion().unwrap().requests.len();
+    assert_eq!(served, trace.len());
+    e.load_trace(trace.clone());
+    let total = e.run_to_completion().unwrap().requests.len();
+    assert_eq!(
+        total,
+        2 * trace.len(),
+        "the reloaded trace must be served in full on the reused calendar"
+    );
+}

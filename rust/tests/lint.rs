@@ -118,6 +118,28 @@ fn d6_fixtures() {
 }
 
 #[test]
+fn d2_thread_fixtures() {
+    // Worker threads in the shard runner are still simulation code: a
+    // wall-clock read inside a spawned closure (or in the post-merge
+    // assembly) fires like any other.
+    let bad = lint_one("rust/src/experiments/shard.rs", &fixture("d2_threads_bad.rs"));
+    assert_eq!(rules_of(&bad), vec!["D2", "D2"], "{:?}", bad.findings);
+    let good = lint_one("rust/src/experiments/shard.rs", &fixture("d2_threads_good.rs"));
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+}
+
+#[test]
+fn d6_covers_calendar_and_shard_runner() {
+    // The event calendar rides the coordinator/ prefix and the shard
+    // runner is listed explicitly: unwraps fire on both, while the rest
+    // of experiments/ stays CLI-side plumbing (see d6_fixtures).
+    let cal = lint_one("rust/src/coordinator/calendar.rs", &fixture("d6_bad.rs"));
+    assert_eq!(rules_of(&cal), vec!["D6", "D6"], "{:?}", cal.findings);
+    let shard = lint_one("rust/src/experiments/shard.rs", &fixture("d6_bad.rs"));
+    assert_eq!(rules_of(&shard), vec!["D6", "D6"], "{:?}", shard.findings);
+}
+
+#[test]
 fn x1_fixtures() {
     let bad = lint_one("rust/src/telemetry_fx.rs", &fixture("x1_bad.rs"));
     assert_eq!(rules_of(&bad), vec!["X1", "X1"], "{:?}", bad.findings);

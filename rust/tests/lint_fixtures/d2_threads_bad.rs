@@ -1,0 +1,27 @@
+//! Known-bad D2 fixture: wall-clock reads inside shard worker threads.
+//! A spawned worker closure is still simulation code — a timestamp
+//! taken on a worker depends on thread scheduling and breaks replay.
+
+pub fn run_grid(cells: &[u64]) -> Vec<(u64, f64)> {
+    let mut out = Vec::new();
+    std::thread::scope(|scope| {
+        let (tx, rx) = std::sync::mpsc::channel();
+        for &cell in cells {
+            let tx = tx.clone();
+            scope.spawn(move || {
+                let t0 = std::time::Instant::now();
+                let _ = tx.send((cell, t0.elapsed().as_secs_f64()));
+            });
+        }
+        drop(tx);
+        for pair in rx {
+            out.push(pair);
+        }
+    });
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+pub fn merge_stamp() -> u64 {
+    std::time::SystemTime::now().elapsed().map(|d| d.as_secs()).unwrap_or(0)
+}

@@ -1,0 +1,22 @@
+//! Known-good D2 fixture: shard workers report *simulated* time; any
+//! wall-clock measurement stays with the caller in the wall domain.
+
+pub fn run_grid(cells: &[u64], sim_now: f64) -> Vec<(u64, f64)> {
+    let mut out = Vec::new();
+    std::thread::scope(|scope| {
+        let (tx, rx) = std::sync::mpsc::channel();
+        for &cell in cells {
+            let tx = tx.clone();
+            scope.spawn(move || {
+                let finished_at = sim_now + cell as f64 * 0.5;
+                let _ = tx.send((cell, finished_at));
+            });
+        }
+        drop(tx);
+        for pair in rx {
+            out.push(pair);
+        }
+    });
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
