@@ -1,0 +1,460 @@
+//! Cross-artifact consistency rules (X2–X5).
+//!
+//! The determinism rules in [`super::rules`] look *into* Rust sources;
+//! the rules here look *across* artifact boundaries, where drift is
+//! silent because no compiler connects the two sides:
+//!
+//! - **X2** — every top-level config section parsed in
+//!   `rust/src/config.rs` (`j.get("…")`) must be reachable from the CLI
+//!   (`rust/src/main.rs` mentions it) and documented (DESIGN.md mentions
+//!   it).
+//! - **X3** — every `ext-*` experiment registered in
+//!   `rust/src/experiments/mod.rs` must have a CI smoke step
+//!   (`.github/workflows/ci.yml`) and a ROADMAP.md quickstart line.
+//! - **X4** — every rule id in a `RULE_TABLE` declaration must have a
+//!   `<rule>_bad.rs`/`<rule>_good.rs` fixture pair and a DESIGN.md §13
+//!   table row (`| <id> |`).
+//! - **X5** — every benchmark entry in a committed `BENCH_*.json` must
+//!   name a bench case that still exists somewhere under `benches/`.
+//!
+//! Each check needs its paired artifact to exist: with the corresponding
+//! [`Artifacts`] field absent the check is skipped, so in-memory fixture
+//! scans (which pass [`Artifacts::default`]) never fire X-rules by
+//! accident. These rules are not inline-suppressible — there is no
+//! meaningful source line to hang a waiver on.
+
+use std::fs;
+use std::path::Path;
+
+use super::parse::{ParsedFile, TokKind, Token};
+use super::rules::Finding;
+
+/// Non-Rust artifacts the cross-checks reconcile against. `None` (or an
+/// empty list) means "artifact not available — skip that check".
+#[derive(Debug, Default)]
+pub struct Artifacts {
+    /// DESIGN.md text (X2, X4).
+    pub design: Option<String>,
+    /// ROADMAP.md text (X3).
+    pub roadmap: Option<String>,
+    /// `.github/workflows/ci.yml` text (X3).
+    pub ci: Option<String>,
+    /// Committed `BENCH_*.json` baselines as (file name, contents) (X5).
+    pub bench_baselines: Vec<(String, String)>,
+    /// File names present in the lint fixture corpus directory (X4).
+    pub fixtures: Option<Vec<String>>,
+}
+
+/// Load the artifact set from a repository checkout. Missing files are
+/// simply absent (their checks are skipped), not errors — a pruned
+/// checkout still lints.
+pub fn load_artifacts(root: &Path) -> Artifacts {
+    let read = |rel: &str| fs::read_to_string(root.join(rel)).ok();
+    let mut bench_baselines = Vec::new();
+    if let Ok(rd) = fs::read_dir(root) {
+        let mut names: Vec<String> = rd
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+            .collect();
+        names.sort();
+        for name in names {
+            if let Some(text) = read(&name) {
+                bench_baselines.push((name, text));
+            }
+        }
+    }
+    let fixtures = fs::read_dir(root.join("rust/tests/lint_fixtures"))
+        .ok()
+        .map(|rd| {
+            let mut names: Vec<String> = rd
+                .flatten()
+                .map(|e| e.file_name().to_string_lossy().into_owned())
+                .collect();
+            names.sort();
+            names
+        });
+    Artifacts {
+        design: read("DESIGN.md"),
+        roadmap: read("ROADMAP.md"),
+        ci: read(".github/workflows/ci.yml"),
+        bench_baselines,
+        fixtures,
+    }
+}
+
+/// Run X2–X5 over the scanned file set against the artifact set.
+pub fn cross_artifact_check(files: &[(String, String)], art: &Artifacts) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    check_config_keys(files, art, &mut findings);
+    check_experiments(files, art, &mut findings);
+    check_rule_table(files, art, &mut findings);
+    check_bench_baselines(files, art, &mut findings);
+    findings
+}
+
+fn file_text<'a>(files: &'a [(String, String)], rel: &str) -> Option<&'a str> {
+    files.iter().find(|(r, _)| r == rel).map(|(_, t)| t.as_str())
+}
+
+fn contains_ci(haystack: &str, needle: &str) -> bool {
+    haystack.to_lowercase().contains(&needle.to_lowercase())
+}
+
+/// X2: top-level config keys (`j.get("key")` in config.rs) must surface
+/// in main.rs (a CLI flag or its help text) and in DESIGN.md.
+fn check_config_keys(files: &[(String, String)], art: &Artifacts, out: &mut Vec<Finding>) {
+    const CONFIG: &str = "rust/src/config.rs";
+    const MAIN: &str = "rust/src/main.rs";
+    let (Some(config), Some(main), Some(design)) = (
+        file_text(files, CONFIG),
+        file_text(files, MAIN),
+        art.design.as_deref(),
+    ) else {
+        return;
+    };
+    let pf = ParsedFile::parse(config);
+    let src = pf.src.as_str();
+    let mut seen: Vec<String> = Vec::new();
+    for_sig_windows(&pf, 5, |w| {
+        // `j . get ( "key"` — the receiver `j` is the root config object;
+        // section handles (`s`, `e`, …) read nested keys, out of scope.
+        if w[0].is_ident(src, "j")
+            && w[1].is_punct(src, '.')
+            && w[2].is_ident(src, "get")
+            && w[3].is_punct(src, '(')
+            && matches!(w[4].kind, TokKind::Str { .. })
+        {
+            let key = str_content(src, w[4]);
+            if seen.contains(&key) {
+                return;
+            }
+            seen.push(key.clone());
+            let mut missing = Vec::new();
+            if !contains_ci(main, &key) {
+                missing.push("main.rs");
+            }
+            if !contains_ci(design, &key) {
+                missing.push("DESIGN.md");
+            }
+            if !missing.is_empty() {
+                out.push(Finding {
+                    rule: "X2",
+                    file: CONFIG.to_string(),
+                    line: w[4].line + 1,
+                    excerpt: format!("j.get(\"{key}\")"),
+                    message: format!(
+                        "config section `{key}` has no mention in {}",
+                        missing.join(" or ")
+                    ),
+                });
+            }
+        }
+    });
+}
+
+/// X3: every `ext-*` experiment id registered in experiments/mod.rs must
+/// appear in the CI workflow (a smoke step) and in ROADMAP.md (the
+/// quickstart block).
+fn check_experiments(files: &[(String, String)], art: &Artifacts, out: &mut Vec<Finding>) {
+    const REGISTRY: &str = "rust/src/experiments/mod.rs";
+    let (Some(registry), Some(ci), Some(roadmap)) = (
+        file_text(files, REGISTRY),
+        art.ci.as_deref(),
+        art.roadmap.as_deref(),
+    ) else {
+        return;
+    };
+    let pf = ParsedFile::parse(registry);
+    let src = pf.src.as_str();
+    for_sig_windows(&pf, 3, |w| {
+        // `id : "ext-…"` — one registry entry.
+        if !(w[0].is_ident(src, "id")
+            && w[1].is_punct(src, ':')
+            && matches!(w[2].kind, TokKind::Str { .. }))
+        {
+            return;
+        }
+        let id = str_content(src, w[2]);
+        if !id.starts_with("ext-") {
+            return;
+        }
+        let mut missing = Vec::new();
+        if !ci.contains(&id) {
+            missing.push("a ci.yml smoke step");
+        }
+        if !roadmap.contains(&id) {
+            missing.push("a ROADMAP.md quickstart line");
+        }
+        if !missing.is_empty() {
+            out.push(Finding {
+                rule: "X3",
+                file: REGISTRY.to_string(),
+                line: w[2].line + 1,
+                excerpt: format!("id: \"{id}\""),
+                message: format!("experiment `{id}` is missing {}", missing.join(" and ")),
+            });
+        }
+    });
+}
+
+/// X4: every rule id declared in a `RULE_TABLE: … = &[("id", …), …]`
+/// must have a `<id>_bad.rs`/`<id>_good.rs` fixture pair and a
+/// `| <id> |` row in DESIGN.md §13.
+fn check_rule_table(files: &[(String, String)], art: &Artifacts, out: &mut Vec<Finding>) {
+    let (Some(design), Some(fixtures)) = (art.design.as_deref(), art.fixtures.as_deref())
+    else {
+        return;
+    };
+    for (rel, text) in files {
+        if !text.contains("RULE_TABLE") {
+            continue;
+        }
+        let pf = ParsedFile::parse(text);
+        let src = pf.src.as_str();
+        for (k, &ti) in pf.sig.iter().enumerate() {
+            let t = &pf.tokens[ti];
+            // The *declaration* (`RULE_TABLE: … = &[`), not a use site
+            // (`RULE_TABLE.iter()`) or an import (`…, RULE_TABLE};`).
+            if !t.is_ident(src, "RULE_TABLE")
+                || !pf
+                    .sig
+                    .get(k + 1)
+                    .is_some_and(|&tj| pf.tokens[tj].is_punct(src, ':'))
+            {
+                continue;
+            }
+            // Find the opening `[` of the initializer.
+            let Some(open_pos) = pf.sig[k..].iter().position(|&tj| {
+                pf.tokens[tj].is_punct(src, '[')
+            }) else {
+                continue;
+            };
+            let open_ti = pf.sig[k + open_pos];
+            let close_ti = pf.pairs.get(&open_ti).copied().unwrap_or(pf.tokens.len());
+            // Each element is a paren group whose first string literal is
+            // the rule id.
+            let mut j = open_ti + 1;
+            while j < close_ti {
+                if pf.tokens[j].is_punct(src, '(') {
+                    let elem_close = pf.pairs.get(&j).copied().unwrap_or(close_ti);
+                    if let Some(id_tok) = pf.tokens[j + 1..elem_close]
+                        .iter()
+                        .find(|t| matches!(t.kind, TokKind::Str { .. }))
+                    {
+                        check_one_rule(rel, src, id_tok, design, fixtures, out);
+                    }
+                    j = elem_close + 1;
+                } else {
+                    j += 1;
+                }
+            }
+        }
+    }
+}
+
+fn check_one_rule(
+    rel: &str,
+    src: &str,
+    id_tok: &Token,
+    design: &str,
+    fixtures: &[String],
+    out: &mut Vec<Finding>,
+) {
+    let id = str_content(src, id_tok);
+    if id.len() != 2 || !id.chars().all(|c| c.is_ascii_alphanumeric()) {
+        return; // not a rule id — some other tuple table
+    }
+    let lower = id.to_lowercase();
+    let bad = format!("{lower}_bad.rs");
+    let good = format!("{lower}_good.rs");
+    let mut missing = Vec::new();
+    if !fixtures.iter().any(|f| f == &bad) {
+        missing.push(bad.clone());
+    }
+    if !fixtures.iter().any(|f| f == &good) {
+        missing.push(good.clone());
+    }
+    if !design.contains(&format!("| {id} |")) {
+        missing.push("a DESIGN.md §13 row".to_string());
+    }
+    if !missing.is_empty() {
+        out.push(Finding {
+            rule: "X4",
+            file: rel.to_string(),
+            line: id_tok.line + 1,
+            excerpt: format!("(\"{id}\", …)"),
+            message: format!("rule {id} is missing {}", missing.join(", ")),
+        });
+    }
+}
+
+/// X5: every benchmark name recorded in a committed `BENCH_*.json` must
+/// still exist as a case name in some `benches/*.rs` source.
+fn check_bench_baselines(files: &[(String, String)], art: &Artifacts, out: &mut Vec<Finding>) {
+    if art.bench_baselines.is_empty() {
+        return;
+    }
+    // The set of string literals across the bench sources; bench case
+    // names are always plain string literals passed to the harness.
+    let mut names: Vec<String> = Vec::new();
+    for (rel, text) in files {
+        if !rel.starts_with("benches/") {
+            continue;
+        }
+        let pf = ParsedFile::parse(text);
+        let src = pf.src.as_str();
+        for t in &pf.tokens {
+            if matches!(t.kind, TokKind::Str { .. }) {
+                names.push(str_content(src, t));
+            }
+        }
+    }
+    if names.is_empty() {
+        return; // no bench sources in this file set — nothing to check
+    }
+    for (file, text) in &art.bench_baselines {
+        let Ok(doc) = crate::util::json::Json::parse(text) else {
+            out.push(Finding {
+                rule: "X5",
+                file: file.clone(),
+                line: 1,
+                excerpt: String::new(),
+                message: format!("{file} is not valid JSON"),
+            });
+            continue;
+        };
+        for bench in doc.get("benchmarks").as_arr().unwrap_or(&[]) {
+            let Some(name) = bench.get("name").as_str() else {
+                continue;
+            };
+            if names.iter().any(|n| n == name) {
+                continue;
+            }
+            let quoted = format!("\"{name}\"");
+            let line = text
+                .lines()
+                .position(|l| l.contains(&quoted))
+                .map(|p| p + 1)
+                .unwrap_or(1);
+            out.push(Finding {
+                rule: "X5",
+                file: file.clone(),
+                line,
+                excerpt: quoted,
+                message: format!("bench `{name}` no longer exists under benches/"),
+            });
+        }
+    }
+}
+
+/// Call `f` on every length-`n` window of significant tokens.
+fn for_sig_windows<'a>(pf: &'a ParsedFile, n: usize, mut f: impl FnMut(&[&'a Token])) {
+    if pf.sig.len() < n {
+        return;
+    }
+    let toks: Vec<&Token> = pf.sig.iter().map(|&ti| &pf.tokens[ti]).collect();
+    for w in toks.windows(n) {
+        f(w);
+    }
+}
+
+/// The content of a string-literal token (quotes stripped). Only plain
+/// `"…"` literals appear in the shapes these rules match.
+fn str_content(src: &str, t: &Token) -> String {
+    let text = t.text(src);
+    text.trim_start_matches('"').trim_end_matches('"').to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_full() -> Artifacts {
+        Artifacts {
+            design: Some("## §13\n| D1 | … |\nmentions model and tiers keys".to_string()),
+            roadmap: Some("andes exp ext-tiers\n".to_string()),
+            ci: Some("run: andes exp ext-tiers --quick\n".to_string()),
+            bench_baselines: vec![(
+                "BENCH_x.json".to_string(),
+                "{\"benchmarks\": [{\"name\": \"cal-pop/d=1\"}]}".to_string(),
+            )],
+            fixtures: Some(vec!["d1_bad.rs".to_string(), "d1_good.rs".to_string()]),
+        }
+    }
+
+    #[test]
+    fn default_artifacts_skip_every_check() {
+        let files = vec![(
+            "rust/src/config.rs".to_string(),
+            "fn f(j: &Json) { j.get(\"ghost\"); }".to_string(),
+        )];
+        assert!(cross_artifact_check(&files, &Artifacts::default()).is_empty());
+    }
+
+    #[test]
+    fn x2_fires_when_key_is_undocumented() {
+        let files = vec![
+            (
+                "rust/src/config.rs".to_string(),
+                "fn f(j: &Json) { j.get(\"model\"); j.get(\"ghost\"); }".to_string(),
+            ),
+            ("rust/src/main.rs".to_string(), "// --model flag".to_string()),
+        ];
+        let f = cross_artifact_check(&files, &art_full());
+        let x2: Vec<&Finding> = f.iter().filter(|f| f.rule == "X2").collect();
+        assert_eq!(x2.len(), 1);
+        assert!(x2[0].message.contains("`ghost`"), "{}", x2[0].message);
+        assert!(x2[0].message.contains("main.rs"));
+        assert!(x2[0].message.contains("DESIGN.md"));
+    }
+
+    #[test]
+    fn x3_fires_for_unsmoked_experiment() {
+        let files = vec![(
+            "rust/src/experiments/mod.rs".to_string(),
+            "const R: &[E] = &[E { id: \"ext-tiers\" }, E { id: \"ext-ghost\" }, \
+             E { id: \"fig2\" }];"
+                .to_string(),
+        )];
+        let f = cross_artifact_check(&files, &art_full());
+        let x3: Vec<&Finding> = f.iter().filter(|f| f.rule == "X3").collect();
+        assert_eq!(x3.len(), 1);
+        assert!(x3[0].message.contains("`ext-ghost`"));
+    }
+
+    #[test]
+    fn x4_fires_for_rule_without_fixtures_or_row() {
+        let files = vec![(
+            "rust/src/analysis/rules.rs".to_string(),
+            "pub const RULE_TABLE: &[(&str, &str)] = &[(\"D1\", \"x\"), (\"Z9\", \"ghost\")];\n\
+             fn f() { RULE_TABLE.iter(); }"
+                .to_string(),
+        )];
+        let f = cross_artifact_check(&files, &art_full());
+        let x4: Vec<&Finding> = f.iter().filter(|f| f.rule == "X4").collect();
+        assert_eq!(x4.len(), 1, "{f:?}");
+        assert!(x4[0].message.contains("z9_bad.rs"), "{}", x4[0].message);
+    }
+
+    #[test]
+    fn x5_fires_for_ghost_bench_entry() {
+        let files = vec![(
+            "benches/cal.rs".to_string(),
+            "fn main() { run(\"cal-pop/d=1\"); }".to_string(),
+        )];
+        let mut art = art_full();
+        art.bench_baselines = vec![(
+            "BENCH_x.json".to_string(),
+            "{\n \"benchmarks\": [\n  {\"name\": \"cal-pop/d=1\"},\n  \
+             {\"name\": \"cal-ghost/d=9\"}\n ]\n}"
+                .to_string(),
+        )];
+        let f = cross_artifact_check(&files, &art);
+        let x5: Vec<&Finding> = f.iter().filter(|f| f.rule == "X5").collect();
+        assert_eq!(x5.len(), 1);
+        assert_eq!(x5[0].file, "BENCH_x.json");
+        assert_eq!(x5[0].line, 4);
+        assert!(x5[0].message.contains("cal-ghost"));
+    }
+}

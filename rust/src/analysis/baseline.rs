@@ -85,6 +85,29 @@ impl Baseline {
         self.entries.values().sum()
     }
 
+    /// Compare this (committed) baseline against a freshly-blessed one.
+    /// The ratchet invariant: no (rule, file) bucket may grow. Shrinking
+    /// or disappearing buckets are the absorbed delta `--update-baseline`
+    /// reports; any growing bucket makes the update refuse.
+    pub fn ratchet(&self, fresh: &Baseline) -> RatchetReport {
+        let mut rows = Vec::new();
+        let mut grew = false;
+        let keys: std::collections::BTreeSet<&(String, String)> =
+            self.entries.keys().chain(fresh.entries.keys()).collect();
+        for key in keys {
+            let old = self.entries.get(key).copied().unwrap_or(0);
+            let new = fresh.entries.get(key).copied().unwrap_or(0);
+            if old == new {
+                continue;
+            }
+            if new > old {
+                grew = true;
+            }
+            rows.push((key.0.clone(), key.1.clone(), old, new));
+        }
+        RatchetReport { rows, grew }
+    }
+
     /// Serialize; stable field order via util::json's BTreeMap objects.
     pub fn to_json(&self) -> Json {
         let entries: Vec<Json> = self
@@ -109,6 +132,28 @@ impl Baseline {
     pub fn render(&self) -> String {
         let mut s = json::pretty(&self.to_json());
         s.push('\n');
+        s
+    }
+}
+
+/// Per-bucket delta between a committed and a fresh baseline, produced
+/// by [`Baseline::ratchet`]. Rows are (rule, file, old count, new
+/// count), only for buckets whose count changed, in key order.
+#[derive(Debug, Default)]
+pub struct RatchetReport {
+    pub rows: Vec<(String, String, u64, u64)>,
+    /// True iff any bucket grew — the update must be refused.
+    pub grew: bool,
+}
+
+impl RatchetReport {
+    /// Human rendering, one `rule file: old -> new` line per changed
+    /// bucket; empty string when nothing changed.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for (rule, file, old, new) in &self.rows {
+            s.push_str(&format!("  {rule} {file}: {old} -> {new}\n"));
+        }
         s
     }
 }
@@ -160,6 +205,43 @@ mod tests {
         assert_eq!(fresh.len(), 1);
         assert_eq!(absorbed, 0);
         assert_eq!(Baseline::empty().total(), 0);
+    }
+
+    #[test]
+    fn ratchet_flags_growth_and_reports_shrinkage() {
+        let committed = Baseline::from_findings(&[
+            finding("D6", "rust/src/a.rs", 3),
+            finding("D6", "rust/src/a.rs", 9),
+            finding("D2", "rust/src/b.rs", 1),
+        ]);
+
+        // Shrink: one D6 fixed, D2 gone — absorbed delta, no growth.
+        let fresh = Baseline::from_findings(&[finding("D6", "rust/src/a.rs", 3)]);
+        let rep = committed.ratchet(&fresh);
+        assert!(!rep.grew);
+        assert_eq!(
+            rep.rows,
+            vec![
+                ("D2".to_string(), "rust/src/b.rs".to_string(), 1, 0),
+                ("D6".to_string(), "rust/src/a.rs".to_string(), 2, 1),
+            ]
+        );
+        assert!(rep.render().contains("D6 rust/src/a.rs: 2 -> 1"));
+
+        // Grow: a new D1 bucket appears — refused.
+        let grown = Baseline::from_findings(&[
+            finding("D6", "rust/src/a.rs", 3),
+            finding("D6", "rust/src/a.rs", 9),
+            finding("D2", "rust/src/b.rs", 1),
+            finding("D1", "rust/src/c.rs", 2),
+        ]);
+        assert!(committed.ratchet(&grown).grew);
+
+        // Identical: empty report.
+        let same = committed.ratchet(&committed.clone());
+        assert!(!same.grew);
+        assert!(same.rows.is_empty());
+        assert_eq!(same.render(), "");
     }
 
     #[test]

@@ -6,19 +6,30 @@
 //! (D1), no wall-clock reads outside the wall domain (D2), no NaN-unsafe
 //! float comparisons (D3), no unseeded randomness (D4), no stray prints
 //! in library code (D5), no unwrap/expect in simulation paths without a
-//! reasoned waiver (D6), and a declared-vs-emitted cross-check of the
-//! telemetry metric taxonomy (X1).
+//! reasoned waiver (D6), no wall-clock value flowing into sim-time
+//! arithmetic (D7), a consistent calendar payload encode/decode protocol
+//! (C1), no sim clock mutation outside `coordinator/` (C2), no stale
+//! `lint:allow` waivers (W1), a declared-vs-emitted cross-check of the
+//! telemetry metric taxonomy (X1), and cross-artifact consistency between
+//! the sources and their paired non-Rust artifacts (X2–X5).
 //!
-//! The pipeline is: [`lexer`] strips comments/strings while preserving
-//! line and column positions, [`rules`] matches on the stripped text,
-//! [`suppress`] applies inline `// lint:allow(...)` waivers, [`baseline`]
-//! subtracts grandfathered findings, and [`report`] renders the rest.
-//! Everything is deterministic by construction: files are walked in
-//! sorted order and all intermediate maps are BTreeMaps, so two runs on
-//! the same tree produce byte-identical reports.
+//! The pipeline is: [`parse`] lexes each file into a spanned token
+//! stream with a brace/paren/bracket tree, [`rules`] runs the
+//! determinism rules on the tokens (line-oriented rules use the
+//! [`parse::to_stripped`] projection, which is byte-identical to the
+//! legacy [`lexer`] strip pass — kept as the independent oracle the
+//! parser is tested against), [`suppress`] applies inline
+//! `// lint:allow(...)` waivers, [`artifacts`] reconciles the sources
+//! against DESIGN.md / ROADMAP.md / CI / bench baselines / the fixture
+//! corpus, [`baseline`] subtracts grandfathered findings, and [`report`]
+//! renders the rest. Everything is deterministic by construction: files
+//! are walked in sorted order and all intermediate maps are BTreeMaps,
+//! so two runs on the same tree produce byte-identical reports.
 
+pub mod artifacts;
 pub mod baseline;
 pub mod lexer;
+pub mod parse;
 pub mod report;
 pub mod rules;
 pub mod suppress;
@@ -26,8 +37,9 @@ pub mod suppress;
 use std::fs;
 use std::path::{Path, PathBuf};
 
+use artifacts::Artifacts;
 use baseline::Baseline;
-use rules::{Finding, MetricUsage};
+use rules::{CrossUsage, Finding};
 
 /// Directories scanned relative to the repo root. Fixture corpora under
 /// any `lint_fixtures/` directory are exercised by the lint's own tests
@@ -57,10 +69,12 @@ pub struct LintOutcome {
     pub emitted: usize,
 }
 
-/// Lint a repository checkout rooted at `root`.
+/// Lint a repository checkout rooted at `root`, including the X2–X5
+/// cross-artifact checks against the checkout's non-Rust artifacts.
 pub fn lint_repo(root: &Path, opts: &LintOptions) -> Result<LintOutcome, String> {
     let files = collect_sources(root)?;
-    Ok(lint_sources(&files, opts))
+    let art = artifacts::load_artifacts(root);
+    Ok(lint_sources_with(&files, &art, opts))
 }
 
 /// Gather `(repo-relative path, contents)` for every `.rs` file under
@@ -76,11 +90,23 @@ pub fn collect_sources(root: &Path) -> Result<Vec<(String, String)>, String> {
     Ok(out)
 }
 
-/// Lint an in-memory file set. Split out from [`lint_repo`] so tests can
-/// scan synthetic trees and fixture corpora without touching the disk
-/// layout.
+/// Lint an in-memory file set with no cross-artifact context: X2–X5 are
+/// skipped (their paired artifacts are absent). This is what fixture
+/// tests use to exercise the determinism rules in isolation.
 pub fn lint_sources(files: &[(String, String)], opts: &LintOptions) -> LintOutcome {
-    let mut usage = MetricUsage::default();
+    lint_sources_with(files, &Artifacts::default(), opts)
+}
+
+/// Lint an in-memory file set against an explicit artifact set. Split
+/// out from [`lint_repo`] so tests can scan synthetic trees, fixture
+/// corpora, and deliberately desynced artifact copies without touching
+/// the disk layout.
+pub fn lint_sources_with(
+    files: &[(String, String)],
+    art: &Artifacts,
+    opts: &LintOptions,
+) -> LintOutcome {
+    let mut usage = CrossUsage::default();
     let mut findings = Vec::new();
     let mut suppressed = 0usize;
     for (rel, text) in files {
@@ -89,6 +115,7 @@ pub fn lint_sources(files: &[(String, String)], opts: &LintOptions) -> LintOutco
         findings.extend(scan.findings);
     }
     findings.extend(rules::cross_check(&usage));
+    findings.extend(artifacts::cross_artifact_check(files, art));
     findings.sort_by(|a, b| {
         let ka = (a.file.as_str(), a.line, a.rule);
         ka.cmp(&(b.file.as_str(), b.line, b.rule))
@@ -102,8 +129,8 @@ pub fn lint_sources(files: &[(String, String)], opts: &LintOptions) -> LintOutco
         files_scanned: files.len(),
         suppressed,
         baselined,
-        declared: usage.declared.len(),
-        emitted: usage.emitted.len(),
+        declared: usage.metrics.declared.len(),
+        emitted: usage.metrics.emitted.len(),
     }
 }
 

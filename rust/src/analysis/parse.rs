@@ -1,0 +1,701 @@
+//! Token-stream + brace-tree parser: the substrate all lint rules run on.
+//!
+//! [`lex`] is a total, dependency-light Rust lexer: any byte sequence in,
+//! a contiguous spanned token stream out. Tokens carry exact byte spans
+//! (`lo..hi`) plus the (0-based) line and char-based column where they
+//! start, and whitespace/comments are tokens too — so concatenating the
+//! spans of every token reconstructs the source byte-for-byte, which the
+//! span-fidelity property test in `rust/tests/lint.rs` pins. [`ParsedFile`]
+//! adds the brace/paren/bracket tree on top: a map from every opening
+//! delimiter token to its matching close, total over unbalanced input.
+//!
+//! The per-line blanking pass in [`super::lexer`] is kept as an oracle:
+//! [`to_stripped`] projects the token stream back into the legacy
+//! [`Stripped`] view (same blanking, same captured comments and string
+//! literals), and an agreement sweep over every file in `rust/src/`
+//! asserts the two front ends never disagree on comment/string extents.
+//! Line-oriented rules (D1, D3, X1) still run on that projection; the
+//! token-native rules (D2, D4–D7, C1, C2) walk the stream directly.
+//!
+//! ```
+//! let p = andes::analysis::parse::ParsedFile::parse("fn f() { g(1); }");
+//! let idents: Vec<&str> = p
+//!     .tokens
+//!     .iter()
+//!     .filter(|t| t.kind == andes::analysis::parse::TokKind::Ident)
+//!     .map(|t| t.text(p.src.as_str()))
+//!     .collect();
+//! assert_eq!(idents, ["fn", "f", "g"]);
+//! ```
+
+use std::collections::BTreeMap;
+
+use super::lexer::{StrLit, Stripped};
+
+/// Token classification. String-like kinds remember whether their closer
+/// was ever seen (`closed`), so unterminated literals stay representable
+/// without panicking and the stripped projection can mirror the legacy
+/// lexer's discard-at-EOF behavior.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (including raw identifiers like `r#fn`).
+    Ident,
+    /// Lifetime marker (`'a`, `'static`).
+    Lifetime,
+    /// Numeric literal (`42`, `0.5`, `1e-3`, `0xFF`).
+    Num,
+    /// Single punctuation character.
+    Punct,
+    /// Char literal (`'x'`, `'\n'`, `'\u{1F600}'`), always single-line.
+    Char,
+    /// Plain string literal (`"…"`).
+    Str { closed: bool },
+    /// Byte string literal (`b"…"`).
+    ByteStr { closed: bool },
+    /// Raw (byte) string; `prefix` is the char count before the hashes
+    /// (1 for `r`, 2 for `br`), `hashes` the opener's `#` count.
+    RawStr { closed: bool, hashes: usize, prefix: usize },
+    /// Line comment, `//` to end of line (newline excluded).
+    LineComment,
+    /// Block comment, nesting-aware.
+    BlockComment { closed: bool },
+    /// Run of whitespace (may span lines).
+    Whitespace,
+}
+
+/// One spanned token. `lo..hi` are byte offsets into the source; `line`
+/// and `col` are the 0-based line and char-based column of the first
+/// character (multi-byte chars count as one column, matching the legacy
+/// strip pass).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Token {
+    pub kind: TokKind,
+    pub lo: usize,
+    pub hi: usize,
+    pub line: usize,
+    pub col: usize,
+}
+
+impl Token {
+    /// The source text this token covers.
+    pub fn text<'a>(&self, src: &'a str) -> &'a str {
+        &src[self.lo..self.hi]
+    }
+
+    /// Whitespace or comment — skipped by the significant-token view.
+    pub fn is_trivia(&self) -> bool {
+        matches!(
+            self.kind,
+            TokKind::Whitespace | TokKind::LineComment | TokKind::BlockComment { .. }
+        )
+    }
+
+    /// Is this token the single punctuation character `c`?
+    pub fn is_punct(&self, src: &str, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text(src).chars().next() == Some(c)
+    }
+
+    /// Is this token the identifier `name`?
+    pub fn is_ident(&self, src: &str, name: &str) -> bool {
+        self.kind == TokKind::Ident && self.text(src) == name
+    }
+}
+
+/// A lexed file with the significant-token view and the delimiter tree.
+#[derive(Debug, Clone)]
+pub struct ParsedFile {
+    pub src: String,
+    pub tokens: Vec<Token>,
+    /// Indices into `tokens` of every non-trivia token, in order.
+    pub sig: Vec<usize>,
+    /// Matching-delimiter map over *token indices*: every `(`/`[`/`{`
+    /// token with a matching closer maps to that closer's index.
+    pub pairs: BTreeMap<usize, usize>,
+}
+
+impl ParsedFile {
+    pub fn parse(src: &str) -> ParsedFile {
+        let tokens = lex(src);
+        let sig: Vec<usize> = tokens
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| !t.is_trivia())
+            .map(|(i, _)| i)
+            .collect();
+        let mut pairs = BTreeMap::new();
+        let mut stack: Vec<(char, usize)> = Vec::new();
+        for &ti in &sig {
+            let t = &tokens[ti];
+            if t.kind != TokKind::Punct {
+                continue;
+            }
+            match t.text(src).chars().next() {
+                Some(c @ ('(' | '[' | '{')) => stack.push((c, ti)),
+                Some(c @ (')' | ']' | '}')) => {
+                    let open = match c {
+                        ')' => '(',
+                        ']' => '[',
+                        _ => '{',
+                    };
+                    // Total on unbalanced input: a stray closer that does
+                    // not match the innermost open delimiter is ignored.
+                    if stack.last().map(|&(o, _)| o) == Some(open) {
+                        let (_, oi) = stack.pop().expect("non-empty stack");
+                        pairs.insert(oi, ti);
+                    }
+                }
+                _ => {}
+            }
+        }
+        ParsedFile {
+            src: src.to_string(),
+            tokens,
+            sig,
+            pairs,
+        }
+    }
+}
+
+/// Tokenize `src`. Total: never panics, every byte lands in exactly one
+/// token, and token spans are contiguous (`tokens[i].hi == tokens[i+1].lo`).
+pub fn lex(src: &str) -> Vec<Token> {
+    let chars: Vec<(usize, char)> = src.char_indices().collect();
+    let n = chars.len();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 0usize;
+    let mut col = 0usize;
+    let at = |j: usize| chars.get(j).map(|p| p.1);
+    while i < n {
+        let start = i;
+        let (lo, c) = chars[i];
+        let (tline, tcol) = (line, col);
+        let kind = if c.is_whitespace() {
+            while i < n && chars[i].1.is_whitespace() {
+                i += 1;
+            }
+            TokKind::Whitespace
+        } else if c == '/' && at(i + 1) == Some('/') {
+            while i < n && chars[i].1 != '\n' {
+                i += 1;
+            }
+            TokKind::LineComment
+        } else if c == '/' && at(i + 1) == Some('*') {
+            i += 2;
+            let mut depth = 1u32;
+            while i < n && depth > 0 {
+                if chars[i].1 == '/' && at(i + 1) == Some('*') {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i].1 == '*' && at(i + 1) == Some('/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            TokKind::BlockComment { closed: depth == 0 }
+        } else if c == '"' {
+            i += 1;
+            let closed = scan_plain_str(&chars, &mut i);
+            TokKind::Str { closed }
+        } else if c == '\'' {
+            match char_lit_len(&chars, i) {
+                Some(len) => {
+                    i += len;
+                    TokKind::Char
+                }
+                None => {
+                    if at(i + 1).is_some_and(|ch| ch.is_alphabetic() || ch == '_') {
+                        i += 1;
+                        while i < n && (chars[i].1.is_alphanumeric() || chars[i].1 == '_') {
+                            i += 1;
+                        }
+                        TokKind::Lifetime
+                    } else {
+                        i += 1;
+                        TokKind::Punct
+                    }
+                }
+            }
+        } else if c.is_ascii_digit() {
+            scan_num(&chars, &mut i);
+            TokKind::Num
+        } else if c.is_alphanumeric() || c == '_' {
+            while i < n && (chars[i].1.is_alphanumeric() || chars[i].1 == '_') {
+                i += 1;
+            }
+            let word: String = chars[start..i].iter().map(|p| p.1).collect();
+            // Prefix reinterpretations, mirroring the legacy lexer's
+            // ident_before guard (a preceding ident char would have been
+            // absorbed into a longer word, so `word` is standalone here).
+            let raw_prefix = match word.as_str() {
+                "r" => Some(1usize),
+                "br" => Some(2usize),
+                _ => None,
+            };
+            let mut kind = TokKind::Ident;
+            if let Some(prefix) = raw_prefix {
+                let mut hashes = 0usize;
+                while at(i + hashes) == Some('#') {
+                    hashes += 1;
+                }
+                if at(i + hashes) == Some('"') {
+                    i += hashes + 1;
+                    let closed = scan_raw_str(&chars, &mut i, hashes);
+                    kind = TokKind::RawStr {
+                        closed,
+                        hashes,
+                        prefix,
+                    };
+                } else if prefix == 1
+                    && hashes == 1
+                    && at(i + 1).is_some_and(|ch| ch.is_alphabetic() || ch == '_')
+                {
+                    // Raw identifier `r#name`.
+                    i += 2;
+                    while i < n && (chars[i].1.is_alphanumeric() || chars[i].1 == '_') {
+                        i += 1;
+                    }
+                }
+            } else if word == "b" && at(i) == Some('"') {
+                i += 1;
+                let closed = scan_plain_str(&chars, &mut i);
+                kind = TokKind::ByteStr { closed };
+            }
+            kind
+        } else {
+            i += 1;
+            TokKind::Punct
+        };
+        let hi = if i < n { chars[i].0 } else { src.len() };
+        toks.push(Token {
+            kind,
+            lo,
+            hi,
+            line: tline,
+            col: tcol,
+        });
+        for k in start..i {
+            if chars[k].1 == '\n' {
+                line += 1;
+                col = 0;
+            } else {
+                col += 1;
+            }
+        }
+    }
+    toks
+}
+
+/// Consume a plain (or byte) string body; `i` sits just past the opening
+/// quote. Escapes never cross a line break, matching the legacy pass.
+fn scan_plain_str(chars: &[(usize, char)], i: &mut usize) -> bool {
+    while *i < chars.len() {
+        let c = chars[*i].1;
+        if c == '\\' && *i + 1 < chars.len() && chars[*i + 1].1 != '\n' {
+            *i += 2;
+        } else if c == '"' {
+            *i += 1;
+            return true;
+        } else {
+            *i += 1;
+        }
+    }
+    false
+}
+
+/// Consume a raw string body; `i` sits just past the opening quote. The
+/// closer is a quote followed by at least `hashes` hash marks, of which
+/// exactly `hashes` belong to the literal.
+fn scan_raw_str(chars: &[(usize, char)], i: &mut usize, hashes: usize) -> bool {
+    while *i < chars.len() {
+        if chars[*i].1 == '"' {
+            let mut h = 0usize;
+            while *i + 1 + h < chars.len() && chars[*i + 1 + h].1 == '#' {
+                h += 1;
+            }
+            if h >= hashes {
+                *i += 1 + hashes;
+                return true;
+            }
+        }
+        *i += 1;
+    }
+    false
+}
+
+/// Consume a numeric literal starting at a digit: integer/float bodies
+/// with `_` separators, a fractional part only when a digit follows the
+/// dot (so `0.5.total_cmp` stops after `0.5` and `1..4` after `1`), and
+/// signed exponents.
+fn scan_num(chars: &[(usize, char)], i: &mut usize) {
+    let body = |c: char| c.is_alphanumeric() || c == '_';
+    while *i < chars.len() && body(chars[*i].1) {
+        *i += 1;
+    }
+    if *i + 1 < chars.len() && chars[*i].1 == '.' && chars[*i + 1].1.is_ascii_digit() {
+        *i += 1;
+        while *i < chars.len() && body(chars[*i].1) {
+            *i += 1;
+        }
+    }
+    if *i < chars.len()
+        && matches!(chars[*i].1, '+' | '-')
+        && chars
+            .get(i.wrapping_sub(1))
+            .is_some_and(|p| matches!(p.1, 'e' | 'E'))
+        && chars.get(*i + 1).is_some_and(|p| p.1.is_ascii_digit())
+    {
+        *i += 1;
+        while *i < chars.len() && body(chars[*i].1) {
+            *i += 1;
+        }
+    }
+}
+
+/// Length in chars of the char literal opening at `chars[i] == '\''`, or
+/// `None` when this quote starts a lifetime (or is stray). Mirrors the
+/// legacy `char_literal_len` exactly, including its same-line restriction.
+fn char_lit_len(chars: &[(usize, char)], i: usize) -> Option<usize> {
+    let line_len = chars[i..]
+        .iter()
+        .position(|p| p.1 == '\n')
+        .unwrap_or(chars.len() - i);
+    let n = i + line_len;
+    let get = |j: usize| if j < n { Some(chars[j].1) } else { None };
+    if i + 1 >= n {
+        return None;
+    }
+    if get(i + 1) == Some('\\') {
+        if get(i + 2) == Some('u') {
+            for j in i + 3..n {
+                if chars[j].1 == '\'' {
+                    return Some(j - i + 1);
+                }
+            }
+            return None;
+        }
+        if get(i + 3) == Some('\'') {
+            return Some(4);
+        }
+        return None;
+    }
+    if get(i + 2) == Some('\'') && get(i + 1) != Some('\'') {
+        return Some(3);
+    }
+    None
+}
+
+/// Project the token stream back into the legacy [`Stripped`] view:
+/// comments and literal contents blanked to spaces column-for-column,
+/// comment text captured per line, and every *closed* string literal
+/// recorded with its opening line/column. Byte-identical to
+/// `lexer::strip_source` on every input (pinned by the agreement sweep
+/// in `rust/tests/lint.rs`).
+pub fn to_stripped(src: &str, tokens: &[Token]) -> Stripped {
+    let mut out = Stripped {
+        code: vec![String::new()],
+        comments: vec![String::new()],
+        strings: Vec::new(),
+    };
+    let newline = |out: &mut Stripped| {
+        out.code.push(String::new());
+        out.comments.push(String::new());
+    };
+    for t in tokens {
+        let text = t.text(src);
+        match t.kind {
+            TokKind::Whitespace => {
+                for c in text.chars() {
+                    if c == '\n' {
+                        newline(&mut out);
+                    } else {
+                        out.code.last_mut().expect("non-empty").push(c);
+                    }
+                }
+            }
+            TokKind::Ident | TokKind::Lifetime | TokKind::Num | TokKind::Punct => {
+                out.code.last_mut().expect("non-empty").push_str(text);
+            }
+            TokKind::LineComment => {
+                for c in text.chars() {
+                    out.comments.last_mut().expect("non-empty").push(c);
+                    out.code.last_mut().expect("non-empty").push(' ');
+                }
+            }
+            TokKind::BlockComment { .. } => {
+                for c in text.chars() {
+                    if c == '\n' {
+                        newline(&mut out);
+                    } else {
+                        out.comments.last_mut().expect("non-empty").push(c);
+                        out.code.last_mut().expect("non-empty").push(' ');
+                    }
+                }
+            }
+            TokKind::Char => {
+                let m = text.chars().count();
+                let code = out.code.last_mut().expect("non-empty");
+                code.push('\'');
+                for _ in 0..m.saturating_sub(2) {
+                    code.push(' ');
+                }
+                code.push('\'');
+            }
+            TokKind::Str { closed } => {
+                blank_literal(&mut out, text, 0);
+                if closed {
+                    record_lit(&mut out, t, lit_slice(text, 1, 1));
+                }
+            }
+            TokKind::ByteStr { closed } => {
+                blank_literal(&mut out, text, 1);
+                if closed {
+                    record_lit(&mut out, t, lit_slice(text, 2, 1));
+                }
+            }
+            TokKind::RawStr {
+                closed,
+                hashes,
+                prefix,
+            } => {
+                blank_literal(&mut out, text, 0);
+                if closed {
+                    record_lit(&mut out, t, lit_slice(text, prefix + hashes + 1, 1 + hashes));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Blank a string-like token into the code view: the first `keep` chars
+/// pass through (the `b` of a byte string survives blanking in the
+/// legacy pass), everything else becomes a space, newlines split lines.
+fn blank_literal(out: &mut Stripped, text: &str, keep: usize) {
+    for (k, c) in text.chars().enumerate() {
+        if c == '\n' {
+            out.code.push(String::new());
+            out.comments.push(String::new());
+        } else if k < keep {
+            out.code.last_mut().expect("non-empty").push(c);
+        } else {
+            out.code.last_mut().expect("non-empty").push(' ');
+        }
+    }
+}
+
+/// The literal body: `text` minus `head` leading and `tail` trailing
+/// *chars* (ASCII here, but counted as chars for safety).
+fn lit_slice(text: &str, head: usize, tail: usize) -> String {
+    let total = text.chars().count();
+    text.chars()
+        .skip(head)
+        .take(total.saturating_sub(head + tail))
+        .collect()
+}
+
+fn record_lit(out: &mut Stripped, t: &Token, content: String) {
+    out.strings.push(StrLit {
+        line: t.line,
+        col: t.col,
+        content,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::strip_source;
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<TokKind> {
+        lex(src).iter().map(|t| t.kind).collect()
+    }
+
+    /// Spans must tile the source exactly; concatenation reconstructs it.
+    fn assert_tiling(src: &str) {
+        let toks = lex(src);
+        let mut at = 0usize;
+        let mut rebuilt = String::new();
+        for t in &toks {
+            assert_eq!(t.lo, at, "gap before token at byte {at} in {src:?}");
+            rebuilt.push_str(t.text(src));
+            at = t.hi;
+        }
+        assert_eq!(at, src.len(), "tokens stop early in {src:?}");
+        assert_eq!(rebuilt, src);
+    }
+
+    /// The token projection must agree with the legacy strip pass.
+    fn assert_agrees(src: &str) {
+        let legacy = strip_source(src);
+        let toks = lex(src);
+        let ours = to_stripped(src, &toks);
+        assert_eq!(ours.code, legacy.code, "code view drifted for {src:?}");
+        assert_eq!(ours.comments, legacy.comments, "comments drifted for {src:?}");
+        assert_eq!(ours.strings, legacy.strings, "strings drifted for {src:?}");
+    }
+
+    #[test]
+    fn basic_token_stream() {
+        let src = "fn f(x: u32) -> f64 { x as f64 * 0.5 }";
+        assert_tiling(src);
+        let idents: Vec<&str> = lex(src)
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text(src))
+            .collect();
+        assert_eq!(idents, ["fn", "f", "x", "u32", "f64", "x", "as", "f64"]);
+    }
+
+    #[test]
+    fn string_kinds_and_contents() {
+        let src = "let a = \"s\"; let b = b\"y\"; let c = r#\"raw \" q\"#; let d = br\"z\";";
+        assert_tiling(src);
+        assert_agrees(src);
+        let toks = lex(src);
+        let strs: Vec<TokKind> = toks
+            .iter()
+            .filter(|t| {
+                matches!(
+                    t.kind,
+                    TokKind::Str { .. } | TokKind::ByteStr { .. } | TokKind::RawStr { .. }
+                )
+            })
+            .map(|t| t.kind)
+            .collect();
+        assert_eq!(
+            strs,
+            [
+                TokKind::Str { closed: true },
+                TokKind::ByteStr { closed: true },
+                TokKind::RawStr {
+                    closed: true,
+                    hashes: 1,
+                    prefix: 1
+                },
+                TokKind::RawStr {
+                    closed: true,
+                    hashes: 0,
+                    prefix: 2
+                },
+            ]
+        );
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let src = "let q = '\"'; fn f<'a>(x: &'a str) -> char { '\\n' }";
+        assert_tiling(src);
+        assert_agrees(src);
+        let toks = lex(src);
+        assert_eq!(
+            toks.iter().filter(|t| t.kind == TokKind::Char).count(),
+            2,
+            "{toks:?}"
+        );
+        assert_eq!(toks.iter().filter(|t| t.kind == TokKind::Lifetime).count(), 2);
+    }
+
+    #[test]
+    fn comments_nest_and_span_lines() {
+        let src = "a /* one /* two */ still */ b\nc // end\nd /* open\nmid\n*/ e";
+        assert_tiling(src);
+        assert_agrees(src);
+    }
+
+    #[test]
+    fn unterminated_constructs_are_total() {
+        for src in ["\"open", "/* open", "r#\"open", "b\"open", "let a = 'x", "fn f() {"] {
+            assert_tiling(src);
+            assert_agrees(src);
+        }
+    }
+
+    #[test]
+    fn line_and_col_are_char_based() {
+        let src = "let s = \"héllo\";\nlet 'x = 0;";
+        let toks = lex(src);
+        let lit = toks
+            .iter()
+            .find(|t| matches!(t.kind, TokKind::Str { .. }))
+            .expect("literal");
+        assert_eq!((lit.line, lit.col), (0, 8));
+        // The second line starts at col 0 despite the multi-byte char above.
+        let second = toks.iter().find(|t| t.line == 1).expect("line 1 token");
+        assert_eq!(second.col, 0);
+        assert_agrees(src);
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_methods_or_ranges() {
+        let src = "a(0.5.total_cmp(&b), 1..4, 1e-3, 0xFF_u32)";
+        assert_tiling(src);
+        let nums: Vec<&str> = lex(src)
+            .iter()
+            .filter(|t| t.kind == TokKind::Num)
+            .map(|t| t.text(src))
+            .collect();
+        assert_eq!(nums, ["0.5", "1", "4", "1e-3", "0xFF_u32"]);
+    }
+
+    #[test]
+    fn delimiter_tree_matches_pairs() {
+        let src = "fn f(a: [u8; 4]) { g(h(1), [2]); }";
+        let p = ParsedFile::parse(src);
+        for (&open, &close) in &p.pairs {
+            let o = p.tokens[open].text(src);
+            let c = p.tokens[close].text(src);
+            let expect = match o {
+                "(" => ")",
+                "[" => "]",
+                "{" => "}",
+                other => panic!("non-delimiter open {other:?}"),
+            };
+            assert_eq!(c, expect);
+            assert!(open < close);
+        }
+        assert_eq!(p.pairs.len(), 6, "{:?}", p.pairs);
+    }
+
+    #[test]
+    fn unbalanced_input_keeps_partial_pairs() {
+        let p = ParsedFile::parse("fn f() { g(1); ]");
+        // `(`..`)` inside matches; the stray `]` and unclosed `{` do not.
+        assert_eq!(p.pairs.len(), 2, "{:?}", p.pairs);
+    }
+
+    #[test]
+    fn raw_identifiers_lex_as_idents() {
+        let src = "let r#fn = r#type;";
+        assert_tiling(src);
+        let toks = lex(src);
+        let raws: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident && t.text(src).starts_with("r#"))
+            .map(|t| t.text(src))
+            .collect();
+        assert_eq!(raws, ["r#fn", "r#type"]);
+    }
+
+    #[test]
+    fn byte_string_keeps_its_prefix_in_code_view() {
+        assert_agrees("let b = b\"bytes\"; let n = xb\"not a byte string\";");
+    }
+
+    #[test]
+    fn trivia_kind_mix() {
+        let src = "x\t y\n\n z";
+        assert_eq!(
+            kinds(src),
+            [
+                TokKind::Ident,
+                TokKind::Whitespace,
+                TokKind::Ident,
+                TokKind::Whitespace,
+                TokKind::Ident
+            ]
+        );
+    }
+}

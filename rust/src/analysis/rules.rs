@@ -1,16 +1,22 @@
-//! The determinism rule set (D1–D6) and the metric taxonomy cross-check
-//! (X1). See DESIGN.md §13 for the rule table with rationale and fixes.
+//! The determinism rule set (D1–D7), calendar-misuse rules (C1–C2),
+//! suppression hygiene (W1), and the metric taxonomy cross-check (X1).
+//! Cross-artifact rules (X2–X5) live in [`super::artifacts`]. See
+//! DESIGN.md §13 for the rule table with rationale and fixes.
 //!
-//! Every rule matches against the *stripped* source from
-//! [`super::lexer::strip_source`], so patterns inside comments or string
-//! literals can never fire. Matching is token-ish string scanning, not a
-//! parse: the rules are tuned to the idioms rustfmt actually produces in
-//! this tree, and the fixture corpus in `rust/tests/lint_fixtures/` pins
-//! both the positive and negative space.
+//! Every file is parsed once by [`super::parse`] into a spanned token
+//! stream plus its brace tree. Token-native rules (D2, D4–D7, C1, C2)
+//! walk the stream directly — which is what lets D7 follow a wall-clock
+//! value through `let` bindings across lines, and C1 associate a match
+//! arm's payload decode with its `EventKind`. The line-oriented rules
+//! (D1, D3, X1) still run on the stripped projection
+//! ([`super::parse::to_stripped`]), which is byte-identical to the
+//! legacy strip pass, so their behavior is unchanged. The fixture corpus
+//! in `rust/tests/lint_fixtures/` pins both the positive and negative
+//! space of every rule.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
-use super::lexer::strip_source;
+use super::parse::{to_stripped, ParsedFile, TokKind, Token};
 use super::suppress::{in_ranges, test_ranges, Suppressions};
 
 /// Rule ids with one-line summaries, in report order.
@@ -21,7 +27,15 @@ pub const RULE_TABLE: &[(&str, &str)] = &[
     ("D4", "unseeded randomness"),
     ("D5", "println!/eprintln! in library code; use log::"),
     ("D6", "unwrap()/expect() in simulation paths without lint:allow"),
+    ("D7", "wall-clock value flowing into sim-time arithmetic or a sim-path call"),
+    ("C1", "calendar payload to_bits/from_bits encode-decode mismatch"),
+    ("C2", "sim clock field mutated outside coordinator/"),
+    ("W1", "lint:allow directive that waived no finding"),
     ("X1", "metric family declared/emitted mismatch"),
+    ("X2", "config key without a main.rs CLI surface or DESIGN.md mention"),
+    ("X3", "experiment without a CI smoke step or ROADMAP quickstart line"),
+    ("X4", "lint rule without a fixture pair or DESIGN.md §13 row"),
+    ("X5", "BENCH_*.json entry naming a bench that no longer exists"),
 ];
 
 /// Is `id` a known rule id?
@@ -48,6 +62,25 @@ pub struct MetricUsage {
     pub emitted: BTreeMap<String, (String, usize)>,
 }
 
+/// Calendar payload-encoding evidence, accumulated across files and
+/// reconciled by [`cross_check`] into C1 findings. Keyed by `EventKind`
+/// variant name; each site records whether it used the bits encoding
+/// (`to_bits` at a register, `from_bits` at a decode) plus (file,
+/// 1-based line).
+#[derive(Debug, Default)]
+pub struct CalendarUsage {
+    pub registers: BTreeMap<String, Vec<(bool, String, usize)>>,
+    pub decodes: BTreeMap<String, Vec<(bool, String, usize)>>,
+}
+
+/// All cross-file evidence a scan accumulates for the reconciliation
+/// pass: the X1 metric taxonomy and the C1 calendar payload protocol.
+#[derive(Debug, Default)]
+pub struct CrossUsage {
+    pub metrics: MetricUsage,
+    pub calendar: CalendarUsage,
+}
+
 /// Result of scanning one file.
 #[derive(Debug, Default)]
 pub struct ScanResult {
@@ -56,9 +89,11 @@ pub struct ScanResult {
     pub suppressed: usize,
 }
 
-/// Module prefixes that legitimately read the wall clock (D2). These are
-/// the wall-domain side of the clock split in DESIGN.md §12; everything
-/// else must go through the engine `Clock`.
+/// Module prefixes that legitimately read the wall clock (D2/D7). These
+/// are the wall-domain side of the clock split in DESIGN.md §12;
+/// everything else must go through the engine `Clock`. D7 still applies
+/// *inside* the wall domain: even there, a wall value must not reach
+/// sim-time arithmetic.
 const WALL_ALLOW: &[&str] = &[
     "rust/src/server/",
     "rust/src/telemetry/",
@@ -88,6 +123,20 @@ const D6_SCOPE: &[&str] = &[
     "rust/src/util/rng.rs",
 ];
 
+/// Sim paths where a direct clock-field mutation (C2) bypasses the event
+/// calendar. `coordinator/` is deliberately absent: the calendar and the
+/// engine it drives are the sanctioned mutation sites.
+const C2_SCOPE: &[&str] = &[
+    "rust/src/cluster/",
+    "rust/src/gateway/",
+    "rust/src/delivery/",
+    "rust/src/qoe/",
+    "rust/src/workload/",
+    "rust/src/model/",
+    "rust/src/backend/sim.rs",
+    "rust/src/experiments/shard.rs",
+];
+
 /// Hash-collection methods whose call sites mean "iterate" (D1).
 const ITER_METHODS: &[&str] = &[
     "iter",
@@ -115,8 +164,8 @@ const EMIT_TOKENS: &[&str] = &[
     "declare_histogram(",
 ];
 
-const D4_TOKENS: &[&str] = &["thread_rng", "from_entropy", "rand::random", "getrandom"];
-const D5_TOKENS: &[&str] = &["println!", "eprintln!", "print!", "eprint!", "dbg!"];
+const D4_IDENTS: &[&str] = &["thread_rng", "from_entropy", "getrandom"];
+const D5_MACROS: &[&str] = &["println", "eprintln", "print", "eprint", "dbg"];
 const SORT_TOKENS: &[&str] = &[
     "sort_by(",
     "sort_unstable_by(",
@@ -125,11 +174,35 @@ const SORT_TOKENS: &[&str] = &[
     "max_by(",
 ];
 
+/// Sim-path entry points whose arguments are simulation times (D7 sink
+/// A): a tainted wall-clock value passed into one of these launders a
+/// wall read into the deterministic timeline.
+const D7_SINKS: &[&str] = &[
+    "register",
+    "advance",
+    "advance_to",
+    "schedule",
+    "step_until",
+    "run_until",
+];
+
+/// Duration-to-number conversions: the moment a wall `Duration` becomes
+/// arithmetic-ready (D7 sink B).
+const D7_DUR_CONV: &[&str] = &[
+    "as_secs_f64",
+    "as_secs_f32",
+    "as_millis",
+    "as_micros",
+    "as_nanos",
+];
+
 /// Scan one file. `rel` is the repo-relative path with `/` separators
-/// (it selects per-path rule scopes); X1 family sightings are added to
-/// `usage` for the cross-file reconciliation pass.
-pub fn scan_source(rel: &str, text: &str, usage: &mut MetricUsage) -> ScanResult {
-    let stripped = strip_source(text);
+/// (it selects per-path rule scopes); X1 family sightings and C1
+/// calendar payload evidence are added to `usage` for the cross-file
+/// reconciliation pass.
+pub fn scan_source(rel: &str, text: &str, usage: &mut CrossUsage) -> ScanResult {
+    let pf = ParsedFile::parse(text);
+    let stripped = to_stripped(text, &pf.tokens);
     let code = &stripped.code;
     let tranges = test_ranges(code);
     let mut sup = Suppressions::parse(&stripped);
@@ -180,12 +253,31 @@ pub fn scan_source(rel: &str, text: &str, usage: &mut MetricUsage) -> ScanResult
         }
     }
 
-    // D2: wall-clock reads outside the wall domain.
+    let src = pf.src.as_str();
+    let sig_tok = |k: usize| pf.sig.get(k).map(|&ti| &pf.tokens[ti]);
+
+    // D2: wall-clock reads outside the wall domain (one finding per
+    // line, like the strip-pass predecessor).
     if !WALL_ALLOW.iter().any(|p| rel.starts_with(p)) {
-        for (li, line) in code.iter().enumerate() {
-            if line.contains("Instant::now") || line.contains("SystemTime") {
+        let mut fired_lines: BTreeSet<usize> = BTreeSet::new();
+        for (k, &ti) in pf.sig.iter().enumerate() {
+            let t = &pf.tokens[ti];
+            if t.kind != TokKind::Ident {
+                continue;
+            }
+            let hit = match t.text(src) {
+                "SystemTime" => true,
+                "Instant" => {
+                    sig_tok(k + 1).is_some_and(|t| t.is_punct(src, ':'))
+                        && sig_tok(k + 2).is_some_and(|t| t.is_punct(src, ':'))
+                        && sig_tok(k + 3)
+                            .is_some_and(|t| t.kind == TokKind::Ident && t.text(src).starts_with("now"))
+                }
+                _ => false,
+            };
+            if hit && fired_lines.insert(t.line) {
                 let msg = "wall-clock read outside the wall domain; use the sim Clock";
-                emit("D2", li, msg.to_string(), &mut sup);
+                emit("D2", t.line, msg.to_string(), &mut sup);
             }
         }
     }
@@ -206,39 +298,114 @@ pub fn scan_source(rel: &str, text: &str, usage: &mut MetricUsage) -> ScanResult
     }
 
     // D4: unseeded randomness, anywhere (tests included — a test seeded
-    // from entropy cannot be rerun).
-    for (li, line) in code.iter().enumerate() {
-        if D4_TOKENS.iter().any(|t| line.contains(t)) {
-            let msg = "unseeded randomness; use util::rng::Rng with an explicit seed";
-            emit("D4", li, msg.to_string(), &mut sup);
+    // from entropy cannot be rerun). One finding per line.
+    {
+        let mut fired_lines: BTreeSet<usize> = BTreeSet::new();
+        for (k, &ti) in pf.sig.iter().enumerate() {
+            let t = &pf.tokens[ti];
+            if t.kind != TokKind::Ident {
+                continue;
+            }
+            let name = t.text(src);
+            let hit = D4_IDENTS.contains(&name)
+                || (name == "rand"
+                    && sig_tok(k + 1).is_some_and(|t| t.is_punct(src, ':'))
+                    && sig_tok(k + 2).is_some_and(|t| t.is_punct(src, ':'))
+                    && sig_tok(k + 3).is_some_and(|t| t.is_ident(src, "random")));
+            if hit && fired_lines.insert(t.line) {
+                let msg = "unseeded randomness; use util::rng::Rng with an explicit seed";
+                emit("D4", t.line, msg.to_string(), &mut sup);
+            }
         }
     }
 
-    // D5: direct prints in library code.
+    // D5: direct prints in library code. One finding per line.
     if is_src && !PRINT_ALLOW.contains(&rel) {
-        for (li, line) in code.iter().enumerate() {
-            if in_ranges(&tranges, li) {
+        let mut fired_lines: BTreeSet<usize> = BTreeSet::new();
+        for (k, &ti) in pf.sig.iter().enumerate() {
+            let t = &pf.tokens[ti];
+            if t.kind != TokKind::Ident
+                || !D5_MACROS.contains(&t.text(src))
+                || !sig_tok(k + 1).is_some_and(|t| t.is_punct(src, '!'))
+                || in_ranges(&tranges, t.line)
+            {
                 continue;
             }
-            if D5_TOKENS.iter().any(|t| line.contains(t)) {
+            if fired_lines.insert(t.line) {
                 let msg = "direct stdout/stderr print in library code; use log::";
-                emit("D5", li, msg.to_string(), &mut sup);
+                emit("D5", t.line, msg.to_string(), &mut sup);
             }
         }
     }
 
-    // D6: unwrap/expect in seeded simulation paths.
+    // D6: unwrap/expect in seeded simulation paths. Per occurrence, like
+    // the strip-pass predecessor's per-line substring count.
     if D6_SCOPE.iter().any(|p| rel.starts_with(p)) {
-        for (li, line) in code.iter().enumerate() {
-            if in_ranges(&tranges, li) {
+        for (k, &ti) in pf.sig.iter().enumerate() {
+            let t = &pf.tokens[ti];
+            if !t.is_punct(src, '.') || in_ranges(&tranges, t.line) {
                 continue;
             }
-            let count = line.matches(".unwrap()").count() + line.matches(".expect(").count();
-            for _ in 0..count {
+            let Some(name_tok) = sig_tok(k + 1) else { continue };
+            let hit = match name_tok.text(src) {
+                "unwrap" => {
+                    sig_tok(k + 2).is_some_and(|t| t.is_punct(src, '('))
+                        && sig_tok(k + 3).is_some_and(|t| t.is_punct(src, ')'))
+                }
+                "expect" => sig_tok(k + 2).is_some_and(|t| t.is_punct(src, '(')),
+                _ => false,
+            };
+            if hit {
                 let msg = "unwrap/expect in a sim path; handle it or lint:allow(D6, reason)";
-                emit("D6", li, msg.to_string(), &mut sup);
+                emit("D6", name_tok.line, msg.to_string(), &mut sup);
             }
         }
+    }
+
+    // D7: binding-aware wall-clock flow. Applies on every path — the
+    // wall domain may *read* the clock (D2 allows it there) but must not
+    // mix the value into sim-time arithmetic either.
+    for (li, msg) in d7_scan(&pf) {
+        emit("D7", li, msg, &mut sup);
+    }
+
+    // C2: direct mutation of a sim clock binding outside coordinator/.
+    if C2_SCOPE.iter().any(|p| rel.starts_with(p)) {
+        for (k, &ti) in pf.sig.iter().enumerate() {
+            let t = &pf.tokens[ti];
+            if t.kind != TokKind::Ident
+                || !matches!(t.text(src), "now" | "sim_now")
+                || in_ranges(&tranges, t.line)
+            {
+                continue;
+            }
+            if k > 0
+                && sig_tok(k - 1)
+                    .is_some_and(|p| p.kind == TokKind::Ident && matches!(p.text(src), "let" | "mut"))
+            {
+                continue; // a fresh binding, not a mutation
+            }
+            let Some(n1) = sig_tok(k + 1) else { continue };
+            let n2 = sig_tok(k + 2);
+            let plain_assign = n1.is_punct(src, '=')
+                && !n2.is_some_and(|t| t.is_punct(src, '=') || t.is_punct(src, '>'));
+            let compound_assign = matches!(n1.text(src), "+" | "-" | "*" | "/")
+                && n1.kind == TokKind::Punct
+                && n2.is_some_and(|t| t.is_punct(src, '=') && n1.hi == t.lo);
+            if plain_assign || compound_assign {
+                let msg = format!(
+                    "direct `{}` mutation outside coordinator/; advance time via the event calendar",
+                    t.text(src)
+                );
+                emit("C2", t.line, msg, &mut sup);
+            }
+        }
+    }
+
+    // C1 collection: register/decode sites with their EventKind and
+    // whether the payload went through the bits encoding.
+    if is_src {
+        c1_collect(&pf, rel, &tranges, &mut usage.calendar);
     }
 
     // X1 collection: record every `andes_*` family string next to an
@@ -257,14 +424,30 @@ pub fn scan_source(rel: &str, text: &str, usage: &mut MetricUsage) -> ScanResult
                 .map(|(a, b)| a <= lit.line && lit.line <= b)
                 .unwrap_or(false);
             let target = if in_decl {
-                &mut usage.declared
+                &mut usage.metrics.declared
             } else {
-                &mut usage.emitted
+                &mut usage.metrics.emitted
             };
             target
                 .entry(lit.content.clone())
                 .or_insert_with(|| (rel.to_string(), lit.line + 1));
         }
+    }
+
+    // W1: every directive above consulted its lines through `allows`;
+    // whatever remains unused is a stale waiver.
+    for (li, rule) in sup.unused() {
+        let excerpt: String = raw_lines
+            .get(li)
+            .map(|l| l.trim().chars().take(120).collect())
+            .unwrap_or_default();
+        findings.push(Finding {
+            rule: "W1",
+            file: rel.to_string(),
+            line: li + 1,
+            excerpt,
+            message: format!("unused suppression: lint:allow({rule}) waived no finding"),
+        });
     }
 
     ScanResult {
@@ -273,11 +456,12 @@ pub fn scan_source(rel: &str, text: &str, usage: &mut MetricUsage) -> ScanResult
     }
 }
 
-/// Reconcile declared vs emitted metric families into X1 findings.
-pub fn cross_check(usage: &MetricUsage) -> Vec<Finding> {
+/// Reconcile the cross-file evidence: declared vs emitted metric
+/// families (X1) and calendar payload encode/decode protocol (C1).
+pub fn cross_check(usage: &CrossUsage) -> Vec<Finding> {
     let mut findings = Vec::new();
-    for (fam, (file, line)) in &usage.emitted {
-        if !usage.declared.contains_key(fam) {
+    for (fam, (file, line)) in &usage.metrics.emitted {
+        if !usage.metrics.declared.contains_key(fam) {
             findings.push(Finding {
                 rule: "X1",
                 file: file.clone(),
@@ -287,8 +471,8 @@ pub fn cross_check(usage: &MetricUsage) -> Vec<Finding> {
             });
         }
     }
-    for (fam, (file, line)) in &usage.declared {
-        if !usage.emitted.contains_key(fam) {
+    for (fam, (file, line)) in &usage.metrics.declared {
+        if !usage.metrics.emitted.contains_key(fam) {
             findings.push(Finding {
                 rule: "X1",
                 file: file.clone(),
@@ -298,7 +482,517 @@ pub fn cross_check(usage: &MetricUsage) -> Vec<Finding> {
             });
         }
     }
+    for (kind, regs) in &usage.calendar.registers {
+        let any_enc = regs.iter().any(|&(enc, _, _)| enc);
+        let any_raw = regs.iter().any(|&(enc, _, _)| !enc);
+        if any_enc && any_raw {
+            for (_, file, line) in regs.iter().filter(|&&(enc, _, _)| !enc) {
+                findings.push(Finding {
+                    rule: "C1",
+                    file: file.clone(),
+                    line: *line,
+                    excerpt: format!("EventKind::{kind}"),
+                    message: format!(
+                        "payload for EventKind::{kind} is f64::to_bits-encoded elsewhere \
+                         but registered raw here"
+                    ),
+                });
+            }
+        }
+        for (decoded, file, line) in usage.calendar.decodes.get(kind).into_iter().flatten() {
+            if any_enc && !decoded {
+                findings.push(Finding {
+                    rule: "C1",
+                    file: file.clone(),
+                    line: *line,
+                    excerpt: format!("EventKind::{kind}"),
+                    message: format!(
+                        "payload for EventKind::{kind} is f64::to_bits-encoded; \
+                         decode it with f64::from_bits"
+                    ),
+                });
+            } else if !any_enc && *decoded {
+                findings.push(Finding {
+                    rule: "C1",
+                    file: file.clone(),
+                    line: *line,
+                    excerpt: format!("EventKind::{kind}"),
+                    message: format!(
+                        "payload for EventKind::{kind} is a raw id; \
+                         f64::from_bits here decodes garbage"
+                    ),
+                });
+            }
+        }
+    }
     findings
+}
+
+// --------------------------------------------------------------- D7 engine
+
+/// Binding-aware wall-clock flow, scoped per brace-tree block. Taint
+/// enters at a `let` whose statement mentions `Instant`/`SystemTime`
+/// (constructor call or type ascription) or at a typed fn param, then
+/// propagates one statement at a time through further `let` bindings.
+/// A finding fires when a tainted identifier (A) appears inside the
+/// argument list of a sim-path sink ([`D7_SINKS`]) or (B) shares a
+/// statement with a duration conversion, a binary arithmetic operator,
+/// and a sim-time identifier (`now`/`sim*`).
+fn d7_scan(pf: &ParsedFile) -> Vec<(usize, String)> {
+    let src = pf.src.as_str();
+    let mut out = Vec::new();
+    let mut scopes: Vec<BTreeMap<String, usize>> = vec![BTreeMap::new()];
+    let mut pending_fn: BTreeMap<String, usize> = BTreeMap::new();
+    let mut stmt: Vec<usize> = Vec::new(); // sig positions of the current statement
+
+    let mut k = 0usize;
+    while k < pf.sig.len() {
+        let t = &pf.tokens[pf.sig[k]];
+        if t.kind == TokKind::Punct {
+            match t.text(src).chars().next() {
+                Some('{') => {
+                    d7_flush(pf, &stmt, &mut scopes, &mut out);
+                    stmt.clear();
+                    scopes.push(std::mem::take(&mut pending_fn));
+                }
+                Some('}') => {
+                    d7_flush(pf, &stmt, &mut scopes, &mut out);
+                    stmt.clear();
+                    if scopes.len() > 1 {
+                        scopes.pop();
+                    }
+                }
+                Some(';') => {
+                    d7_flush(pf, &stmt, &mut scopes, &mut out);
+                    stmt.clear();
+                }
+                _ => stmt.push(k),
+            }
+        } else {
+            if t.is_ident(src, "fn") {
+                pending_fn = d7_fn_param_taints(pf, k);
+            }
+            stmt.push(k);
+        }
+        k += 1;
+    }
+    d7_flush(pf, &stmt, &mut scopes, &mut out);
+    out
+}
+
+/// Typed wall-clock fn params: `fn f(t0: Instant, …)` taints `t0` for
+/// the function body about to open.
+fn d7_fn_param_taints(pf: &ParsedFile, fn_pos: usize) -> BTreeMap<String, usize> {
+    let src = pf.src.as_str();
+    let mut taints = BTreeMap::new();
+    // Find the parameter list: the first `(` within a few tokens of `fn`.
+    let mut open_pos = None;
+    for j in fn_pos + 1..(fn_pos + 8).min(pf.sig.len()) {
+        if pf.tokens[pf.sig[j]].is_punct(src, '(') {
+            open_pos = Some(j);
+            break;
+        }
+    }
+    let Some(open_pos) = open_pos else {
+        return taints;
+    };
+    let open_ti = pf.sig[open_pos];
+    let Some(&close_ti) = pf.pairs.get(&open_ti) else {
+        return taints;
+    };
+    // Split the parameter region at top-level commas.
+    let mut depth = 0usize;
+    let mut param: Vec<&Token> = Vec::new();
+    let mut flush_param = |param: &mut Vec<&Token>, taints: &mut BTreeMap<String, usize>| {
+        let wall = param
+            .iter()
+            .any(|t| t.kind == TokKind::Ident && matches!(t.text(src), "Instant" | "SystemTime"));
+        if wall {
+            if let Some(name) = param
+                .iter()
+                .find(|t| t.kind == TokKind::Ident && !matches!(t.text(src), "mut" | "self"))
+            {
+                taints.insert(name.text(src).to_string(), name.line);
+            }
+        }
+        param.clear();
+    };
+    for j in open_pos + 1..pf.sig.len() {
+        let ti = pf.sig[j];
+        if ti >= close_ti {
+            break;
+        }
+        let t = &pf.tokens[ti];
+        if t.kind == TokKind::Punct {
+            match t.text(src).chars().next() {
+                Some('(' | '[' | '{') => depth += 1,
+                Some(')' | ']' | '}') => depth = depth.saturating_sub(1),
+                Some(',') if depth == 0 => {
+                    flush_param(&mut param, &mut taints);
+                    continue;
+                }
+                _ => {}
+            }
+        }
+        param.push(t);
+    }
+    flush_param(&mut param, &mut taints);
+    taints
+}
+
+/// Analyze one buffered statement: update taint bindings, then check the
+/// two sink shapes.
+fn d7_flush(
+    pf: &ParsedFile,
+    stmt: &[usize],
+    scopes: &mut [BTreeMap<String, usize>],
+    out: &mut Vec<(usize, String)>,
+) {
+    if stmt.is_empty() {
+        return;
+    }
+    let src = pf.src.as_str();
+    let toks: Vec<&Token> = stmt.iter().map(|&k| &pf.tokens[pf.sig[k]]).collect();
+    let tainted_at = |name: &str, scopes: &[BTreeMap<String, usize>]| -> Option<usize> {
+        scopes.iter().rev().find_map(|s| s.get(name).copied())
+    };
+
+    // Sink A: a tainted ident inside a sim sink's argument list.
+    let mut fired = false;
+    for (j, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || !D7_SINKS.contains(&t.text(src)) {
+            continue;
+        }
+        if j > 0 && toks[j - 1].is_ident(src, "fn") {
+            continue; // a declaration, not a call
+        }
+        if !toks.get(j + 1).is_some_and(|t| t.is_punct(src, '(')) {
+            continue;
+        }
+        // Argument region: to the matching close, or the statement's end
+        // if a block boundary cut the buffer short.
+        let mut depth = 0usize;
+        for arg in &toks[j + 1..] {
+            match (arg.kind, arg.text(src).chars().next()) {
+                (TokKind::Punct, Some('(' | '[' | '{')) => depth += 1,
+                (TokKind::Punct, Some(')' | ']' | '}')) => {
+                    if depth <= 1 {
+                        break;
+                    }
+                    depth -= 1;
+                }
+                _ => {}
+            }
+            if arg.kind == TokKind::Ident {
+                if let Some(bound) = tainted_at(arg.text(src), scopes) {
+                    out.push((
+                        arg.line,
+                        format!(
+                            "wall-clock value `{}` (bound at line {}) passed to sim-path \
+                             `{}`; derive sim times from the calendar instead",
+                            arg.text(src),
+                            bound + 1,
+                            t.text(src)
+                        ),
+                    ));
+                    fired = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    // Sink B: tainted ident + duration conversion + binary arithmetic +
+    // a sim-time ident, all in one statement.
+    if !fired {
+        let tainted_tok = toks
+            .iter()
+            .find(|t| t.kind == TokKind::Ident && tainted_at(t.text(src), scopes).is_some());
+        let has_conv = toks
+            .iter()
+            .any(|t| t.kind == TokKind::Ident && D7_DUR_CONV.contains(&t.text(src)));
+        // Binary arithmetic: the operator must follow a value (ident,
+        // number, or closing paren) so unary minus and `->` stay out.
+        let has_arith = toks.iter().enumerate().any(|(j, t)| {
+            t.kind == TokKind::Punct
+                && matches!(t.text(src), "+" | "-" | "*" | "/")
+                && !toks.get(j + 1).is_some_and(|n| n.is_punct(src, '>')) // `->`
+                && j > 0
+                && (matches!(toks[j - 1].kind, TokKind::Ident | TokKind::Num)
+                    || toks[j - 1].is_punct(src, ')'))
+        });
+        let sim_ident = toks.iter().any(|t| {
+            t.kind == TokKind::Ident
+                && (matches!(t.text(src), "now" | "sim" | "sim_now")
+                    || t.text(src).starts_with("sim_"))
+                && tainted_at(t.text(src), scopes).is_none()
+        });
+        if let Some(t) = tainted_tok {
+            if has_conv && has_arith && sim_ident {
+                let bound = tainted_at(t.text(src), scopes).unwrap_or(t.line);
+                out.push((
+                    t.line,
+                    format!(
+                        "wall-clock value `{}` (bound at line {}) mixed into sim-time \
+                         arithmetic; keep wall and sim clocks in separate domains",
+                        t.text(src),
+                        bound + 1
+                    ),
+                ));
+            }
+        }
+    }
+
+    // Binding update last: `let x = …` taints `x` for *subsequent*
+    // statements (the binding statement itself was analyzed above).
+    if toks.first().is_some_and(|t| t.is_ident(src, "let")) {
+        let name = toks
+            .iter()
+            .skip(1)
+            .take_while(|t| !t.is_punct(src, '=') && !t.is_punct(src, ':'))
+            .find(|t| t.kind == TokKind::Ident && !t.is_ident(src, "mut"));
+        if let Some(name_tok) = name {
+            let wall_source = toks
+                .iter()
+                .any(|t| t.kind == TokKind::Ident && matches!(t.text(src), "Instant" | "SystemTime"));
+            let tainted_src = toks
+                .iter()
+                .skip(1)
+                .any(|t| {
+                    t.kind == TokKind::Ident
+                        && t.lo != name_tok.lo
+                        && tainted_at(t.text(src), scopes).is_some()
+                });
+            let scope = scopes.last_mut().expect("scope stack non-empty");
+            if wall_source || tainted_src {
+                scope.insert(name_tok.text(src).to_string(), name_tok.line);
+            } else {
+                // A rebinding from a clean source clears older taint.
+                scope.remove(name_tok.text(src));
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------- C1 engine
+
+/// Collect calendar payload evidence from one file: `register(…)` calls
+/// naming an `EventKind::K` (encoded iff the argument list contains
+/// `to_bits`) and payload reads (`.payload`), attributed to a kind
+/// either through an enclosing `EventKind::K =>` match arm or — when the
+/// enclosing fn registers exactly one kind — through that fn.
+fn c1_collect(
+    pf: &ParsedFile,
+    rel: &str,
+    tranges: &[(usize, usize)],
+    cal: &mut CalendarUsage,
+) {
+    let src = pf.src.as_str();
+    let sig_tok = |k: usize| pf.sig.get(k).map(|&ti| &pf.tokens[ti]);
+
+    // Function body ranges (token-index spans), for the single-kind
+    // attribution fallback.
+    let mut fn_bodies: Vec<(usize, usize)> = Vec::new();
+    for (k, &ti) in pf.sig.iter().enumerate() {
+        if !pf.tokens[ti].is_ident(src, "fn") {
+            continue;
+        }
+        for j in k + 1..pf.sig.len() {
+            let tj = pf.sig[j];
+            if pf.tokens[tj].is_punct(src, '{') {
+                if let Some(&close) = pf.pairs.get(&tj) {
+                    fn_bodies.push((tj, close));
+                }
+                break;
+            }
+            if pf.tokens[tj].is_punct(src, ';') {
+                break; // trait method signature without a body
+            }
+        }
+    }
+    let fn_of = |ti: usize| -> Option<usize> {
+        fn_bodies
+            .iter()
+            .enumerate()
+            .filter(|(_, &(a, b))| a < ti && ti < b)
+            .max_by_key(|(_, &(a, _))| a)
+            .map(|(i, _)| i)
+    };
+
+    // Register sites.
+    let mut fn_kinds: BTreeMap<usize, BTreeSet<String>> = BTreeMap::new();
+    for (k, &ti) in pf.sig.iter().enumerate() {
+        let t = &pf.tokens[ti];
+        if !t.is_ident(src, "register") || in_ranges(tranges, t.line) {
+            continue;
+        }
+        if k > 0 && sig_tok(k - 1).is_some_and(|p| p.is_ident(src, "fn")) {
+            continue; // the declaration of a register method
+        }
+        if !sig_tok(k + 1).is_some_and(|t| t.is_punct(src, '(')) {
+            continue;
+        }
+        let open_ti = pf.sig[k + 1];
+        let close_ti = match pf.pairs.get(&open_ti) {
+            Some(&c) => c,
+            None => pf.tokens.len(),
+        };
+        let group: Vec<&Token> = pf
+            .sig
+            .iter()
+            .skip(k + 2)
+            .take_while(|&&tj| tj < close_ti)
+            .map(|&tj| &pf.tokens[tj])
+            .collect();
+        let encoded = group
+            .iter()
+            .any(|t| t.kind == TokKind::Ident && t.text(src) == "to_bits");
+        for (j, g) in group.iter().enumerate() {
+            if g.is_ident(src, "EventKind")
+                && group.get(j + 1).is_some_and(|t| t.is_punct(src, ':'))
+                && group.get(j + 2).is_some_and(|t| t.is_punct(src, ':'))
+            {
+                if let Some(kind_tok) =
+                    group.get(j + 3).filter(|t| t.kind == TokKind::Ident)
+                {
+                    let kind = kind_tok.text(src).to_string();
+                    cal.registers.entry(kind.clone()).or_default().push((
+                        encoded,
+                        rel.to_string(),
+                        t.line + 1,
+                    ));
+                    if let Some(f) = fn_of(ti) {
+                        fn_kinds.entry(f).or_default().insert(kind);
+                    }
+                }
+            }
+        }
+    }
+
+    // Match-arm decode sites: `EventKind::K => <body>` where the body
+    // reads `.payload`.
+    let mut claimed: BTreeSet<usize> = BTreeSet::new(); // token indices of claimed `payload`
+    for (k, &ti) in pf.sig.iter().enumerate() {
+        let t = &pf.tokens[ti];
+        if !t.is_ident(src, "EventKind")
+            || !sig_tok(k + 1).is_some_and(|t| t.is_punct(src, ':'))
+            || !sig_tok(k + 2).is_some_and(|t| t.is_punct(src, ':'))
+        {
+            continue;
+        }
+        let Some(kind_tok) = sig_tok(k + 3).filter(|t| t.kind == TokKind::Ident) else {
+            continue;
+        };
+        // Arrow: `=>` — possibly after a pattern binding like `(id)`.
+        let mut arrow = None;
+        for j in k + 4..(k + 12).min(pf.sig.len()) {
+            let a = &pf.tokens[pf.sig[j]];
+            if a.is_punct(src, '=')
+                && sig_tok(j + 1).is_some_and(|b| b.is_punct(src, '>') && a.hi == b.lo)
+            {
+                arrow = Some(j);
+                break;
+            }
+            if a.is_punct(src, ',') || a.is_punct(src, '{') || a.is_punct(src, ';') {
+                break;
+            }
+        }
+        let Some(arrow) = arrow else { continue };
+        if in_ranges(tranges, t.line) {
+            continue;
+        }
+        // Arm body: a brace block, or tokens up to the top-level comma.
+        let body_start = arrow + 2;
+        let mut body: Vec<usize> = Vec::new(); // sig positions
+        if sig_tok(body_start).is_some_and(|t| t.is_punct(src, '{')) {
+            let open_ti = pf.sig[body_start];
+            let close_ti = pf.pairs.get(&open_ti).copied().unwrap_or(pf.tokens.len());
+            for j in body_start..pf.sig.len() {
+                if pf.sig[j] > close_ti {
+                    break;
+                }
+                body.push(j);
+            }
+        } else {
+            let mut depth = 0usize;
+            for j in body_start..pf.sig.len() {
+                let b = &pf.tokens[pf.sig[j]];
+                if b.kind == TokKind::Punct {
+                    match b.text(src).chars().next() {
+                        Some('(' | '[' | '{') => depth += 1,
+                        Some(')' | ']' | '}') => {
+                            if depth == 0 {
+                                break;
+                            }
+                            depth -= 1;
+                        }
+                        Some(',') if depth == 0 => break,
+                        _ => {}
+                    }
+                }
+                body.push(j);
+            }
+        }
+        let mut reads_payload = false;
+        for (bi, &j) in body.iter().enumerate() {
+            if pf.tokens[pf.sig[j]].is_punct(src, '.')
+                && body
+                    .get(bi + 1)
+                    .is_some_and(|&j2| pf.tokens[pf.sig[j2]].is_ident(src, "payload"))
+            {
+                reads_payload = true;
+                claimed.insert(pf.sig[body[bi + 1]]);
+            }
+        }
+        if reads_payload {
+            let decoded = body
+                .iter()
+                .any(|&j| pf.tokens[pf.sig[j]].is_ident(src, "from_bits"));
+            cal.decodes
+                .entry(kind_tok.text(src).to_string())
+                .or_default()
+                .push((decoded, rel.to_string(), kind_tok.line + 1));
+        }
+    }
+
+    // Fallback decode sites: `.payload` outside any claimed arm, in a fn
+    // that registers exactly one kind.
+    for (k, &ti) in pf.sig.iter().enumerate() {
+        let t = &pf.tokens[ti];
+        if !t.is_punct(src, '.')
+            || !sig_tok(k + 1).is_some_and(|t| t.is_ident(src, "payload"))
+        {
+            continue;
+        }
+        let pay_ti = pf.sig[k + 1];
+        if claimed.contains(&pay_ti) || in_ranges(tranges, t.line) {
+            continue;
+        }
+        let Some(f) = fn_of(ti) else { continue };
+        let Some(kinds) = fn_kinds.get(&f) else { continue };
+        if kinds.len() != 1 {
+            continue;
+        }
+        let kind = kinds.iter().next().expect("len checked").clone();
+        // Statement extent: between the nearest boundaries around `k`.
+        let boundary = |t: &Token| {
+            t.kind == TokKind::Punct && matches!(t.text(src).chars().next(), Some(';' | '{' | '}'))
+        };
+        let mut lo = k;
+        while lo > 0 && !boundary(&pf.tokens[pf.sig[lo - 1]]) {
+            lo -= 1;
+        }
+        let mut hi = k;
+        while hi + 1 < pf.sig.len() && !boundary(&pf.tokens[pf.sig[hi + 1]]) {
+            hi += 1;
+        }
+        let decoded = (lo..=hi).any(|j| pf.tokens[pf.sig[j]].is_ident(src, "from_bits"));
+        cal.decodes.entry(kind).or_default().push((
+            decoded,
+            rel.to_string(),
+            pf.tokens[pay_ti].line + 1,
+        ));
+    }
 }
 
 // --------------------------------------------------------------- D1 helpers
@@ -514,7 +1208,7 @@ mod tests {
     use super::*;
 
     fn scan(rel: &str, text: &str) -> Vec<Finding> {
-        let mut usage = MetricUsage::default();
+        let mut usage = CrossUsage::default();
         scan_source(rel, text, &mut usage).findings
     }
 
@@ -567,15 +1261,124 @@ mod tests {
     fn d6_suppression_with_reason() {
         let src = "fn f(v: &[u8]) {\n // lint:allow(D6, slice checked non-empty above)\n \
                    v.first().unwrap();\n}";
-        let mut usage = MetricUsage::default();
+        let mut usage = CrossUsage::default();
         let r = scan_source("rust/src/coordinator/x.rs", src, &mut usage);
         assert!(r.findings.is_empty());
         assert_eq!(r.suppressed, 1);
     }
 
     #[test]
+    fn d7_tracks_taint_across_lines_into_a_sink() {
+        // D2 is out of the way (wall domain) — only the flow fires.
+        let src = "fn f(cal: &mut EventCalendar) {\n\
+                   \x20let t0 = std::time::Instant::now();\n\
+                   \x20let dt = t0.elapsed();\n\
+                   \x20cal.register(dt.as_secs_f64(), EventKind::Arrival, 0);\n}";
+        let f = scan("rust/src/server/x.rs", src);
+        assert_eq!(f.iter().map(|f| f.rule).collect::<Vec<_>>(), vec!["D7"]);
+        assert_eq!(f[0].line, 4);
+        assert!(f[0].message.contains("`dt`"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn d7_fires_on_sim_arithmetic_mix() {
+        let src = "fn f(sim_now: f64, t0: std::time::Instant) -> f64 {\n\
+                   \x20let due = sim_now + t0.elapsed().as_secs_f64();\n\
+                   \x20due\n}";
+        let f = scan("rust/src/server/x.rs", src);
+        assert_eq!(f.iter().map(|f| f.rule).collect::<Vec<_>>(), vec!["D7"]);
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn d7_stays_silent_on_wall_only_profiling() {
+        // The engine's own profiling idiom: elapsed feeds a wall-side
+        // accumulator, no sim identifier in the statement.
+        let src = "fn f(m: &mut M) {\n\
+                   \x20let t0 = std::time::Instant::now();\n\
+                   \x20m.sched_seconds += t0.elapsed().as_secs_f64();\n}";
+        let f = scan("rust/src/server/x.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn d7_scopes_taint_to_blocks() {
+        // Taint dies with its block; the same name outside is clean.
+        let src = "fn f(cal: &mut C, sim_now: f64) {\n\
+                   \x20{ let t = std::time::Instant::now(); drop(t); }\n\
+                   \x20let t = sim_now;\n\
+                   \x20cal.register(t, EventKind::Arrival, 0);\n}";
+        let f = scan("rust/src/server/x.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn c2_flags_direct_clock_mutation() {
+        let src = "impl S {\n fn step(&mut self, dt: f64) {\n  self.now += dt;\n }\n\
+                   \x20fn reset(&mut self) {\n  self.now = 0.0;\n }\n}";
+        let f = scan("rust/src/gateway/x.rs", src);
+        assert_eq!(f.iter().map(|f| f.rule).collect::<Vec<_>>(), vec!["C2", "C2"]);
+        // The same text under coordinator/ is sanctioned.
+        assert!(scan("rust/src/coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn c2_ignores_bindings_comparisons_and_fields() {
+        let src = "struct S { now: f64 }\nfn f(s: &S) -> bool {\n\
+                   \x20let now = s.now;\n let mut now2 = now;\n now2 = 1.0;\n\
+                   \x20now == 0.0 || s.now >= 2.0\n}";
+        let f = scan("rust/src/gateway/x.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn c1_mismatch_reconciles_across_register_and_pop() {
+        let mut usage = CrossUsage::default();
+        let reg = "fn schedule(cal: &mut C, q: f64) {\n\
+                   \x20cal.register(1.0, EventKind::DeliveryAck, q.to_bits());\n}";
+        scan_source("rust/src/delivery/a.rs", reg, &mut usage);
+        let pop = "fn drain(cal: &mut C, out: &mut Vec<f64>) {\n\
+                   \x20while let Some(w) = cal.pop() {\n\
+                   \x20 match w.kind {\n\
+                   \x20  EventKind::DeliveryAck => out.push(w.payload as f64),\n\
+                   \x20  _ => {}\n\
+                   \x20 }\n\x20}\n}";
+        scan_source("rust/src/delivery/b.rs", pop, &mut usage);
+        let x = cross_check(&usage);
+        assert_eq!(x.iter().map(|f| f.rule).collect::<Vec<_>>(), vec!["C1"]);
+        assert_eq!(x[0].file, "rust/src/delivery/b.rs");
+        assert!(x[0].message.contains("from_bits"), "{}", x[0].message);
+    }
+
+    #[test]
+    fn c1_single_kind_fn_attribution_without_match() {
+        // The delivery idiom: a while-let pop loop with no match — the
+        // enclosing fn registers exactly one kind, so the read is
+        // attributed to it.
+        let mut usage = CrossUsage::default();
+        let src = "fn pump(cal: &mut C, v: f64) {\n\
+                   \x20cal.register(2.0, EventKind::DeliveryAck, v.to_bits());\n\
+                   \x20while let Some(w) = cal.pop() {\n\
+                   \x20 observe(f64::from_bits(w.payload));\n\x20}\n}";
+        scan_source("rust/src/delivery/c.rs", src, &mut usage);
+        assert!(cross_check(&usage).is_empty());
+        let sites = &usage.calendar.decodes["DeliveryAck"];
+        assert_eq!(sites.len(), 1);
+        assert!(sites[0].0, "decode should be recognized as from_bits");
+    }
+
+    #[test]
+    fn w1_reports_stale_waivers() {
+        let src = "// lint:allow(D2, the wall read moved away)\nfn f() {}\n";
+        let f = scan("rust/src/coordinator/x.rs", src);
+        assert_eq!(f.iter().map(|f| f.rule).collect::<Vec<_>>(), vec!["W1"]);
+        assert_eq!(f[0].line, 1);
+        assert!(f[0].message.contains("D2"), "{}", f[0].message);
+    }
+
+    #[test]
     fn x1_reconciles_declared_and_emitted() {
-        let mut usage = MetricUsage::default();
+        let mut usage = CrossUsage::default();
         let decl = "fn declare_base_families(r: &mut Registry) {\n \
                     r.declare_counter(\"andes_a_total\");\n \
                     r.declare_gauge(\"andes_ghost\");\n}";

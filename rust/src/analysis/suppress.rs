@@ -12,27 +12,54 @@
 //! findings on its own line; when the directive sits on a comment-only
 //! line it also covers the line immediately below, so it can be placed
 //! above the offending statement without fighting rustfmt's line width.
+//!
+//! Directives inside doc comments (`///`, `//!`, `/**`, `/*!`) are
+//! ignored: a documentation example that *shows* a directive must not
+//! waive anything in the file that documents it.
+//!
+//! Every directive carries identity: one that waives no finding is
+//! itself reported as a W1 finding (unused suppression), so stale
+//! waivers can't silently linger after the code they excused is fixed.
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::BTreeMap;
 
 use super::lexer::Stripped;
 
-/// Parsed `lint:allow` directives for one file, keyed by 0-based line.
+/// One parsed `lint:allow` directive with its consumption state.
+#[derive(Debug, Clone)]
+struct Directive {
+    /// 0-based line the directive's comment sits on.
+    line: usize,
+    rule: String,
+    used: bool,
+}
+
+/// Parsed `lint:allow` directives for one file.
 #[derive(Debug, Default)]
 pub struct Suppressions {
-    by_line: BTreeMap<usize, BTreeSet<String>>,
-    /// Lines whose directive was consulted at least once (for
-    /// unused-suppression accounting in the report).
-    used: usize,
+    directives: Vec<Directive>,
+    /// Covered line (0-based) → indices into `directives`.
+    by_line: BTreeMap<usize, Vec<usize>>,
+    /// Findings waived so far.
+    waived: usize,
 }
 
 impl Suppressions {
     /// Extract directives from the comment text of a stripped file.
     pub fn parse(stripped: &Stripped) -> Self {
-        let mut by_line: BTreeMap<usize, BTreeSet<String>> = BTreeMap::new();
+        let mut sup = Suppressions::default();
         for (li, com) in stripped.comments.iter().enumerate() {
+            if is_doc_comment(com) {
+                continue;
+            }
             for rule in directives(com) {
-                by_line.entry(li).or_default().insert(rule.clone());
+                let idx = sup.directives.len();
+                sup.directives.push(Directive {
+                    line: li,
+                    rule,
+                    used: false,
+                });
+                sup.by_line.entry(li).or_default().push(idx);
                 // Comment-only line: the directive covers the next line.
                 let code_only_ws = stripped
                     .code
@@ -40,29 +67,46 @@ impl Suppressions {
                     .map(|c| c.trim().is_empty())
                     .unwrap_or(true);
                 if code_only_ws {
-                    by_line.entry(li + 1).or_default().insert(rule);
+                    sup.by_line.entry(li + 1).or_default().push(idx);
                 }
             }
         }
-        Suppressions { by_line, used: 0 }
+        sup
     }
 
-    /// Does a directive on `line` (0-based) waive `rule`? Counts a hit.
+    /// Does a directive on `line` (0-based) waive `rule`? Counts a hit
+    /// and marks the matching directive(s) as used.
     pub fn allows(&mut self, line: usize, rule: &str) -> bool {
-        let hit = self
-            .by_line
-            .get(&line)
-            .map(|set| set.contains(rule))
-            .unwrap_or(false);
+        let mut hit = false;
+        if let Some(idxs) = self.by_line.get(&line) {
+            for &i in idxs {
+                if self.directives[i].rule == rule {
+                    self.directives[i].used = true;
+                    hit = true;
+                }
+            }
+        }
         if hit {
-            self.used += 1;
+            self.waived += 1;
         }
         hit
     }
 
     /// Number of findings waived through this file's directives.
     pub fn hits(&self) -> usize {
-        self.used
+        self.waived
+    }
+
+    /// Directives that waived nothing, as (0-based line, rule id) —
+    /// deduplicated, in source order. Reported as W1 findings.
+    pub fn unused(&self) -> Vec<(usize, String)> {
+        let mut out: Vec<(usize, String)> = Vec::new();
+        for d in &self.directives {
+            if !d.used && !out.iter().any(|(l, r)| *l == d.line && *r == d.rule) {
+                out.push((d.line, d.rule.clone()));
+            }
+        }
+        out
     }
 }
 
@@ -83,16 +127,27 @@ fn directives(comment: &str) -> Vec<String> {
     out
 }
 
-/// Rule ids look like `D1`..`D9` or `X1`..`X9`.
+/// Does this line's captured comment text open with a doc comment?
+/// (`////` is rustdoc's way of writing a *plain* comment, so it stays
+/// eligible for directives.)
+fn is_doc_comment(comment: &str) -> bool {
+    let t = comment.trim_start();
+    (t.starts_with("///") && !t.starts_with("////"))
+        || t.starts_with("//!")
+        || t.starts_with("/**")
+        || t.starts_with("/*!")
+}
+
+/// Rule ids look like `D1`..`D9`, `C1`..`C9`, `W1`..`W9`, or `X1`..`X9`.
 fn is_rule_id(s: &str) -> bool {
     let b = s.as_bytes();
-    b.len() == 2 && (b[0] == b'D' || b[0] == b'X') && b[1].is_ascii_digit()
+    b.len() == 2 && matches!(b[0], b'D' | b'C' | b'W' | b'X') && b[1].is_ascii_digit()
 }
 
 /// Inclusive 0-based line ranges covered by `#[cfg(test)]` blocks, found
 /// by brace-depth tracking from each attribute to its matching close.
-/// Rules that only govern shipping code (D1, D5, D6, X1) skip these
-/// ranges; tests are free to iterate hash maps or unwrap.
+/// Rules that only govern shipping code (D1, D5, D6, C1, C2, X1) skip
+/// these ranges; tests are free to iterate hash maps or unwrap.
 pub fn test_ranges(code: &[String]) -> Vec<(usize, usize)> {
     let mut ranges = Vec::new();
     let mut pending = false;
@@ -147,6 +202,7 @@ mod tests {
         assert!(!sup.allows(3, "D6"));
         assert!(!sup.allows(1, "D2"));
         assert_eq!(sup.hits(), 3);
+        assert!(sup.unused().is_empty(), "{:?}", sup.unused());
     }
 
     #[test]
@@ -154,6 +210,35 @@ mod tests {
         let s = strip_source("// lint:allow(banana)\n// lint:allow(D66)\nx.unwrap();");
         let mut sup = Suppressions::parse(&s);
         assert!(!sup.allows(2, "D6"));
+        assert!(sup.unused().is_empty());
+    }
+
+    #[test]
+    fn unconsumed_directives_surface_as_unused() {
+        let s = strip_source("// lint:allow(D2, stale)\nclean();\nx(); // lint:allow(C1)\n");
+        let mut sup = Suppressions::parse(&s);
+        assert!(sup.allows(2, "C1"));
+        assert_eq!(sup.unused(), vec![(0, "D2".to_string())]);
+    }
+
+    #[test]
+    fn doc_comment_directives_are_inert() {
+        let s = strip_source(
+            "//! // lint:allow(D6, doc example, not a waiver)\n/// lint:allow(D2, same)\nf();",
+        );
+        let sup = Suppressions::parse(&s);
+        assert!(sup.unused().is_empty(), "{:?}", sup.unused());
+        let mut sup = sup;
+        assert!(!sup.allows(0, "D6"));
+        assert!(!sup.allows(2, "D2"));
+    }
+
+    #[test]
+    fn extended_rule_prefixes_parse() {
+        let s = strip_source("// lint:allow(C2, sanctioned) lint:allow(W1, meta)\nx();");
+        let mut sup = Suppressions::parse(&s);
+        assert!(sup.allows(1, "C2"));
+        assert!(sup.allows(1, "W1"));
     }
 
     #[test]

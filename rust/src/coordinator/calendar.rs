@@ -21,17 +21,21 @@
 //!
 //! Cancellation is lazy: `cancel` marks the seq and the heap entry is
 //! dropped when it surfaces, so cancel is O(log n) and never reorders
-//! the heap. `len`/`is_empty` count only live wakeups.
+//! the heap. `len`/`is_empty` count only live wakeups. A per-kind index
+//! (`by_kind`) is maintained eagerly on register/cancel/pop, so
+//! [`EventCalendar::next_time_of`] answers in O(log n) instead of
+//! scanning the heap.
 
 use std::cmp::Ordering;
-use std::collections::{BTreeSet, BinaryHeap};
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 
 /// What a wakeup means to the subsystem that registered it. The kind
 /// never participates in ordering — two wakeups at the same time fire
 /// in registration (`seq`) order regardless of kind — it only lets an
 /// index user ask "when is the next X?" via
-/// [`EventCalendar::next_time_of`].
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// [`EventCalendar::next_time_of`]. (`Ord` exists solely to key the
+/// per-kind index; it has no scheduling meaning.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum EventKind {
     /// A workload request reaches the front door.
     Arrival,
@@ -116,13 +120,39 @@ impl Ord for Entry {
 #[derive(Default)]
 pub struct EventCalendar {
     heap: BinaryHeap<Entry>,
-    /// Seqs registered but not yet fired or cancelled.
-    live: BTreeSet<u64>,
+    /// Live wakeups: seq → (order-preserving time key, kind). Updated
+    /// eagerly on register/cancel/pop so it always mirrors exactly the
+    /// pending set (unlike the lazily-purged heap).
+    live: BTreeMap<u64, (u64, EventKind)>,
+    /// Per-kind index of live wakeups as (time key, seq), so the
+    /// earliest pending instant of one kind is the set's first element.
+    by_kind: BTreeMap<EventKind, BTreeSet<(u64, u64)>>,
     /// Cancelled seqs whose heap entries have not surfaced yet.
     cancelled: BTreeSet<u64>,
     next_seq: u64,
     fired: u64,
     last_fired: Option<f64>,
+}
+
+/// Map an `f64` to a `u64` whose unsigned order equals `total_cmp`
+/// order: flip all bits of negatives, flip only the sign bit of
+/// non-negatives. Bijective, so [`key_time`] recovers the exact bits.
+fn time_key(t: f64) -> u64 {
+    let b = t.to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b | (1 << 63)
+    }
+}
+
+/// Inverse of [`time_key`].
+fn key_time(k: u64) -> f64 {
+    if k >> 63 == 1 {
+        f64::from_bits(k & !(1 << 63))
+    } else {
+        f64::from_bits(!k)
+    }
 }
 
 impl EventCalendar {
@@ -135,19 +165,34 @@ impl EventCalendar {
         let seq = self.next_seq;
         self.next_seq += 1;
         self.heap.push(Entry(Wakeup { time, seq, kind, payload }));
-        self.live.insert(seq);
+        let key = time_key(time);
+        self.live.insert(seq, (key, kind));
+        self.by_kind.entry(kind).or_default().insert((key, seq));
         WakeupToken(seq)
     }
 
     /// Cancel a pending wakeup. Returns whether the token was live
     /// (false for already-fired, already-cancelled, or pre-`clear`
-    /// tokens — all inert).
+    /// tokens — all inert). The per-kind index drops the entry
+    /// immediately; the heap entry is dropped lazily when it surfaces.
     pub fn cancel(&mut self, token: WakeupToken) -> bool {
-        if self.live.remove(&token.0) {
+        if let Some((key, kind)) = self.live.remove(&token.0) {
+            self.drop_from_index(key, kind, token.0);
             self.cancelled.insert(token.0);
             true
         } else {
             false
+        }
+    }
+
+    /// Remove one wakeup from the per-kind index, pruning empty sets so
+    /// `by_kind` never accumulates dead kinds across a long run.
+    fn drop_from_index(&mut self, key: u64, kind: EventKind, seq: u64) {
+        if let Some(set) = self.by_kind.get_mut(&kind) {
+            set.remove(&(key, seq));
+            if set.is_empty() {
+                self.by_kind.remove(&kind);
+            }
         }
     }
 
@@ -175,15 +220,27 @@ impl EventCalendar {
         self.peek().map(|w| w.time)
     }
 
-    /// The earliest live fire time among wakeups of `kind`. O(n) scan
-    /// over the heap — fine for the small index-style calendars (defer
-    /// queues, sync timers) this serves, and deterministic regardless
-    /// of heap layout because an unordered min is order-independent.
+    /// The earliest live fire time among wakeups of `kind`. O(log n):
+    /// reads the first element of the eagerly-maintained per-kind index
+    /// (a BTreeSet of `(time key, seq)`, where the key preserves
+    /// `total_cmp` order). [`Self::next_time_of_scan`] is the brute
+    /// force this is property-tested against.
     pub fn next_time_of(&self, kind: EventKind) -> Option<f64> {
+        self.by_kind
+            .get(&kind)
+            .and_then(|set| set.first())
+            .map(|&(key, _)| key_time(key))
+    }
+
+    /// Reference implementation of [`Self::next_time_of`]: an O(n) scan
+    /// over the heap. Deterministic regardless of heap layout because an
+    /// unordered min is order-independent. Kept as the oracle for the
+    /// index-equivalence property test (and for debugging the index).
+    pub fn next_time_of_scan(&self, kind: EventKind) -> Option<f64> {
         let mut best: Option<(f64, u64)> = None;
         for e in self.heap.iter() {
             let w = &e.0;
-            if w.kind != kind || !self.live.contains(&w.seq) {
+            if w.kind != kind || !self.live.contains_key(&w.seq) {
                 continue;
             }
             let better = match best {
@@ -208,7 +265,9 @@ impl EventCalendar {
     pub fn pop(&mut self) -> Option<Wakeup> {
         self.purge();
         let w = self.heap.pop()?.0;
-        self.live.remove(&w.seq);
+        if let Some((key, kind)) = self.live.remove(&w.seq) {
+            self.drop_from_index(key, kind, w.seq);
+        }
         debug_assert!(
             self.last_fired.is_none_or(|last| !(w.time < last)),
             "calendar fired backwards: {} after {:?}",
@@ -246,6 +305,7 @@ impl EventCalendar {
     pub fn clear(&mut self) {
         self.heap.clear();
         self.live.clear();
+        self.by_kind.clear();
         self.cancelled.clear();
         self.last_fired = None;
     }
@@ -307,6 +367,82 @@ mod tests {
         cal.register(1.0, EventKind::Arrival, 7);
         assert!(!cal.cancel(stale), "pre-clear tokens must not alias new wakeups");
         assert_eq!(cal.pop().unwrap().payload, 7);
+    }
+
+    #[test]
+    fn time_key_preserves_total_cmp_order_and_round_trips() {
+        let times = [
+            f64::NEG_INFINITY,
+            -2.5,
+            -0.0,
+            0.0,
+            1.0e-300,
+            0.25,
+            3.0,
+            f64::INFINITY,
+        ];
+        for &a in &times {
+            assert_eq!(key_time(time_key(a)).to_bits(), a.to_bits(), "round trip of {a}");
+            for &b in &times {
+                assert_eq!(
+                    time_key(a).cmp(&time_key(b)),
+                    a.total_cmp(&b),
+                    "key order of ({a}, {b})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn next_time_of_index_matches_brute_force_scan() {
+        use crate::util::testing::check_prop;
+        let kinds = [
+            EventKind::Arrival,
+            EventKind::SessionReturn,
+            EventKind::DeferDeadline,
+            EventKind::AutoscaleTick,
+            EventKind::FederationSync,
+            EventKind::DeliveryAck,
+        ];
+        // Random interleavings of register/cancel/pop (times are
+        // quantized to force exact ties and never precede the last
+        // fired instant, honoring the monotonicity contract); after
+        // every op the per-kind index must agree bit-for-bit with the
+        // brute-force heap scan for every kind.
+        check_prop("next_time_of index == scan", 48, |rng| {
+            let mut cal = EventCalendar::new();
+            let mut tokens: Vec<WakeupToken> = Vec::new();
+            let mut floor = -4.0f64;
+            for _ in 0..60 {
+                match rng.below(10) {
+                    0..=4 => {
+                        let t = floor + rng.below(12) as f64 * 0.25;
+                        let kind = kinds[rng.below(6) as usize];
+                        tokens.push(cal.register(t, kind, rng.below(100)));
+                    }
+                    5..=6 => {
+                        if !tokens.is_empty() {
+                            let i = rng.below(tokens.len() as u64) as usize;
+                            cal.cancel(tokens.swap_remove(i));
+                        }
+                    }
+                    _ => {
+                        if let Some(w) = cal.pop() {
+                            floor = w.time;
+                        }
+                    }
+                }
+                for &kind in &kinds {
+                    let idx = cal.next_time_of(kind);
+                    let scan = cal.next_time_of_scan(kind);
+                    assert_eq!(
+                        idx.map(f64::to_bits),
+                        scan.map(f64::to_bits),
+                        "kind {kind:?}: index {idx:?} vs scan {scan:?}"
+                    );
+                }
+            }
+        });
     }
 
     #[test]

@@ -132,8 +132,12 @@ fn cmd_lint(argv: &[String]) -> i32 {
     let specs = [
         OptSpec::flag("deny", "exit non-zero when any new finding remains"),
         OptSpec::flag("json", "machine-readable report on stdout"),
-        OptSpec::value("rule", None, "restrict the report to one rule id (D1..D6, X1)"),
-        OptSpec::flag("update-baseline", "re-bless all current findings into the baseline"),
+        OptSpec::value("rule", None, "restrict the report to one rule id (D1..D7, C1, C2, W1, X1..X5)"),
+        OptSpec::flag(
+            "update-baseline",
+            "re-bless current findings into the baseline (ratchet-only: refuses if any \
+             (rule,file) count would grow)",
+        ),
         OptSpec::value("root", Some("."), "repository root to scan"),
         OptSpec::value("baseline", Some("lint-baseline.json"), "baseline file, relative to root"),
     ];
@@ -145,7 +149,8 @@ fn cmd_lint(argv: &[String]) -> i32 {
     let rule = args.get("rule").map(str::to_string);
     if let Some(r) = &rule {
         if !rules::known_rule(r) {
-            eprintln!("unknown rule '{r}' (known: D1 D2 D3 D4 D5 D6 X1)");
+            let known: Vec<&str> = rules::RULE_TABLE.iter().map(|&(id, _)| id).collect();
+            eprintln!("unknown rule '{r}' (known: {})", known.join(" "));
             return 2;
         }
     }
@@ -156,11 +161,7 @@ fn cmd_lint(argv: &[String]) -> i32 {
     }
     let root = PathBuf::from(args.get("root").unwrap());
     let baseline_path = root.join(args.get("baseline").unwrap());
-    // When re-blessing, scan against an empty baseline so every current
-    // finding lands in the new file.
-    let baseline = if update || !baseline_path.is_file() {
-        Baseline::empty()
-    } else {
+    let committed = if baseline_path.is_file() {
         let text = match std::fs::read_to_string(&baseline_path) {
             Ok(t) => t,
             Err(e) => {
@@ -175,7 +176,12 @@ fn cmd_lint(argv: &[String]) -> i32 {
                 return 1;
             }
         }
+    } else {
+        Baseline::empty()
     };
+    // When re-blessing, scan against an empty baseline so every current
+    // finding is visible for the ratchet comparison.
+    let baseline = if update { Baseline::empty() } else { committed.clone() };
     let opts = LintOptions { rule, baseline };
     let outcome = match analysis::lint_repo(&root, &opts) {
         Ok(o) => o,
@@ -190,16 +196,36 @@ fn cmd_lint(argv: &[String]) -> i32 {
         print!("{}", report::render_human(&outcome));
     }
     if update {
+        // Ratchet: the baseline may shrink as debt is fixed, never grow.
+        // New findings must be fixed or waived inline, not grandfathered.
         let blessed = Baseline::from_findings(&outcome.findings);
+        let delta = committed.ratchet(&blessed);
+        if delta.grew {
+            eprintln!(
+                "refusing to update {}: baseline would grow\n{}",
+                baseline_path.display(),
+                delta.render()
+            );
+            return 1;
+        }
         if let Err(e) = std::fs::write(&baseline_path, blessed.render()) {
             eprintln!("writing {}: {e}", baseline_path.display());
             return 1;
         }
-        eprintln!(
-            "blessed {} finding(s) into {}",
-            blessed.total(),
-            baseline_path.display()
-        );
+        if delta.rows.is_empty() {
+            eprintln!(
+                "baseline unchanged ({} finding(s)) at {}",
+                blessed.total(),
+                baseline_path.display()
+            );
+        } else {
+            eprintln!(
+                "blessed {} finding(s) into {}; absorbed delta:\n{}",
+                blessed.total(),
+                baseline_path.display(),
+                delta.render()
+            );
+        }
         return 0;
     }
     if args.has_flag("deny") && !outcome.findings.is_empty() {
@@ -303,7 +329,8 @@ fn cmd_serve(argv: &[String]) -> i32 {
         OptSpec::value(
             "tier-weights",
             None,
-            "per-tier admission weights premium:standard:economy (e.g. 2:1:0.5)",
+            "per-tier admission weights premium:standard:economy (e.g. 2:1:0.5); \
+             same knob as the `tiers` config section",
         ),
         OptSpec::value(
             "gateways",

@@ -1,16 +1,28 @@
 //! Integration tests for the in-tree determinism lint (`andes lint`).
 //!
-//! Two jobs: (1) the repository itself must lint clean — every finding
+//! Four jobs: (1) the repository itself must lint clean — every finding
 //! is either fixed or carries a reasoned inline waiver, so the committed
 //! baseline stays empty; (2) the rule engine must keep firing on the
 //! known-bad fixture corpus under `rust/tests/lint_fixtures/` and stay
-//! quiet on the known-good counterparts.
+//! quiet on the known-good counterparts; (3) the cross-artifact rules
+//! (X2–X5) must be provably *live* — desyncing an in-memory copy of the
+//! real paired artifact makes the finding appear; (4) the token-tree
+//! parser must tile sources byte-for-byte and agree with the legacy
+//! strip pass over the whole tree.
 
 use std::path::Path;
 
+use andes::analysis::artifacts::{load_artifacts, Artifacts};
 use andes::analysis::baseline::Baseline;
 use andes::analysis::lexer::strip_source;
-use andes::analysis::{lint_repo, lint_sources, LintOptions, LintOutcome};
+use andes::analysis::parse::{to_stripped, ParsedFile};
+use andes::analysis::report::{render_human, render_json};
+use andes::analysis::rules::{known_rule, RULE_TABLE};
+use andes::analysis::{
+    collect_sources, lint_repo, lint_sources, lint_sources_with, LintOptions, LintOutcome,
+};
+use andes::util::golden::check_or_bless_text;
+use andes::util::json::Json;
 use andes::util::testing::check_prop;
 
 /// Read a fixture file from the corpus (skipped by the repo walker).
@@ -245,4 +257,394 @@ fn strip_pass_preserves_line_numbers() {
             assert!(lit.line < lines, "literal anchored past EOF in:\n{src}");
         }
     });
+}
+
+// ---------------------------------------------------------------------------
+// Token-tree parser: span fidelity + agreement with the legacy strip pass.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn token_spans_tile_the_source_byte_for_byte() {
+    // Property: lexing partitions the input — concatenating every token's
+    // span reconstructs the file exactly, whatever mix of comments,
+    // strings, raw strings, and unterminated constructs it hits. Rules
+    // that reason over token windows rely on this tiling.
+    let frags = [
+        "let x = 1;",
+        "/* open",
+        "still inside */ let y = 2;",
+        "let s = \"literal with // and /* inside\";",
+        "let r = r#\"raw \" quote\"#;",
+        "// line comment with \" quote",
+        "let c = '\"';",
+        "let multi = \"spans",
+        "two lines\";",
+        "let b = b\"bytes\";",
+        "let lt: &'static str = \"x\";",
+        "/* nested /* depth */ two */",
+        "fn f(t: Instant) -> f64 { t.elapsed().as_secs_f64() }",
+        "}",
+        "{",
+        "",
+    ];
+    check_prop("token spans tile the source", 300, |rng| {
+        let n = rng.range(1, 40);
+        let mut src = String::new();
+        for i in 0..n {
+            if i > 0 {
+                src.push('\n');
+            }
+            src.push_str(frags[rng.below(frags.len() as u64) as usize]);
+        }
+        let pf = ParsedFile::parse(&src);
+        let mut rebuilt = String::with_capacity(src.len());
+        for t in &pf.tokens {
+            rebuilt.push_str(t.text(&pf.src));
+        }
+        assert_eq!(rebuilt, src, "token spans do not tile:\n{src}");
+    });
+}
+
+#[test]
+fn token_projection_agrees_with_legacy_strip_pass_tree_wide() {
+    // The legacy per-line blanking pass stays in-tree as an oracle: over
+    // every real source file and the whole fixture corpus, projecting the
+    // token stream down to (code, comments, strings) must agree with it
+    // exactly. This pins the parser swap as behavior-preserving.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let mut files = collect_sources(root).expect("lint walk failed");
+    let dir = root.join("rust/tests/lint_fixtures");
+    let mut names: Vec<String> = std::fs::read_dir(&dir)
+        .expect("fixture corpus dir unreadable")
+        .flatten()
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .collect();
+    names.sort();
+    for name in &names {
+        files.push((format!("rust/tests/lint_fixtures/{name}"), fixture(name)));
+    }
+    assert!(files.len() > 50, "sweep covers too few files: {}", files.len());
+    for (rel, text) in &files {
+        let pf = ParsedFile::parse(text);
+        let proj = to_stripped(&pf.src, &pf.tokens);
+        let legacy = strip_source(text);
+        assert_eq!(proj.code, legacy.code, "code projection drifted in {rel}");
+        assert_eq!(proj.comments, legacy.comments, "comment projection drifted in {rel}");
+        assert_eq!(proj.strings, legacy.strings, "string literals drifted in {rel}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// New rule families: D7 clock-domain flow, C1/C2 calendar misuse, W1.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn d7_fixtures() {
+    // Linted under the wall domain on purpose: D2 permits the Instant
+    // reads there, so the two findings isolate the flow rule itself —
+    // line 8 mixes a wall duration into sim-time arithmetic (sink B),
+    // line 9 passes the tainted result to a calendar sink (sink A).
+    let bad = lint_one("rust/src/server/fx.rs", &fixture("d7_bad.rs"));
+    assert_eq!(rules_of(&bad), vec!["D7", "D7"], "{:?}", bad.findings);
+    assert_eq!(bad.findings[0].line, 8, "{:?}", bad.findings);
+    assert_eq!(bad.findings[1].line, 9, "{:?}", bad.findings);
+    let good = lint_one("rust/src/server/fx.rs", &fixture("d7_good.rs"));
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+}
+
+#[test]
+fn c1_fixtures() {
+    // Registered with to_bits, popped as a raw integer cast: exactly one
+    // C1 at the decode site, reconciled across the register/match pair.
+    let bad = lint_one("rust/src/coordinator/fx.rs", &fixture("c1_bad.rs"));
+    assert_eq!(rules_of(&bad), vec!["C1"], "{:?}", bad.findings);
+    assert_eq!(bad.findings[0].excerpt, "EventKind::DeferDeadline");
+    let good = lint_one("rust/src/coordinator/fx.rs", &fixture("c1_good.rs"));
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+}
+
+#[test]
+fn c2_fixtures() {
+    let bad = lint_one("rust/src/gateway/fx.rs", &fixture("c2_bad.rs"));
+    assert_eq!(rules_of(&bad), vec!["C2", "C2"], "{:?}", bad.findings);
+    assert_eq!(bad.findings[0].line, 10, "{:?}", bad.findings);
+    assert_eq!(bad.findings[1].line, 14, "{:?}", bad.findings);
+    // coordinator/ owns the simulation clock: the same text is fine there.
+    let owner = lint_one("rust/src/coordinator/fx.rs", &fixture("c2_bad.rs"));
+    assert!(owner.findings.is_empty(), "{:?}", owner.findings);
+    let good = lint_one("rust/src/gateway/fx.rs", &fixture("c2_good.rs"));
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+}
+
+#[test]
+fn w1_fixtures() {
+    let bad = lint_one("rust/src/qoe/fx.rs", &fixture("w1_bad.rs"));
+    assert_eq!(rules_of(&bad), vec!["W1"], "{:?}", bad.findings);
+    assert_eq!(bad.findings[0].line, 5, "{:?}", bad.findings);
+    assert!(bad.findings[0].message.contains("lint:allow(D6)"), "{}", bad.findings[0].message);
+    // Stale waivers must surface in both renderings.
+    assert!(render_human(&bad).contains("[W1]"));
+    let doc = Json::parse(&render_json(&bad)).expect("render_json must emit valid JSON");
+    let rows = doc.get("findings").as_arr().expect("findings array");
+    assert_eq!(rows[0].get("rule").as_str(), Some("W1"));
+    // A consumed waiver is counted, not reported.
+    let good = lint_one("rust/src/qoe/fx.rs", &fixture("w1_good.rs"));
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+    assert_eq!(good.suppressed, 1);
+}
+
+// ---------------------------------------------------------------------------
+// Cross-artifact rules against synthetic artifact pairs.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn x2_fixtures() {
+    let art = Artifacts {
+        design: Some("The `model` section picks the LLM.".to_string()),
+        ..Default::default()
+    };
+    let main = ("rust/src/main.rs".to_string(), "// --model picks the LLM".to_string());
+    let bad = lint_sources_with(
+        &[("rust/src/config.rs".to_string(), fixture("x2_bad.rs")), main.clone()],
+        &art,
+        &LintOptions::default(),
+    );
+    assert_eq!(rules_of(&bad), vec!["X2"], "{:?}", bad.findings);
+    assert!(bad.findings[0].message.contains("`ghost_knob`"), "{}", bad.findings[0].message);
+    let good = lint_sources_with(
+        &[("rust/src/config.rs".to_string(), fixture("x2_good.rs")), main],
+        &art,
+        &LintOptions::default(),
+    );
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+}
+
+#[test]
+fn x3_fixtures() {
+    let art = Artifacts {
+        roadmap: Some("andes exp ext-alpha\n".to_string()),
+        ci: Some("run: andes exp ext-alpha --quick\n".to_string()),
+        ..Default::default()
+    };
+    let bad = lint_sources_with(
+        &[("rust/src/experiments/mod.rs".to_string(), fixture("x3_bad.rs"))],
+        &art,
+        &LintOptions::default(),
+    );
+    assert_eq!(rules_of(&bad), vec!["X3"], "{:?}", bad.findings);
+    assert!(bad.findings[0].message.contains("`ext-ghost`"), "{}", bad.findings[0].message);
+    let good = lint_sources_with(
+        &[("rust/src/experiments/mod.rs".to_string(), fixture("x3_good.rs"))],
+        &art,
+        &LintOptions::default(),
+    );
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+}
+
+#[test]
+fn x4_fixtures() {
+    let art = Artifacts {
+        design: Some("| D1 | hash iteration |".to_string()),
+        fixtures: Some(vec!["d1_bad.rs".to_string(), "d1_good.rs".to_string()]),
+        ..Default::default()
+    };
+    let bad = lint_sources_with(
+        &[("rust/src/analysis/fx.rs".to_string(), fixture("x4_bad.rs"))],
+        &art,
+        &LintOptions::default(),
+    );
+    assert_eq!(rules_of(&bad), vec!["X4"], "{:?}", bad.findings);
+    assert!(bad.findings[0].message.contains("z9_bad.rs"), "{}", bad.findings[0].message);
+    let good = lint_sources_with(
+        &[("rust/src/analysis/fx.rs".to_string(), fixture("x4_good.rs"))],
+        &art,
+        &LintOptions::default(),
+    );
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+}
+
+#[test]
+fn x5_fixtures() {
+    let base = "{\"benchmarks\": [\n  {\"name\": \"fixture-case/one\"},\n  \
+                {\"name\": \"fixture-case/two\"}\n]}";
+    let art = Artifacts {
+        bench_baselines: vec![("BENCH_fx.json".to_string(), base.to_string())],
+        ..Default::default()
+    };
+    let bad = lint_sources_with(
+        &[("benches/fx.rs".to_string(), fixture("x5_bad.rs"))],
+        &art,
+        &LintOptions::default(),
+    );
+    assert_eq!(rules_of(&bad), vec!["X5"], "{:?}", bad.findings);
+    assert_eq!(bad.findings[0].file, "BENCH_fx.json");
+    assert!(bad.findings[0].message.contains("fixture-case/two"), "{}", bad.findings[0].message);
+    let good = lint_sources_with(
+        &[("benches/fx.rs".to_string(), fixture("x5_good.rs"))],
+        &art,
+        &LintOptions::default(),
+    );
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+}
+
+// ---------------------------------------------------------------------------
+// Cross-artifact rules proven live against the real tree: desyncing an
+// in-memory copy of the paired artifact must make the finding appear.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn x2_desynced_main_fires_on_the_real_tree() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let mut files = collect_sources(root).expect("lint walk failed");
+    let art = load_artifacts(root);
+    let main = files
+        .iter_mut()
+        .find(|(rel, _)| rel.as_str() == "rust/src/main.rs")
+        .expect("main.rs scanned");
+    assert!(main.1.contains("tiers"), "main.rs lost its `tiers` mention");
+    main.1 = main.1.replace("tiers", "t_ers");
+    let opts = LintOptions { rule: Some("X2".to_string()), ..Default::default() };
+    let out = lint_sources_with(&files, &art, &opts);
+    assert!(
+        out.findings.iter().any(|f| f.rule == "X2" && f.message.contains("`tiers`")),
+        "{:?}",
+        out.findings
+    );
+}
+
+#[test]
+fn x3_desynced_ci_fires_on_the_real_tree() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let files = collect_sources(root).expect("lint walk failed");
+    let mut art = load_artifacts(root);
+    let ci = art.ci.take().expect("ci.yml present");
+    assert!(ci.contains("ext-tiers"), "ci.yml lost its ext-tiers smoke step");
+    art.ci = Some(ci.replace("ext-tiers", "ext-t_ers"));
+    let opts = LintOptions { rule: Some("X3".to_string()), ..Default::default() };
+    let out = lint_sources_with(&files, &art, &opts);
+    assert!(
+        out.findings.iter().any(|f| f.rule == "X3" && f.message.contains("`ext-tiers`")),
+        "{:?}",
+        out.findings
+    );
+}
+
+#[test]
+fn x4_desynced_fixture_corpus_fires_on_the_real_tree() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let files = collect_sources(root).expect("lint walk failed");
+    let mut art = load_artifacts(root);
+    let listed = art.fixtures.as_ref().is_some_and(|v| v.iter().any(|n| n == "d7_bad.rs"));
+    assert!(listed, "fixture corpus lost d7_bad.rs");
+    art.fixtures = art.fixtures.map(|v| v.into_iter().filter(|n| n != "d7_bad.rs").collect());
+    let opts = LintOptions { rule: Some("X4".to_string()), ..Default::default() };
+    let out = lint_sources_with(&files, &art, &opts);
+    assert!(
+        out.findings.iter().any(|f| f.rule == "X4" && f.message.contains("d7_bad.rs")),
+        "{:?}",
+        out.findings
+    );
+}
+
+#[test]
+fn x5_desynced_baseline_fires_on_the_real_tree() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let files = collect_sources(root).expect("lint walk failed");
+    let mut art = load_artifacts(root);
+    art.bench_baselines.push((
+        "BENCH_ghost.json".to_string(),
+        "{\"benchmarks\": [{\"name\": \"ghost-case/never\"}]}".to_string(),
+    ));
+    let opts = LintOptions { rule: Some("X5".to_string()), ..Default::default() };
+    let out = lint_sources_with(&files, &art, &opts);
+    assert!(
+        out.findings.iter().any(|f| f.rule == "X5" && f.message.contains("ghost-case/never")),
+        "{:?}",
+        out.findings
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Ratchet, --json schema, and the DESIGN.md §13 golden pin.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn baseline_ratchet_reports_deltas_and_refuses_growth() {
+    let rel = "rust/src/coordinator/fx.rs";
+    let text = fixture("d2_bad.rs");
+    let committed = Baseline::from_findings(&lint_one(rel, &text).findings);
+
+    // Shrink: the committed debt is paid down to zero, absorbed deltas
+    // are reported, and the update is allowed.
+    let shrink = committed.ratchet(&Baseline::from_findings(&[]));
+    assert!(!shrink.grew);
+    assert_eq!(shrink.rows, vec![("D2".to_string(), rel.to_string(), 2, 0)]);
+    assert!(shrink.render().contains("D2 rust/src/coordinator/fx.rs: 2 -> 0"));
+
+    // Growth: a third finding in the same (rule, file) bucket trips the
+    // ratchet, which is what makes `--update-baseline` exit nonzero.
+    let grown = format!("{text}\npub fn extra() -> u64 {{ SystemTime::now_stub() }}\n");
+    let fresh = Baseline::from_findings(&lint_one(rel, &grown).findings);
+    let grow = committed.ratchet(&fresh);
+    assert!(grow.grew);
+    assert!(grow.render().contains("2 -> 3"), "{}", grow.render());
+
+    // Steady state: identical debt produces no delta rows.
+    let same = committed.ratchet(&Baseline::from_findings(&lint_one(rel, &text).findings));
+    assert!(!same.grew);
+    assert!(same.rows.is_empty(), "{:?}", same.rows);
+}
+
+#[test]
+fn lint_json_schema_is_stable() {
+    // CI pipes a captured `andes lint --json` report through this test
+    // via LINT_JSON; local runs regenerate the report in-process so the
+    // check never silently skips.
+    let text = match std::env::var("LINT_JSON") {
+        Ok(path) => std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("LINT_JSON={path} unreadable: {e}")),
+        Err(_) => {
+            let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+            render_json(&lint_repo(root, &LintOptions::default()).expect("lint walk failed"))
+        }
+    };
+    let doc = Json::parse(&text).expect("lint --json must emit valid JSON");
+    let findings = doc.get("findings").as_arr().expect("findings: array");
+    for f in findings {
+        let rule = f.get("rule").as_str().expect("finding.rule: string");
+        assert!(known_rule(rule), "finding.rule unknown: {rule}");
+        assert!(f.get("file").as_str().is_some(), "finding.file: string");
+        assert!(f.get("line").as_u64().is_some(), "finding.line: integer");
+        assert!(f.get("excerpt").as_str().is_some(), "finding.excerpt: string");
+        assert!(f.get("message").as_str().is_some(), "finding.message: string");
+    }
+    for row in doc.get("by_rule").as_arr().expect("by_rule: array") {
+        let rule = row.get("rule").as_str().expect("by_rule.rule: string");
+        assert!(known_rule(rule), "by_rule.rule unknown: {rule}");
+        assert!(row.get("count").as_u64().unwrap_or(0) > 0, "by_rule rows omit zero counts");
+    }
+    let counters =
+        ["files_scanned", "suppressed", "baselined", "declared_families", "emitted_families"];
+    for key in counters {
+        assert!(doc.get(key).as_u64().is_some(), "{key}: integer");
+    }
+}
+
+#[test]
+fn design_section_13_matches_its_golden_pin() {
+    // §13 documents the rule table, the parser architecture, and the
+    // --json schema; it is pinned byte-for-byte so a rules.rs change
+    // cannot silently outrun its documentation. Re-bless deliberately
+    // with GOLDEN_BLESS=1 after editing the section.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let text = std::fs::read_to_string(root.join("DESIGN.md")).expect("DESIGN.md unreadable");
+    let start = text.find("## §13").expect("DESIGN.md lost its §13 heading");
+    let rest = &text[start..];
+    let end = rest.find("\n## ").map(|p| p + 1).unwrap_or(rest.len());
+    let section = &rest[..end];
+    for (rule, _) in RULE_TABLE {
+        assert!(section.contains(&format!("| {rule} |")), "§13 lost its {rule} table row");
+    }
+    check_or_bless_text(&root.join("rust/tests/golden/design_s13.golden"), section)
+        .expect("DESIGN.md §13 drifted from its golden pin");
 }

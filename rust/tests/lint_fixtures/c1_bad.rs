@@ -1,0 +1,17 @@
+//! Calendar payload mismatch: the deadline is registered through
+//! `f64::to_bits`, but the pop site reads the payload raw instead of
+//! decoding it with `from_bits`.
+
+pub fn arm(cal: &mut EventCalendar, deadline: f64) {
+    cal.register(deadline, EventKind::DeferDeadline, deadline.to_bits());
+}
+
+pub fn fire(cal: &mut EventCalendar) -> f64 {
+    match cal.pop() {
+        Some(w) => match w.kind {
+            EventKind::DeferDeadline => w.payload as f64,
+            _ => 0.0,
+        },
+        None => 0.0,
+    }
+}

@@ -1,0 +1,16 @@
+//! Calendar payload round-trip: the deadline is registered through
+//! `f64::to_bits` and decoded with `f64::from_bits` at the pop site.
+
+pub fn arm(cal: &mut EventCalendar, deadline: f64) {
+    cal.register(deadline, EventKind::DeferDeadline, deadline.to_bits());
+}
+
+pub fn fire(cal: &mut EventCalendar) -> f64 {
+    match cal.pop() {
+        Some(w) => match w.kind {
+            EventKind::DeferDeadline => f64::from_bits(w.payload),
+            _ => 0.0,
+        },
+        None => 0.0,
+    }
+}

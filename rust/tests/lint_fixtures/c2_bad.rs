@@ -1,0 +1,16 @@
+//! Direct sim-clock mutation outside `coordinator/`: the pacer advances
+//! its own copy of `now` instead of going through the engine clock.
+
+pub struct Pacer {
+    pub now: f64,
+}
+
+impl Pacer {
+    pub fn tick(&mut self, dt: f64) {
+        self.now += dt;
+    }
+
+    pub fn reset(&mut self) {
+        self.now = 0.0;
+    }
+}

@@ -1,0 +1,18 @@
+//! Sim-time reads that must not trip C2: comparisons, field reads,
+//! `let` bindings, and parameter names all mention `now` without
+//! mutating a clock.
+
+pub struct Pacer {
+    pub now: f64,
+}
+
+impl Pacer {
+    pub fn due(&self, now: f64, deadline: f64) -> bool {
+        now >= deadline && self.now <= now
+    }
+
+    pub fn shifted(&self, dt: f64) -> f64 {
+        let now = self.now + dt;
+        now
+    }
+}

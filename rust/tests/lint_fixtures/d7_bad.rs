@@ -1,0 +1,11 @@
+//! Wall-clock readings flowing into simulated time: a wall `Instant`
+//! is bound, converted, and mixed into sim-clock arithmetic (D7 sink B),
+//! then passed into a calendar registration (D7 sink A).
+
+pub fn schedule_retry(sim_now: f64, cal: &mut EventCalendar) -> f64 {
+    let t0 = std::time::Instant::now();
+    let dt = t0.elapsed();
+    let due = sim_now + dt.as_secs_f64();
+    cal.register(due, EventKind::DeferDeadline, 0);
+    due
+}

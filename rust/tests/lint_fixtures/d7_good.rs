@@ -1,0 +1,9 @@
+//! Wall-clock used only for operator-facing profiling: the reading is
+//! converted and accumulated into a wall-side metric, never mixed with
+//! sim-time values or passed to a sim-path call.
+
+pub fn profile_step(metrics: &mut StepMetrics) {
+    let t0 = std::time::Instant::now();
+    run_scheduler_once();
+    metrics.sched_seconds += t0.elapsed().as_secs_f64();
+}

@@ -1,0 +1,7 @@
+//! A stale waiver: the directive below no longer matches any finding on
+//! the line it covers, so the linter reports it as W1.
+
+pub fn safe_head(xs: &[u64]) -> u64 {
+    // lint:allow(D6, kept after the unwrap below was replaced)
+    xs.first().copied().unwrap_or(0)
+}

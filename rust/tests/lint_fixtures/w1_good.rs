@@ -1,0 +1,7 @@
+//! A live waiver: the directive is consumed by the D6 finding on the
+//! next line, so the finding is suppressed and no W1 is reported.
+
+pub fn head(xs: &[u64]) -> u64 {
+    // lint:allow(D6, demo fixture: callers guarantee a non-empty slice)
+    *xs.first().unwrap()
+}

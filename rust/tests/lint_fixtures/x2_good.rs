@@ -1,0 +1,10 @@
+//! Config parsing whose every top-level key is mentioned by both the
+//! CLI and DESIGN.md — X2 stays silent.
+
+pub fn parse(j: &Json) -> Config {
+    let mut c = Config::default();
+    if let Some(v) = j.get("model").as_str() {
+        c.model = v.to_string();
+    }
+    c
+}

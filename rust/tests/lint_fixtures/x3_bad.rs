@@ -1,0 +1,10 @@
+//! An experiment registry with an `ext-*` id that has no CI smoke step
+//! and no ROADMAP quickstart line — X3 fires when this file is linted
+//! as `rust/src/experiments/mod.rs`.
+
+pub fn registry() -> Vec<Exp> {
+    vec![
+        Exp { id: "ext-alpha", title: "covered everywhere" },
+        Exp { id: "ext-ghost", title: "absent from ci.yml and ROADMAP" },
+    ]
+}

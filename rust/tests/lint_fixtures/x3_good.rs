@@ -1,0 +1,8 @@
+//! An experiment registry whose every `ext-*` id has a CI smoke step
+//! and a ROADMAP quickstart line — X3 stays silent.
+
+pub fn registry() -> Vec<Exp> {
+    vec![
+        Exp { id: "ext-alpha", title: "covered everywhere" },
+    ]
+}

@@ -1,0 +1,7 @@
+//! A rule table declaring a ghost rule id (`Z9`) that has no fixture
+//! pair and no DESIGN.md row — X4 fires on the declaration line.
+
+pub const RULE_TABLE: &[(&str, &str)] = &[
+    ("D1", "hash-map iteration in metric lookups"),
+    ("Z9", "ghost rule with no fixtures and no docs row"),
+];

@@ -1,0 +1,6 @@
+//! A rule table whose only id has its fixture pair and its DESIGN.md
+//! row — X4 stays silent.
+
+pub const RULE_TABLE: &[(&str, &str)] = &[
+    ("D1", "hash-map iteration in metric lookups"),
+];

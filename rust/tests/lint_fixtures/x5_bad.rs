@@ -1,0 +1,8 @@
+//! A bench source that has dropped a case (`fixture-case/two`) still
+//! recorded in its committed baseline — X5 fires on the stale baseline
+//! entry when the two are checked together.
+
+fn main() {
+    let mut b = Bencher::new();
+    b.bench("fixture-case/one", || 1);
+}

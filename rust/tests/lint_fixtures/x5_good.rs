@@ -1,0 +1,8 @@
+//! A bench source still defining every case its committed baseline
+//! records — X5 stays silent.
+
+fn main() {
+    let mut b = Bencher::new();
+    b.bench("fixture-case/one", || 1);
+    b.bench("fixture-case/two", || 2);
+}
