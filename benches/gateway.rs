@@ -12,6 +12,7 @@
 //! or automatically when the baseline is missing or provisional).
 
 use andes::coordinator::kv::KvCacheManager;
+use andes::coordinator::{SlackConfig, SlackEstimator};
 use andes::gateway::{
     merge_snapshot, AdmissionConfig, AdmissionController, AutoscaleConfig, LoadMode,
     PacingConfig, PredictiveAutoscaler, ReplicaState, SurgeConfig, SurgeDetector,
@@ -105,6 +106,21 @@ fn main() {
             released += p.release_due(now);
         }
         released
+    });
+
+    // Slack-estimator update: fold one generated token into the
+    // pacer-replay digest, then issue the window query the scheduler
+    // makes per candidate (DESIGN.md §15) — paid once per generated
+    // token when `--slack` is on, so it must stay far below an engine
+    // iteration. 1k live streams keep the per-request map realistic.
+    let mut est = SlackEstimator::new(SlackConfig::default());
+    let mut si = 0usize;
+    let mut st = 0.0f64;
+    b.bench("slack-estimate/streams=1k", || {
+        si = (si + 1) % 1_000;
+        st += 0.001;
+        est.on_token(si, &spec, st);
+        est.window(si, st).unwrap_or(0.0)
     });
 
     // KV prefix park → claim cycle: the bookkeeping added to every

@@ -53,6 +53,7 @@ fn bench_scheduler(b: &mut Bencher, name: &str, sched: &mut dyn Scheduler, n: us
         latency: &latency,
         total_requests_seen: n,
         total_preemptions: 0,
+        slack: None,
     };
     b.bench(&format!("{name}/N={n}"), || sched.schedule(&view));
 }

@@ -30,6 +30,7 @@ fn main() {
     let view = SchedView {
         now: 30.0, horizon: 50.0, requests: &requests, active: &active,
         kv: &kv, latency: &latency, total_requests_seen: n, total_preemptions: 0,
+        slack: None,
     };
     for grid in [1usize, 2, 4, 8, 16] {
         let mut s = AndesScheduler::new(andes::coordinator::sched::andes::AndesConfig {

@@ -22,7 +22,7 @@ use super::suppress::{in_ranges, test_ranges, Suppressions};
 /// Rule ids with one-line summaries, in report order.
 pub const RULE_TABLE: &[(&str, &str)] = &[
     ("D1", "HashMap/HashSet iteration feeding output or simulation order"),
-    ("D2", "wall-clock read outside wall-domain modules"),
+    ("D2", "wall-clock read outside wall-domain modules, or env read on a sim path"),
     ("D3", "partial_cmp on floats in sorts/unwraps; use total_cmp"),
     ("D4", "unseeded randomness"),
     ("D5", "println!/eprintln! in library code; use log::"),
@@ -277,6 +277,36 @@ pub fn scan_source(rel: &str, text: &str, usage: &mut CrossUsage) -> ScanResult 
             };
             if hit && fired_lines.insert(t.line) {
                 let msg = "wall-clock read outside the wall domain; use the sim Clock";
+                emit("D2", t.line, msg.to_string(), &mut sup);
+            }
+        }
+    }
+
+    // D2 (env-var case): environment reads on seeded simulation paths.
+    // `std::env::var` on a sim hot path is a wall-environment dependency
+    // that can flip behavior between otherwise-identical runs (the
+    // `ANDES_TRACE_CAP` regression in sched/andes.rs). Scoped like D6 to
+    // the sim-side library paths; benches, tests, and the golden/bench
+    // bless knobs live outside that scope.
+    if D6_SCOPE.iter().any(|p| rel.starts_with(p)) {
+        let mut fired_lines: BTreeSet<usize> = BTreeSet::new();
+        for (k, &ti) in pf.sig.iter().enumerate() {
+            let t = &pf.tokens[ti];
+            if t.kind != TokKind::Ident
+                || t.text(src) != "env"
+                || in_ranges(&tranges, t.line)
+            {
+                continue;
+            }
+            let hit = sig_tok(k + 1).is_some_and(|t| t.is_punct(src, ':'))
+                && sig_tok(k + 2).is_some_and(|t| t.is_punct(src, ':'))
+                && sig_tok(k + 3).is_some_and(|t| {
+                    t.kind == TokKind::Ident
+                        && matches!(t.text(src), "var" | "var_os" | "vars" | "vars_os")
+                });
+            if hit && fired_lines.insert(t.line) {
+                let msg = "environment read on a sim path; hoist to config or \
+                           gate on log_enabled!";
                 emit("D2", t.line, msg.to_string(), &mut sup);
             }
         }
@@ -1239,6 +1269,20 @@ mod tests {
         assert_eq!(scan("rust/src/coordinator/engine.rs", src).len(), 1);
         assert!(scan("rust/src/server/mod.rs", src).is_empty());
         assert!(scan("rust/src/util/bench.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d2_env_read_scoped_to_sim_paths() {
+        let src = "pub fn trace_on() -> bool { std::env::var(\"ANDES_TRACE_CAP\").is_ok() }";
+        let f = scan("rust/src/coordinator/fx.rs", src);
+        assert_eq!(f.iter().map(|f| f.rule).collect::<Vec<_>>(), vec!["D2"]);
+        assert!(f[0].message.contains("environment read"), "{}", f[0].message);
+        // Outside the sim scope (util/, benches) the same read is fine.
+        assert!(scan("rust/src/util/fx.rs", src).is_empty());
+        // Test code inside a sim-scoped file is exempt.
+        let test_src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n \
+                        fn t() { let _ = std::env::var(\"X\"); }\n}";
+        assert!(scan("rust/src/coordinator/fx.rs", test_src).is_empty());
     }
 
     #[test]

@@ -70,6 +70,9 @@
 //!     "jitter_headroom": 4.0,
 //!     "max_lead": 64,
 //!     "seed": 7
+//!   },
+//!   "slack": {
+//!     "enabled": true
 //!   }
 //! }
 //! ```
@@ -225,7 +228,10 @@ impl AndesDeployment {
                         cfg.delta_t_override = Some(dt);
                     }
                     if let Some(g) = s.get("b_grid").as_u64() {
-                        cfg.b_grid = (g as usize).max(1);
+                        if g == 0 {
+                            bail!("b_grid must be >= 1");
+                        }
+                        cfg.b_grid = g as usize;
                     }
                     if let Some(sv) = s.get("solver").as_str() {
                         cfg.solver = match sv {
@@ -505,6 +511,13 @@ impl AndesDeployment {
             }
         }
 
+        // Parsed after "gateway" and "network": the estimator mirrors
+        // their final pacing/transit values (DESIGN.md §15).
+        let sl = j.get("slack");
+        if !sl.is_null() && sl.get("enabled").as_bool() == Some(true) {
+            d.engine.slack = Some(d.gateway.slack_config());
+        }
+
         let t = j.get("telemetry");
         if !t.is_null() {
             let mut tc = TelemetryConfig::default();
@@ -623,6 +636,12 @@ mod tests {
         )
         .is_err());
         assert!(AndesDeployment::from_json_str(r#"{"engine": {"block_size": 0}}"#).is_err());
+        // Regression: b_grid 0 used to parse and later collapse the
+        // batch-size scan (NaN spacing → every grid point = b_min).
+        assert!(AndesDeployment::from_json_str(
+            r#"{"scheduler": {"kind": "andes", "b_grid": 0}}"#
+        )
+        .is_err());
         assert!(AndesDeployment::from_json_str("not json").is_err());
     }
 
@@ -805,6 +824,39 @@ mod tests {
         ] {
             assert!(AndesDeployment::from_json_str(bad).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn slack_section_mirrors_gateway_settings_into_engine() {
+        // Defaults / absent section / enabled:false → estimator off.
+        let plain = AndesDeployment::from_json_str("{}").unwrap();
+        assert!(plain.engine.slack.is_none());
+        let off =
+            AndesDeployment::from_json_str(r#"{"slack": {"enabled": false}}"#).unwrap();
+        assert!(off.engine.slack.is_none());
+        // Enabled: the estimator mirrors the final pacing + network
+        // settings, wherever the sections appear in the document.
+        let d = AndesDeployment::from_json_str(
+            r#"{"slack": {"enabled": true},
+                "gateway": {"pacing": true, "lead_tokens": 8,
+                            "pace_rate_factor": 1.5},
+                "network": {"enabled": true, "mix": {"lte": 1.0}}}"#,
+        )
+        .unwrap();
+        let sc = d.engine.slack.expect("slack enabled");
+        assert!(sc.paced);
+        assert_eq!(sc.lead_tokens, 8);
+        assert_eq!(sc.rate_factor, 1.5);
+        assert!((sc.transit - d.gateway.network.expected_transit()).abs() < 1e-12);
+        assert!(sc.transit > 0.0, "lte mix must contribute transit");
+        // Pacing off → the estimator models release-at-generation.
+        let unpaced = AndesDeployment::from_json_str(
+            r#"{"slack": {"enabled": true}, "gateway": {"pacing": false}}"#,
+        )
+        .unwrap();
+        let sc = unpaced.engine.slack.expect("slack enabled");
+        assert!(!sc.paced);
+        assert_eq!(sc.transit, 0.0, "network off ⇒ no transit term");
     }
 
     #[test]

@@ -20,6 +20,7 @@ use super::kv::KvCacheManager;
 use super::metrics::{IterationSample, Metrics};
 use super::request::{Phase, Request, RequestId};
 use super::sched::{SchedView, Scheduler};
+use super::slack::{SlackConfig, SlackEstimator};
 
 /// Engine configuration.
 #[derive(Debug, Clone)]
@@ -47,6 +48,11 @@ pub struct EngineConfig {
     /// parity suite can keep exercising the pre-calendar stepping until
     /// the legacy path is deleted.
     pub legacy_stepping: bool,
+    /// Estimate per-request client-buffer slack and expose it to the
+    /// scheduler (DESIGN.md §15). Disabled by default: `None` keeps the
+    /// `SchedView` slack-blind and the engine bit-identical to
+    /// pre-slack behavior.
+    pub slack: Option<SlackConfig>,
 }
 
 impl Default for EngineConfig {
@@ -60,6 +66,7 @@ impl Default for EngineConfig {
             initial_horizon: 60.0,
             park_prefixes: false,
             legacy_stepping: false,
+            slack: None,
         }
     }
 }
@@ -81,6 +88,8 @@ pub struct Engine<B: ExecutionBackend, C: Clock> {
     /// wakeup per spec, in pop order) — the calendar stepping path.
     calendar: EventCalendar,
     metrics: Metrics,
+    /// Client-buffer slack estimator, present iff `cfg.slack` is set.
+    slack: Option<SlackEstimator>,
     /// Running average of request completion time (the Δt estimate).
     completion_avg: f64,
     completions: u64,
@@ -104,6 +113,7 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
             cfg.swap_capacity_tokens,
             cfg.block_size,
         );
+        let slack = cfg.slack.map(SlackEstimator::new);
         Engine {
             cfg,
             backend,
@@ -116,6 +126,7 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
             pending: Vec::new(),
             calendar: EventCalendar::new(),
             metrics: Metrics::new(),
+            slack,
             completion_avg: 0.0,
             completions: 0,
             started: false,
@@ -168,6 +179,12 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
 
     pub fn latency(&self) -> &LatencyModel {
         &self.latency
+    }
+
+    /// The engine's slack estimator, when `cfg.slack` is set (test and
+    /// gateway observability).
+    pub fn slack_estimator(&self) -> Option<&SlackEstimator> {
+        self.slack.as_ref()
     }
 
     pub fn now(&self) -> f64 {
@@ -297,6 +314,21 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
     /// possible, else drop + mark for recompute.
     fn preempt(&mut self, id: RequestId) {
         debug_assert_eq!(self.requests[id].phase, Phase::Running);
+        // Instrumentation (ext-slack): count preemptions of runners whose
+        // *server-side* digest shows a buffer deep enough to cover a full
+        // swap-out + swap-in round trip. Measured identically whether the
+        // slack estimator is on or off (it reads only the request's own
+        // digest), so it never perturbs scheduling.
+        {
+            let req = &self.requests[id];
+            let rel_now = self.clock.now() - req.arrival;
+            let mut d = req.digest;
+            d.advance_to(rel_now);
+            let window = d.buffered() / req.qoe_spec.tds.max(1e-9);
+            if window >= 2.0 * self.latency.swap(req.context_len()) {
+                self.metrics.deep_buffer_preemptions += 1;
+            }
+        }
         let mut swapped = false;
         if self.cfg.prefer_swap {
             if let Ok(tokens) = self.kv.swap_out(id) {
@@ -410,6 +442,9 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
         self.backend.release(id);
         self.metrics.record_finish(&self.requests[id]);
         self.scheduler.on_finish(id);
+        if let Some(sl) = self.slack.as_mut() {
+            sl.on_finish(id);
+        }
         self.active.retain(|&a| a != id);
     }
 
@@ -464,6 +499,7 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
             latency: &self.latency,
             total_requests_seen: self.requests.len(),
             total_preemptions: self.metrics.total_preemptions as usize,
+            slack: self.slack.as_ref(),
         };
         let desired = self.scheduler.schedule(&view);
         self.metrics.scheduler_time += sched_t0.elapsed().as_secs_f64();
@@ -676,6 +712,10 @@ impl<B: ExecutionBackend, C: Clock> Engine<B, C> {
 
     fn deliver(&mut self, id: RequestId, finished: bool, now: f64) {
         self.requests[id].deliver_token(now);
+        if let Some(sl) = self.slack.as_mut() {
+            let req = &self.requests[id];
+            sl.on_token(id, &req.qoe_spec, now - req.arrival);
+        }
         let done = finished || self.requests[id].generated >= self.cfg.max_output_tokens;
         if done {
             self.finish(id, now);

@@ -85,6 +85,10 @@ pub struct Metrics {
     /// Preemptions initiated by the engine's OOM safety net (a running
     /// request could not grow), as opposed to scheduler decisions.
     pub oom_preemptions: u64,
+    /// Preemptions of runners whose server-side digest showed a client
+    /// buffer deep enough to cover a swap round trip (ext-slack's
+    /// instrumentation; counted whether or not the estimator is on).
+    pub deep_buffer_preemptions: u64,
     /// Finished turns whose context was parked for the session's next
     /// turn (KV prefix retention, DESIGN.md §10).
     pub prefixes_parked: u64,

@@ -8,7 +8,9 @@ pub mod kv;
 pub mod metrics;
 pub mod request;
 pub mod sched;
+pub mod slack;
 
 pub use calendar::{EventCalendar, EventKind, Wakeup, WakeupToken};
 pub use kv::{KvCacheManager, KvResidence};
 pub use request::{Phase, Request, RequestId};
+pub use slack::{SlackConfig, SlackEstimator};

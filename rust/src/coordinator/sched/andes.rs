@@ -110,6 +110,10 @@ struct Candidate {
     digest: DigestState,
     rel_horizon: f64,
     expected_area_h: f64,
+    /// Estimated client-buffer slack window in seconds (DESIGN.md §15),
+    /// `None` when the view carries no slack estimate for this request
+    /// — the scheduler then behaves exactly as the slack-blind build.
+    slack_window: Option<f64>,
 }
 
 impl AndesScheduler {
@@ -142,9 +146,24 @@ impl AndesScheduler {
             let ctx = req.context_len();
             let rel_now = view.now - req.arrival;
             let rel_horizon = rel_now + horizon;
-            let waited = project(&req.digest, 0.0, 0.0, rel_horizon);
+            // Slack-aware mode (DESIGN.md §15): project QoE from the
+            // *estimated client-side* digest instead of the server-side
+            // one — the server's counts tokens at generation time, which
+            // overestimates what a paced client actually holds.
+            let slack_est = view.slack.and_then(|s| s.estimate(id, rel_now));
+            let (digest, slack_window) = match slack_est {
+                Some(est) => {
+                    let window = est.buffered() / req.qoe_spec.tds.max(1e-9);
+                    (est, Some(window))
+                }
+                None => (req.digest, None),
+            };
+            let waited = project(&digest, 0.0, 0.0, rel_horizon);
             let q_wait = qoe_at(&req.qoe_spec, &waited, rel_horizon, None);
-            let q_current = req.qoe_at(view.now);
+            let q_current = match slack_est {
+                Some(ref est) => qoe_at(&req.qoe_spec, est, rel_now, None),
+                None => req.qoe_at(view.now),
+            };
             let start_delay = match req.phase {
                 Phase::Running => 0.0,
                 Phase::SwappedOut => view.latency.swap(ctx),
@@ -160,9 +179,10 @@ impl AndesScheduler {
                 start_delay,
                 running: req.phase == Phase::Running,
                 gain: 0.0,
-                digest: req.digest,
+                digest,
                 rel_horizon,
                 expected_area_h: req.qoe_spec.expected_area(rel_horizon, None),
+                slack_window,
             });
         }
     }
@@ -299,28 +319,76 @@ impl AndesScheduler {
 
         let mut result = desired;
         for &r in &preempted {
+            // Slack-aware margin (DESIGN.md §15): charge the KV swap
+            // stall against the runner's estimated client-buffer window.
+            // A buffer that cannot cover the swap-out + swap-in stall
+            // makes the runner effectively un-preemptable (infinite
+            // margin); a deep buffer absorbs the stall for free, so the
+            // margin shrinks proportionally. `None` (slack off) keeps
+            // the classic batch-wide margin bit-identically.
+            let margin_r = match cands[r].slack_window {
+                None => margin,
+                Some(w) => {
+                    let stall_r = 2.0 * view.latency.swap(cands[r].ctx);
+                    if w < stall_r {
+                        f64::INFINITY
+                    } else {
+                        margin * (stall_r / w).min(1.0)
+                    }
+                }
+            };
             // Displacing runner r is justified only if even the weakest
             // admitted newcomer clears the gain margin. Otherwise evict
-            // weak newcomers until the runner fits back in.
-            loop {
-                let weakest = newcomers.first().copied();
-                match weakest {
-                    Some(w) if cands[w].gain < cands[r].gain + margin => {
-                        // Marginal displacement: evict the weak newcomer.
-                        newcomers.remove(0);
-                        result.retain(|&x| x != w);
-                        // Does the runner fit now?
-                        let used: usize = result.iter().map(|&x| cands[x].blocks).sum();
-                        if used + cands[r].blocks <= self.block_budget(view) {
-                            result.push(r);
-                            break;
-                        }
-                    }
-                    _ => break, // displacement justified (or no newcomers)
+            // weak newcomers until the runner fits back in — and if the
+            // freed blocks never cover the runner, restore the evicted
+            // newcomers rather than silently shrinking the batch.
+            let mut evicted: Vec<usize> = Vec::new();
+            let mut reinstated = false;
+            while let Some(&w) = newcomers.first() {
+                if !(cands[w].gain < cands[r].gain + margin_r) {
+                    break; // displacement justified
                 }
+                // Marginal displacement: evict the weak newcomer.
+                newcomers.remove(0);
+                result.retain(|&x| x != w);
+                evicted.push(w);
+                // Does the runner fit now?
+                let used: usize = result.iter().map(|&x| cands[x].blocks).sum();
+                if used + cands[r].blocks <= self.block_budget(view) {
+                    result.push(r);
+                    reinstated = true;
+                    break;
+                }
+            }
+            if !reinstated && !evicted.is_empty() {
+                // The runner never fit: undo the evictions so capacity
+                // is not wasted (batch block-usage must not shrink
+                // across hysteresis — pinned by regression test).
+                newcomers.splice(0..0, evicted.iter().copied());
+                result.extend(evicted);
             }
         }
         result
+    }
+
+    /// Candidate batch sizes: the full `[b_min, b_max]` range when it is
+    /// small, otherwise an even subsample of `b_grid` points. `b_grid`
+    /// is clamped to ≥ 2 — a 1-point (or 0-point) grid would divide by
+    /// `b_grid - 1 = 0`, yielding `NaN → 0` and silently collapsing the
+    /// scan to `b_min` (regression-tested).
+    fn candidate_grid(&self, b_min: usize, b_max: usize) -> Vec<usize> {
+        let g = self.cfg.b_grid.max(2);
+        if b_max - b_min + 1 <= g {
+            (b_min..=b_max).collect()
+        } else {
+            (0..g)
+                .map(|k| {
+                    b_min
+                        + ((b_max - b_min) as f64 * k as f64 / (g - 1) as f64).round()
+                            as usize
+                })
+                .collect()
+        }
     }
 
     /// Enforce the preemption cap (Optimization #4) on a desired set.
@@ -338,7 +406,10 @@ impl AndesScheduler {
             - view.total_preemptions as f64)
             .floor()
             .max(0.0) as usize;
-        if std::env::var("ANDES_TRACE_CAP").is_ok() && !preempted.is_empty() {
+        // Gate on the logger instead of reading the environment: an
+        // env read on the deterministic sim hot path is a wall-domain
+        // leak (lint rule D2's env-var case, added with this fix).
+        if log::log_enabled!(log::Level::Debug) && !preempted.is_empty() {
             log::debug!(
                 "cap: seen={} preempts={} allowed={} this_round={}",
                 view.total_requests_seen,
@@ -399,17 +470,7 @@ impl Scheduler for AndesScheduler {
 
         // Optimization #2: pruned batch-size range, subsampled to a grid.
         let (b_min, b_max) = self.batch_size_range(view);
-        let grid: Vec<usize> = if b_max - b_min + 1 <= self.cfg.b_grid {
-            (b_min..=b_max).collect()
-        } else {
-            (0..self.cfg.b_grid)
-                .map(|k| {
-                    b_min
-                        + ((b_max - b_min) as f64 * k as f64 / (self.cfg.b_grid - 1) as f64)
-                            .round() as usize
-                })
-                .collect()
-        };
+        let grid = self.candidate_grid(b_min, b_max);
 
         let avg_ctx = view.avg_context_len();
         let budget = self.block_budget(view);
@@ -640,6 +701,151 @@ mod tests {
         // urgent newcomer (3) packs ahead of the coasting runner (0).
         assert!(first.contains(&3), "short urgent newcomer must be served: {first:?}");
         assert!(!first.is_empty(), "contended schedule must serve someone");
+    }
+
+    /// Bug regression: hysteresis used to evict weak newcomers one by
+    /// one and, when the freed blocks never covered the runner, leave
+    /// both the runner *and* the evicted newcomers out — silently
+    /// shrinking the batch. Block usage must be non-decreasing across
+    /// hysteresis.
+    #[test]
+    fn hysteresis_restores_evicted_newcomers_when_runner_never_fits() {
+        // 10 blocks, budget 9. Runner 0 needs 10 blocks (ctx 150) so it
+        // can never fit back; newcomers 1 (4 blocks), 2 and 3 (2 each).
+        let mut f = Fixture::new(
+            &[(150, 200, 0.0), (60, 200, 0.0), (16, 50, 0.0), (16, 50, 0.0)],
+            160,
+        );
+        f.run(0);
+        f.now = 5.0;
+        static ACTIVE: &[RequestId] = &[0, 1, 2, 3];
+        // Infinite margin: every displacement counts as marginal, so the
+        // pre-fix code evicts all newcomers chasing a runner that can
+        // never fit, emptying the batch.
+        let mut s = AndesScheduler::new(AndesConfig {
+            preempt_margin: 1e9,
+            ..AndesConfig::default()
+        });
+        let view = f.view(ACTIVE);
+        s.build_candidates(&view, 30.0);
+        let desired = vec![1usize, 2, 3];
+        let used_before: usize =
+            desired.iter().map(|&i| s.scratch.candidates[i].blocks).sum();
+        let result = s.apply_hysteresis(&view, desired, 30.0);
+        let used_after: usize =
+            result.iter().map(|&i| s.scratch.candidates[i].blocks).sum();
+        assert!(
+            used_after >= used_before,
+            "batch block-usage shrank across hysteresis: {used_after} < {used_before}"
+        );
+        for w in [1usize, 2, 3] {
+            assert!(result.contains(&w), "evicted newcomer {w} not restored: {result:?}");
+        }
+    }
+
+    /// Bug regression: with `b_grid: 1` the grid subsample divided by
+    /// `b_grid - 1 = 0`, producing `NaN → 0` and collapsing the whole
+    /// scan to `b_min`. The grid must still span [b_min, b_max].
+    #[test]
+    fn degenerate_b_grid_still_spans_full_range() {
+        let s = AndesScheduler::new(AndesConfig { b_grid: 1, ..AndesConfig::default() });
+        let grid = s.candidate_grid(1, 40);
+        assert_eq!(grid.first(), Some(&1));
+        assert_eq!(grid.last(), Some(&40), "b_grid=1 collapsed the scan: {grid:?}");
+        assert!(grid.len() >= 2);
+        // b_grid: 0 used to produce an *empty* grid and panic on
+        // `best.unwrap()` in schedule().
+        let s0 = AndesScheduler::new(AndesConfig { b_grid: 0, ..AndesConfig::default() });
+        assert!(!s0.candidate_grid(3, 50).is_empty());
+        let mut f = Fixture::new(&[(60, 50, 0.0), (60, 50, 0.1), (60, 50, 0.2)], 160);
+        f.now = 5.0;
+        static ACTIVE: &[RequestId] = &[0, 1, 2];
+        let mut sched =
+            AndesScheduler::new(AndesConfig { b_grid: 0, ..AndesConfig::default() });
+        let got = sched.schedule(&f.view(ACTIVE));
+        assert!(!got.is_empty(), "b_grid=0 must still schedule someone");
+    }
+
+    /// Slack mechanism (DESIGN.md §15): a runner whose *estimated
+    /// client* buffer is empty cannot absorb the swap stall — the
+    /// slack-aware scheduler must keep it resident even though the
+    /// server-side digest makes it look like a coasting deep-buffer
+    /// runner (the slack-blind arm preempts it).
+    #[test]
+    fn slack_protects_buffer_starved_runner_from_preemption() {
+        use crate::coordinator::slack::{SlackConfig, SlackEstimator};
+        let mut f = Fixture::new(&[(60, 200, 0.0), (60, 200, 0.0)], 160);
+        f.run(0);
+        for i in 0..40 {
+            f.requests[0].deliver_token(0.5 + i as f64 * 0.01);
+        }
+        f.now = 2.0;
+        static ACTIVE: &[RequestId] = &[0, 1];
+        let blind = AndesScheduler::with_defaults().schedule(&f.view(ACTIVE));
+        assert!(
+            blind.contains(&1) && !blind.contains(&0),
+            "slack-blind arm should preempt the coasting runner: {blind:?}"
+        );
+        // The modeled pacer released one token long ago and the client
+        // digested it: window ≈ 0 < swap stall → runner is pinned.
+        let mut est = SlackEstimator::new(SlackConfig::default());
+        est.on_token(0, &f.requests[0].qoe_spec, 0.5);
+        f.slack = Some(est);
+        let aware = AndesScheduler::with_defaults().schedule(&f.view(ACTIVE));
+        assert!(
+            aware.contains(&0),
+            "slack-aware arm must keep the buffer-starved runner: {aware:?}"
+        );
+    }
+
+    /// Slack mechanism (DESIGN.md §15): a genuinely deep client buffer
+    /// shrinks the hysteresis margin, making the runner near-free to
+    /// pause — the same gain differential that hysteresis would veto in
+    /// slack-blind mode displaces the runner in slack-aware mode.
+    #[test]
+    fn deep_slack_window_makes_runner_near_free_to_pause() {
+        use crate::coordinator::slack::{SlackConfig, SlackEstimator};
+        let mut f = Fixture::new(&[(60, 200, 0.0), (60, 200, 0.0)], 160);
+        f.run(0);
+        for i in 0..40 {
+            f.requests[0].deliver_token(0.5 + i as f64 * 0.01);
+        }
+        f.now = 2.0;
+        static ACTIVE: &[RequestId] = &[0, 1];
+
+        // Blind arm: margin 0.2 vetoes a 0.1-gain displacement and the
+        // runner (7 blocks ≤ budget 9) is reinstated.
+        let mut blind = AndesScheduler::with_defaults();
+        let view = f.view(ACTIVE);
+        blind.build_candidates(&view, 30.0);
+        blind.scratch.candidates[0].gain = 0.0;
+        blind.scratch.candidates[1].gain = 0.1;
+        let kept = blind.apply_hysteresis(&view, vec![1], 30.0);
+        assert!(kept.contains(&0), "blind hysteresis must reinstate the runner: {kept:?}");
+
+        // Aware arm: the pacer replay leaves several tokens buffered
+        // (window ≫ swap stall), so the margin collapses and the same
+        // 0.1 differential justifies the displacement.
+        let mut est = SlackEstimator::new(SlackConfig::default());
+        for i in 0..40 {
+            est.on_token(0, &f.requests[0].qoe_spec, 0.5 + i as f64 * 0.01);
+        }
+        f.slack = Some(est);
+        let view = f.view(ACTIVE);
+        let mut aware = AndesScheduler::with_defaults();
+        aware.build_candidates(&view, 30.0);
+        assert!(
+            aware.scratch.candidates[0].slack_window.unwrap_or(0.0) > 0.5,
+            "estimated window should be deep: {:?}",
+            aware.scratch.candidates[0].slack_window
+        );
+        aware.scratch.candidates[0].gain = 0.0;
+        aware.scratch.candidates[1].gain = 0.1;
+        let displaced = aware.apply_hysteresis(&view, vec![1], 30.0);
+        assert!(
+            displaced.contains(&1) && !displaced.contains(&0),
+            "deep-buffer runner must be near-free to pause: {displaced:?}"
+        );
     }
 
     #[test]

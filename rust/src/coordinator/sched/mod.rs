@@ -21,6 +21,7 @@ pub mod round_robin;
 
 use super::kv::KvCacheManager;
 use super::request::{Phase, Request, RequestId};
+use super::slack::SlackEstimator;
 use crate::model::latency::LatencyModel;
 
 /// Preemption mechanisms (paper §4.2).
@@ -48,6 +49,9 @@ pub struct SchedView<'a> {
     /// Lifetime counters for the preemption cap (Optimization #4).
     pub total_requests_seen: usize,
     pub total_preemptions: usize,
+    /// Server-side client-buffer slack estimate (DESIGN.md §15).
+    /// `None` reproduces slack-blind scheduling bit-identically.
+    pub slack: Option<&'a SlackEstimator>,
 }
 
 impl<'a> SchedView<'a> {
@@ -123,6 +127,9 @@ pub(crate) mod testutil {
         pub kv: KvCacheManager,
         pub latency: LatencyModel,
         pub now: f64,
+        /// Optional slack estimator exposed through the view (slack-aware
+        /// scheduler tests); `None` keeps the classic slack-blind view.
+        pub slack: Option<SlackEstimator>,
     }
 
     impl Fixture {
@@ -139,6 +146,7 @@ pub(crate) mod testutil {
                 kv: KvCacheManager::new(capacity_tokens, capacity_tokens, 16),
                 latency: LatencyModel::for_deployment(&opt_66b(), &a100_4x()),
                 now: 0.0,
+                slack: None,
             }
         }
 
@@ -158,6 +166,7 @@ pub(crate) mod testutil {
                 latency: &self.latency,
                 total_requests_seen: self.requests.len(),
                 total_preemptions: 0,
+                slack: self.slack.as_ref(),
             }
         }
     }

@@ -1,0 +1,266 @@
+//! Server-side estimate of each client's playback-buffer slack
+//! (DESIGN.md §15; TokenFlow × Andes).
+//!
+//! The engine delivers tokens at *generation* time, but the gateway
+//! pacer releases them to the client at the paced schedule and the
+//! network adds transit on top — so the server-side [`DigestState`]
+//! systematically *overestimates* what the client holds. A runner that
+//! raced ahead looks deep-buffered ("coasting", QoE gain ≈ 0) to the
+//! scheduler while the real client sits at `lead_tokens` of slack and
+//! will stall the moment the runner is preempted.
+//!
+//! [`SlackEstimator`] closes that gap: per request it replays the
+//! pacer's release rule online (burst `lead_tokens`, then one token per
+//! `1/(tds·rate_factor)` seconds), adds the expected network transit
+//! (mix-weighted mean one-way latency when `delivery` is on, 0 when it
+//! is off — the client then digests at the QoE-spec rate from release
+//! time, the documented fallback), and feeds the resulting *arrival*
+//! times into a client-side [`DigestState`]. The scheduler queries the
+//! estimate through [`crate::coordinator::sched::SchedView::slack`].
+//!
+//! Estimated occupancy is structurally bounded: `0 ≤ buffered ≤
+//! delivered ≤ released` (only released tokens are ever delivered into
+//! the digest, and digestion never exceeds delivery). The property
+//! tests in `rust/tests/slack.rs` pin both bounds and agreement with
+//! the ground-truth client buffer on seeded traces.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::request::RequestId;
+use crate::qoe::metric::DigestState;
+use crate::qoe::spec::QoeSpec;
+
+/// Configuration of the slack estimator — a mirror of the gateway's
+/// pacing parameters plus the expected network transit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SlackConfig {
+    /// Model the gateway pacer's release schedule. When false (pacing
+    /// disabled at the gateway), tokens are assumed released at
+    /// generation time.
+    pub paced: bool,
+    /// Pacer release rate as a multiple of the request's expected TDS
+    /// (mirrors `gateway::pacing::PacingConfig::rate_factor`).
+    pub rate_factor: f64,
+    /// Tokens released immediately at the start of the stream (mirrors
+    /// `gateway::pacing::PacingConfig::lead_tokens`).
+    pub lead_tokens: usize,
+    /// Expected one-way transit (s) between a pacer release and the
+    /// client holding the token: the delivery layer's mix-weighted mean
+    /// base latency when the network model is on, 0.0 when it is off
+    /// (the QoE-spec digestion-rate fallback).
+    pub transit: f64,
+}
+
+impl Default for SlackConfig {
+    fn default() -> Self {
+        SlackConfig { paced: true, rate_factor: 1.25, lead_tokens: 4, transit: 0.0 }
+    }
+}
+
+/// Per-request pacer replay + estimated client digest.
+#[derive(Debug, Clone)]
+struct ReqSlack {
+    /// Digestion speed (the QoE spec's expected TDS).
+    tds: f64,
+    /// Pacer release interval `1/(tds·rate_factor)` seconds.
+    interval: f64,
+    /// Tokens released by the (modeled) pacer so far.
+    released: usize,
+    /// Request-relative time of the last modeled release.
+    last_release: f64,
+    /// Estimated client-side digestion state, fed by arrivals that are
+    /// already in the observable past.
+    digest: DigestState,
+    /// Estimated arrival times not yet folded into `digest` (the pacer
+    /// schedules releases into the future once the lead is spent).
+    /// Non-decreasing by construction.
+    pending: VecDeque<f64>,
+}
+
+/// Tracks, per in-flight request, how many tokens the client plausibly
+/// holds undigested. See the module docs for the model.
+#[derive(Debug, Clone)]
+pub struct SlackEstimator {
+    cfg: SlackConfig,
+    requests: BTreeMap<RequestId, ReqSlack>,
+}
+
+impl SlackEstimator {
+    pub fn new(cfg: SlackConfig) -> Self {
+        SlackEstimator { cfg, requests: BTreeMap::new() }
+    }
+
+    pub fn config(&self) -> &SlackConfig {
+        &self.cfg
+    }
+
+    /// Record a token generated for `id` at request-relative time
+    /// `gen_rel`. Models the pacer release + transit and queues the
+    /// estimated client arrival.
+    pub fn on_token(&mut self, id: RequestId, spec: &QoeSpec, gen_rel: f64) {
+        let cfg = self.cfg;
+        let st = self.requests.entry(id).or_insert_with(|| ReqSlack {
+            tds: spec.tds,
+            interval: 1.0 / (spec.tds * cfg.rate_factor).max(1e-9),
+            released: 0,
+            last_release: 0.0,
+            digest: DigestState::new(spec),
+            pending: VecDeque::new(),
+        });
+        // The pacer's release rule (gateway::pacing::pace_times):
+        // burst the lead, then hold each token to the paced interval.
+        let release = if !cfg.paced {
+            gen_rel.max(st.last_release)
+        } else if st.released < cfg.lead_tokens {
+            gen_rel.max(st.last_release)
+        } else {
+            gen_rel.max(st.last_release + st.interval)
+        };
+        st.last_release = release;
+        st.released += 1;
+        st.pending.push_back(release + cfg.transit);
+        // Fold arrivals already in the observable past into the digest
+        // permanently — every future query is at a time ≥ `gen_rel`.
+        while let Some(&a) = st.pending.front() {
+            if a <= gen_rel {
+                st.digest.deliver(a);
+                st.pending.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Drop per-request state once the request finishes.
+    pub fn on_finish(&mut self, id: RequestId) {
+        self.requests.remove(&id);
+    }
+
+    /// Tokens released by the modeled pacer so far (test observability).
+    pub fn released(&self, id: RequestId) -> Option<usize> {
+        self.requests.get(&id).map(|s| s.released)
+    }
+
+    /// Estimated client-side digestion state at request-relative time
+    /// `rel_now`, advanced to `rel_now`. `None` if no token has been
+    /// generated for `id` yet.
+    pub fn estimate(&self, id: RequestId, rel_now: f64) -> Option<DigestState> {
+        let st = self.requests.get(&id)?;
+        let mut d = st.digest;
+        for &a in st.pending.iter() {
+            if a <= rel_now {
+                d.deliver(a);
+            } else {
+                break;
+            }
+        }
+        d.advance_to(rel_now);
+        Some(d)
+    }
+
+    /// Estimated client-buffer occupancy (tokens delivered to the
+    /// client but not yet digested) at request-relative `rel_now`.
+    pub fn occupancy(&self, id: RequestId, rel_now: f64) -> Option<f64> {
+        self.estimate(id, rel_now).map(|d| d.buffered())
+    }
+
+    /// Slack window in *seconds*: how long the client can keep digesting
+    /// from its buffer alone. This is what preemption stalls are charged
+    /// against — a runner is only cheap to pause when its window covers
+    /// the swap-out + swap-in stall.
+    pub fn window(&self, id: RequestId, rel_now: f64) -> Option<f64> {
+        let st = self.requests.get(&id)?;
+        self.occupancy(id, rel_now).map(|occ| occ / st.tds.max(1e-9))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> QoeSpec {
+        QoeSpec::new(1.0, 2.0) // tds = 2 tok/s
+    }
+
+    #[test]
+    fn no_state_before_first_token() {
+        let est = SlackEstimator::new(SlackConfig::default());
+        assert!(est.estimate(0, 1.0).is_none());
+        assert!(est.window(0, 1.0).is_none());
+    }
+
+    #[test]
+    fn burst_generation_is_paced_not_instant() {
+        // 20 tokens generated in a burst at t=0.1; pacer releases 4
+        // immediately, then one per 1/(2*1.25) = 0.4s.
+        let sp = spec();
+        let mut est = SlackEstimator::new(SlackConfig::default());
+        for _ in 0..20 {
+            est.on_token(0, &sp, 0.1);
+        }
+        assert_eq!(est.released(0), Some(20));
+        // Right after the burst the client plausibly holds only the lead.
+        let occ = est.occupancy(0, 0.1).unwrap();
+        assert!(occ <= 4.0 + 1e-9, "occupancy {occ} must not exceed the lead");
+        // Much later everything has arrived and been digested.
+        let occ_late = est.occupancy(0, 100.0).unwrap();
+        assert!(occ_late < 1e-9, "late occupancy {occ_late} should be ~0");
+    }
+
+    #[test]
+    fn occupancy_bounded_by_released_and_nonnegative() {
+        let sp = spec();
+        let mut est = SlackEstimator::new(SlackConfig { transit: 0.015, ..Default::default() });
+        let gen_times = [0.05, 0.1, 0.1, 0.4, 0.9, 0.9, 0.9, 2.0];
+        for (i, &t) in gen_times.iter().enumerate() {
+            est.on_token(7, &sp, t);
+            let released = est.released(7).unwrap();
+            assert_eq!(released, i + 1);
+            for probe in [t, t + 0.3, t + 5.0] {
+                let occ = est.occupancy(7, probe).unwrap();
+                assert!(occ >= -1e-12, "occupancy {occ} negative at {probe}");
+                assert!(
+                    occ <= released as f64 + 1e-9,
+                    "occupancy {occ} exceeds released {released}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unpaced_config_delivers_at_generation_plus_transit() {
+        let sp = spec();
+        let mut est =
+            SlackEstimator::new(SlackConfig { paced: false, ..Default::default() });
+        for i in 0..6 {
+            est.on_token(1, &sp, 0.2 * i as f64);
+        }
+        // At t=1.0 (last gen time), 6 tokens arrived; digestion at tds=2
+        // for 1s leaves ~4 buffered (first token arrives at 0.0 but
+        // digestion only starts once delivered).
+        let occ = est.occupancy(1, 1.0).unwrap();
+        assert!(occ > 3.0 && occ <= 6.0, "occ = {occ}");
+    }
+
+    #[test]
+    fn window_scales_occupancy_by_tds() {
+        let sp = spec();
+        let mut est = SlackEstimator::new(SlackConfig::default());
+        for _ in 0..4 {
+            est.on_token(3, &sp, 0.0); // lead burst: all 4 arrive at 0.
+        }
+        let occ = est.occupancy(3, 0.0).unwrap();
+        let win = est.window(3, 0.0).unwrap();
+        assert!((win - occ / sp.tds).abs() < 1e-12);
+    }
+
+    #[test]
+    fn on_finish_drops_state() {
+        let sp = spec();
+        let mut est = SlackEstimator::new(SlackConfig::default());
+        est.on_token(0, &sp, 0.0);
+        assert!(est.estimate(0, 0.0).is_some());
+        est.on_finish(0);
+        assert!(est.estimate(0, 0.0).is_none());
+    }
+}

@@ -144,6 +144,23 @@ impl NetworkConfig {
         Ok(mix)
     }
 
+    /// Expected one-way transit of the configured mix: the mix-weighted
+    /// mean base latency when the layer is on, 0.0 when it is off. This
+    /// is the slack estimator's transit term (DESIGN.md §15) — a cheap
+    /// first moment, deliberately ignoring jitter/loss tails.
+    pub fn expected_transit(&self) -> f64 {
+        if !self.enabled {
+            return 0.0;
+        }
+        let total: f64 = self.mix.iter().map(|(_, w)| *w).sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let weighted: f64 =
+            self.mix.iter().map(|(p, w)| p.base_latency * w).sum();
+        weighted / total
+    }
+
     /// Deterministically draw the link for one request: profile chosen
     /// from the mix, plus the RNG that will drive its jitter/loss/
     /// disconnect streams. Depends only on `(seed, request_id)`, so a
@@ -382,6 +399,20 @@ mod tests {
         assert_eq!(legacy_out.client_arrivals, calendar_out.client_arrivals);
         assert_eq!(legacy_out.final_lead, calendar_out.final_lead);
         assert_eq!(legacy_out.client_qoe.to_bits(), calendar_out.client_qoe.to_bits());
+    }
+
+    #[test]
+    fn expected_transit_is_the_weighted_mean_base_latency() {
+        assert_eq!(NetworkConfig::default().expected_transit(), 0.0, "off ⇒ 0");
+        let fiber = cfg_with(NetworkProfile::fiber());
+        assert!((fiber.expected_transit() - NetworkProfile::fiber().base_latency).abs() < 1e-12);
+        let mixed = NetworkConfig { enabled: true, ..NetworkConfig::default() }.with_mix(vec![
+            (NetworkProfile::fiber(), 1.0),
+            (NetworkProfile::lte(), 1.0),
+        ]);
+        let want =
+            (NetworkProfile::fiber().base_latency + NetworkProfile::lte().base_latency) / 2.0;
+        assert!((mixed.expected_transit() - want).abs() < 1e-12);
     }
 
     #[test]

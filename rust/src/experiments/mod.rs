@@ -17,6 +17,7 @@ pub mod runner;
 pub mod sensitivity;
 pub mod sessions;
 pub mod shard;
+pub mod slack;
 
 use std::path::PathBuf;
 
@@ -222,6 +223,12 @@ pub fn registry() -> Vec<Experiment> {
             paper_ref: "§2.2 (extension)",
             title: "Client-side delivery: network jitter × adaptive pacer lead",
             run: network::ext_network,
+        },
+        Experiment {
+            id: "ext-slack",
+            paper_ref: "§2.3 (extension)",
+            title: "Buffer-slack-aware scheduling: slack-aware vs slack-blind Andes",
+            run: slack::ext_slack,
         },
         Experiment {
             id: "e2e",

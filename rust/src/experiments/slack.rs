@@ -1,0 +1,229 @@
+//! ext-slack: buffer-slack-aware scheduling (TokenFlow × Andes;
+//! DESIGN.md §15).
+//!
+//! Slack-blind Andes reads the *server-side* digestion state, which
+//! counts a token as delivered the instant it is generated — but the
+//! gateway pacer and the last-mile link hold tokens back, so a runner
+//! that raced ahead looks deep-buffered ("coasting", gain ≈ 0) while
+//! the real client sits near the pacer lead. At overload the scheduler
+//! serially evicts exactly those runners, and the client stalls the
+//! moment its thin buffer drains.
+//!
+//! This experiment runs the same seeded workload through the full
+//! gateway (pacing + fiber delivery) on a 2-replica Andes cluster,
+//! slack-aware vs slack-blind, on equal GPU: {poisson, gamma-cv3}
+//! arrivals × {1x, 2x, 4x} of estimated capacity. Reported per cell:
+//! mean and p10 **client** QoE, playback stall count/time, total
+//! preemptions, and preemptions of deep-buffer runners (server-side
+//! window ≥ one swap round trip — counted identically in both arms).
+//! The headline shape check: at 2x overload the slack-aware arm must
+//! match or beat slack-blind mean client QoE while preempting strictly
+//! fewer deep-buffer runners.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::cluster::{Cluster, RoutingPolicy};
+use crate::config::SchedulerConfig;
+use crate::coordinator::engine::EngineConfig;
+use crate::coordinator::sched::andes::AndesConfig;
+use crate::gateway::{Gateway, GatewayConfig, PacingConfig};
+use crate::model::gpu::a100_4x;
+use crate::model::latency::LatencyModel;
+use crate::model::llm::opt_66b;
+use crate::util::csv::Csv;
+use crate::util::stats::{mean, percentile};
+use crate::workload::{ArrivalProcess, Dataset, QoeTrace, Workload};
+
+use super::runner::estimate_capacity;
+use super::ExpCtx;
+
+/// One cell's aggregates, kept for the shape checks.
+struct Cell {
+    arrivals: &'static str,
+    load: &'static str,
+    aware: bool,
+    mean_client: f64,
+    p10_client: f64,
+    stalls: usize,
+    stall_time: f64,
+    preemptions: u64,
+    deep_preemptions: u64,
+}
+
+pub fn ext_slack(ctx: &ExpCtx) -> Result<String> {
+    let n = if ctx.quick { 120 } else { 400 };
+    run_grid(n, Some(&ctx.out_dir))
+}
+
+/// The grid itself, parameterized so the determinism test can run a
+/// small instance twice in-process and compare reports byte-for-byte.
+pub fn run_grid(n: usize, out_dir: Option<&Path>) -> Result<String> {
+    let llm = opt_66b();
+    let gpu = a100_4x();
+    let replicas = 2usize;
+    let capacity = estimate_capacity(&llm, &gpu, Dataset::ShareGpt) * replicas as f64;
+    let sched = SchedulerConfig::Andes(AndesConfig::default());
+    // rate_factor 1.0: release exactly at digestion speed, so the real
+    // client holds ~lead tokens throughout. The server-side digest still
+    // inflates with every generation burst — the widest server/client
+    // gap, i.e. the regime the estimator exists for.
+    let pacing = PacingConfig { rate_factor: 1.0, lead_tokens: 4 };
+
+    let arrival_kinds: [&'static str; 2] = ["poisson", "gamma-cv3"];
+    let loads: [(&'static str, f64); 3] = [("1x", 1.0), ("2x", 2.0), ("4x", 4.0)];
+
+    let mut csv = Csv::new(&[
+        "arrivals",
+        "load",
+        "slack",
+        "served",
+        "mean_client_qoe",
+        "p10_client_qoe",
+        "stalls",
+        "stall_time_total",
+        "preemptions",
+        "deep_buffer_preemptions",
+    ]);
+    let mut report = format!(
+        "ext-slack — {replicas}-replica Andes cluster, capacity {capacity:.1} req/s, \
+         {n} requests per cell, slack-aware vs slack-blind on equal GPU\n",
+    );
+    let mut cells: Vec<Cell> = Vec::new();
+
+    for &akind in &arrival_kinds {
+        for &(llabel, mult) in &loads {
+            let rate = capacity * mult;
+            for aware in [false, true] {
+                let arrivals = match akind {
+                    "poisson" => ArrivalProcess::Poisson { rate },
+                    _ => ArrivalProcess::Gamma { rate, cv: 3.0 },
+                };
+                let trace = Workload {
+                    dataset: Dataset::ShareGpt,
+                    arrivals,
+                    qoe_trace: QoeTrace::TextReading,
+                    num_requests: n,
+                    seed: 42,
+                }
+                .generate();
+                let latency = LatencyModel::for_deployment(&llm, &gpu);
+                let mut gcfg = GatewayConfig::default();
+                gcfg.pacing = pacing.clone();
+                gcfg.network.enabled = true; // default fiber mix
+                gcfg.surge.baseline_rate = capacity;
+                let mut engine_cfg = EngineConfig {
+                    kv_capacity_tokens: llm.kv_capacity_tokens(&gpu),
+                    swap_capacity_tokens: llm.swap_capacity_tokens(&gpu),
+                    ..EngineConfig::default()
+                };
+                if aware {
+                    engine_cfg.slack = Some(gcfg.slack_config());
+                }
+                let cluster = Cluster::new(
+                    replicas,
+                    engine_cfg,
+                    latency,
+                    &sched,
+                    RoutingPolicy::QoeAware,
+                );
+                let mut gw = Gateway::new(cluster, gcfg);
+                let res = gw.run_trace(trace)?;
+                let client_qoes: Vec<f64> =
+                    res.served.iter().map(|s| s.client_qoe).collect();
+                let preemptions: u64 =
+                    res.per_replica.iter().map(|m| m.total_preemptions).sum();
+                let deep: u64 = res
+                    .per_replica
+                    .iter()
+                    .map(|m| m.deep_buffer_preemptions)
+                    .sum();
+                let cell = Cell {
+                    arrivals: akind,
+                    load: llabel,
+                    aware,
+                    mean_client: mean(&client_qoes),
+                    p10_client: percentile(&client_qoes, 10.0),
+                    stalls: res.total_stalls(),
+                    stall_time: res.total_stall_time(),
+                    preemptions,
+                    deep_preemptions: deep,
+                };
+                let slabel = if aware { "aware" } else { "blind" };
+                csv.row(&[
+                    akind.to_string(),
+                    llabel.to_string(),
+                    slabel.to_string(),
+                    format!("{}", res.served.len()),
+                    format!("{:.4}", cell.mean_client),
+                    format!("{:.4}", cell.p10_client),
+                    format!("{}", cell.stalls),
+                    format!("{:.2}", cell.stall_time),
+                    format!("{preemptions}"),
+                    format!("{deep}"),
+                ]);
+                report.push_str(&format!(
+                    "  {akind:<10} {llabel:<3} {slabel:<5} client QoE {:.3} \
+                     (p10 {:.3}) stalls {:<5} ({:.1}s) preempt {:<5} \
+                     deep {deep}\n",
+                    cell.mean_client,
+                    cell.p10_client,
+                    cell.stalls,
+                    cell.stall_time,
+                    cell.preemptions,
+                ));
+                cells.push(cell);
+            }
+        }
+    }
+    if let Some(dir) = out_dir {
+        csv.write(&dir.join("ext_slack.csv"))?;
+    }
+
+    let find = |arrivals: &str, load: &str, aware: bool| {
+        cells
+            .iter()
+            .find(|c| c.arrivals == arrivals && c.load == load && c.aware == aware)
+            .expect("cell missing")
+    };
+    let p2_blind = find("poisson", "2x", false);
+    let p2_aware = find("poisson", "2x", true);
+    let g2_blind = find("gamma-cv3", "2x", false);
+    let g2_aware = find("gamma-cv3", "2x", true);
+    // The headline acceptance shape: equal-or-better client QoE with
+    // strictly fewer deep-buffer-runner preemptions at 2x overload.
+    let c1 = p2_aware.mean_client >= p2_blind.mean_client - 1e-9
+        && p2_aware.deep_preemptions < p2_blind.deep_preemptions;
+    // The problem must exist for the strict inequality to mean anything.
+    let c2 = p2_blind.deep_preemptions > 0;
+    let c3 = g2_aware.mean_client >= g2_blind.mean_client - 1e-9;
+    report.push_str(&format!(
+        "shape checks:\n\
+         \x20 poisson 2x: slack-aware holds client QoE ({:.4} >= {:.4}) with \
+         strictly fewer deep-buffer preemptions ({} < {}): {}\n\
+         \x20 poisson 2x: slack-blind Andes does preempt deep-buffer runners \
+         ({} > 0): {}\n\
+         \x20 gamma-cv3 2x: slack-aware does not lose client QoE \
+         ({:.4} vs {:.4}): {}\n",
+        p2_aware.mean_client,
+        p2_blind.mean_client,
+        p2_aware.deep_preemptions,
+        p2_blind.deep_preemptions,
+        verdict(c1),
+        p2_blind.deep_preemptions,
+        verdict(c2),
+        g2_aware.mean_client,
+        g2_blind.mean_client,
+        verdict(c3),
+    ));
+    Ok(report)
+}
+
+fn verdict(ok: bool) -> &'static str {
+    if ok {
+        "HOLDS"
+    } else {
+        "VIOLATED"
+    }
+}

@@ -146,6 +146,23 @@ impl Default for GatewayConfig {
     }
 }
 
+impl GatewayConfig {
+    /// Derive the engine-side slack-estimator config (DESIGN.md §15)
+    /// from this gateway's pacing and delivery settings: the estimator
+    /// mirrors the pacer's release rule (or generation times when
+    /// pacing is off) and charges the network mix's expected one-way
+    /// transit on top (0.0 when the delivery layer is off — the
+    /// QoE-spec digestion-rate fallback).
+    pub fn slack_config(&self) -> crate::coordinator::SlackConfig {
+        crate::coordinator::SlackConfig {
+            paced: self.pacing_enabled,
+            rate_factor: self.pacing.rate_factor,
+            lead_tokens: self.pacing.lead_tokens,
+            transit: self.network.expected_transit(),
+        }
+    }
+}
+
 /// Spill (overflow) tier configuration: a second, typically cheaper
 /// cluster that replays requests the primary tier rejected
 /// (`surge-shed`, `saturated`, `defer-timeout`).

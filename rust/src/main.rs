@@ -608,6 +608,11 @@ fn cmd_simulate(argv: &[String]) -> i32 {
             "grow the pacer lead from observed ack jitter instead of the static \
              lead (requires --network)",
         ),
+        OptSpec::flag(
+            "slack",
+            "estimate client-buffer slack server-side and feed it to the \
+             scheduler (enables the gateway; off = bit-identical baseline)",
+        ),
         OptSpec::value(
             "trace-out",
             None,
@@ -720,6 +725,7 @@ fn cmd_simulate(argv: &[String]) -> i32 {
         eprintln!("--adaptive-lead requires --network (nothing to observe jitter on)");
         return 2;
     }
+    let slack = args.has_flag("slack");
     let trace_out = args.get("trace-out").map(PathBuf::from);
     let metrics_out = args.get("metrics-out").map(PathBuf::from);
     let snapshot_interval = match args.get_f64("snapshot-interval") {
@@ -750,6 +756,7 @@ fn cmd_simulate(argv: &[String]) -> i32 {
         || sessions.is_some()
         || park
         || network_mix.is_some()
+        || slack
         || telemetry_on;
     if telemetry_on && gateways > 1 {
         eprintln!(
@@ -787,7 +794,7 @@ fn cmd_simulate(argv: &[String]) -> i32 {
                 "--trace replays a recorded workload on a single static engine; \
                  it cannot be combined with --gateway/--replicas/--autoscale/\
                  --spill-replicas/--gateways/--tier-weights/--sessions/--park/\
-                 --network"
+                 --network/--slack"
             );
             return 2;
         }
@@ -849,7 +856,7 @@ fn cmd_simulate(argv: &[String]) -> i32 {
             _ => andes::config::SchedulerConfig::Andes(Default::default()),
         };
         let latency = andes::model::latency::LatencyModel::for_deployment(&llm, &gpu);
-        let engine_cfg = EngineConfig {
+        let mut engine_cfg = EngineConfig {
             kv_capacity_tokens: llm.kv_capacity_tokens(&gpu),
             swap_capacity_tokens: llm.swap_capacity_tokens(&gpu),
             park_prefixes: park,
@@ -901,6 +908,11 @@ fn cmd_simulate(argv: &[String]) -> i32 {
             gcfg.network.enabled = true;
             gcfg.network.mix = mix;
             gcfg.network.adaptive_lead = adaptive_lead;
+        }
+        // After the pacing/network knobs are final: the slack estimator
+        // mirrors the gateway's release schedule and expected transit.
+        if slack {
+            engine_cfg.slack = Some(gcfg.slack_config());
         }
         let mut cluster = Cluster::new(
             start_replicas,
@@ -1045,6 +1057,14 @@ fn cmd_simulate(argv: &[String]) -> i32 {
                         res.total_disconnects(),
                         adaptive_lead,
                     );
+                }
+                if slack {
+                    let deep: u64 = res
+                        .per_replica
+                        .iter()
+                        .map(|m| m.deep_buffer_preemptions)
+                        .sum();
+                    println!("slack: deep_buffer_preemptions={deep}");
                 }
                 if sessions.is_some() || park {
                     let hits: u64 = res.per_replica.iter().map(|m| m.prefix_hits).sum();

@@ -162,6 +162,68 @@ fn golden_ext_gateway_prometheus_exposition() {
 }
 
 #[test]
+fn golden_ext_slack_cell() {
+    // A reduced `ext-slack` cell: the slack-aware arm (estimator fed to
+    // the Andes scheduler, DESIGN.md §15) under gamma-burst arrivals at
+    // 2× estimated aggregate capacity, pacing + fiber delivery on, seed
+    // 42. Pins the estimator's effect on scheduling end to end; the
+    // slack-off arm is already pinned by `golden_ext_gateway_cell`
+    // (EngineConfig::default() keeps `slack: None`).
+    let llm = opt_66b();
+    let gpu = a100_4x();
+    let latency = LatencyModel::for_deployment(&llm, &gpu);
+    let replicas = 2usize;
+    let capacity = estimate_capacity(&llm, &gpu, Dataset::ShareGpt) * replicas as f64;
+    let mut gcfg = GatewayConfig::default();
+    gcfg.network.enabled = true; // default fiber mix
+    gcfg.surge.baseline_rate = capacity;
+    let engine_cfg = EngineConfig {
+        kv_capacity_tokens: llm.kv_capacity_tokens(&gpu),
+        swap_capacity_tokens: llm.swap_capacity_tokens(&gpu),
+        slack: Some(gcfg.slack_config()),
+        ..EngineConfig::default()
+    };
+    let sched = SchedulerConfig::Andes(AndesConfig::default());
+    let cluster = Cluster::new(
+        replicas,
+        engine_cfg,
+        latency,
+        &sched,
+        RoutingPolicy::QoeAware,
+    );
+    let trace = Workload {
+        dataset: Dataset::ShareGpt,
+        arrivals: ArrivalProcess::Gamma { rate: capacity * 2.0, cv: 3.0 },
+        qoe_trace: QoeTrace::TextReading,
+        num_requests: 150,
+        seed: 42,
+    }
+    .generate();
+    let mut gw = Gateway::new(cluster, gcfg);
+    let res = gw.run_trace(trace).unwrap();
+
+    let client: Vec<f64> = res.served.iter().map(|s| s.client_qoe).collect();
+    let preemptions: u64 = res.per_replica.iter().map(|m| m.total_preemptions).sum();
+    let deep: u64 =
+        res.per_replica.iter().map(|m| m.deep_buffer_preemptions).sum();
+    check_or_bless(
+        &golden_path("ext_slack.json"),
+        &[
+            metric("served", res.served.len() as f64, EXACT),
+            metric("rejected", res.rejections.len() as f64, EXACT),
+            metric("preemptions", preemptions as f64, EXACT),
+            metric("deep_buffer_preemptions", deep as f64, EXACT),
+            metric("stalls", res.total_stalls() as f64, EXACT),
+            metric("stall_time_total", res.total_stall_time(), FLOAT),
+            metric("mean_client_qoe", mean(&client), FLOAT),
+            metric("p10_client_qoe", percentile(&client, 10.0), FLOAT),
+            metric("mean_served_qoe", res.mean_served_qoe(), FLOAT),
+        ],
+    )
+    .unwrap();
+}
+
+#[test]
 fn golden_ext_sessions_cell() {
     // A reduced `ext-sessions` park+affinity cell: 40 multi-turn
     // sessions through the gateway over a 2-replica parking cluster

@@ -92,6 +92,18 @@ fn d2_fixtures() {
 }
 
 #[test]
+fn d2_env_fixtures() {
+    let bad = lint_one("rust/src/coordinator/fx.rs", &fixture("d2_env_bad.rs"));
+    assert_eq!(rules_of(&bad), vec!["D2", "D2"], "{:?}", bad.findings);
+    // Outside the sim scope (util helpers, benches) env reads are allowed —
+    // that's where the golden/bench bless knobs live.
+    let allowed = lint_one("rust/src/util/fx.rs", &fixture("d2_env_bad.rs"));
+    assert!(allowed.findings.is_empty(), "{:?}", allowed.findings);
+    let good = lint_one("rust/src/coordinator/fx.rs", &fixture("d2_env_good.rs"));
+    assert!(good.findings.is_empty(), "{:?}", good.findings);
+}
+
+#[test]
 fn d3_fixtures() {
     let bad = lint_one("rust/src/util/fx.rs", &fixture("d3_bad.rs"));
     assert_eq!(rules_of(&bad), vec!["D3", "D3"], "{:?}", bad.findings);

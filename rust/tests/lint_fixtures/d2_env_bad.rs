@@ -1,0 +1,9 @@
+//! Known-bad D2 fixture (env-var case): environment reads on a sim path.
+
+pub fn trace_enabled() -> bool {
+    std::env::var("ANDES_TRACE_CAP").is_ok()
+}
+
+pub fn trace_dir() -> Option<std::ffi::OsString> {
+    std::env::var_os("ANDES_TRACE_DIR")
+}

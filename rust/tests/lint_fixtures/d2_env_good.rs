@@ -1,0 +1,6 @@
+//! Known-good D2 fixture (env-var case): the trace toggle is gated on the
+//! logger instead of re-reading the process environment on the hot path.
+
+pub fn trace_enabled() -> bool {
+    log::log_enabled!(log::Level::Debug)
+}

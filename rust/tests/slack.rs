@@ -1,0 +1,228 @@
+//! Property and parity tests for the server-side client-buffer slack
+//! estimator (DESIGN.md §15).
+//!
+//! Three contracts are pinned here:
+//! - structural bounds: estimated occupancy is never negative and never
+//!   exceeds what the modeled pacer has released, on arbitrary seeded
+//!   generation traces and estimator configs;
+//! - ground truth: with the pacer parameters mirrored exactly, the
+//!   estimate reproduces the real client buffer — both against the
+//!   batch pacer schedule plus a constant transit, and against the full
+//!   delivery layer on the ideal (identity) link;
+//! - passivity: constructing the estimator changes nothing unless a
+//!   scheduler reads it — an FCFS engine with `slack: Some(..)` is
+//!   bit-identical to `slack: None`.
+
+use andes::backend::sim::SimBackend;
+use andes::backend::VirtualClock;
+use andes::coordinator::engine::{Engine, EngineConfig};
+use andes::coordinator::sched::fcfs::FcfsScheduler;
+use andes::coordinator::sched::Scheduler;
+use andes::coordinator::{SlackConfig, SlackEstimator};
+use andes::delivery::{deliver_request, NetworkConfig, NetworkProfile};
+use andes::gateway::{pace_times, PacingConfig};
+use andes::model::gpu::a100_4x;
+use andes::model::latency::LatencyModel;
+use andes::model::llm::opt_66b;
+use andes::qoe::metric::DigestState;
+use andes::qoe::spec::QoeSpec;
+use andes::util::rng::Rng;
+use andes::util::testing::check_prop;
+use andes::workload::{ArrivalProcess, Dataset, QoeTrace, Workload};
+
+/// A non-decreasing request-relative generation trace with same-instant
+/// bursts mixed in (the overfast-generation shape the pacer exists for).
+fn gen_trace(rng: &mut Rng, n: usize) -> Vec<f64> {
+    let mut t = rng.f64() * 0.5;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        if rng.below(3) != 0 {
+            t += rng.f64() * 0.5;
+        }
+        out.push(t);
+    }
+    out
+}
+
+#[test]
+fn occupancy_bounded_on_seeded_traces() {
+    check_prop("slack occupancy bounds", 40, |rng| {
+        let cfg = SlackConfig {
+            paced: rng.below(4) != 0,
+            rate_factor: 1.0 + rng.f64(),
+            lead_tokens: rng.below(6) as usize,
+            transit: rng.f64() * 0.05,
+        };
+        let spec = QoeSpec::new(0.5 + rng.f64(), 1.0 + rng.f64() * 6.0);
+        let mut est = SlackEstimator::new(cfg);
+        let n = rng.range(5, 60);
+        let trace = gen_trace(rng, n);
+        for (i, &t) in trace.iter().enumerate() {
+            est.on_token(3, &spec, t);
+            let released = est.released(3).unwrap();
+            assert_eq!(released, i + 1);
+            // Probes at "now" and into the future, as the scheduler
+            // would issue them between generation events.
+            for probe in [t, t + rng.f64() * 2.0, t + 30.0] {
+                let d = est.estimate(3, probe).unwrap();
+                let occ = d.buffered();
+                assert!(occ >= -1e-12, "occupancy {occ} negative at {probe}");
+                assert!(
+                    d.delivered() <= released as f64 + 1e-9,
+                    "delivered {} exceeds released {released}",
+                    d.delivered()
+                );
+                assert!(
+                    occ <= d.delivered() + 1e-9,
+                    "buffered {occ} exceeds delivered {}",
+                    d.delivered()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn estimator_replays_the_pacer_schedule_exactly() {
+    // With the pacer parameters mirrored and a constant transit, the
+    // estimate must equal a digest fed by `pace_times(..) + transit` —
+    // the same release rule the gateway applies.
+    check_prop("slack pacer replay", 30, |rng| {
+        let pacing = PacingConfig {
+            rate_factor: 1.0 + rng.f64() * 0.5,
+            lead_tokens: rng.below(6) as usize,
+        };
+        let transit = rng.f64() * 0.03;
+        let cfg = SlackConfig {
+            paced: true,
+            rate_factor: pacing.rate_factor,
+            lead_tokens: pacing.lead_tokens,
+            transit,
+        };
+        let spec = QoeSpec::new(1.0, 2.0 + rng.f64() * 4.0);
+        let trace = gen_trace(rng, rng.range(5, 50));
+        let mut est = SlackEstimator::new(cfg);
+        for &t in &trace {
+            est.on_token(9, &spec, t);
+        }
+        let releases = pace_times(&spec, &pacing, &trace);
+        let last = *trace.last().unwrap();
+        for probe in [last, last + 0.7, last + 5.0, last + 50.0] {
+            let mut truth = DigestState::new(&spec);
+            for &r in &releases {
+                if r + transit <= probe {
+                    truth.deliver(r + transit);
+                }
+            }
+            truth.advance_to(probe);
+            let d = est.estimate(9, probe).unwrap();
+            assert!(
+                (d.buffered() - truth.buffered()).abs() < 1e-9,
+                "buffered {} vs ground truth {} at {probe}",
+                d.buffered(),
+                truth.buffered()
+            );
+            assert!(
+                (d.delivered() - truth.delivered()).abs() < 1e-9,
+                "delivered {} vs ground truth {} at {probe}",
+                d.delivered(),
+                truth.delivered()
+            );
+        }
+    });
+}
+
+#[test]
+fn estimator_agrees_with_the_delivery_layer_on_the_ideal_link() {
+    // End-to-end ground truth: run the same generation trace through
+    // the real delivery layer (pacer → network → client buffer) on the
+    // identity link and compare client-buffer occupancy.
+    check_prop("slack vs delivery ground truth", 20, |rng| {
+        let pacing = PacingConfig {
+            rate_factor: 1.0 + rng.f64() * 0.5,
+            lead_tokens: rng.below(6) as usize,
+        };
+        let netcfg = NetworkConfig { enabled: true, ..NetworkConfig::default() }
+            .with_mix(vec![(NetworkProfile::ideal(), 1.0)]);
+        let spec = QoeSpec::new(1.0, 2.0 + rng.f64() * 4.0);
+        let trace = gen_trace(rng, rng.range(5, 40));
+        let out = deliver_request(
+            &spec,
+            true,
+            &pacing,
+            &netcfg,
+            rng.below(1000) as usize,
+            &trace,
+        );
+        assert_eq!(out.client_arrivals.len(), trace.len());
+        let cfg = SlackConfig {
+            paced: true,
+            rate_factor: pacing.rate_factor,
+            lead_tokens: pacing.lead_tokens,
+            transit: 0.0, // the ideal link is the identity
+        };
+        let mut est = SlackEstimator::new(cfg);
+        for &t in &trace {
+            est.on_token(0, &spec, t);
+        }
+        let last = *trace.last().unwrap();
+        for probe in [last, last + 1.0, last + 10.0] {
+            let mut truth = DigestState::new(&spec);
+            for &a in &out.client_arrivals {
+                if a <= probe {
+                    truth.deliver(a);
+                }
+            }
+            truth.advance_to(probe);
+            let occ = est.occupancy(0, probe).unwrap();
+            assert!(
+                (occ - truth.buffered()).abs() < 1e-9,
+                "estimated {occ} vs delivery ground truth {} at {probe}",
+                truth.buffered()
+            );
+        }
+    });
+}
+
+#[test]
+fn slack_estimator_is_passive_under_a_slack_blind_scheduler() {
+    // FCFS never reads `SchedView::slack`, so enabling the estimator
+    // must leave every token time and QoE bit-identical — the estimator
+    // observes, it never steers.
+    let run = |slack: Option<SlackConfig>| {
+        let latency = LatencyModel::for_deployment(&opt_66b(), &a100_4x());
+        let cfg = EngineConfig {
+            kv_capacity_tokens: 3000,
+            swap_capacity_tokens: 3000,
+            slack,
+            ..EngineConfig::default()
+        };
+        let sched: Box<dyn Scheduler> = Box::new(FcfsScheduler::new());
+        let mut e = Engine::new(
+            cfg,
+            SimBackend::new(latency.clone()),
+            VirtualClock::default(),
+            sched,
+            latency,
+        );
+        let trace = Workload {
+            dataset: Dataset::ShareGpt,
+            arrivals: ArrivalProcess::Poisson { rate: 3.0 },
+            qoe_trace: QoeTrace::TextReading,
+            num_requests: 60,
+            seed: 7,
+        }
+        .generate();
+        e.load_trace(trace);
+        e.run_to_completion().unwrap()
+    };
+    let off = run(None);
+    let on = run(Some(SlackConfig::default()));
+    assert_eq!(off.total_preemptions, on.total_preemptions);
+    assert_eq!(off.deep_buffer_preemptions, on.deep_buffer_preemptions);
+    assert_eq!(off.requests.len(), on.requests.len());
+    for (a, b) in off.requests.iter().zip(on.requests.iter()) {
+        assert_eq!(a.token_times, b.token_times, "req {}", a.id);
+        assert_eq!(a.final_qoe.to_bits(), b.final_qoe.to_bits(), "req {}", a.id);
+    }
+}
